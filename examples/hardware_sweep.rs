@@ -1,0 +1,69 @@
+//! Hardware-model tour: occupancy (Table I), generation gains (Fig. 5),
+//! cross-vendor portability (Fig. 7) and a hyperparameter mini-sweep
+//! (Fig. 4) — everything the performance model predicts, in one run.
+//!
+//! Run: `cargo run --release --example hardware_sweep`
+
+use banded_svd::config::TuneParams;
+use banded_svd::simulator::{self, hw};
+use banded_svd::util::bench::Table;
+
+fn main() {
+    // Table I.
+    println!("— occupancy (Table I, CBW = 32) —");
+    let mut t = Table::new(vec!["GPU", "ALUs", "n for full occupancy"]);
+    for row in simulator::table1(32) {
+        t.row(vec![row.arch.to_string(), row.alus.to_string(), row.n_required.to_string()]);
+    }
+    t.print();
+
+    // Fig. 5: generation gains.
+    println!("\n— architecture generations (Fig. 5 shape) —");
+    let p = TuneParams { tpb: 32, tw: 32, max_blocks: 192 };
+    let mut t = Table::new(vec!["n", "A100/H100", "MI250X/MI300X"]);
+    for n in [4096usize, 16384, 65536] {
+        let h = simulator::simulate_reduction(&hw::H100, 4, n, 64, &p).seconds;
+        let a = simulator::simulate_reduction(&hw::A100, 4, n, 64, &p).seconds;
+        let m3 = simulator::simulate_reduction(&hw::MI300X, 4, n, 64, &p).seconds;
+        let m2 = simulator::simulate_reduction(&hw::MI250X, 4, n, 64, &p).seconds;
+        t.row(vec![n.to_string(), format!("{:.2}x", a / h), format!("{:.2}x", m2 / m3)]);
+    }
+    t.print();
+
+    // Fig. 7: cross-vendor, cross-precision.
+    println!("\n— portability (Fig. 7 shape, n = 32768, bw = 32) —");
+    let mut t = Table::new(vec!["GPU", "fp16", "fp32", "fp64"]);
+    for arch in hw::all_archs() {
+        let mut row = vec![arch.name.to_string()];
+        for es in [2usize, 4, 8] {
+            let p = TuneParams { tpb: 32, tw: (128 / es).min(31).max(1), max_blocks: 192 };
+            let r = simulator::simulate_reduction(&arch, es, 32768, 32, &p);
+            row.push(format!("{:.3} s", r.seconds));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // Fig. 4 mini-sweep.
+    println!("\n— tilewidth sweep on H100 (Fig. 4 headline) —");
+    let mut t = Table::new(vec!["precision", "tw=8", "tw=16", "tw=32", "tw=64", "optimal"]);
+    for (es, name) in [(4usize, "fp32"), (8, "fp64")] {
+        let mut row = vec![name.to_string()];
+        let mut best = (f64::INFINITY, 0usize);
+        let mut vals = Vec::new();
+        for tw in [8usize, 16, 32, 64] {
+            let p = TuneParams { tpb: 32, tw, max_blocks: 192 };
+            let s = simulator::simulate_reduction(&hw::H100, es, 65536, 128, &p).seconds;
+            if s < best.0 {
+                best = (s, tw);
+            }
+            vals.push(s);
+        }
+        for v in vals {
+            row.push(format!("{v:.2} s"));
+        }
+        row.push(format!("tw={} (cache line = {} elems)", best.1, 128 / es));
+        t.row(row);
+    }
+    t.print();
+}

@@ -1,0 +1,60 @@
+//! Domain example: banded matrices "occur directly in applications such
+//! as spectral methods for partial differential equations" (paper §I).
+//!
+//! We build the banded operator of an ultraspherical-style spectral
+//! discretization of u'' + c·u' on n modes — a non-symmetric banded
+//! matrix — and compute its singular values (condition number, rank
+//! behaviour) through stages 2+3 directly, no dense detour.
+//!
+//! Run: `cargo run --release --example spectral_pde`
+
+use banded_svd::banded::storage::Banded;
+use banded_svd::config::TuneParams;
+use banded_svd::pipeline::banded_singular_values;
+use banded_svd::scalar::Scalar;
+
+/// Banded spectral operator: D2 + c·D1 in a coefficient basis where D2
+/// is diagonal-ish and D1 couples neighbouring modes — upper-banded with
+/// a small bandwidth, exactly the structure the paper's direct
+/// application targets.
+fn spectral_operator(n: usize, c: f64, bw: usize, tw: usize) -> Banded<f64> {
+    let mut a = Banded::<f64>::for_reduction(n, bw, tw);
+    for i in 0..n {
+        let k = i as f64 + 1.0;
+        // Second-derivative main weight (grows ~ k²: ill-conditioned).
+        a.set(i, i, k * (k + 1.0));
+        // First-derivative coupling to the next modes.
+        for off in 1..=bw.min(n - 1 - i) {
+            let w = c * k / (k + off as f64);
+            a.set(i, i + off, if off % 2 == 1 { w } else { w / 2.0 });
+        }
+    }
+    a
+}
+
+fn main() {
+    let n = 1024;
+    let bw = 4;
+    let params = TuneParams { tpb: 32, tw: 2, max_blocks: 192 };
+    let tw = params.effective_tw(bw);
+
+    for &c in &[0.0f64, 1.0, 10.0] {
+        let op = spectral_operator(n, c, bw, tw);
+        let t0 = std::time::Instant::now();
+        let sv = banded_singular_values(&op, bw, &params);
+        let dt = t0.elapsed();
+        let sigma_max = sv[0];
+        let sigma_min = sv[n - 1].max(1e-300);
+        println!(
+            "c = {c:>5}: σ_max = {:.4e}, σ_min = {:.4e}, cond = {:.4e}  ({dt:?})",
+            sigma_max,
+            sigma_min,
+            sigma_max / sigma_min
+        );
+        // Sanity: Frobenius identity.
+        let fro = op.fro_norm();
+        let ssq = sv.iter().map(|s| s * s).sum::<f64>().sqrt();
+        assert!(((fro - ssq) / fro).to_f64().abs() < 1e-10);
+    }
+    println!("spectral operator singular analysis OK");
+}

@@ -1,0 +1,141 @@
+"""AOT compile path: lower the L2 cycle/stage functions to HLO **text**
+for the Rust PJRT runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per (n, bw, tw) variant, one pair per bandwidth stage:
+
+- ``cycle_n{n}_bw{bw}_tw{tw}_s{i}.hlo.txt``  — (storage, t) -> storage,
+  one kernel launch; the L3 coordinator drives the launch loop.
+- ``stage_n{n}_bw{bw}_tw{tw}_s{i}.hlo.txt``  — storage -> storage, the
+  fused whole-stage fori_loop (one PJRT call per stage; the perf path).
+- ``manifest_n{n}_bw{bw}_tw{tw}.txt``        — layout + stage metadata
+  the Rust runtime parses (simple ``key=value`` lines).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        --variants 256:8:4,128:6:3
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.schedule import stage_plan
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the only interchange
+    the 0.5.1-era text parser accepts)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: a bare-array root lets the Rust side chain the
+    # output buffer straight into the next launch (no tuple unwrap).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def emit_variant(out_dir: str, n: int, bw: int, tw: int, tpb: int = 32,
+                 fused: bool = True, verbose: bool = True):
+    """Emit all artifacts for one (n, bw, tw) variant. Returns paths."""
+    kd_super, kd_sub, ld = model.storage_dims(bw, tw)
+    plan = stage_plan(bw, tw)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"n{n}_bw{bw}_tw{tw}"
+    paths = []
+    manifest = [
+        "version=1",
+        f"n={n}",
+        f"bw={bw}",
+        f"tw={tw}",
+        f"ld={ld}",
+        f"kd_super={kd_super}",
+        f"kd_sub={kd_sub}",
+        "dtype=f32",
+        f"tpb={tpb}",
+        f"stages={len(plan)}",
+    ]
+    storage_spec = jax.ShapeDtypeStruct((n, ld), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    for i, stage in enumerate(plan):
+        cycle = model.make_cycle_fn(n, bw, tw, stage, tpb=tpb)
+        cycle_name = f"cycle_{tag}_s{i}.hlo.txt"
+        lowered = jax.jit(cycle).lower(storage_spec, t_spec)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, cycle_name), "w") as f:
+            f.write(text)
+        paths.append(cycle_name)
+
+        stage_name = ""
+        if fused:
+            stage_fn = model.make_stage_fn(n, bw, tw, stage, tpb=tpb)
+            stage_name = f"stage_{tag}_s{i}.hlo.txt"
+            lowered = jax.jit(stage_fn).lower(storage_spec)
+            with open(os.path.join(out_dir, stage_name), "w") as f:
+                f.write(to_hlo_text(lowered))
+            paths.append(stage_name)
+
+        manifest.append(
+            f"stage index={i} b={stage.b} d={stage.d} "
+            f"launches={stage.total_launches(n)} slots={stage.max_slots(n)} "
+            f"cycle={cycle_name} fused={stage_name}"
+        )
+        if verbose:
+            print(f"  stage {i}: b={stage.b} d={stage.d} "
+                  f"launches={stage.total_launches(n)} -> {cycle_name}"
+                  + (f", {stage_name}" if stage_name else ""))
+    man_name = f"manifest_{tag}.txt"
+    with open(os.path.join(out_dir, man_name), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    paths.append(man_name)
+    if verbose:
+        print(f"  wrote {man_name}")
+    return paths
+
+
+def parse_variants(spec: str):
+    out = []
+    for part in spec.split(","):
+        n, bw, tw = (int(x) for x in part.strip().split(":"))
+        out.append((n, bw, tw))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="256:8:4,96:6:3",
+        help="comma-separated n:bw:tw variants to compile",
+    )
+    ap.add_argument("--tpb", type=int, default=32)
+    ap.add_argument("--no-fused", action="store_true",
+                    help="skip the fused whole-stage artifacts")
+    # Back-compat with the scaffold Makefile (--out file): treat as a
+    # marker file written after the variant set builds.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    for n, bw, tw in parse_variants(args.variants):
+        print(f"variant n={n} bw={bw} tw={tw}")
+        emit_variant(out_dir, n, bw, tw, tpb=args.tpb, fused=not args.no_fused)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+    print(f"artifacts in {os.path.abspath(out_dir)}")
+
+
+if __name__ == "__main__":
+    main()

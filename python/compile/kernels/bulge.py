@@ -1,0 +1,118 @@
+"""L1 — Pallas kernels for the bulge-chasing cycle (paper Algorithm 2).
+
+Each kernel processes one gathered tile:
+
+- ``right_tile_kernel``: tile (rows, d+1); row 0 is the pivot row whose
+  trailing d elements are annihilated; the Householder reflector is
+  computed cooperatively (the shared-memory vector of Alg. 2 lines 3-6)
+  and applied to the remaining rows in TPB-sized chunks (lines 8-13).
+- ``left_tile_kernel``: the column analog (line 15).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA
+shared-memory vector maps to a VMEM-resident row; the per-thread register
+row maps to the vector-lane accumulator of a chunk. ``interpret=True``
+always — the CPU PJRT client cannot execute Mosaic custom-calls; on a
+real TPU the same BlockSpec structure lowers to VMEM tiles.
+
+VMEM footprint per program: (rows × (d+1) + (d+1)) elements — e.g.
+(1+64+32)×33×4 B ≈ 12.8 KB for the paper's (b=64, tw=32) FP32 stage, far
+inside a TPU core's ~16 MB VMEM; the MXU is not engaged (rank-1 updates
+are VPU work), so the roofline target is VPU/HBM bandwidth, mirroring the
+paper's memory-bound analysis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk height mirroring the paper's threads-per-block loop (Alg. 2
+# line 8): the apply walks the tile in TPB-row chunks.
+DEFAULT_TPB = 32
+
+
+def _householder_inline(x):
+    """Reflector of x inside a kernel: returns (v, tau, beta)."""
+    alpha = x[0]
+    tail = x[1:]
+    ssq = jnp.sum(tail * tail)
+    norm = jnp.sqrt(alpha * alpha + ssq)
+    beta = jnp.where(alpha >= 0, -norm, norm)
+    safe = ssq > 0
+    denom = jnp.where(safe, alpha - beta, jnp.ones((), x.dtype))
+    v = jnp.concatenate([jnp.ones((1,), x.dtype), tail / denom])
+    tau = jnp.where(safe, (beta - alpha) / jnp.where(beta == 0, 1.0, beta), 0.0)
+    return v, tau.astype(x.dtype), jnp.where(safe, beta, alpha).astype(x.dtype)
+
+
+def _right_kernel_body(tpb: int, tile_ref, out_ref):
+    """Pallas kernel: right op on one (rows, d+1) tile."""
+    tile = tile_ref[...]
+    rows, d1 = tile.shape
+    # --- cooperative reflector (Alg. 2 lines 3-6) ---
+    v, tau, beta = _householder_inline(tile[0, :])
+    # --- chunked apply (Alg. 2 lines 8-13) ---
+    # Process the body rows in TPB-row chunks; each chunk computes its
+    # dot products against the shared vector and updates in place. The
+    # chunk loop is unrolled at trace time (static tile shape).
+    n_chunks = -(-rows // tpb)
+    updated = []
+    for c in range(n_chunks):
+        lo = c * tpb
+        hi = min(lo + tpb, rows)
+        chunk = tile[lo:hi, :]
+        w = tau * (chunk @ v)
+        updated.append(chunk - w[:, None] * v[None, :])
+    body = jnp.concatenate(updated, axis=0)
+    # Pivot row becomes (beta, 0, ..., 0) — exact zeros, like the Rust
+    # executor; tau == 0 leaves the tile untouched.
+    row0 = jnp.where(jnp.arange(d1) == 0, beta, jnp.zeros((), tile.dtype))
+    result = body.at[0, :].set(row0)
+    out_ref[...] = jnp.where(tau != 0, result, tile)
+
+
+def _left_kernel_body(tpb: int, tile_ref, out_ref):
+    """Pallas kernel: left op on one (d+1, cols) tile."""
+    tile = tile_ref[...]
+    d1, cols = tile.shape
+    v, tau, beta = _householder_inline(tile[:, 0])
+    n_chunks = -(-cols // tpb)
+    updated = []
+    for c in range(n_chunks):
+        lo = c * tpb
+        hi = min(lo + tpb, cols)
+        chunk = tile[:, lo:hi]
+        w = tau * (v @ chunk)
+        updated.append(chunk - v[:, None] * w[None, :])
+    body = jnp.concatenate(updated, axis=1)
+    col0 = jnp.where(jnp.arange(d1) == 0, beta, jnp.zeros((), tile.dtype))
+    result = body.at[:, 0].set(col0)
+    out_ref[...] = jnp.where(tau != 0, result, tile)
+
+
+@functools.lru_cache(maxsize=None)
+def make_right_kernel(rows: int, d1: int, tpb: int = DEFAULT_TPB, dtype=jnp.float32):
+    """Compiled (interpret-mode) right-op tile kernel for a static shape."""
+    return pl.pallas_call(
+        functools.partial(_right_kernel_body, tpb),
+        out_shape=jax.ShapeDtypeStruct((rows, d1), dtype),
+        interpret=True,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def make_left_kernel(d1: int, cols: int, tpb: int = DEFAULT_TPB, dtype=jnp.float32):
+    """Compiled (interpret-mode) left-op tile kernel for a static shape."""
+    return pl.pallas_call(
+        functools.partial(_left_kernel_body, tpb),
+        out_shape=jax.ShapeDtypeStruct((d1, cols), dtype),
+        interpret=True,
+    )
+
+
+def vmem_footprint_bytes(b: int, d: int, es: int = 4) -> int:
+    """Estimated VMEM bytes per kernel program (tile + vector), used by
+    the roofline discussion in DESIGN.md/EXPERIMENTS.md."""
+    rows = 1 + b + d
+    return (rows * (d + 1) + (d + 1)) * es

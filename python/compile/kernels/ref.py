@@ -1,0 +1,178 @@
+"""Pure-jnp / numpy correctness oracles for the L1 Pallas kernels.
+
+Two layers of reference:
+
+- ``householder``, ``right_tile_ref``, ``left_tile_ref`` — jnp oracles for
+  the tile kernels (the unit the Pallas kernels are tested against).
+- ``NumpyBanded`` + ``exec_cycle_numpy`` — a plain-numpy port of the Rust
+  cycle executor on banded storage, used to validate the full L2 cycle /
+  stage functions end to end.
+
+Storage convention (shared with the Rust side and the AOT artifacts):
+column-major banded — a (n, ld) row-major array ``S`` with
+``S[j, kd_super + i - j] = A[i, j]``; a column segment of A is contiguous
+along axis 1.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# jnp tile oracles
+# --------------------------------------------------------------------------
+
+def householder(x):
+    """LAPACK larfg-style reflector of vector x (jnp).
+
+    Returns (v, tau, beta) with v[0] = 1 such that
+    (I - tau v v^T) x = (beta, 0, ..., 0). tau = 0 when the tail is zero.
+    """
+    alpha = x[0]
+    tail = x[1:]
+    ssq = jnp.sum(tail * tail)
+    norm = jnp.sqrt(alpha * alpha + ssq)
+    beta = jnp.where(alpha >= 0, -norm, norm)
+    safe = ssq > 0
+    denom = jnp.where(safe, alpha - beta, 1.0)
+    v = jnp.concatenate([jnp.ones((1,), x.dtype), tail / denom])
+    tau = jnp.where(safe, (beta - alpha) / jnp.where(beta == 0, 1.0, beta), 0.0)
+    beta_out = jnp.where(safe, beta, alpha)
+    return v, tau.astype(x.dtype), beta_out.astype(x.dtype)
+
+
+def right_tile_ref(tile):
+    """Right op on a gathered tile (rows, d+1): row 0 is the pivot row.
+
+    Annihilates tile[0, 1:] into tile[0, 0] and applies the reflector from
+    the right to every other row. Matches ``exec_right`` in Rust.
+    """
+    v, tau, beta = householder(tile[0, :])
+    w = tile @ v  # (rows,)
+    out = tile - tau * jnp.outer(w, v)
+    d1 = tile.shape[1]
+    row0 = jnp.where(jnp.arange(d1) == 0, beta, jnp.zeros((), tile.dtype))
+    return out.at[0, :].set(jnp.where(tau != 0, row0, tile[0, :]))
+
+
+def left_tile_ref(tile):
+    """Left op on a gathered tile (d+1, cols): column 0 is the pivot
+    column. Matches ``exec_left`` in Rust."""
+    v, tau, beta = householder(tile[:, 0])
+    w = v @ tile  # (cols,)
+    out = tile - tau * jnp.outer(v, w)
+    d1 = tile.shape[0]
+    col0 = jnp.where(jnp.arange(d1) == 0, beta, jnp.zeros((), tile.dtype))
+    return out.at[:, 0].set(jnp.where(tau != 0, col0, tile[:, 0]))
+
+
+# --------------------------------------------------------------------------
+# numpy banded-cycle oracle (port of rust/src/bulge/cycle.rs)
+# --------------------------------------------------------------------------
+
+class NumpyBanded:
+    """Banded storage mirroring rust Banded<T>: (n, ld) row-major."""
+
+    def __init__(self, n, bw, tw, dtype=np.float64):
+        self.n = n
+        self.kd_super = bw + tw
+        self.kd_sub = tw
+        self.ld = self.kd_super + self.kd_sub + 1
+        self.data = np.zeros((n, self.ld), dtype=dtype)
+
+    def in_band(self, i, j):
+        return 0 <= i < self.n and 0 <= j < self.n and \
+            j + self.kd_sub >= i and i + self.kd_super >= j
+
+    def get(self, i, j):
+        if not self.in_band(i, j):
+            return 0.0
+        return self.data[j, self.kd_super + i - j]
+
+    def set(self, i, j, v):
+        assert self.in_band(i, j), (i, j)
+        self.data[j, self.kd_super + i - j] = v
+
+    def to_dense(self):
+        out = np.zeros((self.n, self.n), dtype=self.data.dtype)
+        for j in range(self.n):
+            lo = max(0, j - self.kd_super)
+            hi = min(self.n - 1, j + self.kd_sub)
+            for i in range(lo, hi + 1):
+                out[i, j] = self.get(i, j)
+        return out
+
+    @staticmethod
+    def from_random(n, bw, tw, rng):
+        b = NumpyBanded(n, bw, tw)
+        for i in range(n):
+            for j in range(i, min(i + bw, n - 1) + 1):
+                b.set(i, j, rng.standard_normal())
+        return b
+
+
+def _np_householder(x):
+    alpha = x[0]
+    ssq = float(np.sum(x[1:] * x[1:]))
+    if ssq == 0.0:
+        return None, 0.0, alpha
+    norm = np.sqrt(alpha * alpha + ssq)
+    beta = -norm if alpha >= 0 else norm
+    tau = (beta - alpha) / beta
+    v = np.concatenate([[1.0], x[1:] / (alpha - beta)])
+    return v, tau, beta
+
+
+def exec_cycle_numpy(a: NumpyBanded, stage, anchor: int, pivot: int):
+    """One bulge-chasing cycle (right + left op) on NumpyBanded."""
+    n, d, b = a.n, stage.d, stage.b
+    j0 = anchor
+    jd = min(j0 + d, n - 1)
+    dd = jd - j0
+    if dd == 0:
+        return
+    # Right op.
+    x = np.array([a.get(pivot, j0 + jj) for jj in range(dd + 1)])
+    v, tau, beta = _np_householder(x)
+    if tau != 0.0:
+        a.set(pivot, j0, beta)
+        for jj in range(1, dd + 1):
+            a.set(pivot, j0 + jj, 0.0)
+        r0, r1 = pivot + 1, jd
+        if r0 <= r1:
+            rows = np.array(
+                [[a.get(i, j0 + jj) for jj in range(dd + 1)] for i in range(r0, r1 + 1)]
+            )
+            w = tau * (rows @ v)
+            rows -= np.outer(w, v)
+            for ii, i in enumerate(range(r0, r1 + 1)):
+                for jj in range(dd + 1):
+                    a.set(i, j0 + jj, rows[ii, jj])
+    # Left op.
+    i1 = min(j0 + d, n - 1)
+    dd = i1 - j0
+    if dd == 0:
+        return
+    x = np.array([a.get(j0 + ii, j0) for ii in range(dd + 1)])
+    v, tau, beta = _np_householder(x)
+    if tau == 0.0:
+        return
+    a.set(j0, j0, beta)
+    for ii in range(1, dd + 1):
+        a.set(j0 + ii, j0, 0.0)
+    c1 = min(j0 + b + d, n - 1)
+    for col in range(j0 + 1, c1 + 1):
+        seg = np.array([a.get(j0 + ii, col) for ii in range(dd + 1)])
+        cfac = tau * (v @ seg)
+        seg -= cfac * v
+        for ii in range(dd + 1):
+            a.set(j0 + ii, col, seg[ii])
+
+
+def reduce_numpy(a: NumpyBanded, plan):
+    """Full sweep-major reduction (oracle for the L2 stage function)."""
+    for stage in plan:
+        ns = stage.num_sweeps(a.n)
+        for k in range(ns):
+            for c in range(stage.cmax(a.n, k) + 1):
+                exec_cycle_numpy(a, stage, stage.anchor(k, c), stage.pivot_row(k, c))

@@ -1,0 +1,182 @@
+"""L2 — JAX model of the bulge-chasing reduction over banded storage.
+
+Builds the functions that ``aot.py`` lowers to HLO text for the Rust
+coordinator:
+
+- ``make_cycle_fn(n, stage)``   — (storage, t) -> storage: one kernel
+  launch (all live sweeps at global cycle t), the unit the L3 launch loop
+  drives through PJRT.
+- ``make_stage_fn(n, stage)``   — storage -> storage: a whole bandwidth
+  stage as a ``lax.fori_loop`` over global cycles (the fused perf path:
+  one PJRT call per stage).
+- ``reduce_banded(storage, n, bw, tw)`` — full reduction (build-time /
+  test convenience).
+
+Storage: (n, ld) row-major with ``S[j, kd_super + i - j] = A[i, j]``
+(kd_super = bw0 + tw, ld = bw0 + 2·tw + 1) — bit-identical layout to the
+Rust ``Banded`` flat buffer, so literals cross the PJRT boundary without
+reshuffling. The matrix is padded with ``3·b`` zero columns at trace time
+so every gather/scatter is statically in bounds; phantom elements stay
+zero under the transforms (a Householder reflector of a zero tail is the
+identity), which subsumes all edge clamping — same argument as DESIGN.md
+§3.
+
+The slot loop covers ``stage.max_slots(n)`` concurrent sweeps; anchors
+are computed analytically from (t, slot) exactly as in
+``rust/src/bulge/schedule.rs``. Inactive slots degenerate to gathers of
+zero tiles (identity ops) via masking of the anchor into the pad region.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import bulge as kernels
+from compile.kernels import ref
+from compile.schedule import Stage, stage_plan
+
+
+def storage_dims(bw0: int, tw: int):
+    """(kd_super, kd_sub, ld) for a reduction with these parameters."""
+    kd_super = bw0 + tw
+    kd_sub = tw
+    return kd_super, kd_sub, kd_super + kd_sub + 1
+
+
+def _gather_right(storage, kd_super, pivot, anchor, rows, d1):
+    """Gather the right-op tile: rows pivot..pivot+rows-1 of columns
+    anchor..anchor+d. Column jj of the tile is a contiguous slice of
+    storage row (anchor+jj)."""
+    cols = []
+    for jj in range(d1):
+        col = anchor + jj
+        off = kd_super + pivot - col
+        seg = lax.dynamic_slice(storage, (col, off), (1, rows))
+        cols.append(seg[0])
+    return jnp.stack(cols, axis=1)  # (rows, d1)
+
+
+def _scatter_right(storage, kd_super, pivot, anchor, tile):
+    rows, d1 = tile.shape
+    for jj in range(d1):
+        col = anchor + jj
+        off = kd_super + pivot - col
+        storage = lax.dynamic_update_slice(storage, tile[None, :, jj], (col, off))
+    return storage
+
+
+def _gather_left(storage, kd_super, anchor, d1, cols):
+    """Gather the left-op tile: rows anchor..anchor+d of columns
+    anchor..anchor+cols-1."""
+    segs = []
+    for jj in range(cols):
+        col = anchor + jj
+        off = kd_super + anchor - col
+        seg = lax.dynamic_slice(storage, (col, off), (1, d1))
+        segs.append(seg[0])
+    return jnp.stack(segs, axis=1)  # (d1, cols)
+
+
+def _scatter_left(storage, kd_super, anchor, tile):
+    d1, cols = tile.shape
+    for jj in range(cols):
+        col = anchor + jj
+        off = kd_super + anchor - col
+        storage = lax.dynamic_update_slice(storage, tile[None, :, jj], (col, off))
+    return storage
+
+
+def make_cycle_fn(n: int, bw0: int, tw: int, stage: Stage, *, tpb: int = 32,
+                  use_pallas: bool = True):
+    """Build the per-launch function (storage, t) -> storage.
+
+    ``storage`` is the unpadded (n, ld) array; padding is applied and
+    stripped inside (XLA fuses it away across the fori_loop in the fused
+    stage variant).
+    """
+    kd_super, _, ld = storage_dims(bw0, tw)
+    b, d = stage.b, stage.d
+    rows_r = 1 + b + d      # right-op tile height (pivot + b+d rows)
+    d1 = d + 1
+    cols_l = 1 + b + d      # left-op tile width
+    pad_cols = 3 * b + d + 2  # pad columns so all slices stay in bounds
+    # Cycle-0 right tiles overrun the band depth by up to d rows (the
+    # Rust executor clamps instead); pad the ld axis so those phantom
+    # cells exist, hold zeros, and stay zero (reflector linearity).
+    pad_ld = d
+    slots = max(stage.max_slots(n), 1)
+    ns = stage.num_sweeps(n)
+
+    if use_pallas:
+        right_k = kernels.make_right_kernel(rows_r, d1, tpb)
+        left_k = kernels.make_left_kernel(d1, cols_l, tpb)
+    else:
+        right_k = ref.right_tile_ref
+        left_k = ref.left_tile_ref
+
+    def one_slot(s, carry):
+        storage, t = carry
+        # Schedule arithmetic (mirrors schedule.rs::tasks_at).
+        k = t // 3 - s
+        c = t - 3 * k
+        cmax = (n - 2 - (k + (b - d))) // b
+        valid = (k >= 0) & (k < ns) & (c >= 0) & (c <= cmax)
+        anchor_real = k + (b - d) + c * b
+        pivot_real = jnp.where(c == 0, k, anchor_real - b)
+        # Inactive slots are routed into the zero-pad region: the ops
+        # become exact identities on zeros.
+        anchor = jnp.where(valid, anchor_real, n + d)
+        pivot = jnp.where(valid, pivot_real, n + d)
+        # Right op.
+        tile = _gather_right(storage, kd_super, pivot, anchor, rows_r, d1)
+        tile = right_k(tile)
+        storage = _scatter_right(storage, kd_super, pivot, anchor, tile)
+        # Left op.
+        tile = _gather_left(storage, kd_super, anchor, d1, cols_l)
+        tile = left_k(tile)
+        storage = _scatter_left(storage, kd_super, anchor, tile)
+        return storage, t
+
+    def cycle(storage, t):
+        assert storage.shape == (n, ld), (storage.shape, (n, ld))
+        t = jnp.asarray(t, jnp.int32)
+        padded = jnp.pad(storage, ((0, pad_cols), (0, pad_ld)))
+        padded, _ = lax.fori_loop(0, slots, one_slot, (padded, t))
+        return padded[:n, :ld]
+
+    return cycle
+
+
+def make_stage_fn(n: int, bw0: int, tw: int, stage: Stage, *, tpb: int = 32,
+                  use_pallas: bool = True):
+    """Whole-stage function storage -> storage (fori_loop over launches)."""
+    cycle = make_cycle_fn(n, bw0, tw, stage, tpb=tpb, use_pallas=use_pallas)
+    total = stage.total_launches(n)
+
+    def stage_fn(storage):
+        return lax.fori_loop(
+            0, total, lambda t, s: cycle(s, t), storage
+        )
+
+    return stage_fn
+
+
+def reduce_banded(storage, n: int, bw: int, tw: int, *, tpb: int = 32,
+                  use_pallas: bool = True, jit: bool = True):
+    """Full banded -> bidiagonal reduction of an (n, ld) storage array."""
+    for stage in stage_plan(bw, tw):
+        fn = make_stage_fn(n, bw, tw, stage, tpb=tpb, use_pallas=use_pallas)
+        if jit:
+            fn = jax.jit(fn)
+        storage = fn(storage)
+    return storage
+
+
+def extract_bidiagonal(storage, n: int, bw0: int, tw: int):
+    """(diag, superdiag) from an (n, ld) storage array."""
+    kd_super, _, _ = storage_dims(bw0, tw)
+    d = storage[jnp.arange(n), jnp.full(n, kd_super)]
+    e = storage[jnp.arange(1, n), jnp.full(n - 1, kd_super - 1)]
+    return d, e

@@ -1,0 +1,80 @@
+"""Bulge-chasing schedule — exact Python mirror of ``rust/src/bulge/schedule.rs``.
+
+Used by the L2 model (to size slot counts and loop bounds at trace time),
+by ``aot.py`` (to enumerate stage artifacts), and by the tests (to check
+the Pallas/JAX path executes exactly the schedule the Rust coordinator
+expects).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One bandwidth-reduction stage: b -> b - d."""
+
+    b: int
+    d: int
+
+    def __post_init__(self):
+        assert self.b >= 2, f"stage needs bandwidth >= 2 (got {self.b})"
+        assert 1 <= self.d <= self.b - 1, f"need 1 <= d <= b-1 (b={self.b}, d={self.d})"
+
+    @property
+    def b_out(self) -> int:
+        return self.b - self.d
+
+    def num_sweeps(self, n: int) -> int:
+        return max(0, (n - 1) - self.b_out)
+
+    def anchor(self, k: int, c: int) -> int:
+        return k + self.b_out + c * self.b
+
+    def cmax(self, n: int, k: int) -> int:
+        assert k < self.num_sweeps(n)
+        return (n - 2 - self.anchor(k, 0)) // self.b
+
+    def pivot_row(self, k: int, c: int) -> int:
+        return k if c == 0 else self.anchor(k, c - 1)
+
+    def total_launches(self, n: int) -> int:
+        ns = self.num_sweeps(n)
+        if ns == 0:
+            return 0
+        return 3 * (ns - 1) + self.cmax(n, ns - 1) + 1
+
+    def tasks_at(self, n: int, t: int):
+        """(sweep, cycle, anchor, pivot) tuples live at global cycle t."""
+        ns = self.num_sweeps(n)
+        out = []
+        if ns == 0:
+            return out
+        k_hi = min(t // 3, ns - 1)
+        c0 = self.cmax(n, 0)
+        k_lo = (t - c0 + 2) // 3 if t > c0 else 0
+        for k in range(max(k_lo, 0), k_hi + 1):
+            c = t - 3 * k
+            if 0 <= c <= self.cmax(n, k):
+                out.append((k, c, self.anchor(k, c), self.pivot_row(k, c)))
+        return out
+
+    def max_slots(self, n: int) -> int:
+        """Maximum simultaneous tasks over the whole stage (static slot
+        count for the L2 kernel)."""
+        ns = self.num_sweeps(n)
+        if ns == 0:
+            return 0
+        # Peak parallelism = ceil((cmax(0)+1)/3) bounded by sweeps.
+        return min(ns, self.cmax(n, 0) // 3 + 1)
+
+
+def stage_plan(bw0: int, tw: int):
+    """Successive band reduction plan: consume min(tw, b-1) per stage."""
+    assert tw >= 1
+    plan = []
+    b = bw0
+    while b > 1:
+        d = min(tw, b - 1)
+        plan.append(Stage(b, d))
+        b -= d
+    return plan

@@ -1,0 +1,72 @@
+"""AOT emission: HLO text artifacts parse, have the right parameter
+signature, and the manifest matches the schedule."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.schedule import stage_plan
+
+
+def test_emit_variant_writes_expected_files(tmp_path):
+    out = str(tmp_path)
+    paths = aot.emit_variant(out, n=64, bw=4, tw=2, verbose=False)
+    plan = stage_plan(4, 2)
+    # cycle + fused per stage, plus the manifest.
+    assert len(paths) == 2 * len(plan) + 1
+    for p in paths:
+        full = os.path.join(out, p)
+        assert os.path.exists(full), p
+        assert os.path.getsize(full) > 0, p
+
+
+def test_manifest_contents(tmp_path):
+    out = str(tmp_path)
+    aot.emit_variant(out, n=64, bw=4, tw=2, verbose=False)
+    text = open(os.path.join(out, "manifest_n64_bw4_tw2.txt")).read()
+    assert "n=64" in text and "bw=4" in text and "tw=2" in text
+    kd_super, kd_sub, ld = model.storage_dims(4, 2)
+    assert f"ld={ld}" in text and f"kd_super={kd_super}" in text
+    plan = stage_plan(4, 2)
+    for i, st in enumerate(plan):
+        assert f"stage index={i} b={st.b} d={st.d}" in text
+        assert f"launches={st.total_launches(64)}" in text
+
+
+def test_hlo_text_is_parseable_hlo(tmp_path):
+    out = str(tmp_path)
+    aot.emit_variant(out, n=48, bw=4, tw=2, fused=False, verbose=False)
+    text = open(os.path.join(out, "cycle_n48_bw4_tw2_s0.hlo.txt")).read()
+    assert text.startswith("HloModule"), text[:80]
+    # Two parameters (storage f32[48, ld], t s32[]) and a tuple root.
+    kd_super, kd_sub, ld = model.storage_dims(4, 2)
+    assert f"f32[48,{ld}]" in text
+    assert "s32[]" in text
+
+
+def test_emitted_cycle_executes_like_model(tmp_path):
+    # Round-trip through the lowering: execute the lowered/compiled cycle
+    # via jax and compare with the eager model (same function object the
+    # Rust runtime will run through PJRT).
+    n, bw, tw = 48, 4, 2
+    stage = stage_plan(bw, tw)[0]
+    cycle = model.make_cycle_fn(n, bw, tw, stage)
+    compiled = jax.jit(cycle).lower(
+        jax.ShapeDtypeStruct((n, model.storage_dims(bw, tw)[2]), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ).compile()
+    rng = np.random.default_rng(0)
+    from compile.kernels import ref
+
+    nb = ref.NumpyBanded.from_random(n, bw, tw, rng)
+    s = jnp.asarray(nb.data, jnp.float32)
+    got = compiled(s, jnp.int32(0))
+    want = cycle(s, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_parse_variants():
+    assert aot.parse_variants("256:8:4,96:6:3") == [(256, 8, 4), (96, 6, 3)]

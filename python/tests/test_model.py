@@ -1,0 +1,140 @@
+"""L2 model (cycle / stage / full reduction) vs the numpy banded oracle
+and vs ground-truth singular values."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.schedule import Stage, stage_plan
+
+
+def random_storage(n, bw, tw, seed=0):
+    rng = np.random.default_rng(seed)
+    nb = ref.NumpyBanded.from_random(n, bw, tw, rng)
+    return nb
+
+
+def off_band_max(nb: ref.NumpyBanded, keep_super=1):
+    dense = nb.to_dense()
+    sub = np.abs(np.tril(dense, -1)).max(initial=0.0)
+    sup = np.abs(np.triu(dense, keep_super + 1)).max(initial=0.0)
+    return max(sub, sup)
+
+
+def as_numpy_banded(arr, n, bw, tw):
+    nb = ref.NumpyBanded(n, bw, tw)
+    nb.data = np.asarray(arr, np.float64)
+    return nb
+
+
+def test_single_cycle_matches_numpy_oracle():
+    n, bw, tw = 32, 6, 3
+    stage = Stage(6, 3)
+    nb = random_storage(n, bw, tw, seed=1)
+    cycle = jax.jit(model.make_cycle_fn(n, bw, tw, stage, use_pallas=False))
+    storage = jnp.asarray(nb.data, jnp.float32)
+    # Walk the first launches and compare after each.
+    oracle = ref.NumpyBanded(n, bw, tw)
+    oracle.data = nb.data.copy()
+    for t in range(12):
+        storage = cycle(storage, t)
+        for (k, c, anchor, pivot) in stage.tasks_at(n, t):
+            ref.exec_cycle_numpy(oracle, stage, anchor, pivot)
+        np.testing.assert_allclose(
+            np.asarray(storage), oracle.data.astype(np.float32), rtol=3e-5, atol=3e-5,
+            err_msg=f"t={t}",
+        )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(16, 48),
+    bw=st.integers(2, 8),
+    tw=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_full_reduction_reaches_bidiagonal(n, bw, tw, seed):
+    tw = min(tw, bw - 1) if bw > 1 else 1
+    if tw < 1:
+        tw = 1
+    nb = random_storage(n, bw, tw, seed=seed)
+    storage = jnp.asarray(nb.data, jnp.float32)
+    out = model.reduce_banded(storage, n, bw, tw, use_pallas=False)
+    result = as_numpy_banded(out, n, bw, tw)
+    assert off_band_max(result) < 5e-5, f"n={n} bw={bw} tw={tw}"
+
+
+def test_full_reduction_preserves_singular_values():
+    n, bw, tw = 40, 5, 2
+    nb = random_storage(n, bw, tw, seed=3)
+    sv0 = np.linalg.svd(nb.to_dense(), compute_uv=False)
+    out = model.reduce_banded(jnp.asarray(nb.data, jnp.float32), n, bw, tw)
+    result = as_numpy_banded(out, n, bw, tw)
+    sv1 = np.linalg.svd(result.to_dense(), compute_uv=False)
+    np.testing.assert_allclose(sv1, sv0, rtol=0, atol=2e-4 * sv0[0])
+
+
+def test_pallas_and_ref_paths_agree():
+    n, bw, tw = 36, 6, 3
+    nb = random_storage(n, bw, tw, seed=4)
+    s = jnp.asarray(nb.data, jnp.float32)
+    a = model.reduce_banded(s, n, bw, tw, use_pallas=True)
+    b = model.reduce_banded(s, n, bw, tw, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_stage_fn_equals_cycle_loop():
+    n, bw, tw = 28, 4, 2
+    stage = stage_plan(bw, tw)[0]
+    nb = random_storage(n, bw, tw, seed=5)
+    s0 = jnp.asarray(nb.data, jnp.float32)
+    # Fused whole-stage artifact path.
+    fused = jax.jit(model.make_stage_fn(n, bw, tw, stage, use_pallas=False))(s0)
+    # Per-cycle loop (what the Rust coordinator drives).
+    cycle = jax.jit(model.make_cycle_fn(n, bw, tw, stage, use_pallas=False))
+    s = s0
+    for t in range(stage.total_launches(n)):
+        s = cycle(s, t)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(s), rtol=0, atol=0)
+
+
+def test_cycle_is_noop_before_and_after_schedule():
+    # Launch index beyond the schedule: every slot is invalid -> identity.
+    n, bw, tw = 24, 4, 2
+    stage = stage_plan(bw, tw)[0]
+    nb = random_storage(n, bw, tw, seed=6)
+    s0 = jnp.asarray(nb.data, jnp.float32)
+    cycle = jax.jit(model.make_cycle_fn(n, bw, tw, stage, use_pallas=False))
+    out = cycle(s0, stage.total_launches(n) + 5)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(s0))
+
+
+def test_norm_preserved_through_stages():
+    n, bw, tw = 32, 6, 5
+    nb = random_storage(n, bw, tw, seed=7)
+    before = np.linalg.norm(nb.data)
+    out = model.reduce_banded(jnp.asarray(nb.data, jnp.float32), n, bw, tw)
+    after = np.linalg.norm(np.asarray(out))
+    assert abs(before - after) < 1e-4 * before
+
+
+def test_extract_bidiagonal_matches_dense():
+    n, bw, tw = 24, 3, 2
+    nb = random_storage(n, bw, tw, seed=8)
+    out = model.reduce_banded(jnp.asarray(nb.data, jnp.float32), n, bw, tw)
+    d, e = model.extract_bidiagonal(out, n, bw, tw)
+    dense = as_numpy_banded(out, n, bw, tw).to_dense()
+    np.testing.assert_allclose(np.asarray(d), np.diag(dense), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(e), np.diag(dense, 1), atol=1e-6)
+
+
+@pytest.mark.parametrize("n,bw,tw", [(20, 2, 1), (33, 7, 6), (26, 5, 5)])
+def test_edge_configurations(n, bw, tw):
+    tw = min(tw, bw - 1) if bw > 1 else 1
+    nb = random_storage(n, bw, tw, seed=9)
+    out = model.reduce_banded(jnp.asarray(nb.data, jnp.float32), n, bw, tw)
+    assert off_band_max(as_numpy_banded(out, n, bw, tw)) < 5e-5

@@ -1,0 +1,82 @@
+"""Schedule mirror: same invariants as rust/src/bulge/schedule.rs tests,
+swept with hypothesis — and the element-disjointness property the whole
+parallel design rests on."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile.schedule import Stage, stage_plan
+
+
+@given(bw0=st.integers(2, 128), tw=st.integers(1, 64))
+def test_stage_plan_reaches_bidiagonal(bw0, tw):
+    plan = stage_plan(bw0, tw)
+    b = bw0
+    for s in plan:
+        assert s.b == b and 1 <= s.d <= s.b - 1
+        b = s.b_out
+    assert b == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(8, 120),
+    b=st.integers(2, 12),
+    d_frac=st.floats(0.01, 1.0),
+)
+def test_every_task_fires_exactly_once(n, b, d_frac):
+    d = max(1, min(b - 1, int(b * d_frac)))
+    s = Stage(b, d)
+    seen = set()
+    for t in range(s.total_launches(n)):
+        for (k, c, anchor, pivot) in s.tasks_at(n, t):
+            assert (k, c) not in seen
+            seen.add((k, c))
+            assert t == 3 * k + c
+            assert anchor <= n - 2
+            assert pivot < anchor or (c == 0 and pivot == k)
+    expect = sum(s.cmax(n, k) + 1 for k in range(s.num_sweeps(n)))
+    assert len(seen) == expect
+    assert s.tasks_at(n, s.total_launches(n)) == []
+
+
+def _rects(stage, n, anchor, pivot):
+    d, b = stage.d, stage.b
+    right = (pivot, min(anchor + d, n - 1), anchor, min(anchor + d, n - 1))
+    left = (anchor, min(anchor + d, n - 1), anchor, min(anchor + b + d, n - 1))
+    return [right, left]
+
+
+def _intersects(a, b):
+    return a[0] <= b[1] and b[0] <= a[1] and a[2] <= b[3] and b[2] <= a[3]
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(16, 96), b=st.integers(2, 10))
+def test_simultaneous_tasks_element_disjoint(n, b):
+    # Includes the tight case d = b - 1 (paper §III-A, three-cycle rule).
+    for d in {1, b // 2 or 1, b - 1}:
+        s = Stage(b, d)
+        for t in range(s.total_launches(n)):
+            tasks = s.tasks_at(n, t)
+            for i in range(len(tasks)):
+                for j in range(i + 1, len(tasks)):
+                    ra = _rects(s, n, tasks[i][2], tasks[i][3])
+                    rb = _rects(s, n, tasks[j][2], tasks[j][3])
+                    for x in ra:
+                        for y in rb:
+                            assert not _intersects(x, y), (
+                                f"overlap t={t} b={b} d={d}: {tasks[i]} {tasks[j]}"
+                            )
+
+
+@given(n=st.integers(8, 2000), b=st.integers(2, 64))
+def test_max_slots_bounds_actual_parallelism(n, b):
+    d = max(1, b // 2)
+    s = Stage(b, d)
+    slots = s.max_slots(n)
+    total = s.total_launches(n)
+    # Sample a few launches plus the theoretical peak region.
+    probe = set(range(0, total, max(1, total // 17))) | {total // 2}
+    for t in probe:
+        if t < total:
+            assert len(s.tasks_at(n, t)) <= slots

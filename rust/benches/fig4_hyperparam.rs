@@ -1,0 +1,77 @@
+//! Fig. 4 regenerator: brute-force hyperparameter sweep (MaxBlocks ×
+//! tilewidth × TPB) on the hardware model — H100 FP32/FP64 and MI300X
+//! FP32, bandwidths 32 and 128 (the paper's parallel-coordinates data).
+
+use banded_svd::config::TuneParams;
+use banded_svd::simulator::{hw, simulate_reduction};
+use banded_svd::util::bench::Table;
+use banded_svd::util::json::{write_experiment, Json};
+
+fn main() {
+    println!("=== Fig. 4: hyperparameter sweep (modeled relative runtimes) ===\n");
+    let cases = [
+        ("H100", 4usize, 32usize, 65536usize),
+        ("H100", 4, 128, 65536),
+        ("H100", 8, 32, 65536),
+        ("H100", 8, 128, 65536),
+        ("MI300X", 4, 32, 65536),
+        ("MI300X", 4, 128, 32768),
+    ];
+    let mut arr = Vec::new();
+    for (arch_name, es, bw, n) in cases {
+        let arch = hw::arch_by_name(arch_name).unwrap();
+        let prec = match es {
+            8 => "fp64",
+            2 => "fp16",
+            _ => "fp32",
+        };
+        println!("--- {arch_name} {prec} bw={bw} n={n} ---");
+        let mut best = (f64::INFINITY, TuneParams::default());
+        let mut results = Vec::new();
+        for mb in [48usize, 96, 192, 384] {
+            for tw in [8usize, 16, 32, 64] {
+                if tw >= bw {
+                    continue;
+                }
+                for tpb in [16usize, 32, 64] {
+                    let p = TuneParams { tpb, tw, max_blocks: mb };
+                    let s = simulate_reduction(&arch, es, n, bw, &p).seconds;
+                    if s < best.0 {
+                        best = (s, p);
+                    }
+                    results.push((mb, tw, tpb, s));
+                }
+            }
+        }
+        let mut t = Table::new(vec!["maxblk", "tw", "tpb", "time", "rel"]);
+        for (mb, tw, tpb, s) in &results {
+            t.row(vec![
+                mb.to_string(),
+                tw.to_string(),
+                tpb.to_string(),
+                format!("{s:.3} s"),
+                format!("{:.2}x", s / best.0),
+            ]);
+            arr.push(
+                Json::obj()
+                    .set("arch", arch_name)
+                    .set("precision", prec)
+                    .set("bw", bw)
+                    .set("max_blocks", *mb)
+                    .set("tw", *tw)
+                    .set("tpb", *tpb)
+                    .set("seconds", *s),
+            );
+        }
+        t.print();
+        println!(
+            "best: max_blocks={} tw={} tpb={} — paper optimum tw: {} ({prec})\n",
+            best.1.max_blocks,
+            best.1.tw,
+            best.1.tpb,
+            128 / es
+        );
+    }
+    let path = write_experiment("fig4_hyperparam", &Json::Arr(arr)).unwrap();
+    println!("[json] {}", path.display());
+}

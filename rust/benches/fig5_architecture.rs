@@ -1,0 +1,45 @@
+//! Fig. 5 regenerator: relative performance loss of older architectures
+//! (A100 vs H100, MI250X vs MI300X) across sizes and bandwidths.
+
+use banded_svd::config::TuneParams;
+use banded_svd::simulator::{hw, simulate_reduction};
+use banded_svd::util::bench::Table;
+use banded_svd::util::json::{write_experiment, Json};
+
+fn main() {
+    println!("=== Fig. 5: architecture generation gains (modeled) ===");
+    println!("values are time(old)/time(new): > 1 means the newer GPU wins\n");
+    let sizes = [4096usize, 8192, 16384, 32768, 65536];
+    let bandwidths = [32usize, 128];
+    let mut arr = Vec::new();
+    for &bw in &bandwidths {
+        let tw = 32.min(bw - 1);
+        let p = TuneParams { tpb: 32, tw, max_blocks: 192 };
+        let mut t = Table::new(vec!["n", "A100/H100", "MI250X/MI300X"]);
+        for &n in &sizes {
+            let h100 = simulate_reduction(&hw::H100, 4, n, bw, &p).seconds;
+            let a100 = simulate_reduction(&hw::A100, 4, n, bw, &p).seconds;
+            let mi300 = simulate_reduction(&hw::MI300X, 4, n, bw, &p).seconds;
+            let mi250 = simulate_reduction(&hw::MI250X, 4, n, bw, &p).seconds;
+            t.row(vec![
+                n.to_string(),
+                format!("{:.2}x", a100 / h100),
+                format!("{:.2}x", mi250 / mi300),
+            ]);
+            arr.push(
+                Json::obj()
+                    .set("n", n)
+                    .set("bw", bw)
+                    .set("nvidia_gain", a100 / h100)
+                    .set("amd_gain", mi250 / mi300),
+            );
+        }
+        println!("--- bandwidth {bw} ---");
+        t.print();
+        println!();
+    }
+    println!("expected shape: both ratios > 1 (newer architectures win), driven by");
+    println!("H100's larger L1/L2 and MI300X's doubled L1 + Infinity Cache (paper §V-C).");
+    let path = write_experiment("fig5_architecture", &Json::Arr(arr)).unwrap();
+    println!("[json] {}", path.display());
+}

@@ -1,0 +1,118 @@
+//! §Perf harness: micro-benchmarks of the hot paths at each layer,
+//! driving the EXPERIMENTS.md §Perf before/after log.
+//!
+//! - L3 native: single cycle kernel, launch loop (seq vs parallel),
+//!   thread scaling.
+//! - PJRT path: per-cycle vs fused whole-stage artifacts (needs
+//!   `make artifacts`).
+
+use banded_svd::bulge::cycle::{exec_cycle, CycleWorkspace};
+use banded_svd::bulge::schedule::Stage;
+use banded_svd::bulge::{reduce_to_bidiagonal, reduce_to_bidiagonal_parallel};
+use banded_svd::config::TuneParams;
+use banded_svd::generate::random_banded;
+use banded_svd::runtime::{artifact_dir, PjrtEngine};
+use banded_svd::util::bench::{fmt_duration, Bencher, Table};
+use banded_svd::util::rng::Xoshiro256;
+use banded_svd::util::threadpool::ThreadPool;
+
+fn main() {
+    let bench = Bencher::from_env();
+    println!("=== perf: hot-path micro-benchmarks ===\n");
+
+    // --- L1-analog: cycle kernel cost (fresh tasks, real work) -----------
+    // Measuring one task repeatedly would hit the tau=0 fast path after
+    // the first call; instead run a whole stage sweep-major on a fresh
+    // matrix and divide by the task count.
+    let mut t = Table::new(vec!["kernel", "per-task", "per-element", "eff GB/s"]);
+    for (b, d) in [(16usize, 8usize), (32, 16), (64, 32)] {
+        let stage = Stage::new(b, d);
+        let n = 16 * b;
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let base = random_banded::<f64>(n, b, d, &mut rng);
+        let tasks: usize = (0..stage.num_sweeps(n)).map(|k| stage.cmax(n, k) + 1).sum();
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let mut a = base.clone();
+            let mut ws = CycleWorkspace::new(&stage);
+            let t0 = std::time::Instant::now();
+            for k in 0..stage.num_sweeps(n) {
+                for c in 0..=stage.cmax(n, k) {
+                    exec_cycle(&mut a, &stage, &stage.task(k, c), &mut ws);
+                }
+            }
+            best = best.min(t0.elapsed().as_secs_f64() / tasks as f64);
+        }
+        let elems = 2 * (1 + b + d) * (d + 1);
+        let bytes = 2.0 * elems as f64 * 8.0; // read+write f64
+        t.row(vec![
+            format!("cycle b={b} d={d}"),
+            format!("{:.0} ns", best * 1e9),
+            format!("{:.2} ns", best * 1e9 / elems as f64),
+            format!("{:.1}", bytes / best / 1e9),
+        ]);
+    }
+    t.print();
+
+    // --- L3: full reduction, sequential vs parallel, two workload sizes --
+    // Small launches (n=2048, bw=32): barrier overhead ~ per-launch work,
+    // parallel gains little — the CPU analog of the paper's occupancy
+    // argument. Bigger tasks (n=4096, bw=64): launch-level parallelism
+    // pays off.
+    for (n, bw, tw) in [(2048usize, 32usize, 16usize), (4096, 64, 32)] {
+        println!("\n--- launch loop: n={n}, bw={bw}, tw={tw} ---");
+        let params = TuneParams { tpb: 32, tw, max_blocks: 4096 };
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let base = random_banded::<f64>(n, bw, tw, &mut rng);
+        let mut t = Table::new(vec!["executor", "median"]);
+        let s = bench.run_once("sequential", || {
+            let mut a = base.clone();
+            reduce_to_bidiagonal(&mut a, bw, &params);
+        });
+        t.row(vec!["sequential".to_string(), fmt_duration(s.median)]);
+        let seq = s.median;
+        for threads in [2usize, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let s = bench.run_once(&format!("parallel x{threads}"), || {
+                let mut a = base.clone();
+                reduce_to_bidiagonal_parallel(&mut a, bw, &params, &pool);
+            });
+            t.row(vec![
+                format!(
+                    "parallel x{threads} ({:.2}x)",
+                    seq.as_secs_f64() / s.median.as_secs_f64()
+                ),
+                fmt_duration(s.median),
+            ]);
+        }
+        t.print();
+    }
+
+    // --- PJRT path: per-cycle vs fused ------------------------------------
+    println!("\n--- PJRT artifacts (n=256, bw=8, tw=4) ---");
+    match PjrtEngine::load(&artifact_dir(), 256, 8, 4) {
+        Ok(engine) => {
+            let mut rng = Xoshiro256::seed_from_u64(3);
+            let a0 = random_banded::<f32>(256, 8, 4, &mut rng);
+            let mut t = Table::new(vec!["mode", "median", "launches"]);
+            let mut a = a0.clone();
+            let s = bench.run_once("per-cycle", || {
+                engine.reduce_banded(&mut a, false).unwrap();
+            });
+            let launches: usize = engine.manifest().stages.iter().map(|s| s.launches).sum();
+            t.row(vec!["per-cycle".into(), fmt_duration(s.median), launches.to_string()]);
+            let per_cycle = s.median;
+            let mut a = a0.clone();
+            let s = bench.run_once("fused", || {
+                engine.reduce_banded(&mut a, true).unwrap();
+            });
+            t.row(vec![
+                format!("fused ({:.1}x)", per_cycle.as_secs_f64() / s.median.as_secs_f64()),
+                fmt_duration(s.median),
+                format!("{} (in {} calls)", launches, engine.manifest().stages.len()),
+            ]);
+            t.print();
+        }
+        Err(e) => println!("skipped (artifacts missing: {e})"),
+    }
+}

@@ -1,0 +1,32 @@
+//! Table I regenerator: matrix size for full GPU occupancy (eq. (1)).
+
+use banded_svd::simulator::{self, occupancy};
+use banded_svd::util::bench::Table;
+use banded_svd::util::json::{write_experiment, Json};
+
+fn main() {
+    println!("=== Table I: matrix size n required for full occupancy (CBW = 32) ===");
+    let rows = simulator::table1(32);
+    let mut t = Table::new(vec!["GPU Architecture", "Execution Units (ALUs)", "n >= 3*CBW*ALUs"]);
+    let mut arr = Vec::new();
+    for r in &rows {
+        t.row(vec![r.arch.to_string(), r.alus.to_string(), r.n_required.to_string()]);
+        arr.push(
+            Json::obj()
+                .set("arch", r.arch)
+                .set("alus", r.alus)
+                .set("n_required", r.n_required),
+        );
+    }
+    t.print();
+    // Occupancy fractions at the paper's benchmark sizes.
+    println!("\noccupancy fraction on H100 at CBW=32:");
+    for n in [1024usize, 8192, 32768, 65536] {
+        println!(
+            "  n = {n:>6}: {:.1}%",
+            100.0 * occupancy::occupancy_fraction(&banded_svd::simulator::hw::H100, n, 32)
+        );
+    }
+    let path = write_experiment("table1_occupancy", &Json::Arr(arr)).unwrap();
+    println!("\n[json] {}", path.display());
+}

@@ -1,0 +1,171 @@
+//! Small dense row-major matrix helpers used by generation, stage 1, and
+//! the test oracles. Not a general linear-algebra library — only what the
+//! pipeline needs, kept simple and correct.
+
+use crate::scalar::Scalar;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> Dense<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::zero(); rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, T::one());
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// C = A * B (naive triple loop with row-major-friendly ordering).
+    pub fn matmul(&self, other: &Dense<T>) -> Dense<T> {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Dense::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.get(i, p);
+                if a == T::zero() {
+                    continue;
+                }
+                let brow = other.row(p);
+                let orow = out.row_mut(i);
+                for j in 0..n {
+                    orow[j] = a.mul_add(brow[j], orow[j]);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Dense<T> {
+        let mut out = Dense::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|v| {
+                let x = v.to_f64();
+                x * x
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// max |self - other| over all entries.
+    pub fn max_abs_diff(&self, other: &Dense<T>) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a.to_f64() - b.to_f64()).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Deviation from orthogonality: ||AᵀA - I||_max. Used by tests on the
+    /// generated U, V factors.
+    pub fn orthogonality_error(&self) -> f64 {
+        let g = self.transpose().matmul(self);
+        let mut worst = 0.0f64;
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let target = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((g.get(i, j).to_f64() - target).abs());
+            }
+        }
+        worst
+    }
+
+    pub fn convert<U: Scalar>(&self) -> Dense<U> {
+        Dense {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| U::from_f64(v.to_f64())).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul_is_noop() {
+        let mut a = Dense::<f64>::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                a.set(i, j, (i * 3 + j) as f64);
+            }
+        }
+        let i3 = Dense::identity(3);
+        assert_eq!(a.matmul(&i3), a);
+        assert_eq!(i3.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        let a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Dense::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn fro_norm_matches_hand_value() {
+        let a = Dense::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn orthogonality_error_of_identity_is_zero() {
+        let i = Dense::<f64>::identity(4);
+        assert_eq!(i.orthogonality_error(), 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Banded and dense matrix containers.
+
+pub mod dense;
+pub mod storage;
+
+pub use dense::Dense;
+pub use storage::Banded;

@@ -1,0 +1,329 @@
+//! Banded column-major storage (paper §IV-b).
+//!
+//! An upper-banded n×n matrix with `bw` superdiagonals is stored as a
+//! (`ld` × n) column-major array with `ld = kd_sub + kd_super + 1`:
+//! element (i, j) lives at `data[j*ld + (kd_super + i - j)]`.
+//!
+//! For bulge chasing with inner tilewidth `tw`, fill-in reaches `tw`
+//! diagonals beyond the band on both sides, so the working storage is
+//! `kd_super = bw + tw`, `kd_sub = tw` — the paper's "height of the matrix
+//! bandwidth increased by twice the inner tilewidth".
+//!
+//! Key property exploited by the hot loops: a *column segment*
+//! `(i0..=i1, j)` is contiguous in memory.
+
+use crate::scalar::Scalar;
+
+/// Upper-banded matrix with room for bulge fill-in.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Banded<T> {
+    n: usize,
+    kd_super: usize,
+    kd_sub: usize,
+    ld: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Banded<T> {
+    /// Zero-initialized banded storage.
+    pub fn zeros(n: usize, kd_super: usize, kd_sub: usize) -> Self {
+        assert!(n > 0, "empty matrix");
+        let ld = kd_super + kd_sub + 1;
+        Self { n, kd_super, kd_sub, ld, data: vec![T::zero(); ld * n] }
+    }
+
+    /// Working storage for a bulge-chasing reduction of an upper-banded
+    /// matrix with bandwidth `bw`, inner tilewidth `tw`.
+    pub fn for_reduction(n: usize, bw: usize, tw: usize) -> Self {
+        Self::zeros(n, bw + tw, tw)
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    #[inline]
+    pub fn kd_super(&self) -> usize {
+        self.kd_super
+    }
+    #[inline]
+    pub fn kd_sub(&self) -> usize {
+        self.kd_sub
+    }
+    #[inline]
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// True if (i, j) lies within the representable diagonals.
+    #[inline]
+    pub fn in_band(&self, i: usize, j: usize) -> bool {
+        i < self.n
+            && j < self.n
+            && (j + self.kd_sub >= i) // i - j <= kd_sub
+            && (i + self.kd_super >= j) // j - i <= kd_super
+    }
+
+    /// Flat index of (i, j). Panics outside the representable band (the
+    /// hot path uses `SharedBanded`'s unchecked view instead).
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize) -> usize {
+        assert!(self.in_band(i, j), "({i},{j}) outside band");
+        j * self.ld + (self.kd_super + i - j)
+    }
+
+    /// Read element (i, j); zero outside the representable band.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        if self.in_band(i, j) {
+            self.data[self.idx(i, j)]
+        } else {
+            T::zero()
+        }
+    }
+
+    /// Write element (i, j). Panics outside the representable band.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        let ix = self.idx(i, j);
+        self.data[ix] = v;
+    }
+
+    /// Contiguous column segment rows `i0..=i1` of column `j`.
+    #[inline]
+    pub fn col_segment(&self, j: usize, i0: usize, i1: usize) -> &[T] {
+        debug_assert!(i0 <= i1);
+        let lo = self.idx(i0, j);
+        let hi = self.idx(i1, j);
+        &self.data[lo..=hi]
+    }
+
+    /// Mutable contiguous column segment rows `i0..=i1` of column `j`.
+    #[inline]
+    pub fn col_segment_mut(&mut self, j: usize, i0: usize, i1: usize) -> &mut [T] {
+        debug_assert!(i0 <= i1);
+        let lo = self.idx(i0, j);
+        let hi = self.idx(i1, j);
+        &mut self.data[lo..=hi]
+    }
+
+    /// Split into disjoint mutable column-segment views for a set of
+    /// columns `j0..=j1`, all rows clamped to the band. Used by the cycle
+    /// kernels to walk a parallelogram tile column-by-column.
+    #[inline]
+    pub fn col_ptr(&mut self, j: usize) -> *mut T {
+        self.data[j * self.ld..].as_mut_ptr()
+    }
+
+    /// Range of rows representable in column `j` (also clipped to matrix).
+    #[inline]
+    pub fn col_row_range(&self, j: usize) -> (usize, usize) {
+        let lo = j.saturating_sub(self.kd_super);
+        let hi = (j + self.kd_sub).min(self.n - 1);
+        (lo, hi)
+    }
+
+    /// Extract the main diagonal and first superdiagonal (the bidiagonal
+    /// result of a completed reduction).
+    pub fn bidiagonal(&self) -> (Vec<T>, Vec<T>) {
+        let d: Vec<T> = (0..self.n).map(|i| self.get(i, i)).collect();
+        let e: Vec<T> = (0..self.n - 1).map(|i| self.get(i, i + 1)).collect();
+        (d, e)
+    }
+
+    /// Maximum |element| strictly outside the first `keep_super`
+    /// superdiagonals (and on all subdiagonals). Zero for a completed
+    /// reduction with `keep_super = 1`.
+    pub fn max_off_band(&self, keep_super: usize) -> f64 {
+        let mut worst = 0.0f64;
+        for j in 0..self.n {
+            let (lo, hi) = self.col_row_range(j);
+            for i in lo..=hi {
+                let within = i <= j && j - i <= keep_super;
+                if !within {
+                    worst = worst.max(self.get(i, j).to_f64().abs());
+                }
+            }
+        }
+        worst
+    }
+
+    /// Frobenius norm (over representable entries).
+    pub fn fro_norm(&self) -> f64 {
+        let mut s = 0.0;
+        for j in 0..self.n {
+            let (lo, hi) = self.col_row_range(j);
+            for i in lo..=hi {
+                let v = self.get(i, j).to_f64();
+                s += v * v;
+            }
+        }
+        s.sqrt()
+    }
+
+    /// Convert the representable band to a dense row-major n×n matrix.
+    pub fn to_dense(&self) -> Vec<T> {
+        let n = self.n;
+        let mut out = vec![T::zero(); n * n];
+        for j in 0..n {
+            let (lo, hi) = self.col_row_range(j);
+            for i in lo..=hi {
+                out[i * n + j] = self.get(i, j);
+            }
+        }
+        out
+    }
+
+    /// Build banded storage from a dense row-major matrix, keeping `bw`
+    /// superdiagonals and reserving `tw` fill diagonals each side. Entries
+    /// outside the kept band must be (numerically) zero; they are dropped.
+    pub fn from_dense(a: &[T], n: usize, bw: usize, tw: usize) -> Self {
+        assert_eq!(a.len(), n * n);
+        let mut b = Self::for_reduction(n, bw, tw);
+        for i in 0..n {
+            for j in i..=(i + bw).min(n - 1) {
+                b.set(i, j, a[i * n + j]);
+            }
+        }
+        b
+    }
+
+    /// Convert elements to another precision.
+    pub fn convert<U: Scalar>(&self) -> Banded<U> {
+        Banded {
+            n: self.n,
+            kd_super: self.kd_super,
+            kd_sub: self.kd_sub,
+            ld: self.ld,
+            data: self.data.iter().map(|v| U::from_f64(v.to_f64())).collect(),
+        }
+    }
+
+    /// Flat f32 buffer in (ld × n) column-major order — the exact layout
+    /// the L2 JAX model and the PJRT artifacts consume.
+    pub fn to_f32_flat(&self) -> Vec<f32> {
+        self.data.iter().map(|v| v.to_f64() as f32).collect()
+    }
+
+    /// Overwrite contents from a flat f32 buffer (layout as `to_f32_flat`).
+    pub fn from_f32_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.data.len());
+        for (d, &s) in self.data.iter_mut().zip(flat.iter()) {
+            *d = T::from_f64(s as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = Banded::<f64>::for_reduction(8, 3, 2);
+        b.set(0, 0, 1.0);
+        b.set(0, 3, 2.0); // edge of band
+        b.set(2, 0, 3.0); // subdiagonal fill (within tw=2)
+        b.set(1, 6, 4.0); // superdiagonal fill (bw+tw = 5)
+        assert_eq!(b.get(0, 0), 1.0);
+        assert_eq!(b.get(0, 3), 2.0);
+        assert_eq!(b.get(2, 0), 3.0);
+        assert_eq!(b.get(1, 6), 4.0);
+        assert_eq!(b.get(5, 0), 0.0); // outside band reads zero
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_outside_band_panics() {
+        let mut b = Banded::<f64>::for_reduction(8, 3, 2);
+        b.set(7, 0, 1.0);
+    }
+
+    #[test]
+    fn column_segment_is_contiguous_and_matches_get() {
+        let mut b = Banded::<f64>::for_reduction(10, 4, 2);
+        for i in 2..=6 {
+            b.set(i, 6, i as f64);
+        }
+        let seg = b.col_segment(6, 2, 6);
+        assert_eq!(seg, &[2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let n = 6;
+        let bw = 2;
+        let mut dense = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in i..=(i + bw).min(n - 1) {
+                dense[i * n + j] = (i * 10 + j) as f64 + 1.0;
+            }
+        }
+        let b = Banded::from_dense(&dense, n, bw, 1);
+        assert_eq!(b.to_dense(), dense);
+    }
+
+    #[test]
+    fn bidiagonal_extraction() {
+        let n = 5;
+        let mut b = Banded::<f64>::for_reduction(n, 2, 1);
+        for i in 0..n {
+            b.set(i, i, (i + 1) as f64);
+            if i + 1 < n {
+                b.set(i, i + 1, 0.5);
+            }
+        }
+        let (d, e) = b.bidiagonal();
+        assert_eq!(d, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(e, vec![0.5; 4]);
+    }
+
+    #[test]
+    fn max_off_band_detects_leftovers() {
+        let n = 6;
+        let mut b = Banded::<f64>::for_reduction(n, 3, 1);
+        b.set(0, 1, 1.0);
+        assert_eq!(b.max_off_band(1), 0.0);
+        b.set(0, 2, 0.25);
+        assert_eq!(b.max_off_band(1), 0.25);
+        b.set(3, 2, 0.75); // subdiagonal
+        assert_eq!(b.max_off_band(1), 0.75);
+    }
+
+    #[test]
+    fn f32_flat_roundtrip() {
+        let mut b = Banded::<f64>::for_reduction(7, 3, 2);
+        b.set(2, 4, 1.5);
+        b.set(3, 3, -2.5);
+        let flat = b.to_f32_flat();
+        let mut c = Banded::<f64>::for_reduction(7, 3, 2);
+        c.from_f32_flat(&flat);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn precision_conversion() {
+        use crate::scalar::F16;
+        let mut b = Banded::<f64>::for_reduction(4, 2, 1);
+        b.set(0, 0, 0.333333333333);
+        let h: Banded<F16> = b.convert();
+        let back: Banded<f64> = h.convert();
+        assert!((back.get(0, 0) - 0.333333333333).abs() < 1e-3);
+    }
+
+    #[test]
+    fn col_row_range_clips() {
+        let b = Banded::<f64>::for_reduction(10, 3, 2);
+        assert_eq!(b.col_row_range(0), (0, 2));
+        assert_eq!(b.col_row_range(9), (4, 9));
+        assert_eq!(b.col_row_range(7), (2, 9));
+    }
+}

@@ -1,0 +1,19 @@
+//! CPU baselines for the Fig. 6 comparison.
+//!
+//! - [`gbbrd`]       — LAPACK-gbbrd-style one-shot reduction: chase each
+//!   element with Givens-like 2×2 Householder steps, no tiling, no
+//!   parallelism. Represents the classical reference algorithm.
+//! - [`slate_like`]  — coarse-grained single-pass reduction in the style
+//!   SLATE executes stage 2 (sweep-major, whole-bandwidth tasks, single
+//!   thread per sweep chain).
+//! - [`plasma_like`] — task-coalesced multicore bulge chasing in the
+//!   style of PLASMA/Haidar 2012: groups of sweeps pipelined across CPU
+//!   threads with coarse tasks.
+
+pub mod gbbrd;
+pub mod plasma_like;
+pub mod slate_like;
+
+pub use gbbrd::gbbrd_reduce;
+pub use plasma_like::plasma_like_reduce;
+pub use slate_like::slate_like_reduce;

@@ -1,0 +1,68 @@
+//! SLATE-style baseline.
+//!
+//! SLATE (as of the versions the paper benchmarks) executes stage 2 on
+//! the CPU with a sweep-major, whole-bandwidth algorithm: each sweep
+//! chases its bulge across the entire matrix before the next sweep
+//! starts, with large blocked transforms but no inter-sweep pipelining.
+//! We model that behaviour: full-bandwidth tilewidth (d = bw−1 in one
+//! stage), strictly sweep-major, single-threaded.
+
+use crate::banded::storage::Banded;
+use crate::bulge::cycle::{exec_cycle, CycleWorkspace};
+use crate::bulge::schedule::Stage;
+use crate::scalar::Scalar;
+
+/// Reduce `a` (bandwidth `bw`) to bidiagonal, whole bandwidth at once,
+/// sweep-major. Storage: `kd_sub ≥ bw−1`, `kd_super ≥ 2·bw−1`.
+pub fn slate_like_reduce<T: Scalar>(a: &mut Banded<T>, bw: usize) {
+    if bw <= 1 {
+        return;
+    }
+    let d = bw - 1;
+    assert!(
+        a.kd_sub() >= d && a.kd_super() >= bw + d,
+        "storage too small: need kd_sub ≥ {d}, kd_super ≥ {}",
+        bw + d
+    );
+    let n = a.n();
+    let stage = Stage::new(bw, d);
+    let mut ws = CycleWorkspace::new(&stage);
+    for k in 0..stage.num_sweeps(n) {
+        for c in 0..=stage.cmax(n, k) {
+            exec_cycle(a, &stage, &stage.task(k, c), &mut ws);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn reduces_to_bidiagonal() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let (n, bw) = (40, 7);
+        let mut a = random_banded::<f64>(n, bw, bw - 1, &mut rng);
+        let before = a.fro_norm();
+        slate_like_reduce(&mut a, bw);
+        assert_eq!(a.max_off_band(1), 0.0);
+        assert!((a.fro_norm() - before).abs() < 1e-10 * before);
+    }
+
+    #[test]
+    fn bidiagonal_input_is_untouched() {
+        let n = 10;
+        let mut a = Banded::<f64>::for_reduction(n, 1, 1);
+        for i in 0..n {
+            a.set(i, i, 2.0);
+            if i + 1 < n {
+                a.set(i, i + 1, 1.0);
+            }
+        }
+        let before = a.clone();
+        slate_like_reduce(&mut a, 1);
+        assert_eq!(a, before);
+    }
+}

@@ -1,0 +1,25 @@
+use banded_svd::banded::storage::Banded;
+use banded_svd::config::{Backend, TuneParams};
+use banded_svd::coordinator::Coordinator;
+use banded_svd::generate::random_banded;
+use banded_svd::util::rng::Xoshiro256;
+
+fn main() {
+    let params = TuneParams { tpb: 32, tw: 4, max_blocks: 8 };
+    let coord = Coordinator::new(params, 4);
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let (n, bw) = (64usize, 8usize);
+    let a0: Banded<f64> = random_banded::<f64>(n, bw, 4, &mut rng);
+    for trial in 0..5 {
+        let mut a1 = a0.clone();
+        let mut a2 = a0.clone();
+        coord.reduce_native(&mut a1, bw, Backend::Sequential).unwrap();
+        coord.reduce_native(&mut a2, bw, Backend::Parallel).unwrap();
+        let mut ndiff = 0;
+        let mut worst = 0.0f64;
+        for (i, (x, y)) in a1.data().iter().zip(a2.data().iter()).enumerate() {
+            if x != y { ndiff += 1; worst = worst.max((x - y).abs()); if ndiff < 4 { println!("trial {trial} idx {i}: {x} vs {y}"); } }
+        }
+        println!("trial {trial}: ndiff={ndiff} worst={worst:.3e}");
+    }
+}

@@ -1,0 +1,401 @@
+//! The bulge-chasing cycle kernel — native-Rust analog of the paper's
+//! Algorithm 2 (and of the L1 Pallas kernel in
+//! `python/compile/kernels/bulge.py`).
+//!
+//! A cycle = one **right** op (annihilate `d` elements of the pivot row by
+//! combining `d+1` columns) + one **left** op (annihilate the generated
+//! column bulge by combining `d+1` rows). Both walk the banded storage
+//! column-by-column so every inner loop runs over a *contiguous* memory
+//! segment — the CPU analog of the coalesced/cache-line-aligned accesses
+//! the paper engineers on GPUs.
+
+use crate::banded::storage::Banded;
+use crate::bulge::schedule::{CycleTask, Stage};
+use crate::householder::make_reflector;
+use crate::scalar::Scalar;
+
+/// Reusable scratch for cycle execution (no allocation on the hot path —
+/// the paper keeps these in shared memory / registers).
+#[derive(Clone, Debug)]
+pub struct CycleWorkspace<T> {
+    /// Householder vector: x[0] = β after `make_reflector`, x[1..] = tail.
+    x: Vec<T>,
+    /// Per-row dot products for the right op.
+    w: Vec<T>,
+}
+
+impl<T: Scalar> CycleWorkspace<T> {
+    pub fn new(stage: &Stage) -> Self {
+        Self {
+            x: vec![T::zero(); stage.d + 1],
+            w: vec![T::zero(); stage.b + stage.d + 1],
+        }
+    }
+
+    /// Workspace sized for the largest stage of a plan.
+    pub fn for_plan(plan: &[Stage]) -> Self {
+        let d = plan.iter().map(|s| s.d).max().unwrap_or(1);
+        let bd = plan.iter().map(|s| s.b + s.d).max().unwrap_or(2);
+        Self { x: vec![T::zero(); d + 1], w: vec![T::zero(); bd + 1] }
+    }
+}
+
+/// A raw, `Send + Sync` view over banded storage used by the launch-level
+/// parallel executor. Safety rests on the schedule's disjointness
+/// guarantee (proved in `schedule.rs` tests): simultaneous tasks touch
+/// disjoint element sets, hence disjoint storage indices.
+pub struct SharedBanded<T> {
+    data: *mut T,
+    n: usize,
+    kd_super: usize,
+    ld: usize,
+}
+
+unsafe impl<T: Send> Send for SharedBanded<T> {}
+unsafe impl<T: Send> Sync for SharedBanded<T> {}
+
+impl<T: Scalar> SharedBanded<T> {
+    pub fn new(a: &mut Banded<T>) -> Self {
+        Self {
+            n: a.n(),
+            kd_super: a.kd_super(),
+            ld: a.ld(),
+            data: a.data_mut().as_mut_ptr(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(j + self.kd_super >= i, "({i},{j}) below band");
+        j * self.ld + (self.kd_super + i - j)
+    }
+
+    /// Contiguous mutable column segment (i0..=i1, j).
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent access to these elements.
+    #[inline]
+    unsafe fn col_segment_mut<'a>(&self, j: usize, i0: usize, i1: usize) -> &'a mut [T] {
+        let lo = self.idx(i0, j);
+        std::slice::from_raw_parts_mut(self.data.add(lo), i1 - i0 + 1)
+    }
+
+    #[inline]
+    unsafe fn get(&self, i: usize, j: usize) -> T {
+        *self.data.add(self.idx(i, j))
+    }
+
+    #[inline]
+    unsafe fn set(&self, i: usize, j: usize, v: T) {
+        *self.data.add(self.idx(i, j)) = v;
+    }
+}
+
+/// Execute the **right** op of `task`: annihilate the pivot row's elements
+/// in columns `anchor+1 ..= min(anchor+d, n−1)` into `(pivot, anchor)`,
+/// applying the reflector to rows `pivot+1 ..= min(anchor+d, n−1)`.
+///
+/// # Safety
+/// `view` elements inside the task's `right_access` rectangle must not be
+/// accessed concurrently.
+pub unsafe fn exec_right<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+) {
+    let n = view.n;
+    let j0 = task.anchor;
+    let rp = task.pivot_row;
+    debug_assert!(j0 <= n - 2, "task anchor out of range");
+    let jd = (j0 + stage.d).min(n - 1);
+    let dd = jd - j0; // effective tail length (≥ 1 by schedule)
+    if dd == 0 {
+        return;
+    }
+    // Gather pivot-row segment x = A[rp, j0..=jd] (Alg. 2 line 3: the
+    // cooperative load of the vector to reflect).
+    let x = &mut ws.x[..=dd];
+    for (jj, xv) in x.iter_mut().enumerate() {
+        *xv = view.get(rp, j0 + jj);
+    }
+    let tau = make_reflector(x);
+    // Write back β and exact zeros (Alg. 2 line 6).
+    view.set(rp, j0, x[0]);
+    for jj in 1..=dd {
+        view.set(rp, j0 + jj, T::zero());
+    }
+    if tau == T::zero() {
+        return;
+    }
+    // Apply (I − τ v vᵀ) from the right to rows rp+1..=r1 (Alg. 2 lines
+    // 8–13; the TPB chunking happens one level up, in the executor).
+    let r1 = jd; // min(j0 + d, n−1)
+    let r0 = rp + 1;
+    if r0 > r1 {
+        return;
+    }
+    let rows = r1 - r0 + 1;
+    let w = &mut ws.w[..rows];
+    // Pass 1: w = Σ_jj v_jj · A[r0..=r1, j0+jj]   (column-major friendly)
+    {
+        let seg = view.col_segment_mut(j0, r0, r1);
+        w.copy_from_slice(seg); // v_0 = 1
+    }
+    for jj in 1..=dd {
+        let vj = x[jj];
+        let seg = view.col_segment_mut(j0 + jj, r0, r1);
+        for (wi, si) in w.iter_mut().zip(seg.iter()) {
+            *wi = vj.mul_add(*si, *wi);
+        }
+    }
+    // Scale by τ once.
+    for wi in w.iter_mut() {
+        *wi = tau * *wi;
+    }
+    // Pass 2: A[., j0+jj] −= w · v_jj
+    {
+        let seg = view.col_segment_mut(j0, r0, r1);
+        for (si, wi) in seg.iter_mut().zip(w.iter()) {
+            *si = *si - *wi;
+        }
+    }
+    for jj in 1..=dd {
+        let vj = x[jj];
+        let seg = view.col_segment_mut(j0 + jj, r0, r1);
+        for (si, wi) in seg.iter_mut().zip(w.iter()) {
+            *si = *si - *wi * vj;
+        }
+    }
+}
+
+/// Execute the **left** op of `task`: annihilate the column bulge in rows
+/// `anchor+1 ..= min(anchor+d, n−1)` of column `anchor` into the diagonal,
+/// applying the reflector to columns `anchor+1 ..= min(anchor+b+d, n−1)`.
+///
+/// # Safety
+/// `view` elements inside the task's `left_access` rectangle must not be
+/// accessed concurrently.
+pub unsafe fn exec_left<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+) {
+    let n = view.n;
+    let j0 = task.anchor;
+    let i1 = (j0 + stage.d).min(n - 1);
+    let dd = i1 - j0;
+    if dd == 0 {
+        return;
+    }
+    // Gather pivot-column segment (contiguous) and reflect.
+    let x = &mut ws.x[..=dd];
+    {
+        let seg = view.col_segment_mut(j0, j0, i1);
+        x.copy_from_slice(seg);
+    }
+    let tau = make_reflector(x);
+    {
+        let seg = view.col_segment_mut(j0, j0, i1);
+        seg[0] = x[0];
+        for s in seg[1..].iter_mut() {
+            *s = T::zero();
+        }
+    }
+    if tau == T::zero() {
+        return;
+    }
+    // Apply (I − τ v vᵀ) from the left to the remaining columns; each
+    // column is one contiguous dot + update of ≤ d+1 elements — the
+    // "one thread per column" granularity of Alg. 2 line 15.
+    let c1 = (j0 + stage.b + stage.d).min(n - 1);
+    for col in (j0 + 1)..=c1 {
+        let seg = view.col_segment_mut(col, j0, i1);
+        let mut dot = seg[0];
+        for (vi, si) in x[1..].iter().zip(seg[1..].iter()) {
+            dot = vi.mul_add(*si, dot);
+        }
+        let cfac = tau * dot;
+        seg[0] = seg[0] - cfac;
+        for (vi, si) in x[1..].iter().zip(seg[1..].iter_mut()) {
+            *si = *si - cfac * *vi;
+        }
+    }
+}
+
+/// Execute a full cycle (right then left) on an exclusively-borrowed
+/// matrix — the safe entry point used by the sequential executor.
+pub fn exec_cycle<T: Scalar>(
+    a: &mut Banded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+) {
+    let view = SharedBanded::new(a);
+    // SAFETY: exclusive &mut borrow ⇒ no concurrent access at all.
+    unsafe {
+        exec_right(&view, stage, task, ws);
+        exec_left(&view, stage, task, ws);
+    }
+}
+
+/// Execute a full cycle through a shared view — used by the launch-level
+/// parallel executor.
+///
+/// # Safety
+/// The task's access rectangles must be disjoint from those of every
+/// other task executing concurrently (guaranteed by `Stage::tasks_at`).
+pub unsafe fn exec_cycle_shared<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+) {
+    exec_right(view, stage, task, ws);
+    exec_left(view, stage, task, ws);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banded::dense::Dense;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    /// Dense-oracle version of one cycle, built from the generic dense
+    /// reflector helpers. Used to validate the banded kernel exactly.
+    fn exec_cycle_dense(a: &mut Dense<f64>, stage: &Stage, task: &CycleTask) {
+        use crate::householder::{apply_reflector_cols, apply_reflector_rows};
+        let n = a.rows;
+        let j0 = task.anchor;
+        let rp = task.pivot_row;
+        let jd = (j0 + stage.d).min(n - 1);
+        let dd = jd - j0;
+        if dd == 0 {
+            return;
+        }
+        // Right op.
+        let mut x: Vec<f64> = (0..=dd).map(|jj| a.get(rp, j0 + jj)).collect();
+        let tau = make_reflector(&mut x);
+        let v = x[1..].to_vec();
+        apply_reflector_cols(a, tau, &v, j0, rp, jd);
+        // force exact zeros like the banded kernel
+        a.set(rp, j0, x[0]);
+        for jj in 1..=dd {
+            a.set(rp, j0 + jj, 0.0);
+        }
+        // Left op.
+        let i1 = (j0 + stage.d).min(n - 1);
+        let mut x: Vec<f64> = (j0..=i1).map(|i| a.get(i, j0)).collect();
+        let tau = make_reflector(&mut x);
+        let v = x[1..].to_vec();
+        let c1 = (j0 + stage.b + stage.d).min(n - 1);
+        apply_reflector_rows(a, tau, &v, j0, j0, c1);
+        a.set(j0, j0, x[0]);
+        for i in (j0 + 1)..=i1 {
+            a.set(i, j0, 0.0);
+        }
+    }
+
+    #[test]
+    fn banded_cycle_matches_dense_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        for (n, b, d) in [(24usize, 6usize, 3usize), (20, 4, 3), (16, 3, 1), (30, 8, 7)] {
+            let stage = Stage::new(b, d);
+            let mut banded = random_banded::<f64>(n, b, d, &mut rng);
+            let mut dense = Dense::from_vec(n, n, banded.to_dense());
+            let mut ws = CycleWorkspace::new(&stage);
+            // Run the first few tasks of sweep 0 and compare after each.
+            for c in 0..=stage.cmax(n, 0) {
+                let task = stage.task(0, c);
+                exec_cycle(&mut banded, &stage, &task, &mut ws);
+                exec_cycle_dense(&mut dense, &stage, &task);
+                let bd = banded.to_dense();
+                for i in 0..n {
+                    for j in 0..n {
+                        let got = bd[i * n + j];
+                        let want = dense.get(i, j);
+                        assert!(
+                            (got - want).abs() < 1e-12,
+                            "n={n} b={b} d={d} cycle {c}: ({i},{j}) {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn right_op_annihilates_pivot_row_tail() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let (n, b, d) = (16, 5, 2);
+        let stage = Stage::new(b, d);
+        let mut a = random_banded::<f64>(n, b, d, &mut rng);
+        let task = stage.task(0, 0);
+        let mut ws = CycleWorkspace::new(&stage);
+        let view = SharedBanded::new(&mut a);
+        unsafe { exec_right(&view, &stage, &task, &mut ws) };
+        // Row 0 entries beyond column b−d must now be exactly zero.
+        for j in (stage.b_out() + 1)..=b {
+            assert_eq!(a.get(0, j), 0.0, "col {j}");
+        }
+        // Column bulge created below the anchor diagonal.
+        let j0 = task.anchor;
+        let bulge: f64 = (j0 + 1..=j0 + d).map(|i| a.get(i, j0).abs()).sum();
+        assert!(bulge > 0.0, "expected a column bulge at ({},..)", j0);
+    }
+
+    #[test]
+    fn left_op_annihilates_column_bulge() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let (n, b, d) = (16, 5, 2);
+        let stage = Stage::new(b, d);
+        let mut a = random_banded::<f64>(n, b, d, &mut rng);
+        let task = stage.task(0, 0);
+        let mut ws = CycleWorkspace::new(&stage);
+        exec_cycle(&mut a, &stage, &task, &mut ws);
+        let j0 = task.anchor;
+        for i in (j0 + 1)..=(j0 + d) {
+            assert_eq!(a.get(i, j0), 0.0, "row {i}");
+        }
+        // Row bulge created beyond the band at row j0.
+        let bulge: f64 = ((j0 + b + 1)..=(j0 + b + d).min(n - 1))
+            .map(|j| a.get(j0, j).abs())
+            .sum();
+        assert!(bulge > 0.0, "expected a row bulge at row {}", j0);
+    }
+
+    #[test]
+    fn cycle_preserves_frobenius_norm() {
+        // Orthogonal transforms preserve ‖A‖_F.
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let (n, b, d) = (32, 6, 5);
+        let stage = Stage::new(b, d);
+        let mut a = random_banded::<f64>(n, b, d, &mut rng);
+        let before = a.fro_norm();
+        let mut ws = CycleWorkspace::new(&stage);
+        for c in 0..=stage.cmax(n, 0) {
+            exec_cycle(&mut a, &stage, &stage.task(0, c), &mut ws);
+        }
+        assert!((a.fro_norm() - before).abs() < 1e-10 * before.max(1.0));
+    }
+
+    #[test]
+    fn cycle_near_matrix_edge_is_clamped() {
+        // Last sweep: anchors close to n−1 exercise all the clamping.
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let (n, b, d) = (12, 4, 3);
+        let stage = Stage::new(b, d);
+        let mut a = random_banded::<f64>(n, b, d, &mut rng);
+        let mut ws = CycleWorkspace::new(&stage);
+        let k = stage.num_sweeps(n) - 1;
+        for c in 0..=stage.cmax(n, k) {
+            exec_cycle(&mut a, &stage, &stage.task(k, c), &mut ws);
+        }
+        // Row k must be reduced to bandwidth b−d.
+        for j in (k + stage.b_out() + 1)..n {
+            assert_eq!(a.get(k, j), 0.0, "({k},{j})");
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's core contribution: memory-aware bulge chasing with
+//! bandwidth tiling.
+//!
+//! - [`schedule`] — stage plan, sweep/cycle anchors, the 3-cycle
+//!   separation parallel schedule, and access-rectangle dependency proofs.
+//! - [`cycle`]    — the right/left Householder cycle kernel on banded
+//!   storage (native analog of the L1 Pallas kernel).
+//! - [`stage`]    — sequential / launch-order / thread-pool executors.
+//! - [`tiling`]   — successive band reduction driver to bidiagonal form.
+
+pub mod cycle;
+pub mod schedule;
+pub mod stage;
+pub mod tiling;
+
+pub use schedule::{stage_plan, CycleTask, Stage};
+pub use tiling::{reduce_to_bidiagonal, reduce_to_bidiagonal_parallel, ReductionResult};

@@ -1,0 +1,356 @@
+//! Bulge-chasing schedule (paper Algorithm 1 + §III-A).
+//!
+//! One *stage* reduces the upper bandwidth from `b` to `b − d` (d = inner
+//! tilewidth). Within a stage, *sweep* k chases the fill created by
+//! annihilating the last `d` in-band elements of row k; sweep k's cycle c
+//! is anchored at column/row
+//!
+//! ```text
+//!     j(k, c) = k + (b − d) + c·b
+//! ```
+//!
+//! and consists of a **right** op (annihilate `d` row elements of the
+//! pivot row into column `j`, creating a column bulge below `(j, j)`) and
+//! a **left** op (annihilate the column bulge, creating the next row
+//! bulge at `(j, j+b+1 .. j+b+d)`).
+//!
+//! The parallel schedule runs cycle `c = t − 3k` of every live sweep at
+//! global cycle `t` — the paper's three-cycle separation. Element-level
+//! disjointness of simultaneous tasks is proved by `access` rectangles and
+//! enforced by property tests.
+
+/// One bandwidth-reduction stage: `b → b − d`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Stage {
+    /// Bandwidth at stage entry.
+    pub b: usize,
+    /// Inner tilewidth consumed by this stage (1 ≤ d ≤ b − 1).
+    pub d: usize,
+}
+
+/// One bulge-chasing task: cycle `c` of sweep `k` (a right op followed by
+/// a left op at the same anchor). Maps to one GPU thread block.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct CycleTask {
+    pub sweep: usize,
+    pub cycle: usize,
+    /// Anchor column/row `j(k, c)`.
+    pub anchor: usize,
+    /// Row whose excess elements the right op annihilates
+    /// (`k` for c = 0, else the previous anchor `j(k, c−1)`).
+    pub pivot_row: usize,
+}
+
+/// Inclusive element rectangle `[row0..=row1] × [col0..=col1]`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Rect {
+    pub row0: usize,
+    pub row1: usize,
+    pub col0: usize,
+    pub col1: usize,
+}
+
+impl Rect {
+    pub fn intersects(&self, o: &Rect) -> bool {
+        self.row0 <= o.row1 && o.row0 <= self.row1 && self.col0 <= o.col1 && o.col0 <= self.col1
+    }
+}
+
+impl Stage {
+    pub fn new(b: usize, d: usize) -> Self {
+        assert!(b >= 2, "stage needs bandwidth ≥ 2 (got {b})");
+        assert!(d >= 1 && d <= b - 1, "need 1 ≤ d ≤ b−1 (b={b}, d={d})");
+        Self { b, d }
+    }
+
+    /// Bandwidth after this stage completes.
+    pub fn b_out(&self) -> usize {
+        self.b - self.d
+    }
+
+    /// Number of sweeps for an n×n matrix: rows 0..n−1−(b−d) have excess
+    /// elements to annihilate.
+    pub fn num_sweeps(&self, n: usize) -> usize {
+        (n - 1).saturating_sub(self.b_out())
+    }
+
+    /// Anchor column of sweep k, cycle c.
+    #[inline]
+    pub fn anchor(&self, k: usize, c: usize) -> usize {
+        k + self.b_out() + c * self.b
+    }
+
+    /// Last valid cycle index of sweep k (anchors must stay ≤ n − 2).
+    pub fn cmax(&self, n: usize, k: usize) -> usize {
+        debug_assert!(k < self.num_sweeps(n));
+        (n - 2 - self.anchor(k, 0)) / self.b
+    }
+
+    /// Build the task for (sweep k, cycle c).
+    pub fn task(&self, k: usize, c: usize) -> CycleTask {
+        CycleTask {
+            sweep: k,
+            cycle: c,
+            anchor: self.anchor(k, c),
+            pivot_row: if c == 0 { k } else { self.anchor(k, c - 1) },
+        }
+    }
+
+    /// Total number of global cycles ("kernel launches") for the parallel
+    /// schedule: the last sweep finishes at `t = 3·(ns−1) + cmax(ns−1)`.
+    pub fn total_launches(&self, n: usize) -> usize {
+        let ns = self.num_sweeps(n);
+        if ns == 0 {
+            return 0;
+        }
+        3 * (ns - 1) + self.cmax(n, ns - 1) + 1
+    }
+
+    /// Tasks live at global cycle `t` (paper: sweep k runs cycle t − 3k).
+    /// Ordered by ascending sweep (descending anchor).
+    pub fn tasks_at(&self, n: usize, t: usize) -> Vec<CycleTask> {
+        let ns = self.num_sweeps(n);
+        if ns == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        // k must satisfy 3k ≤ t and t − 3k ≤ cmax(k).
+        let k_hi = (t / 3).min(ns - 1);
+        // cmax is non-increasing in k, so once t − 3k > cmax(0) we can
+        // stop; bound the scan from below accordingly.
+        let c0 = self.cmax(n, 0);
+        let k_lo = if t > c0 { (t - c0 + 2) / 3 } else { 0 };
+        for k in k_lo..=k_hi {
+            let c = t - 3 * k;
+            if c <= self.cmax(n, k) {
+                out.push(self.task(k, c));
+            }
+        }
+        out
+    }
+
+    /// Number of tasks at global cycle `t`, in O(1) (closed form).
+    ///
+    /// `k` is live iff `0 ≤ t − 3k` and `t − 3k ≤ cmax(k)`. With
+    /// `cmax(k) = ⌊(C0 − k)/b⌋`, `C0 = n − 2 − (b−d)`, and integer `c`,
+    /// the second condition is `b(t − 3k) ≤ C0 − k`, i.e.
+    /// `k ≥ ⌈(b·t − C0) / (3b − 1)⌉`.
+    pub fn tasks_at_count(&self, n: usize, t: usize) -> usize {
+        let ns = self.num_sweeps(n);
+        if ns == 0 {
+            return 0;
+        }
+        let k_hi = (t / 3).min(ns - 1) as i64;
+        let b = self.b as i64;
+        let c0 = (n as i64) - 2 - (self.b_out() as i64);
+        let num = b * (t as i64) - c0;
+        let den = 3 * b - 1;
+        let k_lo = if num <= 0 { 0 } else { (num + den - 1) / den };
+        (k_hi - k_lo + 1).max(0) as usize
+    }
+
+    /// Element rectangle read/written by the **right** op of a task: rows
+    /// `pivot..min(anchor+d, n−1)`, columns `anchor..min(anchor+d, n−1)`.
+    pub fn right_access(&self, task: &CycleTask, n: usize) -> Rect {
+        Rect {
+            row0: task.pivot_row,
+            row1: (task.anchor + self.d).min(n - 1),
+            col0: task.anchor,
+            col1: (task.anchor + self.d).min(n - 1),
+        }
+    }
+
+    /// Element rectangle read/written by the **left** op: rows
+    /// `anchor..min(anchor+d, n−1)`, columns `anchor..min(anchor+b+d, n−1)`.
+    pub fn left_access(&self, task: &CycleTask, n: usize) -> Rect {
+        Rect {
+            row0: task.anchor,
+            row1: (task.anchor + self.d).min(n - 1),
+            col0: task.anchor,
+            col1: (task.anchor + self.b + self.d).min(n - 1),
+        }
+    }
+
+    /// Combined footprint of the task (for dependency checks): union’s
+    /// bounding rectangles are *not* used for disjointness — the property
+    /// tests check the two precise rectangles pairwise.
+    pub fn accesses(&self, task: &CycleTask, n: usize) -> [Rect; 2] {
+        [self.right_access(task, n), self.left_access(task, n)]
+    }
+}
+
+/// Successive band-reduction plan (paper Fig. 1): repeatedly consume
+/// `min(tw, b−1)` diagonals until bidiagonal (bandwidth 1).
+pub fn stage_plan(bw0: usize, tw: usize) -> Vec<Stage> {
+    assert!(tw >= 1, "tilewidth must be ≥ 1");
+    let mut plan = Vec::new();
+    let mut b = bw0;
+    while b > 1 {
+        let d = tw.min(b - 1);
+        plan.push(Stage::new(b, d));
+        b -= d;
+    }
+    plan
+}
+
+/// Total tasks (thread blocks) across a full stage — used by the
+/// simulator and the occupancy model.
+pub fn stage_task_count(stage: &Stage, n: usize) -> usize {
+    let ns = stage.num_sweeps(n);
+    (0..ns).map(|k| stage.cmax(n, k) + 1).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_plan_reaches_bidiagonal() {
+        for (bw0, tw) in [(8, 4), (64, 32), (64, 48), (7, 3), (2, 1), (33, 32), (128, 16)] {
+            let plan = stage_plan(bw0, tw);
+            let mut b = bw0;
+            for s in &plan {
+                assert_eq!(s.b, b);
+                assert!(s.d >= 1 && s.d <= s.b - 1);
+                b = s.b_out();
+            }
+            assert_eq!(b, 1, "plan for bw0={bw0}, tw={tw} must end at 1");
+        }
+    }
+
+    #[test]
+    fn stage_plan_of_bidiagonal_is_empty() {
+        assert!(stage_plan(1, 8).is_empty());
+    }
+
+    #[test]
+    fn paper_table3_stage_counts() {
+        // Paper profiles "reduction of the bandwidth from 64 to 32 or from
+        // 64 to 48": tw=32 first stage consumes 32, tw=16 consumes 16.
+        assert_eq!(stage_plan(64, 32)[0], Stage::new(64, 32));
+        assert_eq!(stage_plan(64, 16)[0], Stage::new(64, 16));
+    }
+
+    #[test]
+    fn stage_plan_lengths() {
+        assert_eq!(stage_plan(64, 32).iter().map(|s| s.d).collect::<Vec<_>>(), vec![32, 31]);
+        assert_eq!(stage_plan(8, 4).iter().map(|s| s.d).collect::<Vec<_>>(), vec![4, 3]);
+        assert_eq!(
+            stage_plan(16, 4).iter().map(|s| s.d).collect::<Vec<_>>(),
+            vec![4, 4, 4, 3]
+        );
+    }
+
+    #[test]
+    fn anchors_advance_by_b() {
+        let s = Stage::new(8, 4);
+        let t0 = s.task(3, 0);
+        let t1 = s.task(3, 1);
+        assert_eq!(t0.anchor, 3 + 4);
+        assert_eq!(t1.anchor, t0.anchor + 8);
+        assert_eq!(t1.pivot_row, t0.anchor);
+        assert_eq!(t0.pivot_row, 3);
+    }
+
+    #[test]
+    fn every_task_appears_exactly_once_across_launches() {
+        let n = 64;
+        for (b, d) in [(8, 4), (4, 3), (6, 1), (2, 1)] {
+            let s = Stage::new(b, d);
+            let mut seen = std::collections::HashSet::new();
+            for t in 0..s.total_launches(n) {
+                for task in s.tasks_at(n, t) {
+                    assert!(
+                        seen.insert((task.sweep, task.cycle)),
+                        "duplicate task {task:?} at t={t}"
+                    );
+                    assert_eq!(t, 3 * task.sweep + task.cycle);
+                }
+            }
+            let expect: usize = (0..s.num_sweeps(n)).map(|k| s.cmax(n, k) + 1).sum();
+            assert_eq!(seen.len(), expect, "b={b} d={d}");
+            // And nothing fires after the last launch.
+            assert!(s.tasks_at(n, s.total_launches(n)).is_empty());
+        }
+    }
+
+    #[test]
+    fn tasks_at_count_matches_materialized() {
+        let n = 200;
+        let s = Stage::new(10, 6);
+        for t in 0..s.total_launches(n) + 3 {
+            assert_eq!(s.tasks_at_count(n, t), s.tasks_at(n, t).len(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn simultaneous_tasks_have_disjoint_element_access() {
+        // The paper's §III-A claim, at element granularity, including the
+        // tight case b = d + 1.
+        let n = 96;
+        for (b, d) in [(8, 4), (5, 4), (2, 1), (12, 2), (6, 5)] {
+            let s = Stage::new(b, d);
+            for t in 0..s.total_launches(n) {
+                let tasks = s.tasks_at(n, t);
+                for (i, a) in tasks.iter().enumerate() {
+                    for bb in tasks.iter().skip(i + 1) {
+                        for ra in s.accesses(a, n) {
+                            for rb in s.accesses(bb, n) {
+                                assert!(
+                                    !ra.intersects(&rb),
+                                    "overlap at t={t}: {a:?} vs {bb:?} (b={b}, d={d})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn anchor_spacing_is_3b_minus_1() {
+        let n = 128;
+        let s = Stage::new(8, 4);
+        for t in 0..s.total_launches(n) {
+            let tasks = s.tasks_at(n, t);
+            for w in tasks.windows(2) {
+                assert_eq!(w[0].anchor - w[1].anchor, 3 * s.b - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn max_parallelism_matches_occupancy_formula() {
+        // Peak simultaneous tasks ≈ n / (3·b) (paper eq. (1) spacing).
+        let n = 1024;
+        let s = Stage::new(8, 4);
+        let peak = (0..s.total_launches(n))
+            .map(|t| s.tasks_at(n, t).len())
+            .max()
+            .unwrap();
+        let expect = n / (3 * s.b);
+        assert!(
+            (peak as i64 - expect as i64).abs() <= 2,
+            "peak {peak} vs n/(3b) = {expect}"
+        );
+    }
+
+    #[test]
+    fn small_matrices_have_no_tasks_when_already_reduced() {
+        // n smaller than the output bandwidth: nothing to do.
+        let s = Stage::new(8, 4);
+        assert_eq!(s.num_sweeps(5), 0);
+        assert_eq!(s.total_launches(5), 0);
+        assert!(s.tasks_at(5, 0).is_empty());
+    }
+
+    #[test]
+    fn rect_intersection_logic() {
+        let a = Rect { row0: 0, row1: 2, col0: 0, col1: 2 };
+        let b = Rect { row0: 2, row1: 4, col0: 2, col1: 4 };
+        let c = Rect { row0: 3, row1: 4, col0: 0, col1: 4 };
+        assert!(a.intersects(&b)); // corner touch counts
+        assert!(!a.intersects(&c));
+    }
+}

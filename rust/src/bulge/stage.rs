@@ -1,0 +1,145 @@
+//! Stage executors: run every task of one bandwidth-reduction stage.
+//!
+//! Three native orders, all producing bitwise-identical results (the same
+//! reflector ops on disjoint data):
+//! - [`run_stage_sequential`] — classic sweep-major order (Lang 1996).
+//! - [`run_stage_launches`]   — launch-major order: the exact order the
+//!   GPU schedule executes, still single-threaded. Used to validate the
+//!   schedule against the sequential oracle.
+//! - [`run_stage_parallel`]   — launch-major with tasks of one launch
+//!   distributed over the thread pool (the GPU execution model: one task
+//!   per "thread block", device-wide barrier between launches).
+
+use crate::banded::storage::Banded;
+use crate::bulge::cycle::{exec_cycle, exec_cycle_shared, CycleWorkspace, SharedBanded};
+use crate::bulge::schedule::Stage;
+use crate::scalar::Scalar;
+use crate::util::threadpool::ThreadPool;
+
+/// Sweep-major order: finish sweep k before starting sweep k+1.
+pub fn run_stage_sequential<T: Scalar>(a: &mut Banded<T>, stage: &Stage) {
+    let n = a.n();
+    let mut ws = CycleWorkspace::new(stage);
+    for k in 0..stage.num_sweeps(n) {
+        for c in 0..=stage.cmax(n, k) {
+            exec_cycle(a, stage, &stage.task(k, c), &mut ws);
+        }
+    }
+}
+
+/// Launch-major order, single-threaded (schedule-order oracle).
+pub fn run_stage_launches<T: Scalar>(a: &mut Banded<T>, stage: &Stage) {
+    let n = a.n();
+    let mut ws = CycleWorkspace::new(stage);
+    for t in 0..stage.total_launches(n) {
+        for task in stage.tasks_at(n, t) {
+            exec_cycle(a, stage, &task, &mut ws);
+        }
+    }
+}
+
+/// Launch-major order with intra-launch parallelism over `pool`.
+///
+/// `block_capacity` bounds how many tasks run concurrently (the paper's
+/// MaxBlocks × execution-units limit); excess tasks are executed
+/// sequentially inside a worker ("software loop unrolling", §III-C-c).
+pub fn run_stage_parallel<T: Scalar>(
+    a: &mut Banded<T>,
+    stage: &Stage,
+    pool: &ThreadPool,
+    block_capacity: usize,
+) {
+    let n = a.n();
+    let view = SharedBanded::new(a);
+    let capacity = block_capacity.max(1);
+    for t in 0..stage.total_launches(n) {
+        let tasks = stage.tasks_at(n, t);
+        if tasks.is_empty() {
+            continue;
+        }
+        let chunks = tasks.len().min(capacity).min(pool.len().max(1));
+        pool.for_each_chunk(tasks.len(), chunks, |range| {
+            let mut ws = CycleWorkspace::new(stage);
+            for idx in range {
+                // SAFETY: tasks within one launch access pairwise-disjoint
+                // element rectangles (schedule.rs property), and the
+                // barrier at the end of `for_each_chunk` orders launches.
+                unsafe { exec_cycle_shared(&view, stage, &tasks[idx], &mut ws) };
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    fn fresh(n: usize, b: usize, d: usize, seed: u64) -> Banded<f64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        random_banded::<f64>(n, b, d, &mut rng)
+    }
+
+    #[test]
+    fn stage_reduces_bandwidth() {
+        for (n, b, d) in [(32usize, 8usize, 4usize), (33, 8, 4), (40, 5, 4), (24, 2, 1)] {
+            let stage = Stage::new(b, d);
+            let mut a = fresh(n, b, d, 1);
+            run_stage_sequential(&mut a, &stage);
+            assert_eq!(
+                a.max_off_band(stage.b_out()),
+                0.0,
+                "n={n} b={b} d={d}: band not reduced"
+            );
+        }
+    }
+
+    #[test]
+    fn stage_preserves_frobenius_norm() {
+        let stage = Stage::new(6, 3);
+        let mut a = fresh(48, 6, 3, 2);
+        let before = a.fro_norm();
+        run_stage_sequential(&mut a, &stage);
+        assert!((a.fro_norm() - before).abs() < 1e-10 * before);
+    }
+
+    #[test]
+    fn launch_order_matches_sweep_order_bitwise() {
+        // The commutation argument of DESIGN.md §3: both orders execute
+        // the same reflectors on disjoint data ⇒ identical floats.
+        for (n, b, d) in [(40usize, 8usize, 4usize), (31, 5, 4), (26, 3, 2)] {
+            let stage = Stage::new(b, d);
+            let mut a1 = fresh(n, b, d, 3);
+            let mut a2 = a1.clone();
+            run_stage_sequential(&mut a1, &stage);
+            run_stage_launches(&mut a2, &stage);
+            assert_eq!(a1, a2, "n={n} b={b} d={d}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let pool = ThreadPool::new(4);
+        for (n, b, d) in [(64usize, 8usize, 4usize), (50, 4, 3), (37, 6, 5)] {
+            let stage = Stage::new(b, d);
+            let mut a1 = fresh(n, b, d, 4);
+            let mut a2 = a1.clone();
+            run_stage_sequential(&mut a1, &stage);
+            run_stage_parallel(&mut a2, &stage, &pool, usize::MAX);
+            assert_eq!(a1, a2, "n={n} b={b} d={d}");
+        }
+    }
+
+    #[test]
+    fn parallel_respects_block_capacity() {
+        // Tiny capacity forces heavy loop unrolling; result must not change.
+        let pool = ThreadPool::new(4);
+        let stage = Stage::new(8, 4);
+        let mut a1 = fresh(96, 8, 4, 5);
+        let mut a2 = a1.clone();
+        run_stage_sequential(&mut a1, &stage);
+        run_stage_parallel(&mut a2, &stage, &pool, 2);
+        assert_eq!(a1, a2);
+    }
+}

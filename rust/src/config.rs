@@ -1,0 +1,113 @@
+//! Tunable parameters (paper §III-C) and per-architecture heuristics.
+
+use crate::error::{Error, Result};
+
+/// The three hyperparameters the paper exposes.
+///
+/// - `tpb`   — threads per block: parallelism vs register/L2 pressure.
+/// - `tw`    — inner tilewidth: bandwidth reduced per stage; optimal value
+///   matches a full cache line (32 for FP32, 16 for FP64 on 128-B lines).
+/// - `max_blocks` — concurrently active blocks per execution unit;
+///   excess bulge tasks are loop-unrolled into the same block.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct TuneParams {
+    pub tpb: usize,
+    pub tw: usize,
+    pub max_blocks: usize,
+}
+
+impl TuneParams {
+    pub fn new(tpb: usize, tw: usize, max_blocks: usize) -> Result<Self> {
+        if tpb == 0 || tw == 0 || max_blocks == 0 {
+            return Err(Error::Config(format!(
+                "all TuneParams must be positive (tpb={tpb}, tw={tw}, max_blocks={max_blocks})"
+            )));
+        }
+        Ok(Self { tpb, tw, max_blocks })
+    }
+
+    /// The paper's hardware-adapted default (§V-E): tilewidth matching a
+    /// full cache line for the element size, generous threads-per-block,
+    /// and the per-architecture MaxBlocks heuristic.
+    pub fn heuristic(element_bytes: usize, cache_line_bytes: usize) -> Self {
+        let tw = (cache_line_bytes / element_bytes).max(4);
+        Self { tpb: 32, tw, max_blocks: 192 }
+    }
+
+    /// Clamp the tilewidth to a valid value for a given starting bandwidth
+    /// (tw ≤ bw − 1 is all a single reduction can consume; larger tw would
+    /// skip past bidiagonal form).
+    pub fn effective_tw(&self, bw: usize) -> usize {
+        self.tw.min(bw.saturating_sub(1)).max(1)
+    }
+}
+
+impl Default for TuneParams {
+    fn default() -> Self {
+        // FP32 on a 128-byte-cache-line device — the paper's headline
+        // configuration (tilewidth 32).
+        Self { tpb: 32, tw: 32, max_blocks: 192 }
+    }
+}
+
+/// Execution backend selector for the reduction driver.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust, one task at a time, classic sweep-major order.
+    Sequential,
+    /// Pure-Rust, launch-level parallelism over the thread pool.
+    Parallel,
+    /// AOT JAX/Pallas artifacts executed through PJRT, one call per launch.
+    Pjrt,
+    /// Fused whole-stage PJRT artifacts (one call per bandwidth stage).
+    PjrtFused,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "seq" | "sequential" => Ok(Backend::Sequential),
+            "par" | "parallel" => Ok(Backend::Parallel),
+            "pjrt" => Ok(Backend::Pjrt),
+            "pjrt-fused" | "fused" => Ok(Backend::PjrtFused),
+            other => Err(format!("unknown backend {other:?} (seq|par|pjrt|pjrt-fused)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heuristic_matches_paper_optima() {
+        // FP32: tilewidth 32; FP64: tilewidth 16 (128-byte cache line).
+        assert_eq!(TuneParams::heuristic(4, 128).tw, 32);
+        assert_eq!(TuneParams::heuristic(8, 128).tw, 16);
+    }
+
+    #[test]
+    fn zero_params_rejected() {
+        assert!(TuneParams::new(0, 32, 192).is_err());
+        assert!(TuneParams::new(32, 0, 192).is_err());
+        assert!(TuneParams::new(32, 32, 0).is_err());
+        assert!(TuneParams::new(1, 1, 1).is_ok());
+    }
+
+    #[test]
+    fn effective_tw_clamps() {
+        let p = TuneParams { tpb: 32, tw: 32, max_blocks: 192 };
+        assert_eq!(p.effective_tw(64), 32);
+        assert_eq!(p.effective_tw(8), 7);
+        assert_eq!(p.effective_tw(2), 1);
+        assert_eq!(p.effective_tw(1), 1);
+    }
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!("seq".parse::<Backend>().unwrap(), Backend::Sequential);
+        assert_eq!("pjrt-fused".parse::<Backend>().unwrap(), Backend::PjrtFused);
+        assert!("bogus".parse::<Backend>().is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! Launch-loop metrics collected by the coordinator.
+
+use std::time::Duration;
+
+/// Parallelism/occupancy accounting across a reduction's launch loop.
+#[derive(Clone, Debug, Default)]
+pub struct LaunchMetrics {
+    pub launches: usize,
+    pub tasks: usize,
+    pub max_parallel: usize,
+    /// Launches whose task count exceeded the block capacity (software
+    /// loop unrolling engaged, §III-C-c).
+    pub unrolled_launches: usize,
+    pub wall: Duration,
+}
+
+impl LaunchMetrics {
+    pub fn record_launch(&mut self, tasks: usize, capacity: usize) {
+        self.launches += 1;
+        self.tasks += tasks;
+        self.max_parallel = self.max_parallel.max(tasks);
+        if tasks > capacity {
+            self.unrolled_launches += 1;
+        }
+    }
+
+    pub fn avg_parallel(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.tasks as f64 / self.launches as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &LaunchMetrics) {
+        self.launches += o.launches;
+        self.tasks += o.tasks;
+        self.max_parallel = self.max_parallel.max(o.max_parallel);
+        self.unrolled_launches += o.unrolled_launches;
+        self.wall += o.wall;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_averages() {
+        let mut m = LaunchMetrics::default();
+        m.record_launch(4, 8);
+        m.record_launch(10, 8);
+        assert_eq!(m.launches, 2);
+        assert_eq!(m.tasks, 14);
+        assert_eq!(m.max_parallel, 10);
+        assert_eq!(m.unrolled_launches, 1);
+        assert!((m.avg_parallel() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LaunchMetrics::default();
+        a.record_launch(3, 8);
+        let mut b = LaunchMetrics::default();
+        b.record_launch(5, 8);
+        a.merge(&b);
+        assert_eq!(a.launches, 2);
+        assert_eq!(a.tasks, 8);
+        assert_eq!(a.max_parallel, 5);
+    }
+}

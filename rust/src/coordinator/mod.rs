@@ -1,0 +1,253 @@
+//! L3 coordinator — the run-time owner of the reduction.
+//!
+//! Owns the banded buffer, computes the stage plan, steps the launch
+//! loop (with the paper's 3-cycle schedule), batches tasks under the
+//! MaxBlocks capacity, dispatches to a backend, and collects metrics.
+//! Backends:
+//!
+//! - [`Backend::Sequential`] / [`Backend::Parallel`] — native Rust cycle
+//!   kernels (any precision).
+//! - [`Backend::Pjrt`] — per-launch AOT artifacts through the PJRT CPU
+//!   client (f32; python never runs — artifacts are pre-compiled).
+//! - [`Backend::PjrtFused`] — whole-stage artifacts, one call per stage.
+
+pub mod metrics;
+
+use crate::banded::storage::Banded;
+use crate::bulge::cycle::{exec_cycle, exec_cycle_shared, CycleWorkspace, SharedBanded};
+use crate::bulge::schedule::stage_plan;
+use crate::config::{Backend, TuneParams};
+use crate::error::{Error, Result};
+use crate::runtime::PjrtEngine;
+use crate::scalar::Scalar;
+use crate::util::threadpool::ThreadPool;
+use metrics::LaunchMetrics;
+use std::time::Instant;
+
+/// Result of a coordinated reduction.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub backend: Backend,
+    pub n: usize,
+    pub bw: usize,
+    pub params: TuneParams,
+    pub metrics: LaunchMetrics,
+    pub diag: Vec<f64>,
+    pub superdiag: Vec<f64>,
+    /// Largest |element| outside the bidiagonal after the run (0 when
+    /// fully reduced; small ≠ 0 through the f32 PJRT path).
+    pub residual_off_band: f64,
+}
+
+/// The coordinator: tuning parameters + worker pool.
+pub struct Coordinator {
+    pub params: TuneParams,
+    pool: ThreadPool,
+}
+
+impl Coordinator {
+    pub fn new(params: TuneParams, threads: usize) -> Self {
+        Self { params, pool: ThreadPool::new(threads) }
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Block capacity per launch: MaxBlocks tasks run concurrently; the
+    /// rest are loop-unrolled inside workers (the CPU stand-in for the
+    /// paper's per-execution-unit limit).
+    fn capacity(&self) -> usize {
+        self.params.max_blocks.max(1)
+    }
+
+    /// Run a native reduction (sequential or thread-pooled launch loop).
+    pub fn reduce_native<T: Scalar>(
+        &self,
+        a: &mut Banded<T>,
+        bw: usize,
+        backend: Backend,
+    ) -> Result<RunReport> {
+        let n = a.n();
+        let tw = self.params.effective_tw(bw);
+        if a.kd_sub() < tw || a.kd_super() < bw + tw {
+            return Err(Error::Config(format!(
+                "storage (kd_sub={}, kd_super={}) too small for bw={bw}, tw={tw}",
+                a.kd_sub(),
+                a.kd_super()
+            )));
+        }
+        let mut m = LaunchMetrics::default();
+        let capacity = self.capacity();
+        let t_start = Instant::now();
+        match backend {
+            Backend::Sequential => {
+                let plan = stage_plan(bw, tw);
+                let mut ws = CycleWorkspace::for_plan(&plan);
+                for stage in &plan {
+                    for t in 0..stage.total_launches(n) {
+                        let tasks = stage.tasks_at(n, t);
+                        if tasks.is_empty() {
+                            continue; // a real coordinator skips empty launches
+                        }
+                        m.record_launch(tasks.len(), capacity);
+                        for task in tasks {
+                            exec_cycle(a, stage, &task, &mut ws);
+                        }
+                    }
+                }
+            }
+            Backend::Parallel => {
+                let plan = stage_plan(bw, tw);
+                let view = SharedBanded::new(a);
+                for stage in &plan {
+                    for t in 0..stage.total_launches(n) {
+                        let tasks = stage.tasks_at(n, t);
+                        if tasks.is_empty() {
+                            continue;
+                        }
+                        m.record_launch(tasks.len(), capacity);
+                        let chunks = tasks.len().min(capacity).min(self.pool.len().max(1));
+                        let stage_ref = stage;
+                        self.pool.for_each_chunk(tasks.len(), chunks, |range| {
+                            let mut ws = CycleWorkspace::new(stage_ref);
+                            for i in range {
+                                // SAFETY: intra-launch tasks are disjoint
+                                // (schedule.rs property tests); launches
+                                // are ordered by the pool barrier.
+                                unsafe {
+                                    exec_cycle_shared(&view, stage_ref, &tasks[i], &mut ws)
+                                };
+                            }
+                        });
+                    }
+                }
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "reduce_native cannot run backend {other:?}; use reduce_pjrt"
+                )))
+            }
+        }
+        m.wall = t_start.elapsed();
+        let (diag, superdiag) = a.bidiagonal();
+        Ok(RunReport {
+            backend,
+            n,
+            bw,
+            params: self.params,
+            metrics: m,
+            diag: diag.iter().map(|v| v.to_f64()).collect(),
+            superdiag: superdiag.iter().map(|v| v.to_f64()).collect(),
+            residual_off_band: a.max_off_band(1),
+        })
+    }
+
+    /// Run the reduction through pre-compiled PJRT artifacts.
+    pub fn reduce_pjrt<T: Scalar>(
+        &self,
+        engine: &PjrtEngine,
+        a: &mut Banded<T>,
+        backend: Backend,
+    ) -> Result<RunReport> {
+        let fused = match backend {
+            Backend::Pjrt => false,
+            Backend::PjrtFused => true,
+            other => {
+                return Err(Error::Config(format!(
+                    "reduce_pjrt cannot run backend {other:?}"
+                )))
+            }
+        };
+        let n = a.n();
+        let bw = engine.manifest().bw;
+        let capacity = self.capacity();
+        let mut m = LaunchMetrics::default();
+        let t_start = Instant::now();
+        if fused {
+            engine.reduce_banded(a, true)?;
+            // Launch metrics reconstructed from the schedule (the fused
+            // artifact runs the same launches inside one call).
+            for st in &engine.manifest().stages {
+                let stage = crate::bulge::schedule::Stage::new(st.b, st.d);
+                for t in 0..st.launches {
+                    m.record_launch(stage.tasks_at_count(n, t), capacity);
+                }
+            }
+        } else {
+            // Per-cycle path: count real launches as they execute.
+            let manifest = engine.manifest().clone();
+            let mut flat = a.to_f32_flat();
+            engine.reduce_per_cycle(&mut flat, |si, t| {
+                let st = &manifest.stages[si];
+                let stage = crate::bulge::schedule::Stage::new(st.b, st.d);
+                m.record_launch(stage.tasks_at_count(n, t), capacity);
+            })?;
+            a.from_f32_flat(&flat);
+        }
+        m.wall = t_start.elapsed();
+        let (diag, superdiag) = a.bidiagonal();
+        Ok(RunReport {
+            backend,
+            n,
+            bw,
+            params: self.params,
+            metrics: m,
+            diag: diag.iter().map(|v| v.to_f64()).collect(),
+            superdiag: superdiag.iter().map(|v| v.to_f64()).collect(),
+            residual_off_band: a.max_off_band(1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn native_backends_agree_and_report_metrics() {
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 8 };
+        let coord = Coordinator::new(params, 4);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (n, bw) = (64, 8);
+        let mut a1 = random_banded::<f64>(n, bw, 4, &mut rng);
+        let mut a2 = a1.clone();
+        let r1 = coord.reduce_native(&mut a1, bw, Backend::Sequential).unwrap();
+        let r2 = coord.reduce_native(&mut a2, bw, Backend::Parallel).unwrap();
+        assert_eq!(a1, a2);
+        assert_eq!(r1.metrics.launches, r2.metrics.launches);
+        assert_eq!(r1.metrics.tasks, r2.metrics.tasks);
+        assert_eq!(r1.residual_off_band, 0.0);
+        assert!(r1.metrics.max_parallel >= 1);
+        assert!(r1.metrics.avg_parallel() > 0.0);
+    }
+
+    #[test]
+    fn unrolling_is_detected_when_capacity_small() {
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 1 };
+        let coord = Coordinator::new(params, 2);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let (n, bw) = (96, 8);
+        let mut a = random_banded::<f64>(n, bw, 4, &mut rng);
+        let r = coord.reduce_native(&mut a, bw, Backend::Parallel).unwrap();
+        assert!(r.metrics.unrolled_launches > 0);
+    }
+
+    #[test]
+    fn storage_too_small_is_rejected() {
+        let params = TuneParams { tpb: 32, tw: 8, max_blocks: 8 };
+        let coord = Coordinator::new(params, 1);
+        let mut a = Banded::<f64>::zeros(32, 9, 1); // kd_sub 1 < tw 8
+        assert!(coord.reduce_native(&mut a, 8, Backend::Sequential).is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_through_native_entry_is_rejected() {
+        let params = TuneParams::default();
+        let coord = Coordinator::new(params, 1);
+        let mut a = Banded::<f64>::for_reduction(16, 2, 1);
+        assert!(coord.reduce_native(&mut a, 2, Backend::Pjrt).is_err());
+    }
+}

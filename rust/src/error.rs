@@ -1,0 +1,29 @@
+//! Library error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    #[error("artifact not found: {path} (run `make artifacts`; looked for variant {variant})")]
+    ArtifactMissing { path: String, variant: String },
+
+    #[error("PJRT runtime error: {0}")]
+    Pjrt(String),
+
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Pjrt(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,204 @@
+//! Test-matrix generation (paper §V-A protocol).
+//!
+//! Matrices with a *prescribed* spectrum are built as `A = U Σ Vᵀ` where
+//! U, V are products of random Householder reflectors (exactly orthogonal
+//! up to rounding) — singular values are invariant under the construction,
+//! which is what makes the Fig. 3 accuracy experiment well-posed.
+
+use crate::banded::dense::Dense;
+use crate::banded::storage::Banded;
+use crate::householder::{apply_reflector_cols, apply_reflector_rows, make_reflector};
+use crate::scalar::Scalar;
+use crate::util::rng::Xoshiro256;
+
+/// The paper's three singular-value profiles (Fig. 3): uniform spacing
+/// ("structured"), logarithmic decay ("ill-conditioned"), and the
+/// quarter-circle law ("random matrices").
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Spectrum {
+    Arithmetic,
+    Logarithmic,
+    QuarterCircle,
+}
+
+impl Spectrum {
+    pub const ALL: [Spectrum; 3] =
+        [Spectrum::Arithmetic, Spectrum::Logarithmic, Spectrum::QuarterCircle];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Spectrum::Arithmetic => "arithmetic",
+            Spectrum::Logarithmic => "logarithmic",
+            Spectrum::QuarterCircle => "quarter-circle",
+        }
+    }
+
+    /// Sample `n` singular values in [0, 1], sorted descending.
+    pub fn sample(self, n: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+        let mut s: Vec<f64> = match self {
+            // σ_k evenly spaced in (0, 1].
+            Spectrum::Arithmetic => (0..n).map(|k| (n - k) as f64 / n as f64).collect(),
+            // σ_k = 10^(-6 k / n): six decades of decay.
+            Spectrum::Logarithmic => {
+                (0..n).map(|k| 10f64.powf(-6.0 * k as f64 / n as f64)).collect()
+            }
+            // Quarter-circle law: density ∝ sqrt(1 - x²) on [0, 1];
+            // sample via inverse-CDF bisection.
+            Spectrum::QuarterCircle => {
+                (0..n).map(|_| quarter_circle_sample(rng.uniform())).collect()
+            }
+        };
+        s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        s
+    }
+}
+
+/// Inverse CDF of the quarter-circle density f(x) = (4/π)·sqrt(1−x²) on
+/// [0, 1], by bisection (CDF is monotone; 40 iterations ≈ 1e-12).
+fn quarter_circle_sample(u: f64) -> f64 {
+    let cdf = |x: f64| (2.0 / std::f64::consts::PI) * (x * (1.0 - x * x).sqrt() + x.asin());
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        if cdf(mid) < u {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Build a dense matrix `A = U Σ Vᵀ` with the given singular values by
+/// applying `n_reflectors` random Householder reflectors on each side of
+/// `diag(σ)`. Any number of reflectors preserves the spectrum exactly;
+/// more reflectors make the matrix "denser"/less structured. Use
+/// `n_reflectors = n` for fully random orthogonal factors.
+pub fn dense_with_spectrum(
+    n: usize,
+    sigma: &[f64],
+    rng: &mut Xoshiro256,
+    n_reflectors: usize,
+) -> Dense<f64> {
+    assert_eq!(sigma.len(), n);
+    let mut a = Dense::<f64>::zeros(n, n);
+    for i in 0..n {
+        a.set(i, i, sigma[i]);
+    }
+    let k = n_reflectors.min(n.saturating_sub(1)).max(1);
+    let mut v = vec![0.0f64; 0];
+    for r in 0..k {
+        // Left reflector on rows r0.., random span.
+        let r0 = rng.below(n.saturating_sub(1).max(1));
+        let m = n - r0;
+        v.resize(m, 0.0);
+        rng.fill_gaussian(&mut v);
+        let tau = make_reflector(&mut v);
+        let tail = v[1..].to_vec();
+        apply_reflector_rows(&mut a, tau, &tail, r0, 0, n - 1);
+        // Right reflector on cols c0...
+        let c0 = rng.below(n.saturating_sub(1).max(1));
+        let m = n - c0;
+        v.resize(m, 0.0);
+        rng.fill_gaussian(&mut v);
+        let tau = make_reflector(&mut v);
+        let tail = v[1..].to_vec();
+        apply_reflector_cols(&mut a, tau, &tail, c0, 0, n - 1);
+        let _ = r;
+    }
+    a
+}
+
+/// Random upper-banded matrix (Gaussian entries in the band), in working
+/// storage for a reduction with inner tilewidth `tw`.
+pub fn random_banded<T: Scalar>(
+    n: usize,
+    bw: usize,
+    tw: usize,
+    rng: &mut Xoshiro256,
+) -> Banded<T> {
+    let mut b = Banded::<T>::for_reduction(n, bw, tw);
+    for i in 0..n {
+        for j in i..=(i + bw).min(n - 1) {
+            b.set(i, j, T::from_f64(rng.gaussian()));
+        }
+    }
+    b
+}
+
+/// Random upper-*bidiagonal* values (d, e) for stage-3 tests.
+pub fn random_bidiagonal(n: usize, rng: &mut Xoshiro256) -> (Vec<f64>, Vec<f64>) {
+    let d: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let e: Vec<f64> = (0..n - 1).map(|_| rng.gaussian()).collect();
+    (d, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectra_are_sorted_and_in_unit_interval() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for kind in Spectrum::ALL {
+            let s = kind.sample(50, &mut rng);
+            assert_eq!(s.len(), 50);
+            assert!(s.windows(2).all(|w| w[0] >= w[1]), "{kind:?} not sorted");
+            assert!(s.iter().all(|&x| (0.0..=1.0).contains(&x)), "{kind:?} out of range");
+        }
+    }
+
+    #[test]
+    fn arithmetic_spectrum_is_uniformly_spaced() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let s = Spectrum::Arithmetic.sample(4, &mut rng);
+        assert_eq!(s, vec![1.0, 0.75, 0.5, 0.25]);
+    }
+
+    #[test]
+    fn logarithmic_spectrum_spans_six_decades() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let s = Spectrum::Logarithmic.sample(100, &mut rng);
+        assert!((s[0] - 1.0).abs() < 1e-12);
+        assert!(s[99] < 1e-5 && s[99] > 1e-7);
+    }
+
+    #[test]
+    fn quarter_circle_mean_matches_theory() {
+        // E[X] for density (4/π)sqrt(1-x²)·? on [0,1]: with f(x) =
+        // (2/π)·2·sqrt(1−x²)... mean = 4/(3π) ≈ 0.4244.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let s = Spectrum::QuarterCircle.sample(20_000, &mut rng);
+        let mean: f64 = s.iter().sum::<f64>() / s.len() as f64;
+        assert!((mean - 4.0 / (3.0 * std::f64::consts::PI)).abs() < 5e-3, "mean {mean}");
+    }
+
+    #[test]
+    fn dense_with_spectrum_preserves_frobenius_norm() {
+        // ||A||_F² = Σ σ² is invariant under orthogonal transforms.
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let sigma: Vec<f64> = (1..=16).map(|k| k as f64 / 16.0).collect();
+        let a = dense_with_spectrum(16, &sigma, &mut rng, 16);
+        let target = sigma.iter().map(|s| s * s).sum::<f64>().sqrt();
+        assert!((a.fro_norm() - target).abs() < 1e-10, "{} vs {target}", a.fro_norm());
+    }
+
+    #[test]
+    fn dense_with_spectrum_is_actually_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let sigma = vec![1.0; 12];
+        let a = dense_with_spectrum(12, &sigma, &mut rng, 12);
+        let nonzero = a.data.iter().filter(|v| v.abs() > 1e-14).count();
+        assert!(nonzero > 100, "only {nonzero} nonzeros");
+    }
+
+    #[test]
+    fn random_banded_respects_band() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let b = random_banded::<f64>(10, 3, 2, &mut rng);
+        assert_eq!(b.max_off_band(3), 0.0);
+        // Band itself nonzero.
+        assert!(b.get(0, 3).abs() > 0.0);
+        assert!(b.get(4, 4).abs() > 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Householder reflectors — the numerical core of every stage.
+//!
+//! Conventions follow LAPACK `larfg`: a reflector `H = I − τ v vᵀ` with
+//! `v[0] = 1` maps a vector `x` to `(β, 0, …, 0)ᵀ`. Near-zero tails give
+//! `τ = 0` (H = I), matching the treatment of near-zero elements in the
+//! tile-QR work the paper builds on [11].
+
+mod reflector;
+
+pub use reflector::{
+    apply_reflector_cols, apply_reflector_rows, apply_reflector_vec, make_reflector,
+};

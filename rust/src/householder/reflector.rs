@@ -1,0 +1,239 @@
+//! Reflector construction and application.
+
+use crate::banded::dense::Dense;
+use crate::scalar::Scalar;
+
+/// Compute a Householder reflector for `x` (length ≥ 1), LAPACK
+/// `larfg`-style, **in place**:
+///
+/// on exit `x[0] = β` (the new leading value) and `x[1..] = v[1..]` (the
+/// reflector tail; `v[0] = 1` is implicit). Returns `τ`.
+///
+/// `τ = 0` (identity) when the tail is exactly zero — the "near-zero
+/// element" guard that keeps bulge chasing stable when a bulge is already
+/// annihilated.
+pub fn make_reflector<T: Scalar>(x: &mut [T]) -> T {
+    let m = x.len();
+    if m <= 1 {
+        return T::zero();
+    }
+    let alpha = x[0];
+    // ||x[1..]||² with scaling guard: compute in f64 for the norm only —
+    // the working precision still dominates rounding via the stored v, β.
+    let mut ssq = 0.0f64;
+    for v in &x[1..] {
+        let t = v.to_f64();
+        ssq += t * t;
+    }
+    if ssq == 0.0 {
+        return T::zero();
+    }
+    let a = alpha.to_f64();
+    let norm = (a * a + ssq).sqrt();
+    // β takes the opposite sign of α to avoid cancellation.
+    let beta = if a >= 0.0 { -norm } else { norm };
+    let tau = (beta - a) / beta;
+    let scale = 1.0 / (a - beta);
+    for v in &mut x[1..] {
+        *v = T::from_f64(v.to_f64() * scale);
+    }
+    x[0] = T::from_f64(beta);
+    T::from_f64(tau)
+}
+
+/// Apply `H = I − τ v vᵀ` to a vector `y` (same length as v, `v[0] = 1`
+/// implicit, `v_tail = v[1..]`): `y ← y − τ (vᵀ y) v`.
+#[inline]
+pub fn apply_reflector_vec<T: Scalar>(tau: T, v_tail: &[T], y: &mut [T]) {
+    debug_assert_eq!(v_tail.len() + 1, y.len());
+    if tau == T::zero() {
+        return;
+    }
+    let mut dot = y[0];
+    for (vi, yi) in v_tail.iter().zip(y[1..].iter()) {
+        dot = vi.mul_add(*yi, dot);
+    }
+    let c = tau * dot;
+    y[0] = y[0] - c;
+    for (vi, yi) in v_tail.iter().zip(y[1..].iter_mut()) {
+        *yi = *yi - c * *vi;
+    }
+}
+
+/// Apply `H` from the **left** to rows `r0..r0+len(v)` of dense `a`,
+/// columns `j0..j1` (inclusive): A ← H A.
+pub fn apply_reflector_rows<T: Scalar>(
+    a: &mut Dense<T>,
+    tau: T,
+    v_tail: &[T],
+    r0: usize,
+    j0: usize,
+    j1: usize,
+) {
+    if tau == T::zero() {
+        return;
+    }
+    let m = v_tail.len() + 1;
+    for j in j0..=j1 {
+        // dot = vᵀ A[r0.., j]
+        let mut dot = a.get(r0, j);
+        for (k, vi) in v_tail.iter().enumerate() {
+            dot = vi.mul_add(a.get(r0 + 1 + k, j), dot);
+        }
+        let c = tau * dot;
+        for i in 0..m {
+            let vi = if i == 0 { T::one() } else { v_tail[i - 1] };
+            let cur = a.get(r0 + i, j);
+            a.set(r0 + i, j, cur - c * vi);
+        }
+    }
+}
+
+/// Apply `H` from the **right** to columns `c0..c0+len(v)` of dense `a`,
+/// rows `i0..i1` (inclusive): A ← A H.
+pub fn apply_reflector_cols<T: Scalar>(
+    a: &mut Dense<T>,
+    tau: T,
+    v_tail: &[T],
+    c0: usize,
+    i0: usize,
+    i1: usize,
+) {
+    if tau == T::zero() {
+        return;
+    }
+    let m = v_tail.len() + 1;
+    for i in i0..=i1 {
+        let row = a.row_mut(i);
+        let seg = &mut row[c0..c0 + m];
+        let mut dot = seg[0];
+        for (k, vi) in v_tail.iter().enumerate() {
+            dot = vi.mul_add(seg[1 + k], dot);
+        }
+        let c = tau * dot;
+        seg[0] = seg[0] - c;
+        for (k, vi) in v_tail.iter().enumerate() {
+            seg[1 + k] = seg[1 + k] - c * *vi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn norm(x: &[f64]) -> f64 {
+        x.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn reflector_annihilates_tail() {
+        let orig = vec![3.0, 4.0, 0.0, 12.0];
+        let mut x = orig.clone();
+        let tau = make_reflector(&mut x);
+        // Apply H to the original vector: result must be (β, 0, 0, 0).
+        let mut y = orig.clone();
+        apply_reflector_vec(tau, &x[1..], &mut y);
+        assert!((y[0].abs() - 13.0).abs() < 1e-12, "β = ±‖x‖, got {}", y[0]);
+        for v in &y[1..] {
+            assert!(v.abs() < 1e-12, "tail not annihilated: {y:?}");
+        }
+        // β stored in x[0] matches.
+        assert!((y[0] - x[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reflector_sign_avoids_cancellation() {
+        let mut x = vec![5.0, 1e-8];
+        let tau = make_reflector(&mut x);
+        assert!(x[0] < 0.0, "β opposite sign of α");
+        assert!(tau > 0.0);
+    }
+
+    #[test]
+    fn zero_tail_gives_identity() {
+        let mut x = vec![7.0, 0.0, 0.0];
+        let tau = make_reflector(&mut x);
+        assert_eq!(tau, 0.0);
+        assert_eq!(x[0], 7.0); // untouched
+    }
+
+    #[test]
+    fn reflector_preserves_norm() {
+        let orig = vec![1.0, -2.0, 3.0, -4.0, 5.0];
+        let mut x = orig.clone();
+        let tau = make_reflector(&mut x);
+        let mut y = orig.clone();
+        apply_reflector_vec(tau, &x[1..], &mut y);
+        assert!((norm(&y) - norm(&orig)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reflector_is_orthogonal_on_other_vectors() {
+        // Applying H twice must give back the original vector.
+        let mut x = vec![2.0, -1.0, 0.5];
+        let tau = make_reflector(&mut x);
+        let orig = vec![0.3, 0.7, -0.2];
+        let mut y = orig.clone();
+        apply_reflector_vec(tau, &x[1..], &mut y);
+        apply_reflector_vec(tau, &x[1..], &mut y);
+        for (a, b) in y.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_row_application_matches_vector_form() {
+        let mut a = Dense::from_vec(3, 2, vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0]);
+        let mut x = vec![1.0, 2.0, 3.0]; // column 0
+        let tau = make_reflector(&mut x);
+        let v = x[1..].to_vec();
+        apply_reflector_rows(&mut a, tau, &v, 0, 0, 1);
+        // Column 0 must now be (β, 0, 0).
+        assert!((a.get(0, 0) - x[0]).abs() < 1e-12);
+        assert!(a.get(1, 0).abs() < 1e-12);
+        assert!(a.get(2, 0).abs() < 1e-12);
+        // Column 1: compare against direct vector application.
+        let mut col1 = vec![10.0, 20.0, 30.0];
+        apply_reflector_vec(tau, &v, &mut col1);
+        for i in 0..3 {
+            assert!((a.get(i, 1) - col1[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_col_application_matches_row_of_transpose() {
+        let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut a = Dense::from_vec(2, 3, data.clone());
+        let mut x = vec![1.0, 2.0, 3.0]; // row 0
+        let tau = make_reflector(&mut x);
+        let v = x[1..].to_vec();
+        apply_reflector_cols(&mut a, tau, &v, 0, 0, 1);
+        // Row 0 becomes (β, 0, 0).
+        assert!((a.get(0, 0) - x[0]).abs() < 1e-12);
+        assert!(a.get(0, 1).abs() < 1e-12);
+        assert!(a.get(0, 2).abs() < 1e-12);
+        // Row 1 equals vector application on the original row.
+        let mut row1 = vec![4.0, 5.0, 6.0];
+        apply_reflector_vec(tau, &v, &mut row1);
+        for j in 0..3 {
+            assert!((a.get(1, j) - row1[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn works_in_f32_and_f16() {
+        use crate::scalar::F16;
+        fn probe<T: Scalar>(tol: f64) {
+            let orig: Vec<T> = [3.0, 4.0].iter().map(|&v| T::from_f64(v)).collect();
+            let mut x = orig.clone();
+            let tau = make_reflector(&mut x);
+            let mut y = orig;
+            apply_reflector_vec(tau, &x[1..], &mut y);
+            assert!((y[0].to_f64().abs() - 5.0).abs() < tol);
+            assert!(y[1].to_f64().abs() < tol);
+        }
+        probe::<f32>(1e-5);
+        probe::<F16>(2e-2);
+    }
+}

@@ -1,0 +1,62 @@
+//! # banded-svd — memory-aware bulge chasing for banded→bidiagonal
+//! reduction
+//!
+//! Reproduction of *Accelerating Bidiagonalization of Banded Matrices
+//! through Memory-Aware Bulge-Chasing on GPUs* (Ringoot, Alomairy,
+//! Edelman; CS.DC 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L1** (build time): Pallas kernels implementing the paper's
+//!   Algorithm 2 (`python/compile/kernels/bulge.py`).
+//! - **L2** (build time): JAX cycle/stage functions lowered to HLO text
+//!   (`python/compile/model.py`, `aot.py` → `artifacts/*.hlo.txt`).
+//! - **L3** (run time, this crate): the coordinator — schedule, launch
+//!   loop, batching, PJRT execution of the AOT artifacts, plus a complete
+//!   native implementation, CPU baselines, the three-stage SVD pipeline,
+//!   and the GPU performance model that regenerates the paper's tables
+//!   and figures.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use banded_svd::prelude::*;
+//!
+//! let mut rng = Xoshiro256::seed_from_u64(0);
+//! let n = 256;
+//! let bw = 16;
+//! let params = TuneParams { tpb: 32, tw: 8, max_blocks: 192 };
+//! let mut a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+//! let result = reduce_to_bidiagonal(&mut a, bw, &params);
+//! let sv = bidiagonal_singular_values(&result.diag, &result.superdiag);
+//! println!("σ_max = {}", sv[0]);
+//! ```
+
+pub mod banded;
+pub mod baselines;
+pub mod bulge;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod generate;
+pub mod householder;
+pub mod pipeline;
+pub mod runtime;
+pub mod scalar;
+pub mod simulator;
+pub mod util;
+
+/// Convenient re-exports of the public API surface.
+pub mod prelude {
+    pub use crate::banded::{Banded, Dense};
+    pub use crate::bulge::{
+        reduce_to_bidiagonal, reduce_to_bidiagonal_parallel, stage_plan, Stage,
+    };
+    pub use crate::config::{Backend, TuneParams};
+    pub use crate::error::{Error, Result};
+    pub use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
+    pub use crate::pipeline::{
+        bidiagonal_singular_values, dense_to_band, singular_values_3stage, SvdOptions,
+    };
+    pub use crate::scalar::{Scalar, F16};
+    pub use crate::util::rng::Xoshiro256;
+    pub use crate::util::threadpool::ThreadPool;
+}

@@ -1,0 +1,477 @@
+//! banded-svd CLI — the L3 entry point.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §4)
+//! plus operational commands for running reductions and pipelines.
+
+use banded_svd::banded::Dense;
+use banded_svd::config::{Backend, TuneParams};
+use banded_svd::coordinator::Coordinator;
+use banded_svd::generate::{dense_with_spectrum, random_banded, Spectrum};
+use banded_svd::pipeline::{
+    bidiagonal_singular_values, jacobi_singular_values, relative_sv_error,
+    singular_values_3stage_mixed, SvdOptions,
+};
+use banded_svd::runtime::{artifact_dir, PjrtEngine};
+use banded_svd::scalar::F16;
+use banded_svd::simulator::{self, hw};
+use banded_svd::util::bench::{fmt_duration, Table};
+use banded_svd::util::cli::{flag, opt, Cli, Command};
+use banded_svd::util::rng::Xoshiro256;
+
+fn cli() -> Cli {
+    Cli {
+        program: "banded-svd",
+        about: "memory-aware bulge-chasing banded→bidiagonal reduction (paper reproduction)",
+        commands: vec![
+            Command {
+                name: "reduce",
+                about: "reduce a random banded matrix to bidiagonal form",
+                opts: vec![
+                    opt("n", "matrix size", "512"),
+                    opt("bw", "matrix bandwidth", "16"),
+                    opt("tw", "inner tilewidth", "8"),
+                    opt("tpb", "threads per block", "32"),
+                    opt("max-blocks", "block capacity per launch", "192"),
+                    opt("backend", "seq|par|pjrt|pjrt-fused", "par"),
+                    opt("threads", "worker threads (0 = all cores)", "0"),
+                    opt("seed", "rng seed", "42"),
+                    flag("verify", "check singular values against the Jacobi oracle (n ≤ 512)"),
+                ],
+            },
+            Command {
+                name: "svd",
+                about: "full 3-stage singular-value pipeline on a random dense matrix",
+                opts: vec![
+                    opt("n", "matrix size", "256"),
+                    opt("bw", "intermediate bandwidth", "16"),
+                    opt("tw", "inner tilewidth", "8"),
+                    opt("precision", "stage-2 precision: fp16|fp32|fp64", "fp64"),
+                    opt("spectrum", "arithmetic|logarithmic|quarter-circle", "arithmetic"),
+                    opt("seed", "rng seed", "42"),
+                ],
+            },
+            Command {
+                name: "accuracy",
+                about: "Fig. 3 protocol: relative error across precisions/spectra",
+                opts: vec![
+                    opt("sizes", "matrix sizes", "64,128,256"),
+                    opt("bw", "bandwidth", "16"),
+                    opt("tw", "inner tilewidth", "8"),
+                    opt("trials", "trials per cell", "3"),
+                    opt("seed", "rng seed", "7"),
+                ],
+            },
+            Command {
+                name: "occupancy",
+                about: "Table I: matrix size for full GPU occupancy (eq. 1)",
+                opts: vec![opt("cbw", "current bandwidth", "32")],
+            },
+            Command {
+                name: "sweep",
+                about: "Fig. 4 hyperparameter sweep on the hardware model",
+                opts: vec![
+                    opt("arch", "gpu architecture", "H100"),
+                    opt("n", "matrix size", "65536"),
+                    opt("bw", "bandwidth", "128"),
+                    opt("precision", "fp16|fp32|fp64", "fp32"),
+                ],
+            },
+            Command {
+                name: "hardware",
+                about: "Figs. 5/7: architecture comparison on the hardware model",
+                opts: vec![
+                    opt("sizes", "matrix sizes", "4096,16384,65536"),
+                    opt("bw", "bandwidth", "32"),
+                    opt("precision", "fp16|fp32|fp64", "fp32"),
+                ],
+            },
+            Command {
+                name: "profile",
+                about: "Table III: modeled kernel profile on RTX4060",
+                opts: vec![],
+            },
+            Command {
+                name: "tune",
+                about: "auto-tune (TPB, TW, MaxBlocks) for an architecture (paper §VII)",
+                opts: vec![
+                    opt("arch", "gpu architecture", "H100"),
+                    opt("n", "matrix size", "65536"),
+                    opt("bw", "bandwidth", "128"),
+                    opt("precision", "fp16|fp32|fp64", "fp32"),
+                ],
+            },
+            Command {
+                name: "artifacts-info",
+                about: "inspect compiled PJRT artifacts for a variant",
+                opts: vec![
+                    opt("n", "matrix size", "256"),
+                    opt("bw", "bandwidth", "8"),
+                    opt("tw", "tilewidth", "4"),
+                ],
+            },
+        ],
+    }
+}
+
+fn es_of(precision: &str) -> usize {
+    match precision {
+        "fp16" => 2,
+        "fp64" => 8,
+        _ => 4,
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match cli().parse(&argv) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(if msg.starts_with("unknown") { 2 } else { 0 });
+        }
+    };
+    let code = match parsed.command.as_str() {
+        "reduce" => cmd_reduce(&parsed.args),
+        "svd" => cmd_svd(&parsed.args),
+        "accuracy" => cmd_accuracy(&parsed.args),
+        "occupancy" => cmd_occupancy(&parsed.args),
+        "sweep" => cmd_sweep(&parsed.args),
+        "hardware" => cmd_hardware(&parsed.args),
+        "profile" => cmd_profile(),
+        "tune" => cmd_tune(&parsed.args),
+        "artifacts-info" => cmd_artifacts_info(&parsed.args),
+        _ => unreachable!(),
+    };
+    std::process::exit(code);
+}
+
+fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
+    let n: usize = args.parse_or("n", 512);
+    let bw: usize = args.parse_or("bw", 16);
+    let params = TuneParams {
+        tpb: args.parse_or("tpb", 32),
+        tw: args.parse_or("tw", 8),
+        max_blocks: args.parse_or("max-blocks", 192),
+    };
+    let backend: Backend = match args.get("backend").unwrap_or("par").parse() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let seed: u64 = args.parse_or("seed", 42);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let tw = params.effective_tw(bw);
+    let mut a = random_banded::<f64>(n, bw, tw, &mut rng);
+    let dense_before = if args.flag("verify") && n <= 512 {
+        Some(Dense::from_vec(n, n, a.to_dense()))
+    } else {
+        None
+    };
+    let coord = Coordinator::new(params, args.parse_or("threads", 0));
+    let report = match backend {
+        Backend::Sequential | Backend::Parallel => coord.reduce_native(&mut a, bw, backend),
+        Backend::Pjrt | Backend::PjrtFused => {
+            let mut af = a.convert::<f32>();
+            let engine = match PjrtEngine::load(&artifact_dir(), n, bw, tw) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            };
+            let r = coord.reduce_pjrt(&engine, &mut af, backend);
+            let _ = &a;
+            r
+        }
+    };
+    match report {
+        Ok(r) => {
+            println!(
+                "reduced n={n} bw={bw} tw={tw} backend={:?}: {} launches, {} tasks, \
+                 max parallel {}, wall {}",
+                r.backend,
+                r.metrics.launches,
+                r.metrics.tasks,
+                r.metrics.max_parallel,
+                fmt_duration(r.metrics.wall)
+            );
+            println!("residual off-bidiagonal: {:.3e}", r.residual_off_band);
+            if let Some(dense) = dense_before {
+                let sv = bidiagonal_singular_values(&r.diag, &r.superdiag);
+                let oracle = jacobi_singular_values(&dense);
+                let err = relative_sv_error(&sv, &oracle);
+                println!("singular-value relative error vs Jacobi oracle: {err:.3e}");
+                if err > 1e-4 {
+                    eprintln!("VERIFICATION FAILED");
+                    return 1;
+                }
+                println!("verification OK");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_svd(args: &banded_svd::util::cli::Args) -> i32 {
+    let n: usize = args.parse_or("n", 256);
+    let bw: usize = args.parse_or("bw", 16);
+    let tw: usize = args.parse_or("tw", 8);
+    let seed: u64 = args.parse_or("seed", 42);
+    let spectrum = match args.get("spectrum").unwrap_or("arithmetic") {
+        "logarithmic" => Spectrum::Logarithmic,
+        "quarter-circle" => Spectrum::QuarterCircle,
+        _ => Spectrum::Arithmetic,
+    };
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let sigma = spectrum.sample(n, &mut rng);
+    let a = dense_with_spectrum(n, &sigma, &mut rng, n.min(64));
+    let opts = SvdOptions {
+        bandwidth: bw,
+        params: TuneParams { tpb: 32, tw, max_blocks: 192 },
+    };
+    let precision = args.get("precision").unwrap_or("fp64").to_string();
+    let (sv, times) = match precision.as_str() {
+        "fp16" => singular_values_3stage_mixed::<F16>(&a, &opts),
+        "fp32" => singular_values_3stage_mixed::<f32>(&a, &opts),
+        _ => singular_values_3stage_mixed::<f64>(&a, &opts),
+    };
+    let err = relative_sv_error(&sv, &sigma);
+    println!(
+        "3-stage SVD n={n} bw={bw} tw={tw} stage2={precision} [{}]",
+        spectrum.name()
+    );
+    println!(
+        "  stage1 {}  stage2 {}  stage3 {}  total {}",
+        fmt_duration(times.stage1),
+        fmt_duration(times.stage2),
+        fmt_duration(times.stage3),
+        fmt_duration(times.total())
+    );
+    println!("  σ_max {:.6}  σ_min {:.3e}  rel-err vs ground truth {err:.3e}", sv[0], sv[n - 1]);
+    0
+}
+
+fn cmd_accuracy(args: &banded_svd::util::cli::Args) -> i32 {
+    let sizes: Vec<usize> = args.parse_list("sizes", &[64, 128, 256]);
+    let bw: usize = args.parse_or("bw", 16);
+    let tw: usize = args.parse_or("tw", 8);
+    let trials: usize = args.parse_or("trials", 3).clamp(1, 3);
+    let seed: u64 = args.parse_or("seed", 7);
+    let mut table = Table::new(vec!["n", "spectrum", "fp64", "fp32", "fp16"]);
+    for &n in &sizes {
+        for spectrum in Spectrum::ALL {
+            let mut errs = [[0.0f64; 3]; 3];
+            for trial in 0..trials {
+                let mut rng = Xoshiro256::seed_from_u64(seed + trial as u64 * 1000 + n as u64);
+                let sigma = spectrum.sample(n, &mut rng);
+                let a = dense_with_spectrum(n, &sigma, &mut rng, n.min(48));
+                let opts = SvdOptions {
+                    bandwidth: bw.min(n / 2),
+                    params: TuneParams { tpb: 32, tw, max_blocks: 192 },
+                };
+                let (s64, _) = singular_values_3stage_mixed::<f64>(&a, &opts);
+                let (s32, _) = singular_values_3stage_mixed::<f32>(&a, &opts);
+                let (s16, _) = singular_values_3stage_mixed::<F16>(&a, &opts);
+                errs[0][trial] = relative_sv_error(&s64, &sigma);
+                errs[1][trial] = relative_sv_error(&s32, &sigma);
+                errs[2][trial] = relative_sv_error(&s16, &sigma);
+            }
+            let med = |xs: &[f64; 3]| {
+                let mut v = xs[..trials].to_vec();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v[v.len() / 2]
+            };
+            table.row(vec![
+                n.to_string(),
+                spectrum.name().to_string(),
+                format!("{:.2e}", med(&errs[0])),
+                format!("{:.2e}", med(&errs[1])),
+                format!("{:.2e}", med(&errs[2])),
+            ]);
+        }
+    }
+    table.print();
+    0
+}
+
+fn cmd_occupancy(args: &banded_svd::util::cli::Args) -> i32 {
+    let cbw: usize = args.parse_or("cbw", 32);
+    let mut table = Table::new(vec!["GPU", "ALUs", "n for full occupancy"]);
+    for row in simulator::table1(cbw) {
+        table.row(vec![row.arch.to_string(), row.alus.to_string(), row.n_required.to_string()]);
+    }
+    table.print();
+    0
+}
+
+fn cmd_sweep(args: &banded_svd::util::cli::Args) -> i32 {
+    let arch = match hw::arch_by_name(args.get("arch").unwrap_or("H100")) {
+        Some(a) => a,
+        None => {
+            eprintln!("unknown arch; known: A100 H100 RTX4060 MI250X MI300X PVC1100 M1");
+            return 2;
+        }
+    };
+    let n: usize = args.parse_or("n", 65536);
+    let bw: usize = args.parse_or("bw", 128);
+    let es = es_of(args.get("precision").unwrap_or("fp32"));
+    let mut table = Table::new(vec!["max_blocks", "tw", "tpb", "modeled time", "rel"]);
+    let mut rows = Vec::new();
+    let mut best = f64::INFINITY;
+    for mb in [48usize, 96, 192, 384] {
+        for tw in [8usize, 16, 32, 64] {
+            if tw >= bw {
+                continue;
+            }
+            for tpb in [16usize, 32, 64] {
+                let p = TuneParams { tpb, tw, max_blocks: mb };
+                let r = simulator::simulate_reduction(&arch, es, n, bw, &p);
+                best = best.min(r.seconds);
+                rows.push((mb, tw, tpb, r.seconds));
+            }
+        }
+    }
+    for (mb, tw, tpb, secs) in rows {
+        table.row(vec![
+            mb.to_string(),
+            tw.to_string(),
+            tpb.to_string(),
+            format!("{secs:.3} s"),
+            format!("{:.2}x", secs / best),
+        ]);
+    }
+    table.print();
+    0
+}
+
+fn cmd_hardware(args: &banded_svd::util::cli::Args) -> i32 {
+    let sizes: Vec<usize> = args.parse_list("sizes", &[4096, 16384, 65536]);
+    let bw: usize = args.parse_or("bw", 32);
+    let es = es_of(args.get("precision").unwrap_or("fp32"));
+    let mut headers = vec!["GPU".to_string()];
+    headers.extend(sizes.iter().map(|n| format!("n={n}")));
+    let mut table = Table::new(headers);
+    for arch in hw::all_archs() {
+        let p = TuneParams { tpb: 32, tw: (128 / es).min(bw - 1).max(1), max_blocks: 192 };
+        let mut row = vec![arch.name.to_string()];
+        for &n in &sizes {
+            let r = simulator::simulate_reduction(&arch, es, n, bw, &p);
+            row.push(format!("{:.4} s", r.seconds));
+        }
+        table.row(row);
+    }
+    table.print();
+    0
+}
+
+fn cmd_profile() -> i32 {
+    use banded_svd::bulge::schedule::Stage;
+    let grid = [
+        (64usize, 48usize, 32usize),
+        (64, 96, 32),
+        (32, 96, 32),
+        (32, 192, 32),
+        (16, 192, 32),
+        (32, 96, 16),
+        (32, 192, 16),
+        (64, 96, 16),
+    ];
+    let mut table = Table::new(vec![
+        "tpb", "max_blocks", "tw", "time(us)", "mem%", "dram%", "l1%", "l2%", "compute%",
+        "warps/sm",
+    ]);
+    for (tpb, mb, tw) in grid {
+        let stage = Stage::new(64, tw);
+        let blocks = 32768 / (3 * 64);
+        let m = simulator::profile_kernel(&hw::RTX4060, 4, &stage, tpb, mb, blocks);
+        table.row(vec![
+            tpb.to_string(),
+            mb.to_string(),
+            tw.to_string(),
+            format!("{:.0}", m.time_us),
+            format!("{:.0}", m.memory_pct),
+            format!("{:.0}", m.dram_pct),
+            format!("{:.0}", m.l1_pct),
+            format!("{:.0}", m.l2_pct),
+            format!("{:.1}", m.compute_pct),
+            format!("{:.2}", m.warps_per_sm),
+        ]);
+    }
+    table.print();
+    let g = simulator::profile_geam_reference(&hw::RTX4060, 4, 16384);
+    println!(
+        "\ngeam reference (B = A + Aᵀ, 16k): dram {:.0}%  l1 {:.0}%  l2 {:.0}%",
+        g.dram_pct, g.l1_pct, g.l2_pct
+    );
+    0
+}
+
+fn cmd_tune(args: &banded_svd::util::cli::Args) -> i32 {
+    let arch = match hw::arch_by_name(args.get("arch").unwrap_or("H100")) {
+        Some(a) => a,
+        None => {
+            eprintln!("unknown arch; known: A100 H100 RTX4060 MI250X MI300X PVC1100 M1");
+            return 2;
+        }
+    };
+    let n: usize = args.parse_or("n", 65536);
+    let bw: usize = args.parse_or("bw", 128);
+    let es = es_of(args.get("precision").unwrap_or("fp32"));
+    let heuristic = simulator::heuristic_params(&arch, es, bw);
+    let h_time = simulator::simulate_reduction(&arch, es, n, bw, &heuristic).seconds;
+    println!(
+        "heuristic ({}): tpb={} tw={} max_blocks={}  ->  {:.3} s (modeled)",
+        arch.name, heuristic.tpb, heuristic.tw, heuristic.max_blocks, h_time
+    );
+    let tuned = simulator::autotune(&arch, es, n, bw);
+    println!(
+        "autotuned      : tpb={} tw={} max_blocks={}  ->  {:.3} s (modeled, {} configs, {:.1}% faster)",
+        tuned.params.tpb,
+        tuned.params.tw,
+        tuned.params.max_blocks,
+        tuned.modeled_seconds,
+        tuned.evaluated,
+        100.0 * (h_time - tuned.modeled_seconds) / h_time
+    );
+    0
+}
+
+fn cmd_artifacts_info(args: &banded_svd::util::cli::Args) -> i32 {
+    let n: usize = args.parse_or("n", 256);
+    let bw: usize = args.parse_or("bw", 8);
+    let tw: usize = args.parse_or("tw", 4);
+    match PjrtEngine::load(&artifact_dir(), n, bw, tw) {
+        Ok(engine) => {
+            let m = engine.manifest();
+            println!(
+                "variant n={} bw={} tw={} (ld={}, kd_super={}, tpb={}), {} stages, fused={}",
+                m.n,
+                m.bw,
+                m.tw,
+                m.ld,
+                m.kd_super,
+                m.tpb,
+                m.stages.len(),
+                engine.has_fused()
+            );
+            for s in &m.stages {
+                println!(
+                    "  stage {}: b={} d={} launches={} slots={} ({})",
+                    s.index, s.b, s.d, s.launches, s.slots, s.cycle_file
+                );
+            }
+            println!("compile time: {}", fmt_duration(engine.compile_time));
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Demmel–Kahan implicit zero-shift QR for bidiagonal singular values —
+//! the second stage-3 solver (LAPACK `bdsqr`-family), cross-checking the
+//! Golub–Kahan bisection in `stage3.rs`.
+//!
+//! The zero-shift variant (Demmel & Kahan, "Accurate singular values of
+//! bidiagonal matrices", 1990) computes every singular value to high
+//! relative accuracy using only Givens rotations whose rotation data
+//! never mixes magnitudes. A Wilkinson-style shift is used once the
+//! iteration is far from the deflation threshold, for cubic convergence;
+//! near convergence we switch to zero-shift to protect tiny values.
+
+/// Tolerance factor (LAPACK uses ~ machine-eps · max-dim heuristics).
+const TOL: f64 = 100.0 * f64::EPSILON;
+const MAX_SWEEPS_PER_VALUE: usize = 40;
+
+/// Givens rotation (c, s, r) with c·a + s·b = r, −s·a + c·b = 0
+/// (LAPACK `lartg`-style, guarded for zeros).
+#[inline]
+fn rotg(a: f64, b: f64) -> (f64, f64, f64) {
+    if b == 0.0 {
+        (1.0, 0.0, a)
+    } else if a == 0.0 {
+        (0.0, 1.0, b)
+    } else {
+        let r = a.hypot(b);
+        (a / r, b / r, r)
+    }
+}
+
+/// One zero-shift QR sweep on d[lo..=hi], e[lo..hi] (Demmel–Kahan
+/// "implicit zero-shift" recurrence).
+fn zero_shift_sweep(d: &mut [f64], e: &mut [f64], lo: usize, hi: usize) {
+    let (mut c_old, mut s_old) = (1.0f64, 0.0f64);
+    let mut c = 1.0f64;
+    for i in lo..hi {
+        let (c_new, s_new, r) = rotg(d[i] * c, e[i]);
+        if i > lo {
+            e[i - 1] = s_old * r;
+        }
+        let (co, so, ro) = rotg(c_old * r, d[i + 1] * s_new);
+        d[i] = ro;
+        c = c_new;
+        c_old = co;
+        s_old = so;
+    }
+    let h = d[hi] * c;
+    e[hi - 1] = h * s_old;
+    d[hi] = h * c_old;
+}
+
+/// One shifted QR sweep (standard bulge-chase with shift σ²).
+fn shifted_sweep(d: &mut [f64], e: &mut [f64], lo: usize, hi: usize, shift: f64) {
+    let mut f = (d[lo].abs() - shift) * (1.0f64.copysign(d[lo]) + shift / d[lo]);
+    let mut g = e[lo];
+    for i in lo..hi {
+        let (c, s, r) = rotg(f, g);
+        if i > lo {
+            e[i - 1] = r;
+        }
+        f = c * d[i] + s * e[i];
+        e[i] = c * e[i] - s * d[i];
+        g = s * d[i + 1];
+        d[i + 1] *= c;
+        let (c2, s2, r2) = rotg(f, g);
+        d[i] = r2;
+        f = c2 * e[i] + s2 * d[i + 1];
+        d[i + 1] = c2 * d[i + 1] - s2 * e[i];
+        if i < hi - 1 {
+            g = s2 * e[i + 1];
+            e[i + 1] *= c2;
+        }
+    }
+    e[hi - 1] = f;
+}
+
+/// Wilkinson-style shift from the trailing 2×2 of BᵀB.
+fn trailing_shift(d: &[f64], e: &[f64], hi: usize) -> f64 {
+    let dn = d[hi];
+    let dn1 = d[hi - 1];
+    let en1 = e[hi - 1];
+    let en2 = if hi >= 2 { e[hi - 2] } else { 0.0 };
+    // Eigenvalue of [[dn1²+en2², dn1·en1], [dn1·en1, dn²+en1²]] closest
+    // to the trailing entry.
+    let a = dn1 * dn1 + en2 * en2;
+    let b = dn1 * en1;
+    let c = dn * dn + en1 * en1;
+    let tr = 0.5 * (a + c);
+    let det = a * c - b * b;
+    let disc = (tr * tr - det).max(0.0).sqrt();
+    let l1 = tr + disc;
+    let l2 = tr - disc;
+    let lam = if (l1 - c).abs() < (l2 - c).abs() { l1 } else { l2 };
+    lam.max(0.0).sqrt()
+}
+
+/// All singular values of the upper bidiagonal (d, e), descending, by
+/// Demmel–Kahan QR iteration. O(n²) typical.
+pub fn dk_qr_singular_values(d_in: &[f64], e_in: &[f64]) -> Vec<f64> {
+    let n = d_in.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert_eq!(e_in.len() + 1, n);
+    let mut d = d_in.to_vec();
+    let mut e = e_in.to_vec();
+    let scale = d
+        .iter()
+        .chain(e.iter())
+        .fold(0.0f64, |m, &x| m.max(x.abs()));
+    if scale == 0.0 {
+        return vec![0.0; n];
+    }
+
+    let mut hi = n - 1;
+    let mut budget = MAX_SWEEPS_PER_VALUE * n;
+    while hi > 0 && budget > 0 {
+        // Deflate negligible off-diagonals.
+        let mut deflated = false;
+        for i in (0..hi).rev() {
+            if e[i].abs() <= TOL * (d[i].abs() + d[i + 1].abs()).max(scale * f64::EPSILON) {
+                e[i] = 0.0;
+                if i == hi - 1 {
+                    hi -= 1;
+                    deflated = true;
+                    break;
+                }
+            }
+        }
+        if deflated {
+            continue;
+        }
+        if hi == 0 {
+            break;
+        }
+        // Active block [lo, hi]: walk up to the nearest split.
+        let mut lo = hi;
+        while lo > 0 && e[lo - 1] != 0.0 {
+            lo -= 1;
+        }
+        if lo == hi {
+            hi -= 1;
+            continue;
+        }
+        // Choose shift: zero-shift when the block is nearly converged or
+        // badly graded (protects relative accuracy of tiny values).
+        let dmin = d[lo..=hi].iter().fold(f64::INFINITY, |m, &x| m.min(x.abs()));
+        let emax = e[lo..hi].iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        let shift = trailing_shift(&d, &e, hi);
+        if shift <= TOL.sqrt() * dmin || emax <= TOL.sqrt() * dmin || d[lo] == 0.0 {
+            zero_shift_sweep(&mut d, &mut e, lo, hi);
+        } else {
+            shifted_sweep(&mut d, &mut e, lo, hi, shift);
+        }
+        budget -= 1;
+    }
+    let mut sv: Vec<f64> = d.iter().map(|x| x.abs()).collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::random_bidiagonal;
+    use crate::pipeline::stage3::bidiagonal_singular_values;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn matches_bisection_on_random_bidiagonals() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for n in [2usize, 3, 5, 16, 40, 100] {
+            let (d, e) = random_bidiagonal(n, &mut rng);
+            let qr = dk_qr_singular_values(&d, &e);
+            let bis = bidiagonal_singular_values(&d, &e);
+            for (a, b) in qr.iter().zip(bis.iter()) {
+                assert!(
+                    (a - b).abs() <= 1e-10 * b.max(1e-10),
+                    "n={n}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_input() {
+        let sv = dk_qr_singular_values(&[3.0, -1.0, 2.0], &[0.0, 0.0]);
+        assert!((sv[0] - 3.0).abs() < 1e-14);
+        assert!((sv[1] - 2.0).abs() < 1e-14);
+        assert!((sv[2] - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn graded_matrix_small_values_relatively_accurate() {
+        // The Demmel–Kahan selling point: tiny σ to high relative accuracy.
+        let d = vec![1.0, 1e-4, 1e-8];
+        let e = vec![1e-2, 1e-6];
+        let qr = dk_qr_singular_values(&d, &e);
+        let bis = bidiagonal_singular_values(&d, &e);
+        for (a, b) in qr.iter().zip(bis.iter()) {
+            assert!((a - b).abs() <= 1e-8 * b, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_matrix_and_empty() {
+        assert_eq!(dk_qr_singular_values(&[0.0, 0.0], &[0.0]), vec![0.0, 0.0]);
+        assert!(dk_qr_singular_values(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let (d, e) = random_bidiagonal(64, &mut rng);
+        let sv = dk_qr_singular_values(&d, &e);
+        let ssq: f64 = sv.iter().map(|s| s * s).sum();
+        let fro: f64 =
+            d.iter().map(|x| x * x).sum::<f64>() + e.iter().map(|x| x * x).sum::<f64>();
+        assert!((ssq - fro).abs() < 1e-8 * fro, "{ssq} vs {fro}");
+    }
+}

@@ -1,0 +1,27 @@
+//! The three-stage singular-value pipeline.
+//!
+//! - [`stage1`] — dense → banded (blocked Householder, the substrate the
+//!   paper takes from [11]).
+//! - stage 2 — lives in [`crate::bulge`] (the paper's contribution).
+//! - [`stage3`] — bidiagonal → singular values (Golub–Kahan bisection,
+//!   standing in for LAPACK BDSDC).
+//! - [`jacobi`] — one-sided Jacobi oracle for independent validation.
+//! - [`svd`]    — end-to-end drivers, including the mixed-precision
+//!   Fig. 3 protocol.
+
+pub mod dk_qr;
+pub mod jacobi;
+pub mod stage1;
+pub mod stage3;
+pub mod svd;
+
+pub use dk_qr::dk_qr_singular_values;
+pub use jacobi::jacobi_singular_values;
+pub use stage1::{dense_to_band, dense_to_band_inplace, dense_to_band_inplace_parallel};
+pub use stage3::{
+    bidiagonal_singular_values, bidiagonal_singular_values_parallel, relative_sv_error,
+};
+pub use svd::{
+    banded_singular_values, singular_values_3stage, singular_values_3stage_mixed,
+    singular_values_3stage_parallel, StageTimings, SvdOptions,
+};

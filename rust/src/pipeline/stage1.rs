@@ -1,0 +1,213 @@
+//! Stage 1: dense → upper-banded reduction ("ge2gb").
+//!
+//! Classical two-sided Householder band reduction: at step k, a left
+//! reflector annihilates column k below the diagonal, then a right
+//! reflector annihilates row k beyond column k+bw. After n steps the
+//! matrix is upper-banded with bandwidth `bw` and the same singular
+//! values. This is the substrate the paper assumes from prior work [11];
+//! the Fig. 3 protocol runs it in FP64.
+
+use crate::banded::dense::Dense;
+use crate::banded::storage::Banded;
+use crate::householder::{apply_reflector_cols, apply_reflector_rows, make_reflector};
+use crate::scalar::Scalar;
+use crate::util::threadpool::ThreadPool;
+
+/// Reduce dense `a` (n×n, row-major) to upper-banded form with bandwidth
+/// `bw`, in place. Returns nothing; the band can be extracted with
+/// [`Banded::from_dense`].
+pub fn dense_to_band_inplace<T: Scalar>(a: &mut Dense<T>, bw: usize) {
+    assert_eq!(a.rows, a.cols, "square matrices only");
+    assert!(bw >= 1, "bandwidth must be ≥ 1");
+    let n = a.rows;
+    let mut v = Vec::new();
+    for k in 0..n {
+        // Left reflector: annihilate A[k+1.., k].
+        if k + 1 < n {
+            let m = n - k;
+            v.clear();
+            v.extend((0..m).map(|i| a.get(k + i, k)));
+            let tau = make_reflector(&mut v);
+            if tau != T::zero() {
+                let tail = v[1..].to_vec();
+                apply_reflector_rows(a, tau, &tail, k, k, n - 1);
+                // Exact zeros below the diagonal.
+                a.set(k, k, v[0]);
+                for i in (k + 1)..n {
+                    a.set(i, k, T::zero());
+                }
+            }
+        }
+        // Right reflector: annihilate A[k, k+bw+1..].
+        if k + bw + 1 < n {
+            let c0 = k + bw;
+            let m = n - c0;
+            v.clear();
+            v.extend((0..m).map(|j| a.get(k, c0 + j)));
+            let tau = make_reflector(&mut v);
+            if tau != T::zero() {
+                let tail = v[1..].to_vec();
+                apply_reflector_cols(a, tau, &tail, c0, k, n - 1);
+                a.set(k, c0, v[0]);
+                for j in (c0 + 1)..n {
+                    a.set(k, j, T::zero());
+                }
+            }
+        }
+    }
+}
+
+/// Threaded variant: the reflector applications (the O(n²) inner work per
+/// step) are split over the pool by column/row blocks.
+pub fn dense_to_band_inplace_parallel<T: Scalar>(a: &mut Dense<T>, bw: usize, pool: &ThreadPool) {
+    assert_eq!(a.rows, a.cols, "square matrices only");
+    assert!(bw >= 1);
+    let n = a.rows;
+    let mut v: Vec<T> = Vec::new();
+    let shared = SharedDense(a as *mut Dense<T>);
+    let shared = &shared;
+
+    for k in 0..n {
+        if k + 1 < n {
+            let m = n - k;
+            v.clear();
+            v.extend((0..m).map(|i| a.get(k + i, k)));
+            let tau = make_reflector(&mut v);
+            if tau != T::zero() {
+                let tail = &v[1..];
+                let n_chunks = pool.len().max(1) * 2;
+                pool.for_each_chunk(n - k, n_chunks, |range| {
+                    // SAFETY: chunks partition the column range; a left
+                    // reflector application touches disjoint columns.
+                    let a = unsafe { &mut *shared.get() };
+                    apply_reflector_rows(a, tau, tail, k, k + range.start, k + range.end - 1);
+                });
+                let a = unsafe { &mut *shared.get() };
+                a.set(k, k, v[0]);
+                for i in (k + 1)..n {
+                    a.set(i, k, T::zero());
+                }
+            }
+        }
+        if k + bw + 1 < n {
+            let c0 = k + bw;
+            let m = n - c0;
+            v.clear();
+            v.extend((0..m).map(|j| a.get(k, c0 + j)));
+            let tau = make_reflector(&mut v);
+            if tau != T::zero() {
+                let tail = &v[1..];
+                let n_chunks = pool.len().max(1) * 2;
+                pool.for_each_chunk(n - k, n_chunks, |range| {
+                    // SAFETY: chunks partition the row range; a right
+                    // reflector application touches disjoint rows.
+                    let a = unsafe { &mut *shared.get() };
+                    apply_reflector_cols(a, tau, tail, c0, k + range.start, k + range.end - 1);
+                });
+                let a = unsafe { &mut *shared.get() };
+                a.set(k, c0, v[0]);
+                for j in (c0 + 1)..n {
+                    a.set(k, j, T::zero());
+                }
+            }
+        }
+    }
+}
+
+struct SharedDense<T>(*mut Dense<T>);
+unsafe impl<T: Send> Send for SharedDense<T> {}
+unsafe impl<T: Send> Sync for SharedDense<T> {}
+
+impl<T> SharedDense<T> {
+    fn get(&self) -> *mut Dense<T> {
+        self.0
+    }
+}
+
+/// Convenience: reduce dense → banded storage ready for bulge chasing
+/// with inner tilewidth `tw`.
+pub fn dense_to_band<T: Scalar>(a: &Dense<T>, bw: usize, tw: usize) -> Banded<T> {
+    let mut work = a.clone();
+    dense_to_band_inplace(&mut work, bw);
+    Banded::from_dense(&work.data, work.rows, bw, tw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::{dense_with_spectrum, Spectrum};
+    use crate::util::rng::Xoshiro256;
+
+    fn random_dense(n: usize, seed: u64) -> Dense<f64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let sigma = Spectrum::Arithmetic.sample(n, &mut rng);
+        dense_with_spectrum(n, &sigma, &mut rng, n)
+    }
+
+    #[test]
+    fn produces_upper_banded_form() {
+        let n = 24;
+        for bw in [1usize, 2, 4, 8] {
+            let mut a = random_dense(n, bw as u64);
+            dense_to_band_inplace(&mut a, bw);
+            for i in 0..n {
+                for j in 0..n {
+                    let inside = j >= i && j - i <= bw;
+                    if !inside {
+                        assert!(
+                            a.get(i, j).abs() < 1e-12,
+                            "bw={bw}: ({i},{j}) = {}",
+                            a.get(i, j)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_frobenius_norm() {
+        let n = 32;
+        let mut a = random_dense(n, 9);
+        let before = a.fro_norm();
+        dense_to_band_inplace(&mut a, 4);
+        assert!((a.fro_norm() - before).abs() < 1e-10 * before);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let pool = ThreadPool::new(4);
+        let n = 28;
+        for bw in [2usize, 5] {
+            let mut a1 = random_dense(n, 100 + bw as u64);
+            let mut a2 = a1.clone();
+            dense_to_band_inplace(&mut a1, bw);
+            dense_to_band_inplace_parallel(&mut a2, bw, &pool);
+            assert_eq!(a1.data, a2.data, "bw={bw}");
+        }
+    }
+
+    #[test]
+    fn band_extraction_roundtrip() {
+        let n = 20;
+        let a = random_dense(n, 11);
+        let banded = dense_to_band(&a, 3, 2);
+        assert_eq!(banded.max_off_band(3), 0.0);
+        assert!((banded.fro_norm() - a.fro_norm()).abs() < 1e-10 * a.fro_norm());
+    }
+
+    #[test]
+    fn bandwidth_one_gives_bidiagonal_directly() {
+        // bw = 1 makes stage 1 a full Golub–Kahan bidiagonalization.
+        let n = 16;
+        let mut a = random_dense(n, 12);
+        dense_to_band_inplace(&mut a, 1);
+        for i in 0..n {
+            for j in 0..n {
+                if j != i && j != i + 1 {
+                    assert!(a.get(i, j).abs() < 1e-12, "({i},{j})");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Stage 3: singular values of an upper-bidiagonal matrix.
+//!
+//! Primary method: bisection on the Golub–Kahan tridiagonal
+//! `TGK = perm([0 Bᵀ; B 0])` — symmetric tridiagonal with zero diagonal
+//! and off-diagonal `(d₁, e₁, d₂, e₂, …, d_n)`, whose eigenvalues are
+//! `±σ_i`. Bisection with Sturm counts on a zero-diagonal tridiagonal
+//! computes every σ to high *relative* accuracy (Demmel–Kahan), which is
+//! what makes it a trustworthy replacement for LAPACK BDSDC in the
+//! Fig. 3 protocol. The paper runs this stage in FP64; so do we.
+
+use crate::util::threadpool::ThreadPool;
+
+/// Off-diagonal of the Golub–Kahan tridiagonal: interleave(d, e).
+fn golub_kahan_offdiag(d: &[f64], e: &[f64]) -> Vec<f64> {
+    let n = d.len();
+    assert_eq!(e.len() + 1, n, "superdiagonal must have n−1 entries");
+    let mut off = Vec::with_capacity(2 * n - 1);
+    for i in 0..n {
+        off.push(d[i]);
+        if i + 1 < n {
+            off.push(e[i]);
+        }
+    }
+    off
+}
+
+/// Sturm count: number of eigenvalues of the zero-diagonal symmetric
+/// tridiagonal with off-diagonal `off` that are strictly less than `x`.
+/// `pivmin` guards against division blow-up (LAPACK-style).
+fn sturm_count(off: &[f64], x: f64, pivmin: f64) -> usize {
+    let m = off.len() + 1;
+    let mut count = 0usize;
+    let mut q = -x; // diagonal is zero
+    if q < 0.0 {
+        count += 1;
+    }
+    for &b in off {
+        if q.abs() < pivmin {
+            q = if q < 0.0 { -pivmin } else { pivmin };
+        }
+        q = -x - (b * b) / q;
+        if q < 0.0 {
+            count += 1;
+        }
+    }
+    debug_assert_eq!(m, off.len() + 1);
+    count
+}
+
+/// All singular values of the bidiagonal (d, e), descending, by bisection
+/// on the Golub–Kahan form. O(n² log(1/ε)).
+pub fn bidiagonal_singular_values(d: &[f64], e: &[f64]) -> Vec<f64> {
+    bidiagonal_singular_values_impl(d, e, None)
+}
+
+/// Parallel variant: the per-σ bisections are independent.
+pub fn bidiagonal_singular_values_parallel(
+    d: &[f64],
+    e: &[f64],
+    pool: &ThreadPool,
+) -> Vec<f64> {
+    bidiagonal_singular_values_impl(d, e, Some(pool))
+}
+
+fn bidiagonal_singular_values_impl(
+    d: &[f64],
+    e: &[f64],
+    pool: Option<&ThreadPool>,
+) -> Vec<f64> {
+    let n = d.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![d[0].abs()];
+    }
+    let off = golub_kahan_offdiag(d, e);
+    // Gershgorin-style bound on the TGK spectrum: |λ| ≤ max row sum.
+    let mut bound = 0.0f64;
+    for i in 0..off.len() + 1 {
+        let left = if i > 0 { off[i - 1].abs() } else { 0.0 };
+        let right = if i < off.len() { off[i].abs() } else { 0.0 };
+        bound = bound.max(left + right);
+    }
+    if bound == 0.0 {
+        return vec![0.0; n];
+    }
+    bound *= 1.0 + 1e-12;
+    let max_off = off.iter().fold(0.0f64, |m, &b| m.max(b.abs()));
+    let pivmin = (f64::EPSILON * max_off * max_off).max(f64::MIN_POSITIVE);
+
+    let compute_k = |k: usize| -> f64 {
+        // σ_k (0-indexed, descending): bisect on x > 0. For x > 0,
+        // #(eigs < x) = n + #(σ < x); σ_k is the (n−k)-th smallest σ:
+        // invariant: count(hi) ≥ n + (n−k), count(lo) < n + (n−k).
+        let want = n + (n - 1 - k) + 1; // count ≥ want ⇒ σ_k < x
+        let (mut lo, mut hi) = (0.0f64, bound);
+        // ~60 iterations: bound/2^60 ≪ any representable σ of interest;
+        // stop earlier on relative convergence.
+        for _ in 0..120 {
+            let mid = 0.5 * (lo + hi);
+            if mid <= lo || mid >= hi {
+                break;
+            }
+            if sturm_count(&off, mid, pivmin) >= want {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+            if (hi - lo) <= 2.0 * f64::EPSILON * hi.max(1e-300) {
+                break;
+            }
+        }
+        0.5 * (lo + hi)
+    };
+
+    let mut out = vec![0.0f64; n];
+    match pool {
+        Some(pool) if n >= 32 => {
+            use std::sync::atomic::{AtomicU64, Ordering};
+            let bits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.for_each_index(n, |k| {
+                bits[k].store(compute_k(k).to_bits(), Ordering::Relaxed);
+            });
+            for (o, b) in out.iter_mut().zip(bits.iter()) {
+                *o = f64::from_bits(b.load(Ordering::Relaxed));
+            }
+        }
+        _ => {
+            for (k, o) in out.iter_mut().enumerate() {
+                *o = compute_k(k);
+            }
+        }
+    }
+    out
+}
+
+/// Relative error metric of the paper's Fig. 3: ‖σ̂ − σ‖₂ / ‖σ‖₂.
+pub fn relative_sv_error(computed: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(computed.len(), truth.len());
+    let num: f64 = computed
+        .iter()
+        .zip(truth.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = truth.iter().map(|b| b * b).sum::<f64>().sqrt();
+    if den == 0.0 {
+        num
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::random_bidiagonal;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn diagonal_matrix_singular_values_are_abs_diag() {
+        let d = vec![3.0, -1.0, 2.0, 0.5];
+        let e = vec![0.0, 0.0, 0.0];
+        let sv = bidiagonal_singular_values(&d, &e);
+        assert_eq!(sv.len(), 4);
+        let expect = [3.0, 2.0, 1.0, 0.5];
+        for (a, b) in sv.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-12, "{sv:?}");
+        }
+    }
+
+    #[test]
+    fn two_by_two_closed_form() {
+        // B = [[a, b], [0, c]]: σ² are eigenvalues of BᵀB.
+        let (a, b, c) = (2.0f64, 1.0f64, 3.0f64);
+        let sv = bidiagonal_singular_values(&[a, c], &[b]);
+        // Closed form via BᵀB = [[a², ab], [ab, b²+c²]].
+        let tr = a * a + b * b + c * c;
+        let det = (a * c) * (a * c);
+        let disc = (tr * tr - 4.0 * det).sqrt();
+        let s1 = ((tr + disc) / 2.0).sqrt();
+        let s2 = ((tr - disc) / 2.0).sqrt();
+        assert!((sv[0] - s1).abs() < 1e-12, "{} vs {s1}", sv[0]);
+        assert!((sv[1] - s2).abs() < 1e-12, "{} vs {s2}", sv[1]);
+    }
+
+    #[test]
+    fn values_are_sorted_descending_and_nonnegative() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let (d, e) = random_bidiagonal(40, &mut rng);
+        let sv = bidiagonal_singular_values(&d, &e);
+        assert!(sv.windows(2).all(|w| w[0] >= w[1] - 1e-12), "{sv:?}");
+        assert!(sv.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn frobenius_identity_holds() {
+        // Σσ² = ‖B‖_F².
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let (d, e) = random_bidiagonal(30, &mut rng);
+        let sv = bidiagonal_singular_values(&d, &e);
+        let ssq: f64 = sv.iter().map(|s| s * s).sum();
+        let fro: f64 =
+            d.iter().map(|x| x * x).sum::<f64>() + e.iter().map(|x| x * x).sum::<f64>();
+        assert!((ssq - fro).abs() < 1e-9 * fro, "{ssq} vs {fro}");
+    }
+
+    #[test]
+    fn splitting_with_zero_superdiagonal() {
+        // e contains an exact zero: matrix decouples into two blocks.
+        let d = vec![1.0, 2.0, 5.0, 4.0];
+        let e = vec![0.5, 0.0, 0.25];
+        let sv = bidiagonal_singular_values(&d, &e);
+        // Compare against concatenated 2×2 blocks.
+        let block1 = bidiagonal_singular_values(&[1.0, 2.0], &[0.5]);
+        let block2 = bidiagonal_singular_values(&[5.0, 4.0], &[0.25]);
+        let mut expect = [block1, block2].concat();
+        expect.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for (a, b) in sv.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-11, "{sv:?} vs {expect:?}");
+        }
+    }
+
+    #[test]
+    fn tiny_singular_values_computed_with_relative_accuracy() {
+        // Graded bidiagonal: σ_min ~ 1e-12 must come out with small
+        // *relative* error (the Demmel–Kahan property of GK bisection).
+        let d = vec![1.0, 1e-6, 1e-12];
+        let e = vec![0.0, 0.0];
+        let sv = bidiagonal_singular_values(&d, &e);
+        assert!((sv[2] - 1e-12).abs() / 1e-12 < 1e-10, "{:?}", sv);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let (d, e) = random_bidiagonal(64, &mut rng);
+        let s1 = bidiagonal_singular_values(&d, &e);
+        let s2 = bidiagonal_singular_values_parallel(&d, &e, &pool);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn relative_error_metric() {
+        assert_eq!(relative_sv_error(&[1.0, 1.0], &[1.0, 1.0]), 0.0);
+        let e = relative_sv_error(&[1.1], &[1.0]);
+        assert!((e - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(bidiagonal_singular_values(&[], &[]).is_empty());
+        assert_eq!(bidiagonal_singular_values(&[-2.5], &[]), vec![2.5]);
+    }
+}

@@ -1,0 +1,240 @@
+//! The three-stage singular-value pipeline (paper §I): dense → banded →
+//! bidiagonal → singular values, with stage 2 running in a selectable
+//! precision (the Fig. 3 protocol) and on a selectable backend.
+
+use crate::banded::dense::Dense;
+use crate::banded::storage::Banded;
+use crate::bulge::tiling::{reduce_to_bidiagonal, reduce_to_bidiagonal_parallel};
+use crate::config::TuneParams;
+use crate::pipeline::stage1::{dense_to_band_inplace, dense_to_band_inplace_parallel};
+use crate::pipeline::stage3::{bidiagonal_singular_values, bidiagonal_singular_values_parallel};
+use crate::scalar::Scalar;
+use crate::util::threadpool::ThreadPool;
+
+/// Options for a full three-stage run.
+#[derive(Clone, Debug)]
+pub struct SvdOptions {
+    /// Intermediate bandwidth produced by stage 1.
+    pub bandwidth: usize,
+    /// Bulge-chasing tuning (stage 2).
+    pub params: TuneParams,
+}
+
+impl Default for SvdOptions {
+    fn default() -> Self {
+        Self { bandwidth: 16, params: TuneParams { tpb: 32, tw: 8, max_blocks: 192 } }
+    }
+}
+
+/// Timing breakdown of a pipeline run.
+#[derive(Clone, Debug, Default)]
+pub struct StageTimings {
+    pub stage1: std::time::Duration,
+    pub stage2: std::time::Duration,
+    pub stage3: std::time::Duration,
+}
+
+impl StageTimings {
+    pub fn total(&self) -> std::time::Duration {
+        self.stage1 + self.stage2 + self.stage3
+    }
+}
+
+/// Full pipeline in uniform f64 (all three stages double precision).
+pub fn singular_values_3stage(a: &Dense<f64>, opts: &SvdOptions) -> (Vec<f64>, StageTimings) {
+    singular_values_3stage_mixed::<f64>(a, opts)
+}
+
+/// The paper's Fig. 3 protocol: stage 1 in f64, **stage 2 in precision
+/// `T`**, stage 3 in f64 — isolating the precision impact of the bulge
+/// chasing under test.
+pub fn singular_values_3stage_mixed<T: Scalar>(
+    a: &Dense<f64>,
+    opts: &SvdOptions,
+) -> (Vec<f64>, StageTimings) {
+    let mut times = StageTimings::default();
+    let bw = opts.bandwidth.min(a.rows.saturating_sub(1)).max(1);
+    let tw = opts.params.effective_tw(bw);
+
+    // Stage 1 (f64).
+    let t0 = std::time::Instant::now();
+    let mut work = a.clone();
+    dense_to_band_inplace(&mut work, bw);
+    let band64 = Banded::<f64>::from_dense(&work.data, work.rows, bw, tw);
+    times.stage1 = t0.elapsed();
+
+    // Stage 2 in precision T.
+    let t0 = std::time::Instant::now();
+    let mut band_t: Banded<T> = band64.convert();
+    let red = reduce_to_bidiagonal(&mut band_t, bw, &opts.params);
+    times.stage2 = t0.elapsed();
+
+    // Stage 3 (f64).
+    let t0 = std::time::Instant::now();
+    let d: Vec<f64> = red.diag.iter().map(|v| v.to_f64()).collect();
+    let e: Vec<f64> = red.superdiag.iter().map(|v| v.to_f64()).collect();
+    let sv = bidiagonal_singular_values(&d, &e);
+    times.stage3 = t0.elapsed();
+    (sv, times)
+}
+
+/// Threaded pipeline (all stages parallel over `pool`).
+pub fn singular_values_3stage_parallel(
+    a: &Dense<f64>,
+    opts: &SvdOptions,
+    pool: &ThreadPool,
+) -> (Vec<f64>, StageTimings) {
+    let mut times = StageTimings::default();
+    let bw = opts.bandwidth.min(a.rows.saturating_sub(1)).max(1);
+    let tw = opts.params.effective_tw(bw);
+
+    let t0 = std::time::Instant::now();
+    let mut work = a.clone();
+    dense_to_band_inplace_parallel(&mut work, bw, pool);
+    let mut band = Banded::<f64>::from_dense(&work.data, work.rows, bw, tw);
+    times.stage1 = t0.elapsed();
+
+    let t0 = std::time::Instant::now();
+    let red = reduce_to_bidiagonal_parallel(&mut band, bw, &opts.params, pool);
+    times.stage2 = t0.elapsed();
+
+    let t0 = std::time::Instant::now();
+    let sv = bidiagonal_singular_values_parallel(&red.diag, &red.superdiag, pool);
+    times.stage3 = t0.elapsed();
+    (sv, times)
+}
+
+/// Singular values of an already-banded matrix (stages 2+3 only) — the
+/// "direct applications" entry point (spectral methods for PDEs, §I).
+pub fn banded_singular_values<T: Scalar>(
+    banded: &Banded<T>,
+    bw: usize,
+    params: &TuneParams,
+) -> Vec<f64> {
+    let mut work = banded.clone();
+    let red = reduce_to_bidiagonal(&mut work, bw, params);
+    let d: Vec<f64> = red.diag.iter().map(|v| v.to_f64()).collect();
+    let e: Vec<f64> = red.superdiag.iter().map(|v| v.to_f64()).collect();
+    bidiagonal_singular_values(&d, &e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
+    use crate::pipeline::jacobi::jacobi_singular_values;
+    use crate::scalar::F16;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn pipeline_recovers_prescribed_spectrum_f64() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let n = 48;
+        let sigma = Spectrum::Arithmetic.sample(n, &mut rng);
+        let a = dense_with_spectrum(n, &sigma, &mut rng, n);
+        let opts = SvdOptions {
+            bandwidth: 6,
+            params: TuneParams { tpb: 32, tw: 3, max_blocks: 192 },
+        };
+        let (sv, _) = singular_values_3stage(&a, &opts);
+        for (got, want) in sv.iter().zip(sigma.iter()) {
+            assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_jacobi_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(32);
+        let n = 32;
+        let sigma = Spectrum::QuarterCircle.sample(n, &mut rng);
+        let a = dense_with_spectrum(n, &sigma, &mut rng, n);
+        let opts = SvdOptions {
+            bandwidth: 4,
+            params: TuneParams { tpb: 32, tw: 2, max_blocks: 192 },
+        };
+        let (sv, _) = singular_values_3stage(&a, &opts);
+        let oracle = jacobi_singular_values(&a);
+        for (got, want) in sv.iter().zip(oracle.iter()) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn mixed_precision_f32_has_expected_error_level() {
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        let n = 40;
+        let sigma = Spectrum::Arithmetic.sample(n, &mut rng);
+        let a = dense_with_spectrum(n, &sigma, &mut rng, n);
+        let opts = SvdOptions {
+            bandwidth: 8,
+            params: TuneParams { tpb: 32, tw: 4, max_blocks: 192 },
+        };
+        let (sv64, _) = singular_values_3stage_mixed::<f64>(&a, &opts);
+        let (sv32, _) = singular_values_3stage_mixed::<f32>(&a, &opts);
+        let (sv16, _) = singular_values_3stage_mixed::<F16>(&a, &opts);
+        use crate::pipeline::stage3::relative_sv_error;
+        let e64 = relative_sv_error(&sv64, &sigma);
+        let e32 = relative_sv_error(&sv32, &sigma);
+        let e16 = relative_sv_error(&sv16, &sigma);
+        assert!(e64 < 1e-12, "fp64 error {e64}");
+        assert!(e32 > e64 && e32 < 1e-4, "fp32 error {e32}");
+        assert!(e16 > e32 && e16 < 0.15, "fp16 error {e16}");
+    }
+
+    #[test]
+    fn parallel_pipeline_matches_sequential() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Xoshiro256::seed_from_u64(34);
+        let n = 40;
+        let sigma = Spectrum::Logarithmic.sample(n, &mut rng);
+        let a = dense_with_spectrum(n, &sigma, &mut rng, n);
+        let opts = SvdOptions {
+            bandwidth: 6,
+            params: TuneParams { tpb: 32, tw: 3, max_blocks: 192 },
+        };
+        let (s1, _) = singular_values_3stage(&a, &opts);
+        let (s2, _) = singular_values_3stage_parallel(&a, &opts, &pool);
+        for (a, b) in s1.iter().zip(s2.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn banded_entry_point_matches_full_pipeline_tail() {
+        let mut rng = Xoshiro256::seed_from_u64(35);
+        let (n, bw) = (36, 5);
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 192 };
+        let banded = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let sv = banded_singular_values(&banded, bw, &params);
+        // Oracle: densify and Jacobi.
+        let dense = Dense::from_vec(n, n, banded.to_dense());
+        let oracle = jacobi_singular_values(&dense);
+        for (got, want) in sv.iter().zip(oracle.iter()) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_tiling_choice_does_not_change_values() {
+        // The paper's claim: successive band reduction (any tw) leaves
+        // singular values intact.
+        let mut rng = Xoshiro256::seed_from_u64(36);
+        let (n, bw) = (40, 9);
+        let base = random_banded::<f64>(n, bw, 8, &mut rng);
+        let dense = base.to_dense();
+        let mut reference: Option<Vec<f64>> = None;
+        for tw in [1usize, 2, 4, 8] {
+            let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+            let banded = Banded::from_dense(&dense, n, bw, params.effective_tw(bw));
+            let sv = banded_singular_values(&banded, bw, &params);
+            match &reference {
+                None => reference = Some(sv),
+                Some(r) => {
+                    for (a, b) in sv.iter().zip(r.iter()) {
+                        assert!((a - b).abs() < 1e-9, "tw={tw}: {a} vs {b}");
+                    }
+                }
+            }
+        }
+    }
+}

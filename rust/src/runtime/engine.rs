@@ -1,0 +1,196 @@
+//! PJRT execution engine: load AOT HLO-text artifacts, compile them on
+//! the CPU PJRT client, and run banded reductions from the Rust hot path
+//! (python never executes at run time).
+//!
+//! Two execution modes, matching the two artifact kinds:
+//! - **per-cycle**: the coordinator drives one `execute` per kernel
+//!   launch ((storage, t) -> storage), keeping the storage buffer
+//!   device-resident between launches (`execute_b` chaining).
+//! - **fused**: one `execute` per bandwidth stage (the whole launch loop
+//!   is a `fori_loop` inside the artifact).
+
+use crate::banded::storage::Banded;
+use crate::error::{Error, Result};
+use crate::runtime::manifest::Manifest;
+use crate::scalar::Scalar;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Statistics of one PJRT-backed reduction.
+#[derive(Clone, Debug, Default)]
+pub struct PjrtRunStats {
+    pub launches: usize,
+    pub stages: usize,
+    pub compile_time: Duration,
+    pub exec_time: Duration,
+    /// Host<->device transfer time (initial upload + final download).
+    pub transfer_time: Duration,
+}
+
+/// A loaded variant: compiled executables for every stage.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cycle_exes: Vec<xla::PjRtLoadedExecutable>,
+    fused_exes: Vec<Option<xla::PjRtLoadedExecutable>>,
+    pub compile_time: Duration,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+        Error::Pjrt(format!("loading {}: {e}", path.display()))
+    })?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl PjrtEngine {
+    /// Load and compile every artifact of variant (n, bw, tw) from `dir`.
+    pub fn load(dir: &Path, n: usize, bw: usize, tw: usize) -> Result<Self> {
+        let manifest = Manifest::load(dir, n, bw, tw)?;
+        let client = xla::PjRtClient::cpu()?;
+        let t0 = Instant::now();
+        let mut cycle_exes = Vec::new();
+        let mut fused_exes = Vec::new();
+        for i in 0..manifest.stages.len() {
+            cycle_exes.push(compile(&client, &manifest.cycle_path(i))?);
+            fused_exes.push(match manifest.fused_path(i) {
+                Some(p) => Some(compile(&client, &p)?),
+                None => None,
+            });
+        }
+        let compile_time = t0.elapsed();
+        Ok(Self { client, manifest, cycle_exes, fused_exes, compile_time })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True if every stage has a fused whole-stage executable.
+    pub fn has_fused(&self) -> bool {
+        self.fused_exes.iter().all(|e| e.is_some())
+    }
+
+    fn upload(&self, storage: &[f32]) -> Result<xla::PjRtBuffer> {
+        let m = &self.manifest;
+        Ok(self
+            .client
+            .buffer_from_host_buffer::<f32>(storage, &[m.n, m.ld], None)?)
+    }
+
+    /// Unwrap the (single-output tuple) result of an execute call.
+    fn first_out(mut outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<xla::PjRtBuffer> {
+        let replica = outs
+            .pop()
+            .ok_or_else(|| Error::Pjrt("no replica outputs".into()))?;
+        replica
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Pjrt("no output buffers".into()))
+    }
+
+    fn download(&self, buf: &xla::PjRtBuffer, out: &mut Vec<f32>) -> Result<()> {
+        // Artifacts are lowered with return_tuple=False: the output is a
+        // bare f32[n, ld] array.
+        let lit = buf.to_literal_sync()?;
+        *out = lit.to_vec::<f32>()?;
+        Ok(())
+    }
+
+    /// Run the full reduction with per-launch executables, keeping the
+    /// storage buffer device-resident; the launch loop is the L3 hot
+    /// path. `on_launch` is invoked once per launch with (stage, t) —
+    /// the coordinator uses it for metrics/batch accounting.
+    pub fn reduce_per_cycle(
+        &self,
+        storage: &mut Vec<f32>,
+        mut on_launch: impl FnMut(usize, usize),
+    ) -> Result<PjrtRunStats> {
+        let mut stats = PjrtRunStats { stages: self.manifest.stages.len(), ..Default::default() };
+        let t0 = Instant::now();
+        let mut buf = self.upload(storage)?;
+        stats.transfer_time += t0.elapsed();
+
+        for (si, stage) in self.manifest.stages.iter().enumerate() {
+            let exe = &self.cycle_exes[si];
+            for t in 0..stage.launches {
+                let t0 = Instant::now();
+                let t_buf = self
+                    .client
+                    .buffer_from_host_buffer::<i32>(&[t as i32], &[], None)?;
+                let out = exe.execute_b::<xla::PjRtBuffer>(&[buf, t_buf])?;
+                buf = Self::first_out(out)?;
+                stats.exec_time += t0.elapsed();
+                stats.launches += 1;
+                on_launch(si, t);
+            }
+        }
+        let t0 = Instant::now();
+        self.download(&buf, storage)?;
+        stats.transfer_time += t0.elapsed();
+        Ok(stats)
+    }
+
+    /// Run the full reduction with fused whole-stage executables: one
+    /// PJRT call per stage (the optimized path).
+    pub fn reduce_fused(&self, storage: &mut Vec<f32>) -> Result<PjrtRunStats> {
+        if !self.has_fused() {
+            return Err(Error::Config(
+                "variant compiled without fused stage artifacts (aot.py --no-fused)".into(),
+            ));
+        }
+        let mut stats = PjrtRunStats { stages: self.manifest.stages.len(), ..Default::default() };
+        let t0 = Instant::now();
+        let mut buf = self.upload(storage)?;
+        stats.transfer_time += t0.elapsed();
+        for (si, stage) in self.manifest.stages.iter().enumerate() {
+            let exe = self.fused_exes[si].as_ref().unwrap();
+            let t0 = Instant::now();
+            let out = exe.execute_b::<xla::PjRtBuffer>(&[buf])?;
+            buf = Self::first_out(out)?;
+            stats.exec_time += t0.elapsed();
+            stats.launches += stage.launches;
+        }
+        let t0 = Instant::now();
+        self.download(&buf, storage)?;
+        stats.transfer_time += t0.elapsed();
+        Ok(stats)
+    }
+
+    /// Convenience: reduce a [`Banded`] matrix in place through PJRT.
+    /// The matrix must match the loaded variant's (n, bw, tw) layout.
+    pub fn reduce_banded<T: Scalar>(
+        &self,
+        a: &mut Banded<T>,
+        fused: bool,
+    ) -> Result<PjrtRunStats> {
+        let m = &self.manifest;
+        if a.n() != m.n || a.ld() != m.ld || a.kd_super() != m.kd_super {
+            return Err(Error::Config(format!(
+                "matrix layout (n={}, ld={}, kd_super={}) does not match artifact variant \
+                 (n={}, ld={}, kd_super={})",
+                a.n(),
+                a.ld(),
+                a.kd_super(),
+                m.n,
+                m.ld,
+                m.kd_super
+            )));
+        }
+        let mut flat = a.to_f32_flat();
+        let stats = if fused {
+            self.reduce_fused(&mut flat)?
+        } else {
+            self.reduce_per_cycle(&mut flat, |_, _| {})?
+        };
+        a.from_f32_flat(&flat);
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT round-trip tests live in `rust/tests/pjrt_roundtrip.rs` (they
+    // need artifacts built by `make artifacts`).
+}

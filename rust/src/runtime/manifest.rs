@@ -1,0 +1,196 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes one `manifest_n{n}_bw{bw}_tw{tw}.txt`
+//! per compiled variant: simple `key=value` tokens, one logical record
+//! per line (`stage …` lines describe per-stage artifacts). Kept as a
+//! line format rather than JSON so the runtime needs no JSON parser.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One bandwidth stage's artifacts.
+#[derive(Clone, Debug)]
+pub struct StageArtifact {
+    pub index: usize,
+    pub b: usize,
+    pub d: usize,
+    pub launches: usize,
+    pub slots: usize,
+    /// Per-launch executable file name ((storage, t) -> storage).
+    pub cycle_file: String,
+    /// Fused whole-stage executable file name (storage -> storage).
+    pub fused_file: Option<String>,
+}
+
+/// A compiled (n, bw, tw) variant.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub n: usize,
+    pub bw: usize,
+    pub tw: usize,
+    pub ld: usize,
+    pub kd_super: usize,
+    pub kd_sub: usize,
+    pub tpb: usize,
+    pub stages: Vec<StageArtifact>,
+    /// Directory the manifest was loaded from (for resolving files).
+    pub dir: PathBuf,
+}
+
+fn kv(tokens: &[&str]) -> HashMap<String, String> {
+    tokens
+        .iter()
+        .filter_map(|t| t.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn req(map: &HashMap<String, String>, key: &str) -> Result<usize> {
+    map.get(key)
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| Error::Config(format!("manifest missing/invalid key {key:?}")))
+}
+
+impl Manifest {
+    /// Parse manifest text (see aot.py for the writer).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut top: HashMap<String, String> = HashMap::new();
+        let mut stages = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let tokens: Vec<&str> = line.split_whitespace().collect();
+            if tokens[0] == "stage" {
+                let m = kv(&tokens[1..]);
+                stages.push(StageArtifact {
+                    index: req(&m, "index")?,
+                    b: req(&m, "b")?,
+                    d: req(&m, "d")?,
+                    launches: req(&m, "launches")?,
+                    slots: req(&m, "slots")?,
+                    cycle_file: m
+                        .get("cycle")
+                        .cloned()
+                        .ok_or_else(|| Error::Config("stage missing cycle file".into()))?,
+                    fused_file: m.get("fused").filter(|s| !s.is_empty()).cloned(),
+                });
+            } else {
+                top.extend(kv(&tokens));
+            }
+        }
+        let man = Manifest {
+            n: req(&top, "n")?,
+            bw: req(&top, "bw")?,
+            tw: req(&top, "tw")?,
+            ld: req(&top, "ld")?,
+            kd_super: req(&top, "kd_super")?,
+            kd_sub: req(&top, "kd_sub")?,
+            tpb: req(&top, "tpb")?,
+            stages,
+            dir: dir.to_path_buf(),
+        };
+        if man.stages.is_empty() {
+            return Err(Error::Config("manifest has no stages".into()));
+        }
+        // Cross-check against the Rust-side schedule (defense against
+        // python/rust drift).
+        let plan = crate::bulge::schedule::stage_plan(man.bw, man.tw);
+        if plan.len() != man.stages.len() {
+            return Err(Error::Config(format!(
+                "manifest stage count {} != schedule {}",
+                man.stages.len(),
+                plan.len()
+            )));
+        }
+        for (s, p) in man.stages.iter().zip(plan.iter()) {
+            if s.b != p.b || s.d != p.d || s.launches != p.total_launches(man.n) {
+                return Err(Error::Config(format!(
+                    "manifest stage {} (b={}, d={}, launches={}) disagrees with schedule \
+                     (b={}, d={}, launches={})",
+                    s.index,
+                    s.b,
+                    s.d,
+                    s.launches,
+                    p.b,
+                    p.d,
+                    p.total_launches(man.n)
+                )));
+            }
+        }
+        Ok(man)
+    }
+
+    /// Conventional manifest file name for a variant.
+    pub fn file_name(n: usize, bw: usize, tw: usize) -> String {
+        format!("manifest_n{n}_bw{bw}_tw{tw}.txt")
+    }
+
+    /// Load a variant manifest from an artifact directory.
+    pub fn load(dir: &Path, n: usize, bw: usize, tw: usize) -> Result<Self> {
+        let path = dir.join(Self::file_name(n, bw, tw));
+        let text = std::fs::read_to_string(&path).map_err(|_| Error::ArtifactMissing {
+            path: path.display().to_string(),
+            variant: format!("n={n} bw={bw} tw={tw}"),
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn cycle_path(&self, stage: usize) -> PathBuf {
+        self.dir.join(&self.stages[stage].cycle_file)
+    }
+
+    pub fn fused_path(&self, stage: usize) -> Option<PathBuf> {
+        self.stages[stage].fused_file.as_ref().map(|f| self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version=1
+n=96
+bw=6
+tw=3
+ld=13
+kd_super=9
+kd_sub=3
+dtype=f32
+tpb=32
+stages=2
+stage index=0 b=6 d=3 launches=274 slots=16 cycle=c0.hlo.txt fused=s0.hlo.txt
+stage index=1 b=3 d=2 launches=280 slots=31 cycle=c1.hlo.txt fused=
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!((m.n, m.bw, m.tw, m.ld), (96, 6, 3, 13));
+        assert_eq!(m.stages.len(), 2);
+        assert_eq!(m.stages[0].cycle_file, "c0.hlo.txt");
+        assert_eq!(m.stages[0].fused_file.as_deref(), Some("s0.hlo.txt"));
+        assert!(m.stages[1].fused_file.is_none());
+        assert_eq!(m.cycle_path(1), Path::new("/tmp/a").join("c1.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_schedule_mismatch() {
+        let bad = SAMPLE.replace("launches=274", "launches=999");
+        let err = Manifest::parse(&bad, Path::new(".")).unwrap_err();
+        assert!(err.to_string().contains("disagrees"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("n=4\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn file_name_convention_matches_aot() {
+        assert_eq!(Manifest::file_name(256, 8, 4), "manifest_n256_bw8_tw4.txt");
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client via
+//! the `xla` crate. See /opt/xla-example for the wiring this follows.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{PjrtEngine, PjrtRunStats};
+pub use manifest::{Manifest, StageArtifact};
+
+/// Default artifact directory, overridable via BSVD_ARTIFACTS.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("BSVD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

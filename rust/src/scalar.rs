@@ -1,0 +1,383 @@
+//! Precision abstraction: the paper's FP16 / FP32 / FP64 axis.
+//!
+//! The offline crate set has no `half`, so [`F16`] is a software IEEE
+//! binary16: storage is 16-bit, arithmetic converts through f32 (matching
+//! how GPU half-precision behaves for the scalar operations bulge-chasing
+//! performs — every op rounds back to binary16).
+
+use std::fmt;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Element type for all numeric kernels in the library.
+pub trait Scalar:
+    Copy
+    + Clone
+    + Send
+    + Sync
+    + PartialEq
+    + PartialOrd
+    + fmt::Debug
+    + fmt::Display
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + 'static
+{
+    /// Human-readable precision name (matches the paper's labels).
+    const NAME: &'static str;
+    /// Bytes per element (drives the cache-line utilization model).
+    const BYTES: usize;
+    /// Machine epsilon as f64.
+    const EPS: f64;
+
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+
+    #[inline]
+    fn abs(self) -> Self {
+        if self < Self::zero() {
+            -self
+        } else {
+            self
+        }
+    }
+
+    #[inline]
+    fn sqrt(self) -> Self {
+        Self::from_f64(self.to_f64().sqrt())
+    }
+
+    /// Fused multiply-add where the hardware provides it.
+    #[inline]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        self * a + b
+    }
+
+    #[inline]
+    fn is_finite(self) -> bool {
+        self.to_f64().is_finite()
+    }
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "fp64";
+    const BYTES: usize = 8;
+    const EPS: f64 = f64::EPSILON;
+
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f64::mul_add(self, a, b)
+    }
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "fp32";
+    const BYTES: usize = 4;
+    const EPS: f64 = f32::EPSILON as f64;
+
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f32::mul_add(self, a, b)
+    }
+}
+
+/// IEEE 754 binary16 with round-to-nearest-even conversions; arithmetic is
+/// performed in f32 and rounded back, mirroring GPU `half` behaviour.
+#[derive(Copy, Clone, PartialEq)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    /// Machine epsilon for binary16: 2^-10.
+    pub const EPSILON_F64: f64 = 9.765625e-4;
+
+    /// Convert from f32 with round-to-nearest-even (standard bit algorithm).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN
+            let payload = if man != 0 { 0x0200 } else { 0 };
+            return F16(sign | 0x7C00 | payload);
+        }
+        // Unbiased exponent.
+        let e = exp - 127;
+        if e > 15 {
+            // Overflow -> infinity.
+            return F16(sign | 0x7C00);
+        }
+        if e >= -14 {
+            // Normal half. 10 mantissa bits; round-to-nearest-even on the
+            // 13 dropped bits.
+            let half_exp = ((e + 15) as u16) << 10;
+            let half_man = (man >> 13) as u16;
+            let rest = man & 0x1FFF;
+            let mut h = sign | half_exp | half_man;
+            if rest > 0x1000 || (rest == 0x1000 && (half_man & 1) == 1) {
+                h = h.wrapping_add(1); // may carry into exponent: correct
+            }
+            return F16(h);
+        }
+        if e >= -25 {
+            // Subnormal half.
+            let full_man = man | 0x80_0000; // implicit bit
+            let shift = (-e - 1) as u32; // 14..24 -> shift 13+? derive:
+            // value = 1.man * 2^e ; half subnormal unit = 2^-24
+            // mantissa_half = round(1.man * 2^(e+24)) = full_man >> (23 - (e+24))
+            let sh = (23 - (e + 24)) as u32;
+            debug_assert!(sh >= 1 && sh <= 24, "sh={sh} shift={shift}");
+            let half_man = (full_man >> sh) as u16;
+            let rest = full_man & ((1u32 << sh) - 1);
+            let halfway = 1u32 << (sh - 1);
+            let mut h = sign | half_man;
+            if rest > halfway || (rest == halfway && (half_man & 1) == 1) {
+                h = h.wrapping_add(1);
+            }
+            return F16(h);
+        }
+        // Underflow to signed zero.
+        F16(sign)
+    }
+
+    /// Convert to f32 (exact).
+    pub fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h & 0x8000) << 16;
+        let exp = (h >> 10) & 0x1F;
+        let man = h & 0x3FF;
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign // signed zero
+            } else {
+                // Subnormal: value = man · 2⁻²⁴. Normalize man = 1.f · 2ᵖ
+                // (0 ≤ p ≤ 9) so the f32 exponent is p − 24 + 127.
+                let p = 31 - man.leading_zeros() as i32; // floor(log2(man)), man: u32
+                let m = (man << (10 - p)) & 0x3FF;
+                let exp32 = (p - 24 + 127) as u32;
+                sign | (exp32 << 23) | (m << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (man << 13) // Inf / NaN
+        } else {
+            let exp32 = exp + (127 - 15);
+            sign | (exp32 << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+}
+
+impl fmt::Debug for F16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "F16({})", self.to_f32())
+    }
+}
+
+impl fmt::Display for F16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+impl PartialOrd for F16 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.to_f32().partial_cmp(&other.to_f32())
+    }
+}
+
+macro_rules! f16_binop {
+    ($trait:ident, $method:ident, $op:tt) => {
+        impl $trait for F16 {
+            type Output = F16;
+            #[inline]
+            fn $method(self, rhs: F16) -> F16 {
+                F16::from_f32(self.to_f32() $op rhs.to_f32())
+            }
+        }
+    };
+}
+f16_binop!(Add, add, +);
+f16_binop!(Sub, sub, -);
+f16_binop!(Mul, mul, *);
+f16_binop!(Div, div, /);
+
+impl Neg for F16 {
+    type Output = F16;
+    #[inline]
+    fn neg(self) -> F16 {
+        F16(self.0 ^ 0x8000)
+    }
+}
+
+impl Scalar for F16 {
+    const NAME: &'static str = "fp16";
+    const BYTES: usize = 2;
+    const EPS: f64 = F16::EPSILON_F64;
+
+    #[inline]
+    fn zero() -> Self {
+        F16::ZERO
+    }
+    #[inline]
+    fn one() -> Self {
+        F16::ONE
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        F16::from_f32(x as f32)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        F16::from_f32(self.to_f32().sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.1035156e-5] {
+            let h = F16::from_f32(x);
+            assert_eq!(h.to_f32(), x, "roundtrip {x}");
+        }
+    }
+
+    #[test]
+    fn f16_known_bit_patterns() {
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF); // max finite
+        assert_eq!(F16::from_f32(f32::INFINITY).0, 0x7C00);
+        assert_eq!(F16::from_f32(1e9).0, 0x7C00); // overflow -> inf
+        assert_eq!(F16::from_f32(5.9604645e-8).0, 0x0001); // min subnormal
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10:
+        // must round to even mantissa (1.0).
+        let x = 1.0f32 + (2.0f32).powi(-11);
+        assert_eq!(F16::from_f32(x).0, 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: rounds to
+        // even -> 1+2^-9 (mantissa 2).
+        let y = 1.0f32 + 3.0 * (2.0f32).powi(-11);
+        assert_eq!(F16::from_f32(y).0, 0x3C02);
+    }
+
+    #[test]
+    fn f16_subnormal_roundtrip() {
+        for bits in [0x0001u16, 0x0010, 0x03FF, 0x8001, 0x83FF] {
+            let h = F16(bits);
+            let back = F16::from_f32(h.to_f32());
+            assert_eq!(back.0, bits, "bits {bits:04x}");
+        }
+    }
+
+    #[test]
+    fn f16_exhaustive_roundtrip_finite() {
+        // Every finite f16 must survive f16 -> f32 -> f16 exactly.
+        for bits in 0..=0xFFFFu16 {
+            let exp = (bits >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan
+            }
+            let h = F16(bits);
+            assert_eq!(F16::from_f32(h.to_f32()).0, bits, "bits {bits:04x}");
+        }
+    }
+
+    #[test]
+    fn f16_arithmetic_rounds() {
+        let a = F16::from_f32(1.0);
+        let b = F16::from_f32(2.0f32.powi(-12)); // too small to change 1.0
+        assert_eq!((a + b).to_f32(), 1.0);
+        let c = F16::from_f32(3.0);
+        assert_eq!((a + c).to_f32(), 4.0);
+        assert_eq!((c * c).to_f32(), 9.0);
+        assert_eq!((-c).to_f32(), -3.0);
+    }
+
+    #[test]
+    fn scalar_trait_consistency() {
+        fn probe<T: Scalar>() {
+            assert_eq!(T::zero().to_f64(), 0.0);
+            assert_eq!(T::one().to_f64(), 1.0);
+            let two = T::from_f64(2.0);
+            assert!((two.sqrt().to_f64() - std::f64::consts::SQRT_2).abs() < 2.0 * T::EPS);
+            assert_eq!((-two).abs().to_f64(), 2.0);
+            assert!(two.is_finite());
+        }
+        probe::<f64>();
+        probe::<f32>();
+        probe::<F16>();
+    }
+
+    #[test]
+    fn eps_ordering_matches_precision() {
+        assert!(f64::EPS < f32::EPS && f32::EPS < F16::EPS);
+        assert_eq!(F16::BYTES, 2);
+        assert_eq!(f32::BYTES, 4);
+        assert_eq!(f64::BYTES, 8);
+    }
+}

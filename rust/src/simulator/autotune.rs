@@ -1,0 +1,147 @@
+//! Auto-tuning (paper §V-E "a heuristic per architecture can be
+//! provided" / §VII "future work could integrate auto-tuning
+//! approaches").
+//!
+//! Searches the (TPB, TW, MaxBlocks) space against the hardware
+//! performance model for a given (architecture, precision, n, bw)
+//! workload — brute force over the paper's grid plus a local refinement
+//! pass, which is exactly the structure of the auto-tuners the paper
+//! cites [93].
+
+use crate::config::TuneParams;
+use crate::simulator::hw::GpuArch;
+use crate::simulator::model::simulate_reduction;
+
+/// Result of a tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub params: TuneParams,
+    pub modeled_seconds: f64,
+    /// Configurations evaluated.
+    pub evaluated: usize,
+}
+
+/// The paper's hardware-adapted starting heuristic: tilewidth = one full
+/// cache line of elements, generous TPB, MaxBlocks sized to the device's
+/// execution-unit count.
+pub fn heuristic_params(arch: &GpuArch, element_bytes: usize, bw: usize) -> TuneParams {
+    let tw = (arch.cache_line_bytes / element_bytes).clamp(1, bw.saturating_sub(1).max(1));
+    TuneParams {
+        tpb: 32,
+        tw,
+        // ~1.5 resident blocks per ALU slot keeps latency hiding high
+        // without starving per-block L1 (Table III's 192 on 96 slots).
+        max_blocks: (arch.alus * 3 / 2).max(32),
+    }
+}
+
+/// Brute-force grid search (the paper's §IV-a method: "3 parameters
+/// across 3–5 values") followed by a local refinement around the best
+/// grid point.
+pub fn autotune(arch: &GpuArch, element_bytes: usize, n: usize, bw: usize) -> TuneResult {
+    let mut evaluated = 0;
+    let mut eval = |p: TuneParams| -> f64 {
+        evaluated += 1;
+        simulate_reduction(arch, element_bytes, n, bw, &p).seconds
+    };
+
+    let tpb_grid = [8usize, 16, 32, 64, 128];
+    let tw_grid = [4usize, 8, 16, 32, 64];
+    let mb_grid = [
+        arch.alus / 2,
+        arch.alus,
+        arch.alus * 3 / 2,
+        arch.alus * 2,
+        arch.alus * 4,
+    ];
+    let mut best = (f64::INFINITY, heuristic_params(arch, element_bytes, bw));
+    for &tpb in &tpb_grid {
+        for &tw in &tw_grid {
+            if tw >= bw {
+                continue;
+            }
+            for &mb in &mb_grid {
+                let p = TuneParams { tpb, tw, max_blocks: mb.max(1) };
+                let s = eval(p);
+                if s < best.0 {
+                    best = (s, p);
+                }
+            }
+        }
+    }
+    // Local refinement: halve/double each parameter around the optimum.
+    let mut improved = true;
+    while improved {
+        improved = false;
+        let base = best.1;
+        let candidates = [
+            TuneParams { tpb: (base.tpb / 2).max(1), ..base },
+            TuneParams { tpb: base.tpb * 2, ..base },
+            TuneParams { tw: (base.tw / 2).max(1), ..base },
+            TuneParams { tw: (base.tw * 2).min(bw.saturating_sub(1).max(1)), ..base },
+            TuneParams { max_blocks: (base.max_blocks / 2).max(1), ..base },
+            TuneParams { max_blocks: base.max_blocks * 2, ..base },
+        ];
+        for p in candidates {
+            if p == base || p.tw >= bw {
+                continue;
+            }
+            let s = eval(p);
+            if s < best.0 * 0.999 {
+                best = (s, p);
+                improved = true;
+            }
+        }
+    }
+    TuneResult { params: best.1, modeled_seconds: best.0, evaluated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw;
+
+    #[test]
+    fn heuristic_matches_paper_cache_line_rule() {
+        assert_eq!(heuristic_params(&hw::H100, 4, 128).tw, 32); // fp32
+        assert_eq!(heuristic_params(&hw::H100, 8, 128).tw, 16); // fp64
+        assert_eq!(heuristic_params(&hw::H100, 2, 128).tw, 64); // fp16
+        // Clamped by the bandwidth.
+        assert_eq!(heuristic_params(&hw::H100, 4, 16).tw, 15);
+    }
+
+    #[test]
+    fn autotune_beats_or_matches_a_bad_config() {
+        let bad = TuneParams { tpb: 8, tw: 4, max_blocks: 24 };
+        let bad_time = simulate_reduction(&hw::H100, 4, 32768, 128, &bad).seconds;
+        let tuned = autotune(&hw::H100, 4, 32768, 128);
+        assert!(tuned.modeled_seconds < bad_time, "{tuned:?} vs bad {bad_time}");
+        assert!(tuned.evaluated > 50);
+    }
+
+    #[test]
+    fn autotune_finds_cache_line_tilewidth_at_scale() {
+        // The tuned tilewidth at the paper's sweep size must land on the
+        // cache-line optimum (32 for fp32, 16 for fp64).
+        let fp32 = autotune(&hw::H100, 4, 65536, 128);
+        assert_eq!(fp32.params.tw, 32, "{fp32:?}");
+        let fp64 = autotune(&hw::H100, 8, 65536, 128);
+        assert_eq!(fp64.params.tw, 16, "{fp64:?}");
+    }
+
+    #[test]
+    fn autotune_is_no_worse_than_the_heuristic() {
+        for arch in [&hw::H100, &hw::MI300X, &hw::PVC1100] {
+            let h = heuristic_params(arch, 4, 64);
+            let h_time = simulate_reduction(arch, 4, 16384, 64, &h).seconds;
+            let tuned = autotune(arch, 4, 16384, 64);
+            assert!(
+                tuned.modeled_seconds <= h_time * 1.0001,
+                "{}: tuned {} vs heuristic {}",
+                arch.name,
+                tuned.modeled_seconds,
+                h_time
+            );
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! GPU hardware characteristics — the paper's Table II, plus the derived
+//! peaks the performance model needs.
+//!
+//! Only *public* numbers are encoded (the same sources the paper cites:
+//! vendor datasheets and the chips-and-cheese microbenchmark series).
+//! Fields the table does not give (L1/L2 peak bandwidth) are derived from
+//! latency, width and unit counts — deliberately, because the paper's
+//! headline hardware finding is that *latency-linked bandwidth*, not
+//! cache size, predicts performance.
+
+/// One GPU architecture (a row of Table II).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuArch {
+    pub name: &'static str,
+    pub vendor: &'static str,
+    /// L1 / shared memory per execution unit (KB). Table II row 2.
+    pub l1_per_unit_kb: f64,
+    /// Device-level L2 (or L2.5 / Infinity Cache) capacity (MB).
+    pub l2_mb: f64,
+    /// DRAM bandwidth (TB/s).
+    pub dram_tbs: f64,
+    /// L1 latency (cycles); Table II "N.A." → vendor-class estimate.
+    pub l1_lat_cycles: f64,
+    /// L2 latency (cycles).
+    pub l2_lat_cycles: f64,
+    /// Execution units (SMs / CUs / Xe cores).
+    pub units: usize,
+    /// Concurrent block slots for the occupancy model (Table I/II "ALUs":
+    /// SMs × warp schedulers on NVIDIA, CUs on AMD, Xe cores on Intel).
+    pub alus: usize,
+    /// Device memory (GB).
+    pub mem_gb: f64,
+    /// Boost clock (GHz).
+    pub clock_ghz: f64,
+    /// Cache line (bytes) — 128 on every architecture benchmarked.
+    pub cache_line_bytes: usize,
+    /// Register file per execution unit (KB).
+    pub reg_per_unit_kb: f64,
+    /// Sustained in-flight L1 lines per unit (memory-level parallelism;
+    /// microbenchmark-derived — PVC sustains far less than its caches'
+    /// size suggests, which is the paper's §V-E finding).
+    pub mlp_l1: f64,
+    /// Sustained in-flight L2 lines per unit.
+    pub mlp_l2: f64,
+}
+
+impl GpuArch {
+    /// Aggregate L1 bandwidth (bytes/s): each unit sources cache lines
+    /// pipelined over `l1_lat` with per-unit memory-level parallelism —
+    /// the latency×concurrency bandwidth law (Little's law).
+    pub fn l1_peak_bytes_per_s(&self) -> f64 {
+        self.units as f64 * self.mlp_l1 * self.cache_line_bytes as f64 * self.clock_ghz * 1e9
+            / self.l1_lat_cycles
+    }
+
+    /// Aggregate L2 bandwidth (bytes/s), same law with device-level MLP.
+    pub fn l2_peak_bytes_per_s(&self) -> f64 {
+        self.units as f64 * self.mlp_l2 * self.cache_line_bytes as f64 * self.clock_ghz * 1e9
+            / self.l2_lat_cycles
+    }
+
+    pub fn dram_peak_bytes_per_s(&self) -> f64 {
+        self.dram_tbs * 1e12
+    }
+
+    /// Peak FP32 throughput (FLOP/s) — vector-ALU estimate: 128 lanes ×
+    /// 2 (FMA) per unit per clock.
+    pub fn fp32_peak_flops(&self) -> f64 {
+        self.units as f64 * 128.0 * 2.0 * self.clock_ghz * 1e9
+    }
+
+    /// Kernel-launch overhead (seconds): back-to-back launches in one
+    /// stream overlap the CPU-side cost, leaving the device-side gap.
+    pub fn launch_overhead_s(&self) -> f64 {
+        0.5e-6
+    }
+}
+
+/// NVIDIA A100 (SXM). 108 SMs × 4 warp schedulers.
+pub const A100: GpuArch = GpuArch {
+    name: "A100",
+    vendor: "NVIDIA",
+    l1_per_unit_kb: 192.0,
+    l2_mb: 40.0,
+    dram_tbs: 2.0,
+    l1_lat_cycles: 40.0,
+    l2_lat_cycles: 200.0,
+    units: 108,
+    alus: 108 * 4,
+    mem_gb: 80.0,
+    clock_ghz: 1.41,
+    cache_line_bytes: 128,
+    reg_per_unit_kb: 256.0,
+    mlp_l1: 8.0,
+    mlp_l2: 16.0,
+};
+
+/// NVIDIA H100 (SXM).
+pub const H100: GpuArch = GpuArch {
+    name: "H100",
+    vendor: "NVIDIA",
+    l1_per_unit_kb: 256.0,
+    l2_mb: 50.0,
+    dram_tbs: 3.35,
+    l1_lat_cycles: 30.0,
+    l2_lat_cycles: 300.0,
+    units: 132,
+    alus: 132 * 4,
+    mem_gb: 80.0,
+    clock_ghz: 1.785,
+    cache_line_bytes: 128,
+    reg_per_unit_kb: 256.0,
+    mlp_l1: 8.0,
+    mlp_l2: 16.0,
+};
+
+/// NVIDIA RTX 4060 (Ada, consumer) — the Table III profiling target.
+/// Table II gives no latencies; Ada-class estimates (chips-and-cheese).
+pub const RTX4060: GpuArch = GpuArch {
+    name: "RTX4060",
+    vendor: "NVIDIA",
+    l1_per_unit_kb: 128.0,
+    l2_mb: 32.0,
+    dram_tbs: 0.28,
+    l1_lat_cycles: 35.0,
+    l2_lat_cycles: 280.0,
+    units: 24,
+    alus: 24 * 4,
+    mem_gb: 8.0,
+    clock_ghz: 2.46,
+    cache_line_bytes: 128,
+    reg_per_unit_kb: 256.0,
+    mlp_l1: 8.0,
+    mlp_l2: 16.0,
+};
+
+/// AMD MI250X (one GCD as scheduled by the paper's runs).
+pub const MI250X: GpuArch = GpuArch {
+    name: "MI250X",
+    vendor: "AMD",
+    l1_per_unit_kb: 16.0,
+    l2_mb: 4.0,
+    dram_tbs: 3.2,
+    l1_lat_cycles: 120.0,
+    l2_lat_cycles: 230.0,
+    units: 220,
+    alus: 220,
+    mem_gb: 128.0,
+    clock_ghz: 1.7,
+    cache_line_bytes: 128,
+    reg_per_unit_kb: 512.0,
+    mlp_l1: 8.0,
+    mlp_l2: 12.0,
+};
+
+/// AMD MI300X (CDNA3; 256 MB Infinity Cache as "L2.5").
+pub const MI300X: GpuArch = GpuArch {
+    name: "MI300X",
+    vendor: "AMD",
+    l1_per_unit_kb: 32.0,
+    l2_mb: 256.0,
+    dram_tbs: 5.3,
+    l1_lat_cycles: 120.0,
+    l2_lat_cycles: 200.0,
+    units: 304,
+    alus: 304,
+    mem_gb: 192.0,
+    clock_ghz: 2.1,
+    cache_line_bytes: 128,
+    reg_per_unit_kb: 512.0,
+    mlp_l1: 8.0,
+    mlp_l2: 16.0,
+};
+
+/// Intel Data Center GPU Max 1100 (Ponte Vecchio).
+pub const PVC1100: GpuArch = GpuArch {
+    name: "PVC1100",
+    vendor: "Intel",
+    l1_per_unit_kb: 512.0,
+    l2_mb: 108.0,
+    dram_tbs: 1.2,
+    l1_lat_cycles: 60.0,
+    l2_lat_cycles: 420.0,
+    units: 56,
+    alus: 56,
+    mem_gb: 48.0,
+    clock_ghz: 1.55,
+    cache_line_bytes: 128,
+    reg_per_unit_kb: 512.0,
+    mlp_l1: 4.0,
+    mlp_l2: 6.0,
+};
+
+/// Apple M1 (integrated, 8-core GPU; 67 GB/s shared LPDDR).
+pub const M1: GpuArch = GpuArch {
+    name: "M1",
+    vendor: "Apple",
+    l1_per_unit_kb: 128.0,
+    l2_mb: 12.0,
+    dram_tbs: 0.067,
+    l1_lat_cycles: 50.0,
+    l2_lat_cycles: 250.0,
+    units: 8,
+    alus: 8 * 16,
+    mem_gb: 16.0,
+    clock_ghz: 1.27,
+    cache_line_bytes: 128,
+    reg_per_unit_kb: 208.0,
+    mlp_l1: 4.0,
+    mlp_l2: 8.0,
+};
+
+/// All Table II architectures.
+pub fn all_archs() -> Vec<GpuArch> {
+    vec![
+        A100.clone(),
+        H100.clone(),
+        RTX4060.clone(),
+        MI250X.clone(),
+        MI300X.clone(),
+        PVC1100.clone(),
+        M1.clone(),
+    ]
+}
+
+/// Look up an architecture by (case-insensitive) name.
+pub fn arch_by_name(name: &str) -> Option<GpuArch> {
+    let lower = name.to_ascii_lowercase();
+    all_archs().into_iter().find(|a| a.name.to_ascii_lowercase() == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ii_values_spotcheck() {
+        assert_eq!(H100.l1_per_unit_kb, 256.0);
+        assert_eq!(A100.l2_mb, 40.0);
+        assert_eq!(MI300X.l2_mb, 256.0);
+        assert_eq!(PVC1100.l2_lat_cycles, 420.0);
+        assert_eq!(MI250X.units, 220);
+        assert_eq!(M1.dram_tbs, 0.067);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(arch_by_name("h100").unwrap().name, "H100");
+        assert_eq!(arch_by_name("MI300X").unwrap().vendor, "AMD");
+        assert!(arch_by_name("B200").is_none());
+    }
+
+    #[test]
+    fn h100_outclasses_a100_on_derived_peaks() {
+        assert!(H100.l1_peak_bytes_per_s() > A100.l1_peak_bytes_per_s());
+        assert!(H100.dram_peak_bytes_per_s() > A100.dram_peak_bytes_per_s());
+    }
+
+    #[test]
+    fn pvc_has_low_derived_l2_bandwidth_despite_big_cache() {
+        // The paper's §V-E insight: PVC's caches are the largest but the
+        // latency-derived bandwidth is the worst of the data-center parts.
+        assert!(PVC1100.l2_mb > H100.l2_mb);
+        assert!(PVC1100.l2_peak_bytes_per_s() < H100.l2_peak_bytes_per_s() / 4.0);
+    }
+
+    #[test]
+    fn derived_bandwidth_orders_of_magnitude_sane() {
+        // H100 L1 aggregate should be tens of TB/s, L2 single-digit TB/s.
+        let l1 = H100.l1_peak_bytes_per_s() / 1e12;
+        let l2 = H100.l2_peak_bytes_per_s() / 1e12;
+        assert!(l1 > 5.0 && l1 < 100.0, "L1 {l1} TB/s");
+        assert!(l2 > 1.0 && l2 < 30.0, "L2 {l2} TB/s");
+    }
+}

@@ -1,0 +1,26 @@
+//! GPU hardware performance model.
+//!
+//! This testbed has no GPU (see DESIGN.md §Hardware-Adaptation): the
+//! paper's performance claims are reproduced through an analytical model
+//! whose inputs are the public Table II hardware characteristics and
+//! whose mechanics follow the paper's own §III-C/D/E reasoning — cache
+//! line utilization of the tilewidth, L1-slice fitting, register spill to
+//! L2, latency×concurrency bandwidth, occupancy eq. (1), and software
+//! loop unrolling past the MaxBlocks limit.
+//!
+//! - [`hw`]        — Table II architectures (A100…M1) + derived peaks.
+//! - [`model`]     — per-launch cost, stage/reduction simulation.
+//! - [`profile`]   — NSight-style counters (Table III) + geam reference.
+//! - [`occupancy`] — eq. (1) / Table I.
+
+pub mod autotune;
+pub mod hw;
+pub mod model;
+pub mod occupancy;
+pub mod profile;
+
+pub use autotune::{autotune, heuristic_params, TuneResult};
+pub use hw::{all_archs, arch_by_name, GpuArch};
+pub use model::{launch_cost, simulate_reduction, simulate_stage, LaunchCost, SimReport};
+pub use occupancy::{full_occupancy_n, occupancy_fraction, table1};
+pub use profile::{profile_geam_reference, profile_kernel, ProfileMetrics};

@@ -1,0 +1,364 @@
+//! Analytical launch-cost model for the bulge-chasing kernel
+//! (paper §III-B/C/D/E).
+//!
+//! Everything is derived from algorithm-level access counts (the same
+//! counts the paper reasons with) and the Table II hardware numbers:
+//!
+//! - A task (thread block) touches a `(1+b+d) × (d+1)` tile twice (right
+//!   op + left op), read + write, in `passes` sweeps (gather, apply,
+//!   write-back — Alg. 2's loop structure).
+//! - Cache-line utilization of the short (left-op) column segments is
+//!   `min(1, (d+1)·es / line)` — the mechanism behind the paper's
+//!   "tilewidth = one full cache line" optimum (32 FP32 / 16 FP64).
+//! - The first pass streams from L2; later passes hit L1 for the
+//!   fraction of the tile that fits the block's L1 slice; register
+//!   spills (per-thread row exceeding the register budget) re-route
+//!   traffic to L2 (§III-B).
+//! - Concurrency = min(blocks, MaxBlocks, ALU slots); excess blocks
+//!   serialize ("software loop unrolling", §III-C-c). MaxBlocks is the
+//!   device-wide cap (Table III uses 48–192 on a 24-SM part).
+//! - A launch costs max(latency term, per-level bandwidth terms, compute
+//!   term) + launch overhead; a reduction sums over the launch schedule
+//!   of the stage plan (closed forms, no numerics).
+
+use crate::bulge::schedule::{stage_plan, Stage};
+use crate::config::TuneParams;
+use crate::simulator::hw::GpuArch;
+
+/// L1 passes over the tile per op: gather, HH dot, apply, write-back,
+/// plus vector re-broadcasts — each element is touched repeatedly through
+/// L1/shared while only the first touch reaches L2 (§III-E: "our kernel
+/// reuses the same elements multiple times through L1/L2 caching").
+const PASSES: f64 = 6.0;
+
+/// Cost and traffic breakdown of a single kernel launch.
+#[derive(Clone, Debug, Default)]
+pub struct LaunchCost {
+    pub seconds: f64,
+    pub dram_bytes: f64,
+    pub l2_bytes: f64,
+    pub l1_bytes: f64,
+    pub flops: f64,
+    /// Which term bounded the launch ("latency"|"l1"|"l2"|"dram"|"compute").
+    pub bound_by: &'static str,
+    /// Concurrently executing blocks.
+    pub active_blocks: usize,
+    /// Serialization multiplier (ceil(blocks / active)).
+    pub unroll: usize,
+}
+
+/// Aggregate simulation result for a full reduction (or one stage).
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub seconds: f64,
+    pub launches: usize,
+    pub tasks: usize,
+    pub dram_bytes: f64,
+    pub l2_bytes: f64,
+    pub l1_bytes: f64,
+    pub flops: f64,
+}
+
+impl SimReport {
+    pub fn add_launch(&mut self, c: &LaunchCost) {
+        self.seconds += c.seconds;
+        self.launches += 1;
+        self.dram_bytes += c.dram_bytes;
+        self.l2_bytes += c.l2_bytes;
+        self.l1_bytes += c.l1_bytes;
+        self.flops += c.flops;
+    }
+
+    pub fn merge(&mut self, o: &SimReport) {
+        self.seconds += o.seconds;
+        self.launches += o.launches;
+        self.tasks += o.tasks;
+        self.dram_bytes += o.dram_bytes;
+        self.l2_bytes += o.l2_bytes;
+        self.l1_bytes += o.l1_bytes;
+        self.flops += o.flops;
+    }
+}
+
+/// Model one kernel launch executing `blocks` bulge tasks of stage
+/// (b, d) in element size `es` with tuning `(tpb, max_blocks)`.
+pub fn launch_cost(
+    arch: &GpuArch,
+    es: usize,
+    stage: &Stage,
+    tpb: usize,
+    max_blocks: usize,
+    blocks: usize,
+) -> LaunchCost {
+    if blocks == 0 {
+        return LaunchCost { seconds: arch.launch_overhead_s(), ..Default::default() };
+    }
+    let b = stage.b as f64;
+    let d = stage.d as f64;
+    let es_f = es as f64;
+    let line = arch.cache_line_bytes as f64;
+    let tpb_f = tpb.max(1) as f64;
+
+    // --- Per-task element counts ------------------------------------
+    let tile_elems = (1.0 + b + d) * (d + 1.0);
+    let task_elems = 2.0 * tile_elems; // right + left op
+
+    // Cache-line utilization: long segments (right op, 1+b+d elements)
+    // vs short segments (left op, d+1 elements — the TW-sensitive term).
+    let u_right = ((1.0 + b + d) * es_f / line).min(1.0);
+    let u_left = ((d + 1.0) * es_f / line).min(1.0);
+    // Line-padded bytes for one read+write pass over both tiles.
+    let pass_bytes = 2.0 * tile_elems * es_f * (1.0 / u_right + 1.0 / u_left);
+
+    // --- Concurrency ---------------------------------------------------
+    // MaxBlocks is device-wide; per-unit residency drives L1 sharing.
+    let blocks_per_unit = max_blocks.div_ceil(arch.units).max(1);
+    // Register budget per thread; a spilled row re-routes to L2.
+    let reg_bytes_per_thread =
+        arch.reg_per_unit_kb * 1024.0 / (blocks_per_unit as f64 * tpb_f);
+    let row_bytes = (d + 1.0) * es_f;
+    let spill = (row_bytes / reg_bytes_per_thread - 1.0).clamp(0.0, 1.0);
+    // Resident blocks: bounded by the MaxBlocks cap (residency beyond
+    // the ALU count is normal — resident warps are what hide latency).
+    let resident = blocks.min(max_blocks).max(1);
+    let unroll = blocks.div_ceil(resident);
+    // Warps per unit drive achieved-bandwidth efficiency (latency
+    // hiding): eff = w/(w+2.5) saturates around 8–10 warps/unit, the
+    // regime Table III's best configurations sit in.
+    let warps_per_unit = resident as f64 / arch.units as f64 * tpb_f / 32.0;
+    let eff = (warps_per_unit / (warps_per_unit + 2.5)).max(0.05);
+    let active = resident;
+
+    // --- Traffic by level ----------------------------------------------
+    // L1 sees every pass.
+    let l1_bytes = blocks as f64 * pass_bytes * PASSES;
+    // First pass streams from L2; later passes hit L1 for the fitting
+    // fraction of the working set (tile + Householder vector).
+    let l1_slice = arch.l1_per_unit_kb * 1024.0 / blocks_per_unit as f64;
+    let ws_bytes = tile_elems * es_f + (d + 1.0) * es_f;
+    let fit = (l1_slice / ws_bytes).min(1.0);
+    let l2_factor = 1.0 + (PASSES - 1.0) * (1.0 - fit) + (PASSES - 1.0) * spill;
+    let l2_bytes = blocks as f64 * pass_bytes * l2_factor;
+    // DRAM: the chase advances b columns per cycle — only the fresh
+    // window streams from DRAM while the overlap stays in L2 (if the
+    // per-launch footprint fits; beyond capacity everything re-streams).
+    let window_bytes = 2.0 * b * (d + 1.0) * es_f / u_left;
+    let l2_capacity = arch.l2_mb * 1e6;
+    let resident = blocks as f64 * tile_elems * es_f;
+    let l2_hit = if resident <= l2_capacity { 1.0 } else { l2_capacity / resident };
+    let dram_bytes = blocks as f64 * (window_bytes + (1.0 - l2_hit) * pass_bytes);
+
+    // --- Flops -----------------------------------------------------------
+    let flops = blocks as f64 * (4.0 * task_elems + 10.0 * (d + 1.0));
+
+    // --- Time terms -------------------------------------------------------
+    // Serialization ("software loop unrolling"): only `active` blocks run
+    // at a time, so the launch executes `unroll` batches back-to-back —
+    // every term is per-batch, multiplied by `unroll`.
+    let clock_hz = arch.clock_ghz * 1e9;
+    let batch = active as f64 / blocks as f64;
+    // Latency term: ceil((1+b+d)/tpb) dependent chunk round-trips per op,
+    // each an L2-latency access plus d+1 pipelined lanes of math.
+    let chunks = ((1.0 + b + d) / tpb_f).ceil();
+    let trip_cycles = arch.l2_lat_cycles + (d + 1.0);
+    let t_latency = 2.0 * chunks * trip_cycles / clock_hz;
+    let t_l1 = batch * l1_bytes / (arch.l1_peak_bytes_per_s() * eff);
+    let t_l2 = batch * l2_bytes / (arch.l2_peak_bytes_per_s() * eff);
+    let t_dram = batch * dram_bytes / (arch.dram_peak_bytes_per_s() * eff);
+    // Element-size-aware vector throughput (fp16 ≈ 2× fp32; fp64 ≈ ½).
+    let t_compute =
+        batch * flops / (arch.fp32_peak_flops() * (4.0 / es_f).clamp(0.5, 2.0));
+
+    let mut per_batch = t_latency;
+    let mut bound_by = "latency";
+    for (t, name) in [
+        (t_l1, "l1"),
+        (t_l2, "l2"),
+        (t_dram, "dram"),
+        (t_compute, "compute"),
+    ] {
+        if t > per_batch {
+            per_batch = t;
+            bound_by = name;
+        }
+    }
+    let seconds = unroll as f64 * per_batch;
+    LaunchCost {
+        seconds: seconds + arch.launch_overhead_s(),
+        dram_bytes,
+        l2_bytes,
+        l1_bytes,
+        flops,
+        bound_by,
+        active_blocks: active,
+        unroll,
+    }
+}
+
+/// Simulate one full stage (all launches of the 3-cycle schedule).
+pub fn simulate_stage(
+    arch: &GpuArch,
+    es: usize,
+    n: usize,
+    stage: &Stage,
+    tpb: usize,
+    max_blocks: usize,
+) -> SimReport {
+    let mut report = SimReport::default();
+    // tasks_at_count is O(1) (closed form in schedule.rs), so the plain
+    // per-launch loop is already fast; cache launch costs per distinct
+    // block count (counts repeat across the plateau and ramps).
+    let total = stage.total_launches(n);
+    let mut cache: std::collections::HashMap<usize, LaunchCost> = std::collections::HashMap::new();
+    for t in 0..total {
+        let blocks = stage.tasks_at_count(n, t);
+        let cost = cache
+            .entry(blocks)
+            .or_insert_with(|| launch_cost(arch, es, stage, tpb, max_blocks, blocks));
+        report.tasks += blocks;
+        report.launches += 1;
+        report.seconds += cost.seconds;
+        report.dram_bytes += cost.dram_bytes;
+        report.l2_bytes += cost.l2_bytes;
+        report.l1_bytes += cost.l1_bytes;
+        report.flops += cost.flops;
+    }
+    report
+}
+
+/// Simulate a full banded→bidiagonal reduction under the stage plan.
+pub fn simulate_reduction(
+    arch: &GpuArch,
+    es: usize,
+    n: usize,
+    bw: usize,
+    params: &TuneParams,
+) -> SimReport {
+    let tw = params.effective_tw(bw);
+    let mut report = SimReport::default();
+    for stage in stage_plan(bw, tw) {
+        let s = simulate_stage(arch, es, n, &stage, params.tpb, params.max_blocks);
+        report.merge(&s);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw;
+
+    fn params(tpb: usize, tw: usize, mb: usize) -> TuneParams {
+        TuneParams { tpb, tw, max_blocks: mb }
+    }
+
+    #[test]
+    fn larger_matrices_take_longer() {
+        let p = params(32, 32, 192);
+        let t1 = simulate_reduction(&hw::H100, 4, 4096, 64, &p).seconds;
+        let t2 = simulate_reduction(&hw::H100, 4, 16384, 64, &p).seconds;
+        assert!(t2 > 2.0 * t1, "{t1} vs {t2}");
+    }
+
+    #[test]
+    fn runtime_scales_roughly_linearly_with_bandwidth() {
+        // Paper abstract: "performance scales linearly with the matrix
+        // bandwidth".
+        let p = params(32, 32, 192);
+        let n = 8192;
+        let t64 = simulate_reduction(&hw::H100, 4, n, 64, &p).seconds;
+        let t128 = simulate_reduction(&hw::H100, 4, n, 128, &p).seconds;
+        let t256 = simulate_reduction(&hw::H100, 4, n, 256, &p).seconds;
+        let r1 = t128 / t64;
+        let r2 = t256 / t128;
+        assert!(r1 > 1.2 && r1 < 4.0, "r1={r1}");
+        assert!(r2 > 1.2 && r2 < 4.0, "r2={r2}");
+    }
+
+    #[test]
+    fn fp32_optimal_tilewidth_is_32() {
+        // Fig. 4 headline: cache-line tilewidth (128 B / 4 B = 32) wins
+        // at the paper's 65k hyperparameter-sweep size.
+        let n = 65536;
+        let t = |tw| simulate_reduction(&hw::H100, 4, n, 128, &params(32, tw, 192)).seconds;
+        let (t16, t32, t64) = (t(16), t(32), t(64));
+        assert!(t32 < t16, "tw=32 ({t32}) should beat tw=16 ({t16})");
+        assert!(t32 < t64, "tw=32 ({t32}) should beat tw=64 ({t64})");
+    }
+
+    #[test]
+    fn fp64_optimal_tilewidth_is_16() {
+        let n = 65536;
+        let t = |tw| simulate_reduction(&hw::H100, 8, n, 128, &params(32, tw, 192)).seconds;
+        let (t8, t16, t32) = (t(8), t(16), t(32));
+        assert!(t16 < t8, "tw=16 ({t16}) should beat tw=8 ({t8})");
+        assert!(t16 < t32, "tw=16 ({t16}) should beat tw=32 ({t32})");
+    }
+
+    #[test]
+    fn h100_beats_a100_and_mi300x_beats_mi250x() {
+        // Fig. 5: architecture generation gains.
+        let p = params(32, 32, 192);
+        let n = 16384;
+        let h100 = simulate_reduction(&hw::H100, 4, n, 64, &p).seconds;
+        let a100 = simulate_reduction(&hw::A100, 4, n, 64, &p).seconds;
+        assert!(a100 > 1.05 * h100, "A100 {a100} vs H100 {h100}");
+        let mi300 = simulate_reduction(&hw::MI300X, 4, n, 64, &p).seconds;
+        let mi250 = simulate_reduction(&hw::MI250X, 4, n, 64, &p).seconds;
+        assert!(mi250 > 1.1 * mi300, "MI250X {mi250} vs MI300X {mi300}");
+    }
+
+    #[test]
+    fn pvc_is_an_order_of_magnitude_behind_h100() {
+        // Fig. 7 / §V-E: PVC far slower despite larger caches.
+        let p = params(32, 32, 192);
+        let n = 32768;
+        let h100 = simulate_reduction(&hw::H100, 4, n, 32, &p).seconds;
+        let pvc = simulate_reduction(&hw::PVC1100, 4, n, 32, &p).seconds;
+        let ratio = pvc / h100;
+        assert!(ratio > 4.0, "PVC/H100 = {ratio}");
+    }
+
+    #[test]
+    fn more_blocks_and_threads_help_at_scale() {
+        // Fig. 4: larger max_blocks / tpb generally faster (tilewidth at
+        // its optimum).
+        let n = 32768;
+        let slow = simulate_reduction(&hw::H100, 4, n, 128, &params(8, 32, 24)).seconds;
+        let fast = simulate_reduction(&hw::H100, 4, n, 128, &params(64, 32, 192)).seconds;
+        assert!(fast < slow, "fast {fast} vs slow {slow}");
+    }
+
+    #[test]
+    fn launch_cost_reports_positive_traffic() {
+        let stage = Stage::new(64, 32);
+        let c = launch_cost(&hw::RTX4060, 4, &stage, 32, 192, 96);
+        assert!(c.seconds > 0.0);
+        assert!(c.dram_bytes > 0.0 && c.l1_bytes > c.dram_bytes);
+        assert!(c.active_blocks >= 1 && c.unroll >= 1);
+    }
+
+    #[test]
+    fn zero_blocks_costs_only_overhead() {
+        let stage = Stage::new(8, 4);
+        let c = launch_cost(&hw::H100, 4, &stage, 32, 192, 0);
+        assert_eq!(c.seconds, hw::H100.launch_overhead_s());
+    }
+
+    #[test]
+    fn grouped_stage_simulation_matches_naive_sum() {
+        let stage = Stage::new(8, 4);
+        let n = 512;
+        let grouped = simulate_stage(&hw::H100, 4, n, &stage, 32, 192);
+        // Naive per-launch sum.
+        let mut naive = SimReport::default();
+        for t in 0..stage.total_launches(n) {
+            let blocks = stage.tasks_at_count(n, t);
+            naive.tasks += blocks;
+            naive.add_launch(&launch_cost(&hw::H100, 4, &stage, 32, 192, blocks));
+        }
+        assert_eq!(grouped.launches, naive.launches);
+        assert_eq!(grouped.tasks, naive.tasks);
+        assert!((grouped.seconds - naive.seconds).abs() < 1e-12);
+    }
+}

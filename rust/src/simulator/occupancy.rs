@@ -1,0 +1,69 @@
+//! GPU occupancy model (paper §III-D, eq. (1), Table I).
+//!
+//! Bulge-chasing blocks are spaced `3 · CBW` rows apart (CBW = current
+//! bandwidth), so a matrix saturates all execution-unit slots once
+//! `n / (3·CBW) ≥ ALUs`, i.e. `n ≥ 3 · CBW · ALUs`.
+
+use crate::simulator::hw::GpuArch;
+
+/// Matrix size needed for full occupancy at current bandwidth `cbw`
+/// (paper eq. (1) rearranged).
+pub fn full_occupancy_n(arch: &GpuArch, cbw: usize) -> usize {
+    3 * cbw * arch.alus
+}
+
+/// Fraction of ALU slots occupied at size `n`, bandwidth `cbw`.
+pub fn occupancy_fraction(arch: &GpuArch, n: usize, cbw: usize) -> f64 {
+    let blocks = n as f64 / (3.0 * cbw as f64);
+    (blocks / arch.alus as f64).min(1.0)
+}
+
+/// One row of Table I.
+#[derive(Clone, Debug)]
+pub struct OccupancyRow {
+    pub arch: &'static str,
+    pub alus: usize,
+    pub n_required: usize,
+}
+
+/// Regenerate Table I (CBW = 32) for the paper's three entries.
+pub fn table1(cbw: usize) -> Vec<OccupancyRow> {
+    use crate::simulator::hw::{H100, MI300X, PVC1100};
+    [&H100, &MI300X, &PVC1100]
+        .into_iter()
+        .map(|a| OccupancyRow {
+            arch: a.name,
+            alus: a.alus,
+            n_required: full_occupancy_n(a, cbw),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw;
+
+    #[test]
+    fn table1_matches_paper_values() {
+        // Paper Table I at CBW=32: H100 50,688; MI300X 29,184; PVC 5,376.
+        let rows = table1(32);
+        let find = |name: &str| rows.iter().find(|r| r.arch == name).unwrap().n_required;
+        assert_eq!(find("H100"), 50_688);
+        assert_eq!(find("MI300X"), 29_184);
+        assert_eq!(find("PVC1100"), 5_376);
+    }
+
+    #[test]
+    fn occupancy_fraction_saturates_at_one() {
+        let f_small = occupancy_fraction(&hw::H100, 1024, 32);
+        let f_big = occupancy_fraction(&hw::H100, 100_000, 32);
+        assert!(f_small < 0.05, "{f_small}");
+        assert_eq!(f_big, 1.0);
+    }
+
+    #[test]
+    fn wider_bands_need_larger_matrices() {
+        assert!(full_occupancy_n(&hw::H100, 128) == 4 * full_occupancy_n(&hw::H100, 32));
+    }
+}

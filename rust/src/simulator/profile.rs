@@ -1,0 +1,183 @@
+//! Kernel profiling counters (paper Table III / §III-E).
+//!
+//! Emulates the NSight Compute metrics the paper reports for one kernel
+//! launch: runtime, achieved throughput fraction per memory level
+//! (DRAM / L1 / L2 / total memory), compute throughput, and warps per SM.
+//! Also models the CUBLAS `geam` (B = A + Aᵀ) streaming reference the
+//! paper profiles for comparison.
+
+use crate::bulge::schedule::Stage;
+use crate::simulator::hw::GpuArch;
+use crate::simulator::model::launch_cost;
+
+/// NSight-style metrics for one kernel configuration.
+#[derive(Clone, Debug)]
+pub struct ProfileMetrics {
+    pub time_us: f64,
+    /// Total memory throughput (max over levels), % of peak.
+    pub memory_pct: f64,
+    pub dram_pct: f64,
+    pub l1_pct: f64,
+    pub l2_pct: f64,
+    pub compute_pct: f64,
+    pub warps_per_sm: f64,
+    pub bound_by: &'static str,
+}
+
+/// Profile one launch of the bulge-chasing kernel: stage (b, d), element
+/// size `es`, `blocks` concurrent bulge tasks (paper: n = 32k, b = 64,
+/// full parallelism ⇒ blocks = n / (3·64) ≈ 170).
+pub fn profile_kernel(
+    arch: &GpuArch,
+    es: usize,
+    stage: &Stage,
+    tpb: usize,
+    max_blocks: usize,
+    blocks: usize,
+) -> ProfileMetrics {
+    let cost = launch_cost(arch, es, stage, tpb, max_blocks, blocks);
+    // Achieved rates come from the modeled launch time (occupancy-driven
+    // bandwidth efficiency is already folded into the cost).
+    let busy = (cost.seconds - arch.launch_overhead_s()).max(1e-9);
+    let time_us = cost.seconds * 1e6;
+
+    let dram_pct = 100.0 * (cost.dram_bytes / busy) / arch.dram_peak_bytes_per_s();
+    let l1_pct = 100.0 * (cost.l1_bytes / busy) / arch.l1_peak_bytes_per_s();
+    let l2_pct = 100.0 * (cost.l2_bytes / busy) / arch.l2_peak_bytes_per_s();
+    let compute_pct = 100.0 * (cost.flops / busy)
+        / (arch.fp32_peak_flops() * (4.0 / es as f64).clamp(0.5, 2.0));
+    let memory_pct = dram_pct.max(l1_pct).max(l2_pct);
+
+    // Warps per SM: resident threads / 32 (matches Table III's row).
+    let warps_per_sm = cost.active_blocks as f64 / arch.units as f64 * tpb as f64 / 32.0;
+
+    ProfileMetrics {
+        time_us,
+        memory_pct,
+        dram_pct,
+        l1_pct,
+        l2_pct,
+        compute_pct,
+        warps_per_sm,
+        bound_by: cost.bound_by,
+    }
+}
+
+/// The paper's reference profile: CUBLAS `geam` B = A + Aᵀ on a dense
+/// m×m matrix — a pure streaming kernel with no reuse: high DRAM
+/// throughput (~78%), low L1/L2 reuse (~18%).
+pub fn profile_geam_reference(arch: &GpuArch, es: usize, m: usize) -> ProfileMetrics {
+    let bytes = 3.0 * (m as f64) * (m as f64) * es as f64; // read A twice (row+col order), write B
+    // Transpose access: column-order reads waste most of each line until
+    // the tile fits; model the classic tiled transpose at ~80% DRAM eff.
+    let t_dram = bytes / (arch.dram_peak_bytes_per_s() * 0.78);
+    let time_us = t_dram * 1e6;
+    // No reuse: every byte passes each level exactly once, so the cache
+    // levels run far under their (much higher) peaks.
+    let dram_pct = 78.0;
+    let l1_pct = 100.0 * (bytes / t_dram) / arch.l1_peak_bytes_per_s();
+    let l2_pct = 100.0 * (bytes / t_dram) / arch.l2_peak_bytes_per_s();
+    ProfileMetrics {
+        time_us,
+        memory_pct: dram_pct,
+        dram_pct,
+        l1_pct,
+        l2_pct,
+        compute_pct: 5.0,
+        warps_per_sm: 12.0,
+        bound_by: "dram",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw;
+
+    /// Table III's workload: RTX4060, 32k matrix, bandwidth 64 → 32
+    /// (tw=32) or 64 → 48 (tw=16), full parallelism.
+    fn table3_case(tpb: usize, max_blocks: usize, tw: usize) -> ProfileMetrics {
+        let stage = Stage::new(64, tw);
+        let blocks = 32768 / (3 * 64);
+        profile_kernel(&hw::RTX4060, 4, &stage, tpb, max_blocks, blocks)
+    }
+
+    #[test]
+    fn best_config_matches_table3_shape() {
+        // Best config (32, 192, 32): memory ~52%, L1 ~64%, DRAM ~16%,
+        // compute low. We check the *shape*: L1 > L2 ≥ memory-ish,
+        // DRAM ≪ L1, compute ≪ memory.
+        let m = table3_case(32, 192, 32);
+        assert!(m.l1_pct > m.dram_pct * 2.0, "L1 {} vs DRAM {}", m.l1_pct, m.dram_pct);
+        assert!(m.l2_pct > m.dram_pct, "L2 {} vs DRAM {}", m.l2_pct, m.dram_pct);
+        assert!(m.compute_pct < m.memory_pct, "compute-bound?");
+        assert!(m.time_us > 10.0 && m.time_us < 1000.0, "time {}", m.time_us);
+    }
+
+    #[test]
+    fn smaller_tilewidth_lowers_cache_throughput() {
+        // Table III configurations A vs B: tw=16 shows lower L1/L2
+        // throughput at similar DRAM throughput.
+        let a = table3_case(16, 192, 32);
+        let b = table3_case(32, 96, 16);
+        assert!(
+            b.l1_pct < a.l1_pct,
+            "B L1 {} should be below A L1 {}",
+            b.l1_pct,
+            a.l1_pct
+        );
+        // tw=16 must run ~2× to reduce as much: per-tilewidth time is
+        // what the paper compares. B's single-launch time may be lower.
+        assert!(b.time_us / 16.0 > 0.8 * a.time_us / 32.0 * 0.5, "sanity");
+    }
+
+    #[test]
+    fn runtime_correlates_with_memory_not_dram() {
+        // §III-E: "runtime correlates more strongly with total memory
+        // throughput than with DRAM throughput alone" — across the
+        // Table III grid, the fastest per-tilewidth config has the
+        // highest total-memory %, not the highest DRAM %.
+        let grid = [
+            (64, 48, 32),
+            (64, 96, 32),
+            (32, 96, 32),
+            (32, 192, 32),
+            (16, 192, 32),
+        ];
+        let metrics: Vec<ProfileMetrics> =
+            grid.iter().map(|&(tpb, mb, tw)| table3_case(tpb, mb, tw)).collect();
+        let fastest = metrics
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.time_us.partial_cmp(&b.1.time_us).unwrap())
+            .unwrap()
+            .0;
+        let best_mem = metrics
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.memory_pct.partial_cmp(&b.1.memory_pct).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(fastest, best_mem, "fastest config should have top memory%");
+    }
+
+    #[test]
+    fn geam_reference_profile_shape() {
+        // ~78% DRAM, low L1/L2 (§III-E): streaming vs our reuse-heavy
+        // kernel.
+        let g = profile_geam_reference(&hw::RTX4060, 4, 16384);
+        assert!((g.dram_pct - 78.0).abs() < 1.0);
+        assert!(g.l1_pct < 30.0, "L1 {}", g.l1_pct);
+        assert!(g.l2_pct < 60.0, "L2 {}", g.l2_pct);
+        let ours = table3_case(32, 192, 32);
+        assert!(ours.l1_pct > g.l1_pct, "our kernel must show cache reuse");
+        assert!(ours.dram_pct < g.dram_pct, "ours trades DRAM for reuse");
+    }
+
+    #[test]
+    fn warps_scale_with_tpb_and_blocks() {
+        let lo = table3_case(16, 48, 32);
+        let hi = table3_case(64, 192, 32);
+        assert!(hi.warps_per_sm > lo.warps_per_sm);
+    }
+}

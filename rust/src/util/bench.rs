@@ -1,0 +1,230 @@
+//! Micro-benchmark harness (no `criterion` in the offline crate set).
+//!
+//! Provides warmup, adaptive iteration counts targeting a wall-clock
+//! budget, and robust statistics (median + MAD), plus a tiny table printer
+//! used by every `benches/` target to emit paper-style rows.
+
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Sample {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// Target total measurement time per case.
+    pub budget: Duration,
+    /// Number of timed batches used for the statistics.
+    pub batches: usize,
+    /// Warmup time before measuring.
+    pub warmup: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_millis(600),
+            batches: 7,
+            warmup: Duration::from_millis(80),
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI / quick runs (honours BSVD_BENCH_FAST=1).
+    pub fn from_env() -> Self {
+        if std::env::var("BSVD_BENCH_FAST").ok().as_deref() == Some("1") {
+            Self {
+                budget: Duration::from_millis(120),
+                batches: 3,
+                warmup: Duration::from_millis(10),
+            }
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Measure `f`, returning robust statistics. `f` is a full unit of
+    /// work; the harness decides how many calls per batch.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Sample {
+        // Warmup + estimate cost of a single call.
+        let warm_start = Instant::now();
+        let mut calls = 0usize;
+        while warm_start.elapsed() < self.warmup || calls == 0 {
+            f();
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / calls as f64;
+        let per_batch_budget = self.budget.as_secs_f64() / self.batches as f64;
+        let iters = ((per_batch_budget / per_call.max(1e-9)).ceil() as usize).clamp(1, 1_000_000);
+
+        let mut times: Vec<f64> = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut dev: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = dev[dev.len() / 2];
+        Sample {
+            name: name.to_string(),
+            iters,
+            median: Duration::from_secs_f64(median),
+            mad: Duration::from_secs_f64(mad),
+            min: Duration::from_secs_f64(times[0]),
+            max: Duration::from_secs_f64(*times.last().unwrap()),
+        }
+    }
+
+    /// Measure a single execution (for expensive cases where repetition is
+    /// impractical — e.g. full reductions at large n).
+    pub fn run_once<F: FnOnce()>(&self, name: &str, f: F) -> Sample {
+        let t0 = Instant::now();
+        f();
+        let d = t0.elapsed();
+        Sample {
+            name: name.to_string(),
+            iters: 1,
+            median: d,
+            mad: Duration::ZERO,
+            min: d,
+            max: d,
+        }
+    }
+}
+
+/// Format a duration with an adaptive unit.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Minimal fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Self {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut w = vec![0usize; cols];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(cols) {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate().take(cols) {
+                out.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let rule: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        line(&mut out, &rule);
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let b = Bencher {
+            budget: Duration::from_millis(20),
+            batches: 3,
+            warmup: Duration::from_millis(2),
+        };
+        let mut acc = 0u64;
+        let s = b.run("spin", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i * i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(s.median >= Duration::ZERO);
+        assert!(s.iters >= 1);
+        assert!(acc != u64::MAX); // keep `acc` alive
+    }
+
+    #[test]
+    fn run_once_records_single_iteration() {
+        let b = Bencher::default();
+        let s = b.run_once("one", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(s.iters, 1);
+        assert!(s.median >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("us"));
+        assert!(fmt_duration(Duration::from_nanos(50)).ends_with("ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["a", "long-header"]);
+        t.row(vec!["1", "2"]);
+        t.row(vec!["333", "4"]);
+        let r = t.render();
+        assert!(r.contains("long-header"));
+        assert_eq!(r.lines().count(), 4);
+    }
+}

@@ -1,0 +1,277 @@
+//! Declarative command-line parsing (no `clap` in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed accessors with defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed argument set for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("warning: bad value for --{key}: {s:?}; using default");
+                default
+            }),
+            None => default,
+        }
+    }
+
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, String> {
+        match self.get(key) {
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("bad value for --{key}: {s:?}")),
+            None => Err(format!("missing required option --{key}")),
+        }
+    }
+
+    /// Parse a comma-separated list, e.g. `--sizes 128,256,512`.
+    pub fn parse_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            Some(s) => {
+                let parsed: Result<Vec<T>, _> =
+                    s.split(',').map(|p| p.trim().parse::<T>()).collect();
+                match parsed {
+                    Ok(v) if !v.is_empty() => v,
+                    _ => {
+                        eprintln!("warning: bad list for --{key}: {s:?}; using default");
+                        default.to_vec()
+                    }
+                }
+            }
+            None => default.to_vec(),
+        }
+    }
+}
+
+/// A subcommand definition.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Top-level CLI: a program name plus a set of subcommands.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+/// Result of parsing: which subcommand and its arguments.
+#[derive(Debug)]
+pub struct Parsed {
+    pub command: String,
+    pub args: Args,
+}
+
+impl Cli {
+    pub fn help(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}\n", self.program, self.about);
+        let _ = writeln!(out, "USAGE: {} <command> [options]\n", self.program);
+        let _ = writeln!(out, "COMMANDS:");
+        for c in &self.commands {
+            let _ = writeln!(out, "  {:<12} {}", c.name, c.about);
+        }
+        let _ = writeln!(out, "\nRun `{} <command> --help` for options.", self.program);
+        out
+    }
+
+    pub fn command_help(&self, cmd: &Command) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} {} — {}\n", self.program, cmd.name, cmd.about);
+        let _ = writeln!(out, "OPTIONS:");
+        for o in &cmd.opts {
+            let mut left = format!("--{}", o.name);
+            if !o.is_flag {
+                left.push_str(" <v>");
+            }
+            let dflt = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            let _ = writeln!(out, "  {:<22} {}{}", left, o.help, dflt);
+        }
+        out
+    }
+
+    /// Parse argv. On `--help`/errors, returns Err(message) — the caller
+    /// prints it and exits (keeps this testable, no process::exit here).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(self.help());
+        }
+        let name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == name.as_str())
+            .ok_or_else(|| format!("unknown command {name:?}\n\n{}", self.help()))?;
+
+        let mut args = Args::default();
+        // Pre-fill defaults.
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.command_help(cmd));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.command_help(cmd)))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed { command: cmd.name.to_string(), args })
+    }
+}
+
+/// Convenience constructor for an option that takes a value.
+pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> OptSpec {
+    OptSpec { name, help, default: Some(default), is_flag: false }
+}
+
+/// Convenience constructor for a required value option.
+pub fn opt_req(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, default: None, is_flag: false }
+}
+
+/// Convenience constructor for a boolean flag.
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, default: None, is_flag: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            program: "banded-svd",
+            about: "test",
+            commands: vec![Command {
+                name: "reduce",
+                about: "run reduction",
+                opts: vec![
+                    opt("n", "matrix size", "256"),
+                    opt("tw", "inner tilewidth", "8"),
+                    flag("verify", "check result"),
+                    opt("sizes", "list", "1,2"),
+                ],
+            }],
+        }
+    }
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cli().parse(&sv(&["reduce"])).unwrap();
+        assert_eq!(p.args.parse_or("n", 0usize), 256);
+        assert!(!p.args.flag("verify"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let p = cli()
+            .parse(&sv(&["reduce", "--n", "512", "--verify", "--tw=16"]))
+            .unwrap();
+        assert_eq!(p.args.parse_or("n", 0usize), 512);
+        assert_eq!(p.args.parse_or("tw", 0usize), 16);
+        assert!(p.args.flag("verify"));
+    }
+
+    #[test]
+    fn lists_parse() {
+        let p = cli().parse(&sv(&["reduce", "--sizes", "4,8,16"])).unwrap();
+        assert_eq!(p.args.parse_list::<usize>("sizes", &[]), vec![4, 8, 16]);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(cli().parse(&sv(&["bogus"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&sv(&["reduce", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_path() {
+        let err = cli().parse(&sv(&["reduce", "--help"])).unwrap_err();
+        assert!(err.contains("tilewidth"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&sv(&["reduce", "--n"])).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrates built in-repo (the offline crate set provides only the
+//! `xla` closure): thread pool, PRNG, CLI parsing, benchmarking,
+//! property testing, and JSON output.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

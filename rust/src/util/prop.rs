@@ -1,0 +1,152 @@
+//! Property-testing mini-framework (no `proptest` in the offline crate
+//! set).
+//!
+//! Runs a property against many randomly generated cases; on failure it
+//! reports the seed and case index so the exact case can be replayed with
+//! `BSVD_PROP_SEED=<seed>`. Generators are plain closures over the
+//! library's own RNG, which keeps shape constraints (e.g. `1 ≤ tw < bw`)
+//! easy to express exactly instead of via rejection.
+
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("BSVD_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xB5BD_5EED);
+        let cases = std::env::var("BSVD_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self { cases, seed }
+    }
+}
+
+/// Run `cases` random cases: generate input with `gen`, check with `prop`.
+/// `prop` returns `Err(reason)` to fail. Panics with a replayable report.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: &Config,
+    mut generator: impl FnMut(&mut Xoshiro256) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        // Derive a per-case seed so any single case can be replayed alone.
+        let case_seed = cfg.seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case as u64));
+        let mut rng = Xoshiro256::seed_from_u64(case_seed);
+        let input = generator(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property {name:?} failed\n  case index : {case}/{}\n  seed       : {} (replay: BSVD_PROP_SEED={})\n  input      : {input:?}\n  reason     : {reason}",
+                cfg.cases, cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// Shorthand using the default (env-controlled) config.
+pub fn quickcheck<T: std::fmt::Debug>(
+    name: &str,
+    generator: impl FnMut(&mut Xoshiro256) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(name, &Config::default(), generator, prop)
+}
+
+/// Assert two floating-point slices match to a tolerance; returns a useful
+/// message naming the worst element. Shared by tests and properties.
+pub fn assert_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = (0usize, 0.0f64);
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * x.abs().max(y.abs());
+        let d = (x - y).abs();
+        if d > tol && d - tol > worst.1 {
+            worst = (i, d - tol);
+        }
+    }
+    if worst.1 > 0.0 {
+        let i = worst.0;
+        Err(format!(
+            "mismatch at [{i}]: {} vs {} (|d|={:.3e}, rtol={rtol:.1e}, atol={atol:.1e})",
+            a[i],
+            b[i],
+            (a[i] - b[i]).abs()
+        ))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck(
+            "add-commutes",
+            |rng| (rng.below(100) as i64, rng.below(100) as i64),
+            |(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            &Config { cases: 3, seed: 1 },
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut seen1 = Vec::new();
+        check(
+            "collect1",
+            &Config { cases: 5, seed: 42 },
+            |rng| rng.next_u64(),
+            |v| {
+                seen1.push(*v);
+                Ok(())
+            },
+        );
+        let mut seen2 = Vec::new();
+        check(
+            "collect2",
+            &Config { cases: 5, seed: 42 },
+            |rng| rng.next_u64(),
+            |v| {
+                seen2.push(*v);
+                Ok(())
+            },
+        );
+        assert_eq!(seen1, seen2);
+    }
+
+    #[test]
+    fn assert_close_accepts_and_rejects() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-9, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-9, 0.0).is_err());
+    }
+}

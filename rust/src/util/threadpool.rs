@@ -1,0 +1,301 @@
+//! A small work-crew thread pool (no rayon in the offline crate set).
+//!
+//! The pool is built for the bulge-chasing launch loop: every GPU "kernel
+//! launch" becomes a [`ThreadPool::scope_chunks`] call that splits the
+//! launch's task list across workers and barriers before the next launch —
+//! exactly the device-wide synchronization of Algorithm 1 line 11.
+//!
+//! Design: long-lived workers block on a condvar; a scope submits a batch
+//! of closures, then waits for the batch counter to drain. Closures borrow
+//! the caller's stack via a scoped-lifetime channel (same trick as
+//! `std::thread::scope`, implemented with raw pointers behind a safe API).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Vec<Job>>,
+    job_ready: Condvar,
+    pending: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+    shutdown: Mutex<bool>,
+}
+
+/// A fixed-size pool of worker threads with batch-barrier semantics.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (`n == 0` means the number of
+    /// available hardware threads).
+    pub fn new(n: usize) -> Self {
+        let n_threads = if n == 0 {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+        } else {
+            n
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            job_ready: Condvar::new(),
+            pending: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+            shutdown: Mutex::new(false),
+        });
+        let mut workers = Vec::with_capacity(n_threads);
+        for i in 0..n_threads {
+            let sh = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bsvd-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker"),
+            );
+        }
+        Self { shared, workers, n_threads }
+    }
+
+    /// Number of worker threads.
+    pub fn len(&self) -> usize {
+        self.n_threads
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_threads == 0
+    }
+
+    /// Run `f(i)` for every index in `0..count`, distributing indices over
+    /// the workers, and return once all have completed. `f` may borrow from
+    /// the caller's stack: the barrier at the end of this function makes
+    /// that sound (no job outlives the call).
+    pub fn for_each_index<F>(&self, count: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if count == 0 {
+            return;
+        }
+        // Execute inline when trivial or when we have no parallelism.
+        if count == 1 || self.n_threads <= 1 {
+            for i in 0..count {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        // SAFETY: `job` only borrows `f`, `next` — both outlive the barrier
+        // below; we erase the lifetime to store it in the 'static queue.
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let next_ref: &AtomicUsize = &next;
+        let n_jobs = self.n_threads.min(count);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            self.shared.pending.fetch_add(n_jobs, Ordering::SeqCst);
+            for _ in 0..n_jobs {
+                let job = make_static_job(f_ref, next_ref, count);
+                q.push(job);
+            }
+        }
+        self.shared.job_ready.notify_all();
+        // Help out from the calling thread as well.
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= count {
+                break;
+            }
+            f(i);
+        }
+        // Barrier: launches are often microseconds of work, so spin
+        // briefly before falling back to the condvar (the launch loop
+        // issues thousands of barriers per reduction — §Perf).
+        for _ in 0..10_000 {
+            if self.shared.pending.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            std::hint::spin_loop();
+        }
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    /// Split `0..count` into `chunks` contiguous ranges and run `f(range)`
+    /// on each in parallel. Used to batch bulge tasks per worker so each
+    /// "thread block" processes several bulges (the paper's software loop
+    /// unrolling under the MaxBlocks limit).
+    pub fn for_each_chunk<F>(&self, count: usize, chunks: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if count == 0 {
+            return;
+        }
+        let chunks = chunks.max(1).min(count);
+        let base = count / chunks;
+        let rem = count % chunks;
+        self.for_each_index(chunks, |c| {
+            let start = c * base + c.min(rem);
+            let len = base + usize::from(c < rem);
+            f(start..start + len);
+        });
+    }
+}
+
+/// Erase the lifetime of the borrowed closure context. Soundness argument:
+/// `for_each_index` does not return until `pending` drains back to zero,
+/// i.e. until every job constructed here has run to completion, so the
+/// borrowed references never outlive the borrow.
+fn make_static_job(
+    f: &(dyn Fn(usize) + Sync),
+    next: &AtomicUsize,
+    count: usize,
+) -> Job {
+    struct SendPtr<T: ?Sized>(*const T);
+    unsafe impl<T: ?Sized> Send for SendPtr<T> {}
+    impl<T: ?Sized> SendPtr<T> {
+        fn get(&self) -> *const T {
+            self.0
+        }
+    }
+    // SAFETY: lifetime erasure to 'static; the barrier in
+    // `for_each_index` guarantees the job dies before the borrow does.
+    let fp: SendPtr<dyn Fn(usize) + Sync> = SendPtr(unsafe {
+        std::mem::transmute::<
+            *const (dyn Fn(usize) + Sync + '_),
+            *const (dyn Fn(usize) + Sync + 'static),
+        >(f as *const _)
+    });
+    let np: SendPtr<AtomicUsize> = SendPtr(next as *const _);
+    Box::new(move || {
+        let f: &(dyn Fn(usize) + Sync) = unsafe { &*fp.get() };
+        let next: &AtomicUsize = unsafe { &*np.get() };
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= count {
+                break;
+            }
+            f(i);
+        }
+    })
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        // (Perf note, EXPERIMENTS.md §Perf: a try_lock spin here was
+        // measured 3x SLOWER under contention — all workers hammer the
+        // queue mutex. Plain condvar wait wins; reverted.)
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop() {
+                    break Some(job);
+                }
+                if *shared.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = shared.job_ready.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => {
+                job();
+                if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = shared.done_lock.lock().unwrap();
+                    shared.done.notify_all();
+                }
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.job_ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_each_index(1000, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn chunks_cover_range_disjointly() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_each_chunk(97, 7, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn reusable_across_batches() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicU64::new(0);
+        for round in 0..50u64 {
+            pool.for_each_index(10, |i| {
+                total.fetch_add(round + i as u64, Ordering::SeqCst);
+            });
+        }
+        // sum over rounds of (10*round + 45)
+        let expect: u64 = (0..50u64).map(|r| 10 * r + 45).sum();
+        assert_eq!(total.load(Ordering::SeqCst), expect);
+    }
+
+    #[test]
+    fn zero_count_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.for_each_index(0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn single_thread_pool_executes_inline() {
+        let pool = ThreadPool::new(1);
+        let sum = AtomicUsize::new(0);
+        pool.for_each_index(100, |i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 4950);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = ThreadPool::new(8);
+        let data: Vec<u64> = (0..10_000).collect();
+        let sum = AtomicU64::new(0);
+        pool.for_each_chunk(data.len(), 16, |r| {
+            let part: u64 = data[r].iter().sum();
+            sum.fetch_add(part, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), data.iter().sum::<u64>());
+    }
+}

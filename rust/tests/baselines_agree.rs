@@ -1,0 +1,80 @@
+//! The CPU baselines (gbbrd-style, SLATE-style, PLASMA-style) must agree
+//! with the tiled GPU-style algorithm on the singular values — they are
+//! alternative schedules over the same transform family.
+
+use banded_svd::banded::storage::Banded;
+use banded_svd::baselines::{gbbrd_reduce, plasma_like_reduce, slate_like_reduce};
+use banded_svd::bulge::reduce_to_bidiagonal;
+use banded_svd::config::TuneParams;
+use banded_svd::generate::random_banded;
+use banded_svd::pipeline::{bidiagonal_singular_values, relative_sv_error};
+use banded_svd::util::rng::Xoshiro256;
+use banded_svd::util::threadpool::ThreadPool;
+
+fn sv_of(a: &Banded<f64>) -> Vec<f64> {
+    let (d, e) = a.bidiagonal();
+    bidiagonal_singular_values(&d, &e)
+}
+
+#[test]
+fn all_reducers_produce_the_same_singular_values() {
+    let pool = ThreadPool::new(4);
+    let mut rng = Xoshiro256::seed_from_u64(200);
+    let (n, bw) = (72usize, 6usize);
+    let base = random_banded::<f64>(n, bw, bw - 1, &mut rng);
+    let dense = base.to_dense();
+
+    // Tiled (ours).
+    let params = TuneParams { tpb: 32, tw: 3, max_blocks: 192 };
+    let mut ours = Banded::from_dense(&dense, n, bw, 3);
+    reduce_to_bidiagonal(&mut ours, bw, &params);
+    let sv_ours = sv_of(&ours);
+
+    // gbbrd (tw = 1 peeling).
+    let mut g = Banded::from_dense(&dense, n, bw, 1);
+    gbbrd_reduce(&mut g, bw);
+    let sv_g = sv_of(&g);
+
+    // SLATE-style (whole bandwidth, sweep-major).
+    let mut s = Banded::from_dense(&dense, n, bw, bw - 1);
+    slate_like_reduce(&mut s, bw);
+    let sv_s = sv_of(&s);
+
+    // PLASMA-style (multicore, task-coalesced).
+    let mut p = Banded::from_dense(&dense, n, bw, bw - 1);
+    plasma_like_reduce(&mut p, bw, &pool, 2);
+    let sv_p = sv_of(&p);
+
+    for (name, sv) in [("gbbrd", &sv_g), ("slate", &sv_s), ("plasma", &sv_p)] {
+        let err = relative_sv_error(sv, &sv_ours);
+        assert!(err < 1e-10, "{name} vs tiled: err {err}");
+    }
+}
+
+#[test]
+fn plasma_grouping_does_not_change_results() {
+    let pool = ThreadPool::new(4);
+    let mut rng = Xoshiro256::seed_from_u64(201);
+    let (n, bw) = (64usize, 5usize);
+    let base = random_banded::<f64>(n, bw, bw - 1, &mut rng);
+    let mut reference: Option<Banded<f64>> = None;
+    for grouping in [1usize, 2, 3, 8] {
+        let mut a = base.clone();
+        plasma_like_reduce(&mut a, bw, &pool, grouping);
+        match &reference {
+            None => reference = Some(a),
+            Some(r) => assert_eq!(&a, r, "grouping={grouping}"),
+        }
+    }
+}
+
+#[test]
+fn baselines_handle_trivial_bandwidth() {
+    let mut rng = Xoshiro256::seed_from_u64(202);
+    let pool = ThreadPool::new(2);
+    let mut a = random_banded::<f64>(24, 1, 1, &mut rng);
+    let before = a.clone();
+    slate_like_reduce(&mut a, 1);
+    plasma_like_reduce(&mut a, 1, &pool, 1);
+    assert_eq!(a, before, "bidiagonal input must be untouched");
+}

@@ -1,0 +1,96 @@
+//! Fig. 3 protocol as an executable assertion set: stage 1 (f64) →
+//! stage 2 in reduced precision → stage 3 (f64), relative error of the
+//! singular values vs the prescribed spectrum.
+
+use banded_svd::config::TuneParams;
+use banded_svd::generate::{dense_with_spectrum, Spectrum};
+use banded_svd::pipeline::{relative_sv_error, singular_values_3stage_mixed, SvdOptions};
+use banded_svd::scalar::F16;
+use banded_svd::util::rng::Xoshiro256;
+
+fn protocol(n: usize, spectrum: Spectrum, seed: u64) -> (f64, f64, f64) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let sigma = spectrum.sample(n, &mut rng);
+    let a = dense_with_spectrum(n, &sigma, &mut rng, n.min(48));
+    let opts = SvdOptions {
+        bandwidth: 16.min(n / 2),
+        params: TuneParams { tpb: 32, tw: 8, max_blocks: 192 },
+    };
+    let (s64, _) = singular_values_3stage_mixed::<f64>(&a, &opts);
+    let (s32, _) = singular_values_3stage_mixed::<f32>(&a, &opts);
+    let (s16, _) = singular_values_3stage_mixed::<F16>(&a, &opts);
+    (
+        relative_sv_error(&s64, &sigma),
+        relative_sv_error(&s32, &sigma),
+        relative_sv_error(&s16, &sigma),
+    )
+}
+
+#[test]
+fn fp64_is_near_machine_epsilon() {
+    for spectrum in Spectrum::ALL {
+        let (e64, _, _) = protocol(96, spectrum, 1);
+        assert!(e64 < 1e-12, "{spectrum:?}: {e64}");
+    }
+}
+
+#[test]
+fn error_ordering_fp64_lt_fp32_lt_fp16() {
+    for (i, spectrum) in Spectrum::ALL.into_iter().enumerate() {
+        let (e64, e32, e16) = protocol(96, spectrum, 2 + i as u64);
+        assert!(e64 < e32, "{spectrum:?}: {e64} !< {e32}");
+        assert!(e32 < e16, "{spectrum:?}: {e32} !< {e16}");
+    }
+}
+
+#[test]
+fn fp32_errors_stay_within_paper_regime() {
+    // Paper: FP32 shows a predictable, size-dependent increase but stays
+    // well within acceptable limits (≪ 1e-3 at these sizes).
+    for spectrum in Spectrum::ALL {
+        let (_, e32, _) = protocol(128, spectrum, 5);
+        assert!(e32 < 1e-4, "{spectrum:?}: fp32 err {e32}");
+    }
+}
+
+#[test]
+fn fp16_remains_usable_for_well_behaved_spectra() {
+    // Paper: FP16 retains acceptable accuracy; best on well-behaved
+    // (arithmetic) spectra.
+    let (_, _, e16) = protocol(96, Spectrum::Arithmetic, 6);
+    assert!(e16 < 0.05, "fp16 err {e16}");
+}
+
+#[test]
+fn error_grows_moderately_with_size() {
+    // "only moderate error growth with size": fp32 error at n=144 stays
+    // within ~30x of n=48 (loose shape bound, not a tight constant).
+    let (_, e_small, _) = protocol(48, Spectrum::Arithmetic, 7);
+    let (_, e_large, _) = protocol(144, Spectrum::Arithmetic, 7);
+    assert!(
+        e_large < e_small * 30.0 + 1e-6,
+        "{e_small} -> {e_large}: growth too fast"
+    );
+}
+
+#[test]
+fn bandwidth_increase_does_not_degrade_accuracy() {
+    // Paper §V-A: larger bandwidth at fixed tilewidth does not hurt
+    // accuracy (the successive-band-reduction claim).
+    let n = 96;
+    let mut rng = Xoshiro256::seed_from_u64(8);
+    let sigma = Spectrum::Arithmetic.sample(n, &mut rng);
+    let a = dense_with_spectrum(n, &sigma, &mut rng, 48);
+    let mut errs = Vec::new();
+    for bw in [8usize, 16, 32] {
+        let opts = SvdOptions {
+            bandwidth: bw,
+            params: TuneParams { tpb: 32, tw: 8, max_blocks: 192 },
+        };
+        let (s32, _) = singular_values_3stage_mixed::<f32>(&a, &opts);
+        errs.push(relative_sv_error(&s32, &sigma));
+    }
+    let min = errs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = errs.iter().cloned().fold(0.0, f64::max);
+    assert!(max < 20.0 * min + 1e-7, "bandwidth sensitivity too strong: {errs:?}");
+}

@@ -1,0 +1,153 @@
+//! Integration: the AOT JAX/Pallas artifacts executed through PJRT must
+//! produce the same reduction as the native Rust executor.
+//!
+//! Requires `make artifacts` (the tests skip with a loud message if the
+//! artifact directory is absent, so plain `cargo test` stays usable
+//! before the first build).
+
+use banded_svd::banded::storage::Banded;
+use banded_svd::config::{Backend, TuneParams};
+use banded_svd::coordinator::Coordinator;
+use banded_svd::generate::random_banded;
+use banded_svd::pipeline::{bidiagonal_singular_values, relative_sv_error};
+use banded_svd::runtime::{artifact_dir, Manifest, PjrtEngine};
+use banded_svd::util::rng::Xoshiro256;
+
+fn have_variant(n: usize, bw: usize, tw: usize) -> bool {
+    artifact_dir().join(Manifest::file_name(n, bw, tw)).exists()
+}
+
+fn skip(name: &str) {
+    eprintln!("SKIPPED {name}: artifacts missing — run `make artifacts` first");
+}
+
+/// Native f32 reduction for comparison.
+fn native_reduce(a: &Banded<f32>, bw: usize, tw: usize) -> Banded<f32> {
+    let mut work = a.clone();
+    let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+    banded_svd::bulge::reduce_to_bidiagonal(&mut work, bw, &params);
+    work
+}
+
+#[test]
+fn per_cycle_pjrt_matches_native() {
+    let (n, bw, tw) = (96, 6, 3);
+    if !have_variant(n, bw, tw) {
+        return skip("per_cycle_pjrt_matches_native");
+    }
+    let engine = PjrtEngine::load(&artifact_dir(), n, bw, tw).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let a0 = random_banded::<f32>(n, bw, tw, &mut rng);
+    let native = native_reduce(&a0, bw, tw);
+
+    let mut pjrt = a0.clone();
+    let stats = engine.reduce_banded(&mut pjrt, false).unwrap();
+    assert_eq!(stats.launches, 274 + 280);
+
+    // Same schedule, same reflector formulas — but f32 rounding can flip
+    // a reflector's sign branch on a near-zero pivot, flipping signs of
+    // rows/columns downstream (orthogonally equivalent results). The
+    // robust invariants: bidiagonal form, element magnitudes, and the
+    // singular values (checked strictly in a separate test).
+    assert!(pjrt.max_off_band(1) < 1e-4, "not bidiagonal: {}", pjrt.max_off_band(1));
+    let (dn, en) = native.bidiagonal();
+    let (dp, ep) = pjrt.bidiagonal();
+    let scale = native.fro_norm();
+    for (x, y) in dn.iter().zip(dp.iter()).chain(en.iter().zip(ep.iter())) {
+        assert!(
+            (x.abs() - y.abs()).abs() as f64 <= 5e-3 * scale.max(1.0),
+            "|{x}| vs |{y}|"
+        );
+    }
+}
+
+#[test]
+fn fused_pjrt_matches_per_cycle_exactly() {
+    let (n, bw, tw) = (96, 6, 3);
+    if !have_variant(n, bw, tw) {
+        return skip("fused_pjrt_matches_per_cycle_exactly");
+    }
+    let engine = PjrtEngine::load(&artifact_dir(), n, bw, tw).unwrap();
+    assert!(engine.has_fused());
+    let mut rng = Xoshiro256::seed_from_u64(12);
+    let a0 = random_banded::<f32>(n, bw, tw, &mut rng);
+
+    let mut per_cycle = a0.clone();
+    engine.reduce_banded(&mut per_cycle, false).unwrap();
+    let mut fused = a0.clone();
+    engine.reduce_banded(&mut fused, true).unwrap();
+    // Identical op sequence, identical compiled kernels: results should
+    // agree to the bit or within denormal-level noise.
+    for (x, y) in per_cycle.data().iter().zip(fused.data().iter()) {
+        assert!((x - y).abs() <= 1e-6, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn pjrt_preserves_singular_values() {
+    let (n, bw, tw) = (96, 6, 3);
+    if !have_variant(n, bw, tw) {
+        return skip("pjrt_preserves_singular_values");
+    }
+    let engine = PjrtEngine::load(&artifact_dir(), n, bw, tw).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(13);
+    let a0 = random_banded::<f64>(n, bw, tw, &mut rng);
+    // Ground truth via the f64 native path.
+    let mut native = a0.clone();
+    let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+    let res = banded_svd::bulge::reduce_to_bidiagonal(&mut native, bw, &params);
+    let sv_native = bidiagonal_singular_values(&res.diag, &res.superdiag);
+
+    let mut pjrt: Banded<f32> = a0.convert();
+    engine.reduce_banded(&mut pjrt, true).unwrap();
+    let (d, e) = pjrt.bidiagonal();
+    let sv_pjrt = bidiagonal_singular_values(
+        &d.iter().map(|v| *v as f64).collect::<Vec<_>>(),
+        &e.iter().map(|v| *v as f64).collect::<Vec<_>>(),
+    );
+    let err = relative_sv_error(&sv_pjrt, &sv_native);
+    assert!(err < 5e-5, "relative sv error {err}");
+}
+
+#[test]
+fn coordinator_pjrt_backends_report_schedule_metrics() {
+    let (n, bw, tw) = (96, 6, 3);
+    if !have_variant(n, bw, tw) {
+        return skip("coordinator_pjrt_backends_report_schedule_metrics");
+    }
+    let engine = PjrtEngine::load(&artifact_dir(), n, bw, tw).unwrap();
+    let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+    let coord = Coordinator::new(params, 2);
+    let mut rng = Xoshiro256::seed_from_u64(14);
+
+    let mut a: Banded<f32> = random_banded::<f32>(n, bw, tw, &mut rng);
+    let r1 = coord.reduce_pjrt(&engine, &mut a, Backend::Pjrt).unwrap();
+    let mut b: Banded<f32> = random_banded::<f32>(n, bw, tw, &mut rng);
+    let r2 = coord.reduce_pjrt(&engine, &mut b, Backend::PjrtFused).unwrap();
+    assert_eq!(r1.metrics.launches, r2.metrics.launches);
+    assert_eq!(r1.metrics.tasks, r2.metrics.tasks);
+    assert!(r1.residual_off_band < 1e-4);
+    assert!(r2.residual_off_band < 1e-4);
+}
+
+#[test]
+fn manifest_layout_matches_banded_storage() {
+    let (n, bw, tw) = (256, 8, 4);
+    if !have_variant(n, bw, tw) {
+        return skip("manifest_layout_matches_banded_storage");
+    }
+    let m = Manifest::load(&artifact_dir(), n, bw, tw).unwrap();
+    let a = Banded::<f32>::for_reduction(n, bw, tw);
+    assert_eq!(m.ld, a.ld());
+    assert_eq!(m.kd_super, a.kd_super());
+    assert_eq!(m.kd_sub, a.kd_sub());
+}
+
+#[test]
+fn missing_variant_is_a_clean_error() {
+    let msg = match PjrtEngine::load(&artifact_dir(), 12345, 8, 4) {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(msg.contains("make artifacts"), "{msg}");
+}

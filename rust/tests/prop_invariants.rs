@@ -1,0 +1,192 @@
+//! Property tests (library prop framework) over the coordinator-level
+//! invariants: schedule coverage/disjointness, reduction correctness
+//! under random shapes, and parallel determinism.
+
+use banded_svd::banded::storage::Banded;
+use banded_svd::bulge::schedule::{stage_plan, Stage};
+use banded_svd::bulge::{reduce_to_bidiagonal, reduce_to_bidiagonal_parallel};
+use banded_svd::config::TuneParams;
+use banded_svd::generate::random_banded;
+use banded_svd::util::prop::{quickcheck, Config};
+use banded_svd::util::rng::Xoshiro256;
+use banded_svd::util::threadpool::ThreadPool;
+
+#[test]
+fn prop_stage_plan_always_terminates_at_bidiagonal() {
+    quickcheck(
+        "stage-plan-terminates",
+        |rng| (rng.range_inclusive(2, 300), rng.range_inclusive(1, 128)),
+        |&(bw, tw)| {
+            let plan = stage_plan(bw, tw);
+            let mut b = bw;
+            for s in &plan {
+                if s.b != b || s.d == 0 || s.d > s.b - 1 {
+                    return Err(format!("bad stage {s:?} at b={b}"));
+                }
+                b -= s.d;
+            }
+            if b != 1 {
+                return Err(format!("plan ends at bandwidth {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_covers_every_task_once() {
+    quickcheck(
+        "schedule-coverage",
+        |rng| {
+            let b = rng.range_inclusive(2, 12);
+            let d = rng.range_inclusive(1, b - 1);
+            let n = rng.range_inclusive(b + 2, 140);
+            (n, b, d)
+        },
+        |&(n, b, d)| {
+            let s = Stage::new(b, d);
+            let mut seen = std::collections::HashSet::new();
+            for t in 0..s.total_launches(n) {
+                for task in s.tasks_at(n, t) {
+                    if !seen.insert((task.sweep, task.cycle)) {
+                        return Err(format!("duplicate task {task:?}"));
+                    }
+                }
+            }
+            let expect: usize = (0..s.num_sweeps(n)).map(|k| s.cmax(n, k) + 1).sum();
+            if seen.len() != expect {
+                return Err(format!("covered {} of {expect} tasks", seen.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simultaneous_tasks_are_element_disjoint() {
+    quickcheck(
+        "schedule-disjointness",
+        |rng| {
+            let b = rng.range_inclusive(2, 10);
+            let d = rng.range_inclusive(1, b - 1);
+            let n = rng.range_inclusive(b + 2, 120);
+            (n, b, d)
+        },
+        |&(n, b, d)| {
+            let s = Stage::new(b, d);
+            for t in 0..s.total_launches(n) {
+                let tasks = s.tasks_at(n, t);
+                for (i, a) in tasks.iter().enumerate() {
+                    for bb in tasks.iter().skip(i + 1) {
+                        for ra in s.accesses(a, n) {
+                            for rb in s.accesses(bb, n) {
+                                if ra.intersects(&rb) {
+                                    return Err(format!("t={t}: {a:?} overlaps {bb:?}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reduction_is_bidiagonal_and_norm_preserving() {
+    let cfg = Config { cases: 24, ..Config::default() };
+    banded_svd::util::prop::check(
+        "reduction-invariants",
+        &cfg,
+        |rng| {
+            let bw = rng.range_inclusive(2, 12);
+            let tw = rng.range_inclusive(1, bw - 1);
+            let n = rng.range_inclusive(bw + 2, 96);
+            let seed = rng.next_u64();
+            (n, bw, tw, seed)
+        },
+        |&(n, bw, tw, seed)| {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+            let mut a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+            let norm0 = a.fro_norm();
+            reduce_to_bidiagonal(&mut a, bw, &params);
+            if a.max_off_band(1) != 0.0 {
+                return Err(format!("off-band residue {}", a.max_off_band(1)));
+            }
+            let drift = (a.fro_norm() - norm0).abs();
+            if drift > 1e-9 * norm0.max(1.0) {
+                return Err(format!("norm drift {drift}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_equals_sequential_bitwise() {
+    let pool = ThreadPool::new(4);
+    let cfg = Config { cases: 16, ..Config::default() };
+    banded_svd::util::prop::check(
+        "parallel-determinism",
+        &cfg,
+        |rng| {
+            let bw = rng.range_inclusive(2, 10);
+            let tw = rng.range_inclusive(1, bw - 1);
+            let n = rng.range_inclusive(bw + 2, 80);
+            let mb = rng.range_inclusive(1, 16);
+            let seed = rng.next_u64();
+            (n, bw, tw, mb, seed)
+        },
+        |&(n, bw, tw, mb, seed)| {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let params = TuneParams { tpb: 32, tw, max_blocks: mb };
+            let a0: Banded<f64> = random_banded(n, bw, params.effective_tw(bw), &mut rng);
+            let mut a1 = a0.clone();
+            let mut a2 = a0;
+            reduce_to_bidiagonal(&mut a1, bw, &params);
+            reduce_to_bidiagonal_parallel(&mut a2, bw, &params, &pool);
+            if a1 != a2 {
+                return Err("parallel result differs from sequential".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reduction_works_in_all_precisions() {
+    use banded_svd::scalar::{Scalar, F16};
+    fn run<T: Scalar>(n: usize, bw: usize, tw: usize, seed: u64) -> Result<(), String> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+        let mut a = random_banded::<T>(n, bw, params.effective_tw(bw), &mut rng);
+        reduce_to_bidiagonal(&mut a, bw, &params);
+        let tol = match T::NAME {
+            "fp16" => 1e-1,
+            "fp32" => 1e-3,
+            _ => 1e-10,
+        };
+        if a.max_off_band(1) > tol {
+            return Err(format!("{}: off-band {}", T::NAME, a.max_off_band(1)));
+        }
+        Ok(())
+    }
+    let cfg = Config { cases: 10, ..Config::default() };
+    banded_svd::util::prop::check(
+        "precision-sweep",
+        &cfg,
+        |rng| {
+            let bw = rng.range_inclusive(2, 8);
+            let tw = rng.range_inclusive(1, bw - 1);
+            let n = rng.range_inclusive(bw + 2, 48);
+            (n, bw, tw, rng.next_u64())
+        },
+        |&(n, bw, tw, seed)| {
+            run::<f64>(n, bw, tw, seed)?;
+            run::<f32>(n, bw, tw, seed)?;
+            run::<F16>(n, bw, tw, seed)
+        },
+    );
+}

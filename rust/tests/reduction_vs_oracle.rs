@@ -1,0 +1,90 @@
+//! Cross-validation of the full reduction against the independent
+//! one-sided Jacobi oracle (no shared code path) and against LAPACK-style
+//! identities.
+
+use banded_svd::banded::Dense;
+use banded_svd::bulge::reduce_to_bidiagonal;
+use banded_svd::config::TuneParams;
+use banded_svd::generate::{dense_with_spectrum, random_banded, Spectrum};
+use banded_svd::pipeline::{
+    bidiagonal_singular_values, jacobi_singular_values, relative_sv_error,
+};
+use banded_svd::util::rng::Xoshiro256;
+
+#[test]
+fn tiled_reduction_singular_values_match_jacobi() {
+    let mut rng = Xoshiro256::seed_from_u64(100);
+    for (n, bw, tw) in [(64usize, 8usize, 4usize), (96, 12, 5), (48, 4, 3), (80, 16, 8)] {
+        let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+        let mut a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let dense = Dense::from_vec(n, n, a.to_dense());
+        let res = reduce_to_bidiagonal(&mut a, bw, &params);
+        let sv = bidiagonal_singular_values(&res.diag, &res.superdiag);
+        let oracle = jacobi_singular_values(&dense);
+        let err = relative_sv_error(&sv, &oracle);
+        assert!(err < 1e-10, "n={n} bw={bw} tw={tw}: err {err}");
+    }
+}
+
+#[test]
+fn all_spectra_survive_the_full_pipeline() {
+    let mut rng = Xoshiro256::seed_from_u64(101);
+    let n = 64;
+    for spectrum in Spectrum::ALL {
+        let sigma = spectrum.sample(n, &mut rng);
+        let a = dense_with_spectrum(n, &sigma, &mut rng, n);
+        let opts = banded_svd::pipeline::SvdOptions {
+            bandwidth: 8,
+            params: TuneParams { tpb: 32, tw: 4, max_blocks: 192 },
+        };
+        let (sv, _) = banded_svd::pipeline::singular_values_3stage(&a, &opts);
+        let err = relative_sv_error(&sv, &sigma);
+        assert!(err < 1e-10, "{:?}: err {err}", spectrum);
+    }
+}
+
+#[test]
+fn schedule_statistics_match_occupancy_model() {
+    // Peak launch parallelism must track n/(3·bw) (paper eq. (1) spacing)
+    // through the coordinator for the *first* stage, where b = bw.
+    use banded_svd::bulge::schedule::{stage_plan, Stage};
+    let n = 3072;
+    let bw = 16;
+    let plan = stage_plan(bw, 8);
+    let first: &Stage = &plan[0];
+    let peak = (0..first.total_launches(n))
+        .map(|t| first.tasks_at_count(n, t))
+        .max()
+        .unwrap();
+    let expect = n / (3 * bw);
+    assert!(
+        (peak as i64 - expect as i64).abs() <= 2,
+        "peak {peak} vs n/(3 bw) = {expect}"
+    );
+}
+
+#[test]
+fn wide_band_equals_narrow_band_spectrum() {
+    // The same dense matrix pushed through different intermediate
+    // bandwidths must give identical singular values — the trade-off the
+    // paper's bandwidth-scaling claim rebalances.
+    let mut rng = Xoshiro256::seed_from_u64(102);
+    let n = 72;
+    let sigma = Spectrum::Logarithmic.sample(n, &mut rng);
+    let a = dense_with_spectrum(n, &sigma, &mut rng, n);
+    let mut reference: Option<Vec<f64>> = None;
+    for bw in [4usize, 8, 16, 32] {
+        let opts = banded_svd::pipeline::SvdOptions {
+            bandwidth: bw,
+            params: TuneParams { tpb: 32, tw: (bw / 2).max(1), max_blocks: 192 },
+        };
+        let (sv, _) = banded_svd::pipeline::singular_values_3stage(&a, &opts);
+        match &reference {
+            None => reference = Some(sv),
+            Some(r) => {
+                let err = relative_sv_error(&sv, r);
+                assert!(err < 1e-10, "bw={bw}: err {err}");
+            }
+        }
+    }
+}
