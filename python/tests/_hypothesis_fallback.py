@@ -1,0 +1,120 @@
+"""Minimal, deterministic stand-in for the subset of the ``hypothesis``
+API these tests use (``given``, ``settings``, ``strategies.integers``,
+``strategies.floats``, ``strategies.sampled_from``).
+
+The real hypothesis is preferred and is installed in CI; this fallback
+exists so the suite still runs in offline environments where ``pip
+install`` is unavailable. Examples are drawn from a seeded PRNG (so
+failures are reproducible) and always include the boundary values, which
+is where most schedule/kernel bugs live.
+"""
+
+
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, sample, boundaries=()):
+        self._sample = sample
+        self.boundaries = list(boundaries)
+
+    def example(self, rng):
+        return self._sample(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        boundaries=[min_value, max_value],
+    )
+
+
+def floats(min_value, max_value, **_kwargs):
+    return _Strategy(
+        lambda rng: rng.uniform(min_value, max_value),
+        boundaries=[min_value, max_value],
+    )
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements), boundaries=elements[:1])
+
+
+class settings:  # noqa: N801 - mirrors the hypothesis name
+    def __init__(self, max_examples=40, deadline=None, **_kwargs):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(**strategies):
+    def decorate(fn):
+        inner = fn
+
+        def wrapper():
+            # @settings may sit above @given (decorating this wrapper) or
+            # below it (decorating the test function) — honour both.
+            cfg = (
+                getattr(wrapper, "_fallback_settings", None)
+                or getattr(inner, "_fallback_settings", None)
+                or settings()
+            )
+            # str hashes are salted per process; crc32 keeps the PRNG seed
+            # stable across runs so falsifying examples can be replayed.
+            rng = random.Random(0xB5BD5EED ^ zlib.crc32(inner.__name__.encode()))
+            names = list(strategies)
+            # First examples: all-lower and all-upper boundary corners.
+            corners = []
+            for pick in (0, -1):
+                corner = {}
+                ok = True
+                for name in names:
+                    bounds = strategies[name].boundaries
+                    if not bounds:
+                        ok = False
+                        break
+                    corner[name] = bounds[pick]
+                if ok:
+                    corners.append(corner)
+            cases = corners + [
+                {name: strategies[name].example(rng) for name in names}
+                for _ in range(max(1, cfg.max_examples - len(corners)))
+            ]
+            for case in cases:
+                try:
+                    inner(**case)
+                except Exception as e:  # noqa: BLE001 - re-raise with the case
+                    raise AssertionError(
+                        f"falsifying example (fallback hypothesis): {case}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return decorate
+
+
+def install():
+    """Register the fallback as ``hypothesis`` / ``hypothesis.strategies``."""
+    import sys
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.sampled_from = sampled_from
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__is_fallback__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod

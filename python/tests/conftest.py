@@ -1,0 +1,22 @@
+"""Test bootstrap: import path + hypothesis fallback.
+
+- Puts ``python/`` on ``sys.path`` so ``from compile import ...`` works no
+  matter where pytest is invoked from.
+- If the real ``hypothesis`` package is unavailable (the offline container
+  has no network), registers a tiny API-compatible fallback that drives the
+  ``@given`` properties with deterministic pseudo-random examples. CI
+  installs the real hypothesis, so the full shrinking/edge-case machinery
+  still runs there; the fallback only keeps the suite *runnable* offline.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only in offline containers
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+
+    _install_hypothesis_fallback()

@@ -1,0 +1,119 @@
+//! Batch-scaling sweep: problems/sec of the interleaved batch engine as
+//! the batch size grows 1 → 64 (n = 512, bw = 32, f64, parallel native
+//! backend). The single-problem launch loop leaves most of the MaxBlocks
+//! capacity idle at this size (Table I: full occupancy needs much larger
+//! n); co-scheduling K problems fills the shared launches, so throughput
+//! rises with K until the capacity saturates.
+//!
+//! Honours BSVD_BENCH_FAST=1 (smaller sweep, fewer trials).
+
+use banded_svd::banded::storage::Banded;
+use banded_svd::batch::{BatchCoordinator, BatchInput};
+use banded_svd::config::{BatchConfig, PackingPolicy, TuneParams};
+use banded_svd::generate::random_banded;
+use banded_svd::util::bench::{fmt_duration, Table};
+use banded_svd::util::json::{write_experiment, Json};
+use banded_svd::util::rng::Xoshiro256;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let fast = std::env::var("BSVD_BENCH_FAST").ok().as_deref() == Some("1");
+    let (n, bw) = (512usize, 32usize);
+    let params = TuneParams { tpb: 32, tw: 16, max_blocks: 192 };
+    let tw = params.effective_tw(bw);
+    let batch_sizes: &[usize] = if fast { &[1, 4, 16] } else { &[1, 2, 4, 8, 16, 32, 64] };
+    let trials = if fast { 2 } else { 3 };
+    let max_k = *batch_sizes.last().unwrap();
+
+    println!("=== batch scaling: problems/sec vs batch size ===");
+    println!("(n={n}, bw={bw}, tw={tw}, f64, parallel native, MaxBlocks={})\n", params.max_blocks);
+
+    let mut rng = Xoshiro256::seed_from_u64(512);
+    let base: Vec<Banded<f64>> =
+        (0..max_k).map(|_| random_banded::<f64>(n, bw, tw, &mut rng)).collect();
+
+    let mut table = Table::new(vec![
+        "batch",
+        "policy",
+        "wall",
+        "problems/s",
+        "shared launches",
+        "occupancy",
+        "speedup",
+    ]);
+    let mut arr = Vec::new();
+    let mut tput_1 = 0.0f64;
+    let mut tput_16 = 0.0f64;
+    for &k in batch_sizes {
+        for policy in [PackingPolicy::RoundRobin, PackingPolicy::GreedyFill] {
+            let cfg = BatchConfig { max_coresident: max_k, policy };
+            let coord = BatchCoordinator::new(params, cfg, 0);
+            let mut best = Duration::MAX;
+            let mut launches = 0usize;
+            let mut occupancy = 0.0f64;
+            for _ in 0..trials {
+                let mut inputs: Vec<BatchInput> =
+                    base[..k].iter().map(|a| BatchInput::from((a.clone(), bw))).collect();
+                let t0 = Instant::now();
+                let report = coord.run(&mut inputs).expect("batched reduction failed");
+                let wall = t0.elapsed();
+                if wall < best {
+                    best = wall;
+                }
+                launches = report.metrics.aggregate.launches;
+                occupancy = report.metrics.occupancy_ratio();
+                for p in &report.problems {
+                    assert_eq!(p.residual_off_band, 0.0, "batch {k}: problem not reduced");
+                }
+            }
+            let tput = k as f64 / best.as_secs_f64();
+            if k == 1 && policy == PackingPolicy::RoundRobin {
+                tput_1 = tput;
+            }
+            if k == 16 && policy == PackingPolicy::RoundRobin {
+                tput_16 = tput;
+            }
+            let speedup = if tput_1 > 0.0 { tput / tput_1 } else { 1.0 };
+            let policy_name = match policy {
+                PackingPolicy::RoundRobin => "round-robin",
+                PackingPolicy::GreedyFill => "greedy-fill",
+            };
+            table.row(vec![
+                k.to_string(),
+                policy_name.to_string(),
+                fmt_duration(best),
+                format!("{tput:.1}"),
+                launches.to_string(),
+                format!("{occupancy:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            arr.push(
+                Json::obj()
+                    .set("batch", k)
+                    .set("policy", policy_name)
+                    .set("wall_s", best.as_secs_f64())
+                    .set("problems_per_s", tput)
+                    .set("shared_launches", launches)
+                    .set("occupancy", occupancy),
+            );
+        }
+    }
+    table.print();
+    if tput_1 > 0.0 && tput_16 > 0.0 {
+        println!(
+            "\nbatch-16 throughput / batch-1 throughput = {:.2}x (target: >= 2x)",
+            tput_16 / tput_1
+        );
+    }
+    let json = Json::obj()
+        .set("experiment", "batch_scaling")
+        .set("n", n)
+        .set("bw", bw)
+        .set("tw", tw)
+        .set("max_blocks", params.max_blocks)
+        .set("results", Json::Arr(arr));
+    match write_experiment("batch_scaling", &json) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write experiment json: {e}"),
+    }
+}

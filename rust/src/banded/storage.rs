@@ -63,6 +63,21 @@ impl<T: Scalar> Banded<T> {
         &mut self.data
     }
 
+    /// Check that this working storage can hold a bulge-chasing reduction
+    /// of bandwidth `bw` with inner tilewidth `tw`: fill-in reaches `tw`
+    /// diagonals past the band on both sides, so `kd_sub ≥ tw` and
+    /// `kd_super ≥ bw + tw`. The single validation shared by the
+    /// coordinator and the batch engine.
+    pub fn check_reduction_storage(&self, bw: usize, tw: usize) -> crate::error::Result<()> {
+        if self.kd_sub < tw || self.kd_super < bw + tw {
+            return Err(crate::error::Error::Config(format!(
+                "storage (kd_sub={}, kd_super={}) too small for bw={bw}, tw={tw}",
+                self.kd_sub, self.kd_super
+            )));
+        }
+        Ok(())
+    }
+
     /// True if (i, j) lies within the representable diagonals.
     #[inline]
     pub fn in_band(&self, i: usize, j: usize) -> bool {

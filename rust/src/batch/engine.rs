@@ -1,0 +1,440 @@
+//! The interleaved launch loop shared by the batch coordinator and the
+//! single-problem coordinator (which is the batch-size-1 case).
+//!
+//! Each co-resident problem owns a [`TaskStream`]; every *shared launch*
+//! pops at most one launch from each selected stream, flattens the tasks
+//! into one list, and dispatches it over the thread pool with a single
+//! barrier — the CPU analog of co-scheduling thread blocks from
+//! independent grids under the joint MaxBlocks capacity.
+
+use crate::banded::storage::Banded;
+use crate::batch::plan::BatchPlan;
+use crate::batch::BatchInput;
+use crate::bulge::cycle::{exec_cycle_shared, CycleWorkspace, SharedBanded};
+use crate::bulge::schedule::{stage_plan, CycleTask, Stage, TaskStream};
+use crate::config::{BatchConfig, PackingPolicy, TuneParams};
+use crate::coordinator::metrics::LaunchMetrics;
+use crate::error::Result;
+use crate::scalar::Scalar;
+use crate::util::threadpool::ThreadPool;
+use std::marker::PhantomData;
+use std::time::{Duration, Instant};
+
+/// Type-erased executor for one problem's cycle-tasks (erases the scalar
+/// type so problems of mixed precision share one launch loop).
+trait ProblemExec: Sync {
+    /// Execute `tasks` of stage `si` back-to-back on this problem.
+    ///
+    /// # Safety
+    /// The tasks must be pairwise element-disjoint from every other task
+    /// concurrently executing on the same problem (guaranteed when all
+    /// come from a single `TaskStream` launch), and the problem's buffer
+    /// must not be accessed otherwise for the duration of the call.
+    unsafe fn exec_tasks(&self, si: usize, tasks: &[CycleTask]);
+}
+
+struct NativeExec<T> {
+    view: SharedBanded<T>,
+    plan: Vec<Stage>,
+}
+
+impl<T: Scalar> ProblemExec for NativeExec<T> {
+    unsafe fn exec_tasks(&self, si: usize, tasks: &[CycleTask]) {
+        let stage = self.plan[si];
+        let mut ws = CycleWorkspace::new(&stage);
+        for task in tasks {
+            exec_cycle_shared(&self.view, &stage, task, &mut ws);
+        }
+    }
+}
+
+/// One problem admitted to the interleaved launch loop: its erased
+/// executor, its launch stream, and its private metrics.
+pub(crate) struct Runner<'a> {
+    exec: Box<dyn ProblemExec + Sync + 'a>,
+    pub(crate) stream: TaskStream,
+    pub(crate) metrics: LaunchMetrics,
+    /// Exclusive borrow of the underlying matrix for the runner's life.
+    _borrow: PhantomData<&'a mut ()>,
+}
+
+impl<'a> Runner<'a> {
+    pub(crate) fn new<T: Scalar>(
+        a: &'a mut Banded<T>,
+        bw: usize,
+        params: &TuneParams,
+    ) -> Result<Self> {
+        let tw = params.effective_tw(bw);
+        a.check_reduction_storage(bw, tw)?;
+        let n = a.n();
+        let plan = stage_plan(bw, tw);
+        let stream = TaskStream::new(plan.clone(), n);
+        let exec: Box<dyn ProblemExec + Sync + 'a> =
+            Box::new(NativeExec { view: SharedBanded::new(a), plan });
+        Ok(Self { exec, stream, metrics: LaunchMetrics::default(), _borrow: PhantomData })
+    }
+}
+
+/// Aggregate accounting of the shared launch loop.
+#[derive(Clone, Debug)]
+pub struct BatchMetrics {
+    /// Shared launches (each = one pool dispatch + one barrier).
+    pub aggregate: LaunchMetrics,
+    /// Joint MaxBlocks capacity the launches were packed under.
+    pub capacity: usize,
+    pub problems: usize,
+    /// Shared launches that carried tasks from more than one problem.
+    pub co_scheduled_launches: usize,
+    pub max_problems_per_launch: usize,
+}
+
+impl BatchMetrics {
+    /// Mean fraction of the capacity filled per shared launch (> 1.0 when
+    /// software loop unrolling engages).
+    pub fn occupancy_ratio(&self) -> f64 {
+        self.aggregate.occupancy_ratio(self.capacity)
+    }
+}
+
+/// Drive every runner's stream to completion, packing launches into
+/// shared launches under `capacity` according to `policy`. At most
+/// `max_coresident` problems are interleaved at a time; later problems
+/// are admitted as earlier ones finish.
+pub(crate) fn run_interleaved(
+    runners: &mut [Runner<'_>],
+    pool: &ThreadPool,
+    capacity: usize,
+    policy: PackingPolicy,
+    max_coresident: usize,
+) -> BatchMetrics {
+    let capacity = capacity.max(1);
+    let max_coresident = max_coresident.max(1);
+    let mut bm = BatchMetrics {
+        aggregate: LaunchMetrics::default(),
+        capacity,
+        problems: runners.len(),
+        co_scheduled_launches: 0,
+        max_problems_per_launch: 0,
+    };
+    let mut rotation = 0usize;
+    // Flattened shared launch, rebuilt every iteration: `keys[i]` names
+    // the (problem, stage) of `tasks[i]`; same-key runs are contiguous so
+    // workers can share one workspace per run.
+    let mut keys: Vec<(u32, u32)> = Vec::new();
+    let mut tasks: Vec<CycleTask> = Vec::new();
+    loop {
+        // Admission window: the first `max_coresident` unfinished problems.
+        let admitted: Vec<usize> = (0..runners.len())
+            .filter(|&p| !runners[p].stream.is_done())
+            .take(max_coresident)
+            .collect();
+        if admitted.is_empty() {
+            break;
+        }
+        let order: Vec<usize> = match policy {
+            PackingPolicy::RoundRobin => {
+                let start = rotation % admitted.len();
+                admitted[start..].iter().chain(admitted[..start].iter()).copied().collect()
+            }
+            PackingPolicy::GreedyFill => {
+                let mut by_size = admitted.clone();
+                by_size.sort_by_key(|&p| std::cmp::Reverse(runners[p].stream.peek_count()));
+                by_size
+            }
+        };
+        rotation = rotation.wrapping_add(1);
+
+        // Select: pop at most one launch per problem while it fits (the
+        // first always fits, guaranteeing progress).
+        keys.clear();
+        tasks.clear();
+        let mut selected = 0usize;
+        for &p in &order {
+            let count = runners[p].stream.peek_count();
+            if !tasks.is_empty() && tasks.len() + count > capacity {
+                continue;
+            }
+            let (si, mut ts) = runners[p].stream.next_launch().expect("admitted => not done");
+            runners[p].metrics.record_launch(ts.len(), capacity);
+            for task in ts.drain(..) {
+                keys.push((p as u32, si as u32));
+                tasks.push(task);
+            }
+            selected += 1;
+            if tasks.len() >= capacity {
+                break;
+            }
+        }
+        bm.aggregate.record_launch(tasks.len(), capacity);
+        if selected > 1 {
+            bm.co_scheduled_launches += 1;
+        }
+        bm.max_problems_per_launch = bm.max_problems_per_launch.max(selected);
+
+        // Execute: one pool dispatch, one barrier — tasks within the
+        // shared launch are disjoint (schedule property within a problem,
+        // separate buffers across problems).
+        let chunks = tasks.len().min(capacity).min(pool.len().max(1));
+        let keys_ref: &[(u32, u32)] = &keys;
+        let tasks_ref: &[CycleTask] = &tasks;
+        let runners_ref: &[Runner<'_>] = runners;
+        pool.for_each_chunk(tasks.len(), chunks, |range| {
+            let mut i = range.start;
+            while i < range.end {
+                let key = keys_ref[i];
+                let mut j = i + 1;
+                while j < range.end && keys_ref[j] == key {
+                    j += 1;
+                }
+                let (p, si) = (key.0 as usize, key.1 as usize);
+                // SAFETY: within a shared launch every task is disjoint
+                // from every other (see above); launches are ordered by
+                // the pool barrier.
+                unsafe { runners_ref[p].exec.exec_tasks(si, &tasks_ref[i..j]) };
+                i = j;
+            }
+        });
+    }
+    bm
+}
+
+/// Per-problem slice of a [`BatchReport`].
+#[derive(Clone, Debug)]
+pub struct ProblemReport {
+    pub n: usize,
+    pub bw: usize,
+    pub precision: &'static str,
+    pub diag: Vec<f64>,
+    pub superdiag: Vec<f64>,
+    /// Largest |element| outside the bidiagonal after the run.
+    pub residual_off_band: f64,
+    pub metrics: LaunchMetrics,
+}
+
+/// Outcome of a batched reduction.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    pub plan: BatchPlan,
+    pub problems: Vec<ProblemReport>,
+    pub metrics: BatchMetrics,
+    pub wall: Duration,
+}
+
+impl BatchReport {
+    /// Problems reduced per second of wall-clock.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs > 0.0 {
+            self.problems.len() as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The batch coordinator: tuning parameters, batch knobs, worker pool.
+pub struct BatchCoordinator {
+    pub params: TuneParams,
+    pub cfg: BatchConfig,
+    pool: ThreadPool,
+}
+
+impl BatchCoordinator {
+    /// `threads == 0` uses all available hardware threads.
+    pub fn new(params: TuneParams, cfg: BatchConfig, threads: usize) -> Self {
+        Self { params, cfg, pool: ThreadPool::new(threads) }
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    fn capacity(&self) -> usize {
+        self.params.max_blocks.max(1)
+    }
+
+    /// Validate the batch and lay out its packing plan without running it.
+    pub fn plan(&self, inputs: &[BatchInput]) -> Result<BatchPlan> {
+        BatchPlan::new(inputs, &self.params, &self.cfg)
+    }
+
+    /// Reduce every problem to bidiagonal form in place, interleaving
+    /// their launch streams into shared launches.
+    pub fn run(&self, inputs: &mut [BatchInput]) -> Result<BatchReport> {
+        let plan = BatchPlan::new(inputs, &self.params, &self.cfg)?;
+        let t_start = Instant::now();
+        let mut runners: Vec<Runner<'_>> = Vec::with_capacity(inputs.len());
+        for input in inputs.iter_mut() {
+            runners.push(match input {
+                BatchInput::F64 { a, bw } => Runner::new(a, *bw, &self.params)?,
+                BatchInput::F32 { a, bw } => Runner::new(a, *bw, &self.params)?,
+                BatchInput::F16 { a, bw } => Runner::new(a, *bw, &self.params)?,
+            });
+        }
+        let mut metrics = run_interleaved(
+            &mut runners,
+            &self.pool,
+            self.capacity(),
+            self.cfg.policy,
+            self.cfg.max_coresident,
+        );
+        let per_problem: Vec<LaunchMetrics> = runners.iter().map(|r| r.metrics.clone()).collect();
+        drop(runners);
+        let wall = t_start.elapsed();
+        metrics.aggregate.wall = wall;
+        let problems = inputs
+            .iter()
+            .zip(per_problem)
+            .map(|(input, m)| {
+                let (diag, superdiag) = input.bidiagonal_f64();
+                ProblemReport {
+                    n: input.n(),
+                    bw: input.bw(),
+                    precision: input.precision(),
+                    diag,
+                    superdiag,
+                    residual_off_band: input.max_off_band(1),
+                    metrics: m,
+                }
+            })
+            .collect();
+        Ok(BatchReport { plan, problems, metrics, wall })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+    use crate::coordinator::Coordinator;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    fn mixed_batch(seed: u64) -> Vec<BatchInput> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        vec![
+            BatchInput::from((random_banded::<f64>(64, 8, 4, &mut rng), 8)),
+            BatchInput::from((random_banded::<f64>(40, 6, 4, &mut rng), 6)),
+            BatchInput::from((random_banded::<f32>(48, 5, 4, &mut rng), 5)),
+            BatchInput::from((random_banded::<crate::scalar::F16>(24, 3, 3, &mut rng), 3)),
+        ]
+    }
+
+    fn params() -> TuneParams {
+        TuneParams { tpb: 32, tw: 4, max_blocks: 24 }
+    }
+
+    #[test]
+    fn batch_reduces_every_problem_exactly() {
+        for policy in [PackingPolicy::RoundRobin, PackingPolicy::GreedyFill] {
+            let cfg = BatchConfig { max_coresident: 8, policy };
+            let coord = BatchCoordinator::new(params(), cfg, 4);
+            let mut inputs = mixed_batch(11);
+            let report = coord.run(&mut inputs).unwrap();
+            assert_eq!(report.problems.len(), 4);
+            for (i, p) in report.problems.iter().enumerate() {
+                assert_eq!(p.residual_off_band, 0.0, "problem {i} ({policy:?})");
+                assert_eq!(p.diag.len(), p.n);
+                assert_eq!(p.superdiag.len(), p.n - 1);
+                assert!(p.metrics.launches > 0);
+            }
+            assert_eq!(
+                report.metrics.aggregate.tasks,
+                report.plan.total_tasks(),
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_f64_results_are_bitwise_equal_to_solo_runs() {
+        let cfg = BatchConfig { max_coresident: 8, policy: PackingPolicy::RoundRobin };
+        let batch_coord = BatchCoordinator::new(params(), cfg, 4);
+        let solo_coord = Coordinator::new(params(), 4);
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let shapes = [(64usize, 8usize), (40, 6), (52, 9)];
+        let mats: Vec<_> = shapes
+            .iter()
+            .map(|&(n, bw)| random_banded::<f64>(n, bw, params().effective_tw(bw), &mut rng))
+            .collect();
+        let mut inputs: Vec<BatchInput> = mats
+            .iter()
+            .zip(shapes.iter())
+            .map(|(a, &(_, bw))| BatchInput::from((a.clone(), bw)))
+            .collect();
+        let report = batch_coord.run(&mut inputs).unwrap();
+        for ((a, &(_, bw)), p) in mats.iter().zip(shapes.iter()).zip(report.problems.iter()) {
+            let mut solo = a.clone();
+            let r = solo_coord.reduce_native(&mut solo, bw, Backend::Parallel).unwrap();
+            assert_eq!(r.diag, p.diag);
+            assert_eq!(r.superdiag, p.superdiag);
+            assert_eq!(r.metrics.launches, p.metrics.launches);
+            assert_eq!(r.metrics.tasks, p.metrics.tasks);
+        }
+    }
+
+    #[test]
+    fn shared_launches_actually_co_schedule() {
+        let cfg = BatchConfig { max_coresident: 8, policy: PackingPolicy::RoundRobin };
+        let coord = BatchCoordinator::new(params(), cfg, 4);
+        let mut inputs = mixed_batch(31);
+        let report = coord.run(&mut inputs).unwrap();
+        assert!(report.metrics.co_scheduled_launches > 0);
+        assert!(report.metrics.max_problems_per_launch > 1);
+        // Interleaving strictly beats running the problems back to back.
+        assert!(report.metrics.aggregate.launches < report.plan.total_launches());
+        assert!(report.metrics.aggregate.launches >= report.plan.min_shared_launches());
+        assert!(report.metrics.occupancy_ratio() > 0.0);
+        assert!(report.throughput() > 0.0);
+    }
+
+    #[test]
+    fn max_coresident_one_serializes_the_batch() {
+        let cfg = BatchConfig { max_coresident: 1, policy: PackingPolicy::GreedyFill };
+        let coord = BatchCoordinator::new(params(), cfg, 2);
+        let mut inputs = mixed_batch(41);
+        let report = coord.run(&mut inputs).unwrap();
+        assert_eq!(report.metrics.co_scheduled_launches, 0);
+        assert_eq!(report.metrics.max_problems_per_launch, 1);
+        assert_eq!(report.metrics.aggregate.launches, report.plan.total_launches());
+        for p in &report.problems {
+            assert_eq!(p.residual_off_band, 0.0);
+        }
+    }
+
+    #[test]
+    fn policies_agree_on_results() {
+        let mk = |policy| {
+            let cfg = BatchConfig { max_coresident: 8, policy };
+            let coord = BatchCoordinator::new(params(), cfg, 4);
+            let mut inputs = mixed_batch(51);
+            coord.run(&mut inputs).unwrap()
+        };
+        let rr = mk(PackingPolicy::RoundRobin);
+        let greedy = mk(PackingPolicy::GreedyFill);
+        for (a, b) in rr.problems.iter().zip(greedy.problems.iter()) {
+            assert_eq!(a.diag, b.diag);
+            assert_eq!(a.superdiag, b.superdiag);
+        }
+    }
+
+    #[test]
+    fn undersized_storage_is_rejected_before_any_work() {
+        use crate::banded::storage::Banded;
+        let coord = BatchCoordinator::new(
+            TuneParams { tpb: 32, tw: 8, max_blocks: 8 },
+            BatchConfig::default(),
+            1,
+        );
+        let mut inputs = vec![BatchInput::from((Banded::<f64>::zeros(32, 9, 1), 8))];
+        assert!(coord.run(&mut inputs).is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let coord = BatchCoordinator::new(params(), BatchConfig::default(), 1);
+        let report = coord.run(&mut []).unwrap();
+        assert_eq!(report.problems.len(), 0);
+        assert_eq!(report.metrics.aggregate.launches, 0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Batched multi-problem reduction engine.
+//!
+//! The paper's launch loop saturates a GPU with *one* matrix only once
+//! `n` is large (Table I); production workloads are usually the
+//! opposite — many small-to-medium banded problems per call (covariance
+//! spectra, per-head attention blocks, PDE operator sweeps). This module
+//! reduces a heterogeneous set of [`Banded`] problems (mixed `n`, `bw`,
+//! precision) *concurrently* by interleaving their per-problem launch
+//! streams ([`crate::bulge::schedule::TaskStream`]) into shared
+//! launches, packing tasks from multiple problems under the joint
+//! `MaxBlocks` capacity — exactly how a GPU co-schedules thread blocks
+//! from independent grids.
+//!
+//! Correctness invariant: a shared launch contains **at most one launch
+//! per problem**, so each problem's launches still execute in stream
+//! order with a barrier between them. Per-problem results are therefore
+//! bitwise identical to a solo [`crate::coordinator::Coordinator`] run
+//! (property-tested in `rust/tests/batch_equivalence.rs`); tasks from
+//! different problems touch different buffers and are trivially
+//! disjoint.
+//!
+//! - [`BatchInput`]       — one problem: a banded matrix + its bandwidth,
+//!   in any supported precision.
+//! - [`BatchPlan`]        — the static packing plan (per-problem stages,
+//!   launch/task totals, capacity, policy).
+//! - [`BatchCoordinator`] — owns the pool and knobs; runs the interleaved
+//!   launch loop. The single-problem coordinator is the batch-size-1
+//!   case of this path.
+//! - [`BatchReport`]      — per-problem bidiagonals + [`LaunchMetrics`],
+//!   plus aggregate occupancy of the shared launches.
+//!
+//! [`LaunchMetrics`]: crate::coordinator::metrics::LaunchMetrics
+
+pub(crate) mod engine;
+mod plan;
+
+pub use engine::{BatchCoordinator, BatchMetrics, BatchReport, ProblemReport};
+pub use plan::{BatchPlan, ProblemPlan};
+
+use crate::banded::storage::Banded;
+use crate::config::TuneParams;
+use crate::error::Result;
+use crate::scalar::{Scalar, F16};
+
+/// One problem of a batch: an owned banded matrix (reduced in place by
+/// [`BatchCoordinator::run`]) plus its bandwidth, in one of the three
+/// precisions of the paper's accuracy axis.
+#[derive(Clone, Debug)]
+pub enum BatchInput {
+    F64 { a: Banded<f64>, bw: usize },
+    F32 { a: Banded<f32>, bw: usize },
+    F16 { a: Banded<F16>, bw: usize },
+}
+
+impl BatchInput {
+    pub fn n(&self) -> usize {
+        match self {
+            BatchInput::F64 { a, .. } => a.n(),
+            BatchInput::F32 { a, .. } => a.n(),
+            BatchInput::F16 { a, .. } => a.n(),
+        }
+    }
+
+    pub fn bw(&self) -> usize {
+        match self {
+            BatchInput::F64 { bw, .. } | BatchInput::F32 { bw, .. } | BatchInput::F16 { bw, .. } => {
+                *bw
+            }
+        }
+    }
+
+    /// Paper-style precision label ("fp64" / "fp32" / "fp16").
+    pub fn precision(&self) -> &'static str {
+        match self {
+            BatchInput::F64 { .. } => <f64 as Scalar>::NAME,
+            BatchInput::F32 { .. } => <f32 as Scalar>::NAME,
+            BatchInput::F16 { .. } => <F16 as Scalar>::NAME,
+        }
+    }
+
+    /// Main diagonal and first superdiagonal, widened to f64.
+    pub fn bidiagonal_f64(&self) -> (Vec<f64>, Vec<f64>) {
+        fn widen<T: Scalar>(a: &Banded<T>) -> (Vec<f64>, Vec<f64>) {
+            let (d, e) = a.bidiagonal();
+            (
+                d.iter().map(|v| v.to_f64()).collect(),
+                e.iter().map(|v| v.to_f64()).collect(),
+            )
+        }
+        match self {
+            BatchInput::F64 { a, .. } => widen(a),
+            BatchInput::F32 { a, .. } => widen(a),
+            BatchInput::F16 { a, .. } => widen(a),
+        }
+    }
+
+    /// Largest |element| outside the first `keep_super` superdiagonals.
+    pub fn max_off_band(&self, keep_super: usize) -> f64 {
+        match self {
+            BatchInput::F64 { a, .. } => a.max_off_band(keep_super),
+            BatchInput::F32 { a, .. } => a.max_off_band(keep_super),
+            BatchInput::F16 { a, .. } => a.max_off_band(keep_super),
+        }
+    }
+
+    /// Check the problem's working storage against the tuning parameters,
+    /// returning `(n, bw, effective_tw)` on success.
+    pub(crate) fn validate(&self, params: &TuneParams) -> Result<(usize, usize, usize)> {
+        fn check<T: Scalar>(
+            a: &Banded<T>,
+            bw: usize,
+            params: &TuneParams,
+        ) -> Result<(usize, usize, usize)> {
+            let tw = params.effective_tw(bw);
+            a.check_reduction_storage(bw, tw)?;
+            Ok((a.n(), bw, tw))
+        }
+        match self {
+            BatchInput::F64 { a, bw } => check(a, *bw, params),
+            BatchInput::F32 { a, bw } => check(a, *bw, params),
+            BatchInput::F16 { a, bw } => check(a, *bw, params),
+        }
+    }
+}
+
+impl From<(Banded<f64>, usize)> for BatchInput {
+    fn from((a, bw): (Banded<f64>, usize)) -> Self {
+        BatchInput::F64 { a, bw }
+    }
+}
+
+impl From<(Banded<f32>, usize)> for BatchInput {
+    fn from((a, bw): (Banded<f32>, usize)) -> Self {
+        BatchInput::F32 { a, bw }
+    }
+}
+
+impl From<(Banded<F16>, usize)> for BatchInput {
+    fn from((a, bw): (Banded<F16>, usize)) -> Self {
+        BatchInput::F16 { a, bw }
+    }
+}

@@ -1,0 +1,147 @@
+//! Static planning for a batched reduction: per-problem stage plans and
+//! launch/task totals, plus the joint capacity and packing policy the
+//! engine will schedule under. Computed up front (all counts come from
+//! the closed-form schedule, no matrix data is touched) so callers can
+//! size a batch before committing to it.
+
+use crate::batch::BatchInput;
+use crate::bulge::schedule::{stage_plan, Stage};
+use crate::config::{BatchConfig, PackingPolicy, TuneParams};
+use crate::error::Result;
+
+/// One problem's slice of the plan.
+#[derive(Clone, Debug)]
+pub struct ProblemPlan {
+    /// Index into the batch (stable across plan/report).
+    pub index: usize,
+    pub n: usize,
+    pub bw: usize,
+    /// Effective inner tilewidth (clamped to `bw − 1`).
+    pub tw: usize,
+    pub precision: &'static str,
+    pub stages: Vec<Stage>,
+    /// Non-empty launches this problem will contribute.
+    pub launches: usize,
+    /// Total cycle-tasks (thread blocks) across all stages.
+    pub tasks: usize,
+}
+
+/// The packing plan for a whole batch.
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    /// Joint MaxBlocks capacity shared launches are packed under.
+    pub capacity: usize,
+    pub policy: PackingPolicy,
+    pub max_coresident: usize,
+    pub problems: Vec<ProblemPlan>,
+}
+
+impl BatchPlan {
+    /// Validate every input and lay out its schedule.
+    pub fn new(inputs: &[BatchInput], params: &TuneParams, cfg: &BatchConfig) -> Result<Self> {
+        let mut problems = Vec::with_capacity(inputs.len());
+        for (index, input) in inputs.iter().enumerate() {
+            let (n, bw, tw) = input.validate(params)?;
+            let stages = stage_plan(bw, tw);
+            let mut launches = 0;
+            let mut tasks = 0;
+            for stage in &stages {
+                for t in 0..stage.total_launches(n) {
+                    let count = stage.tasks_at_count(n, t);
+                    if count > 0 {
+                        launches += 1;
+                        tasks += count;
+                    }
+                }
+            }
+            problems.push(ProblemPlan {
+                index,
+                n,
+                bw,
+                tw,
+                precision: input.precision(),
+                stages,
+                launches,
+                tasks,
+            });
+        }
+        Ok(Self {
+            capacity: params.max_blocks.max(1),
+            policy: cfg.policy,
+            max_coresident: cfg.max_coresident.max(1),
+            problems,
+        })
+    }
+
+    /// Total cycle-tasks across the batch.
+    pub fn total_tasks(&self) -> usize {
+        self.problems.iter().map(|p| p.tasks).sum()
+    }
+
+    /// Total per-problem launches — the shared-launch count when problems
+    /// run strictly one after another (`max_coresident = 1`).
+    pub fn total_launches(&self) -> usize {
+        self.problems.iter().map(|p| p.launches).sum()
+    }
+
+    /// Lower bound on shared launches when the whole batch is co-resident
+    /// and capacity never binds: streams advance in lockstep, so the
+    /// longest stream dominates.
+    pub fn min_shared_launches(&self) -> usize {
+        self.problems.iter().map(|p| p.launches).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bulge::schedule::TaskStream;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    fn inputs() -> Vec<BatchInput> {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        vec![
+            BatchInput::from((random_banded::<f64>(48, 6, 3, &mut rng), 6)),
+            BatchInput::from((random_banded::<f32>(32, 4, 3, &mut rng), 4)),
+        ]
+    }
+
+    #[test]
+    fn plan_counts_match_task_streams() {
+        let params = TuneParams { tpb: 32, tw: 3, max_blocks: 16 };
+        let plan = BatchPlan::new(&inputs(), &params, &BatchConfig::default()).unwrap();
+        assert_eq!(plan.problems.len(), 2);
+        assert_eq!(plan.capacity, 16);
+        for p in &plan.problems {
+            let stream = TaskStream::new(p.stages.clone(), p.n);
+            let mut launches = 0;
+            let mut tasks = 0;
+            for (_, ts) in stream {
+                launches += 1;
+                tasks += ts.len();
+            }
+            assert_eq!(p.launches, launches, "problem {}", p.index);
+            assert_eq!(p.tasks, tasks, "problem {}", p.index);
+        }
+        assert_eq!(plan.total_launches(), plan.problems.iter().map(|p| p.launches).sum());
+        assert!(plan.min_shared_launches() <= plan.total_launches());
+        assert!(plan.total_tasks() > 0);
+    }
+
+    #[test]
+    fn plan_rejects_undersized_storage() {
+        use crate::banded::storage::Banded;
+        let params = TuneParams { tpb: 32, tw: 8, max_blocks: 16 };
+        let bad = vec![BatchInput::from((Banded::<f64>::zeros(32, 9, 1), 8))];
+        assert!(BatchPlan::new(&bad, &params, &BatchConfig::default()).is_err());
+    }
+
+    #[test]
+    fn plan_records_precision_labels() {
+        let params = TuneParams { tpb: 32, tw: 3, max_blocks: 16 };
+        let plan = BatchPlan::new(&inputs(), &params, &BatchConfig::default()).unwrap();
+        assert_eq!(plan.problems[0].precision, "fp64");
+        assert_eq!(plan.problems[1].precision, "fp32");
+    }
+}

@@ -1,3 +1,8 @@
+//! Determinism diagnostic: repeatedly reduce the same matrix through the
+//! sequential and parallel native backends and report any element-level
+//! divergence (there must be none — the parallel schedule executes the
+//! exact same reflector ops on disjoint data).
+
 use banded_svd::banded::storage::Banded;
 use banded_svd::config::{Backend, TuneParams};
 use banded_svd::coordinator::Coordinator;
@@ -18,7 +23,13 @@ fn main() {
         let mut ndiff = 0;
         let mut worst = 0.0f64;
         for (i, (x, y)) in a1.data().iter().zip(a2.data().iter()).enumerate() {
-            if x != y { ndiff += 1; worst = worst.max((x - y).abs()); if ndiff < 4 { println!("trial {trial} idx {i}: {x} vs {y}"); } }
+            if x != y {
+                ndiff += 1;
+                worst = worst.max((x - y).abs());
+                if ndiff < 4 {
+                    println!("trial {trial} idx {i}: {x} vs {y}");
+                }
+            }
         }
         println!("trial {trial}: ndiff={ndiff} worst={worst:.3e}");
     }

@@ -200,6 +200,108 @@ pub fn stage_task_count(stage: &Stage, n: usize) -> usize {
     (0..ns).map(|k| stage.cmax(n, k) + 1).sum()
 }
 
+/// A problem's launch-ordered stream of ready cycle-tasks.
+///
+/// Walks a stage plan in schedule order — stage by stage, global cycle by
+/// global cycle — yielding `(stage_index, tasks)` for every *non-empty*
+/// launch. Launches must execute in stream order with a barrier between
+/// them (launch `t+1` reads what launch `t` wrote); the tasks *within* one
+/// yielded launch are pairwise element-disjoint and may run concurrently.
+///
+/// This is the unit the batch engine interleaves: each co-scheduled
+/// problem contributes at most one launch of tasks per shared launch, so
+/// per-problem ordering (and therefore bitwise results) is preserved no
+/// matter how streams from different problems are packed together.
+#[derive(Clone, Debug)]
+pub struct TaskStream {
+    plan: Vec<Stage>,
+    n: usize,
+    stage_idx: usize,
+    t: usize,
+    launches_emitted: usize,
+}
+
+impl TaskStream {
+    /// Stream over an explicit stage plan for an n×n problem.
+    pub fn new(plan: Vec<Stage>, n: usize) -> Self {
+        let mut s = Self { plan, n, stage_idx: 0, t: 0, launches_emitted: 0 };
+        s.settle();
+        s
+    }
+
+    /// Stream for a bandwidth-`bw` problem reduced with tilewidth `tw`.
+    pub fn for_problem(n: usize, bw: usize, tw: usize) -> Self {
+        Self::new(stage_plan(bw, tw), n)
+    }
+
+    /// Advance the cursor to the next launch with at least one task (or to
+    /// the end of the plan).
+    fn settle(&mut self) {
+        while self.stage_idx < self.plan.len() {
+            let stage = &self.plan[self.stage_idx];
+            let total = stage.total_launches(self.n);
+            while self.t < total && stage.tasks_at_count(self.n, self.t) == 0 {
+                self.t += 1;
+            }
+            if self.t < total {
+                return;
+            }
+            self.stage_idx += 1;
+            self.t = 0;
+        }
+    }
+
+    /// True once every launch of every stage has been emitted.
+    pub fn is_done(&self) -> bool {
+        self.stage_idx >= self.plan.len()
+    }
+
+    pub fn plan(&self) -> &[Stage] {
+        &self.plan
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Non-empty launches yielded so far.
+    pub fn launches_emitted(&self) -> usize {
+        self.launches_emitted
+    }
+
+    /// Task count of the next launch without advancing — O(1) via the
+    /// closed-form count, so packing policies can bin-pack cheaply.
+    pub fn peek_count(&self) -> usize {
+        if self.is_done() {
+            0
+        } else {
+            self.plan[self.stage_idx].tasks_at_count(self.n, self.t)
+        }
+    }
+
+    /// Yield the next launch: its stage index and its ready tasks.
+    pub fn next_launch(&mut self) -> Option<(usize, Vec<CycleTask>)> {
+        if self.is_done() {
+            return None;
+        }
+        let si = self.stage_idx;
+        let tasks = self.plan[si].tasks_at(self.n, self.t);
+        debug_assert!(!tasks.is_empty(), "settle() must skip empty launches");
+        self.t += 1;
+        self.launches_emitted += 1;
+        self.settle();
+        Some((si, tasks))
+    }
+}
+
+impl Iterator for TaskStream {
+    type Item = (usize, Vec<CycleTask>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_launch()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,6 +445,61 @@ mod tests {
         assert_eq!(s.num_sweeps(5), 0);
         assert_eq!(s.total_launches(5), 0);
         assert!(s.tasks_at(5, 0).is_empty());
+    }
+
+    #[test]
+    fn task_stream_covers_every_task_in_schedule_order() {
+        for (n, bw, tw) in [(64usize, 8usize, 4usize), (40, 6, 5), (24, 2, 1), (96, 12, 3)] {
+            let plan = stage_plan(bw, tw);
+            let mut stream = TaskStream::new(plan.clone(), n);
+            for (si, stage) in plan.iter().enumerate() {
+                let mut expect = Vec::new();
+                for t in 0..stage.total_launches(n) {
+                    let tasks = stage.tasks_at(n, t);
+                    if !tasks.is_empty() {
+                        expect.push(tasks);
+                    }
+                }
+                for want in expect {
+                    let (got_si, got) = stream.next_launch().expect("stream ended early");
+                    assert_eq!(got_si, si, "n={n} bw={bw} tw={tw}");
+                    assert_eq!(got, want, "n={n} bw={bw} tw={tw}");
+                }
+            }
+            assert!(stream.is_done());
+            assert!(stream.next_launch().is_none());
+        }
+    }
+
+    #[test]
+    fn task_stream_peek_matches_next() {
+        let mut stream = TaskStream::for_problem(48, 6, 3);
+        let mut launches = 0;
+        while !stream.is_done() {
+            let peek = stream.peek_count();
+            let (_, tasks) = stream.next_launch().unwrap();
+            assert_eq!(peek, tasks.len());
+            assert!(!tasks.is_empty(), "stream must skip empty launches");
+            launches += 1;
+        }
+        assert_eq!(stream.launches_emitted(), launches);
+        assert_eq!(stream.peek_count(), 0);
+    }
+
+    #[test]
+    fn task_stream_total_tasks_match_stage_counts() {
+        let (n, bw, tw) = (72usize, 9usize, 4usize);
+        let plan = stage_plan(bw, tw);
+        let expect: usize = plan.iter().map(|s| stage_task_count(s, n)).sum();
+        let got: usize = TaskStream::new(plan, n).map(|(_, tasks)| tasks.len()).sum();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn task_stream_of_bidiagonal_problem_is_empty() {
+        let mut stream = TaskStream::for_problem(16, 1, 4);
+        assert!(stream.is_done());
+        assert!(stream.next_launch().is_none());
     }
 
     #[test]

@@ -50,6 +50,57 @@ impl Default for TuneParams {
     }
 }
 
+/// How the batch engine packs per-problem launches into shared launches
+/// (paper §III analogy: co-scheduling thread blocks from independent
+/// grids under the joint MaxBlocks capacity).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum PackingPolicy {
+    /// Visit live problems in rotating order, packing each problem's next
+    /// launch while it fits. Fair: every problem periodically goes first.
+    #[default]
+    RoundRobin,
+    /// Sort live problems by their next launch's task count (descending)
+    /// and fill the capacity bin greedily. Maximizes launch occupancy.
+    GreedyFill,
+}
+
+impl std::str::FromStr for PackingPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "rr" | "round-robin" => Ok(PackingPolicy::RoundRobin),
+            "greedy" | "greedy-fill" => Ok(PackingPolicy::GreedyFill),
+            other => Err(format!("unknown packing policy {other:?} (round-robin|greedy-fill)")),
+        }
+    }
+}
+
+/// Knobs of the batched reduction engine.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Maximum problems interleaved at once; problems beyond the window
+    /// are admitted as earlier ones finish (bounds peak working-set).
+    pub max_coresident: usize,
+    /// How per-problem launches are packed into shared launches.
+    pub policy: PackingPolicy,
+}
+
+impl BatchConfig {
+    pub fn new(max_coresident: usize, policy: PackingPolicy) -> Result<Self> {
+        if max_coresident == 0 {
+            return Err(Error::Config("max_coresident must be positive".into()));
+        }
+        Ok(Self { max_coresident, policy })
+    }
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { max_coresident: 64, policy: PackingPolicy::RoundRobin }
+    }
+}
+
 /// Execution backend selector for the reduction driver.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -102,6 +153,25 @@ mod tests {
         assert_eq!(p.effective_tw(8), 7);
         assert_eq!(p.effective_tw(2), 1);
         assert_eq!(p.effective_tw(1), 1);
+    }
+
+    #[test]
+    fn packing_policy_parses() {
+        assert_eq!("rr".parse::<PackingPolicy>().unwrap(), PackingPolicy::RoundRobin);
+        assert_eq!(
+            "greedy-fill".parse::<PackingPolicy>().unwrap(),
+            PackingPolicy::GreedyFill
+        );
+        assert!("bogus".parse::<PackingPolicy>().is_err());
+    }
+
+    #[test]
+    fn batch_config_validates() {
+        assert!(BatchConfig::new(0, PackingPolicy::RoundRobin).is_err());
+        let cfg = BatchConfig::new(8, PackingPolicy::GreedyFill).unwrap();
+        assert_eq!(cfg.max_coresident, 8);
+        assert_eq!(BatchConfig::default().policy, PackingPolicy::RoundRobin);
+        assert!(BatchConfig::default().max_coresident >= 1);
     }
 
     #[test]

@@ -32,6 +32,17 @@ impl LaunchMetrics {
         }
     }
 
+    /// Mean launch occupancy against a block capacity: tasks filled per
+    /// capacity slot offered. Can exceed 1.0 when software loop unrolling
+    /// engages (more tasks than blocks, §III-C-c).
+    pub fn occupancy_ratio(&self, capacity: usize) -> f64 {
+        if self.launches == 0 || capacity == 0 {
+            0.0
+        } else {
+            self.tasks as f64 / (self.launches * capacity) as f64
+        }
+    }
+
     pub fn merge(&mut self, o: &LaunchMetrics) {
         self.launches += o.launches;
         self.tasks += o.tasks;
@@ -55,6 +66,19 @@ mod tests {
         assert_eq!(m.max_parallel, 10);
         assert_eq!(m.unrolled_launches, 1);
         assert!((m.avg_parallel() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_ratio_counts_filled_slots() {
+        let mut m = LaunchMetrics::default();
+        assert_eq!(m.occupancy_ratio(8), 0.0);
+        m.record_launch(4, 8);
+        m.record_launch(8, 8);
+        assert!((m.occupancy_ratio(8) - 0.75).abs() < 1e-12);
+        // Unrolled launches push the ratio past 1.
+        m.record_launch(20, 8);
+        assert!(m.occupancy_ratio(8) > 1.0);
+        assert_eq!(m.occupancy_ratio(0), 0.0);
     }
 
     #[test]

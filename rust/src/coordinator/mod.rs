@@ -14,9 +14,10 @@
 pub mod metrics;
 
 use crate::banded::storage::Banded;
-use crate::bulge::cycle::{exec_cycle, exec_cycle_shared, CycleWorkspace, SharedBanded};
-use crate::bulge::schedule::stage_plan;
-use crate::config::{Backend, TuneParams};
+use crate::batch::engine::{run_interleaved, Runner};
+use crate::bulge::cycle::{exec_cycle, CycleWorkspace};
+use crate::bulge::schedule::{stage_plan, TaskStream};
+use crate::config::{Backend, PackingPolicy, TuneParams};
 use crate::error::{Error, Result};
 use crate::runtime::PjrtEngine;
 use crate::scalar::Scalar;
@@ -70,58 +71,32 @@ impl Coordinator {
     ) -> Result<RunReport> {
         let n = a.n();
         let tw = self.params.effective_tw(bw);
-        if a.kd_sub() < tw || a.kd_super() < bw + tw {
-            return Err(Error::Config(format!(
-                "storage (kd_sub={}, kd_super={}) too small for bw={bw}, tw={tw}",
-                a.kd_sub(),
-                a.kd_super()
-            )));
-        }
+        a.check_reduction_storage(bw, tw)?;
         let mut m = LaunchMetrics::default();
         let capacity = self.capacity();
         let t_start = Instant::now();
         match backend {
             Backend::Sequential => {
+                // The launch stream in schedule order, executed inline
+                // (one task at a time, empty launches skipped).
                 let plan = stage_plan(bw, tw);
                 let mut ws = CycleWorkspace::for_plan(&plan);
-                for stage in &plan {
-                    for t in 0..stage.total_launches(n) {
-                        let tasks = stage.tasks_at(n, t);
-                        if tasks.is_empty() {
-                            continue; // a real coordinator skips empty launches
-                        }
-                        m.record_launch(tasks.len(), capacity);
-                        for task in tasks {
-                            exec_cycle(a, stage, &task, &mut ws);
-                        }
+                let mut stream = TaskStream::new(plan, n);
+                while let Some((si, tasks)) = stream.next_launch() {
+                    m.record_launch(tasks.len(), capacity);
+                    let stage = stream.plan()[si];
+                    for task in &tasks {
+                        exec_cycle(a, &stage, task, &mut ws);
                     }
                 }
             }
             Backend::Parallel => {
-                let plan = stage_plan(bw, tw);
-                let view = SharedBanded::new(a);
-                for stage in &plan {
-                    for t in 0..stage.total_launches(n) {
-                        let tasks = stage.tasks_at(n, t);
-                        if tasks.is_empty() {
-                            continue;
-                        }
-                        m.record_launch(tasks.len(), capacity);
-                        let chunks = tasks.len().min(capacity).min(self.pool.len().max(1));
-                        let stage_ref = stage;
-                        self.pool.for_each_chunk(tasks.len(), chunks, |range| {
-                            let mut ws = CycleWorkspace::new(stage_ref);
-                            for i in range {
-                                // SAFETY: intra-launch tasks are disjoint
-                                // (schedule.rs property tests); launches
-                                // are ordered by the pool barrier.
-                                unsafe {
-                                    exec_cycle_shared(&view, stage_ref, &tasks[i], &mut ws)
-                                };
-                            }
-                        });
-                    }
-                }
+                // The batch-size-1 case of the interleaved batch engine
+                // (crate::batch): one runner, one stream, same launch
+                // loop the multi-problem path uses.
+                let mut runners = vec![Runner::new(a, bw, &self.params)?];
+                run_interleaved(&mut runners, &self.pool, capacity, PackingPolicy::RoundRobin, 1);
+                m = runners[0].metrics.clone();
             }
             other => {
                 return Err(Error::Config(format!(

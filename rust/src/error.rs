@@ -1,29 +1,84 @@
-//! Library error type.
+//! Library error type (hand-rolled `Display`/`Error` impls — the offline
+//! crate set has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("invalid configuration: {0}")]
     Config(String),
-
-    #[error("artifact not found: {path} (run `make artifacts`; looked for variant {variant})")]
     ArtifactMissing { path: String, variant: String },
-
-    #[error("PJRT runtime error: {0}")]
     Pjrt(String),
-
-    #[error("numerical failure: {0}")]
     Numerical(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::ArtifactMissing { path, variant } => write!(
+                f,
+                "artifact not found: {path} (run `make artifacts`; looked for variant {variant})"
+            ),
+            Error::Pjrt(msg) => write!(f, "PJRT runtime error: {msg}"),
+            Error::Numerical(msg) => write!(f, "numerical failure: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Pjrt(e.to_string())
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl From<crate::runtime::stub::Error> for Error {
+    fn from(e: crate::runtime::stub::Error) -> Self {
+        Error::Pjrt(e.to_string())
+    }
+}
+
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_seed_wording() {
+        assert_eq!(
+            Error::Config("bad tw".into()).to_string(),
+            "invalid configuration: bad tw"
+        );
+        let e = Error::ArtifactMissing { path: "a/b.txt".into(), variant: "n=8".into() };
+        assert!(e.to_string().contains("a/b.txt"));
+        assert!(e.to_string().contains("n=8"));
+        assert!(Error::Pjrt("boom".into()).to_string().starts_with("PJRT"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+}

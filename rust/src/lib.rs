@@ -29,8 +29,38 @@
 //! let sv = bidiagonal_singular_values(&result.diag, &result.superdiag);
 //! println!("σ_max = {}", sv[0]);
 //! ```
+//!
+//! ## Batched reduction
+//!
+//! One mid-sized matrix cannot fill the device (Table I); a *batch* can.
+//! [`batch::BatchCoordinator`] reduces many banded problems (mixed `n`,
+//! `bw`, precision) concurrently by interleaving their launch streams
+//! into shared launches under the joint MaxBlocks capacity — per-problem
+//! results stay bitwise identical to solo runs:
+//!
+//! ```no_run
+//! use banded_svd::prelude::*;
+//!
+//! let mut rng = Xoshiro256::seed_from_u64(0);
+//! let params = TuneParams { tpb: 32, tw: 8, max_blocks: 192 };
+//! let mut problems: Vec<BatchInput> = (0..16)
+//!     .map(|_| {
+//!         let a = random_banded::<f64>(512, 16, params.effective_tw(16), &mut rng);
+//!         BatchInput::from((a, 16))
+//!     })
+//!     .collect();
+//! let coord = BatchCoordinator::new(params, BatchConfig::default(), 0);
+//! let report = coord.run(&mut problems).unwrap();
+//! println!(
+//!     "{} problems, {:.0} problems/s, launch occupancy {:.2}",
+//!     report.problems.len(),
+//!     report.throughput(),
+//!     report.metrics.occupancy_ratio()
+//! );
+//! ```
 
 pub mod banded;
+pub mod batch;
 pub mod baselines;
 pub mod bulge;
 pub mod config;
@@ -47,14 +77,18 @@ pub mod util;
 /// Convenient re-exports of the public API surface.
 pub mod prelude {
     pub use crate::banded::{Banded, Dense};
+    pub use crate::batch::{
+        BatchCoordinator, BatchInput, BatchMetrics, BatchPlan, BatchReport, ProblemReport,
+    };
     pub use crate::bulge::{
         reduce_to_bidiagonal, reduce_to_bidiagonal_parallel, stage_plan, Stage,
     };
-    pub use crate::config::{Backend, TuneParams};
+    pub use crate::config::{Backend, BatchConfig, PackingPolicy, TuneParams};
     pub use crate::error::{Error, Result};
     pub use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
     pub use crate::pipeline::{
-        bidiagonal_singular_values, dense_to_band, singular_values_3stage, SvdOptions,
+        batch_singular_values, bidiagonal_singular_values, dense_to_band,
+        singular_values_3stage, SvdOptions,
     };
     pub use crate::scalar::{Scalar, F16};
     pub use crate::util::rng::Xoshiro256;

@@ -4,8 +4,10 @@
 
 use crate::banded::dense::Dense;
 use crate::banded::storage::Banded;
+use crate::batch::{BatchCoordinator, BatchInput};
 use crate::bulge::tiling::{reduce_to_bidiagonal, reduce_to_bidiagonal_parallel};
-use crate::config::TuneParams;
+use crate::config::{BatchConfig, TuneParams};
+use crate::error::Result;
 use crate::pipeline::stage1::{dense_to_band_inplace, dense_to_band_inplace_parallel};
 use crate::pipeline::stage3::{bidiagonal_singular_values, bidiagonal_singular_values_parallel};
 use crate::scalar::Scalar;
@@ -118,6 +120,28 @@ pub fn banded_singular_values<T: Scalar>(
     bidiagonal_singular_values(&d, &e)
 }
 
+/// Singular values of *many* already-banded problems through one batched
+/// stage-2 reduction — the many-small-matrices workload (covariance
+/// spectra, per-head attention blocks) the single-problem entry points
+/// cannot saturate the device with. Problems may mix sizes, bandwidths,
+/// and precisions; each result vector is descending, widened to f64.
+///
+/// `threads == 0` uses all available hardware threads.
+pub fn batch_singular_values(
+    inputs: &mut [BatchInput],
+    params: &TuneParams,
+    cfg: &BatchConfig,
+    threads: usize,
+) -> Result<Vec<Vec<f64>>> {
+    let coord = BatchCoordinator::new(*params, *cfg, threads);
+    let report = coord.run(inputs)?;
+    Ok(report
+        .problems
+        .iter()
+        .map(|p| bidiagonal_singular_values(&p.diag, &p.superdiag))
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +235,28 @@ mod tests {
         let oracle = jacobi_singular_values(&dense);
         for (got, want) in sv.iter().zip(oracle.iter()) {
             assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn batch_entry_point_matches_solo_banded_entry_point() {
+        let mut rng = Xoshiro256::seed_from_u64(37);
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 192 };
+        let shapes = [(36usize, 5usize), (28, 4), (44, 7)];
+        let mats: Vec<_> = shapes
+            .iter()
+            .map(|&(n, bw)| random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng))
+            .collect();
+        let mut inputs: Vec<BatchInput> = mats
+            .iter()
+            .zip(shapes.iter())
+            .map(|(a, &(_, bw))| BatchInput::from((a.clone(), bw)))
+            .collect();
+        let batched =
+            batch_singular_values(&mut inputs, &params, &BatchConfig::default(), 2).unwrap();
+        for ((a, &(_, bw)), got) in mats.iter().zip(shapes.iter()).zip(batched.iter()) {
+            let want = banded_singular_values(a, bw, &params);
+            assert_eq!(got, &want, "bw={bw}");
         }
     }
 

@@ -12,6 +12,8 @@
 use crate::banded::storage::Banded;
 use crate::error::{Error, Result};
 use crate::runtime::manifest::Manifest;
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::stub as xla;
 use crate::scalar::Scalar;
 use std::path::Path;
 use std::time::{Duration, Instant};

@@ -4,6 +4,8 @@
 
 pub mod engine;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
 pub use engine::{PjrtEngine, PjrtRunStats};
 pub use manifest::{Manifest, StageArtifact};

@@ -1,0 +1,99 @@
+//! Compile-time stand-in for the `xla` crate (xla-rs) used when the
+//! `pjrt` feature is disabled — the default, since the offline build
+//! environment has no XLA toolchain.
+//!
+//! The type surface mirrors exactly the subset of xla-rs the engine
+//! uses, so `engine.rs` type-checks identically against both; every
+//! entry point fails at run time with a clear error before any real
+//! work could be attempted (`PjRtClient::cpu` is the constructor, so an
+//! engine can never be built on the stub).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (message-only).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unsupported<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT support not compiled in: build with `--features pjrt` and a vendored \
+         `xla` crate (see rust/Cargo.toml)"
+            .to_string(),
+    ))
+}
+
+pub struct PjRtClient;
+pub struct PjRtLoadedExecutable;
+pub struct PjRtBuffer;
+pub struct HloModuleProto;
+pub struct XlaComputation;
+pub struct Literal;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        unsupported()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unsupported()
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        unsupported()
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unsupported()
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unsupported()
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<Self, Error> {
+        unsupported()
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unsupported()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

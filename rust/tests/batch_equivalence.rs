@@ -1,0 +1,156 @@
+//! The batch engine's contract, property-tested: reducing K problems in
+//! one interleaved batch yields **bitwise-identical** bidiagonals (f64,
+//! native backend) to K independent single-problem coordinator runs —
+//! across randomized problem counts, shapes, packing policies, and
+//! admission-window sizes. Interleaving only reorders work *between*
+//! problems; within a problem the launch order (and hence every float)
+//! is untouched.
+
+use banded_svd::banded::storage::Banded;
+use banded_svd::batch::{BatchCoordinator, BatchInput};
+use banded_svd::config::{Backend, BatchConfig, PackingPolicy, TuneParams};
+use banded_svd::coordinator::Coordinator;
+use banded_svd::generate::random_banded;
+use banded_svd::util::prop::{check, Config};
+use banded_svd::util::rng::Xoshiro256;
+
+#[derive(Debug)]
+struct Case {
+    shapes: Vec<(usize, usize)>, // (n, bw)
+    tw: usize,
+    max_blocks: usize,
+    policy: PackingPolicy,
+    max_coresident: usize,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Xoshiro256) -> Case {
+    let k = rng.range_inclusive(2, 5);
+    let shapes = (0..k)
+        .map(|_| {
+            let bw = rng.range_inclusive(2, 10);
+            let n = rng.range_inclusive(bw + 4, 72);
+            (n, bw)
+        })
+        .collect();
+    Case {
+        shapes,
+        tw: rng.range_inclusive(1, 8),
+        max_blocks: rng.range_inclusive(2, 48),
+        policy: if rng.below(2) == 0 {
+            PackingPolicy::RoundRobin
+        } else {
+            PackingPolicy::GreedyFill
+        },
+        max_coresident: rng.range_inclusive(1, 6),
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_batched_reduction_is_bitwise_equal_to_independent_runs() {
+    let cfg = Config { cases: 32, ..Config::default() };
+    check("batch-equals-solo", &cfg, gen_case, |case| {
+        let params = TuneParams { tpb: 32, tw: case.tw, max_blocks: case.max_blocks };
+        let mut rng = Xoshiro256::seed_from_u64(case.seed);
+        let mats: Vec<Banded<f64>> = case
+            .shapes
+            .iter()
+            .map(|&(n, bw)| random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng))
+            .collect();
+
+        // Batched: all problems co-scheduled into shared launches.
+        let batch_cfg = BatchConfig { max_coresident: case.max_coresident, policy: case.policy };
+        let batch_coord = BatchCoordinator::new(params, batch_cfg, 4);
+        let mut inputs: Vec<BatchInput> = mats
+            .iter()
+            .zip(case.shapes.iter())
+            .map(|(a, &(_, bw))| BatchInput::from((a.clone(), bw)))
+            .collect();
+        let report = batch_coord.run(&mut inputs).map_err(|e| e.to_string())?;
+
+        // Independent: one coordinator run per problem.
+        let solo_coord = Coordinator::new(params, 4);
+        for (i, ((a, &(n, bw)), batched)) in mats
+            .iter()
+            .zip(case.shapes.iter())
+            .zip(report.problems.iter())
+            .enumerate()
+        {
+            let mut solo = a.clone();
+            let solo_report = solo_coord
+                .reduce_native(&mut solo, bw, Backend::Parallel)
+                .map_err(|e| e.to_string())?;
+            if solo_report.diag != batched.diag {
+                return Err(format!("problem {i} (n={n}, bw={bw}): diag differs"));
+            }
+            if solo_report.superdiag != batched.superdiag {
+                return Err(format!("problem {i} (n={n}, bw={bw}): superdiag differs"));
+            }
+            if batched.residual_off_band != 0.0 {
+                return Err(format!(
+                    "problem {i} (n={n}, bw={bw}): residual {} after batched run",
+                    batched.residual_off_band
+                ));
+            }
+            if solo_report.metrics.launches != batched.metrics.launches
+                || solo_report.metrics.tasks != batched.metrics.tasks
+            {
+                return Err(format!(
+                    "problem {i}: per-problem metrics diverged (launches {} vs {}, tasks {} vs {})",
+                    solo_report.metrics.launches,
+                    batched.metrics.launches,
+                    solo_report.metrics.tasks,
+                    batched.metrics.tasks
+                ));
+            }
+        }
+
+        // Aggregate sanity: every task accounted for exactly once.
+        let total: usize = report.problems.iter().map(|p| p.metrics.tasks).sum();
+        if report.metrics.aggregate.tasks != total {
+            return Err(format!(
+                "aggregate tasks {} != sum of per-problem tasks {total}",
+                report.metrics.aggregate.tasks
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_sequential_oracle_agreement() {
+    // Same contract against the *sequential* backend — ties the batch
+    // engine to the sweep-order oracle through a second independent path.
+    let cfg = Config { cases: 12, ..Config::default() };
+    check("batch-equals-sequential", &cfg, gen_case, |case| {
+        let params = TuneParams { tpb: 32, tw: case.tw, max_blocks: case.max_blocks };
+        let mut rng = Xoshiro256::seed_from_u64(case.seed ^ 0xA5A5);
+        let mats: Vec<Banded<f64>> = case
+            .shapes
+            .iter()
+            .map(|&(n, bw)| random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng))
+            .collect();
+        let batch_cfg = BatchConfig { max_coresident: case.max_coresident, policy: case.policy };
+        let batch_coord = BatchCoordinator::new(params, batch_cfg, 4);
+        let mut inputs: Vec<BatchInput> = mats
+            .iter()
+            .zip(case.shapes.iter())
+            .map(|(a, &(_, bw))| BatchInput::from((a.clone(), bw)))
+            .collect();
+        let report = batch_coord.run(&mut inputs).map_err(|e| e.to_string())?;
+        let solo_coord = Coordinator::new(params, 1);
+        for ((a, &(n, bw)), batched) in
+            mats.iter().zip(case.shapes.iter()).zip(report.problems.iter())
+        {
+            let mut solo = a.clone();
+            let solo_report = solo_coord
+                .reduce_native(&mut solo, bw, Backend::Sequential)
+                .map_err(|e| e.to_string())?;
+            if solo_report.diag != batched.diag || solo_report.superdiag != batched.superdiag {
+                return Err(format!("n={n}, bw={bw}: batched differs from sequential oracle"));
+            }
+        }
+        Ok(())
+    });
+}
