@@ -4,4 +4,4 @@ pub mod dense;
 pub mod storage;
 
 pub use dense::Dense;
-pub use storage::Banded;
+pub use storage::{Banded, TileSpec};

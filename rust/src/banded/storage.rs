@@ -10,9 +10,104 @@
 //! bandwidth increased by twice the inner tilewidth".
 //!
 //! Key property exploited by the hot loops: a *column segment*
-//! `(i0..=i1, j)` is contiguous in memory.
+//! `(i0..=i1, j)` is contiguous in memory. The full index diagram lives
+//! next to the tile pack/unpack code ([`TileSpec`]), which is where the
+//! mapping actually matters.
 
 use crate::scalar::Scalar;
+
+/// Geometry of a packed, contiguous tile workspace — the CPU analog of
+/// the paper's L1-resident tiles. A bulge-chasing cycle touches a
+/// two-block parallelogram of the band, which pack/unpack copies into a
+/// dense column-major scratch so the whole chase runs cache-resident and
+/// is written back once.
+///
+/// ## Banded-storage index diagram
+///
+/// Banded storage keeps diagonals as rows of a `(ld × n)` column-major
+/// array (`ld = kd_sub + kd_super + 1`); element `(i, j)` lives at
+/// `data[j·ld + (kd_super + i − j)]`, so a column segment `(i0..=i1, j)`
+/// is contiguous. A cycle anchored at column `j0` (pivot row `rp`,
+/// `jd = min(j0+d, n−1)`, `c1 = min(j0+b+d, n−1)`) accesses exactly:
+///
+/// ```text
+///             j0        jd  jd+1        c1
+///            ┌───────────┬───────────────┐
+///        rp  │           │               │
+///            │  block A  │   (not in     │   block A: right op rows
+///            │ rows rp..=jd   the tile)  │   rp..=jd  × cols j0..=jd
+///        j0  │ · · · · · ├───────────────┤
+///            │           │    block B    │   block B: left op rows
+///        jd  │           │ rows j0..=jd  │   j0..=jd  × cols jd+1..=c1
+///            └───────────┴───────────────┘
+/// ```
+///
+/// Packed layout: one column slot of `pitch() = jd − rp + 1` elements
+/// per tile column; block-B columns (shorter, `jd − j0 + 1` elements)
+/// occupy the head of their slot. Both blocks stay within the
+/// representable band whenever the storage passed
+/// `check_reduction_storage` (block A's deepest offset is `b + d ≤
+/// kd_super`, its lowest subdiagonal `d ≤ kd_sub`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct TileSpec {
+    /// First tile column (the cycle anchor).
+    pub j0: usize,
+    /// Last block-A column (`jd`); later columns use the block-B rows.
+    pub split: usize,
+    /// Last tile column (`c1`).
+    pub c1: usize,
+    /// Top row of block-A columns (the pivot row).
+    pub lo_a: usize,
+    /// Top row of block-B columns (the anchor row).
+    pub lo_b: usize,
+    /// Bottom row of every tile column (`jd`).
+    pub hi: usize,
+}
+
+impl TileSpec {
+    pub fn new(j0: usize, split: usize, c1: usize, lo_a: usize, lo_b: usize, hi: usize) -> Self {
+        assert!(j0 <= split && split <= c1, "bad tile columns {j0}..{split}..{c1}");
+        assert!(lo_a <= lo_b && lo_b <= hi, "bad tile rows {lo_a}/{lo_b}/{hi}");
+        Self { j0, split, c1, lo_a, lo_b, hi }
+    }
+
+    /// Elements per column slot (the block-A column height).
+    #[inline]
+    pub fn pitch(&self) -> usize {
+        self.hi - self.lo_a + 1
+    }
+
+    /// Number of tile columns.
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.c1 - self.j0 + 1
+    }
+
+    /// Workspace elements the packed tile occupies.
+    #[inline]
+    pub fn elems(&self) -> usize {
+        self.width() * self.pitch()
+    }
+
+    /// Top row of tile column `j`.
+    #[inline]
+    pub fn lo(&self, j: usize) -> usize {
+        if j <= self.split {
+            self.lo_a
+        } else {
+            self.lo_b
+        }
+    }
+
+    /// `(offset into the packed buffer, top row, element count)` of tile
+    /// column `j` — the single home of the packing index map; every
+    /// pack/unpack loop (here and in `bulge::cycle`) goes through it.
+    #[inline]
+    pub fn col_span(&self, j: usize) -> (usize, usize, usize) {
+        let lo = self.lo(j);
+        ((j - self.j0) * self.pitch(), lo, self.hi - lo + 1)
+    }
+}
 
 /// Upper-banded matrix with room for bulge fill-in.
 #[derive(Clone, Debug, PartialEq)]
@@ -144,6 +239,25 @@ impl<T: Scalar> Banded<T> {
         let lo = j.saturating_sub(self.kd_super);
         let hi = (j + self.kd_sub).min(self.n - 1);
         (lo, hi)
+    }
+
+    /// Copy the tile described by `spec` into the contiguous workspace
+    /// `out` (length ≥ `spec.elems()`), column by column. See [`TileSpec`]
+    /// for the layout and the banded-storage index diagram.
+    pub fn pack_tile(&self, spec: &TileSpec, out: &mut [T]) {
+        for j in spec.j0..=spec.c1 {
+            let (off, lo, len) = spec.col_span(j);
+            out[off..off + len].copy_from_slice(self.col_segment(j, lo, spec.hi));
+        }
+    }
+
+    /// Write the packed tile `buf` back into banded storage — the inverse
+    /// of [`Banded::pack_tile`]. Elements outside the tile are untouched.
+    pub fn unpack_tile(&mut self, spec: &TileSpec, buf: &[T]) {
+        for j in spec.j0..=spec.c1 {
+            let (off, lo, len) = spec.col_span(j);
+            self.col_segment_mut(j, lo, spec.hi).copy_from_slice(&buf[off..off + len]);
+        }
     }
 
     /// Extract the main diagonal and first superdiagonal (the bidiagonal
@@ -332,6 +446,89 @@ mod tests {
         let h: Banded<F16> = b.convert();
         let back: Banded<f64> = h.convert();
         assert!((back.get(0, 0) - 0.333333333333).abs() < 1e-3);
+    }
+
+    #[test]
+    fn tile_pack_unpack_identity() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(3);
+        let a = crate::generate::random_banded::<f64>(24, 5, 3, &mut rng);
+        let spec = TileSpec::new(8, 10, 15, 4, 8, 10);
+        let mut buf = vec![0.0; spec.elems()];
+        a.pack_tile(&spec, &mut buf);
+        let mut b = a.clone();
+        b.unpack_tile(&spec, &buf);
+        assert_eq!(a, b);
+        // Packed cells mirror storage.
+        for j in spec.j0..=spec.c1 {
+            for i in spec.lo(j)..=spec.hi {
+                assert_eq!(buf[(j - spec.j0) * spec.pitch() + (i - spec.lo(j))], a.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_tile_pack_mutate_unpack_roundtrip() {
+        use crate::util::prop::{check, Config};
+        use crate::util::rng::Xoshiro256;
+
+        #[derive(Debug)]
+        struct Case {
+            n: usize,
+            bw: usize,
+            tw: usize,
+            spec: TileSpec,
+            seed: u64,
+        }
+
+        fn gen_case(rng: &mut Xoshiro256) -> Case {
+            let bw = rng.range_inclusive(2, 10);
+            let tw = rng.range_inclusive(1, bw - 1);
+            let n = rng.range_inclusive(bw + tw + 4, 64);
+            // A cycle-shaped tile: anchor j0, depth d ≤ tw, pivot offset
+            // ≤ bw above, width ≤ bw + tw right — the bounds
+            // `check_reduction_storage` guarantees representable.
+            let j0 = rng.range_inclusive(0, n - 2);
+            let hi = (j0 + rng.range_inclusive(1, tw)).min(n - 1);
+            let lo_a = j0 - rng.range_inclusive(0, bw.min(j0));
+            let c1 = (j0 + rng.range_inclusive(hi - j0, bw + tw)).min(n - 1);
+            let split = rng.range_inclusive(j0, hi.min(c1));
+            Case {
+                n,
+                bw,
+                tw,
+                spec: TileSpec::new(j0, split, c1, lo_a, j0, hi),
+                seed: rng.next_u64(),
+            }
+        }
+
+        let cfg = Config { cases: 64, ..Config::default() };
+        check("tile-pack-mutate-unpack", &cfg, gen_case, |case| {
+            let mut rng = Xoshiro256::seed_from_u64(case.seed);
+            let mut a = crate::generate::random_banded::<f64>(case.n, case.bw, case.tw, &mut rng);
+            let spec = &case.spec;
+            let mut buf = vec![0.0f64; spec.elems()];
+            a.pack_tile(spec, &mut buf);
+            // Mutate every packed cell and mirror the mutation directly
+            // into an oracle copy of the storage.
+            let mut want = a.clone();
+            for j in spec.j0..=spec.c1 {
+                for i in spec.lo(j)..=spec.hi {
+                    let idx = (j - spec.j0) * spec.pitch() + (i - spec.lo(j));
+                    if buf[idx] != a.get(i, j) {
+                        return Err(format!("pack mismatch at ({i},{j})"));
+                    }
+                    buf[idx] = 2.0 * buf[idx] + 1.0;
+                    want.set(i, j, 2.0 * a.get(i, j) + 1.0);
+                }
+            }
+            a.unpack_tile(spec, &buf);
+            if a != want {
+                return Err("unpack did not write back the mutation exactly (or touched \
+                            elements outside the tile)"
+                    .into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,77 +1,110 @@
-//! The interleaved launch loop shared by the batch coordinator and the
+//! The plan executor shared by the batch coordinator and the
 //! single-problem coordinator (which is the batch-size-1 case).
 //!
-//! Each co-resident problem owns a [`TaskStream`]; every *shared launch*
-//! pops at most one launch from each selected stream, flattens the tasks
-//! into one list, and dispatches it over the thread pool with a single
-//! barrier — the CPU analog of co-scheduling thread blocks from
-//! independent grids under the joint MaxBlocks capacity.
+//! All scheduling decisions are made *before* execution: per-problem
+//! launch streams are lowered to single-problem [`LaunchPlan`]s and
+//! merged ([`LaunchPlan::merge`]) into one shared-launch plan under the
+//! joint MaxBlocks capacity. [`execute_plan`] then walks that plan launch
+//! by launch — one pinned pool dispatch + one barrier each — the CPU
+//! analog of co-scheduling thread blocks from independent grids.
+//!
+//! Tasks are routed to pool slots by *column-window affinity*
+//! ([`affinity_slot`]): the same (problem, window) lands on the same OS
+//! thread across launches, so a chased window — and the slot's persistent
+//! packed-tile workspace ([`WorkerLocal`]) — stays in one core's cache.
 
 use crate::banded::storage::Banded;
 use crate::batch::plan::BatchPlan;
 use crate::batch::BatchInput;
 use crate::bulge::cycle::{exec_cycle_shared, CycleWorkspace, SharedBanded};
-use crate::bulge::schedule::{stage_plan, CycleTask, Stage, TaskStream};
-use crate::config::{BatchConfig, PackingPolicy, TuneParams};
+use crate::bulge::schedule::{CycleTask, Stage};
+use crate::config::{BatchConfig, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::Result;
+use crate::plan::{slot_bytes, LaunchPlan};
 use crate::scalar::Scalar;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{ThreadPool, WorkerLocal};
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
 use std::marker::PhantomData;
 use std::time::{Duration, Instant};
+
+/// Per-slot scratch shared by *every* problem of a run: one growable
+/// [`CycleWorkspace`] per scalar type (at most three), created lazily and
+/// grown on demand. A slot runs one task at a time, so one workspace per
+/// precision is all it can ever use — memory stays `slots × precisions`
+/// instead of `slots × problems`.
+pub(crate) struct SlotScratch {
+    by_type: HashMap<TypeId, Box<dyn Any + Send>>,
+}
+
+impl SlotScratch {
+    fn new() -> Self {
+        Self { by_type: HashMap::new() }
+    }
+
+    fn workspace<T: Scalar>(&mut self) -> &mut CycleWorkspace<T> {
+        self.by_type
+            .entry(TypeId::of::<T>())
+            .or_insert_with(|| Box::new(CycleWorkspace::<T>::growable()))
+            .downcast_mut::<CycleWorkspace<T>>()
+            .expect("scratch entry keyed by its own TypeId")
+    }
+}
 
 /// Type-erased executor for one problem's cycle-tasks (erases the scalar
 /// type so problems of mixed precision share one launch loop).
 trait ProblemExec: Sync {
-    /// Execute `tasks` of stage `si` back-to-back on this problem.
+    /// Execute one task of stage `si` using the calling slot's scratch.
     ///
     /// # Safety
-    /// The tasks must be pairwise element-disjoint from every other task
-    /// concurrently executing on the same problem (guaranteed when all
-    /// come from a single `TaskStream` launch), and the problem's buffer
-    /// must not be accessed otherwise for the duration of the call.
-    unsafe fn exec_tasks(&self, si: usize, tasks: &[CycleTask]);
+    /// The task must be element-disjoint from every other task
+    /// concurrently executing on the same problem (guaranteed within one
+    /// plan launch), and the problem's buffer must not be otherwise
+    /// accessed for the duration of the call.
+    unsafe fn exec_task(&self, si: usize, task: &CycleTask, scratch: &mut SlotScratch);
+
+    /// Element size of the problem's scalar type (for traffic accounting).
+    fn element_bytes(&self) -> usize;
 }
 
 struct NativeExec<T> {
     view: SharedBanded<T>,
-    plan: Vec<Stage>,
+    stages: Vec<Stage>,
 }
 
 impl<T: Scalar> ProblemExec for NativeExec<T> {
-    unsafe fn exec_tasks(&self, si: usize, tasks: &[CycleTask]) {
-        let stage = self.plan[si];
-        let mut ws = CycleWorkspace::new(&stage);
-        for task in tasks {
-            exec_cycle_shared(&self.view, &stage, task, &mut ws);
-        }
+    unsafe fn exec_task(&self, si: usize, task: &CycleTask, scratch: &mut SlotScratch) {
+        let stage = &self.stages[si];
+        let ws = scratch.workspace::<T>();
+        ws.ensure_stage(stage);
+        exec_cycle_shared(&self.view, stage, task, ws);
+    }
+
+    fn element_bytes(&self) -> usize {
+        T::BYTES
     }
 }
 
-/// One problem admitted to the interleaved launch loop: its erased
-/// executor, its launch stream, and its private metrics.
+/// One problem admitted to the plan executor: its erased executor and its
+/// private metrics. The launch stream itself lives in the merged
+/// [`LaunchPlan`].
 pub(crate) struct Runner<'a> {
     exec: Box<dyn ProblemExec + Sync + 'a>,
-    pub(crate) stream: TaskStream,
     pub(crate) metrics: LaunchMetrics,
     /// Exclusive borrow of the underlying matrix for the runner's life.
     _borrow: PhantomData<&'a mut ()>,
 }
 
 impl<'a> Runner<'a> {
-    pub(crate) fn new<T: Scalar>(
-        a: &'a mut Banded<T>,
-        bw: usize,
-        params: &TuneParams,
-    ) -> Result<Self> {
-        let tw = params.effective_tw(bw);
-        a.check_reduction_storage(bw, tw)?;
-        let n = a.n();
-        let plan = stage_plan(bw, tw);
-        let stream = TaskStream::new(plan.clone(), n);
+    /// Build a runner for `a` against its single-problem plan `part`
+    /// (shape index 0).
+    pub(crate) fn new<T: Scalar>(a: &'a mut Banded<T>, part: &LaunchPlan) -> Result<Self> {
+        let shape = &part.problems[0];
+        a.check_reduction_storage(shape.bw, shape.tw)?;
         let exec: Box<dyn ProblemExec + Sync + 'a> =
-            Box::new(NativeExec { view: SharedBanded::new(a), plan });
-        Ok(Self { exec, stream, metrics: LaunchMetrics::default(), _borrow: PhantomData })
+            Box::new(NativeExec { view: SharedBanded::new(a), stages: shape.stages.clone() });
+        Ok(Self { exec, metrics: LaunchMetrics::default(), _borrow: PhantomData })
     }
 }
 
@@ -96,102 +129,96 @@ impl BatchMetrics {
     }
 }
 
-/// Drive every runner's stream to completion, packing launches into
-/// shared launches under `capacity` according to `policy`. At most
-/// `max_coresident` problems are interleaved at a time; later problems
-/// are admitted as earlier ones finish.
-pub(crate) fn run_interleaved(
+/// Pool slot a task is routed to — stable across launches. Anchors within
+/// one launch are spaced `3b−1` apart and a sweep's anchor advances `b`
+/// per launch, so `window = anchor / (3b−1)` keeps a chased column window
+/// on one slot for ~3 consecutive launches while spreading the launch's
+/// simultaneous tasks over distinct windows (and therefore slots). Tasks
+/// are routed into the first `lanes ≤ slots` slots only: `lanes` is
+/// capped by the MaxBlocks capacity, so at most `capacity` tasks execute
+/// concurrently and the excess serializes inside a lane — the paper's
+/// software loop unrolling (§III-C-c), same as the simulator's `unroll`.
+#[inline]
+fn affinity_slot(problem: usize, stage: &Stage, task: &CycleTask, lanes: usize) -> usize {
+    let window = task.anchor / (3 * stage.b - 1);
+    problem.wrapping_mul(0x9E37_79B9).wrapping_add(window) % lanes
+}
+
+/// Execute every launch of `plan` over `pool`, in plan order with a
+/// barrier between launches. `runners[p]` executes the tasks of plan
+/// problem `p`; per-problem metrics land in each runner, aggregate
+/// accounting in the returned [`BatchMetrics`].
+pub(crate) fn execute_plan(
+    plan: &LaunchPlan,
     runners: &mut [Runner<'_>],
     pool: &ThreadPool,
-    capacity: usize,
-    policy: PackingPolicy,
-    max_coresident: usize,
 ) -> BatchMetrics {
-    let capacity = capacity.max(1);
-    let max_coresident = max_coresident.max(1);
+    assert_eq!(plan.problems.len(), runners.len(), "one runner per plan problem");
+    let capacity = plan.capacity;
+    let slots = pool.slots();
+    let lanes = slots.min(capacity);
     let mut bm = BatchMetrics {
         aggregate: LaunchMetrics::default(),
         capacity,
         problems: runners.len(),
-        co_scheduled_launches: 0,
-        max_problems_per_launch: 0,
+        co_scheduled_launches: plan.co_scheduled_launches(),
+        max_problems_per_launch: plan.max_problems_per_launch(),
     };
-    let mut rotation = 0usize;
-    // Flattened shared launch, rebuilt every iteration: `keys[i]` names
-    // the (problem, stage) of `tasks[i]`; same-key runs are contiguous so
-    // workers can share one workspace per run.
-    let mut keys: Vec<(u32, u32)> = Vec::new();
+    // Persistent per-slot scratch (Householder vectors + packed-tile
+    // workspace), alive across every launch of the run.
+    let scratch: WorkerLocal<SlotScratch> = WorkerLocal::new(slots, |_| SlotScratch::new());
+    // Flattened launch buffers, reused across launches: `keys[i]` names
+    // the (problem, stage) of `tasks[i]`; `buckets[w]` lists the task
+    // indices routed to pool slot `w`.
     let mut tasks: Vec<CycleTask> = Vec::new();
-    loop {
-        // Admission window: the first `max_coresident` unfinished problems.
-        let admitted: Vec<usize> = (0..runners.len())
-            .filter(|&p| !runners[p].stream.is_done())
-            .take(max_coresident)
-            .collect();
-        if admitted.is_empty() {
-            break;
-        }
-        let order: Vec<usize> = match policy {
-            PackingPolicy::RoundRobin => {
-                let start = rotation % admitted.len();
-                admitted[start..].iter().chain(admitted[..start].iter()).copied().collect()
-            }
-            PackingPolicy::GreedyFill => {
-                let mut by_size = admitted.clone();
-                by_size.sort_by_key(|&p| std::cmp::Reverse(runners[p].stream.peek_count()));
-                by_size
-            }
-        };
-        rotation = rotation.wrapping_add(1);
-
-        // Select: pop at most one launch per problem while it fits (the
-        // first always fits, guaranteeing progress).
-        keys.clear();
+    let mut keys: Vec<(u32, u32)> = Vec::new();
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); slots];
+    for li in 0..plan.num_launches() {
         tasks.clear();
-        let mut selected = 0usize;
-        for &p in &order {
-            let count = runners[p].stream.peek_count();
-            if !tasks.is_empty() && tasks.len() + count > capacity {
-                continue;
-            }
-            let (si, mut ts) = runners[p].stream.next_launch().expect("admitted => not done");
-            runners[p].metrics.record_launch(ts.len(), capacity);
-            for task in ts.drain(..) {
-                keys.push((p as u32, si as u32));
-                tasks.push(task);
-            }
-            selected += 1;
-            if tasks.len() >= capacity {
-                break;
+        keys.clear();
+        for b in buckets.iter_mut() {
+            b.clear();
+        }
+        let mut launch_bytes = 0u64;
+        for slot in plan.launch(li) {
+            let p = slot.problem as usize;
+            let shape = &plan.problems[p];
+            let stage = &shape.stages[slot.stage as usize];
+            let es = runners[p].exec.element_bytes();
+            let bytes = slot_bytes(stage, slot.count as usize, es);
+            launch_bytes += bytes;
+            runners[p].metrics.record_launch(slot.count as usize, capacity, bytes);
+            let start = tasks.len();
+            stage.tasks_at_into(shape.n, slot.t as usize, &mut tasks);
+            debug_assert_eq!(tasks.len() - start, slot.count as usize);
+            for (i, task) in tasks[start..].iter().enumerate() {
+                keys.push((slot.problem, slot.stage));
+                let w = affinity_slot(p, stage, task, lanes);
+                buckets[w].push((start + i) as u32);
             }
         }
-        bm.aggregate.record_launch(tasks.len(), capacity);
-        if selected > 1 {
-            bm.co_scheduled_launches += 1;
-        }
-        bm.max_problems_per_launch = bm.max_problems_per_launch.max(selected);
+        bm.aggregate.record_launch(tasks.len(), capacity, launch_bytes);
 
-        // Execute: one pool dispatch, one barrier — tasks within the
-        // shared launch are disjoint (schedule property within a problem,
+        // Execute: one pinned pool dispatch, one barrier — tasks within
+        // the launch are disjoint (schedule property within a problem,
         // separate buffers across problems).
-        let chunks = tasks.len().min(capacity).min(pool.len().max(1));
         let keys_ref: &[(u32, u32)] = &keys;
         let tasks_ref: &[CycleTask] = &tasks;
+        let buckets_ref: &[Vec<u32>] = &buckets;
         let runners_ref: &[Runner<'_>] = runners;
-        pool.for_each_chunk(tasks.len(), chunks, |range| {
-            let mut i = range.start;
-            while i < range.end {
-                let key = keys_ref[i];
-                let mut j = i + 1;
-                while j < range.end && keys_ref[j] == key {
-                    j += 1;
-                }
-                let (p, si) = (key.0 as usize, key.1 as usize);
-                // SAFETY: within a shared launch every task is disjoint
-                // from every other (see above); launches are ordered by
-                // the pool barrier.
-                unsafe { runners_ref[p].exec.exec_tasks(si, &tasks_ref[i..j]) };
-                i = j;
+        let scratch_ref: &WorkerLocal<SlotScratch> = &scratch;
+        pool.for_each_slot_where(|w| !buckets_ref[w].is_empty(), |w| {
+            // SAFETY (scratch): pinned dispatch gives slot `w` to exactly
+            // one thread at a time.
+            let ws = unsafe { scratch_ref.get_mut(w) };
+            for &i in &buckets_ref[w] {
+                let (p, si) = keys_ref[i as usize];
+                // SAFETY: within a launch every task is disjoint from
+                // every other (see above); launches are ordered by the
+                // pool barrier.
+                unsafe {
+                    runners_ref[p as usize].exec.exec_task(si as usize, &tasks_ref[i as usize], ws)
+                };
             }
         });
     }
@@ -249,35 +276,27 @@ impl BatchCoordinator {
         &self.pool
     }
 
-    fn capacity(&self) -> usize {
-        self.params.max_blocks.max(1)
-    }
-
-    /// Validate the batch and lay out its packing plan without running it.
+    /// Validate the batch and lay out its packing plan — including the
+    /// merged [`LaunchPlan`] that [`BatchCoordinator::run`] executes —
+    /// without touching any matrix data.
     pub fn plan(&self, inputs: &[BatchInput]) -> Result<BatchPlan> {
         BatchPlan::new(inputs, &self.params, &self.cfg)
     }
 
-    /// Reduce every problem to bidiagonal form in place, interleaving
-    /// their launch streams into shared launches.
+    /// Reduce every problem to bidiagonal form in place, executing the
+    /// merged shared-launch plan.
     pub fn run(&self, inputs: &mut [BatchInput]) -> Result<BatchReport> {
         let plan = BatchPlan::new(inputs, &self.params, &self.cfg)?;
         let t_start = Instant::now();
         let mut runners: Vec<Runner<'_>> = Vec::with_capacity(inputs.len());
-        for input in inputs.iter_mut() {
+        for (input, pp) in inputs.iter_mut().zip(plan.problems.iter()) {
             runners.push(match input {
-                BatchInput::F64 { a, bw } => Runner::new(a, *bw, &self.params)?,
-                BatchInput::F32 { a, bw } => Runner::new(a, *bw, &self.params)?,
-                BatchInput::F16 { a, bw } => Runner::new(a, *bw, &self.params)?,
+                BatchInput::F64 { a, .. } => Runner::new(a, &pp.part)?,
+                BatchInput::F32 { a, .. } => Runner::new(a, &pp.part)?,
+                BatchInput::F16 { a, .. } => Runner::new(a, &pp.part)?,
             });
         }
-        let mut metrics = run_interleaved(
-            &mut runners,
-            &self.pool,
-            self.capacity(),
-            self.cfg.policy,
-            self.cfg.max_coresident,
-        );
+        let mut metrics = execute_plan(&plan.merged, &mut runners, &self.pool);
         let per_problem: Vec<LaunchMetrics> = runners.iter().map(|r| r.metrics.clone()).collect();
         drop(runners);
         let wall = t_start.elapsed();
@@ -305,7 +324,7 @@ impl BatchCoordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Backend;
+    use crate::config::{Backend, PackingPolicy};
     use crate::coordinator::Coordinator;
     use crate::generate::random_banded;
     use crate::util::rng::Xoshiro256;
@@ -337,6 +356,7 @@ mod tests {
                 assert_eq!(p.diag.len(), p.n);
                 assert_eq!(p.superdiag.len(), p.n - 1);
                 assert!(p.metrics.launches > 0);
+                assert!(p.metrics.bytes > 0);
             }
             assert_eq!(
                 report.metrics.aggregate.tasks,
@@ -370,6 +390,8 @@ mod tests {
             assert_eq!(r.superdiag, p.superdiag);
             assert_eq!(r.metrics.launches, p.metrics.launches);
             assert_eq!(r.metrics.tasks, p.metrics.tasks);
+            assert_eq!(r.metrics.per_launch, p.metrics.per_launch);
+            assert_eq!(r.metrics.bytes, p.metrics.bytes);
         }
     }
 
@@ -386,6 +408,8 @@ mod tests {
         assert!(report.metrics.aggregate.launches >= report.plan.min_shared_launches());
         assert!(report.metrics.occupancy_ratio() > 0.0);
         assert!(report.throughput() > 0.0);
+        // The executed launch count is the merged plan's, by construction.
+        assert_eq!(report.metrics.aggregate.launches, report.plan.merged.num_launches());
     }
 
     #[test]

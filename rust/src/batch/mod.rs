@@ -5,27 +5,28 @@
 //! opposite — many small-to-medium banded problems per call (covariance
 //! spectra, per-head attention blocks, PDE operator sweeps). This module
 //! reduces a heterogeneous set of [`Banded`] problems (mixed `n`, `bw`,
-//! precision) *concurrently* by interleaving their per-problem launch
-//! streams ([`crate::bulge::schedule::TaskStream`]) into shared
-//! launches, packing tasks from multiple problems under the joint
-//! `MaxBlocks` capacity — exactly how a GPU co-schedules thread blocks
-//! from independent grids.
+//! precision) *concurrently*: each problem's schedule is lowered to a
+//! single-problem [`crate::plan::LaunchPlan`], and the batch interleaver
+//! is a **plan merge** ([`crate::plan::LaunchPlan::merge`]) — per-problem
+//! launch streams packed into shared launches under the joint `MaxBlocks`
+//! capacity, exactly how a GPU co-schedules thread blocks from
+//! independent grids. The engine then simply executes the merged plan.
 //!
-//! Correctness invariant: a shared launch contains **at most one launch
-//! per problem**, so each problem's launches still execute in stream
-//! order with a barrier between them. Per-problem results are therefore
-//! bitwise identical to a solo [`crate::coordinator::Coordinator`] run
-//! (property-tested in `rust/tests/batch_equivalence.rs`); tasks from
-//! different problems touch different buffers and are trivially
-//! disjoint.
+//! Correctness invariant (enforced by the merge): a shared launch
+//! contains **at most one launch per problem**, so each problem's
+//! launches still execute in stream order with a barrier between them.
+//! Per-problem results are therefore bitwise identical to a solo
+//! [`crate::coordinator::Coordinator`] run (property-tested in
+//! `rust/tests/batch_equivalence.rs`); tasks from different problems
+//! touch different buffers and are trivially disjoint.
 //!
 //! - [`BatchInput`]       — one problem: a banded matrix + its bandwidth,
 //!   in any supported precision.
-//! - [`BatchPlan`]        — the static packing plan (per-problem stages,
-//!   launch/task totals, capacity, policy).
-//! - [`BatchCoordinator`] — owns the pool and knobs; runs the interleaved
-//!   launch loop. The single-problem coordinator is the batch-size-1
-//!   case of this path.
+//! - [`BatchPlan`]        — the static packing plan: per-problem plans
+//!   plus the merged shared-launch plan the engine executes.
+//! - [`BatchCoordinator`] — owns the pool and knobs; executes the merged
+//!   plan. The single-problem coordinator is the batch-size-1 case of
+//!   this path.
 //! - [`BatchReport`]      — per-problem bidiagonals + [`LaunchMetrics`],
 //!   plus aggregate occupancy of the shared launches.
 //!

@@ -1,29 +1,56 @@
-//! Static planning for a batched reduction: per-problem stage plans and
-//! launch/task totals, plus the joint capacity and packing policy the
-//! engine will schedule under. Computed up front (all counts come from
-//! the closed-form schedule, no matrix data is touched) so callers can
-//! size a batch before committing to it.
+//! Static planning for a batched reduction, built on the launch-plan IR:
+//! each problem is lowered to a single-problem [`LaunchPlan`], and the
+//! batch interleaver is a *plan merge* ([`LaunchPlan::merge`]) — the
+//! merged plan is the exact value the engine executes. Computed up front
+//! (all counts come from the closed-form schedule, no matrix data is
+//! touched) so callers can size a batch before committing to it.
 
 use crate::batch::BatchInput;
-use crate::bulge::schedule::{stage_plan, Stage};
+use crate::bulge::schedule::Stage;
 use crate::config::{BatchConfig, PackingPolicy, TuneParams};
 use crate::error::Result;
+use crate::plan::LaunchPlan;
 
-/// One problem's slice of the plan.
+/// One problem's slice of the plan. All shape data lives in the
+/// problem's own single-problem [`LaunchPlan`] (`part`); the accessors
+/// delegate so there is exactly one source of truth.
 #[derive(Clone, Debug)]
 pub struct ProblemPlan {
     /// Index into the batch (stable across plan/report).
     pub index: usize,
-    pub n: usize,
-    pub bw: usize,
-    /// Effective inner tilewidth (clamped to `bw − 1`).
-    pub tw: usize,
     pub precision: &'static str,
-    pub stages: Vec<Stage>,
+    /// The problem's own single-problem launch plan (merge input; also
+    /// sizes the runner's workspaces).
+    pub part: LaunchPlan,
+}
+
+impl ProblemPlan {
+    pub fn n(&self) -> usize {
+        self.part.problems[0].n
+    }
+
+    pub fn bw(&self) -> usize {
+        self.part.problems[0].bw
+    }
+
+    /// Effective inner tilewidth (clamped to `bw − 1`).
+    pub fn tw(&self) -> usize {
+        self.part.problems[0].tw
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.part.problems[0].stages
+    }
+
     /// Non-empty launches this problem will contribute.
-    pub launches: usize,
+    pub fn launches(&self) -> usize {
+        self.part.problems[0].launches
+    }
+
     /// Total cycle-tasks (thread blocks) across all stages.
-    pub tasks: usize,
+    pub fn tasks(&self) -> usize {
+        self.part.problems[0].tasks
+    }
 }
 
 /// The packing plan for a whole batch.
@@ -34,61 +61,51 @@ pub struct BatchPlan {
     pub policy: PackingPolicy,
     pub max_coresident: usize,
     pub problems: Vec<ProblemPlan>,
+    /// The merged shared-launch plan the engine executes — per-problem
+    /// streams interleaved under `capacity` by `policy`.
+    pub merged: LaunchPlan,
 }
 
 impl BatchPlan {
-    /// Validate every input and lay out its schedule.
+    /// Validate every input, lower its schedule, and merge the streams.
     pub fn new(inputs: &[BatchInput], params: &TuneParams, cfg: &BatchConfig) -> Result<Self> {
-        let mut problems = Vec::with_capacity(inputs.len());
-        for (index, input) in inputs.iter().enumerate() {
-            let (n, bw, tw) = input.validate(params)?;
-            let stages = stage_plan(bw, tw);
-            let mut launches = 0;
-            let mut tasks = 0;
-            for stage in &stages {
-                for t in 0..stage.total_launches(n) {
-                    let count = stage.tasks_at_count(n, t);
-                    if count > 0 {
-                        launches += 1;
-                        tasks += count;
-                    }
-                }
-            }
-            problems.push(ProblemPlan {
-                index,
-                n,
-                bw,
-                tw,
-                precision: input.precision(),
-                stages,
-                launches,
-                tasks,
-            });
+        let capacity = params.capacity();
+        let max_coresident = cfg.max_coresident.max(1);
+        let mut precisions = Vec::with_capacity(inputs.len());
+        let mut parts = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let (n, bw, _tw) = input.validate(params)?;
+            precisions.push(input.precision());
+            parts.push(LaunchPlan::for_problem(n, bw, params));
         }
-        Ok(Self {
-            capacity: params.max_blocks.max(1),
-            policy: cfg.policy,
-            max_coresident: cfg.max_coresident.max(1),
-            problems,
-        })
+        let merged = LaunchPlan::merge(&parts, capacity, cfg.policy, max_coresident);
+        // Merge done: move (not clone) each single-problem plan into its
+        // ProblemPlan slice.
+        let problems = precisions
+            .into_iter()
+            .zip(parts)
+            .enumerate()
+            .map(|(index, (precision, part))| ProblemPlan { index, precision, part })
+            .collect();
+        Ok(Self { capacity, policy: cfg.policy, max_coresident, problems, merged })
     }
 
     /// Total cycle-tasks across the batch.
     pub fn total_tasks(&self) -> usize {
-        self.problems.iter().map(|p| p.tasks).sum()
+        self.problems.iter().map(|p| p.tasks()).sum()
     }
 
     /// Total per-problem launches — the shared-launch count when problems
     /// run strictly one after another (`max_coresident = 1`).
     pub fn total_launches(&self) -> usize {
-        self.problems.iter().map(|p| p.launches).sum()
+        self.problems.iter().map(|p| p.launches()).sum()
     }
 
     /// Lower bound on shared launches when the whole batch is co-resident
     /// and capacity never binds: streams advance in lockstep, so the
     /// longest stream dominates.
     pub fn min_shared_launches(&self) -> usize {
-        self.problems.iter().map(|p| p.launches).max().unwrap_or(0)
+        self.problems.iter().map(|p| p.launches()).max().unwrap_or(0)
     }
 }
 
@@ -114,19 +131,31 @@ mod tests {
         assert_eq!(plan.problems.len(), 2);
         assert_eq!(plan.capacity, 16);
         for p in &plan.problems {
-            let stream = TaskStream::new(p.stages.clone(), p.n);
+            let stream = TaskStream::new(p.stages().to_vec(), p.n());
             let mut launches = 0;
             let mut tasks = 0;
             for (_, ts) in stream {
                 launches += 1;
                 tasks += ts.len();
             }
-            assert_eq!(p.launches, launches, "problem {}", p.index);
-            assert_eq!(p.tasks, tasks, "problem {}", p.index);
+            assert_eq!(p.launches(), launches, "problem {}", p.index);
+            assert_eq!(p.tasks(), tasks, "problem {}", p.index);
+            assert_eq!(p.part.total_tasks(), tasks, "problem {}", p.index);
         }
-        assert_eq!(plan.total_launches(), plan.problems.iter().map(|p| p.launches).sum());
+        let per_problem: usize = plan.problems.iter().map(|p| p.launches()).sum();
+        assert_eq!(plan.total_launches(), per_problem);
         assert!(plan.min_shared_launches() <= plan.total_launches());
         assert!(plan.total_tasks() > 0);
+    }
+
+    #[test]
+    fn merged_plan_carries_every_task() {
+        let params = TuneParams { tpb: 32, tw: 3, max_blocks: 16 };
+        let plan = BatchPlan::new(&inputs(), &params, &BatchConfig::default()).unwrap();
+        assert_eq!(plan.merged.total_tasks(), plan.total_tasks());
+        assert_eq!(plan.merged.problems.len(), plan.problems.len());
+        assert!(plan.merged.num_launches() >= plan.min_shared_launches());
+        assert!(plan.merged.num_launches() <= plan.total_launches());
     }
 
     #[test]

@@ -4,40 +4,146 @@
 //!
 //! A cycle = one **right** op (annihilate `d` elements of the pivot row by
 //! combining `d+1` columns) + one **left** op (annihilate the generated
-//! column bulge by combining `d+1` rows). Both walk the banded storage
+//! column bulge by combining `d+1` rows). Both walk storage
 //! column-by-column so every inner loop runs over a *contiguous* memory
 //! segment — the CPU analog of the coalesced/cache-line-aligned accesses
 //! the paper engineers on GPUs.
+//!
+//! The kernels are generic over a [`BandView`], so the same code (and
+//! therefore the exact same float-op order — bitwise-identical results)
+//! runs against two storages:
+//!
+//! - [`SharedBanded`] — the full banded array, chased in place.
+//! - a packed tile ([`crate::banded::storage::TileSpec`]) — the cycle's
+//!   whole footprint gathered into a contiguous per-worker workspace,
+//!   chased there, and written back once. This is the memory-aware path
+//!   (the paper's L1-resident tiles): wide stages re-touch the tile
+//!   `~6×` through the cache hierarchy, so keeping it dense and hot in
+//!   one core's cache beats striding across the band.
+//!
+//! [`exec_cycle`] / [`exec_cycle_shared`] pick the path per stage with
+//! [`stage_uses_packed`]; both paths produce identical bits.
 
-use crate::banded::storage::Banded;
+use crate::banded::storage::{Banded, TileSpec};
 use crate::bulge::schedule::{CycleTask, Stage};
 use crate::householder::make_reflector;
+use crate::plan::LaunchPlan;
 use crate::scalar::Scalar;
 
+/// Default minimum stage span `b + d` for routing through the packed-tile
+/// path. Narrow tiles fit a handful of cache lines each — the pack/unpack
+/// copies cost more than contiguity saves. Wide stages (the bw ≥ 64
+/// regime the paper profiles) chase cache-resident.
+///
+/// Overridable without a rebuild via `BSVD_PACKED_SPAN_MIN` (read once):
+/// `0` forces every stage through the packed path, a huge value forces
+/// in-place — the tuning lever `benches/perf_hotpath.rs` measures (see
+/// ROADMAP: calibrate this on real hardware).
+pub const PACKED_SPAN_MIN: usize = 48;
+
+static PACKED_SPAN_MIN_OVERRIDE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+
+fn packed_span_min() -> usize {
+    *PACKED_SPAN_MIN_OVERRIDE.get_or_init(|| {
+        std::env::var("BSVD_PACKED_SPAN_MIN")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(PACKED_SPAN_MIN)
+    })
+}
+
+/// True when `stage`'s cycles run through the packed-tile workspace.
+/// Every executor (sequential, parallel, batch) consults the same gate,
+/// so all paths stay bitwise identical regardless of the setting.
+#[inline]
+pub fn stage_uses_packed(stage: &Stage) -> bool {
+    stage.b + stage.d >= packed_span_min()
+}
+
 /// Reusable scratch for cycle execution (no allocation on the hot path —
-/// the paper keeps these in shared memory / registers).
+/// the paper keeps these in shared memory / registers). One lives per
+/// worker slot, persistently, so the tile workspace stays in that core's
+/// cache across launches (see `ThreadPool::for_each_slot`).
 #[derive(Clone, Debug)]
 pub struct CycleWorkspace<T> {
     /// Householder vector: x[0] = β after `make_reflector`, x[1..] = tail.
     x: Vec<T>,
     /// Per-row dot products for the right op.
     w: Vec<T>,
+    /// Packed tile buffer (empty until a packed-path stage runs).
+    tile: Vec<T>,
 }
 
 impl<T: Scalar> CycleWorkspace<T> {
     pub fn new(stage: &Stage) -> Self {
+        let tile = if stage_uses_packed(stage) {
+            vec![T::zero(); (stage.b + stage.d + 1) * (stage.b + stage.d + 1)]
+        } else {
+            Vec::new()
+        };
         Self {
             x: vec![T::zero(); stage.d + 1],
             w: vec![T::zero(); stage.b + stage.d + 1],
+            tile,
         }
     }
 
-    /// Workspace sized for the largest stage of a plan.
-    pub fn for_plan(plan: &[Stage]) -> Self {
-        let d = plan.iter().map(|s| s.d).max().unwrap_or(1);
-        let bd = plan.iter().map(|s| s.b + s.d).max().unwrap_or(2);
-        Self { x: vec![T::zero(); d + 1], w: vec![T::zero(); bd + 1] }
+    /// An empty workspace that grows on demand ([`Self::ensure_stage`]) —
+    /// used by the plan executor's per-slot scratch, which is shared by
+    /// problems of mixed shapes.
+    pub fn growable() -> Self {
+        Self { x: Vec::new(), w: Vec::new(), tile: Vec::new() }
     }
+
+    /// Grow the Householder buffers to cover `stage` (the packed-tile
+    /// buffer grows inside [`exec_cycle_packed`] as needed). Cheap: two
+    /// length compares on the hot path once warm.
+    pub fn ensure_stage(&mut self, stage: &Stage) {
+        if self.x.len() < stage.d + 1 {
+            self.x.resize(stage.d + 1, T::zero());
+        }
+        if self.w.len() < stage.b + stage.d + 1 {
+            self.w.resize(stage.b + stage.d + 1, T::zero());
+        }
+    }
+
+    /// Workspace sized for every launch of a plan, straight from the IR's
+    /// max-slot metadata (`max_d`, `max_bd`) — no stage re-scan.
+    pub fn for_plan(plan: &LaunchPlan) -> Self {
+        let tile_side = plan.max_bd + 1;
+        let needs_tile = plan
+            .problems
+            .iter()
+            .flat_map(|p| p.stages.iter())
+            .any(stage_uses_packed);
+        Self {
+            x: vec![T::zero(); plan.max_d + 1],
+            w: vec![T::zero(); plan.max_bd + 1],
+            tile: if needs_tile { vec![T::zero(); tile_side * tile_side] } else { Vec::new() },
+        }
+    }
+}
+
+/// Storage a cycle kernel chases through: banded array or packed tile.
+/// Implementations translate `(i, j)` element coordinates; the kernels
+/// never see the difference, which is what guarantees the two paths are
+/// bitwise identical.
+pub trait BandView<T: Scalar> {
+    fn n(&self) -> usize;
+
+    /// # Safety
+    /// Caller must guarantee no concurrent access to the element.
+    unsafe fn get(&self, i: usize, j: usize) -> T;
+
+    /// # Safety
+    /// Caller must guarantee no concurrent access to the element.
+    unsafe fn set(&self, i: usize, j: usize, v: T);
+
+    /// Contiguous mutable column segment (i0..=i1, j).
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent access to these elements.
+    unsafe fn col_segment_mut<'a>(&self, j: usize, i0: usize, i1: usize) -> &'a mut [T];
 }
 
 /// A raw, `Send + Sync` view over banded storage used by the launch-level
@@ -70,14 +176,34 @@ impl<T: Scalar> SharedBanded<T> {
         j * self.ld + (self.kd_super + i - j)
     }
 
-    /// Contiguous mutable column segment (i0..=i1, j).
+    /// Gather the tile into the contiguous workspace `out` — the same
+    /// [`TileSpec::col_span`] index map as the safe [`Banded::pack_tile`].
     ///
     /// # Safety
-    /// Caller must guarantee no concurrent access to these elements.
+    /// Caller must guarantee no concurrent access to the tile's elements.
+    unsafe fn pack_tile(&self, spec: &TileSpec, out: &mut [T]) {
+        for j in spec.j0..=spec.c1 {
+            let (off, lo, len) = spec.col_span(j);
+            out[off..off + len].copy_from_slice(self.col_segment_mut(j, lo, spec.hi));
+        }
+    }
+
+    /// Write the chased tile back — inverse of [`SharedBanded::pack_tile`].
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent access to the tile's elements.
+    unsafe fn unpack_tile(&self, spec: &TileSpec, buf: &[T]) {
+        for j in spec.j0..=spec.c1 {
+            let (off, lo, len) = spec.col_span(j);
+            self.col_segment_mut(j, lo, spec.hi).copy_from_slice(&buf[off..off + len]);
+        }
+    }
+}
+
+impl<T: Scalar> BandView<T> for SharedBanded<T> {
     #[inline]
-    unsafe fn col_segment_mut<'a>(&self, j: usize, i0: usize, i1: usize) -> &'a mut [T] {
-        let lo = self.idx(i0, j);
-        std::slice::from_raw_parts_mut(self.data.add(lo), i1 - i0 + 1)
+    fn n(&self) -> usize {
+        self.n
     }
 
     #[inline]
@@ -89,6 +215,68 @@ impl<T: Scalar> SharedBanded<T> {
     unsafe fn set(&self, i: usize, j: usize, v: T) {
         *self.data.add(self.idx(i, j)) = v;
     }
+
+    #[inline]
+    unsafe fn col_segment_mut<'a>(&self, j: usize, i0: usize, i1: usize) -> &'a mut [T] {
+        let lo = self.idx(i0, j);
+        std::slice::from_raw_parts_mut(self.data.add(lo), i1 - i0 + 1)
+    }
+}
+
+/// View over a packed tile workspace, addressed in the *original* matrix
+/// coordinates so the kernels are oblivious to the packing.
+struct TileView<T> {
+    data: *mut T,
+    spec: TileSpec,
+    pitch: usize,
+    n: usize,
+}
+
+impl<T: Scalar> TileView<T> {
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        let lo = self.spec.lo(j);
+        debug_assert!(
+            j >= self.spec.j0 && j <= self.spec.c1 && i >= lo && i <= self.spec.hi,
+            "({i},{j}) outside packed tile {:?}",
+            self.spec
+        );
+        (j - self.spec.j0) * self.pitch + (i - lo)
+    }
+}
+
+impl<T: Scalar> BandView<T> for TileView<T> {
+    #[inline]
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    unsafe fn get(&self, i: usize, j: usize) -> T {
+        *self.data.add(self.idx(i, j))
+    }
+
+    #[inline]
+    unsafe fn set(&self, i: usize, j: usize, v: T) {
+        *self.data.add(self.idx(i, j)) = v;
+    }
+
+    #[inline]
+    unsafe fn col_segment_mut<'a>(&self, j: usize, i0: usize, i1: usize) -> &'a mut [T] {
+        let lo = self.idx(i0, j);
+        std::slice::from_raw_parts_mut(self.data.add(lo), i1 - i0 + 1)
+    }
+}
+
+/// The tile a cycle task touches (both ops) — see the index diagram at
+/// [`TileSpec`]: block A is the right op's rows `pivot..=jd` × cols
+/// `anchor..=jd`, block B the left op's rows `anchor..=jd` × cols
+/// `jd+1..=c1`.
+pub fn task_tile_spec(stage: &Stage, task: &CycleTask, n: usize) -> TileSpec {
+    let j0 = task.anchor;
+    let jd = (j0 + stage.d).min(n - 1);
+    let c1 = (j0 + stage.b + stage.d).min(n - 1);
+    TileSpec::new(j0, jd, c1, task.pivot_row, j0, jd)
 }
 
 /// Execute the **right** op of `task`: annihilate the pivot row's elements
@@ -98,13 +286,13 @@ impl<T: Scalar> SharedBanded<T> {
 /// # Safety
 /// `view` elements inside the task's `right_access` rectangle must not be
 /// accessed concurrently.
-pub unsafe fn exec_right<T: Scalar>(
-    view: &SharedBanded<T>,
+pub unsafe fn exec_right<T: Scalar, V: BandView<T>>(
+    view: &V,
     stage: &Stage,
     task: &CycleTask,
     ws: &mut CycleWorkspace<T>,
 ) {
-    let n = view.n;
+    let n = view.n();
     let j0 = task.anchor;
     let rp = task.pivot_row;
     debug_assert!(j0 <= n - 2, "task anchor out of range");
@@ -176,13 +364,13 @@ pub unsafe fn exec_right<T: Scalar>(
 /// # Safety
 /// `view` elements inside the task's `left_access` rectangle must not be
 /// accessed concurrently.
-pub unsafe fn exec_left<T: Scalar>(
-    view: &SharedBanded<T>,
+pub unsafe fn exec_left<T: Scalar, V: BandView<T>>(
+    view: &V,
     stage: &Stage,
     task: &CycleTask,
     ws: &mut CycleWorkspace<T>,
 ) {
-    let n = view.n;
+    let n = view.n();
     let j0 = task.anchor;
     let i1 = (j0 + stage.d).min(n - 1);
     let dd = i1 - j0;
@@ -224,8 +412,51 @@ pub unsafe fn exec_left<T: Scalar>(
     }
 }
 
-/// Execute a full cycle (right then left) on an exclusively-borrowed
-/// matrix — the safe entry point used by the sequential executor.
+/// Execute a full cycle *inside a packed tile workspace*: gather the
+/// task's whole footprint into `ws.tile`, chase there (right then left),
+/// write back once. Bitwise identical to the in-place path — the same
+/// generic kernels run, only the addressing differs.
+///
+/// # Safety
+/// As [`exec_cycle_shared`]: the task's access rectangles must be
+/// disjoint from every concurrently executing task's.
+pub unsafe fn exec_cycle_packed<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+) {
+    let spec = task_tile_spec(stage, task, view.n);
+    let elems = spec.elems();
+    let mut tile = std::mem::take(&mut ws.tile);
+    if tile.len() < elems {
+        tile.resize(elems, T::zero());
+    }
+    view.pack_tile(&spec, &mut tile[..elems]);
+    let tv = TileView { data: tile.as_mut_ptr(), spec, pitch: spec.pitch(), n: view.n };
+    exec_right(&tv, stage, task, ws);
+    exec_left(&tv, stage, task, ws);
+    view.unpack_tile(&spec, &tile[..elems]);
+    ws.tile = tile;
+}
+
+/// Execute a full cycle (right then left) directly on the banded array.
+///
+/// # Safety
+/// As [`exec_cycle_shared`].
+pub unsafe fn exec_cycle_inplace<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+) {
+    exec_right(view, stage, task, ws);
+    exec_left(view, stage, task, ws);
+}
+
+/// Execute a full cycle on an exclusively-borrowed matrix — the safe
+/// entry point used by the sequential executor. Routes through the
+/// packed-tile workspace for wide stages ([`stage_uses_packed`]).
 pub fn exec_cycle<T: Scalar>(
     a: &mut Banded<T>,
     stage: &Stage,
@@ -234,14 +465,12 @@ pub fn exec_cycle<T: Scalar>(
 ) {
     let view = SharedBanded::new(a);
     // SAFETY: exclusive &mut borrow ⇒ no concurrent access at all.
-    unsafe {
-        exec_right(&view, stage, task, ws);
-        exec_left(&view, stage, task, ws);
-    }
+    unsafe { exec_cycle_shared(&view, stage, task, ws) }
 }
 
 /// Execute a full cycle through a shared view — used by the launch-level
-/// parallel executor.
+/// parallel executor. Routes through the packed-tile workspace for wide
+/// stages ([`stage_uses_packed`]).
 ///
 /// # Safety
 /// The task's access rectangles must be disjoint from those of every
@@ -252,8 +481,11 @@ pub unsafe fn exec_cycle_shared<T: Scalar>(
     task: &CycleTask,
     ws: &mut CycleWorkspace<T>,
 ) {
-    exec_right(view, stage, task, ws);
-    exec_left(view, stage, task, ws);
+    if stage_uses_packed(stage) {
+        exec_cycle_packed(view, stage, task, ws);
+    } else {
+        exec_cycle_inplace(view, stage, task, ws);
+    }
 }
 
 #[cfg(test)]
@@ -327,6 +559,72 @@ mod tests {
     }
 
     #[test]
+    fn packed_path_is_bitwise_equal_to_inplace() {
+        // Every (b, d) below and above the PACKED_SPAN_MIN gate, full
+        // sweeps including the clamped matrix edge.
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for (n, b, d) in [(40usize, 5usize, 4usize), (96, 12, 6), (200, 32, 16), (280, 40, 24)] {
+            let stage = Stage::new(b, d);
+            let base = random_banded::<f64>(n, b, d, &mut rng);
+            let mut a1 = base.clone();
+            let mut a2 = base.clone();
+            let mut ws1 = CycleWorkspace::new(&stage);
+            let mut ws2 = CycleWorkspace::new(&stage);
+            for k in 0..stage.num_sweeps(n) {
+                for c in 0..=stage.cmax(n, k) {
+                    let task = stage.task(k, c);
+                    let v1 = SharedBanded::new(&mut a1);
+                    let v2 = SharedBanded::new(&mut a2);
+                    // SAFETY: exclusive borrows, no concurrency.
+                    unsafe {
+                        exec_cycle_inplace(&v1, &stage, &task, &mut ws1);
+                        exec_cycle_packed(&v2, &stage, &task, &mut ws2);
+                    }
+                }
+            }
+            assert_eq!(a1, a2, "n={n} b={b} d={d}");
+            assert_eq!(a1.max_off_band(stage.b_out()), 0.0);
+        }
+    }
+
+    #[test]
+    fn tile_spec_covers_access_rectangles() {
+        // The packed tile must contain both proved-disjoint access
+        // rectangles — that containment is what makes whole-tile
+        // write-back sound under concurrency.
+        let n = 64;
+        for (b, d) in [(8usize, 4usize), (5, 4), (2, 1), (12, 2)] {
+            let stage = Stage::new(b, d);
+            for t in 0..stage.total_launches(n) {
+                for task in stage.tasks_at(n, t) {
+                    let spec = task_tile_spec(&stage, &task, n);
+                    for rect in stage.accesses(&task, n) {
+                        assert!(rect.col0 >= spec.j0 && rect.col1 <= spec.c1, "{task:?}");
+                        for j in rect.col0..=rect.col1 {
+                            assert!(rect.row0 >= spec.lo(j) && rect.row1 <= spec.hi, "{task:?}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_for_plan_covers_widest_stage() {
+        use crate::config::TuneParams;
+        let params = TuneParams { tpb: 32, tw: 32, max_blocks: 8 };
+        let plan = LaunchPlan::for_problem(256, 64, &params);
+        let ws = CycleWorkspace::<f64>::for_plan(&plan);
+        assert_eq!(ws.x.len(), plan.max_d + 1);
+        assert_eq!(ws.w.len(), plan.max_bd + 1);
+        // bw=64, tw=32 stages are all ≥ the packed gate: tile preallocated.
+        assert_eq!(ws.tile.len(), (plan.max_bd + 1) * (plan.max_bd + 1));
+        // Narrow plans skip the tile allocation.
+        let narrow = LaunchPlan::for_problem(64, 4, &TuneParams { tpb: 32, tw: 2, max_blocks: 8 });
+        assert!(CycleWorkspace::<f64>::for_plan(&narrow).tile.is_empty());
+    }
+
+    #[test]
     fn right_op_annihilates_pivot_row_tail() {
         let mut rng = Xoshiro256::seed_from_u64(7);
         let (n, b, d) = (16, 5, 2);
@@ -383,19 +681,21 @@ mod tests {
 
     #[test]
     fn cycle_near_matrix_edge_is_clamped() {
-        // Last sweep: anchors close to n−1 exercise all the clamping.
+        // Last sweep: anchors close to n−1 exercise all the clamping —
+        // through both paths.
         let mut rng = Xoshiro256::seed_from_u64(10);
-        let (n, b, d) = (12, 4, 3);
-        let stage = Stage::new(b, d);
-        let mut a = random_banded::<f64>(n, b, d, &mut rng);
-        let mut ws = CycleWorkspace::new(&stage);
-        let k = stage.num_sweeps(n) - 1;
-        for c in 0..=stage.cmax(n, k) {
-            exec_cycle(&mut a, &stage, &stage.task(k, c), &mut ws);
-        }
-        // Row k must be reduced to bandwidth b−d.
-        for j in (k + stage.b_out() + 1)..n {
-            assert_eq!(a.get(k, j), 0.0, "({k},{j})");
+        for (n, b, d) in [(12usize, 4usize, 3usize), (150, 30, 18)] {
+            let stage = Stage::new(b, d);
+            let mut a = random_banded::<f64>(n, b, d, &mut rng);
+            let mut ws = CycleWorkspace::new(&stage);
+            let k = stage.num_sweeps(n) - 1;
+            for c in 0..=stage.cmax(n, k) {
+                exec_cycle(&mut a, &stage, &stage.task(k, c), &mut ws);
+            }
+            // Row k must be reduced to bandwidth b−d.
+            for j in (k + stage.b_out() + 1)..n {
+                assert_eq!(a.get(k, j), 0.0, "({k},{j})");
+            }
         }
     }
 }

@@ -109,11 +109,18 @@ impl Stage {
     /// Tasks live at global cycle `t` (paper: sweep k runs cycle t − 3k).
     /// Ordered by ascending sweep (descending anchor).
     pub fn tasks_at(&self, n: usize, t: usize) -> Vec<CycleTask> {
+        let mut out = Vec::new();
+        self.tasks_at_into(n, t, &mut out);
+        out
+    }
+
+    /// Append the tasks of global cycle `t` to `out` (allocation-free
+    /// materialization for the plan executor's reused launch buffers).
+    pub fn tasks_at_into(&self, n: usize, t: usize, out: &mut Vec<CycleTask>) {
         let ns = self.num_sweeps(n);
         if ns == 0 {
-            return Vec::new();
+            return;
         }
-        let mut out = Vec::new();
         // k must satisfy 3k ≤ t and t − 3k ≤ cmax(k).
         let k_hi = (t / 3).min(ns - 1);
         // cmax is non-increasing in k, so once t − 3k > cmax(0) we can
@@ -126,7 +133,6 @@ impl Stage {
                 out.push(self.task(k, c));
             }
         }
-        out
     }
 
     /// Number of tasks at global cycle `t`, in O(1) (closed form).
@@ -279,18 +285,29 @@ impl TaskStream {
         }
     }
 
-    /// Yield the next launch: its stage index and its ready tasks.
-    pub fn next_launch(&mut self) -> Option<(usize, Vec<CycleTask>)> {
+    /// Yield the next launch *symbolically*: `(stage index, global cycle,
+    /// task count)`, without materializing the tasks. This is the unit the
+    /// plan IR ([`crate::plan::LaunchPlan`]) is lowered from; executors
+    /// materialize the tasks later with [`Stage::tasks_at`].
+    pub fn next_slot(&mut self) -> Option<(usize, usize, usize)> {
         if self.is_done() {
             return None;
         }
         let si = self.stage_idx;
-        let tasks = self.plan[si].tasks_at(self.n, self.t);
-        debug_assert!(!tasks.is_empty(), "settle() must skip empty launches");
+        let t = self.t;
+        let count = self.plan[si].tasks_at_count(self.n, t);
+        debug_assert!(count > 0, "settle() must skip empty launches");
         self.t += 1;
         self.launches_emitted += 1;
         self.settle();
-        Some((si, tasks))
+        Some((si, t, count))
+    }
+
+    /// Yield the next launch: its stage index and its ready tasks
+    /// (materialized form of [`TaskStream::next_slot`]).
+    pub fn next_launch(&mut self) -> Option<(usize, Vec<CycleTask>)> {
+        let (si, t, _) = self.next_slot()?;
+        Some((si, self.plan[si].tasks_at(self.n, t)))
     }
 }
 

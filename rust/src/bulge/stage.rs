@@ -14,7 +14,7 @@ use crate::banded::storage::Banded;
 use crate::bulge::cycle::{exec_cycle, exec_cycle_shared, CycleWorkspace, SharedBanded};
 use crate::bulge::schedule::Stage;
 use crate::scalar::Scalar;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{ThreadPool, WorkerLocal};
 
 /// Sweep-major order: finish sweep k before starting sweep k+1.
 pub fn run_stage_sequential<T: Scalar>(a: &mut Banded<T>, stage: &Stage) {
@@ -52,19 +52,27 @@ pub fn run_stage_parallel<T: Scalar>(
     let n = a.n();
     let view = SharedBanded::new(a);
     let capacity = block_capacity.max(1);
+    // One persistent workspace per chunk index (no allocation inside the
+    // launch loop — the packed-tile buffer is large for wide stages).
+    let max_chunks = pool.len().max(1);
+    let workspaces: WorkerLocal<CycleWorkspace<T>> =
+        WorkerLocal::new(max_chunks, |_| CycleWorkspace::new(stage));
     for t in 0..stage.total_launches(n) {
         let tasks = stage.tasks_at(n, t);
         if tasks.is_empty() {
             continue;
         }
-        let chunks = tasks.len().min(capacity).min(pool.len().max(1));
-        pool.for_each_chunk(tasks.len(), chunks, |range| {
-            let mut ws = CycleWorkspace::new(stage);
+        let chunks = tasks.len().min(capacity).min(max_chunks);
+        pool.for_each_chunk_indexed(tasks.len(), chunks, |c, range| {
+            // SAFETY (workspaces): chunk index `c` is claimed by exactly
+            // one worker per dispatch, and the barrier between launches
+            // orders reuse across launches.
+            let ws = unsafe { workspaces.get_mut(c) };
             for idx in range {
                 // SAFETY: tasks within one launch access pairwise-disjoint
                 // element rectangles (schedule.rs property), and the
-                // barrier at the end of `for_each_chunk` orders launches.
-                unsafe { exec_cycle_shared(&view, stage, &tasks[idx], &mut ws) };
+                // barrier at the end of the dispatch orders launches.
+                unsafe { exec_cycle_shared(&view, stage, &tasks[idx], ws) };
             }
         });
     }

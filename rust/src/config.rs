@@ -40,6 +40,14 @@ impl TuneParams {
     pub fn effective_tw(&self, bw: usize) -> usize {
         self.tw.min(bw.saturating_sub(1)).max(1)
     }
+
+    /// Block capacity per launch: MaxBlocks tasks run concurrently, the
+    /// rest are loop-unrolled inside workers (the paper's per-device
+    /// limit, §III-C-c). The single clamp shared by the coordinator, the
+    /// batch engine, and the plan IR.
+    pub fn capacity(&self) -> usize {
+        self.max_blocks.max(1)
+    }
 }
 
 impl Default for TuneParams {
@@ -153,6 +161,14 @@ mod tests {
         assert_eq!(p.effective_tw(8), 7);
         assert_eq!(p.effective_tw(2), 1);
         assert_eq!(p.effective_tw(1), 1);
+    }
+
+    #[test]
+    fn capacity_clamps_to_one() {
+        assert_eq!(TuneParams { tpb: 1, tw: 1, max_blocks: 7 }.capacity(), 7);
+        // max_blocks = 0 is rejected by `new`, but struct-literal configs
+        // must still execute: clamp instead of panicking.
+        assert_eq!(TuneParams { tpb: 1, tw: 1, max_blocks: 0 }.capacity(), 1);
     }
 
     #[test]

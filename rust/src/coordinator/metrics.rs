@@ -11,14 +11,23 @@ pub struct LaunchMetrics {
     /// Launches whose task count exceeded the block capacity (software
     /// loop unrolling engaged, §III-C-c).
     pub unrolled_launches: usize,
+    /// Algorithmic byte traffic ([`crate::plan::slot_bytes`]) across all
+    /// launches — derived from the same [`crate::plan::LaunchPlan`] the
+    /// simulator costs, so predicted and executed traffic agree exactly.
+    pub bytes: u64,
+    /// Tasks per launch, in execution order (launch-by-launch record the
+    /// plan-consistency property test compares against the simulator).
+    pub per_launch: Vec<u32>,
     pub wall: Duration,
 }
 
 impl LaunchMetrics {
-    pub fn record_launch(&mut self, tasks: usize, capacity: usize) {
+    pub fn record_launch(&mut self, tasks: usize, capacity: usize, bytes: u64) {
         self.launches += 1;
         self.tasks += tasks;
         self.max_parallel = self.max_parallel.max(tasks);
+        self.bytes += bytes;
+        self.per_launch.push(tasks as u32);
         if tasks > capacity {
             self.unrolled_launches += 1;
         }
@@ -48,6 +57,8 @@ impl LaunchMetrics {
         self.tasks += o.tasks;
         self.max_parallel = self.max_parallel.max(o.max_parallel);
         self.unrolled_launches += o.unrolled_launches;
+        self.bytes += o.bytes;
+        self.per_launch.extend_from_slice(&o.per_launch);
         self.wall += o.wall;
     }
 }
@@ -59,12 +70,14 @@ mod tests {
     #[test]
     fn records_and_averages() {
         let mut m = LaunchMetrics::default();
-        m.record_launch(4, 8);
-        m.record_launch(10, 8);
+        m.record_launch(4, 8, 100);
+        m.record_launch(10, 8, 250);
         assert_eq!(m.launches, 2);
         assert_eq!(m.tasks, 14);
         assert_eq!(m.max_parallel, 10);
         assert_eq!(m.unrolled_launches, 1);
+        assert_eq!(m.bytes, 350);
+        assert_eq!(m.per_launch, vec![4, 10]);
         assert!((m.avg_parallel() - 7.0).abs() < 1e-12);
     }
 
@@ -72,11 +85,11 @@ mod tests {
     fn occupancy_ratio_counts_filled_slots() {
         let mut m = LaunchMetrics::default();
         assert_eq!(m.occupancy_ratio(8), 0.0);
-        m.record_launch(4, 8);
-        m.record_launch(8, 8);
+        m.record_launch(4, 8, 0);
+        m.record_launch(8, 8, 0);
         assert!((m.occupancy_ratio(8) - 0.75).abs() < 1e-12);
         // Unrolled launches push the ratio past 1.
-        m.record_launch(20, 8);
+        m.record_launch(20, 8, 0);
         assert!(m.occupancy_ratio(8) > 1.0);
         assert_eq!(m.occupancy_ratio(0), 0.0);
     }
@@ -84,12 +97,14 @@ mod tests {
     #[test]
     fn merge_accumulates() {
         let mut a = LaunchMetrics::default();
-        a.record_launch(3, 8);
+        a.record_launch(3, 8, 10);
         let mut b = LaunchMetrics::default();
-        b.record_launch(5, 8);
+        b.record_launch(5, 8, 20);
         a.merge(&b);
         assert_eq!(a.launches, 2);
         assert_eq!(a.tasks, 8);
         assert_eq!(a.max_parallel, 5);
+        assert_eq!(a.bytes, 30);
+        assert_eq!(a.per_launch, vec![3, 5]);
     }
 }

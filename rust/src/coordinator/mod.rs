@@ -1,12 +1,13 @@
 //! L3 coordinator — the run-time owner of the reduction.
 //!
-//! Owns the banded buffer, computes the stage plan, steps the launch
-//! loop (with the paper's 3-cycle schedule), batches tasks under the
-//! MaxBlocks capacity, dispatches to a backend, and collects metrics.
+//! Owns the banded buffer, lowers the 3-cycle schedule into a
+//! [`LaunchPlan`] (the same value the simulator costs —
+//! `simulator::model::simulate_plan` — so predicted launches/occupancy
+//! are exact by construction), executes it, and collects metrics.
 //! Backends:
 //!
 //! - [`Backend::Sequential`] / [`Backend::Parallel`] — native Rust cycle
-//!   kernels (any precision).
+//!   kernels (any precision), in-place or packed-tile per stage width.
 //! - [`Backend::Pjrt`] — per-launch AOT artifacts through the PJRT CPU
 //!   client (f32; python never runs — artifacts are pre-compiled).
 //! - [`Backend::PjrtFused`] — whole-stage artifacts, one call per stage.
@@ -14,11 +15,12 @@
 pub mod metrics;
 
 use crate::banded::storage::Banded;
-use crate::batch::engine::{run_interleaved, Runner};
+use crate::batch::engine::{execute_plan, Runner};
 use crate::bulge::cycle::{exec_cycle, CycleWorkspace};
-use crate::bulge::schedule::{stage_plan, TaskStream};
-use crate::config::{Backend, PackingPolicy, TuneParams};
+use crate::bulge::schedule::CycleTask;
+use crate::config::{Backend, TuneParams};
 use crate::error::{Error, Result};
+use crate::plan::{slot_bytes, LaunchPlan};
 use crate::runtime::PjrtEngine;
 use crate::scalar::Scalar;
 use crate::util::threadpool::ThreadPool;
@@ -55,11 +57,12 @@ impl Coordinator {
         &self.pool
     }
 
-    /// Block capacity per launch: MaxBlocks tasks run concurrently; the
-    /// rest are loop-unrolled inside workers (the CPU stand-in for the
-    /// paper's per-execution-unit limit).
-    fn capacity(&self) -> usize {
-        self.params.max_blocks.max(1)
+    /// The launch plan this coordinator executes for an `n × n` problem of
+    /// bandwidth `bw` — the identical value
+    /// [`crate::simulator::model::simulate_reduction`] costs for the same
+    /// `(n, bw, TuneParams)`.
+    pub fn launch_plan(&self, n: usize, bw: usize) -> LaunchPlan {
+        LaunchPlan::for_problem(n, bw, &self.params)
     }
 
     /// Run a native reduction (sequential or thread-pooled launch loop).
@@ -72,30 +75,35 @@ impl Coordinator {
         let n = a.n();
         let tw = self.params.effective_tw(bw);
         a.check_reduction_storage(bw, tw)?;
+        let plan = self.launch_plan(n, bw);
+        let capacity = plan.capacity;
+        let es = T::BYTES;
         let mut m = LaunchMetrics::default();
-        let capacity = self.capacity();
         let t_start = Instant::now();
         match backend {
             Backend::Sequential => {
-                // The launch stream in schedule order, executed inline
-                // (one task at a time, empty launches skipped).
-                let plan = stage_plan(bw, tw);
+                // The plan executed inline, one task at a time, in launch
+                // order (the schedule-order oracle path).
                 let mut ws = CycleWorkspace::for_plan(&plan);
-                let mut stream = TaskStream::new(plan, n);
-                while let Some((si, tasks)) = stream.next_launch() {
-                    m.record_launch(tasks.len(), capacity);
-                    let stage = stream.plan()[si];
-                    for task in &tasks {
-                        exec_cycle(a, &stage, task, &mut ws);
+                let mut tasks: Vec<CycleTask> = Vec::new();
+                for li in 0..plan.num_launches() {
+                    m.record_launch(plan.launch_tasks(li), capacity, plan.launch_bytes(li, es));
+                    for slot in plan.launch(li) {
+                        let stage = *plan.slot_stage(slot);
+                        tasks.clear();
+                        stage.tasks_at_into(n, slot.t as usize, &mut tasks);
+                        for task in &tasks {
+                            exec_cycle(a, &stage, task, &mut ws);
+                        }
                     }
                 }
             }
             Backend::Parallel => {
-                // The batch-size-1 case of the interleaved batch engine
-                // (crate::batch): one runner, one stream, same launch
-                // loop the multi-problem path uses.
-                let mut runners = vec![Runner::new(a, bw, &self.params)?];
-                run_interleaved(&mut runners, &self.pool, capacity, PackingPolicy::RoundRobin, 1);
+                // The batch-size-1 case of the plan executor
+                // (crate::batch): one runner, the same launch loop the
+                // multi-problem path uses.
+                let mut runners = vec![Runner::new(a, &plan)?];
+                execute_plan(&plan, &mut runners, &self.pool);
                 m = runners[0].metrics.clone();
             }
             other => {
@@ -136,7 +144,9 @@ impl Coordinator {
         };
         let n = a.n();
         let bw = engine.manifest().bw;
-        let capacity = self.capacity();
+        let capacity = self.params.capacity();
+        // Artifacts execute in f32 regardless of the in-memory precision.
+        let es = 4;
         let mut m = LaunchMetrics::default();
         let t_start = Instant::now();
         if fused {
@@ -146,7 +156,8 @@ impl Coordinator {
             for st in &engine.manifest().stages {
                 let stage = crate::bulge::schedule::Stage::new(st.b, st.d);
                 for t in 0..st.launches {
-                    m.record_launch(stage.tasks_at_count(n, t), capacity);
+                    let count = stage.tasks_at_count(n, t);
+                    m.record_launch(count, capacity, slot_bytes(&stage, count, es));
                 }
             }
         } else {
@@ -156,7 +167,8 @@ impl Coordinator {
             engine.reduce_per_cycle(&mut flat, |si, t| {
                 let st = &manifest.stages[si];
                 let stage = crate::bulge::schedule::Stage::new(st.b, st.d);
-                m.record_launch(stage.tasks_at_count(n, t), capacity);
+                let count = stage.tasks_at_count(n, t);
+                m.record_launch(count, capacity, slot_bytes(&stage, count, es));
             })?;
             a.from_f32_flat(&flat);
         }
@@ -194,9 +206,27 @@ mod tests {
         assert_eq!(a1, a2);
         assert_eq!(r1.metrics.launches, r2.metrics.launches);
         assert_eq!(r1.metrics.tasks, r2.metrics.tasks);
+        assert_eq!(r1.metrics.per_launch, r2.metrics.per_launch);
+        assert_eq!(r1.metrics.bytes, r2.metrics.bytes);
         assert_eq!(r1.residual_off_band, 0.0);
         assert!(r1.metrics.max_parallel >= 1);
         assert!(r1.metrics.avg_parallel() > 0.0);
+    }
+
+    #[test]
+    fn metrics_match_the_launch_plan_exactly() {
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 8 };
+        let coord = Coordinator::new(params, 2);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let (n, bw) = (72, 9);
+        let plan = coord.launch_plan(n, bw);
+        let mut a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let r = coord.reduce_native(&mut a, bw, Backend::Parallel).unwrap();
+        assert_eq!(r.metrics.launches, plan.num_launches());
+        assert_eq!(r.metrics.tasks, plan.total_tasks());
+        for (li, &got) in r.metrics.per_launch.iter().enumerate() {
+            assert_eq!(got as usize, plan.launch_tasks(li), "launch {li}");
+        }
     }
 
     #[test]

@@ -15,6 +15,47 @@
 //!   and the GPU performance model that regenerates the paper's tables
 //!   and figures.
 //!
+//! ## Architecture: schedule → plan → {execute, batch-merge, simulate}
+//!
+//! The paper's hardware-aware tuning only works if the model tunes the
+//! *actual* schedule the device runs. The crate therefore funnels every
+//! consumer through one launch-plan IR ([`plan::LaunchPlan`]):
+//!
+//! ```text
+//!   bulge/schedule.rs ── lower ──▶ plan::LaunchPlan
+//!                                     │
+//!            ┌────────────────────────┼─────────────────────────┐
+//!            ▼                        ▼                         ▼
+//!   coordinator (execute)   plan::LaunchPlan::merge    simulator::model
+//!   one launch = one pool   (batch interleaving as a   (simulate_plan costs
+//!   dispatch + barrier       pure plan transform)       the identical value)
+//! ```
+//!
+//! - The **scheduler** lowers the 3-cycle schedule into symbolic
+//!   [`plan::TaskSlot`]s (problem, stage, cycle, count) — compact enough
+//!   to materialize n = 65536 plans, exact enough to reconstruct every
+//!   task.
+//! - The **executors** (coordinator, batch engine) walk the plan launch
+//!   by launch. Batching is [`plan::LaunchPlan::merge`]: per-problem
+//!   streams interleaved into shared launches under the joint MaxBlocks
+//!   capacity, preserving per-problem order (hence bitwise-identical
+//!   results).
+//! - The **simulator** costs the *same* plan value
+//!   ([`simulator::model::simulate_plan`]), so predicted launch counts,
+//!   per-launch task counts, and byte traffic match execution exactly —
+//!   property-tested in `rust/tests/plan_consistency.rs`.
+//!
+//! ## Memory-aware packed-tile execution
+//!
+//! Wide stages chase bulges inside a packed, contiguous tile workspace
+//! (the CPU analog of the paper's L1-resident tiles): the cycle's whole
+//! footprint is gathered ([`banded::Banded::pack_tile`]), chased there by
+//! the same generic kernels (bitwise-identical results), and written back
+//! once. Workspaces are persistent per pool slot
+//! (`util::threadpool::WorkerLocal`), and the executor routes tasks with
+//! sticky column-window affinity so a chased window stays in one core's
+//! cache across launches.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -69,6 +110,7 @@ pub mod error;
 pub mod generate;
 pub mod householder;
 pub mod pipeline;
+pub mod plan;
 pub mod runtime;
 pub mod scalar;
 pub mod simulator;
@@ -90,6 +132,7 @@ pub mod prelude {
         batch_singular_values, bidiagonal_singular_values, dense_to_band,
         singular_values_3stage, SvdOptions,
     };
+    pub use crate::plan::{LaunchPlan, TaskSlot};
     pub use crate::scalar::{Scalar, F16};
     pub use crate::util::rng::Xoshiro256;
     pub use crate::util::threadpool::ThreadPool;

@@ -39,6 +39,28 @@ fn cli() -> Cli {
                 ],
             },
             Command {
+                name: "batch",
+                about: "reduce a batch of random banded problems through shared launches",
+                opts: vec![
+                    opt("count", "number of problems", "8"),
+                    opt("n", "matrix size of each problem", "256"),
+                    opt("bw", "bandwidth of each problem", "16"),
+                    opt(
+                        "spec",
+                        "explicit problem list n:bw[:fp16|fp32|fp64],... (overrides count/n/bw)",
+                        "",
+                    ),
+                    opt("precision", "default precision: fp16|fp32|fp64", "fp64"),
+                    opt("tw", "inner tilewidth", "8"),
+                    opt("tpb", "threads per block", "32"),
+                    opt("max-blocks", "joint block capacity per shared launch", "192"),
+                    opt("policy", "packing policy: round-robin|greedy-fill", "round-robin"),
+                    opt("max-coresident", "max problems interleaved at once", "64"),
+                    opt("threads", "worker threads (0 = all cores)", "0"),
+                    opt("seed", "rng seed", "42"),
+                ],
+            },
+            Command {
                 name: "svd",
                 about: "full 3-stage singular-value pipeline on a random dense matrix",
                 opts: vec![
@@ -132,6 +154,7 @@ fn main() {
     };
     let code = match parsed.command.as_str() {
         "reduce" => cmd_reduce(&parsed.args),
+        "batch" => cmd_batch(&parsed.args),
         "svd" => cmd_svd(&parsed.args),
         "accuracy" => cmd_accuracy(&parsed.args),
         "occupancy" => cmd_occupancy(&parsed.args),
@@ -216,6 +239,116 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
             1
         }
     }
+}
+
+fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
+    use banded_svd::batch::{BatchCoordinator, BatchInput};
+    use banded_svd::config::{BatchConfig, PackingPolicy};
+
+    let params = TuneParams {
+        tpb: args.parse_or("tpb", 32),
+        tw: args.parse_or("tw", 8),
+        max_blocks: args.parse_or("max-blocks", 192),
+    };
+    let policy: PackingPolicy = match args.get("policy").unwrap_or("round-robin").parse() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = BatchConfig { max_coresident: args.parse_or("max-coresident", 64).max(1), policy };
+    let default_prec = args.get("precision").unwrap_or("fp64").to_string();
+
+    // Problem list: either an explicit spec or count × (n, bw).
+    let mut shapes: Vec<(usize, usize, String)> = Vec::new();
+    let spec = args.get("spec").unwrap_or("");
+    if spec.is_empty() {
+        let count: usize = args.parse_or("count", 8);
+        let n: usize = args.parse_or("n", 256);
+        let bw: usize = args.parse_or("bw", 16);
+        shapes.extend((0..count).map(|_| (n, bw, default_prec.clone())));
+    } else {
+        for item in spec.split(',') {
+            let parts: Vec<&str> = item.trim().split(':').collect();
+            let parsed = match parts.as_slice() {
+                [n, bw] => (n.parse(), bw.parse(), default_prec.clone()),
+                [n, bw, prec] => (n.parse(), bw.parse(), prec.to_string()),
+                _ => {
+                    eprintln!("bad --spec entry {item:?} (want n:bw or n:bw:precision)");
+                    return 2;
+                }
+            };
+            match parsed {
+                (Ok(n), Ok(bw), prec) => shapes.push((n, bw, prec)),
+                _ => {
+                    eprintln!("bad --spec entry {item:?}: n and bw must be integers");
+                    return 2;
+                }
+            }
+        }
+    }
+
+    let mut rng = Xoshiro256::seed_from_u64(args.parse_or("seed", 42));
+    let mut inputs: Vec<BatchInput> = Vec::with_capacity(shapes.len());
+    for (n, bw, prec) in &shapes {
+        let tw = params.effective_tw(*bw);
+        inputs.push(match prec.as_str() {
+            "fp16" => BatchInput::from((random_banded::<F16>(*n, *bw, tw, &mut rng), *bw)),
+            "fp32" => BatchInput::from((random_banded::<f32>(*n, *bw, tw, &mut rng), *bw)),
+            "fp64" => BatchInput::from((random_banded::<f64>(*n, *bw, tw, &mut rng), *bw)),
+            other => {
+                eprintln!("unknown precision {other:?} (fp16|fp32|fp64)");
+                return 2;
+            }
+        });
+    }
+
+    let coord = BatchCoordinator::new(params, cfg, args.parse_or("threads", 0));
+    let report = match coord.run(&mut inputs) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "batch of {} problems, capacity {} ({:?}), max co-resident {}",
+        report.problems.len(),
+        report.plan.capacity,
+        report.plan.policy,
+        report.plan.max_coresident
+    );
+    let mut table = Table::new(vec![
+        "problem", "n", "bw", "prec", "launches", "tasks", "max par", "bytes", "residual",
+    ]);
+    for (i, p) in report.problems.iter().enumerate() {
+        table.row(vec![
+            i.to_string(),
+            p.n.to_string(),
+            p.bw.to_string(),
+            p.precision.to_string(),
+            p.metrics.launches.to_string(),
+            p.metrics.tasks.to_string(),
+            p.metrics.max_parallel.to_string(),
+            p.metrics.bytes.to_string(),
+            format!("{:.1e}", p.residual_off_band),
+        ]);
+    }
+    table.print();
+    let agg = &report.metrics;
+    println!(
+        "aggregate: {} shared launches ({} co-scheduled, ≤ {} problems/launch), \
+         {} tasks, occupancy {:.2}, {:.1} problems/s, wall {}",
+        agg.aggregate.launches,
+        agg.co_scheduled_launches,
+        agg.max_problems_per_launch,
+        agg.aggregate.tasks,
+        agg.occupancy_ratio(),
+        report.throughput(),
+        fmt_duration(report.wall)
+    );
+    0
 }
 
 fn cmd_svd(args: &banded_svd::util::cli::Args) -> i32 {

@@ -1,0 +1,434 @@
+//! Launch-plan IR — the single source of truth for *what the device
+//! executes*.
+//!
+//! The paper's two pillars meet here: the 3-cycle bulge-chasing schedule
+//! is **lowered** (by [`crate::bulge::schedule::TaskStream`]) into a
+//! backend-agnostic sequence of launches — each a run of [`TaskSlot`]s,
+//! stored CSR-style — and every consumer operates on that one value:
+//!
+//! ```text
+//!   schedule (bulge/schedule.rs)
+//!        │ lower
+//!        ▼
+//!   LaunchPlan ──── merge ────▶ LaunchPlan (shared launches, batched)
+//!        │                          │
+//!        ├──▶ execute (coordinator, batch engine)
+//!        └──▶ simulate (simulator::model) — costs the identical value,
+//!             so predicted launches/occupancy are exact by construction
+//! ```
+//!
+//! A [`TaskSlot`] is deliberately *symbolic*: it names `(problem, stage,
+//! global cycle, task count)` instead of materializing the cycle-tasks.
+//! The closed-form schedule reconstructs the task list exactly
+//! ([`Stage::tasks_at`]), so a plan for an n = 65536 reduction stays a
+//! few MB instead of hundreds; the simulator only ever needs the counts.
+//!
+//! Ordering contract (what makes merge correct): launches execute in plan
+//! order with a barrier between them, and any two slots of the same
+//! problem appear in that problem's own stream order. A merge therefore
+//! never changes per-problem numerics — batched results stay bitwise
+//! identical to solo runs (property-tested in
+//! `rust/tests/batch_equivalence.rs`).
+
+use crate::bulge::schedule::{stage_plan, Stage, TaskStream};
+use crate::config::{PackingPolicy, TuneParams};
+
+/// One problem's contribution to a launch: `count` ready cycle-tasks of
+/// stage `stage` at the stage's global cycle `t`. Executors materialize
+/// the tasks with `stages[stage].tasks_at(n, t)`; the simulator costs the
+/// count directly.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct TaskSlot {
+    /// Index into [`LaunchPlan::problems`].
+    pub problem: u32,
+    /// Index into the problem's stage list.
+    pub stage: u32,
+    /// Global cycle within the stage (the schedule's `t`).
+    pub t: u32,
+    /// Ready tasks (> 0; empty cycles are never lowered).
+    pub count: u32,
+}
+
+/// Static description of one problem in a plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProblemShape {
+    pub n: usize,
+    pub bw: usize,
+    /// Effective inner tilewidth (already clamped to `bw − 1`).
+    pub tw: usize,
+    /// Successive band-reduction stages, `bw` down to bandwidth 1.
+    pub stages: Vec<Stage>,
+    /// Non-empty launches this problem contributes.
+    pub launches: usize,
+    /// Total cycle-tasks across all stages.
+    pub tasks: usize,
+}
+
+/// The launch-plan IR: an ordered sequence of launches, each a list of
+/// [`TaskSlot`]s, stored CSR-style (flat slot array + per-launch end
+/// offsets) so single-problem plans cost one allocation per Vec, not one
+/// per launch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LaunchPlan {
+    pub problems: Vec<ProblemShape>,
+    slots: Vec<TaskSlot>,
+    /// `launch_ends[i]` = one-past-the-end slot index of launch `i`.
+    launch_ends: Vec<u32>,
+    /// Block capacity (MaxBlocks, clamped ≥ 1) the launches are packed
+    /// under and executed/simulated with.
+    pub capacity: usize,
+    /// Largest stage `d` across every problem (reflector tail length).
+    pub max_d: usize,
+    /// Largest stage `b + d` across every problem (apply width) — the
+    /// max-slot metadata workspace sizing derives from.
+    pub max_bd: usize,
+}
+
+/// Algorithmic byte traffic of `count` tasks of a stage: each task's
+/// right + left op reads and writes a `(1+b+d) × (d+1)` tile. This is the
+/// schedule-level traffic both the executor's metrics and the simulator
+/// account per launch (cache modeling then refines it per memory level).
+pub fn slot_bytes(stage: &Stage, count: usize, es: usize) -> u64 {
+    let tile_elems = (1 + stage.b + stage.d) * (stage.d + 1);
+    4 * (tile_elems as u64) * (count as u64) * (es as u64)
+}
+
+impl LaunchPlan {
+    /// Lower one problem's full stage plan into a plan: one slot per
+    /// non-empty launch, in schedule order.
+    pub fn from_stages(n: usize, stages: Vec<Stage>, capacity: usize) -> Self {
+        Self::from_stages_for(n, 0, 0, stages, capacity)
+    }
+
+    /// Lower a plan for a bandwidth-`bw` problem under `params` — the
+    /// exact value [`crate::coordinator::Coordinator`] executes and
+    /// [`crate::simulator::model::simulate_reduction`] costs.
+    pub fn for_problem(n: usize, bw: usize, params: &TuneParams) -> Self {
+        let tw = params.effective_tw(bw);
+        Self::from_stages_for(n, bw, tw, stage_plan(bw, tw), params.capacity())
+    }
+
+    fn from_stages_for(
+        n: usize,
+        bw: usize,
+        tw: usize,
+        stages: Vec<Stage>,
+        capacity: usize,
+    ) -> Self {
+        let mut stream = TaskStream::new(stages.clone(), n);
+        let mut slots = Vec::new();
+        let mut launch_ends = Vec::new();
+        let mut tasks = 0usize;
+        while let Some((si, t, count)) = stream.next_slot() {
+            slots.push(TaskSlot {
+                problem: 0,
+                stage: si as u32,
+                t: t as u32,
+                count: count as u32,
+            });
+            launch_ends.push(slots.len() as u32);
+            tasks += count;
+        }
+        let launches = launch_ends.len();
+        let problem = ProblemShape { n, bw, tw, stages, launches, tasks };
+        let mut plan = Self {
+            problems: vec![problem],
+            slots,
+            launch_ends,
+            capacity: capacity.max(1),
+            max_d: 0,
+            max_bd: 0,
+        };
+        plan.refresh_metadata();
+        plan
+    }
+
+    /// Merge single-problem plans into one shared-launch plan — the batch
+    /// interleaver as a *pure plan transformation*. Each shared launch
+    /// pops at most one pending launch per admitted problem (so
+    /// per-problem launch order is preserved exactly), packing under
+    /// `capacity` according to `policy`; at most `max_coresident`
+    /// problems are interleaved at a time, later ones admitted as earlier
+    /// ones finish.
+    pub fn merge(
+        parts: &[LaunchPlan],
+        capacity: usize,
+        policy: PackingPolicy,
+        max_coresident: usize,
+    ) -> Self {
+        let capacity = capacity.max(1);
+        let max_coresident = max_coresident.max(1);
+        let problems: Vec<ProblemShape> = parts
+            .iter()
+            .flat_map(|p| p.problems.iter().cloned())
+            .collect();
+        assert_eq!(problems.len(), parts.len(), "merge expects single-problem plans");
+        // Per-problem cursor into its own slot list.
+        let mut cursor: Vec<usize> = vec![0; parts.len()];
+        let peek = |cursor: &[usize], p: usize| -> Option<TaskSlot> {
+            parts[p].slots.get(cursor[p]).copied()
+        };
+        let mut slots: Vec<TaskSlot> = Vec::new();
+        let mut launch_ends: Vec<u32> = Vec::new();
+        let mut rotation = 0usize;
+        loop {
+            // Admission window: the first `max_coresident` unfinished
+            // problems, in batch order.
+            let admitted: Vec<usize> = (0..parts.len())
+                .filter(|&p| cursor[p] < parts[p].slots.len())
+                .take(max_coresident)
+                .collect();
+            if admitted.is_empty() {
+                break;
+            }
+            let order: Vec<usize> = match policy {
+                PackingPolicy::RoundRobin => {
+                    let start = rotation % admitted.len();
+                    admitted[start..].iter().chain(admitted[..start].iter()).copied().collect()
+                }
+                PackingPolicy::GreedyFill => {
+                    let mut by_size = admitted.clone();
+                    by_size.sort_by_key(|&p| {
+                        std::cmp::Reverse(peek(&cursor, p).map_or(0, |s| s.count))
+                    });
+                    by_size
+                }
+            };
+            rotation = rotation.wrapping_add(1);
+
+            // Select: pop at most one launch per problem while it fits
+            // (the first always fits, guaranteeing progress).
+            let launch_start = slots.len();
+            let mut packed = 0usize;
+            for &p in &order {
+                let slot = match peek(&cursor, p) {
+                    Some(s) => s,
+                    None => continue,
+                };
+                let count = slot.count as usize;
+                if packed > 0 && packed + count > capacity {
+                    continue;
+                }
+                cursor[p] += 1;
+                slots.push(TaskSlot { problem: p as u32, ..slot });
+                packed += count;
+                if packed >= capacity {
+                    break;
+                }
+            }
+            debug_assert!(slots.len() > launch_start, "shared launch must make progress");
+            launch_ends.push(slots.len() as u32);
+        }
+        let mut plan = Self {
+            problems,
+            slots,
+            launch_ends,
+            capacity,
+            max_d: 0,
+            max_bd: 0,
+        };
+        plan.refresh_metadata();
+        plan
+    }
+
+    fn refresh_metadata(&mut self) {
+        self.max_d = 0;
+        self.max_bd = 0;
+        for p in &self.problems {
+            for s in &p.stages {
+                self.max_d = self.max_d.max(s.d);
+                self.max_bd = self.max_bd.max(s.b + s.d);
+            }
+        }
+    }
+
+    /// Most tasks in any single launch (computed on demand — no
+    /// production consumer pays for it on the lowering/merge path).
+    pub fn max_launch_tasks(&self) -> usize {
+        (0..self.num_launches()).map(|i| self.launch_tasks(i)).max().unwrap_or(0)
+    }
+
+    /// Number of launches (all non-empty by construction).
+    pub fn num_launches(&self) -> usize {
+        self.launch_ends.len()
+    }
+
+    /// The slots of launch `i`.
+    pub fn launch(&self, i: usize) -> &[TaskSlot] {
+        let start = if i == 0 { 0 } else { self.launch_ends[i - 1] as usize };
+        &self.slots[start..self.launch_ends[i] as usize]
+    }
+
+    /// Iterate over the launches in execution order.
+    pub fn iter_launches(&self) -> impl Iterator<Item = &[TaskSlot]> + '_ {
+        (0..self.num_launches()).map(move |i| self.launch(i))
+    }
+
+    /// Tasks (thread blocks) in launch `i`.
+    pub fn launch_tasks(&self, i: usize) -> usize {
+        self.launch(i).iter().map(|s| s.count as usize).sum()
+    }
+
+    /// The stage a slot refers to.
+    pub fn slot_stage(&self, slot: &TaskSlot) -> &Stage {
+        &self.problems[slot.problem as usize].stages[slot.stage as usize]
+    }
+
+    /// Algorithmic byte traffic of launch `i` at element size `es`.
+    pub fn launch_bytes(&self, i: usize, es: usize) -> u64 {
+        self.launch(i)
+            .iter()
+            .map(|s| slot_bytes(self.slot_stage(s), s.count as usize, es))
+            .sum()
+    }
+
+    /// Total cycle-tasks across the plan.
+    pub fn total_tasks(&self) -> usize {
+        self.problems.iter().map(|p| p.tasks).sum()
+    }
+
+    /// Launches carrying tasks from more than one problem.
+    pub fn co_scheduled_launches(&self) -> usize {
+        self.iter_launches().filter(|l| l.len() > 1).count()
+    }
+
+    /// Most problems co-scheduled in any single launch.
+    pub fn max_problems_per_launch(&self) -> usize {
+        self.iter_launches().map(|l| l.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bulge::schedule::stage_plan;
+
+    fn params(tw: usize, mb: usize) -> TuneParams {
+        TuneParams { tpb: 32, tw, max_blocks: mb }
+    }
+
+    #[test]
+    fn lowering_matches_task_stream_exactly() {
+        for (n, bw, tw) in [(64usize, 8usize, 4usize), (40, 6, 5), (24, 2, 1), (96, 12, 3)] {
+            let plan = LaunchPlan::for_problem(n, bw, &params(tw, 16));
+            let mut stream = TaskStream::new(stage_plan(bw, tw), n);
+            let mut i = 0;
+            while let Some((si, tasks)) = stream.next_launch() {
+                let launch = plan.launch(i);
+                assert_eq!(launch.len(), 1);
+                assert_eq!(launch[0].stage as usize, si);
+                assert_eq!(launch[0].count as usize, tasks.len());
+                let stage = plan.slot_stage(&launch[0]);
+                assert_eq!(stage.tasks_at(n, launch[0].t as usize), tasks);
+                i += 1;
+            }
+            assert_eq!(plan.num_launches(), i);
+            assert_eq!(plan.problems[0].launches, i);
+            assert_eq!(
+                plan.total_tasks(),
+                stage_plan(bw, tw)
+                    .iter()
+                    .map(|s| crate::bulge::schedule::stage_task_count(s, n))
+                    .sum::<usize>()
+            );
+        }
+    }
+
+    #[test]
+    fn metadata_tracks_max_slot_dims() {
+        let plan = LaunchPlan::for_problem(64, 8, &params(4, 16));
+        // stage_plan(8, 4) = [(8,4), (4,3)]
+        assert_eq!(plan.max_d, 4);
+        assert_eq!(plan.max_bd, 12);
+        assert!(plan.max_launch_tasks() >= 1);
+        assert!(plan
+            .iter_launches()
+            .all(|l| l.iter().map(|s| s.count as usize).sum::<usize>() <= plan.max_launch_tasks()));
+    }
+
+    #[test]
+    fn bidiagonal_problem_lowers_to_empty_plan() {
+        let plan = LaunchPlan::for_problem(16, 1, &params(4, 8));
+        assert_eq!(plan.num_launches(), 0);
+        assert_eq!(plan.total_tasks(), 0);
+        assert_eq!(plan.max_launch_tasks(), 0);
+    }
+
+    #[test]
+    fn merge_preserves_per_problem_slot_order() {
+        let parts: Vec<LaunchPlan> = [(48usize, 6usize), (32, 4), (40, 9)]
+            .iter()
+            .map(|&(n, bw)| LaunchPlan::for_problem(n, bw, &params(3, 12)))
+            .collect();
+        for policy in [PackingPolicy::RoundRobin, PackingPolicy::GreedyFill] {
+            for cores in [1usize, 2, 8] {
+                let merged = LaunchPlan::merge(&parts, 12, policy, cores);
+                assert_eq!(merged.problems.len(), 3);
+                for (p, part) in parts.iter().enumerate() {
+                    let mine: Vec<TaskSlot> = merged
+                        .slots
+                        .iter()
+                        .filter(|s| s.problem as usize == p)
+                        .map(|s| TaskSlot { problem: 0, ..*s })
+                        .collect();
+                    assert_eq!(mine, part.slots, "problem {p} ({policy:?}, cores {cores})");
+                }
+                assert_eq!(merged.total_tasks(), parts.iter().map(|p| p.total_tasks()).sum());
+            }
+        }
+    }
+
+    #[test]
+    fn merge_respects_capacity_unless_single_slot() {
+        let parts: Vec<LaunchPlan> = (0..4)
+            .map(|_| LaunchPlan::for_problem(72, 8, &params(4, 6)))
+            .collect();
+        let merged = LaunchPlan::merge(&parts, 6, PackingPolicy::GreedyFill, 8);
+        for i in 0..merged.num_launches() {
+            let launch = merged.launch(i);
+            if launch.len() > 1 {
+                assert!(merged.launch_tasks(i) <= 6, "launch {i} overflows");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_merge_concatenates() {
+        let parts: Vec<LaunchPlan> = [(48usize, 6usize), (32, 4)]
+            .iter()
+            .map(|&(n, bw)| LaunchPlan::for_problem(n, bw, &params(3, 16)))
+            .collect();
+        let merged = LaunchPlan::merge(&parts, 16, PackingPolicy::RoundRobin, 1);
+        assert_eq!(merged.co_scheduled_launches(), 0);
+        assert_eq!(merged.max_problems_per_launch(), 1);
+        assert_eq!(
+            merged.num_launches(),
+            parts.iter().map(|p| p.num_launches()).sum::<usize>()
+        );
+        // With max_coresident = 1 problem 0 runs to completion first.
+        let first: Vec<u32> = merged.slots[..parts[0].slots.len()]
+            .iter()
+            .map(|s| s.problem)
+            .collect();
+        assert!(first.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn merge_of_nothing_is_empty() {
+        let merged = LaunchPlan::merge(&[], 8, PackingPolicy::RoundRobin, 4);
+        assert_eq!(merged.num_launches(), 0);
+        assert_eq!(merged.problems.len(), 0);
+        assert_eq!(merged.total_tasks(), 0);
+    }
+
+    #[test]
+    fn launch_bytes_are_positive_and_scale_with_es() {
+        let plan = LaunchPlan::for_problem(64, 8, &params(4, 16));
+        for i in 0..plan.num_launches() {
+            let b4 = plan.launch_bytes(i, 4);
+            let b8 = plan.launch_bytes(i, 8);
+            assert!(b4 > 0);
+            assert_eq!(b8, 2 * b4);
+        }
+    }
+}

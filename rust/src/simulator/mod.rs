@@ -9,7 +9,9 @@
 //! loop unrolling past the MaxBlocks limit.
 //!
 //! - [`hw`]        — Table II architectures (A100…M1) + derived peaks.
-//! - [`model`]     — per-launch cost, stage/reduction simulation.
+//! - [`model`]     — per-launch cost; costs the *same*
+//!   [`crate::plan::LaunchPlan`] value the coordinator executes (no
+//!   schedule re-derivation in this layer).
 //! - [`profile`]   — NSight-style counters (Table III) + geam reference.
 //! - [`occupancy`] — eq. (1) / Table I.
 
@@ -21,6 +23,8 @@ pub mod profile;
 
 pub use autotune::{autotune, heuristic_params, TuneResult};
 pub use hw::{all_archs, arch_by_name, GpuArch};
-pub use model::{launch_cost, simulate_reduction, simulate_stage, LaunchCost, SimReport};
+pub use model::{
+    launch_cost, simulate_plan, simulate_reduction, simulate_stage, LaunchCost, SimReport,
+};
 pub use occupancy::{full_occupancy_n, occupancy_fraction, table1};
 pub use profile::{profile_geam_reference, profile_kernel, ProfileMetrics};

@@ -21,8 +21,9 @@
 //!   term) + launch overhead; a reduction sums over the launch schedule
 //!   of the stage plan (closed forms, no numerics).
 
-use crate::bulge::schedule::{stage_plan, Stage};
+use crate::bulge::schedule::Stage;
 use crate::config::TuneParams;
+use crate::plan::{slot_bytes, LaunchPlan};
 use crate::simulator::hw::GpuArch;
 
 /// L1 passes over the tile per op: gather, HH dot, apply, write-back,
@@ -57,6 +58,13 @@ pub struct SimReport {
     pub l2_bytes: f64,
     pub l1_bytes: f64,
     pub flops: f64,
+    /// Algorithmic byte traffic ([`slot_bytes`]) — the same plan-derived
+    /// quantity the executor's `LaunchMetrics` records, so predicted and
+    /// executed traffic can be compared exactly, launch by launch.
+    pub algo_bytes: u64,
+    /// Tasks per launch, in plan order (mirrors
+    /// `LaunchMetrics::per_launch` on the execution side).
+    pub per_launch: Vec<u32>,
 }
 
 impl SimReport {
@@ -77,6 +85,8 @@ impl SimReport {
         self.l2_bytes += o.l2_bytes;
         self.l1_bytes += o.l1_bytes;
         self.flops += o.flops;
+        self.algo_bytes += o.algo_bytes;
+        self.per_launch.extend_from_slice(&o.per_launch);
     }
 }
 
@@ -195,7 +205,55 @@ pub fn launch_cost(
     }
 }
 
-/// Simulate one full stage (all launches of the 3-cycle schedule).
+/// Cost every launch of a [`LaunchPlan`] — the *same value* the
+/// coordinator/batch engine executes, so the simulator never re-derives a
+/// schedule of its own: launch count, tasks per launch, and algorithmic
+/// byte traffic agree with the executor by construction (property-tested
+/// in `rust/tests/plan_consistency.rs`).
+///
+/// Multi-slot (batched) launches cost each slot's blocks independently and
+/// pay the launch overhead once. Costs are cached per distinct
+/// `(problem, stage, count)` — counts repeat across a stage's plateau and
+/// ramps, so the cache stays tiny even for very long plans.
+///
+/// `es` applies to every slot of the plan. For a *mixed-precision* merged
+/// plan the executor accounts each problem at its own element size, so to
+/// get exact byte agreement there, cost each problem's single-problem
+/// plan at its own `es` (the exactness contract is per
+/// `(n, bw, TuneParams)` problem, which is also all the autotuner needs).
+pub fn simulate_plan(arch: &GpuArch, es: usize, plan: &LaunchPlan, tpb: usize) -> SimReport {
+    let mut report = SimReport::default();
+    let overhead = arch.launch_overhead_s();
+    let mut cache: std::collections::HashMap<(u32, u32, u32), LaunchCost> =
+        std::collections::HashMap::new();
+    for li in 0..plan.num_launches() {
+        let mut busy = 0.0;
+        let mut launch_tasks = 0usize;
+        for slot in plan.launch(li) {
+            let stage = plan.slot_stage(slot);
+            let cost = cache
+                .entry((slot.problem, slot.stage, slot.count))
+                .or_insert_with(|| {
+                    launch_cost(arch, es, stage, tpb, plan.capacity, slot.count as usize)
+                });
+            busy += cost.seconds - overhead;
+            report.dram_bytes += cost.dram_bytes;
+            report.l2_bytes += cost.l2_bytes;
+            report.l1_bytes += cost.l1_bytes;
+            report.flops += cost.flops;
+            report.algo_bytes += slot_bytes(stage, slot.count as usize, es);
+            launch_tasks += slot.count as usize;
+        }
+        report.launches += 1;
+        report.tasks += launch_tasks;
+        report.per_launch.push(launch_tasks as u32);
+        report.seconds += busy + overhead;
+    }
+    report
+}
+
+/// Simulate one full stage: lower its (non-empty) launches to a
+/// single-stage plan and cost that.
 pub fn simulate_stage(
     arch: &GpuArch,
     es: usize,
@@ -204,29 +262,12 @@ pub fn simulate_stage(
     tpb: usize,
     max_blocks: usize,
 ) -> SimReport {
-    let mut report = SimReport::default();
-    // tasks_at_count is O(1) (closed form in schedule.rs), so the plain
-    // per-launch loop is already fast; cache launch costs per distinct
-    // block count (counts repeat across the plateau and ramps).
-    let total = stage.total_launches(n);
-    let mut cache: std::collections::HashMap<usize, LaunchCost> = std::collections::HashMap::new();
-    for t in 0..total {
-        let blocks = stage.tasks_at_count(n, t);
-        let cost = cache
-            .entry(blocks)
-            .or_insert_with(|| launch_cost(arch, es, stage, tpb, max_blocks, blocks));
-        report.tasks += blocks;
-        report.launches += 1;
-        report.seconds += cost.seconds;
-        report.dram_bytes += cost.dram_bytes;
-        report.l2_bytes += cost.l2_bytes;
-        report.l1_bytes += cost.l1_bytes;
-        report.flops += cost.flops;
-    }
-    report
+    simulate_plan(arch, es, &LaunchPlan::from_stages(n, vec![*stage], max_blocks), tpb)
 }
 
-/// Simulate a full banded→bidiagonal reduction under the stage plan.
+/// Simulate a full banded→bidiagonal reduction: lower the identical
+/// [`LaunchPlan`] the coordinator would execute for `(n, bw, params)` and
+/// cost it launch by launch.
 pub fn simulate_reduction(
     arch: &GpuArch,
     es: usize,
@@ -234,13 +275,7 @@ pub fn simulate_reduction(
     bw: usize,
     params: &TuneParams,
 ) -> SimReport {
-    let tw = params.effective_tw(bw);
-    let mut report = SimReport::default();
-    for stage in stage_plan(bw, tw) {
-        let s = simulate_stage(arch, es, n, &stage, params.tpb, params.max_blocks);
-        report.merge(&s);
-    }
-    report
+    simulate_plan(arch, es, &LaunchPlan::for_problem(n, bw, params), params.tpb)
 }
 
 #[cfg(test)]
@@ -346,19 +381,40 @@ mod tests {
     }
 
     #[test]
-    fn grouped_stage_simulation_matches_naive_sum() {
+    fn plan_costing_matches_naive_per_launch_sum() {
         let stage = Stage::new(8, 4);
         let n = 512;
         let grouped = simulate_stage(&hw::H100, 4, n, &stage, 32, 192);
-        // Naive per-launch sum.
+        // Naive sum over the schedule's *non-empty* launches (the plan
+        // never lowers empty cycles, matching what executors run).
         let mut naive = SimReport::default();
         for t in 0..stage.total_launches(n) {
             let blocks = stage.tasks_at_count(n, t);
+            if blocks == 0 {
+                continue;
+            }
             naive.tasks += blocks;
             naive.add_launch(&launch_cost(&hw::H100, 4, &stage, 32, 192, blocks));
         }
         assert_eq!(grouped.launches, naive.launches);
         assert_eq!(grouped.tasks, naive.tasks);
-        assert!((grouped.seconds - naive.seconds).abs() < 1e-12);
+        assert!((grouped.seconds - naive.seconds).abs() < 1e-9 * naive.seconds.max(1e-12));
+    }
+
+    #[test]
+    fn reduction_costs_the_coordinator_plan_value() {
+        let p = params(32, 4, 16);
+        let (n, bw) = (96usize, 8usize);
+        let plan = LaunchPlan::for_problem(n, bw, &p);
+        let via_reduction = simulate_reduction(&hw::H100, 8, n, bw, &p);
+        let via_plan = simulate_plan(&hw::H100, 8, &plan, p.tpb);
+        assert_eq!(via_reduction.launches, via_plan.launches);
+        assert_eq!(via_reduction.per_launch, via_plan.per_launch);
+        assert_eq!(via_reduction.algo_bytes, via_plan.algo_bytes);
+        assert_eq!(via_plan.launches, plan.num_launches());
+        assert_eq!(via_plan.tasks, plan.total_tasks());
+        for (li, &t) in via_plan.per_launch.iter().enumerate() {
+            assert_eq!(t as usize, plan.launch_tasks(li));
+        }
     }
 }

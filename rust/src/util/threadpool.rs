@@ -1,23 +1,39 @@
 //! A small work-crew thread pool (no rayon in the offline crate set).
 //!
 //! The pool is built for the bulge-chasing launch loop: every GPU "kernel
-//! launch" becomes a [`ThreadPool::scope_chunks`] call that splits the
-//! launch's task list across workers and barriers before the next launch —
-//! exactly the device-wide synchronization of Algorithm 1 line 11.
+//! launch" becomes one dispatch call that splits the launch's task list
+//! across workers and barriers before the next launch — exactly the
+//! device-wide synchronization of Algorithm 1 line 11. Two dispatch
+//! shapes:
 //!
-//! Design: long-lived workers block on a condvar; a scope submits a batch
-//! of closures, then waits for the batch counter to drain. Closures borrow
-//! the caller's stack via a scoped-lifetime channel (same trick as
-//! `std::thread::scope`, implemented with raw pointers behind a safe API).
+//! - [`ThreadPool::for_each_index`] / [`ThreadPool::for_each_chunk`] —
+//!   self-scheduling over an atomic counter; any worker may take any
+//!   index (good for irregular, affinity-free work).
+//! - [`ThreadPool::for_each_slot`] — *pinned* dispatch: slot `w` always
+//!   executes on the same OS thread (worker `w`; the last slot on the
+//!   caller). This is the basis for sticky task→worker affinity and the
+//!   persistent per-worker workspaces ([`WorkerLocal`]) that keep a
+//!   chased column window in one core's cache across launches.
+//!
+//! Design: long-lived workers block on their own condvar'd queue; a
+//! dispatch submits a batch of closures, then waits for the batch counter
+//! to drain. Closures borrow the caller's stack via a scoped-lifetime
+//! channel (same trick as `std::thread::scope`, implemented with raw
+//! pointers behind a safe API).
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+struct WorkerQueue {
+    jobs: Mutex<Vec<Job>>,
+    ready: Condvar,
+}
+
 struct Shared {
-    queue: Mutex<Vec<Job>>,
-    job_ready: Condvar,
+    queues: Vec<WorkerQueue>,
     pending: AtomicUsize,
     done: Condvar,
     done_lock: Mutex<()>,
@@ -43,8 +59,9 @@ impl ThreadPool {
             n
         };
         let shared = Arc::new(Shared {
-            queue: Mutex::new(Vec::new()),
-            job_ready: Condvar::new(),
+            queues: (0..n_threads)
+                .map(|_| WorkerQueue { jobs: Mutex::new(Vec::new()), ready: Condvar::new() })
+                .collect(),
             pending: AtomicUsize::new(0),
             done: Condvar::new(),
             done_lock: Mutex::new(()),
@@ -56,7 +73,7 @@ impl ThreadPool {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bsvd-worker-{i}"))
-                    .spawn(move || worker_loop(sh))
+                    .spawn(move || worker_loop(sh, i))
                     .expect("spawn worker"),
             );
         }
@@ -70,6 +87,40 @@ impl ThreadPool {
 
     pub fn is_empty(&self) -> bool {
         self.n_threads == 0
+    }
+
+    /// Number of pinned execution slots for [`ThreadPool::for_each_slot`]:
+    /// one per worker plus one for the calling thread.
+    pub fn slots(&self) -> usize {
+        self.n_threads + 1
+    }
+
+    /// Submit one job to each of the first `min(n_jobs, workers)` worker
+    /// queues and notify them. Increments the pending counter before
+    /// pushing; callers must then wait with [`Self::wait_pending`].
+    fn submit_per_worker(&self, n_jobs: usize, mut make: impl FnMut(usize) -> Job) {
+        let n_jobs = n_jobs.min(self.n_threads);
+        self.shared.pending.fetch_add(n_jobs, Ordering::SeqCst);
+        for (w, q) in self.shared.queues.iter().enumerate().take(n_jobs) {
+            q.jobs.lock().unwrap().push(make(w));
+            q.ready.notify_one();
+        }
+    }
+
+    /// Barrier: launches are often microseconds of work, so spin briefly
+    /// before falling back to the condvar (the launch loop issues
+    /// thousands of barriers per reduction — §Perf).
+    fn wait_pending(&self) {
+        for _ in 0..10_000 {
+            if self.shared.pending.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            std::hint::spin_loop();
+        }
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
     }
 
     /// Run `f(i)` for every index in `0..count`, distributing indices over
@@ -95,16 +146,7 @@ impl ThreadPool {
         // below; we erase the lifetime to store it in the 'static queue.
         let f_ref: &(dyn Fn(usize) + Sync) = &f;
         let next_ref: &AtomicUsize = &next;
-        let n_jobs = self.n_threads.min(count);
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            self.shared.pending.fetch_add(n_jobs, Ordering::SeqCst);
-            for _ in 0..n_jobs {
-                let job = make_static_job(f_ref, next_ref, count);
-                q.push(job);
-            }
-        }
-        self.shared.job_ready.notify_all();
+        self.submit_per_worker(count, |_| make_counter_job(f_ref, next_ref, count));
         // Help out from the calling thread as well.
         loop {
             let i = next.fetch_add(1, Ordering::Relaxed);
@@ -113,19 +155,7 @@ impl ThreadPool {
             }
             f(i);
         }
-        // Barrier: launches are often microseconds of work, so spin
-        // briefly before falling back to the condvar (the launch loop
-        // issues thousands of barriers per reduction — §Perf).
-        for _ in 0..10_000 {
-            if self.shared.pending.load(Ordering::SeqCst) == 0 {
-                return;
-            }
-            std::hint::spin_loop();
-        }
-        let mut guard = self.shared.done_lock.lock().unwrap();
-        while self.shared.pending.load(Ordering::SeqCst) != 0 {
-            guard = self.shared.done.wait(guard).unwrap();
-        }
+        self.wait_pending();
     }
 
     /// Split `0..count` into `chunks` contiguous ranges and run `f(range)`
@@ -136,6 +166,16 @@ impl ThreadPool {
     where
         F: Fn(std::ops::Range<usize>) + Sync,
     {
+        self.for_each_chunk_indexed(count, chunks, |_, range| f(range));
+    }
+
+    /// [`Self::for_each_chunk`] with the chunk index passed to `f` — each
+    /// index in `0..chunks` is claimed by exactly one worker per dispatch,
+    /// so callers can key per-chunk state (e.g. a [`WorkerLocal`]) on it.
+    pub fn for_each_chunk_indexed<F>(&self, count: usize, chunks: usize, f: F)
+    where
+        F: Fn(usize, std::ops::Range<usize>) + Sync,
+    {
         if count == 0 {
             return;
         }
@@ -145,35 +185,85 @@ impl ThreadPool {
         self.for_each_index(chunks, |c| {
             let start = c * base + c.min(rem);
             let len = base + usize::from(c < rem);
-            f(start..start + len);
+            f(c, start..start + len);
         });
+    }
+
+    /// Run `f(slot)` for every slot in `0..self.slots()`, with slot `w`
+    /// **pinned** to worker thread `w` (and the last slot to the calling
+    /// thread). Pinning is stable across calls on the same pool: a given
+    /// slot index is always executed by the same OS thread. No stealing —
+    /// that is the point: the executor maps a task's column window to a
+    /// slot, and the window's data (plus the slot's [`WorkerLocal`]
+    /// workspace) stays in that core's cache across launches.
+    pub fn for_each_slot<F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.for_each_slot_where(|_| true, f);
+    }
+
+    /// [`Self::for_each_slot`] restricted to the slots `active` selects:
+    /// inactive workers are neither woken nor waited on. Pinning is
+    /// unaffected — a slot's closure either runs on its own thread or not
+    /// at all. Lets a launch with work on few slots pay for few wakeups.
+    pub fn for_each_slot_where<P, F>(&self, active: P, f: F)
+    where
+        P: Fn(usize) -> bool,
+        F: Fn(usize) + Sync,
+    {
+        if self.n_threads <= 1 {
+            // Degenerate pools run every slot inline (slot pinning is
+            // trivially satisfied: one thread does everything).
+            for w in 0..self.slots() {
+                if active(w) {
+                    f(w);
+                }
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let n_jobs = (0..self.n_threads).filter(|&w| active(w)).count();
+        self.shared.pending.fetch_add(n_jobs, Ordering::SeqCst);
+        for (w, q) in self.shared.queues.iter().enumerate() {
+            if active(w) {
+                q.jobs.lock().unwrap().push(make_slot_job(f_ref, w));
+                q.ready.notify_one();
+            }
+        }
+        if active(self.n_threads) {
+            f(self.n_threads); // caller's own slot
+        }
+        self.wait_pending();
     }
 }
 
 /// Erase the lifetime of the borrowed closure context. Soundness argument:
-/// `for_each_index` does not return until `pending` drains back to zero,
+/// the dispatch does not return until `pending` drains back to zero,
 /// i.e. until every job constructed here has run to completion, so the
 /// borrowed references never outlive the borrow.
-fn make_static_job(
-    f: &(dyn Fn(usize) + Sync),
-    next: &AtomicUsize,
-    count: usize,
-) -> Job {
-    struct SendPtr<T: ?Sized>(*const T);
-    unsafe impl<T: ?Sized> Send for SendPtr<T> {}
-    impl<T: ?Sized> SendPtr<T> {
-        fn get(&self) -> *const T {
-            self.0
-        }
+struct SendPtr<T: ?Sized>(*const T);
+unsafe impl<T: ?Sized> Send for SendPtr<T> {}
+impl<T: ?Sized> SendPtr<T> {
+    fn get(&self) -> *const T {
+        self.0
     }
-    // SAFETY: lifetime erasure to 'static; the barrier in
-    // `for_each_index` guarantees the job dies before the borrow does.
-    let fp: SendPtr<dyn Fn(usize) + Sync> = SendPtr(unsafe {
+}
+
+fn erase_fn(f: &(dyn Fn(usize) + Sync)) -> SendPtr<dyn Fn(usize) + Sync> {
+    // SAFETY: lifetime erasure to 'static; the barrier in the dispatcher
+    // guarantees the job dies before the borrow does.
+    SendPtr(unsafe {
         std::mem::transmute::<
             *const (dyn Fn(usize) + Sync + '_),
             *const (dyn Fn(usize) + Sync + 'static),
         >(f as *const _)
-    });
+    })
+}
+
+/// Self-scheduling job: drain the shared atomic counter.
+fn make_counter_job(f: &(dyn Fn(usize) + Sync), next: &AtomicUsize, count: usize) -> Job {
+    let fp = erase_fn(f);
     let np: SendPtr<AtomicUsize> = SendPtr(next as *const _);
     Box::new(move || {
         let f: &(dyn Fn(usize) + Sync) = unsafe { &*fp.get() };
@@ -188,21 +278,31 @@ fn make_static_job(
     })
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+/// Pinned job: run exactly slot `w`.
+fn make_slot_job(f: &(dyn Fn(usize) + Sync), w: usize) -> Job {
+    let fp = erase_fn(f);
+    Box::new(move || {
+        let f: &(dyn Fn(usize) + Sync) = unsafe { &*fp.get() };
+        f(w);
+    })
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
     loop {
         // (Perf note, EXPERIMENTS.md §Perf: a try_lock spin here was
         // measured 3x SLOWER under contention — all workers hammer the
         // queue mutex. Plain condvar wait wins; reverted.)
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let q = &shared.queues[me];
+            let mut jobs = q.jobs.lock().unwrap();
             loop {
-                if let Some(job) = q.pop() {
+                if let Some(job) = jobs.pop() {
                     break Some(job);
                 }
                 if *shared.shutdown.lock().unwrap() {
                     break None;
                 }
-                q = shared.job_ready.wait(q).unwrap();
+                jobs = q.ready.wait(jobs).unwrap();
             }
         };
         match job {
@@ -221,10 +321,58 @@ fn worker_loop(shared: Arc<Shared>) {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         *self.shared.shutdown.lock().unwrap() = true;
-        self.shared.job_ready.notify_all();
+        for q in &self.shared.queues {
+            // Hold the queue lock while notifying: a worker between its
+            // shutdown check and its wait holds this lock, so the notify
+            // cannot slip into that window and be missed.
+            let _g = q.jobs.lock().unwrap();
+            q.ready.notify_all();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Persistent per-slot storage for a pool's pinned slots — the CPU analog
+/// of per-SM shared memory that *survives across kernel launches*. One
+/// value per [`ThreadPool::for_each_slot`] slot; because slot `w` is
+/// always executed by the same thread, `get_mut(w)` from inside that
+/// slot's closure is data-race free.
+pub struct WorkerLocal<T> {
+    values: Vec<UnsafeCell<T>>,
+}
+
+// SAFETY: distinct slots are accessed by distinct threads; access to one
+// slot is externally synchronized (the pinned-dispatch contract below).
+unsafe impl<T: Send> Sync for WorkerLocal<T> {}
+
+impl<T> WorkerLocal<T> {
+    /// One value per slot, built by `init(slot)`.
+    pub fn new(slots: usize, mut init: impl FnMut(usize) -> T) -> Self {
+        Self { values: (0..slots).map(|w| UnsafeCell::new(init(w))).collect() }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Exclusive access to slot `w`'s value.
+    ///
+    /// # Safety
+    /// At most one thread may hold slot `w`'s reference at a time — upheld
+    /// by calling this only from within slot `w` of
+    /// [`ThreadPool::for_each_slot`] (or otherwise externally
+    /// synchronizing per-slot access).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, w: usize) -> &mut T {
+        &mut *self.values[w].get()
+    }
+
+    /// Exclusive access to every slot (for drains/inspection after the
+    /// parallel phase).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.values.iter_mut().map(|c| c.get_mut())
     }
 }
 
@@ -255,6 +403,21 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn indexed_chunks_have_unique_ids_and_cover_range() {
+        let pool = ThreadPool::new(4);
+        let id_hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        let elem_hits: Vec<AtomicUsize> = (0..83).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_each_chunk_indexed(83, 5, |c, r| {
+            id_hits[c].fetch_add(1, Ordering::SeqCst);
+            for i in r {
+                elem_hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(id_hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert!(elem_hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
     }
 
     #[test]
@@ -297,5 +460,82 @@ mod tests {
             sum.fetch_add(part, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn slots_run_exactly_once_per_dispatch() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.slots(), 5);
+        let hits: Vec<AtomicUsize> = (0..pool.slots()).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..20 {
+            pool.for_each_slot(|w| {
+                hits[w].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for (w, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 20, "slot {w}");
+        }
+    }
+
+    #[test]
+    fn filtered_slots_skip_inactive_workers() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..pool.slots()).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_each_slot_where(
+            |w| w % 2 == 0,
+            |w| {
+                hits[w].fetch_add(1, Ordering::SeqCst);
+            },
+        );
+        for (w, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), usize::from(w % 2 == 0), "slot {w}");
+        }
+    }
+
+    #[test]
+    fn slot_pinning_is_stable_across_dispatches() {
+        let pool = ThreadPool::new(3);
+        let ids: Vec<Mutex<Vec<std::thread::ThreadId>>> =
+            (0..pool.slots()).map(|_| Mutex::new(Vec::new())).collect();
+        for _ in 0..10 {
+            pool.for_each_slot(|w| {
+                ids[w].lock().unwrap().push(std::thread::current().id());
+            });
+        }
+        for (w, seen) in ids.iter().enumerate() {
+            let seen = seen.lock().unwrap();
+            assert_eq!(seen.len(), 10);
+            assert!(
+                seen.iter().all(|&id| id == seen[0]),
+                "slot {w} migrated between threads"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_local_persists_across_dispatches() {
+        let pool = ThreadPool::new(4);
+        let scratch: WorkerLocal<u64> = WorkerLocal::new(pool.slots(), |_| 0);
+        for _ in 0..25 {
+            pool.for_each_slot(|w| {
+                // SAFETY: called from slot w of a pinned dispatch.
+                unsafe { *scratch.get_mut(w) += 1 };
+            });
+        }
+        let mut scratch = scratch;
+        for v in scratch.iter_mut() {
+            assert_eq!(*v, 25);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_slots_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.slots(), 2);
+        let sum = AtomicUsize::new(0);
+        pool.for_each_slot(|w| {
+            sum.fetch_add(w + 1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 3);
     }
 }

@@ -1,0 +1,125 @@
+//! The plan IR's central contract, property-tested: for a given
+//! `(n, bw, TuneParams)` the coordinator and the simulator consume the
+//! **identical** `LaunchPlan` value — so predicted and executed schedules
+//! agree launch by launch (launch count, tasks per launch, algorithmic
+//! byte traffic), with no independent schedule re-derivation anywhere.
+
+use banded_svd::config::{Backend, TuneParams};
+use banded_svd::coordinator::Coordinator;
+use banded_svd::generate::random_banded;
+use banded_svd::plan::LaunchPlan;
+use banded_svd::simulator::{hw, simulate_plan, simulate_reduction};
+use banded_svd::util::prop::{check, Config};
+use banded_svd::util::rng::Xoshiro256;
+
+#[derive(Debug)]
+struct Case {
+    n: usize,
+    bw: usize,
+    tw: usize,
+    max_blocks: usize,
+    tpb: usize,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Xoshiro256) -> Case {
+    let bw = rng.range_inclusive(2, 12);
+    Case {
+        n: rng.range_inclusive(bw + 4, 96),
+        bw,
+        tw: rng.range_inclusive(1, 8),
+        max_blocks: rng.range_inclusive(1, 48),
+        tpb: [8, 16, 32][rng.below(3)],
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_simulator_and_executor_consume_the_identical_plan() {
+    let cfg = Config { cases: 48, ..Config::default() };
+    check("simulated-plan-equals-executed-plan", &cfg, gen_case, |case| {
+        let params = TuneParams { tpb: case.tpb, tw: case.tw, max_blocks: case.max_blocks };
+        let coord = Coordinator::new(params, 4);
+
+        // The value the executor runs and the value the simulator costs
+        // must be the same lowering — compared as whole IR values.
+        let executed = coord.launch_plan(case.n, case.bw);
+        let costed = LaunchPlan::for_problem(case.n, case.bw, &params);
+        if executed != costed {
+            return Err("coordinator and simulator lowered different plans".into());
+        }
+
+        // Execute (both native backends) and simulate.
+        let es = std::mem::size_of::<f64>();
+        let mut rng = Xoshiro256::seed_from_u64(case.seed);
+        let mut a = random_banded::<f64>(case.n, case.bw, params.effective_tw(case.bw), &mut rng);
+        let mut b = a.clone();
+        let run = coord
+            .reduce_native(&mut a, case.bw, Backend::Parallel)
+            .map_err(|e| e.to_string())?;
+        let seq = coord
+            .reduce_native(&mut b, case.bw, Backend::Sequential)
+            .map_err(|e| e.to_string())?;
+        let sim = simulate_plan(&hw::H100, es, &costed, params.tpb);
+
+        // Launch count.
+        let launches = costed.num_launches();
+        if run.metrics.launches != launches || sim.launches != launches {
+            return Err(format!(
+                "launch counts diverge: executed {} / simulated {} / plan {launches}",
+                run.metrics.launches, sim.launches
+            ));
+        }
+        // Tasks per launch, launch by launch, across executor, sequential
+        // oracle, simulator, and the plan itself.
+        for li in 0..costed.num_launches() {
+            let want = costed.launch_tasks(li) as u32;
+            if run.metrics.per_launch[li] != want
+                || seq.metrics.per_launch[li] != want
+                || sim.per_launch[li] != want
+            {
+                return Err(format!(
+                    "launch {li}: tasks diverge (parallel {}, sequential {}, simulated {}, plan {want})",
+                    run.metrics.per_launch[li], seq.metrics.per_launch[li], sim.per_launch[li]
+                ));
+            }
+        }
+        // Per-launch byte traffic (aggregated — both sides accumulate the
+        // same plan-derived quantity per launch).
+        let plan_bytes: u64 = (0..costed.num_launches())
+            .map(|li| costed.launch_bytes(li, es))
+            .sum();
+        if run.metrics.bytes != plan_bytes || sim.algo_bytes != plan_bytes {
+            return Err(format!(
+                "byte traffic diverges: executed {} / simulated {} / plan {plan_bytes}",
+                run.metrics.bytes, sim.algo_bytes
+            ));
+        }
+        // Totals.
+        if run.metrics.tasks != costed.total_tasks() || sim.tasks != costed.total_tasks() {
+            return Err("total task counts diverge".into());
+        }
+        // And the reduction actually completed.
+        if run.residual_off_band != 0.0 {
+            return Err("parallel run left off-bidiagonal residual".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulate_reduction_is_plan_costing() {
+    // The public entry point must be exactly `lower + simulate_plan` —
+    // the acceptance criterion that no simulator-private schedule exists.
+    for (n, bw, tw, mb) in [(96usize, 8usize, 4usize, 16usize), (64, 5, 2, 7), (200, 16, 8, 48)] {
+        let params = TuneParams { tpb: 32, tw, max_blocks: mb };
+        let plan = LaunchPlan::for_problem(n, bw, &params);
+        let a = simulate_reduction(&hw::H100, 4, n, bw, &params);
+        let b = simulate_plan(&hw::H100, 4, &plan, params.tpb);
+        assert_eq!(a.launches, b.launches);
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.per_launch, b.per_launch);
+        assert_eq!(a.algo_bytes, b.algo_bytes);
+        assert!((a.seconds - b.seconds).abs() <= 1e-12 * b.seconds.max(1.0));
+    }
+}
