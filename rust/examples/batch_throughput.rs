@@ -8,7 +8,7 @@
 
 use banded_svd::banded::storage::Banded;
 use banded_svd::batch::{BatchCoordinator, BatchInput};
-use banded_svd::config::{Backend, BatchConfig, TuneParams};
+use banded_svd::config::{BackendKind, BatchConfig, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::random_banded;
 use banded_svd::scalar::F16;
@@ -74,7 +74,9 @@ fn main() {
     let t0 = Instant::now();
     for (a, bw) in &solo_f64 {
         let mut work = a.clone();
-        solo_coord.reduce_native(&mut work, *bw, Backend::Parallel).expect("solo reduction");
+        solo_coord
+            .reduce_native(&mut work, *bw, BackendKind::Threadpool)
+            .expect("solo reduction");
     }
     let solo_wall = t0.elapsed();
 

@@ -11,7 +11,7 @@
 //! Run: `make artifacts && cargo run --release --example svd_pipeline`
 
 use banded_svd::banded::storage::Banded;
-use banded_svd::config::{Backend, TuneParams};
+use banded_svd::config::{BackendKind, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::{dense_with_spectrum, Spectrum};
 use banded_svd::pipeline::{
@@ -42,7 +42,7 @@ fn main() {
     let coord = Coordinator::new(params, 0);
     let mut native = banded64.clone();
     let rep = coord
-        .reduce_native(&mut native, bw, Backend::Parallel)
+        .reduce_native(&mut native, bw, BackendKind::Threadpool)
         .expect("native reduction");
     println!(
         "stage 2 native   : {} ({} launches, {} tasks, peak parallel {})",

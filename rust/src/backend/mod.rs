@@ -1,0 +1,383 @@
+//! Execution backends — everything that can run a
+//! [`LaunchPlan`](crate::plan::LaunchPlan).
+//!
+//! The paper's claim is that one memory-aware bulge-chasing formulation
+//! runs "hardware-agnostic and data-precision-aware" across devices. The
+//! crate encodes that as a single obligation: a backend **executes a
+//! `LaunchPlan` against banded storage** — nothing else. Scheduling,
+//! batching (plan merge), and cost modeling all happen *on the plan*,
+//! before any backend is involved, so adding a device means implementing
+//! one trait, not re-deriving a schedule.
+//!
+//! Three executors ship with the crate (see `docs/backends.md` for the
+//! full contract a new backend must uphold):
+//!
+//! - [`SequentialBackend`] — inline, one task at a time, in plan order.
+//!   The reference every other backend must match bitwise.
+//! - [`ThreadpoolBackend`] — one pinned pool dispatch + one barrier per
+//!   launch, sticky column-window affinity, persistent per-slot
+//!   workspaces (the CPU analog of the paper's GPU execution model).
+//! - [`PjrtBackend`] — walks the plan launch by launch through
+//!   AOT-compiled HLO artifacts on the PJRT client, holding one
+//!   device-resident buffer *per plan problem* (so merged batch plans map
+//!   onto multiple buffers and empty cycles are never launched).
+//!
+//! # Contract (summary)
+//!
+//! For `Backend::execute(plan, problems)`:
+//!
+//! 1. `problems[p]` is the storage of `plan.problems[p]`; the slice
+//!    length must equal `plan.problems.len()`.
+//! 2. Launches execute in plan order with a barrier between them; the
+//!    tasks *within* one launch are pairwise element-disjoint and may run
+//!    in any order or concurrently.
+//! 3. Native (non-artifact) backends must produce **bitwise-identical**
+//!    storage to [`SequentialBackend`] — property-tested in
+//!    `rust/tests/plan_consistency.rs`.
+//! 4. Per-problem metrics record one launch per plan slot of that
+//!    problem, with the plan's own task counts and
+//!    [`slot_bytes`](crate::plan::slot_bytes) traffic, so executed
+//!    metrics equal simulated metrics by construction.
+//!
+//! # Examples
+//!
+//! Execute a plan through the reference backend:
+//!
+//! ```
+//! use banded_svd::backend::{AsBandStorageMut, Backend, SequentialBackend};
+//! use banded_svd::config::TuneParams;
+//! use banded_svd::generate::random_banded;
+//! use banded_svd::plan::LaunchPlan;
+//! use banded_svd::util::rng::Xoshiro256;
+//!
+//! let params = TuneParams { tpb: 32, tw: 4, max_blocks: 16 };
+//! let (n, bw) = (48, 6);
+//! let mut rng = Xoshiro256::seed_from_u64(1);
+//! let mut a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+//!
+//! let plan = LaunchPlan::for_problem(n, bw, &params);
+//! let backend = SequentialBackend::new();
+//! let exec = backend.execute(&plan, &mut [a.as_band_storage_mut()]).unwrap();
+//!
+//! assert_eq!(exec.aggregate.launches, plan.num_launches());
+//! assert_eq!(exec.aggregate.tasks, plan.total_tasks());
+//! assert_eq!(a.max_off_band(1), 0.0); // fully bidiagonal
+//! ```
+
+pub mod pjrt;
+mod sequential;
+mod threadpool;
+
+pub use pjrt::PjrtBackend;
+pub use sequential::SequentialBackend;
+pub use threadpool::ThreadpoolBackend;
+
+use crate::banded::storage::Banded;
+use crate::config::{BackendKind, TuneParams};
+use crate::coordinator::metrics::LaunchMetrics;
+use crate::error::{Error, Result};
+use crate::plan::LaunchPlan;
+use crate::scalar::{Scalar, F16};
+use crate::simulator::model::BackendCostModel;
+
+/// A mutable, type-erased borrow of one problem's banded working storage
+/// in one of the three supported precisions — what a backend executes a
+/// plan against. Erasing the scalar type here (instead of making the
+/// trait generic) keeps `dyn Backend` object-safe and lets one merged
+/// plan span problems of mixed precision.
+pub enum BandStorageMut<'a> {
+    F64(&'a mut Banded<f64>),
+    F32(&'a mut Banded<f32>),
+    F16(&'a mut Banded<F16>),
+}
+
+impl BandStorageMut<'_> {
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        match self {
+            BandStorageMut::F64(a) => a.n(),
+            BandStorageMut::F32(a) => a.n(),
+            BandStorageMut::F16(a) => a.n(),
+        }
+    }
+
+    /// Leading dimension of the banded storage.
+    pub fn ld(&self) -> usize {
+        match self {
+            BandStorageMut::F64(a) => a.ld(),
+            BandStorageMut::F32(a) => a.ld(),
+            BandStorageMut::F16(a) => a.ld(),
+        }
+    }
+
+    /// Representable superdiagonals.
+    pub fn kd_super(&self) -> usize {
+        match self {
+            BandStorageMut::F64(a) => a.kd_super(),
+            BandStorageMut::F32(a) => a.kd_super(),
+            BandStorageMut::F16(a) => a.kd_super(),
+        }
+    }
+
+    /// Element size in bytes (traffic accounting).
+    pub fn element_bytes(&self) -> usize {
+        match self {
+            BandStorageMut::F64(_) => <f64 as Scalar>::BYTES,
+            BandStorageMut::F32(_) => <f32 as Scalar>::BYTES,
+            BandStorageMut::F16(_) => <F16 as Scalar>::BYTES,
+        }
+    }
+
+    /// Paper-style precision label ("fp64" / "fp32" / "fp16").
+    pub fn precision(&self) -> &'static str {
+        match self {
+            BandStorageMut::F64(_) => <f64 as Scalar>::NAME,
+            BandStorageMut::F32(_) => <f32 as Scalar>::NAME,
+            BandStorageMut::F16(_) => <F16 as Scalar>::NAME,
+        }
+    }
+
+    /// Validate the storage for a bandwidth-`bw`, tilewidth-`tw` run.
+    pub fn check_reduction_storage(&self, bw: usize, tw: usize) -> Result<()> {
+        match self {
+            BandStorageMut::F64(a) => a.check_reduction_storage(bw, tw),
+            BandStorageMut::F32(a) => a.check_reduction_storage(bw, tw),
+            BandStorageMut::F16(a) => a.check_reduction_storage(bw, tw),
+        }
+    }
+
+    /// Flat f32 copy in the artifact layout (see
+    /// [`Banded::to_f32_flat`]).
+    pub fn to_f32_flat(&self) -> Vec<f32> {
+        match self {
+            BandStorageMut::F64(a) => a.to_f32_flat(),
+            BandStorageMut::F32(a) => a.to_f32_flat(),
+            BandStorageMut::F16(a) => a.to_f32_flat(),
+        }
+    }
+
+    /// Overwrite from a flat f32 buffer (see [`Banded::from_f32_flat`]).
+    pub fn from_f32_flat(&mut self, flat: &[f32]) {
+        match self {
+            BandStorageMut::F64(a) => a.from_f32_flat(flat),
+            BandStorageMut::F32(a) => a.from_f32_flat(flat),
+            BandStorageMut::F16(a) => a.from_f32_flat(flat),
+        }
+    }
+}
+
+/// Conversion into the type-erased [`BandStorageMut`] view — implemented
+/// for the three concrete precisions so generic drivers
+/// (`Coordinator::reduce_with`, the pipeline entry points) can hand any
+/// supported matrix to a `dyn Backend`.
+pub trait AsBandStorageMut {
+    fn as_band_storage_mut(&mut self) -> BandStorageMut<'_>;
+}
+
+impl AsBandStorageMut for Banded<f64> {
+    fn as_band_storage_mut(&mut self) -> BandStorageMut<'_> {
+        BandStorageMut::F64(self)
+    }
+}
+
+impl AsBandStorageMut for Banded<f32> {
+    fn as_band_storage_mut(&mut self) -> BandStorageMut<'_> {
+        BandStorageMut::F32(self)
+    }
+}
+
+impl AsBandStorageMut for Banded<F16> {
+    fn as_band_storage_mut(&mut self) -> BandStorageMut<'_> {
+        BandStorageMut::F16(self)
+    }
+}
+
+/// Outcome of executing a plan: per-problem launch accounting (index `p`
+/// matches `plan.problems[p]`) plus the aggregate over shared launches.
+/// For a single-problem plan the two agree launch by launch.
+#[derive(Clone, Debug, Default)]
+pub struct Execution {
+    pub per_problem: Vec<LaunchMetrics>,
+    pub aggregate: LaunchMetrics,
+}
+
+/// An executor of [`LaunchPlan`]s — the one trait a new device target
+/// implements. See the module docs for the execution contract and
+/// `docs/backends.md` for the narrative version with invariants.
+pub trait Backend {
+    /// The selector this backend answers to.
+    fn kind(&self) -> BackendKind;
+
+    /// Human-readable name (defaults to the kind's canonical spelling).
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Execute every launch of `plan`, in plan order with a barrier
+    /// between launches, against `problems` (`problems[p]` is the storage
+    /// of `plan.problems[p]`). Storage is validated before any work; on
+    /// error nothing is partially executed unless the error comes from
+    /// the device mid-run.
+    fn execute(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+    ) -> Result<Execution>;
+
+    /// True when the backend needs pre-compiled artifacts (and therefore
+    /// cannot run in a bare checkout). Native backends return `false`.
+    fn requires_artifacts(&self) -> bool {
+        false
+    }
+
+    /// Cost-model adjustments for this backend, consumed by
+    /// [`crate::simulator::model::simulate_plan_for`] and
+    /// [`crate::simulator::autotune_for`] so the autotuner tunes for the
+    /// backend that will actually run.
+    fn cost_model(&self) -> BackendCostModel {
+        BackendCostModel::native()
+    }
+}
+
+/// Validate that `problems` matches `plan` shape-for-shape — the common
+/// prologue every backend runs before touching data.
+pub(crate) fn check_problems(plan: &LaunchPlan, problems: &[BandStorageMut<'_>]) -> Result<()> {
+    if plan.problems.len() != problems.len() {
+        return Err(Error::Config(format!(
+            "plan has {} problems but {} storages were supplied",
+            plan.problems.len(),
+            problems.len()
+        )));
+    }
+    for (p, (shape, band)) in plan.problems.iter().zip(problems.iter()).enumerate() {
+        if band.n() != shape.n {
+            return Err(Error::Config(format!(
+                "problem {p}: storage is {}×{} but the plan was lowered for n = {}",
+                band.n(),
+                band.n(),
+                shape.n
+            )));
+        }
+        band.check_reduction_storage(shape.bw, shape.tw)?;
+    }
+    Ok(())
+}
+
+/// Construct the backend registered under `kind`.
+///
+/// `threads` only affects [`ThreadpoolBackend`] (`0` = all hardware
+/// threads). [`BackendKind::Pjrt`] resolves artifacts from
+/// [`crate::runtime::artifact_dir`] lazily at execute time, so
+/// construction always succeeds; execution fails cleanly when artifacts
+/// (or the `pjrt` feature) are missing. [`BackendKind::PjrtFused`] runs
+/// whole-stage artifacts and is driven by
+/// [`crate::coordinator::Coordinator::reduce_pjrt`] rather than a plan
+/// executor, so it has no trait-object form.
+pub fn for_kind(kind: BackendKind, threads: usize) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Sequential => Ok(Box::new(SequentialBackend::new())),
+        BackendKind::Threadpool => Ok(Box::new(ThreadpoolBackend::new(threads))),
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::from_env())),
+        BackendKind::PjrtFused => Err(Error::Config(
+            "pjrt-fused executes whole-stage artifacts (one call per stage), not a \
+             launch plan; use `Coordinator::reduce_pjrt` or the plain `pjrt` backend"
+                .into(),
+        )),
+    }
+}
+
+/// Lower the plan for a bandwidth-`bw` problem under `params` and execute
+/// it on `backend` — the single-problem driver shared by the coordinator
+/// and the pipeline. Returns the executed plan alongside the execution so
+/// callers can cross-check metrics against the IR.
+pub fn execute_reduction<A: AsBandStorageMut + ?Sized>(
+    backend: &dyn Backend,
+    a: &mut A,
+    bw: usize,
+    params: &TuneParams,
+) -> Result<(LaunchPlan, Execution)> {
+    let mut band = a.as_band_storage_mut();
+    let n = band.n();
+    band.check_reduction_storage(bw, params.effective_tw(bw))?;
+    let plan = LaunchPlan::for_problem(n, bw, params);
+    let exec = backend.execute(&plan, std::slice::from_mut(&mut band))?;
+    Ok((plan, exec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    fn params() -> TuneParams {
+        TuneParams { tpb: 32, tw: 4, max_blocks: 12 }
+    }
+
+    #[test]
+    fn registry_builds_every_plan_backend() {
+        for kind in BackendKind::ALL {
+            match for_kind(kind, 2) {
+                Ok(b) => {
+                    assert_eq!(b.kind(), kind);
+                    assert_eq!(b.name(), kind.name());
+                }
+                Err(_) => assert_eq!(kind, BackendKind::PjrtFused),
+            }
+        }
+    }
+
+    #[test]
+    fn native_backends_match_bitwise_through_the_trait() {
+        let params = params();
+        let (n, bw) = (56, 7);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let base = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+
+        let mut reference = base.clone();
+        let seq = SequentialBackend::new();
+        let (plan, exec_seq) =
+            execute_reduction(&seq, &mut reference, bw, &params).unwrap();
+
+        let mut pooled = base.clone();
+        let tp = ThreadpoolBackend::new(3);
+        let (_, exec_tp) = execute_reduction(&tp, &mut pooled, bw, &params).unwrap();
+
+        assert_eq!(reference, pooled);
+        assert_eq!(exec_seq.aggregate.launches, plan.num_launches());
+        assert_eq!(exec_seq.aggregate.per_launch, exec_tp.aggregate.per_launch);
+        assert_eq!(exec_seq.per_problem[0].bytes, exec_tp.per_problem[0].bytes);
+        assert_eq!(reference.max_off_band(1), 0.0);
+    }
+
+    #[test]
+    fn mismatched_problem_count_is_rejected() {
+        let plan = LaunchPlan::for_problem(32, 4, &params());
+        let seq = SequentialBackend::new();
+        assert!(seq.execute(&plan, &mut []).is_err());
+    }
+
+    #[test]
+    fn undersized_storage_is_rejected_by_every_native_backend() {
+        let params = TuneParams { tpb: 32, tw: 8, max_blocks: 8 };
+        for kind in [BackendKind::Sequential, BackendKind::Threadpool] {
+            let backend = for_kind(kind, 1).unwrap();
+            let mut bad = Banded::<f64>::zeros(32, 9, 1); // kd_sub 1 < tw 8
+            assert!(
+                execute_reduction(backend.as_ref(), &mut bad, 8, &params).is_err(),
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn band_storage_view_reports_shape_and_precision() {
+        let mut a = Banded::<f32>::for_reduction(8, 3, 2);
+        let view = a.as_band_storage_mut();
+        assert_eq!(view.n(), 8);
+        assert_eq!(view.ld(), 8); // (3+2) + 2 + 1
+        assert_eq!(view.kd_super(), 5);
+        assert_eq!(view.element_bytes(), 4);
+        assert_eq!(view.precision(), "fp32");
+    }
+}

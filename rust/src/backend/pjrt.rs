@@ -1,0 +1,244 @@
+//! The PJRT plan executor — AOT-compiled HLO artifacts driven by the
+//! launch-plan IR.
+//!
+//! This is the backend the IR was built for: the schedule is lowered
+//! once, and this executor walks the resulting [`LaunchPlan`] **launch
+//! by launch**, issuing one PJRT `execute` per plan slot. Three
+//! memory-aware properties fall out of consuming the plan instead of
+//! re-deriving a schedule from the manifest (which is what the legacy
+//! `reduce_per_cycle` loop did):
+//!
+//! - **Device-resident chaining, one buffer per problem.** Each plan
+//!   problem's banded storage is uploaded once into its own device
+//!   buffer and chained through every launch (`execute_b`); only the
+//!   4-byte cycle index crosses the host boundary per call. A *merged*
+//!   batch plan therefore maps onto multiple co-resident device buffers —
+//!   the multi-buffer execution the batch path was waiting on.
+//! - **Empty cycles are never launched.** The plan only lowers non-empty
+//!   launches, so ramp-up/ramp-down cycles with zero ready tasks cost
+//!   nothing here, while the manifest-driven loop paid a full PJRT call
+//!   for each.
+//! - **Footprint-accounted traffic.** Per-launch metrics carry the same
+//!   plan-derived [`slot_bytes`] the simulator costs, and
+//!   [`LaunchPlan::launch_footprint_elems`] bounds what a tile-payload
+//!   artifact would need to stage per launch. This backend's own cost
+//!   profile ([`BackendCostModel::pjrt`]) charges no staging — buffers
+//!   are device-resident — but the hypothetical
+//!   [`BackendCostModel::pjrt_tile_streaming`] profile prices exactly
+//!   that footprint, which is how to evaluate tile-payload artifacts
+//!   before compiling any (see `docs/performance-model.md`).
+//!
+//! Artifacts execute in f32 regardless of the in-memory precision
+//! (storage converts on upload/download); without the `pjrt` feature the
+//! stub client makes every execution fail with a clear message before
+//! any work is attempted.
+
+use crate::backend::{check_problems, Backend, BandStorageMut, Execution};
+use crate::config::BackendKind;
+use crate::coordinator::metrics::LaunchMetrics;
+use crate::error::{Error, Result};
+use crate::plan::{slot_bytes, LaunchPlan};
+use crate::runtime::{artifact_dir, PjrtEngine};
+use crate::simulator::model::BackendCostModel;
+use std::cell::RefCell;
+use std::path::PathBuf;
+
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::stub as xla;
+
+/// Executes [`LaunchPlan`]s through pre-compiled PJRT artifacts, loading
+/// (and caching) one [`PjrtEngine`] per distinct `(n, bw, tw)` variant a
+/// plan's problems require. See the module docs for the execution model.
+pub struct PjrtBackend {
+    dir: PathBuf,
+    engines: RefCell<Vec<PjrtEngine>>,
+}
+
+impl PjrtBackend {
+    /// Backend resolving artifacts from `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), engines: RefCell::new(Vec::new()) }
+    }
+
+    /// Backend resolving artifacts from [`artifact_dir`] (the
+    /// `BSVD_ARTIFACTS` environment knob). Construction is infallible;
+    /// missing artifacts or a stub build surface as a clean error at
+    /// execute time.
+    pub fn from_env() -> Self {
+        Self::new(artifact_dir())
+    }
+
+    /// Backend seeded with an already-loaded engine (further variants
+    /// load from the engine's own artifact directory).
+    pub fn with_engine(engine: PjrtEngine) -> Self {
+        let dir = engine.manifest().dir.clone();
+        Self { dir, engines: RefCell::new(vec![engine]) }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn requires_artifacts(&self) -> bool {
+        true
+    }
+
+    fn cost_model(&self) -> BackendCostModel {
+        BackendCostModel::pjrt()
+    }
+
+    fn execute(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+    ) -> Result<Execution> {
+        check_problems(plan, problems)?;
+        let mut engines = self.engines.borrow_mut();
+        let mut engine_of: Vec<usize> = Vec::with_capacity(plan.problems.len());
+        for shape in &plan.problems {
+            let key = (shape.n, shape.bw, shape.tw);
+            let idx = match engines.iter().position(|e| {
+                let m = e.manifest();
+                (m.n, m.bw, m.tw) == key
+            }) {
+                Some(i) => i,
+                None => {
+                    engines.push(PjrtEngine::load(&self.dir, shape.n, shape.bw, shape.tw)?);
+                    engines.len() - 1
+                }
+            };
+            engine_of.push(idx);
+        }
+        execute_plan_on_engines(&engines, &engine_of, plan, problems)
+    }
+}
+
+/// Walk `plan` launch by launch through a single pre-loaded engine (all
+/// problems must match its variant) — the path
+/// [`crate::coordinator::Coordinator::reduce_pjrt`] drives.
+pub(crate) fn execute_plan_on_engine(
+    engine: &PjrtEngine,
+    plan: &LaunchPlan,
+    problems: &mut [BandStorageMut<'_>],
+) -> Result<Execution> {
+    check_problems(plan, problems)?;
+    let engine_of = vec![0usize; plan.problems.len()];
+    execute_plan_on_engines(std::slice::from_ref(engine), &engine_of, plan, problems)
+}
+
+/// The shared launch walk: `engine_of[p]` names the engine executing plan
+/// problem `p`. One device-resident buffer per problem, launches in plan
+/// order, per-slot chaining, single download at the end.
+fn execute_plan_on_engines(
+    engines: &[PjrtEngine],
+    engine_of: &[usize],
+    plan: &LaunchPlan,
+    problems: &mut [BandStorageMut<'_>],
+) -> Result<Execution> {
+    // Validate every problem against its artifact variant before any
+    // upload: the artifact's schedule (stage indices, cycle counts) must
+    // be the schedule the plan was lowered from, and the storage layout
+    // must match what the artifact was compiled for.
+    for (p, shape) in plan.problems.iter().enumerate() {
+        let m = engines[engine_of[p]].manifest();
+        if (m.n, m.bw, m.tw) != (shape.n, shape.bw, shape.tw) {
+            return Err(Error::Config(format!(
+                "problem {p}: plan was lowered for (n={}, bw={}, tw={}) but the artifact \
+                 variant is (n={}, bw={}, tw={})",
+                shape.n, shape.bw, shape.tw, m.n, m.bw, m.tw
+            )));
+        }
+        if problems[p].ld() != m.ld || problems[p].kd_super() != m.kd_super {
+            return Err(Error::Config(format!(
+                "problem {p}: storage layout (ld={}, kd_super={}) does not match artifact \
+                 layout (ld={}, kd_super={})",
+                problems[p].ld(),
+                problems[p].kd_super(),
+                m.ld,
+                m.kd_super
+            )));
+        }
+    }
+
+    // Upload once: one device-resident buffer per plan problem (merged
+    // batch plans co-reside as multiple buffers).
+    let mut bufs: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(problems.len());
+    for (p, band) in problems.iter().enumerate() {
+        let flat = band.to_f32_flat();
+        bufs.push(Some(engines[engine_of[p]].upload_flat(&flat)?));
+    }
+
+    // Artifacts execute in f32 regardless of the in-memory precision.
+    let es = 4usize;
+    let capacity = plan.capacity;
+    let mut per_problem = vec![LaunchMetrics::default(); problems.len()];
+    let mut aggregate = LaunchMetrics::default();
+    for li in 0..plan.num_launches() {
+        let mut launch_tasks = 0usize;
+        let mut launch_bytes = 0u64;
+        for slot in plan.launch(li) {
+            let p = slot.problem as usize;
+            let stage = plan.slot_stage(slot);
+            let count = slot.count as usize;
+            let bytes = slot_bytes(stage, count, es);
+            per_problem[p].record_launch(count, capacity, bytes);
+            let buf = bufs[p].take().expect("device buffer live between launches");
+            bufs[p] = Some(engines[engine_of[p]].execute_cycle_step(
+                buf,
+                slot.stage as usize,
+                slot.t as usize,
+            )?);
+            launch_tasks += count;
+            launch_bytes += bytes;
+        }
+        aggregate.record_launch(launch_tasks, capacity, launch_bytes);
+    }
+
+    // Single download per problem, written back at the storage precision.
+    let mut flat: Vec<f32> = Vec::new();
+    for (p, band) in problems.iter_mut().enumerate() {
+        let buf = bufs[p].take().expect("device buffer live after final launch");
+        engines[engine_of[p]].download_flat(&buf, &mut flat)?;
+        band.from_f32_flat(&flat);
+    }
+    Ok(Execution { per_problem, aggregate })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::AsBandStorageMut;
+    use crate::banded::storage::Banded;
+    use crate::config::TuneParams;
+
+    #[test]
+    fn missing_artifacts_fail_cleanly_before_any_work() {
+        // A variant that certainly has no artifacts: the error must
+        // surface from execute(), leaving the storage untouched.
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 8 };
+        let backend = PjrtBackend::new("/nonexistent-artifact-dir");
+        assert!(backend.requires_artifacts());
+        let mut a = Banded::<f32>::for_reduction(32, 6, 4);
+        let before = a.clone();
+        let plan = LaunchPlan::for_problem(32, 6, &params);
+        let err = backend
+            .execute(&plan, &mut [a.as_band_storage_mut()])
+            .expect_err("no artifacts available");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("artifact") || msg.contains("pjrt") || msg.contains("PJRT"),
+            "{msg}"
+        );
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn cost_model_is_the_pjrt_profile() {
+        let backend = PjrtBackend::from_env();
+        let cm = backend.cost_model();
+        assert_eq!(cm.element_size, Some(4));
+        assert!(cm.dispatch_overhead_s > 0.0);
+    }
+}

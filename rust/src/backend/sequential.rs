@@ -1,0 +1,115 @@
+//! The inline reference executor: plan order, one task at a time.
+
+use crate::backend::{check_problems, Backend, BandStorageMut, Execution};
+use crate::batch::engine::{Runner, SlotScratch};
+use crate::bulge::schedule::CycleTask;
+use crate::config::BackendKind;
+use crate::coordinator::metrics::LaunchMetrics;
+use crate::error::Result;
+use crate::plan::{slot_bytes, LaunchPlan};
+
+/// Executes a [`LaunchPlan`] inline on the calling thread, in plan order,
+/// one task at a time — the schedule-order oracle. Every other backend's
+/// storage must match this one bitwise on the same plan (the per-task
+/// float-op sequence is identical; only concurrency differs, and tasks
+/// within a launch are element-disjoint).
+///
+/// Also the cheapest backend for tiny problems: no pool threads, no
+/// dispatch overhead, one lazily grown workspace per precision.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SequentialBackend;
+
+impl SequentialBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Backend for SequentialBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sequential
+    }
+
+    fn execute(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+    ) -> Result<Execution> {
+        check_problems(plan, problems)?;
+        let capacity = plan.capacity;
+        let mut runners: Vec<Runner<'_>> = problems
+            .iter_mut()
+            .zip(plan.problems.iter())
+            .map(|(band, shape)| Runner::for_band(band, shape))
+            .collect::<Result<_>>()?;
+        let mut scratch = SlotScratch::new();
+        let mut tasks: Vec<CycleTask> = Vec::new();
+        let mut aggregate = LaunchMetrics::default();
+        for li in 0..plan.num_launches() {
+            let mut launch_tasks = 0usize;
+            let mut launch_bytes = 0u64;
+            for slot in plan.launch(li) {
+                let p = slot.problem as usize;
+                let shape = &plan.problems[p];
+                let stage = &shape.stages[slot.stage as usize];
+                let count = slot.count as usize;
+                let bytes = slot_bytes(stage, count, runners[p].element_bytes());
+                runners[p].metrics.record_launch(count, capacity, bytes);
+                tasks.clear();
+                stage.tasks_at_into(shape.n, slot.t as usize, &mut tasks);
+                debug_assert_eq!(tasks.len(), count);
+                for task in &tasks {
+                    // SAFETY: problems are exclusively borrowed for the
+                    // whole call and tasks execute strictly one at a
+                    // time — no concurrent access exists at all.
+                    unsafe { runners[p].exec_task(slot.stage as usize, task, &mut scratch) };
+                }
+                launch_tasks += count;
+                launch_bytes += bytes;
+            }
+            aggregate.record_launch(launch_tasks, capacity, launch_bytes);
+        }
+        Ok(Execution {
+            per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),
+            aggregate,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::AsBandStorageMut;
+    use crate::config::{PackingPolicy, TuneParams};
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn executes_merged_plans_with_per_problem_metrics() {
+        let params = TuneParams { tpb: 32, tw: 3, max_blocks: 10 };
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let shapes = [(40usize, 5usize), (32, 4)];
+        let mut mats: Vec<_> = shapes
+            .iter()
+            .map(|&(n, bw)| random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng))
+            .collect();
+        let parts: Vec<LaunchPlan> = shapes
+            .iter()
+            .map(|&(n, bw)| LaunchPlan::for_problem(n, bw, &params))
+            .collect();
+        let merged = LaunchPlan::merge(&parts, 10, PackingPolicy::RoundRobin, 4);
+
+        let (a, b) = mats.split_at_mut(1);
+        let mut bands = [a[0].as_band_storage_mut(), b[0].as_band_storage_mut()];
+        let exec = SequentialBackend::new().execute(&merged, &mut bands).unwrap();
+        drop(bands);
+
+        assert_eq!(exec.per_problem.len(), 2);
+        assert_eq!(exec.aggregate.launches, merged.num_launches());
+        for ((part, m), mat) in parts.iter().zip(&exec.per_problem).zip(&mats) {
+            assert_eq!(m.launches, part.num_launches());
+            assert_eq!(m.tasks, part.total_tasks());
+            assert_eq!(mat.max_off_band(1), 0.0);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! The thread-pooled executor — the CPU analog of the paper's GPU
+//! execution model (one pinned dispatch + one barrier per launch).
+
+use crate::backend::{check_problems, Backend, BandStorageMut, Execution};
+use crate::batch::engine::{execute_plan, Runner};
+use crate::config::BackendKind;
+use crate::error::Result;
+use crate::plan::LaunchPlan;
+use crate::util::threadpool::ThreadPool;
+
+enum PoolRef<'p> {
+    Owned(ThreadPool),
+    Borrowed(&'p ThreadPool),
+}
+
+/// Executes a [`LaunchPlan`] over a worker [`ThreadPool`]: every launch
+/// is one pinned pool dispatch plus one barrier, tasks are routed to
+/// slots by sticky column-window affinity, and each slot keeps a
+/// persistent packed-tile workspace across launches (see
+/// `crate::batch::engine` for the launch loop itself).
+///
+/// The pool is usually owned ([`ThreadpoolBackend::new`]); callers that
+/// already hold a pool — e.g. the parallel SVD pipeline — can borrow it
+/// ([`ThreadpoolBackend::borrowing`]) without spawning new threads.
+pub struct ThreadpoolBackend<'p> {
+    pool: PoolRef<'p>,
+}
+
+impl ThreadpoolBackend<'static> {
+    /// Backend with its own pool; `threads == 0` uses all available
+    /// hardware threads.
+    pub fn new(threads: usize) -> Self {
+        Self { pool: PoolRef::Owned(ThreadPool::new(threads)) }
+    }
+}
+
+impl<'p> ThreadpoolBackend<'p> {
+    /// Backend over an existing pool (no threads spawned).
+    pub fn borrowing(pool: &'p ThreadPool) -> Self {
+        Self { pool: PoolRef::Borrowed(pool) }
+    }
+
+    /// The pool launches dispatch over.
+    pub fn pool(&self) -> &ThreadPool {
+        match &self.pool {
+            PoolRef::Owned(p) => p,
+            PoolRef::Borrowed(p) => p,
+        }
+    }
+}
+
+impl Backend for ThreadpoolBackend<'_> {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Threadpool
+    }
+
+    fn execute(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+    ) -> Result<Execution> {
+        check_problems(plan, problems)?;
+        let mut runners: Vec<Runner<'_>> = problems
+            .iter_mut()
+            .zip(plan.problems.iter())
+            .map(|(band, shape)| Runner::for_band(band, shape))
+            .collect::<Result<_>>()?;
+        let aggregate = execute_plan(plan, &mut runners, self.pool());
+        Ok(Execution {
+            per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),
+            aggregate,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{AsBandStorageMut, SequentialBackend};
+    use crate::config::{PackingPolicy, TuneParams};
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn borrowed_pool_matches_owned_pool_bitwise() {
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 8 };
+        let (n, bw) = (64, 8);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let base = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let plan = LaunchPlan::for_problem(n, bw, &params);
+
+        let mut owned = base.clone();
+        ThreadpoolBackend::new(3)
+            .execute(&plan, &mut [owned.as_band_storage_mut()])
+            .unwrap();
+
+        let pool = ThreadPool::new(3);
+        let mut borrowed = base.clone();
+        ThreadpoolBackend::borrowing(&pool)
+            .execute(&plan, &mut [borrowed.as_band_storage_mut()])
+            .unwrap();
+
+        assert_eq!(owned, borrowed);
+    }
+
+    #[test]
+    fn merged_plan_results_match_sequential_backend() {
+        let params = TuneParams { tpb: 32, tw: 3, max_blocks: 12 };
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let shapes = [(48usize, 6usize), (36, 4), (28, 3)];
+        let mats: Vec<_> = shapes
+            .iter()
+            .map(|&(n, bw)| random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng))
+            .collect();
+        let parts: Vec<LaunchPlan> = shapes
+            .iter()
+            .map(|&(n, bw)| LaunchPlan::for_problem(n, bw, &params))
+            .collect();
+        let merged = LaunchPlan::merge(&parts, 12, PackingPolicy::GreedyFill, 8);
+
+        let mut seq_mats = mats.clone();
+        {
+            let mut bands: Vec<BandStorageMut<'_>> =
+                seq_mats.iter_mut().map(|a| a.as_band_storage_mut()).collect();
+            SequentialBackend::new().execute(&merged, &mut bands).unwrap();
+        }
+        let mut tp_mats = mats.clone();
+        {
+            let mut bands: Vec<BandStorageMut<'_>> =
+                tp_mats.iter_mut().map(|a| a.as_band_storage_mut()).collect();
+            ThreadpoolBackend::new(4).execute(&merged, &mut bands).unwrap();
+        }
+        assert_eq!(seq_mats, tp_mats);
+    }
+}

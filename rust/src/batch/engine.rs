@@ -13,6 +13,7 @@
 //! thread across launches, so a chased window — and the slot's persistent
 //! packed-tile workspace ([`WorkerLocal`]) — stays in one core's cache.
 
+use crate::backend::{Backend, BandStorageMut, ThreadpoolBackend};
 use crate::banded::storage::Banded;
 use crate::batch::plan::BatchPlan;
 use crate::batch::BatchInput;
@@ -21,7 +22,7 @@ use crate::bulge::schedule::{CycleTask, Stage};
 use crate::config::{BatchConfig, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::Result;
-use crate::plan::{slot_bytes, LaunchPlan};
+use crate::plan::{slot_bytes, LaunchPlan, ProblemShape};
 use crate::scalar::Scalar;
 use crate::util::threadpool::{ThreadPool, WorkerLocal};
 use std::any::{Any, TypeId};
@@ -39,7 +40,7 @@ pub(crate) struct SlotScratch {
 }
 
 impl SlotScratch {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self { by_type: HashMap::new() }
     }
 
@@ -97,14 +98,41 @@ pub(crate) struct Runner<'a> {
 }
 
 impl<'a> Runner<'a> {
-    /// Build a runner for `a` against its single-problem plan `part`
-    /// (shape index 0).
-    pub(crate) fn new<T: Scalar>(a: &'a mut Banded<T>, part: &LaunchPlan) -> Result<Self> {
-        let shape = &part.problems[0];
+    /// Build a runner for `a` against its plan shape.
+    pub(crate) fn new<T: Scalar>(a: &'a mut Banded<T>, shape: &ProblemShape) -> Result<Self> {
         a.check_reduction_storage(shape.bw, shape.tw)?;
         let exec: Box<dyn ProblemExec + Sync + 'a> =
             Box::new(NativeExec { view: SharedBanded::new(a), stages: shape.stages.clone() });
         Ok(Self { exec, metrics: LaunchMetrics::default(), _borrow: PhantomData })
+    }
+
+    /// Build a runner from a type-erased storage view — the entry the
+    /// trait backends use, so one launch loop serves mixed precisions.
+    pub(crate) fn for_band(
+        band: &'a mut BandStorageMut<'_>,
+        shape: &ProblemShape,
+    ) -> Result<Self> {
+        match band {
+            BandStorageMut::F64(a) => Runner::new(&mut **a, shape),
+            BandStorageMut::F32(a) => Runner::new(&mut **a, shape),
+            BandStorageMut::F16(a) => Runner::new(&mut **a, shape),
+        }
+    }
+
+    /// Execute one task of stage `si` using `scratch`.
+    ///
+    /// # Safety
+    /// See [`ProblemExec::exec_task`]: the task must be element-disjoint
+    /// from every task concurrently executing on the same problem, and
+    /// the problem's buffer must not be otherwise accessed for the
+    /// duration of the call.
+    pub(crate) unsafe fn exec_task(&self, si: usize, task: &CycleTask, scratch: &mut SlotScratch) {
+        self.exec.exec_task(si, task, scratch)
+    }
+
+    /// Element size of the problem's scalar type.
+    pub(crate) fn element_bytes(&self) -> usize {
+        self.exec.element_bytes()
     }
 }
 
@@ -147,23 +175,17 @@ fn affinity_slot(problem: usize, stage: &Stage, task: &CycleTask, lanes: usize) 
 /// Execute every launch of `plan` over `pool`, in plan order with a
 /// barrier between launches. `runners[p]` executes the tasks of plan
 /// problem `p`; per-problem metrics land in each runner, aggregate
-/// accounting in the returned [`BatchMetrics`].
+/// accounting in the returned [`LaunchMetrics`].
 pub(crate) fn execute_plan(
     plan: &LaunchPlan,
     runners: &mut [Runner<'_>],
     pool: &ThreadPool,
-) -> BatchMetrics {
+) -> LaunchMetrics {
     assert_eq!(plan.problems.len(), runners.len(), "one runner per plan problem");
     let capacity = plan.capacity;
     let slots = pool.slots();
     let lanes = slots.min(capacity);
-    let mut bm = BatchMetrics {
-        aggregate: LaunchMetrics::default(),
-        capacity,
-        problems: runners.len(),
-        co_scheduled_launches: plan.co_scheduled_launches(),
-        max_problems_per_launch: plan.max_problems_per_launch(),
-    };
+    let mut aggregate = LaunchMetrics::default();
     // Persistent per-slot scratch (Householder vectors + packed-tile
     // workspace), alive across every launch of the run.
     let scratch: WorkerLocal<SlotScratch> = WorkerLocal::new(slots, |_| SlotScratch::new());
@@ -197,7 +219,7 @@ pub(crate) fn execute_plan(
                 buckets[w].push((start + i) as u32);
             }
         }
-        bm.aggregate.record_launch(tasks.len(), capacity, launch_bytes);
+        aggregate.record_launch(tasks.len(), capacity, launch_bytes);
 
         // Execute: one pinned pool dispatch, one barrier — tasks within
         // the launch are disjoint (schedule property within a problem,
@@ -222,7 +244,7 @@ pub(crate) fn execute_plan(
             }
         });
     }
-    bm
+    aggregate
 }
 
 /// Per-problem slice of a [`BatchReport`].
@@ -259,21 +281,30 @@ impl BatchReport {
     }
 }
 
-/// The batch coordinator: tuning parameters, batch knobs, worker pool.
+/// The batch coordinator: tuning parameters, batch knobs, and the
+/// [`Backend`] that executes the merged plan.
 pub struct BatchCoordinator {
     pub params: TuneParams,
     pub cfg: BatchConfig,
-    pool: ThreadPool,
+    backend: Box<dyn Backend>,
 }
 
 impl BatchCoordinator {
+    /// Batch coordinator on the default [`ThreadpoolBackend`];
     /// `threads == 0` uses all available hardware threads.
     pub fn new(params: TuneParams, cfg: BatchConfig, threads: usize) -> Self {
-        Self { params, cfg, pool: ThreadPool::new(threads) }
+        Self::with_backend(params, cfg, Box::new(ThreadpoolBackend::new(threads)))
     }
 
-    pub fn pool(&self) -> &ThreadPool {
-        &self.pool
+    /// Batch coordinator on an explicit backend — any [`Backend`] can
+    /// execute a merged plan (the PJRT backend maps each plan problem
+    /// onto its own device-resident buffer).
+    pub fn with_backend(params: TuneParams, cfg: BatchConfig, backend: Box<dyn Backend>) -> Self {
+        Self { params, cfg, backend }
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
 
     /// Validate the batch and lay out its packing plan — including the
@@ -284,26 +315,27 @@ impl BatchCoordinator {
     }
 
     /// Reduce every problem to bidiagonal form in place, executing the
-    /// merged shared-launch plan.
+    /// merged shared-launch plan on the selected backend.
     pub fn run(&self, inputs: &mut [BatchInput]) -> Result<BatchReport> {
         let plan = BatchPlan::new(inputs, &self.params, &self.cfg)?;
         let t_start = Instant::now();
-        let mut runners: Vec<Runner<'_>> = Vec::with_capacity(inputs.len());
-        for (input, pp) in inputs.iter_mut().zip(plan.problems.iter()) {
-            runners.push(match input {
-                BatchInput::F64 { a, .. } => Runner::new(a, &pp.part)?,
-                BatchInput::F32 { a, .. } => Runner::new(a, &pp.part)?,
-                BatchInput::F16 { a, .. } => Runner::new(a, &pp.part)?,
-            });
-        }
-        let mut metrics = execute_plan(&plan.merged, &mut runners, &self.pool);
-        let per_problem: Vec<LaunchMetrics> = runners.iter().map(|r| r.metrics.clone()).collect();
-        drop(runners);
+        let mut bands: Vec<BandStorageMut<'_>> =
+            inputs.iter_mut().map(|input| input.as_band_storage_mut()).collect();
+        let exec = self.backend.execute(&plan.merged, &mut bands)?;
+        drop(bands);
         let wall = t_start.elapsed();
-        metrics.aggregate.wall = wall;
+        let mut aggregate = exec.aggregate;
+        aggregate.wall = wall;
+        let metrics = BatchMetrics {
+            aggregate,
+            capacity: plan.capacity,
+            problems: inputs.len(),
+            co_scheduled_launches: plan.merged.co_scheduled_launches(),
+            max_problems_per_launch: plan.merged.max_problems_per_launch(),
+        };
         let problems = inputs
             .iter()
-            .zip(per_problem)
+            .zip(exec.per_problem)
             .map(|(input, m)| {
                 let (diag, superdiag) = input.bidiagonal_f64();
                 ProblemReport {
@@ -324,7 +356,7 @@ impl BatchCoordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{Backend, PackingPolicy};
+    use crate::config::{BackendKind, PackingPolicy};
     use crate::coordinator::Coordinator;
     use crate::generate::random_banded;
     use crate::util::rng::Xoshiro256;
@@ -385,7 +417,7 @@ mod tests {
         let report = batch_coord.run(&mut inputs).unwrap();
         for ((a, &(_, bw)), p) in mats.iter().zip(shapes.iter()).zip(report.problems.iter()) {
             let mut solo = a.clone();
-            let r = solo_coord.reduce_native(&mut solo, bw, Backend::Parallel).unwrap();
+            let r = solo_coord.reduce_native(&mut solo, bw, BackendKind::Threadpool).unwrap();
             assert_eq!(r.diag, p.diag);
             assert_eq!(r.superdiag, p.superdiag);
             assert_eq!(r.metrics.launches, p.metrics.launches);

@@ -24,9 +24,11 @@
 //!   in any supported precision.
 //! - [`BatchPlan`]        — the static packing plan: per-problem plans
 //!   plus the merged shared-launch plan the engine executes.
-//! - [`BatchCoordinator`] — owns the pool and knobs; executes the merged
-//!   plan. The single-problem coordinator is the batch-size-1 case of
-//!   this path.
+//! - [`BatchCoordinator`] — owns the knobs and the selected
+//!   [`crate::backend::Backend`]; executes the merged plan through it.
+//!   The single-problem coordinator is the batch-size-1 case of this
+//!   path, and any backend (threadpool, sequential, PJRT multi-buffer)
+//!   can carry a merged plan.
 //! - [`BatchReport`]      — per-problem bidiagonals + [`LaunchMetrics`],
 //!   plus aggregate occupancy of the shared launches.
 //!
@@ -101,6 +103,16 @@ impl BatchInput {
             BatchInput::F64 { a, .. } => a.max_off_band(keep_super),
             BatchInput::F32 { a, .. } => a.max_off_band(keep_super),
             BatchInput::F16 { a, .. } => a.max_off_band(keep_super),
+        }
+    }
+
+    /// Type-erased mutable view of the matrix — what the batch
+    /// coordinator hands to the selected [`crate::backend::Backend`].
+    pub(crate) fn as_band_storage_mut(&mut self) -> crate::backend::BandStorageMut<'_> {
+        match self {
+            BatchInput::F64 { a, .. } => crate::backend::BandStorageMut::F64(a),
+            BatchInput::F32 { a, .. } => crate::backend::BandStorageMut::F32(a),
+            BatchInput::F16 { a, .. } => crate::backend::BandStorageMut::F16(a),
         }
     }
 

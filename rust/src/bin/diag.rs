@@ -4,7 +4,7 @@
 //! exact same reflector ops on disjoint data).
 
 use banded_svd::banded::storage::Banded;
-use banded_svd::config::{Backend, TuneParams};
+use banded_svd::config::{BackendKind, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::random_banded;
 use banded_svd::util::rng::Xoshiro256;
@@ -18,8 +18,8 @@ fn main() {
     for trial in 0..5 {
         let mut a1 = a0.clone();
         let mut a2 = a0.clone();
-        coord.reduce_native(&mut a1, bw, Backend::Sequential).unwrap();
-        coord.reduce_native(&mut a2, bw, Backend::Parallel).unwrap();
+        coord.reduce_native(&mut a1, bw, BackendKind::Sequential).unwrap();
+        coord.reduce_native(&mut a2, bw, BackendKind::Threadpool).unwrap();
         let mut ndiff = 0;
         let mut worst = 0.0f64;
         for (i, (x, y)) in a1.data().iter().zip(a2.data().iter()).enumerate() {

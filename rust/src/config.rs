@@ -1,4 +1,17 @@
-//! Tunable parameters (paper §III-C) and per-architecture heuristics.
+//! Tunable parameters (paper §III-C), per-architecture heuristics, and
+//! the backend selector.
+//!
+//! # Environment knobs
+//!
+//! Two settings can be changed without a rebuild:
+//!
+//! | Variable | Default | Effect |
+//! | --- | --- | --- |
+//! | `BSVD_PACKED_SPAN_MIN` | `48` | Minimum stage span `b + d` routed through the packed-tile kernel path ([`crate::bulge::cycle::PACKED_SPAN_MIN`]); `0` forces every stage packed, a huge value forces in-place. Read once, on first use. |
+//! | `BSVD_ARTIFACTS` | `artifacts` | Directory the PJRT backends load AOT-compiled HLO artifacts from ([`crate::runtime::artifact_dir`]). Read on every resolution, so it can be repointed between engine loads. |
+//!
+//! Both paths are bitwise-identical in results — the knobs trade
+//! performance, never numerics (see `docs/performance-model.md`).
 
 use crate::error::{Error, Result};
 
@@ -84,7 +97,21 @@ impl std::str::FromStr for PackingPolicy {
     }
 }
 
-/// Knobs of the batched reduction engine.
+/// Knobs of the batched reduction engine
+/// ([`crate::batch::BatchCoordinator`]).
+///
+/// # Examples
+///
+/// ```
+/// use banded_svd::config::{BatchConfig, PackingPolicy};
+///
+/// let cfg = BatchConfig::new(8, PackingPolicy::GreedyFill).unwrap();
+/// assert_eq!(cfg.max_coresident, 8);
+/// // Zero co-residency is rejected — at least one problem must run.
+/// assert!(BatchConfig::new(0, PackingPolicy::RoundRobin).is_err());
+/// // The default interleaves up to 64 problems, round-robin.
+/// assert_eq!(BatchConfig::default().policy, PackingPolicy::RoundRobin);
+/// ```
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct BatchConfig {
     /// Maximum problems interleaved at once; problems beyond the window
@@ -109,28 +136,71 @@ impl Default for BatchConfig {
     }
 }
 
-/// Execution backend selector for the reduction driver.
+/// Names an execution backend — the selector the CLI and the high-level
+/// drivers map onto a [`crate::backend::Backend`] trait object via
+/// [`crate::backend::for_kind`]. Every executor behind a kind consumes
+/// the same [`crate::plan::LaunchPlan`]; the kinds differ only in *how*
+/// the plan's launches are carried out.
+///
+/// # Examples
+///
+/// ```
+/// use banded_svd::config::BackendKind;
+///
+/// let kind: BackendKind = "threadpool".parse().unwrap();
+/// assert_eq!(kind, BackendKind::Threadpool);
+/// assert_eq!(kind.name(), "threadpool");
+/// assert!(BackendKind::ALL.contains(&kind));
+/// ```
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// Pure-Rust, one task at a time, classic sweep-major order.
+pub enum BackendKind {
+    /// Pure-Rust, one task at a time, inline in the calling thread — the
+    /// schedule-order oracle every other backend is checked against.
     Sequential,
-    /// Pure-Rust, launch-level parallelism over the thread pool.
-    Parallel,
-    /// AOT JAX/Pallas artifacts executed through PJRT, one call per launch.
+    /// Pure-Rust, launch-level parallelism over the worker thread pool
+    /// (one pinned dispatch + one barrier per launch).
+    Threadpool,
+    /// AOT JAX/Pallas artifacts executed through PJRT, one call per
+    /// launch, with per-problem device-resident buffers.
     Pjrt,
     /// Fused whole-stage PJRT artifacts (one call per bandwidth stage).
     PjrtFused,
 }
 
-impl std::str::FromStr for Backend {
+impl BackendKind {
+    /// Every registered backend kind, in reference-first order (the
+    /// equivalence property test iterates this).
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::Sequential,
+        BackendKind::Threadpool,
+        BackendKind::Pjrt,
+        BackendKind::PjrtFused,
+    ];
+
+    /// Canonical CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Sequential => "sequential",
+            BackendKind::Threadpool => "threadpool",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::PjrtFused => "pjrt-fused",
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
     type Err = String;
     fn from_str(s: &str) -> std::result::Result<Self, String> {
         match s {
-            "seq" | "sequential" => Ok(Backend::Sequential),
-            "par" | "parallel" => Ok(Backend::Parallel),
-            "pjrt" => Ok(Backend::Pjrt),
-            "pjrt-fused" | "fused" => Ok(Backend::PjrtFused),
-            other => Err(format!("unknown backend {other:?} (seq|par|pjrt|pjrt-fused)")),
+            "seq" | "sequential" => Ok(BackendKind::Sequential),
+            // "par"/"parallel" kept as aliases from when the threadpool
+            // executor was the only parallel backend.
+            "par" | "parallel" | "tp" | "threadpool" => Ok(BackendKind::Threadpool),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "pjrt-fused" | "fused" => Ok(BackendKind::PjrtFused),
+            other => Err(format!(
+                "unknown backend {other:?} (sequential|threadpool|pjrt|pjrt-fused)"
+            )),
         }
     }
 }
@@ -192,8 +262,14 @@ mod tests {
 
     #[test]
     fn backend_parses() {
-        assert_eq!("seq".parse::<Backend>().unwrap(), Backend::Sequential);
-        assert_eq!("pjrt-fused".parse::<Backend>().unwrap(), Backend::PjrtFused);
-        assert!("bogus".parse::<Backend>().is_err());
+        assert_eq!("seq".parse::<BackendKind>().unwrap(), BackendKind::Sequential);
+        assert_eq!("threadpool".parse::<BackendKind>().unwrap(), BackendKind::Threadpool);
+        // Legacy aliases from before the trait refactor keep working.
+        assert_eq!("par".parse::<BackendKind>().unwrap(), BackendKind::Threadpool);
+        assert_eq!("pjrt-fused".parse::<BackendKind>().unwrap(), BackendKind::PjrtFused);
+        assert!("bogus".parse::<BackendKind>().is_err());
+        for kind in BackendKind::ALL {
+            assert_eq!(kind.name().parse::<BackendKind>().unwrap(), kind);
+        }
     }
 }

@@ -1,26 +1,31 @@
-//! L3 coordinator — the run-time owner of the reduction.
+//! L3 coordinator — the run-time owner of a single-problem reduction.
 //!
-//! Owns the banded buffer, lowers the 3-cycle schedule into a
-//! [`LaunchPlan`] (the same value the simulator costs —
-//! `simulator::model::simulate_plan` — so predicted launches/occupancy
-//! are exact by construction), executes it, and collects metrics.
-//! Backends:
+//! Lowers the 3-cycle schedule into a [`LaunchPlan`] (the same value the
+//! simulator costs — `simulator::model::simulate_plan` — so predicted
+//! launches/occupancy are exact by construction) and hands it to a
+//! [`Backend`] for execution; metrics come back per launch. Backend
+//! selection goes through [`BackendKind`]:
 //!
-//! - [`Backend::Sequential`] / [`Backend::Parallel`] — native Rust cycle
-//!   kernels (any precision), in-place or packed-tile per stage width.
-//! - [`Backend::Pjrt`] — per-launch AOT artifacts through the PJRT CPU
-//!   client (f32; python never runs — artifacts are pre-compiled).
-//! - [`Backend::PjrtFused`] — whole-stage artifacts, one call per stage.
+//! - [`BackendKind::Sequential`] / [`BackendKind::Threadpool`] — native
+//!   Rust cycle kernels (any precision), executed by
+//!   [`crate::backend::SequentialBackend`] /
+//!   [`crate::backend::ThreadpoolBackend`].
+//! - [`BackendKind::Pjrt`] — the plan-driven PJRT executor
+//!   ([`crate::backend::PjrtBackend`]): per-launch AOT artifacts, one
+//!   device-resident buffer, f32.
+//! - [`BackendKind::PjrtFused`] — whole-stage artifacts, one PJRT call
+//!   per stage; metrics still derive from the plan the stages fuse.
 
 pub mod metrics;
 
+use crate::backend::{
+    execute_reduction, pjrt::execute_plan_on_engine, AsBandStorageMut, Backend, SequentialBackend,
+    ThreadpoolBackend,
+};
 use crate::banded::storage::Banded;
-use crate::batch::engine::{execute_plan, Runner};
-use crate::bulge::cycle::{exec_cycle, CycleWorkspace};
-use crate::bulge::schedule::CycleTask;
-use crate::config::{Backend, TuneParams};
+use crate::config::{BackendKind, TuneParams};
 use crate::error::{Error, Result};
-use crate::plan::{slot_bytes, LaunchPlan};
+use crate::plan::LaunchPlan;
 use crate::runtime::PjrtEngine;
 use crate::scalar::Scalar;
 use crate::util::threadpool::ThreadPool;
@@ -30,7 +35,7 @@ use std::time::Instant;
 /// Result of a coordinated reduction.
 #[derive(Clone, Debug)]
 pub struct RunReport {
-    pub backend: Backend,
+    pub backend: BackendKind,
     pub n: usize,
     pub bw: usize,
     pub params: TuneParams,
@@ -42,19 +47,21 @@ pub struct RunReport {
     pub residual_off_band: f64,
 }
 
-/// The coordinator: tuning parameters + worker pool.
+/// The coordinator: tuning parameters + the resident threadpool backend
+/// (other backends are constructed per call or passed in explicitly via
+/// [`Coordinator::reduce_with`]).
 pub struct Coordinator {
     pub params: TuneParams,
-    pool: ThreadPool,
+    threadpool: ThreadpoolBackend<'static>,
 }
 
 impl Coordinator {
     pub fn new(params: TuneParams, threads: usize) -> Self {
-        Self { params, pool: ThreadPool::new(threads) }
+        Self { params, threadpool: ThreadpoolBackend::new(threads) }
     }
 
     pub fn pool(&self) -> &ThreadPool {
-        &self.pool
+        self.threadpool.pool()
     }
 
     /// The launch plan this coordinator executes for an `n × n` problem of
@@ -65,125 +72,120 @@ impl Coordinator {
         LaunchPlan::for_problem(n, bw, &self.params)
     }
 
-    /// Run a native reduction (sequential or thread-pooled launch loop).
+    /// Run the reduction on an explicit [`Backend`] trait object — the
+    /// fully general entry point every kind-specific method funnels into
+    /// (validation + lowering + execution live in
+    /// [`crate::backend::execute_reduction`], shared with the pipeline).
+    pub fn reduce_with<T: Scalar>(
+        &self,
+        backend: &dyn Backend,
+        a: &mut Banded<T>,
+        bw: usize,
+    ) -> Result<RunReport>
+    where
+        Banded<T>: AsBandStorageMut,
+    {
+        let n = a.n();
+        let kind = backend.kind();
+        let t_start = Instant::now();
+        let (_plan, exec) = execute_reduction(backend, a, bw, &self.params)?;
+        let mut m = exec.per_problem.into_iter().next().unwrap_or_default();
+        m.wall = t_start.elapsed();
+        Ok(Self::report(kind, n, bw, self.params, m, a))
+    }
+
+    /// Run a native reduction (inline sequential or thread-pooled launch
+    /// loop) selected by kind.
     pub fn reduce_native<T: Scalar>(
         &self,
         a: &mut Banded<T>,
         bw: usize,
-        backend: Backend,
-    ) -> Result<RunReport> {
-        let n = a.n();
-        let tw = self.params.effective_tw(bw);
-        a.check_reduction_storage(bw, tw)?;
-        let plan = self.launch_plan(n, bw);
-        let capacity = plan.capacity;
-        let es = T::BYTES;
-        let mut m = LaunchMetrics::default();
-        let t_start = Instant::now();
-        match backend {
-            Backend::Sequential => {
-                // The plan executed inline, one task at a time, in launch
-                // order (the schedule-order oracle path).
-                let mut ws = CycleWorkspace::for_plan(&plan);
-                let mut tasks: Vec<CycleTask> = Vec::new();
-                for li in 0..plan.num_launches() {
-                    m.record_launch(plan.launch_tasks(li), capacity, plan.launch_bytes(li, es));
-                    for slot in plan.launch(li) {
-                        let stage = *plan.slot_stage(slot);
-                        tasks.clear();
-                        stage.tasks_at_into(n, slot.t as usize, &mut tasks);
-                        for task in &tasks {
-                            exec_cycle(a, &stage, task, &mut ws);
-                        }
-                    }
-                }
-            }
-            Backend::Parallel => {
-                // The batch-size-1 case of the plan executor
-                // (crate::batch): one runner, the same launch loop the
-                // multi-problem path uses.
-                let mut runners = vec![Runner::new(a, &plan)?];
-                execute_plan(&plan, &mut runners, &self.pool);
-                m = runners[0].metrics.clone();
-            }
-            other => {
-                return Err(Error::Config(format!(
-                    "reduce_native cannot run backend {other:?}; use reduce_pjrt"
-                )))
-            }
+        kind: BackendKind,
+    ) -> Result<RunReport>
+    where
+        Banded<T>: AsBandStorageMut,
+    {
+        match kind {
+            BackendKind::Sequential => self.reduce_with(&SequentialBackend::new(), a, bw),
+            BackendKind::Threadpool => self.reduce_with(&self.threadpool, a, bw),
+            other => Err(Error::Config(format!(
+                "reduce_native cannot run backend {other:?}; use reduce_pjrt"
+            ))),
         }
-        m.wall = t_start.elapsed();
-        let (diag, superdiag) = a.bidiagonal();
-        Ok(RunReport {
-            backend,
-            n,
-            bw,
-            params: self.params,
-            metrics: m,
-            diag: diag.iter().map(|v| v.to_f64()).collect(),
-            superdiag: superdiag.iter().map(|v| v.to_f64()).collect(),
-            residual_off_band: a.max_off_band(1),
-        })
     }
 
     /// Run the reduction through pre-compiled PJRT artifacts.
+    ///
+    /// [`BackendKind::Pjrt`] walks the launch plan through the engine's
+    /// per-launch executables (device-resident chaining, empty cycles
+    /// never launched); [`BackendKind::PjrtFused`] issues one call per
+    /// bandwidth stage. Both derive their launch metrics from the same
+    /// plan value, so the two kinds report identical schedules.
     pub fn reduce_pjrt<T: Scalar>(
         &self,
         engine: &PjrtEngine,
         a: &mut Banded<T>,
-        backend: Backend,
-    ) -> Result<RunReport> {
-        let fused = match backend {
-            Backend::Pjrt => false,
-            Backend::PjrtFused => true,
-            other => {
-                return Err(Error::Config(format!(
-                    "reduce_pjrt cannot run backend {other:?}"
-                )))
-            }
-        };
+        kind: BackendKind,
+    ) -> Result<RunReport>
+    where
+        Banded<T>: AsBandStorageMut,
+    {
         let n = a.n();
-        let bw = engine.manifest().bw;
-        let capacity = self.params.capacity();
+        let manifest = engine.manifest();
+        let bw = manifest.bw;
+        // The plan the artifacts implement: the manifest's own (bw, tw)
+        // variant — cross-checked against the Rust schedule at load.
+        let variant_params = TuneParams {
+            tpb: self.params.tpb,
+            tw: manifest.tw,
+            max_blocks: self.params.max_blocks,
+        };
+        let plan = LaunchPlan::for_problem(n, bw, &variant_params);
+        let capacity = plan.capacity;
         // Artifacts execute in f32 regardless of the in-memory precision.
         let es = 4;
-        let mut m = LaunchMetrics::default();
         let t_start = Instant::now();
-        if fused {
-            engine.reduce_banded(a, true)?;
-            // Launch metrics reconstructed from the schedule (the fused
-            // artifact runs the same launches inside one call).
-            for st in &engine.manifest().stages {
-                let stage = crate::bulge::schedule::Stage::new(st.b, st.d);
-                for t in 0..st.launches {
-                    let count = stage.tasks_at_count(n, t);
-                    m.record_launch(count, capacity, slot_bytes(&stage, count, es));
+        let mut m = LaunchMetrics::default();
+        match kind {
+            BackendKind::Pjrt => {
+                let exec = execute_plan_on_engine(engine, &plan, &mut [a.as_band_storage_mut()])?;
+                m = exec.per_problem.into_iter().next().unwrap_or_default();
+            }
+            BackendKind::PjrtFused => {
+                engine.reduce_banded(a, true)?;
+                // The fused artifact runs the same launches inside one
+                // call per stage; account them from the plan.
+                for li in 0..plan.num_launches() {
+                    m.record_launch(plan.launch_tasks(li), capacity, plan.launch_bytes(li, es));
                 }
             }
-        } else {
-            // Per-cycle path: count real launches as they execute.
-            let manifest = engine.manifest().clone();
-            let mut flat = a.to_f32_flat();
-            engine.reduce_per_cycle(&mut flat, |si, t| {
-                let st = &manifest.stages[si];
-                let stage = crate::bulge::schedule::Stage::new(st.b, st.d);
-                let count = stage.tasks_at_count(n, t);
-                m.record_launch(count, capacity, slot_bytes(&stage, count, es));
-            })?;
-            a.from_f32_flat(&flat);
+            other => {
+                return Err(Error::Config(format!("reduce_pjrt cannot run backend {other:?}")))
+            }
         }
         m.wall = t_start.elapsed();
+        Ok(Self::report(kind, n, bw, self.params, m, a))
+    }
+
+    fn report<T: Scalar>(
+        kind: BackendKind,
+        n: usize,
+        bw: usize,
+        params: TuneParams,
+        metrics: LaunchMetrics,
+        a: &Banded<T>,
+    ) -> RunReport {
         let (diag, superdiag) = a.bidiagonal();
-        Ok(RunReport {
-            backend,
+        RunReport {
+            backend: kind,
             n,
             bw,
-            params: self.params,
-            metrics: m,
+            params,
+            metrics,
             diag: diag.iter().map(|v| v.to_f64()).collect(),
             superdiag: superdiag.iter().map(|v| v.to_f64()).collect(),
             residual_off_band: a.max_off_band(1),
-        })
+        }
     }
 }
 
@@ -201,8 +203,8 @@ mod tests {
         let (n, bw) = (64, 8);
         let mut a1 = random_banded::<f64>(n, bw, 4, &mut rng);
         let mut a2 = a1.clone();
-        let r1 = coord.reduce_native(&mut a1, bw, Backend::Sequential).unwrap();
-        let r2 = coord.reduce_native(&mut a2, bw, Backend::Parallel).unwrap();
+        let r1 = coord.reduce_native(&mut a1, bw, BackendKind::Sequential).unwrap();
+        let r2 = coord.reduce_native(&mut a2, bw, BackendKind::Threadpool).unwrap();
         assert_eq!(a1, a2);
         assert_eq!(r1.metrics.launches, r2.metrics.launches);
         assert_eq!(r1.metrics.tasks, r2.metrics.tasks);
@@ -211,6 +213,8 @@ mod tests {
         assert_eq!(r1.residual_off_band, 0.0);
         assert!(r1.metrics.max_parallel >= 1);
         assert!(r1.metrics.avg_parallel() > 0.0);
+        assert_eq!(r1.backend, BackendKind::Sequential);
+        assert_eq!(r2.backend, BackendKind::Threadpool);
     }
 
     #[test]
@@ -221,12 +225,27 @@ mod tests {
         let (n, bw) = (72, 9);
         let plan = coord.launch_plan(n, bw);
         let mut a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
-        let r = coord.reduce_native(&mut a, bw, Backend::Parallel).unwrap();
+        let r = coord.reduce_native(&mut a, bw, BackendKind::Threadpool).unwrap();
         assert_eq!(r.metrics.launches, plan.num_launches());
         assert_eq!(r.metrics.tasks, plan.total_tasks());
         for (li, &got) in r.metrics.per_launch.iter().enumerate() {
             assert_eq!(got as usize, plan.launch_tasks(li), "launch {li}");
         }
+    }
+
+    #[test]
+    fn explicit_backend_object_matches_kind_selection() {
+        let params = TuneParams { tpb: 32, tw: 3, max_blocks: 6 };
+        let coord = Coordinator::new(params, 2);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let (n, bw) = (48, 6);
+        let mut a1 = random_banded::<f64>(n, bw, 3, &mut rng);
+        let mut a2 = a1.clone();
+        let via_kind = coord.reduce_native(&mut a1, bw, BackendKind::Sequential).unwrap();
+        let via_trait = coord.reduce_with(&SequentialBackend::new(), &mut a2, bw).unwrap();
+        assert_eq!(a1, a2);
+        assert_eq!(via_kind.diag, via_trait.diag);
+        assert_eq!(via_kind.metrics.per_launch, via_trait.metrics.per_launch);
     }
 
     #[test]
@@ -236,7 +255,7 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(2);
         let (n, bw) = (96, 8);
         let mut a = random_banded::<f64>(n, bw, 4, &mut rng);
-        let r = coord.reduce_native(&mut a, bw, Backend::Parallel).unwrap();
+        let r = coord.reduce_native(&mut a, bw, BackendKind::Threadpool).unwrap();
         assert!(r.metrics.unrolled_launches > 0);
     }
 
@@ -245,7 +264,7 @@ mod tests {
         let params = TuneParams { tpb: 32, tw: 8, max_blocks: 8 };
         let coord = Coordinator::new(params, 1);
         let mut a = Banded::<f64>::zeros(32, 9, 1); // kd_sub 1 < tw 8
-        assert!(coord.reduce_native(&mut a, 8, Backend::Sequential).is_err());
+        assert!(coord.reduce_native(&mut a, 8, BackendKind::Sequential).is_err());
     }
 
     #[test]
@@ -253,6 +272,6 @@ mod tests {
         let params = TuneParams::default();
         let coord = Coordinator::new(params, 1);
         let mut a = Banded::<f64>::for_reduction(16, 2, 1);
-        assert!(coord.reduce_native(&mut a, 2, Backend::Pjrt).is_err());
+        assert!(coord.reduce_native(&mut a, 2, BackendKind::Pjrt).is_err());
     }
 }

@@ -15,35 +15,49 @@
 //!   and the GPU performance model that regenerates the paper's tables
 //!   and figures.
 //!
-//! ## Architecture: schedule → plan → {execute, batch-merge, simulate}
+//! ## Architecture: schedule → plan → backend execution
 //!
 //! The paper's hardware-aware tuning only works if the model tunes the
 //! *actual* schedule the device runs. The crate therefore funnels every
-//! consumer through one launch-plan IR ([`plan::LaunchPlan`]):
+//! consumer through one launch-plan IR ([`plan::LaunchPlan`]), and every
+//! executor behind one trait ([`backend::Backend`]) whose single
+//! obligation is *execute a `LaunchPlan` against banded storage*:
 //!
 //! ```text
-//!   bulge/schedule.rs ── lower ──▶ plan::LaunchPlan
-//!                                     │
-//!            ┌────────────────────────┼─────────────────────────┐
-//!            ▼                        ▼                         ▼
-//!   coordinator (execute)   plan::LaunchPlan::merge    simulator::model
-//!   one launch = one pool   (batch interleaving as a   (simulate_plan costs
-//!   dispatch + barrier       pure plan transform)       the identical value)
+//!   bulge/schedule.rs ── lower ──▶ plan::LaunchPlan ── merge ──▶ (batched)
+//!                                      │
+//!                ┌─────────────────────┼──────────────────────┐
+//!                ▼                     ▼                      ▼
+//!        backend::Backend     simulator::simulate_plan   autotune_for
+//!     ┌──────────┼──────────┐  (costs the identical      (per-backend
+//!     ▼          ▼          ▼   value, exactly)           cost hook)
+//! Sequential Threadpool   Pjrt
+//!  (inline)  (pool+pins) (AOT artifacts, one
+//!                         device buffer per problem)
 //! ```
 //!
 //! - The **scheduler** lowers the 3-cycle schedule into symbolic
 //!   [`plan::TaskSlot`]s (problem, stage, cycle, count) — compact enough
 //!   to materialize n = 65536 plans, exact enough to reconstruct every
 //!   task.
-//! - The **executors** (coordinator, batch engine) walk the plan launch
-//!   by launch. Batching is [`plan::LaunchPlan::merge`]: per-problem
-//!   streams interleaved into shared launches under the joint MaxBlocks
-//!   capacity, preserving per-problem order (hence bitwise-identical
-//!   results).
+//! - The **backends** ([`backend`]) walk the plan launch by launch; the
+//!   coordinator, batch engine, pipeline, and CLI all select executors
+//!   through the trait. Batching is [`plan::LaunchPlan::merge`]:
+//!   per-problem streams interleaved into shared launches under the
+//!   joint MaxBlocks capacity, preserving per-problem order (hence
+//!   bitwise-identical results); the PJRT backend maps each merged-plan
+//!   problem onto its own device-resident buffer.
 //! - The **simulator** costs the *same* plan value
 //!   ([`simulator::model::simulate_plan`]), so predicted launch counts,
 //!   per-launch task counts, and byte traffic match execution exactly —
-//!   property-tested in `rust/tests/plan_consistency.rs`.
+//!   property-tested in `rust/tests/plan_consistency.rs` — and
+//!   [`simulator::autotune_for`] tunes under the cost profile of the
+//!   backend that will actually run
+//!   ([`backend::Backend::cost_model`]).
+//!
+//! The narrative version of this section lives in `docs/architecture.md`;
+//! the backend contract in `docs/backends.md`; the byte-accounting model
+//! in `docs/performance-model.md`.
 //!
 //! ## Memory-aware packed-tile execution
 //!
@@ -100,6 +114,7 @@
 //! );
 //! ```
 
+pub mod backend;
 pub mod banded;
 pub mod batch;
 pub mod baselines;
@@ -118,6 +133,9 @@ pub mod util;
 
 /// Convenient re-exports of the public API surface.
 pub mod prelude {
+    pub use crate::backend::{
+        AsBandStorageMut, Backend, PjrtBackend, SequentialBackend, ThreadpoolBackend,
+    };
     pub use crate::banded::{Banded, Dense};
     pub use crate::batch::{
         BatchCoordinator, BatchInput, BatchMetrics, BatchPlan, BatchReport, ProblemReport,
@@ -125,7 +143,7 @@ pub mod prelude {
     pub use crate::bulge::{
         reduce_to_bidiagonal, reduce_to_bidiagonal_parallel, stage_plan, Stage,
     };
-    pub use crate::config::{Backend, BatchConfig, PackingPolicy, TuneParams};
+    pub use crate::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
     pub use crate::error::{Error, Result};
     pub use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
     pub use crate::pipeline::{

@@ -4,7 +4,8 @@
 //! plus operational commands for running reductions and pipelines.
 
 use banded_svd::banded::Dense;
-use banded_svd::config::{Backend, TuneParams};
+use banded_svd::batch::BatchCoordinator;
+use banded_svd::config::{BackendKind, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::{dense_with_spectrum, random_banded, Spectrum};
 use banded_svd::pipeline::{
@@ -32,7 +33,7 @@ fn cli() -> Cli {
                     opt("tw", "inner tilewidth", "8"),
                     opt("tpb", "threads per block", "32"),
                     opt("max-blocks", "block capacity per launch", "192"),
-                    opt("backend", "seq|par|pjrt|pjrt-fused", "par"),
+                    opt("backend", "sequential|threadpool|pjrt|pjrt-fused", "threadpool"),
                     opt("threads", "worker threads (0 = all cores)", "0"),
                     opt("seed", "rng seed", "42"),
                     flag("verify", "check singular values against the Jacobi oracle (n ≤ 512)"),
@@ -56,6 +57,7 @@ fn cli() -> Cli {
                     opt("max-blocks", "joint block capacity per shared launch", "192"),
                     opt("policy", "packing policy: round-robin|greedy-fill", "round-robin"),
                     opt("max-coresident", "max problems interleaved at once", "64"),
+                    opt("backend", "sequential|threadpool|pjrt", "threadpool"),
                     opt("threads", "worker threads (0 = all cores)", "0"),
                     opt("seed", "rng seed", "42"),
                 ],
@@ -120,6 +122,11 @@ fn cli() -> Cli {
                     opt("n", "matrix size", "65536"),
                     opt("bw", "bandwidth", "128"),
                     opt("precision", "fp16|fp32|fp64", "fp32"),
+                    opt(
+                        "backend",
+                        "cost profile to tune for: native|pjrt|pjrt-streaming",
+                        "native",
+                    ),
                 ],
             },
             Command {
@@ -176,7 +183,7 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
         tw: args.parse_or("tw", 8),
         max_blocks: args.parse_or("max-blocks", 192),
     };
-    let backend: Backend = match args.get("backend").unwrap_or("par").parse() {
+    let backend: BackendKind = match args.get("backend").unwrap_or("threadpool").parse() {
         Ok(b) => b,
         Err(e) => {
             eprintln!("{e}");
@@ -194,8 +201,10 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
     };
     let coord = Coordinator::new(params, args.parse_or("threads", 0));
     let report = match backend {
-        Backend::Sequential | Backend::Parallel => coord.reduce_native(&mut a, bw, backend),
-        Backend::Pjrt | Backend::PjrtFused => {
+        BackendKind::Sequential | BackendKind::Threadpool => {
+            coord.reduce_native(&mut a, bw, backend)
+        }
+        BackendKind::Pjrt | BackendKind::PjrtFused => {
             let mut af = a.convert::<f32>();
             let engine = match PjrtEngine::load(&artifact_dir(), n, bw, tw) {
                 Ok(e) => e,
@@ -242,7 +251,7 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
 }
 
 fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
-    use banded_svd::batch::{BatchCoordinator, BatchInput};
+    use banded_svd::batch::BatchInput;
     use banded_svd::config::{BatchConfig, PackingPolicy};
 
     let params = TuneParams {
@@ -304,7 +313,24 @@ fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
         });
     }
 
-    let coord = BatchCoordinator::new(params, cfg, args.parse_or("threads", 0));
+    // Select the executor through the backend trait: any registered plan
+    // backend can carry a merged batch plan (the PJRT backend holds one
+    // device-resident buffer per co-scheduled problem).
+    let kind: BackendKind = match args.get("backend").unwrap_or("threadpool").parse() {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let backend = match banded_svd::backend::for_kind(kind, args.parse_or("threads", 0)) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let coord = BatchCoordinator::with_backend(params, cfg, backend);
     let report = match coord.run(&mut inputs) {
         Ok(r) => r,
         Err(e) => {
@@ -313,8 +339,9 @@ fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
         }
     };
     println!(
-        "batch of {} problems, capacity {} ({:?}), max co-resident {}",
+        "batch of {} problems on {} backend, capacity {} ({:?}), max co-resident {}",
         report.problems.len(),
+        coord.backend().name(),
         report.plan.capacity,
         report.plan.policy,
         report.plan.max_coresident
@@ -556,13 +583,24 @@ fn cmd_tune(args: &banded_svd::util::cli::Args) -> i32 {
     let n: usize = args.parse_or("n", 65536);
     let bw: usize = args.parse_or("bw", 128);
     let es = es_of(args.get("precision").unwrap_or("fp32"));
+    // Tune under the cost profile of the backend that will actually run.
+    let profile_name = args.get("backend").unwrap_or("native");
+    let profile = match profile_name {
+        "native" => simulator::BackendCostModel::native(),
+        "pjrt" => simulator::BackendCostModel::pjrt(),
+        "pjrt-streaming" => simulator::BackendCostModel::pjrt_tile_streaming(),
+        other => {
+            eprintln!("unknown cost profile {other:?} (native|pjrt|pjrt-streaming)");
+            return 2;
+        }
+    };
     let heuristic = simulator::heuristic_params(&arch, es, bw);
-    let h_time = simulator::simulate_reduction(&arch, es, n, bw, &heuristic).seconds;
+    let h_time = simulator::simulate_reduction_for(&arch, es, n, bw, &heuristic, &profile).seconds;
     println!(
-        "heuristic ({}): tpb={} tw={} max_blocks={}  ->  {:.3} s (modeled)",
+        "heuristic ({}, {profile_name}): tpb={} tw={} max_blocks={}  ->  {:.3} s (modeled)",
         arch.name, heuristic.tpb, heuristic.tw, heuristic.max_blocks, h_time
     );
-    let tuned = simulator::autotune(&arch, es, n, bw);
+    let tuned = simulator::autotune_for(&arch, es, n, bw, &profile);
     println!(
         "autotuned      : tpb={} tw={} max_blocks={}  ->  {:.3} s (modeled, {} configs, {:.1}% faster)",
         tuned.params.tpb,

@@ -22,6 +22,7 @@ pub use stage3::{
     bidiagonal_singular_values, bidiagonal_singular_values_parallel, relative_sv_error,
 };
 pub use svd::{
-    banded_singular_values, batch_singular_values, singular_values_3stage,
-    singular_values_3stage_mixed, singular_values_3stage_parallel, StageTimings, SvdOptions,
+    banded_singular_values, banded_singular_values_with, batch_singular_values,
+    singular_values_3stage, singular_values_3stage_mixed, singular_values_3stage_parallel,
+    StageTimings, SvdOptions,
 };

@@ -1,11 +1,15 @@
 //! The three-stage singular-value pipeline (paper §I): dense → banded →
 //! bidiagonal → singular values, with stage 2 running in a selectable
-//! precision (the Fig. 3 protocol) and on a selectable backend.
+//! precision (the Fig. 3 protocol) and on a selectable
+//! [`crate::backend::Backend`] — every stage-2 reduction here executes a
+//! [`crate::plan::LaunchPlan`] through the trait, never a private loop.
 
+use crate::backend::{
+    execute_reduction, AsBandStorageMut, Backend, SequentialBackend, ThreadpoolBackend,
+};
 use crate::banded::dense::Dense;
 use crate::banded::storage::Banded;
 use crate::batch::{BatchCoordinator, BatchInput};
-use crate::bulge::tiling::{reduce_to_bidiagonal, reduce_to_bidiagonal_parallel};
 use crate::config::{BatchConfig, TuneParams};
 use crate::error::Result;
 use crate::pipeline::stage1::{dense_to_band_inplace, dense_to_band_inplace_parallel};
@@ -49,11 +53,15 @@ pub fn singular_values_3stage(a: &Dense<f64>, opts: &SvdOptions) -> (Vec<f64>, S
 
 /// The paper's Fig. 3 protocol: stage 1 in f64, **stage 2 in precision
 /// `T`**, stage 3 in f64 — isolating the precision impact of the bulge
-/// chasing under test.
+/// chasing under test. Stage 2 executes its launch plan on the
+/// [`SequentialBackend`] (the inline reference executor).
 pub fn singular_values_3stage_mixed<T: Scalar>(
     a: &Dense<f64>,
     opts: &SvdOptions,
-) -> (Vec<f64>, StageTimings) {
+) -> (Vec<f64>, StageTimings)
+where
+    Banded<T>: AsBandStorageMut,
+{
     let mut times = StageTimings::default();
     let bw = opts.bandwidth.min(a.rows.saturating_sub(1)).max(1);
     let tw = opts.params.effective_tw(bw);
@@ -65,22 +73,25 @@ pub fn singular_values_3stage_mixed<T: Scalar>(
     let band64 = Banded::<f64>::from_dense(&work.data, work.rows, bw, tw);
     times.stage1 = t0.elapsed();
 
-    // Stage 2 in precision T.
+    // Stage 2 in precision T, through the backend trait.
     let t0 = std::time::Instant::now();
     let mut band_t: Banded<T> = band64.convert();
-    let red = reduce_to_bidiagonal(&mut band_t, bw, &opts.params);
+    execute_reduction(&SequentialBackend::new(), &mut band_t, bw, &opts.params)
+        .expect("stage-1 output is sized for the reduction");
+    let (diag, superdiag) = band_t.bidiagonal();
     times.stage2 = t0.elapsed();
 
     // Stage 3 (f64).
     let t0 = std::time::Instant::now();
-    let d: Vec<f64> = red.diag.iter().map(|v| v.to_f64()).collect();
-    let e: Vec<f64> = red.superdiag.iter().map(|v| v.to_f64()).collect();
+    let d: Vec<f64> = diag.iter().map(|v| v.to_f64()).collect();
+    let e: Vec<f64> = superdiag.iter().map(|v| v.to_f64()).collect();
     let sv = bidiagonal_singular_values(&d, &e);
     times.stage3 = t0.elapsed();
     (sv, times)
 }
 
-/// Threaded pipeline (all stages parallel over `pool`).
+/// Threaded pipeline (all stages parallel over `pool`; stage 2 executes
+/// its launch plan on a [`ThreadpoolBackend`] borrowing the same pool).
 pub fn singular_values_3stage_parallel(
     a: &Dense<f64>,
     opts: &SvdOptions,
@@ -97,27 +108,51 @@ pub fn singular_values_3stage_parallel(
     times.stage1 = t0.elapsed();
 
     let t0 = std::time::Instant::now();
-    let red = reduce_to_bidiagonal_parallel(&mut band, bw, &opts.params, pool);
+    execute_reduction(&ThreadpoolBackend::borrowing(pool), &mut band, bw, &opts.params)
+        .expect("stage-1 output is sized for the reduction");
+    let (diag, superdiag) = band.bidiagonal();
     times.stage2 = t0.elapsed();
 
     let t0 = std::time::Instant::now();
-    let sv = bidiagonal_singular_values_parallel(&red.diag, &red.superdiag, pool);
+    let sv = bidiagonal_singular_values_parallel(&diag, &superdiag, pool);
     times.stage3 = t0.elapsed();
     (sv, times)
 }
 
 /// Singular values of an already-banded matrix (stages 2+3 only) — the
 /// "direct applications" entry point (spectral methods for PDEs, §I).
+/// Runs on the [`SequentialBackend`]; use
+/// [`banded_singular_values_with`] to choose the executor.
 pub fn banded_singular_values<T: Scalar>(
     banded: &Banded<T>,
     bw: usize,
     params: &TuneParams,
-) -> Vec<f64> {
+) -> Vec<f64>
+where
+    Banded<T>: AsBandStorageMut,
+{
+    banded_singular_values_with(&SequentialBackend::new(), banded, bw, params)
+        .expect("banded storage must be sized for the reduction")
+}
+
+/// [`banded_singular_values`] on an explicit [`Backend`] — the pipeline's
+/// backend-selection point. The reduction result is bitwise identical
+/// across native backends; a PJRT backend rounds through f32.
+pub fn banded_singular_values_with<T: Scalar>(
+    backend: &dyn Backend,
+    banded: &Banded<T>,
+    bw: usize,
+    params: &TuneParams,
+) -> Result<Vec<f64>>
+where
+    Banded<T>: AsBandStorageMut,
+{
     let mut work = banded.clone();
-    let red = reduce_to_bidiagonal(&mut work, bw, params);
-    let d: Vec<f64> = red.diag.iter().map(|v| v.to_f64()).collect();
-    let e: Vec<f64> = red.superdiag.iter().map(|v| v.to_f64()).collect();
-    bidiagonal_singular_values(&d, &e)
+    execute_reduction(backend, &mut work, bw, params)?;
+    let (diag, superdiag) = work.bidiagonal();
+    let d: Vec<f64> = diag.iter().map(|v| v.to_f64()).collect();
+    let e: Vec<f64> = superdiag.iter().map(|v| v.to_f64()).collect();
+    Ok(bidiagonal_singular_values(&d, &e))
 }
 
 /// Singular values of *many* already-banded problems through one batched
@@ -127,6 +162,27 @@ pub fn banded_singular_values<T: Scalar>(
 /// and precisions; each result vector is descending, widened to f64.
 ///
 /// `threads == 0` uses all available hardware threads.
+///
+/// # Examples
+///
+/// ```
+/// use banded_svd::batch::BatchInput;
+/// use banded_svd::config::{BatchConfig, TuneParams};
+/// use banded_svd::generate::random_banded;
+/// use banded_svd::pipeline::batch_singular_values;
+/// use banded_svd::util::rng::Xoshiro256;
+///
+/// let params = TuneParams { tpb: 32, tw: 4, max_blocks: 32 };
+/// let mut rng = Xoshiro256::seed_from_u64(0);
+/// let mut inputs: Vec<BatchInput> = vec![
+///     BatchInput::from((random_banded::<f64>(48, 6, 4, &mut rng), 6)),
+///     BatchInput::from((random_banded::<f32>(32, 4, 3, &mut rng), 4)),
+/// ];
+/// let sv = batch_singular_values(&mut inputs, &params, &BatchConfig::default(), 2).unwrap();
+/// assert_eq!(sv.len(), 2);
+/// assert_eq!(sv[0].len(), 48);
+/// assert!(sv[0].windows(2).all(|w| w[0] >= w[1])); // descending
+/// ```
 pub fn batch_singular_values(
     inputs: &mut [BatchInput],
     params: &TuneParams,
@@ -258,6 +314,20 @@ mod tests {
             let want = banded_singular_values(a, bw, &params);
             assert_eq!(got, &want, "bw={bw}");
         }
+    }
+
+    #[test]
+    fn backend_selection_point_is_bitwise_stable() {
+        let mut rng = Xoshiro256::seed_from_u64(38);
+        let (n, bw) = (36, 5);
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 192 };
+        let banded = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let seq = banded_singular_values_with(&SequentialBackend::new(), &banded, bw, &params)
+            .unwrap();
+        let tp = banded_singular_values_with(&ThreadpoolBackend::new(2), &banded, bw, &params)
+            .unwrap();
+        assert_eq!(seq, tp);
+        assert_eq!(seq, banded_singular_values(&banded, bw, &params));
     }
 
     #[test]

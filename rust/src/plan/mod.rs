@@ -68,6 +68,28 @@ pub struct ProblemShape {
 /// [`TaskSlot`]s, stored CSR-style (flat slot array + per-launch end
 /// offsets) so single-problem plans cost one allocation per Vec, not one
 /// per launch.
+///
+/// # Examples
+///
+/// Lower a problem and inspect its launches — the identical value every
+/// [`crate::backend::Backend`] executes and
+/// [`crate::simulator::model::simulate_plan`] costs:
+///
+/// ```
+/// use banded_svd::config::TuneParams;
+/// use banded_svd::plan::LaunchPlan;
+///
+/// let params = TuneParams { tpb: 32, tw: 4, max_blocks: 16 };
+/// let plan = LaunchPlan::for_problem(64, 8, &params);
+///
+/// assert!(plan.num_launches() > 0);
+/// // Every launch is non-empty, and the per-launch counts tile the total.
+/// let summed: usize = (0..plan.num_launches()).map(|i| plan.launch_tasks(i)).sum();
+/// assert_eq!(summed, plan.total_tasks());
+/// // No launch exceeds its metadata bound.
+/// assert!(plan.iter_launches().all(|l| !l.is_empty()));
+/// assert!(plan.max_launch_tasks() <= plan.total_tasks());
+/// ```
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LaunchPlan {
     pub problems: Vec<ProblemShape>,
@@ -91,6 +113,45 @@ pub struct LaunchPlan {
 pub fn slot_bytes(stage: &Stage, count: usize, es: usize) -> u64 {
     let tile_elems = (1 + stage.b + stage.d) * (stage.d + 1);
     4 * (tile_elems as u64) * (count as u64) * (es as u64)
+}
+
+/// Packed-tile footprint of the `count` tasks of `stage` at global cycle
+/// `t`, summed — exactly Σ `task_tile_spec(..).elems()`, but in closed
+/// form: within one launch, anchors strictly decrease with the sweep
+/// index, so only the few tasks whose tile reaches the matrix edge (the
+/// smallest sweeps) are clamped and visited individually; interior tasks
+/// contribute a constant `(b+d+1)²` (or `(b+1)(b+d+1)` for the single
+/// cycle-0 task, whose pivot row sits `b−d` above the anchor).
+fn slot_footprint_elems(stage: &Stage, n: usize, t: usize, count: usize) -> usize {
+    debug_assert!(count > 0);
+    // Recover the live sweep range exactly as `tasks_at_count` does.
+    let k_hi = (t / 3).min(stage.num_sweeps(n) - 1);
+    let k_lo = k_hi + 1 - count;
+    let (b, d) = (stage.b, stage.d);
+    let span = b + d; // unclamped tile reach right of the anchor
+    let mut total = 0usize;
+    let mut interior = count;
+    // Edge-clamped tasks have the largest anchors, i.e. the smallest
+    // sweep indices — walk just those through the exact TileSpec.
+    for k in k_lo..=k_hi {
+        let c = t - 3 * k;
+        if stage.anchor(k, c) + span <= n - 1 {
+            break; // anchors only shrink with k: the rest are interior
+        }
+        let task = stage.task(k, c);
+        total += crate::bulge::cycle::task_tile_spec(stage, &task, n).elems();
+        interior -= 1;
+    }
+    if interior == 0 {
+        return total;
+    }
+    // The cycle-0 task, if present, is the one at k = t/3 (the largest
+    // live sweep); by the break above it is interior here.
+    if t % 3 == 0 && k_hi == t / 3 {
+        total += (b + 1) * (span + 1);
+        interior -= 1;
+    }
+    total + interior * (span + 1) * (span + 1)
 }
 
 impl LaunchPlan {
@@ -287,6 +348,27 @@ impl LaunchPlan {
         self.problems.iter().map(|p| p.tasks).sum()
     }
 
+    /// Packed-footprint elements of launch `i`: the sum over the
+    /// launch's tasks of their packed-tile footprints
+    /// ([`crate::bulge::cycle::task_tile_spec`]). This is the payload a
+    /// tile-streaming backend stages per launch *instead of* whole
+    /// matrices — the quantity the per-backend cost hook
+    /// ([`crate::simulator::model::BackendCostModel::staged_bytes_per_elem`])
+    /// charges, and always a small slice of the full storage. Computed in
+    /// closed form per slot (only edge-clamped tasks are visited
+    /// individually), so streaming-profile tuning stays O(slots), not
+    /// O(tasks).
+    pub fn launch_footprint_elems(&self, i: usize) -> usize {
+        self.launch(i)
+            .iter()
+            .map(|slot| {
+                let shape = &self.problems[slot.problem as usize];
+                let stage = &shape.stages[slot.stage as usize];
+                slot_footprint_elems(stage, shape.n, slot.t as usize, slot.count as usize)
+            })
+            .sum()
+    }
+
     /// Launches carrying tasks from more than one problem.
     pub fn co_scheduled_launches(&self) -> usize {
         self.iter_launches().filter(|l| l.len() > 1).count()
@@ -419,6 +501,36 @@ mod tests {
         assert_eq!(merged.num_launches(), 0);
         assert_eq!(merged.problems.len(), 0);
         assert_eq!(merged.total_tasks(), 0);
+    }
+
+    #[test]
+    fn launch_footprints_match_brute_force_tile_specs() {
+        use crate::bulge::cycle::task_tile_spec;
+        // The closed form must equal Σ task_tile_spec(..).elems() exactly,
+        // including edge-clamped and cycle-0 tasks, across shapes where
+        // launches mix all three task kinds.
+        for (n, bw, tw) in [(96usize, 8usize, 4usize), (40, 6, 5), (24, 2, 1), (77, 9, 3)] {
+            let plan = LaunchPlan::for_problem(n, bw, &params(tw, 16));
+            let full_storage_elems = (bw + 2 * tw + 1) * n; // ld × n
+            for i in 0..plan.num_launches() {
+                let fp = plan.launch_footprint_elems(i);
+                let brute: usize = plan
+                    .launch(i)
+                    .iter()
+                    .map(|s| {
+                        let st = plan.slot_stage(s);
+                        st.tasks_at(n, s.t as usize)
+                            .iter()
+                            .map(|task| task_tile_spec(st, task, n).elems())
+                            .sum::<usize>()
+                    })
+                    .sum();
+                assert_eq!(fp, brute, "n={n} bw={bw} tw={tw} launch {i}");
+                // Non-empty launches stage a non-empty, sub-matrix footprint.
+                assert!(fp > 0, "launch {i}: empty footprint");
+                assert!(fp < full_storage_elems, "launch {i}: footprint not memory-aware");
+            }
+        }
     }
 
     #[test]

@@ -100,10 +100,43 @@ impl PjrtEngine {
         Ok(())
     }
 
+    /// Upload a flat f32 storage buffer (the `(ld × n)` column-major
+    /// artifact layout) to a device-resident buffer. Entry point for the
+    /// plan-driven executor (`crate::backend::PjrtBackend`), which keeps
+    /// one such buffer alive per plan problem.
+    pub(crate) fn upload_flat(&self, storage: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.upload(storage)
+    }
+
+    /// Download a device-resident storage buffer into `out`.
+    pub(crate) fn download_flat(&self, buf: &xla::PjRtBuffer, out: &mut Vec<f32>) -> Result<()> {
+        self.download(buf, out)
+    }
+
+    /// Execute one plan launch — stage `si` at global cycle `t` — on a
+    /// device-resident storage buffer, returning the chained output
+    /// buffer. The storage never round-trips to the host between
+    /// launches; only the 4-byte cycle index is uploaded per call.
+    pub(crate) fn execute_cycle_step(
+        &self,
+        buf: xla::PjRtBuffer,
+        si: usize,
+        t: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = &self.cycle_exes[si];
+        let t_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[t as i32], &[], None)?;
+        Self::first_out(exe.execute_b::<xla::PjRtBuffer>(&[buf, t_buf])?)
+    }
+
     /// Run the full reduction with per-launch executables, keeping the
-    /// storage buffer device-resident; the launch loop is the L3 hot
-    /// path. `on_launch` is invoked once per launch with (stage, t) —
-    /// the coordinator uses it for metrics/batch accounting.
+    /// storage buffer device-resident; `on_launch` is invoked once per
+    /// cycle index with (stage, t), including empty ramp cycles. This is
+    /// the legacy manifest-driven loop — plan-driven execution (which
+    /// skips empty cycles and supports multi-problem plans) lives in
+    /// `crate::backend::PjrtBackend` on top of
+    /// `PjrtEngine::execute_cycle_step`.
     pub fn reduce_per_cycle(
         &self,
         storage: &mut Vec<f32>,

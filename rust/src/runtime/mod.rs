@@ -1,6 +1,22 @@
 //! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
 //! `python/compile/aot.py`) and execute them on the CPU PJRT client via
-//! the `xla` crate. See /opt/xla-example for the wiring this follows.
+//! the `xla` crate (xla-rs).
+//!
+//! # Feature gating and the stub
+//!
+//! The `xla` crate needs an XLA toolchain to build, so it sits behind the
+//! off-by-default `pjrt` cargo feature. Without the feature — the normal
+//! offline build — [`stub`] compiles in its place: a type-for-type mirror
+//! of the subset of xla-rs the engine uses, whose every entry point fails
+//! at run time with a clear "build with `--features pjrt`" error before
+//! any work is attempted. The engine therefore type-checks identically
+//! against both, and `cargo build` / `cargo test` never require XLA. See
+//! the "Backends" section of the top-level README for the selection
+//! matrix and `docs/backends.md` for the execution contract.
+//!
+//! Plan-driven execution lives in [`crate::backend::PjrtBackend`]; this
+//! module owns artifact loading ([`Manifest`]), compilation, and the raw
+//! per-launch / fused execution primitives ([`PjrtEngine`]).
 
 pub mod engine;
 pub mod manifest;
@@ -10,7 +26,9 @@ pub mod stub;
 pub use engine::{PjrtEngine, PjrtRunStats};
 pub use manifest::{Manifest, StageArtifact};
 
-/// Default artifact directory, overridable via BSVD_ARTIFACTS.
+/// Default artifact directory (`artifacts/`), overridable without a
+/// rebuild via the `BSVD_ARTIFACTS` environment variable. Artifacts are
+/// produced by `python/compile/aot.py` (`make artifacts`).
 pub fn artifact_dir() -> std::path::PathBuf {
     std::env::var("BSVD_ARTIFACTS")
         .map(std::path::PathBuf::from)

@@ -10,7 +10,7 @@
 
 use crate::config::TuneParams;
 use crate::simulator::hw::GpuArch;
-use crate::simulator::model::simulate_reduction;
+use crate::simulator::model::{simulate_reduction_for, BackendCostModel};
 
 /// Result of a tuning run.
 #[derive(Clone, Debug)]
@@ -37,12 +37,28 @@ pub fn heuristic_params(arch: &GpuArch, element_bytes: usize, bw: usize) -> Tune
 
 /// Brute-force grid search (the paper's §IV-a method: "3 parameters
 /// across 3–5 values") followed by a local refinement around the best
-/// grid point.
+/// grid point, under the native backend's cost profile.
 pub fn autotune(arch: &GpuArch, element_bytes: usize, n: usize, bw: usize) -> TuneResult {
+    autotune_for(arch, element_bytes, n, bw, &BackendCostModel::native())
+}
+
+/// [`autotune`] for a specific backend: the search costs every candidate
+/// with the backend's [`BackendCostModel`]
+/// ([`crate::backend::Backend::cost_model`]), so per-launch dispatch
+/// overhead and staging traffic shift the optimum exactly as they would
+/// on the real executor (a dispatch-heavy backend tilts toward fewer,
+/// fuller launches — larger `max_blocks`, wider tilewidths).
+pub fn autotune_for(
+    arch: &GpuArch,
+    element_bytes: usize,
+    n: usize,
+    bw: usize,
+    backend: &BackendCostModel,
+) -> TuneResult {
     let mut evaluated = 0;
     let mut eval = |p: TuneParams| -> f64 {
         evaluated += 1;
-        simulate_reduction(arch, element_bytes, n, bw, &p).seconds
+        simulate_reduction_for(arch, element_bytes, n, bw, &p, backend).seconds
     };
 
     let tpb_grid = [8usize, 16, 32, 64, 128];
@@ -100,6 +116,7 @@ pub fn autotune(arch: &GpuArch, element_bytes: usize, n: usize, bw: usize) -> Tu
 mod tests {
     use super::*;
     use crate::simulator::hw;
+    use crate::simulator::model::simulate_reduction;
 
     #[test]
     fn heuristic_matches_paper_cache_line_rule() {
@@ -127,6 +144,26 @@ mod tests {
         assert_eq!(fp32.params.tw, 32, "{fp32:?}");
         let fp64 = autotune(&hw::H100, 8, 65536, 128);
         assert_eq!(fp64.params.tw, 16, "{fp64:?}");
+    }
+
+    #[test]
+    fn backend_aware_tuning_is_no_worse_under_its_own_profile() {
+        // Tuning *for* the PJRT cost profile must beat (or match) reusing
+        // the natively tuned parameters under that same profile — the
+        // point of the per-backend hook.
+        let profile = BackendCostModel::pjrt();
+        let (n, bw) = (16384, 64);
+        let native = autotune(&hw::H100, 4, n, bw);
+        let for_pjrt = autotune_for(&hw::H100, 4, n, bw, &profile);
+        let native_under_pjrt =
+            simulate_reduction_for(&hw::H100, 4, n, bw, &native.params, &profile).seconds;
+        assert!(
+            for_pjrt.modeled_seconds <= native_under_pjrt * 1.0001,
+            "pjrt-tuned {} vs native-tuned-under-pjrt {}",
+            for_pjrt.modeled_seconds,
+            native_under_pjrt
+        );
+        assert!(for_pjrt.evaluated > 50);
     }
 
     #[test]

@@ -21,10 +21,11 @@ pub mod model;
 pub mod occupancy;
 pub mod profile;
 
-pub use autotune::{autotune, heuristic_params, TuneResult};
+pub use autotune::{autotune, autotune_for, heuristic_params, TuneResult};
 pub use hw::{all_archs, arch_by_name, GpuArch};
 pub use model::{
-    launch_cost, simulate_plan, simulate_reduction, simulate_stage, LaunchCost, SimReport,
+    launch_cost, simulate_plan, simulate_plan_for, simulate_reduction, simulate_reduction_for,
+    simulate_stage, BackendCostModel, LaunchCost, SimReport,
 };
 pub use occupancy::{full_occupancy_n, occupancy_fraction, table1};
 pub use profile::{profile_geam_reference, profile_kernel, ProfileMetrics};

@@ -205,8 +205,60 @@ pub fn launch_cost(
     }
 }
 
+/// Backend-specific adjustments to the plan-cost model — the hook
+/// [`crate::backend::Backend::cost_model`] feeds into
+/// [`simulate_plan_for`] / [`crate::simulator::autotune_for`] so the
+/// autotuner tunes for the backend that will actually run (dispatch
+/// overheads and staging traffic differ by orders of magnitude between a
+/// native launch loop and a PJRT call).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BackendCostModel {
+    /// Extra host-side overhead per launch (seconds), paid on top of the
+    /// device launch overhead — the dispatch/FFI cost of issuing one
+    /// launch through the backend.
+    pub dispatch_overhead_s: f64,
+    /// Element size the backend forces, if any (PJRT artifacts execute
+    /// in f32 regardless of the in-memory precision).
+    pub element_size: Option<usize>,
+    /// Host↔device staging bytes charged per packed-footprint element
+    /// per launch ([`LaunchPlan::launch_footprint_elems`]) — zero for
+    /// device-resident backends; positive for tile-streaming execution
+    /// that uploads/downloads each launch's footprint.
+    pub staged_bytes_per_elem: f64,
+}
+
+impl BackendCostModel {
+    /// The native launch loop: no per-launch host overhead beyond the
+    /// modeled device overhead, runs at the storage precision, fully
+    /// resident.
+    pub fn native() -> Self {
+        Self { dispatch_overhead_s: 0.0, element_size: None, staged_bytes_per_elem: 0.0 }
+    }
+
+    /// The PJRT plan executor: one FFI call per launch (≈ µs-scale
+    /// dispatch), f32 artifacts, device-resident buffers (no per-launch
+    /// staging — storage uploads once per problem).
+    pub fn pjrt() -> Self {
+        Self { dispatch_overhead_s: 3e-6, element_size: Some(4), staged_bytes_per_elem: 0.0 }
+    }
+
+    /// A hypothetical tile-streaming PJRT executor that stages each
+    /// launch's packed footprint up and down (8 bytes per f32 element):
+    /// the quantity to beat when deciding whether tile-payload artifacts
+    /// are worth compiling (see `docs/performance-model.md`).
+    pub fn pjrt_tile_streaming() -> Self {
+        Self { dispatch_overhead_s: 3e-6, element_size: Some(4), staged_bytes_per_elem: 8.0 }
+    }
+}
+
+impl Default for BackendCostModel {
+    fn default() -> Self {
+        Self::native()
+    }
+}
+
 /// Cost every launch of a [`LaunchPlan`] — the *same value* the
-/// coordinator/batch engine executes, so the simulator never re-derives a
+/// backends execute, so the simulator never re-derives a
 /// schedule of its own: launch count, tasks per launch, and algorithmic
 /// byte traffic agree with the executor by construction (property-tested
 /// in `rust/tests/plan_consistency.rs`).
@@ -222,6 +274,22 @@ pub fn launch_cost(
 /// plan at its own `es` (the exactness contract is per
 /// `(n, bw, TuneParams)` problem, which is also all the autotuner needs).
 pub fn simulate_plan(arch: &GpuArch, es: usize, plan: &LaunchPlan, tpb: usize) -> SimReport {
+    simulate_plan_for(arch, es, plan, tpb, &BackendCostModel::native())
+}
+
+/// [`simulate_plan`] with a backend's [`BackendCostModel`] applied: the
+/// per-launch dispatch overhead, the forced element size, and (for
+/// tile-streaming backends) per-launch footprint staging at DRAM
+/// bandwidth. `simulate_plan(..)` ≡
+/// `simulate_plan_for(.., &BackendCostModel::native())`.
+pub fn simulate_plan_for(
+    arch: &GpuArch,
+    es: usize,
+    plan: &LaunchPlan,
+    tpb: usize,
+    backend: &BackendCostModel,
+) -> SimReport {
+    let es = backend.element_size.unwrap_or(es);
     let mut report = SimReport::default();
     let overhead = arch.launch_overhead_s();
     let mut cache: std::collections::HashMap<(u32, u32, u32), LaunchCost> =
@@ -244,10 +312,17 @@ pub fn simulate_plan(arch: &GpuArch, es: usize, plan: &LaunchPlan, tpb: usize) -
             report.algo_bytes += slot_bytes(stage, slot.count as usize, es);
             launch_tasks += slot.count as usize;
         }
+        let staging = if backend.staged_bytes_per_elem > 0.0 {
+            let bytes = plan.launch_footprint_elems(li) as f64 * backend.staged_bytes_per_elem;
+            report.dram_bytes += bytes;
+            bytes / arch.dram_peak_bytes_per_s()
+        } else {
+            0.0
+        };
         report.launches += 1;
         report.tasks += launch_tasks;
         report.per_launch.push(launch_tasks as u32);
-        report.seconds += busy + overhead;
+        report.seconds += busy + overhead + backend.dispatch_overhead_s + staging;
     }
     report
 }
@@ -276,6 +351,19 @@ pub fn simulate_reduction(
     params: &TuneParams,
 ) -> SimReport {
     simulate_plan(arch, es, &LaunchPlan::for_problem(n, bw, params), params.tpb)
+}
+
+/// [`simulate_reduction`] under a backend's [`BackendCostModel`] — lower
+/// the identical plan, cost it for the backend that will actually run.
+pub fn simulate_reduction_for(
+    arch: &GpuArch,
+    es: usize,
+    n: usize,
+    bw: usize,
+    params: &TuneParams,
+    backend: &BackendCostModel,
+) -> SimReport {
+    simulate_plan_for(arch, es, &LaunchPlan::for_problem(n, bw, params), params.tpb, backend)
 }
 
 #[cfg(test)]
@@ -399,6 +487,26 @@ mod tests {
         assert_eq!(grouped.launches, naive.launches);
         assert_eq!(grouped.tasks, naive.tasks);
         assert!((grouped.seconds - naive.seconds).abs() < 1e-9 * naive.seconds.max(1e-12));
+    }
+
+    #[test]
+    fn backend_cost_hook_orders_backends_sensibly() {
+        let p = params(32, 4, 16);
+        let plan = LaunchPlan::for_problem(256, 8, &p);
+        let native = simulate_plan_for(&hw::H100, 4, &plan, 32, &BackendCostModel::native());
+        let pjrt = simulate_plan_for(&hw::H100, 4, &plan, 32, &BackendCostModel::pjrt());
+        let streaming =
+            simulate_plan_for(&hw::H100, 4, &plan, 32, &BackendCostModel::pjrt_tile_streaming());
+        // The default entry point is exactly the native profile.
+        assert_eq!(native.seconds, simulate_plan(&hw::H100, 4, &plan, 32).seconds);
+        // Per-launch dispatch overhead and footprint staging stack up.
+        assert!(pjrt.seconds > native.seconds, "{} vs {}", pjrt.seconds, native.seconds);
+        assert!(streaming.seconds > pjrt.seconds);
+        assert!(streaming.dram_bytes > pjrt.dram_bytes);
+        // The PJRT profile forces f32 regardless of storage precision.
+        let native64 = simulate_plan_for(&hw::H100, 8, &plan, 32, &BackendCostModel::native());
+        let pjrt64 = simulate_plan_for(&hw::H100, 8, &plan, 32, &BackendCostModel::pjrt());
+        assert_eq!(pjrt64.algo_bytes * 2, native64.algo_bytes);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use banded_svd::banded::storage::Banded;
 use banded_svd::batch::{BatchCoordinator, BatchInput};
-use banded_svd::config::{Backend, BatchConfig, PackingPolicy, TuneParams};
+use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::random_banded;
 use banded_svd::util::prop::{check, Config};
@@ -79,7 +79,7 @@ fn prop_batched_reduction_is_bitwise_equal_to_independent_runs() {
         {
             let mut solo = a.clone();
             let solo_report = solo_coord
-                .reduce_native(&mut solo, bw, Backend::Parallel)
+                .reduce_native(&mut solo, bw, BackendKind::Threadpool)
                 .map_err(|e| e.to_string())?;
             if solo_report.diag != batched.diag {
                 return Err(format!("problem {i} (n={n}, bw={bw}): diag differs"));
@@ -145,7 +145,7 @@ fn prop_batched_sequential_oracle_agreement() {
         {
             let mut solo = a.clone();
             let solo_report = solo_coord
-                .reduce_native(&mut solo, bw, Backend::Sequential)
+                .reduce_native(&mut solo, bw, BackendKind::Sequential)
                 .map_err(|e| e.to_string())?;
             if solo_report.diag != batched.diag || solo_report.superdiag != batched.superdiag {
                 return Err(format!("n={n}, bw={bw}: batched differs from sequential oracle"));

@@ -5,11 +5,13 @@
 //! artifact directory is absent, so plain `cargo test` stays usable
 //! before the first build).
 
+use banded_svd::backend::{AsBandStorageMut, Backend, PjrtBackend};
 use banded_svd::banded::storage::Banded;
-use banded_svd::config::{Backend, TuneParams};
+use banded_svd::config::{BackendKind, PackingPolicy, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::random_banded;
 use banded_svd::pipeline::{bidiagonal_singular_values, relative_sv_error};
+use banded_svd::plan::LaunchPlan;
 use banded_svd::runtime::{artifact_dir, Manifest, PjrtEngine};
 use banded_svd::util::rng::Xoshiro256;
 
@@ -121,13 +123,87 @@ fn coordinator_pjrt_backends_report_schedule_metrics() {
     let mut rng = Xoshiro256::seed_from_u64(14);
 
     let mut a: Banded<f32> = random_banded::<f32>(n, bw, tw, &mut rng);
-    let r1 = coord.reduce_pjrt(&engine, &mut a, Backend::Pjrt).unwrap();
+    let r1 = coord.reduce_pjrt(&engine, &mut a, BackendKind::Pjrt).unwrap();
     let mut b: Banded<f32> = random_banded::<f32>(n, bw, tw, &mut rng);
-    let r2 = coord.reduce_pjrt(&engine, &mut b, Backend::PjrtFused).unwrap();
+    let r2 = coord.reduce_pjrt(&engine, &mut b, BackendKind::PjrtFused).unwrap();
     assert_eq!(r1.metrics.launches, r2.metrics.launches);
     assert_eq!(r1.metrics.tasks, r2.metrics.tasks);
     assert!(r1.residual_off_band < 1e-4);
     assert!(r2.residual_off_band < 1e-4);
+}
+
+#[test]
+fn plan_driven_backend_matches_the_manifest_driven_loop() {
+    // The PjrtBackend walks the LaunchPlan launch by launch (skipping
+    // empty cycles) through the same per-launch artifacts the legacy
+    // manifest-driven loop executes for every cycle index; the chased
+    // storage must agree.
+    let (n, bw, tw) = (96, 6, 3);
+    if !have_variant(n, bw, tw) {
+        return skip("plan_driven_backend_matches_the_manifest_driven_loop");
+    }
+    let engine = PjrtEngine::load(&artifact_dir(), n, bw, tw).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(15);
+    let a0 = random_banded::<f32>(n, bw, tw, &mut rng);
+
+    let mut legacy = a0.clone();
+    engine.reduce_banded(&mut legacy, false).unwrap();
+
+    let backend = PjrtBackend::with_engine(engine);
+    assert!(backend.requires_artifacts());
+    let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+    let plan = LaunchPlan::for_problem(n, bw, &params);
+    let mut plan_driven = a0.clone();
+    let exec = backend
+        .execute(&plan, &mut [plan_driven.as_band_storage_mut()])
+        .unwrap();
+
+    // Exactly the plan's launches executed — never the empty cycles the
+    // legacy loop paid a PJRT call for.
+    assert_eq!(exec.aggregate.launches, plan.num_launches());
+    assert_eq!(exec.per_problem[0].tasks, plan.total_tasks());
+    assert!(plan_driven.max_off_band(1) < 1e-4);
+    for (x, y) in legacy.data().iter().zip(plan_driven.data().iter()) {
+        assert!((x - y).abs() <= 1e-6, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn plan_driven_backend_executes_merged_batch_plans_multi_buffer() {
+    // The batch capability the ROADMAP was waiting on: a merged plan maps
+    // onto one device-resident buffer per problem, and per-problem
+    // results stay bitwise identical to that problem's solo run (the
+    // merge preserves per-problem launch order).
+    let (n, bw, tw) = (96, 6, 3);
+    if !have_variant(n, bw, tw) {
+        return skip("plan_driven_backend_executes_merged_batch_plans_multi_buffer");
+    }
+    let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
+    let mut rng = Xoshiro256::seed_from_u64(16);
+    let a0 = random_banded::<f32>(n, bw, tw, &mut rng);
+    let b0 = random_banded::<f32>(n, bw, tw, &mut rng);
+    let parts = [
+        LaunchPlan::for_problem(n, bw, &params),
+        LaunchPlan::for_problem(n, bw, &params),
+    ];
+    let merged = LaunchPlan::merge(&parts, 192, PackingPolicy::RoundRobin, 2);
+    assert!(merged.co_scheduled_launches() > 0);
+
+    let backend = PjrtBackend::from_env();
+    let mut a = a0.clone();
+    let mut b = b0.clone();
+    let exec = backend
+        .execute(&merged, &mut [a.as_band_storage_mut(), b.as_band_storage_mut()])
+        .unwrap();
+    assert_eq!(exec.per_problem.len(), 2);
+    assert_eq!(exec.aggregate.launches, merged.num_launches());
+
+    let mut solo_a = a0.clone();
+    backend
+        .execute(&parts[0], &mut [solo_a.as_band_storage_mut()])
+        .unwrap();
+    assert_eq!(a, solo_a, "batched problem 0 diverged from its solo run");
+    assert!(b.max_off_band(1) < 1e-4);
 }
 
 #[test]

@@ -1,10 +1,13 @@
 //! The plan IR's central contract, property-tested: for a given
-//! `(n, bw, TuneParams)` the coordinator and the simulator consume the
+//! `(n, bw, TuneParams)` every backend and the simulator consume the
 //! **identical** `LaunchPlan` value — so predicted and executed schedules
 //! agree launch by launch (launch count, tasks per launch, algorithmic
-//! byte traffic), with no independent schedule re-derivation anywhere.
+//! byte traffic), with no independent schedule re-derivation anywhere —
+//! and every registered backend that can run without artifacts produces
+//! **bitwise-identical** storage to the sequential reference.
 
-use banded_svd::config::{Backend, TuneParams};
+use banded_svd::backend::{execute_reduction, for_kind, SequentialBackend};
+use banded_svd::config::{BackendKind, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::random_banded;
 use banded_svd::plan::LaunchPlan;
@@ -55,10 +58,10 @@ fn prop_simulator_and_executor_consume_the_identical_plan() {
         let mut a = random_banded::<f64>(case.n, case.bw, params.effective_tw(case.bw), &mut rng);
         let mut b = a.clone();
         let run = coord
-            .reduce_native(&mut a, case.bw, Backend::Parallel)
+            .reduce_native(&mut a, case.bw, BackendKind::Threadpool)
             .map_err(|e| e.to_string())?;
         let seq = coord
-            .reduce_native(&mut b, case.bw, Backend::Sequential)
+            .reduce_native(&mut b, case.bw, BackendKind::Sequential)
             .map_err(|e| e.to_string())?;
         let sim = simulate_plan(&hw::H100, es, &costed, params.tpb);
 
@@ -102,6 +105,65 @@ fn prop_simulator_and_executor_consume_the_identical_plan() {
         // And the reduction actually completed.
         if run.residual_off_band != 0.0 {
             return Err("parallel run left off-bidiagonal residual".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_registered_backend_matches_the_sequential_reference() {
+    // The backend contract (docs/backends.md): any registered backend
+    // that can run without pre-compiled artifacts must produce
+    // bitwise-identical storage to the sequential reference on the same
+    // plan, with identical per-launch metrics. PJRT variants (artifact-
+    // dependent) are covered by rust/tests/pjrt_roundtrip.rs instead.
+    let cfg = Config { cases: 24, ..Config::default() };
+    check("backend-equivalence", &cfg, gen_case, |case| {
+        let params = TuneParams { tpb: case.tpb, tw: case.tw, max_blocks: case.max_blocks };
+        let mut rng = Xoshiro256::seed_from_u64(case.seed);
+        let base = random_banded::<f64>(case.n, case.bw, params.effective_tw(case.bw), &mut rng);
+
+        let mut reference = base.clone();
+        let (plan, ref_exec) =
+            execute_reduction(&SequentialBackend::new(), &mut reference, case.bw, &params)
+                .map_err(|e| e.to_string())?;
+        if reference.max_off_band(1) != 0.0 {
+            return Err("sequential reference did not reach bidiagonal form".into());
+        }
+
+        let mut compared = 0;
+        for kind in BackendKind::ALL {
+            let backend = match for_kind(kind, 3) {
+                Ok(b) => b,
+                // pjrt-fused has no plan-executor form by design.
+                Err(_) => continue,
+            };
+            if backend.requires_artifacts() {
+                continue;
+            }
+            let mut work = base.clone();
+            let (_, exec) = execute_reduction(backend.as_ref(), &mut work, case.bw, &params)
+                .map_err(|e| e.to_string())?;
+            if work != reference {
+                return Err(format!("{kind:?}: storage differs from the sequential reference"));
+            }
+            if exec.per_problem[0].per_launch != ref_exec.per_problem[0].per_launch {
+                return Err(format!("{kind:?}: per-launch metrics differ"));
+            }
+            if exec.per_problem[0].bytes != ref_exec.per_problem[0].bytes {
+                return Err(format!("{kind:?}: byte accounting differs"));
+            }
+            if exec.aggregate.launches != plan.num_launches() {
+                return Err(format!(
+                    "{kind:?}: executed {} launches, plan has {}",
+                    exec.aggregate.launches,
+                    plan.num_launches()
+                ));
+            }
+            compared += 1;
+        }
+        if compared < 2 {
+            return Err(format!("only {compared} native backends registered; expected ≥ 2"));
         }
         Ok(())
     });
