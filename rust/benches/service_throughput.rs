@@ -1,0 +1,127 @@
+//! Service throughput sweep: jobs/sec of the reduction service as the
+//! micro-batch window and the number of concurrent submitters grow
+//! (1 → 64), against the solo-submission baseline (window 0, one job per
+//! flush). Dynamic micro-batching pays off exactly where the batch
+//! engine does — merged flushes fill shared launches the solo path
+//! leaves empty — so merged-window throughput must meet or beat solo
+//! throughput once ≥ 8 submitters keep the queue non-empty (the
+//! acceptance line this bench prints).
+//!
+//! Honours BSVD_BENCH_FAST=1 (smaller sweep, fewer jobs).
+
+use banded_svd::banded::storage::Banded;
+use banded_svd::batch::BatchInput;
+use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
+use banded_svd::generate::random_banded;
+use banded_svd::service::Service;
+use banded_svd::util::bench::Table;
+use banded_svd::util::json::{write_experiment, Json};
+use banded_svd::util::rng::Xoshiro256;
+use std::time::{Duration, Instant};
+
+fn run_load(cfg: &ServiceConfig, base: &[Banded<f64>], bw: usize, submitters: usize) -> (f64, f64) {
+    let service = Service::start(cfg.clone()).expect("service start");
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..submitters {
+            let service = &service;
+            scope.spawn(move || {
+                let mut job = s;
+                while job < base.len() {
+                    let input = BatchInput::from((base[job].clone(), bw));
+                    let result = service.submit_wait(input, 0, None).expect("job failed");
+                    assert_eq!(result.sv.len(), base[job].n());
+                    job += submitters;
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = service.stats();
+    assert_eq!(stats.jobs_completed as usize, base.len());
+    (base.len() as f64 / wall, stats.avg_batch_jobs)
+}
+
+fn main() {
+    let fast = std::env::var("BSVD_BENCH_FAST").ok().as_deref() == Some("1");
+    let (n, bw) = (256usize, 16usize);
+    let params = TuneParams { tpb: 32, tw: 8, max_blocks: 192 };
+    let jobs = if fast { 24 } else { 96 };
+    let submitter_counts: &[usize] = if fast { &[1, 8] } else { &[1, 2, 4, 8, 16, 32, 64] };
+    let windows_us: &[u64] = if fast { &[0, 500] } else { &[0, 200, 500, 2000] };
+
+    println!("=== service throughput: jobs/sec vs batch window × submitters ===");
+    println!("(n={n}, bw={bw}, f64, threadpool backend, {jobs} jobs per cell)\n");
+
+    let mut rng = Xoshiro256::seed_from_u64(77);
+    let tw = params.effective_tw(bw);
+    let base: Vec<Banded<f64>> =
+        (0..jobs).map(|_| random_banded::<f64>(n, bw, tw, &mut rng)).collect();
+
+    let cfg = |window_us: u64, max_coresident: usize| ServiceConfig {
+        params,
+        batch: BatchConfig { max_coresident, policy: PackingPolicy::RoundRobin },
+        backend: BackendKind::Threadpool,
+        threads: 0,
+        window: Duration::from_micros(window_us),
+        queue_cap: jobs.max(64),
+        backlog_cap_s: 1e9,
+        cache_cap: 64,
+        arch: "H100",
+    };
+
+    let mut table = Table::new(vec!["submitters", "window µs", "jobs/s", "avg batch", "vs solo"]);
+    let mut arr = Vec::new();
+    let mut merged_beats_solo_at_8 = None;
+    for &submitters in submitter_counts {
+        // Solo baseline: no window, one job per flush — every submission
+        // executes alone, as if each request ran the pipeline directly.
+        let (solo_tput, _) = run_load(&cfg(0, 1), &base, bw, submitters);
+        table.row(vec![
+            submitters.to_string(),
+            "solo".to_string(),
+            format!("{solo_tput:.1}"),
+            "1.00".to_string(),
+            "1.00x".to_string(),
+        ]);
+        for &window_us in windows_us {
+            let (tput, avg_batch) = run_load(&cfg(window_us, 16), &base, bw, submitters);
+            let ratio = tput / solo_tput.max(1e-9);
+            if submitters == 8 && window_us > 0 && merged_beats_solo_at_8.is_none() {
+                merged_beats_solo_at_8 = Some(ratio);
+            }
+            table.row(vec![
+                submitters.to_string(),
+                window_us.to_string(),
+                format!("{tput:.1}"),
+                format!("{avg_batch:.2}"),
+                format!("{ratio:.2}x"),
+            ]);
+            arr.push(
+                Json::obj()
+                    .set("submitters", submitters)
+                    .set("window_us", Json::Int(window_us as i64))
+                    .set("jobs_per_s", tput)
+                    .set("avg_batch_jobs", avg_batch)
+                    .set("vs_solo", ratio),
+            );
+        }
+    }
+    table.print();
+    if let Some(ratio) = merged_beats_solo_at_8 {
+        println!(
+            "\nmerged-window vs solo at 8 submitters: {ratio:.2}x \
+             (acceptance: >= 1.0x once batching engages)"
+        );
+    }
+    let json = Json::obj()
+        .set("experiment", "service_throughput")
+        .set("n", n)
+        .set("bw", bw)
+        .set("jobs", jobs)
+        .set("results", Json::Arr(arr));
+    match write_experiment("service_throughput", &json) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write experiment json: {e}"),
+    }
+}

@@ -1,0 +1,205 @@
+//! JSON-lines client for `banded-svd serve` — the quickstart transcript
+//! in `docs/service.md` and the CI smoke driver.
+//!
+//! Opens one TCP connection per submitter thread, streams a mixed-shape
+//! mixed-precision job load at the service (concurrent connections are
+//! what feed the micro-batcher), sanity-checks every response, then
+//! prints the service's own `stats` view. With `--shutdown` it also
+//! stops the server — the CI smoke job asserts the clean-shutdown path.
+//!
+//! ```text
+//! cargo run --release --example serve_client -- \
+//!     --addr 127.0.0.1:7070 --jobs 16 --submitters 4 --shutdown
+//! ```
+
+use banded_svd::generate::random_banded;
+use banded_svd::service::server::submit_request;
+use banded_svd::util::json::Json;
+use banded_svd::util::rng::Xoshiro256;
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+
+struct Opts {
+    addr: String,
+    jobs: usize,
+    submitters: usize,
+    seed: u64,
+    shutdown: bool,
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    let mut opts = Opts {
+        addr: "127.0.0.1:7070".to_string(),
+        jobs: 8,
+        submitters: 4,
+        seed: 42,
+        shutdown: false,
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        let take = |i: &mut usize| -> Result<String, String> {
+            *i += 1;
+            argv.get(*i).cloned().ok_or_else(|| format!("{} needs a value", argv[*i - 1]))
+        };
+        match argv[i].as_str() {
+            "--addr" => opts.addr = take(&mut i)?,
+            "--jobs" => opts.jobs = take(&mut i)?.parse().map_err(|e| format!("--jobs: {e}"))?,
+            "--submitters" => {
+                opts.submitters = take(&mut i)?.parse().map_err(|e| format!("--submitters: {e}"))?
+            }
+            "--seed" => opts.seed = take(&mut i)?.parse().map_err(|e| format!("--seed: {e}"))?,
+            "--shutdown" => opts.shutdown = true,
+            other => {
+                return Err(format!(
+                    "unknown option {other:?} \
+                     (--addr --jobs --submitters --seed --shutdown)"
+                ))
+            }
+        }
+        i += 1;
+    }
+    opts.jobs = opts.jobs.max(1);
+    opts.submitters = opts.submitters.clamp(1, opts.jobs);
+    Ok(opts)
+}
+
+/// One round-trip on an open connection.
+fn roundtrip(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    line: &str,
+) -> Result<Json, String> {
+    writeln!(writer, "{line}").map_err(|e| format!("send: {e}"))?;
+    writer.flush().map_err(|e| format!("flush: {e}"))?;
+    let mut response = String::new();
+    reader.read_line(&mut response).map_err(|e| format!("recv: {e}"))?;
+    if response.is_empty() {
+        return Err("server closed the connection".into());
+    }
+    Json::parse(response.trim_end()).map_err(|e| format!("bad response: {e}"))
+}
+
+fn connect(addr: &str) -> Result<(BufReader<TcpStream>, TcpStream), String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    Ok((reader, stream))
+}
+
+/// The cycling job mix: (n, bw, precision).
+const SHAPES: [(usize, usize, &str); 4] =
+    [(96, 8, "fp64"), (64, 6, "fp32"), (48, 5, "fp64"), (80, 10, "fp32")];
+
+fn submit_line(job: usize, seed: u64) -> String {
+    let (n, bw, precision) = SHAPES[job % SHAPES.len()];
+    let mut rng = Xoshiro256::seed_from_u64(seed.wrapping_add(job as u64));
+    match precision {
+        "fp32" => submit_request(&random_banded::<f32>(n, bw, 1, &mut rng), bw, 0),
+        _ => submit_request(&random_banded::<f64>(n, bw, 1, &mut rng), bw, 0),
+    }
+}
+
+fn check_submit_response(response: &Json) -> Result<(usize, usize), String> {
+    if response.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(format!("rejected: {}", response.render()));
+    }
+    let n = response.get("n").and_then(Json::as_usize).ok_or("missing n")?;
+    let sv = response.get("sv").and_then(Json::as_array).ok_or("missing sv")?;
+    if sv.len() != n {
+        return Err(format!("{} singular values for n={n}", sv.len()));
+    }
+    let values: Vec<f64> = sv.iter().filter_map(Json::as_f64).collect();
+    if values.len() != n || values.windows(2).any(|w| w[0] < w[1]) {
+        return Err("singular values not descending".into());
+    }
+    let batch_jobs =
+        response.get("batch_jobs").and_then(Json::as_usize).ok_or("missing batch_jobs")?;
+    Ok((n, batch_jobs))
+}
+
+fn main() {
+    let opts = match parse_opts() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let failures = std::sync::atomic::AtomicUsize::new(0);
+    let co_scheduled = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for submitter in 0..opts.submitters {
+            let (opts, failures, co_scheduled) = (&opts, &failures, &co_scheduled);
+            scope.spawn(move || {
+                let (mut reader, mut writer) = match connect(&opts.addr) {
+                    Ok(pair) => pair,
+                    Err(e) => {
+                        eprintln!("submitter {submitter}: {e}");
+                        failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        return;
+                    }
+                };
+                let mut job = submitter;
+                while job < opts.jobs {
+                    let line = submit_line(job, opts.seed);
+                    match roundtrip(&mut reader, &mut writer, &line)
+                        .and_then(|r| check_submit_response(&r))
+                    {
+                        Ok((n, batch_jobs)) => {
+                            println!("job {job}: n={n} ok (batch of {batch_jobs})");
+                            if batch_jobs > 1 {
+                                co_scheduled.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("job {job}: {e}");
+                            failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                    job += opts.submitters;
+                }
+            });
+        }
+    });
+    let failed = failures.load(std::sync::atomic::Ordering::Relaxed);
+
+    // One control connection for stats (and the optional shutdown).
+    let code = match connect(&opts.addr) {
+        Ok((mut reader, mut writer)) => {
+            match roundtrip(&mut reader, &mut writer, "{\"verb\":\"stats\"}") {
+                Ok(stats) => println!("stats: {}", stats.render()),
+                Err(e) => eprintln!("stats: {e}"),
+            }
+            if opts.shutdown {
+                match roundtrip(&mut reader, &mut writer, "{\"verb\":\"shutdown\"}") {
+                    Ok(ack) if ack.get("ok").and_then(Json::as_bool) == Some(true) => {
+                        println!("server acknowledged shutdown");
+                        0
+                    }
+                    Ok(ack) => {
+                        eprintln!("shutdown refused: {}", ack.render());
+                        1
+                    }
+                    Err(e) => {
+                        eprintln!("shutdown: {e}");
+                        1
+                    }
+                }
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("control connection: {e}");
+            1
+        }
+    };
+    println!(
+        "{} jobs over {} submitters: {} failed, {} co-scheduled",
+        opts.jobs,
+        opts.submitters,
+        failed,
+        co_scheduled.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    std::process::exit(if failed == 0 { code } else { 1 });
+}

@@ -286,6 +286,25 @@ pub fn for_kind(kind: BackendKind, threads: usize) -> Result<Box<dyn Backend>> {
     }
 }
 
+/// The [`BackendCostModel`] the backend constructed for `kind` would
+/// report, *without constructing it* — what the reduction service prices
+/// admission with before any executor exists on the submitting thread
+/// (the executor itself lives on the batcher worker). Kept in lockstep
+/// with each backend's [`Backend::cost_model`] by the
+/// `kind_cost_models_match_constructed_backends` test; rejects
+/// [`BackendKind::PjrtFused`] for the same reason [`for_kind`] does.
+pub fn cost_model_for(kind: BackendKind) -> Result<BackendCostModel> {
+    match kind {
+        BackendKind::Sequential | BackendKind::Threadpool => Ok(BackendCostModel::native()),
+        BackendKind::Pjrt => Ok(BackendCostModel::pjrt()),
+        BackendKind::PjrtFused => Err(Error::Config(
+            "pjrt-fused executes whole-stage artifacts (one call per stage), not a \
+             launch plan; use `Coordinator::reduce_pjrt` or the plain `pjrt` backend"
+                .into(),
+        )),
+    }
+}
+
 /// Lower the plan for a bandwidth-`bw` problem under `params` and execute
 /// it on `backend` — the single-problem driver shared by the coordinator
 /// and the pipeline. Returns the executed plan alongside the execution so
@@ -323,6 +342,17 @@ mod tests {
                     assert_eq!(b.name(), kind.name());
                 }
                 Err(_) => assert_eq!(kind, BackendKind::PjrtFused),
+            }
+        }
+    }
+
+    #[test]
+    fn kind_cost_models_match_constructed_backends() {
+        for kind in BackendKind::ALL {
+            match (cost_model_for(kind), for_kind(kind, 1)) {
+                (Ok(model), Ok(backend)) => assert_eq!(model, backend.cost_model(), "{kind:?}"),
+                (Err(_), Err(_)) => assert_eq!(kind, BackendKind::PjrtFused),
+                (model, _) => panic!("{kind:?}: cost_model_for/for_kind disagree ({model:?})"),
             }
         }
     }

@@ -23,6 +23,7 @@ use crate::config::{BatchConfig, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::Result;
 use crate::plan::{slot_bytes, LaunchPlan, ProblemShape};
+use crate::service::cache::PlanCache;
 use crate::scalar::Scalar;
 use crate::util::threadpool::{ThreadPool, WorkerLocal};
 use std::any::{Any, TypeId};
@@ -270,23 +271,28 @@ pub struct BatchReport {
 }
 
 impl BatchReport {
-    /// Problems reduced per second of wall-clock.
+    /// Problems reduced per second of wall-clock. Platforms with coarse
+    /// monotone clocks can report a zero wall for a tiny batch, so the
+    /// elapsed time is clamped to one nanosecond — the rate is finite
+    /// and positive whenever any problem ran, on every platform (the
+    /// `shared_launches_actually_co_schedule` assertion relies on it).
     pub fn throughput(&self) -> f64 {
-        let secs = self.wall.as_secs_f64();
-        if secs > 0.0 {
-            self.problems.len() as f64 / secs
-        } else {
-            0.0
+        if self.problems.is_empty() {
+            return 0.0;
         }
+        self.problems.len() as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 }
 
-/// The batch coordinator: tuning parameters, batch knobs, and the
-/// [`Backend`] that executes the merged plan.
+/// The batch coordinator: tuning parameters, batch knobs, the
+/// [`Backend`] that executes the merged plan, and the [`PlanCache`] its
+/// plans route through (shared with `banded-svd serve` when the caller
+/// passes the service's cache — one lowering path for both).
 pub struct BatchCoordinator {
     pub params: TuneParams,
     pub cfg: BatchConfig,
     backend: Box<dyn Backend>,
+    cache: PlanCache,
 }
 
 impl BatchCoordinator {
@@ -300,28 +306,42 @@ impl BatchCoordinator {
     /// execute a merged plan (the PJRT backend maps each plan problem
     /// onto its own device-resident buffer).
     pub fn with_backend(params: TuneParams, cfg: BatchConfig, backend: Box<dyn Backend>) -> Self {
-        Self { params, cfg, backend }
+        Self { params, cfg, backend, cache: PlanCache::default() }
+    }
+
+    /// Share an existing plan cache (e.g. the reduction service's) so
+    /// repeated shapes are lowered once across both subsystems.
+    pub fn with_plan_cache(mut self, cache: PlanCache) -> Self {
+        self.cache = cache;
+        self
     }
 
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()
     }
 
+    /// The coordinator's plan cache (hit/miss counters included).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
     /// Validate the batch and lay out its packing plan — including the
     /// merged [`LaunchPlan`] that [`BatchCoordinator::run`] executes —
-    /// without touching any matrix data.
+    /// without touching any matrix data. Lowerings and the merge skeleton
+    /// come from the plan cache: calling this twice for the same batch
+    /// signature lowers nothing the second time.
     pub fn plan(&self, inputs: &[BatchInput]) -> Result<BatchPlan> {
-        BatchPlan::new(inputs, &self.params, &self.cfg)
+        BatchPlan::new_cached(inputs, &self.params, &self.cfg, &self.cache)
     }
 
     /// Reduce every problem to bidiagonal form in place, executing the
     /// merged shared-launch plan on the selected backend.
     pub fn run(&self, inputs: &mut [BatchInput]) -> Result<BatchReport> {
-        let plan = BatchPlan::new(inputs, &self.params, &self.cfg)?;
+        let plan = self.plan(inputs)?;
         let t_start = Instant::now();
         let mut bands: Vec<BandStorageMut<'_>> =
             inputs.iter_mut().map(|input| input.as_band_storage_mut()).collect();
-        let exec = self.backend.execute(&plan.merged, &mut bands)?;
+        let exec = self.backend.execute(plan.merged.as_ref(), &mut bands)?;
         drop(bands);
         let wall = t_start.elapsed();
         let mut aggregate = exec.aggregate;
@@ -484,6 +504,58 @@ mod tests {
         );
         let mut inputs = vec![BatchInput::from((Banded::<f64>::zeros(32, 9, 1), 8))];
         assert!(coord.run(&mut inputs).is_err());
+    }
+
+    #[test]
+    fn repeated_planning_hits_the_plan_cache() {
+        let cfg = BatchConfig { max_coresident: 8, policy: PackingPolicy::RoundRobin };
+        let coord = BatchCoordinator::new(params(), cfg, 2);
+        let inputs = mixed_batch(61);
+        coord.plan(&inputs).unwrap();
+        let cold = coord.plan_cache().stats();
+        assert_eq!(cold.plan_hits, 0);
+        assert_eq!(cold.plan_misses, inputs.len() as u64);
+        assert_eq!(cold.merge_misses, 1);
+        // Same batch signature again: every lowering and the merge
+        // skeleton come from cache.
+        coord.plan(&inputs).unwrap();
+        let warm = coord.plan_cache().stats();
+        assert_eq!(warm.plan_hits, inputs.len() as u64);
+        assert_eq!(warm.plan_misses, cold.plan_misses);
+        assert_eq!(warm.merge_hits, 1);
+        assert_eq!(warm.merge_misses, 1);
+        assert!(warm.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn shared_cache_spans_coordinators() {
+        // The serve path hands its cache to a BatchCoordinator this way:
+        // lowerings from one consumer are hits for the other.
+        let cache = PlanCache::new(16);
+        let cfg = BatchConfig { max_coresident: 8, policy: PackingPolicy::RoundRobin };
+        let a = BatchCoordinator::new(params(), cfg, 1).with_plan_cache(cache.clone());
+        let b = BatchCoordinator::new(params(), cfg, 1).with_plan_cache(cache.clone());
+        let inputs = mixed_batch(81);
+        a.plan(&inputs).unwrap();
+        b.plan(&inputs).unwrap();
+        let stats = cache.stats();
+        assert_eq!(stats.plan_hits, inputs.len() as u64);
+        assert_eq!(stats.plan_misses, inputs.len() as u64);
+        assert_eq!((stats.merge_hits, stats.merge_misses), (1, 1));
+    }
+
+    #[test]
+    fn run_reuses_the_plans_that_planning_lowered() {
+        let cfg = BatchConfig { max_coresident: 8, policy: PackingPolicy::GreedyFill };
+        let coord = BatchCoordinator::new(params(), cfg, 2);
+        let mut inputs = mixed_batch(71);
+        coord.plan(&inputs).unwrap();
+        let planned = coord.plan_cache().stats();
+        coord.run(&mut inputs).unwrap();
+        let ran = coord.plan_cache().stats();
+        assert_eq!(ran.plan_misses, planned.plan_misses, "run re-lowered a plan");
+        assert_eq!(ran.merge_misses, planned.merge_misses, "run re-merged the skeleton");
+        assert_eq!(ran.plan_hits, planned.plan_hits + inputs.len() as u64);
     }
 
     #[test]

@@ -81,6 +81,16 @@ impl BatchInput {
         }
     }
 
+    /// Element size in bytes of the stored precision (traffic accounting
+    /// and plan-cache keys).
+    pub fn element_bytes(&self) -> usize {
+        match self {
+            BatchInput::F64 { .. } => <f64 as Scalar>::BYTES,
+            BatchInput::F32 { .. } => <f32 as Scalar>::BYTES,
+            BatchInput::F16 { .. } => <F16 as Scalar>::BYTES,
+        }
+    }
+
     /// Main diagonal and first superdiagonal, widened to f64.
     pub fn bidiagonal_f64(&self) -> (Vec<f64>, Vec<f64>) {
         fn widen<T: Scalar>(a: &Banded<T>) -> (Vec<f64>, Vec<f64>) {

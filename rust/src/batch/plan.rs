@@ -4,12 +4,19 @@
 //! merged plan is the exact value the engine executes. Computed up front
 //! (all counts come from the closed-form schedule, no matrix data is
 //! touched) so callers can size a batch before committing to it.
+//!
+//! Lowering and merging are deterministic, so both route through the
+//! service plan cache ([`PlanCache`]) — one lowering path shared by
+//! `banded-svd batch` and `banded-svd serve`; repeated shapes and
+//! repeated batch signatures are cache hits, not re-lowerings.
 
 use crate::batch::BatchInput;
 use crate::bulge::schedule::Stage;
 use crate::config::{BatchConfig, PackingPolicy, TuneParams};
 use crate::error::Result;
 use crate::plan::LaunchPlan;
+use crate::service::cache::{PlanCache, PlanKey};
+use std::sync::Arc;
 
 /// One problem's slice of the plan. All shape data lives in the
 /// problem's own single-problem [`LaunchPlan`] (`part`); the accessors
@@ -20,8 +27,9 @@ pub struct ProblemPlan {
     pub index: usize,
     pub precision: &'static str,
     /// The problem's own single-problem launch plan (merge input; also
-    /// sizes the runner's workspaces).
-    pub part: LaunchPlan,
+    /// sizes the runner's workspaces). Shared with the plan cache, hence
+    /// the `Arc` — a cache hit hands out the same lowering.
+    pub part: Arc<LaunchPlan>,
 }
 
 impl ProblemPlan {
@@ -62,25 +70,43 @@ pub struct BatchPlan {
     pub max_coresident: usize,
     pub problems: Vec<ProblemPlan>,
     /// The merged shared-launch plan the engine executes — per-problem
-    /// streams interleaved under `capacity` by `policy`.
-    pub merged: LaunchPlan,
+    /// streams interleaved under `capacity` by `policy`. Shared with the
+    /// plan cache's merge-skeleton store.
+    pub merged: Arc<LaunchPlan>,
 }
 
 impl BatchPlan {
     /// Validate every input, lower its schedule, and merge the streams.
+    /// Uses a batch-private cache; [`crate::batch::BatchCoordinator`]
+    /// routes through its own shared [`PlanCache`] instead
+    /// ([`BatchPlan::new_cached`]) so repeated calls reuse lowerings.
     pub fn new(inputs: &[BatchInput], params: &TuneParams, cfg: &BatchConfig) -> Result<Self> {
+        Self::new_cached(inputs, params, cfg, &PlanCache::new(inputs.len().max(1)))
+    }
+
+    /// [`BatchPlan::new`] through an explicit plan cache: every
+    /// single-problem lowering is a [`PlanCache::plan_for`] lookup and
+    /// the merge a [`PlanCache::merged_for`] lookup, so a repeated batch
+    /// signature re-lowers nothing.
+    pub fn new_cached(
+        inputs: &[BatchInput],
+        params: &TuneParams,
+        cfg: &BatchConfig,
+        cache: &PlanCache,
+    ) -> Result<Self> {
         let capacity = params.capacity();
         let max_coresident = cfg.max_coresident.max(1);
         let mut precisions = Vec::with_capacity(inputs.len());
-        let mut parts = Vec::with_capacity(inputs.len());
+        let mut keys = Vec::with_capacity(inputs.len());
+        let mut parts: Vec<Arc<LaunchPlan>> = Vec::with_capacity(inputs.len());
         for input in inputs {
             let (n, bw, _tw) = input.validate(params)?;
             precisions.push(input.precision());
-            parts.push(LaunchPlan::for_problem(n, bw, params));
+            let key = PlanKey { n, bw, es: input.element_bytes(), params: *params };
+            keys.push(key);
+            parts.push(cache.plan_for(key));
         }
-        let merged = LaunchPlan::merge(&parts, capacity, cfg.policy, max_coresident);
-        // Merge done: move (not clone) each single-problem plan into its
-        // ProblemPlan slice.
+        let merged = cache.merged_for(&keys, &parts, capacity, cfg.policy, max_coresident);
         let problems = precisions
             .into_iter()
             .zip(parts)
@@ -164,6 +190,30 @@ mod tests {
         let params = TuneParams { tpb: 32, tw: 8, max_blocks: 16 };
         let bad = vec![BatchInput::from((Banded::<f64>::zeros(32, 9, 1), 8))];
         assert!(BatchPlan::new(&bad, &params, &BatchConfig::default()).is_err());
+    }
+
+    #[test]
+    fn cached_planning_reuses_lowered_parts() {
+        let params = TuneParams { tpb: 32, tw: 3, max_blocks: 16 };
+        let cache = PlanCache::new(8);
+        let inputs = inputs();
+        let first = BatchPlan::new_cached(&inputs, &params, &BatchConfig::default(), &cache)
+            .unwrap();
+        let second = BatchPlan::new_cached(&inputs, &params, &BatchConfig::default(), &cache)
+            .unwrap();
+        // Same Arc'd lowerings and merge skeleton, not re-lowered copies.
+        for (a, b) in first.problems.iter().zip(second.problems.iter()) {
+            assert!(Arc::ptr_eq(&a.part, &b.part), "problem {}", a.index);
+        }
+        assert!(Arc::ptr_eq(&first.merged, &second.merged));
+        let stats = cache.stats();
+        assert_eq!(stats.plan_misses, 2);
+        assert_eq!(stats.plan_hits, 2);
+        assert_eq!(stats.merge_misses, 1);
+        assert_eq!(stats.merge_hits, 1);
+        // And the uncached constructor produces the identical plan value.
+        let direct = BatchPlan::new(&inputs, &params, &BatchConfig::default()).unwrap();
+        assert_eq!(*direct.merged, *first.merged);
     }
 
     #[test]

@@ -1,19 +1,24 @@
-//! Tunable parameters (paper §III-C), per-architecture heuristics, and
-//! the backend selector.
+//! Tunable parameters (paper §III-C), per-architecture heuristics, the
+//! backend selector, and the serving-subsystem knobs.
 //!
 //! # Environment knobs
 //!
-//! Two settings can be changed without a rebuild:
+//! These settings can be changed without a rebuild:
 //!
 //! | Variable | Default | Effect |
 //! | --- | --- | --- |
 //! | `BSVD_PACKED_SPAN_MIN` | `48` | Minimum stage span `b + d` routed through the packed-tile kernel path ([`crate::bulge::cycle::PACKED_SPAN_MIN`]); `0` forces every stage packed, a huge value forces in-place. Read once, on first use. |
 //! | `BSVD_ARTIFACTS` | `artifacts` | Directory the PJRT backends load AOT-compiled HLO artifacts from ([`crate::runtime::artifact_dir`]). Read on every resolution, so it can be repointed between engine loads. |
+//! | `BSVD_SERVICE_WINDOW_US` | `500` | Micro-batching window of the reduction service ([`ServiceConfig::window`]), in microseconds: how long the batcher holds the first pending job open for co-scheduling before flushing. Read when a [`ServiceConfig`] is constructed with `Default`. |
+//! | `BSVD_SERVICE_QUEUE_CAP` | `1024` | Maximum pending jobs in the service submission queue ([`ServiceConfig::queue_cap`]); submissions beyond it are rejected at admission. Read when a [`ServiceConfig`] is constructed with `Default`. |
 //!
-//! Both paths are bitwise-identical in results — the knobs trade
-//! performance, never numerics (see `docs/performance-model.md`).
+//! The kernel-path knobs are bitwise-identical in results — they trade
+//! performance, never numerics (see `docs/performance-model.md`). The
+//! service knobs shape batching latency and admission, never per-job
+//! numerics (see `docs/service.md`).
 
 use crate::error::{Error, Result};
+use std::time::Duration;
 
 /// The three hyperparameters the paper exposes.
 ///
@@ -22,7 +27,7 @@ use crate::error::{Error, Result};
 ///   matches a full cache line (32 for FP32, 16 for FP64 on 128-B lines).
 /// - `max_blocks` — concurrently active blocks per execution unit;
 ///   excess bulge tasks are loop-unrolled into the same block.
-#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
 pub struct TuneParams {
     pub tpb: usize,
     pub tw: usize,
@@ -74,7 +79,7 @@ impl Default for TuneParams {
 /// How the batch engine packs per-problem launches into shared launches
 /// (paper §III analogy: co-scheduling thread blocks from independent
 /// grids under the joint MaxBlocks capacity).
-#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq, Hash)]
 pub enum PackingPolicy {
     /// Visit live problems in rotating order, packing each problem's next
     /// launch while it fits. Fair: every problem periodically goes first.
@@ -133,6 +138,104 @@ impl BatchConfig {
 impl Default for BatchConfig {
     fn default() -> Self {
         Self { max_coresident: 64, policy: PackingPolicy::RoundRobin }
+    }
+}
+
+/// Knobs of the reduction service ([`crate::service::Service`]): the
+/// long-running subsystem that accepts a *stream* of reduction jobs,
+/// coalesces them into merged [`crate::plan::LaunchPlan`]s, and executes
+/// them on one backend worker.
+///
+/// Two knobs also have environment overrides picked up by `Default`
+/// (`BSVD_SERVICE_WINDOW_US`, `BSVD_SERVICE_QUEUE_CAP` — see the module
+/// docs); explicit field assignment always wins over the environment.
+///
+/// # Examples
+///
+/// ```
+/// use banded_svd::config::ServiceConfig;
+///
+/// let cfg = ServiceConfig::default();
+/// assert!(cfg.queue_cap >= 1);
+/// assert!(cfg.validate().is_ok());
+/// // Admission must be able to hold at least one job.
+/// let bad = ServiceConfig { queue_cap: 0, ..ServiceConfig::default() };
+/// assert!(bad.validate().is_err());
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Bulge-chasing tuning shared by every job (plans are keyed on it in
+    /// the service plan cache).
+    pub params: TuneParams,
+    /// Micro-batching shape: `max_coresident` is the flush size trigger
+    /// and the merge admission window; `policy` packs the shared launches.
+    pub batch: BatchConfig,
+    /// Executor the batcher worker runs merged plans on.
+    pub backend: BackendKind,
+    /// Worker threads for a threadpool backend (`0` = all cores).
+    pub threads: usize,
+    /// Micro-batching window: how long the batcher holds the first
+    /// pending job open for co-scheduling before flushing a partial
+    /// batch. `Duration::ZERO` flushes immediately (solo submission).
+    pub window: Duration,
+    /// Maximum pending jobs; submissions beyond it are rejected.
+    pub queue_cap: usize,
+    /// Admission control: a submission is rejected while the modeled
+    /// backlog (sum of per-job costs priced by
+    /// [`crate::simulator::simulate_plan_for`] under the backend's
+    /// [`crate::simulator::BackendCostModel`]) exceeds this many seconds.
+    pub backlog_cap_s: f64,
+    /// Entries per store of the plan/autotune LRU cache.
+    pub cache_cap: usize,
+    /// Architecture name ([`crate::simulator::arch_by_name`]) whose cost
+    /// model prices admission.
+    pub arch: &'static str,
+}
+
+impl ServiceConfig {
+    /// Reject configurations the service cannot run with.
+    pub fn validate(&self) -> Result<()> {
+        if self.queue_cap == 0 {
+            return Err(Error::Config("service queue_cap must be positive".into()));
+        }
+        if self.cache_cap == 0 {
+            return Err(Error::Config("service cache_cap must be positive".into()));
+        }
+        if !self.backlog_cap_s.is_finite() || self.backlog_cap_s <= 0.0 {
+            return Err(Error::Config(format!(
+                "service backlog_cap_s must be positive and finite (got {})",
+                self.backlog_cap_s
+            )));
+        }
+        if self.batch.max_coresident == 0 {
+            return Err(Error::Config("service max_coresident must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Default entries per store of the service plan/autotune cache — the
+/// single source for [`ServiceConfig::cache_cap`] and
+/// [`crate::service::PlanCache`]'s `Default`.
+pub const DEFAULT_CACHE_CAP: usize = 256;
+
+fn env_usize(var: &str, default: usize) -> usize {
+    std::env::var(var).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            params: TuneParams::default(),
+            batch: BatchConfig { max_coresident: 16, policy: PackingPolicy::RoundRobin },
+            backend: BackendKind::Threadpool,
+            threads: 0,
+            window: Duration::from_micros(env_usize("BSVD_SERVICE_WINDOW_US", 500) as u64),
+            queue_cap: env_usize("BSVD_SERVICE_QUEUE_CAP", 1024),
+            backlog_cap_s: 60.0,
+            cache_cap: DEFAULT_CACHE_CAP,
+            arch: "H100",
+        }
     }
 }
 
@@ -258,6 +361,35 @@ mod tests {
         assert_eq!(cfg.max_coresident, 8);
         assert_eq!(BatchConfig::default().policy, PackingPolicy::RoundRobin);
         assert!(BatchConfig::default().max_coresident >= 1);
+    }
+
+    #[test]
+    fn service_config_validates() {
+        let cfg = ServiceConfig::default();
+        assert!(cfg.validate().is_ok());
+        assert!(cfg.queue_cap >= 1 && cfg.cache_cap >= 1);
+        assert!(ServiceConfig { queue_cap: 0, ..ServiceConfig::default() }.validate().is_err());
+        assert!(ServiceConfig { cache_cap: 0, ..ServiceConfig::default() }.validate().is_err());
+        assert!(ServiceConfig { backlog_cap_s: 0.0, ..ServiceConfig::default() }
+            .validate()
+            .is_err());
+        assert!(ServiceConfig { backlog_cap_s: f64::NAN, ..ServiceConfig::default() }
+            .validate()
+            .is_err());
+        let bad_batch = ServiceConfig {
+            batch: BatchConfig { max_coresident: 0, policy: PackingPolicy::RoundRobin },
+            ..ServiceConfig::default()
+        };
+        assert!(bad_batch.validate().is_err());
+    }
+
+    #[test]
+    fn tune_params_are_hashable_cache_keys() {
+        use std::collections::HashMap;
+        let mut m: HashMap<TuneParams, usize> = HashMap::new();
+        m.insert(TuneParams { tpb: 32, tw: 8, max_blocks: 192 }, 1);
+        assert_eq!(m.get(&TuneParams { tpb: 32, tw: 8, max_blocks: 192 }), Some(&1));
+        assert_eq!(m.get(&TuneParams { tpb: 32, tw: 4, max_blocks: 192 }), None);
     }
 
     #[test]

@@ -9,6 +9,9 @@ pub enum Error {
     ArtifactMissing { path: String, variant: String },
     Pjrt(String),
     Numerical(String),
+    /// A reduction-service job failed (backend error on the worker,
+    /// expired deadline, or shutdown before execution).
+    Service(String),
     Io(std::io::Error),
 }
 
@@ -22,6 +25,7 @@ impl fmt::Display for Error {
             ),
             Error::Pjrt(msg) => write!(f, "PJRT runtime error: {msg}"),
             Error::Numerical(msg) => write!(f, "numerical failure: {msg}"),
+            Error::Service(msg) => write!(f, "service error: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -72,6 +76,7 @@ mod tests {
         assert!(e.to_string().contains("a/b.txt"));
         assert!(e.to_string().contains("n=8"));
         assert!(Error::Pjrt("boom".into()).to_string().starts_with("PJRT"));
+        assert_eq!(Error::Service("queue full".into()).to_string(), "service error: queue full");
     }
 
     #[test]

@@ -113,6 +113,35 @@
 //!     report.metrics.occupancy_ratio()
 //! );
 //! ```
+//!
+//! ## Serving a stream of reductions
+//!
+//! Batching answers "reduce these K problems"; production traffic is a
+//! *stream* — jobs arriving one at a time, each wanting an answer soon.
+//! The [`service`] subsystem runs the batch engine as a long-lived
+//! system: an admission-controlled queue (priced by the simulator under
+//! the backend's cost model), a dynamic micro-batcher that coalesces
+//! pending jobs into merged plans (size or time-window flush), and a
+//! bounded LRU cache over plan lowering, merge skeletons, and autotune
+//! results — fronted in-process by [`service::Service`] and over TCP
+//! JSON-lines by [`service::Server`] (`banded-svd serve`). Served
+//! results are bitwise identical to the direct pipeline on the same
+//! backend.
+//!
+//! ```no_run
+//! use banded_svd::prelude::*;
+//!
+//! let service = Service::start(ServiceConfig::default()).unwrap();
+//! let mut rng = Xoshiro256::seed_from_u64(0);
+//! let a = random_banded::<f64>(512, 16, 16, &mut rng);
+//! let result = service.submit_wait(BatchInput::from((a, 16)), 0, None).unwrap();
+//! println!(
+//!     "σ_max = {} ({} jobs co-scheduled, plan-cache hit rate {:.2})",
+//!     result.sv[0],
+//!     result.batch_jobs,
+//!     service.stats().cache.hit_rate()
+//! );
+//! ```
 
 pub mod backend;
 pub mod banded;
@@ -128,6 +157,7 @@ pub mod pipeline;
 pub mod plan;
 pub mod runtime;
 pub mod scalar;
+pub mod service;
 pub mod simulator;
 pub mod util;
 
@@ -143,7 +173,7 @@ pub mod prelude {
     pub use crate::bulge::{
         reduce_to_bidiagonal, reduce_to_bidiagonal_parallel, stage_plan, Stage,
     };
-    pub use crate::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
+    pub use crate::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
     pub use crate::error::{Error, Result};
     pub use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
     pub use crate::pipeline::{
@@ -152,6 +182,7 @@ pub mod prelude {
     };
     pub use crate::plan::{LaunchPlan, TaskSlot};
     pub use crate::scalar::{Scalar, F16};
+    pub use crate::service::{JobResult, JobTicket, PlanCache, Server, Service, ServiceStats};
     pub use crate::util::rng::Xoshiro256;
     pub use crate::util::threadpool::ThreadPool;
 }

@@ -63,6 +63,25 @@ fn cli() -> Cli {
                 ],
             },
             Command {
+                name: "serve",
+                about: "serve a stream of reduction jobs over TCP (JSON lines)",
+                opts: vec![
+                    opt("addr", "listen address (port 0 = ephemeral)", "127.0.0.1:7070"),
+                    opt("backend", "sequential|threadpool|pjrt", "threadpool"),
+                    opt("threads", "worker threads (0 = all cores)", "0"),
+                    opt("max-coresident", "micro-batch size flush trigger", "16"),
+                    opt("policy", "packing policy: round-robin|greedy-fill", "round-robin"),
+                    opt("window-us", "micro-batch window in µs (overrides env)", ""),
+                    opt("queue-cap", "max pending jobs", "1024"),
+                    opt("backlog-cap-s", "admission cap on modeled backlog seconds", "60"),
+                    opt("cache-cap", "plan/autotune cache entries per store", "256"),
+                    opt("arch", "cost-model architecture for admission pricing", "H100"),
+                    opt("tw", "inner tilewidth", "8"),
+                    opt("tpb", "threads per block", "32"),
+                    opt("max-blocks", "joint block capacity per shared launch", "192"),
+                ],
+            },
+            Command {
                 name: "svd",
                 about: "full 3-stage singular-value pipeline on a random dense matrix",
                 opts: vec![
@@ -162,6 +181,7 @@ fn main() {
     let code = match parsed.command.as_str() {
         "reduce" => cmd_reduce(&parsed.args),
         "batch" => cmd_batch(&parsed.args),
+        "serve" => cmd_serve(&parsed.args),
         "svd" => cmd_svd(&parsed.args),
         "accuracy" => cmd_accuracy(&parsed.args),
         "occupancy" => cmd_occupancy(&parsed.args),
@@ -376,6 +396,94 @@ fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
         fmt_duration(report.wall)
     );
     0
+}
+
+fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
+    use banded_svd::config::{BatchConfig, PackingPolicy, ServiceConfig};
+    use banded_svd::service::Server;
+    use std::io::Write as _;
+    use std::time::Duration;
+
+    let params = TuneParams {
+        tpb: args.parse_or("tpb", 32),
+        tw: args.parse_or("tw", 8),
+        max_blocks: args.parse_or("max-blocks", 192),
+    };
+    let policy: PackingPolicy = match args.get("policy").unwrap_or("round-robin").parse() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let backend: BackendKind = match args.get("backend").unwrap_or("threadpool").parse() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let arch = match hw::arch_by_name(args.get("arch").unwrap_or("H100")) {
+        Some(a) => a.name,
+        None => {
+            eprintln!("unknown arch; known: A100 H100 RTX4060 MI250X MI300X PVC1100 M1");
+            return 2;
+        }
+    };
+    // Defaults pick up the BSVD_SERVICE_* environment knobs; explicit
+    // flags override them.
+    let base = ServiceConfig::default();
+    let window = match args.parse_opt::<u64>("window-us") {
+        Ok(Some(us)) => Duration::from_micros(us),
+        Ok(None) => base.window,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = ServiceConfig {
+        params,
+        batch: BatchConfig { max_coresident: args.parse_or("max-coresident", 16).max(1), policy },
+        backend,
+        threads: args.parse_or("threads", 0),
+        window,
+        queue_cap: args.parse_or("queue-cap", base.queue_cap),
+        backlog_cap_s: args.parse_or("backlog-cap-s", base.backlog_cap_s),
+        cache_cap: args.parse_or("cache-cap", base.cache_cap),
+        arch,
+    };
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
+    let server = match Server::bind(cfg, &addr) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    {
+        let cfg = server.service().config();
+        println!(
+            "banded-svd serve listening on {} (backend {}, max co-resident {}, window {} µs, \
+             queue cap {})",
+            server.local_addr(),
+            cfg.backend.name(),
+            cfg.batch.max_coresident,
+            cfg.window.as_micros(),
+            cfg.queue_cap
+        );
+    }
+    // Smoke tests wait for the line above before connecting.
+    let _ = std::io::stdout().flush();
+    match server.run() {
+        Ok(()) => {
+            println!("banded-svd serve: clean shutdown");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_svd(args: &banded_svd::util::cli::Args) -> i32 {

@@ -217,6 +217,20 @@ impl LaunchPlan {
         policy: PackingPolicy,
         max_coresident: usize,
     ) -> Self {
+        let refs: Vec<&LaunchPlan> = parts.iter().collect();
+        Self::merge_refs(&refs, capacity, policy, max_coresident)
+    }
+
+    /// [`LaunchPlan::merge`] over borrowed parts — the entry point for
+    /// callers that hold their single-problem plans behind shared handles
+    /// (the service plan cache hands out `Arc<LaunchPlan>`s, so merging
+    /// cached parts never clones a plan).
+    pub fn merge_refs(
+        parts: &[&LaunchPlan],
+        capacity: usize,
+        policy: PackingPolicy,
+        max_coresident: usize,
+    ) -> Self {
         let capacity = capacity.max(1);
         let max_coresident = max_coresident.max(1);
         let problems: Vec<ProblemShape> = parts
@@ -493,6 +507,22 @@ mod tests {
             .map(|s| s.problem)
             .collect();
         assert!(first.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn merge_refs_is_merge() {
+        let parts: Vec<LaunchPlan> = [(48usize, 6usize), (32, 4), (40, 9)]
+            .iter()
+            .map(|&(n, bw)| LaunchPlan::for_problem(n, bw, &params(3, 12)))
+            .collect();
+        let refs: Vec<&LaunchPlan> = parts.iter().collect();
+        for policy in [PackingPolicy::RoundRobin, PackingPolicy::GreedyFill] {
+            assert_eq!(
+                LaunchPlan::merge(&parts, 12, policy, 2),
+                LaunchPlan::merge_refs(&refs, 12, policy, 2),
+                "{policy:?}"
+            );
+        }
     }
 
     #[test]

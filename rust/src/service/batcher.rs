@@ -1,0 +1,166 @@
+//! The dynamic micro-batcher: one dedicated worker thread that coalesces
+//! pending jobs into merged [`LaunchPlan`]s and executes them.
+//!
+//! Flush policy (Abdelfattah & Fasi's dynamic-batching argument applied
+//! to the plan IR): once at least one job is pending, the batcher holds
+//! the flush open until either
+//!
+//! - **size**: the queue reaches `max_coresident` jobs (a full merge
+//!   window — waiting longer cannot improve packing), or
+//! - **time**: the micro-batch window elapses
+//!   ([`crate::config::ServiceConfig::window`], env
+//!   `BSVD_SERVICE_WINDOW_US`) — bounding the latency a lone job pays
+//!   for the chance of co-scheduling.
+//!
+//! The flush drains jobs in queue order ([priority, admission seq] —
+//! see [`crate::service::queue::JobQueue::pop_batch`]), resolves each
+//! job's solo plan through the [`PlanCache`], merges the parts under the
+//! joint MaxBlocks capacity ([`LaunchPlan::merge_refs`] via the cached
+//! merge skeleton), and executes the merged plan on the service's
+//! [`Backend`]. Per-problem ordering inside a merged plan is preserved by
+//! construction, so a served result is bitwise identical to a direct
+//! [`crate::pipeline::banded_singular_values_with`] call on the same
+//! backend — the property `rust/tests/service_roundtrip.rs` locks in over
+//! loopback TCP.
+
+use crate::backend::{Backend, BandStorageMut};
+use crate::config::ServiceConfig;
+use crate::pipeline::bidiagonal_singular_values;
+use crate::plan::LaunchPlan;
+use crate::service::cache::{PlanCache, PlanKey};
+use crate::service::queue::{Job, JobQueue, JobResult};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Aggregate counters the worker publishes (relaxed atomics: the `stats`
+/// verb reads a monotone snapshot, not a transaction).
+#[derive(Debug, Default)]
+pub(crate) struct WorkerStats {
+    pub batches: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    /// Shared launches executed.
+    pub launches: AtomicU64,
+    /// Cycle-tasks executed.
+    pub tasks: AtomicU64,
+    /// Capacity slots offered (launches × MaxBlocks) — occupancy is
+    /// `tasks / capacity_slots`.
+    pub capacity_slots: AtomicU64,
+    /// Wall time spent executing merged plans (nanoseconds).
+    pub busy_nanos: AtomicU64,
+}
+
+impl WorkerStats {
+    pub fn occupancy(&self) -> f64 {
+        let offered = self.capacity_slots.load(Ordering::Relaxed);
+        if offered == 0 {
+            0.0
+        } else {
+            self.tasks.load(Ordering::Relaxed) as f64 / offered as f64
+        }
+    }
+}
+
+/// Run the batcher loop until the queue closes and drains. Owns the
+/// backend (plan execution happens only on this thread; submitters never
+/// touch it).
+pub(crate) fn run(
+    queue: Arc<JobQueue>,
+    cfg: ServiceConfig,
+    cache: PlanCache,
+    backend: Box<dyn Backend>,
+    stats: Arc<WorkerStats>,
+) {
+    let max_coresident = cfg.batch.max_coresident.max(1);
+    while queue.wait_job() {
+        // Hold the window open for co-scheduling (the size trigger fires
+        // inside the wait; the time trigger is the timeout). The window
+        // is measured from the *oldest pending job's admission*, not from
+        // when this worker came free: a job that already out-waited the
+        // window while a previous flush executed is not held again.
+        if max_coresident > 1 && !cfg.window.is_zero() {
+            let remaining = match queue.oldest_enqueued() {
+                Some(enqueued) => cfg.window.saturating_sub(enqueued.elapsed()),
+                None => cfg.window,
+            };
+            if !remaining.is_zero() {
+                queue.wait_depth(max_coresident, remaining);
+            }
+        }
+        let mut jobs = queue.pop_batch(max_coresident);
+        if jobs.is_empty() {
+            continue; // every drained job had an expired deadline
+        }
+        flush(&mut jobs, &cfg, &cache, backend.as_ref(), &stats);
+    }
+}
+
+/// Execute one flushed batch and deliver every outcome.
+fn flush(
+    jobs: &mut [Job],
+    cfg: &ServiceConfig,
+    cache: &PlanCache,
+    backend: &dyn Backend,
+    stats: &WorkerStats,
+) {
+    let capacity = cfg.params.capacity();
+    // Solo plans from the cache, in batch order (= merged problem order).
+    let keys: Vec<PlanKey> = jobs
+        .iter()
+        .map(|job| PlanKey {
+            n: job.input.n(),
+            bw: job.input.bw(),
+            es: job.input.element_bytes(),
+            params: cfg.params,
+        })
+        .collect();
+    let parts: Vec<Arc<LaunchPlan>> = keys.iter().map(|&k| cache.plan_for(k)).collect();
+    let merged =
+        cache.merged_for(&keys, &parts, capacity, cfg.batch.policy, cfg.batch.max_coresident);
+
+    // Queue waits end here: everything after is execution time.
+    let waits: Vec<std::time::Duration> = jobs.iter().map(|job| job.enqueued.elapsed()).collect();
+    let t_exec = Instant::now();
+    let exec = {
+        let mut bands: Vec<BandStorageMut<'_>> =
+            jobs.iter_mut().map(|job| job.input.as_band_storage_mut()).collect();
+        backend.execute(merged.as_ref(), &mut bands)
+    };
+    let busy = t_exec.elapsed();
+
+    match exec {
+        Ok(exec) => {
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            stats.launches.fetch_add(exec.aggregate.launches as u64, Ordering::Relaxed);
+            stats.tasks.fetch_add(exec.aggregate.tasks as u64, Ordering::Relaxed);
+            stats
+                .capacity_slots
+                .fetch_add((exec.aggregate.launches * capacity) as u64, Ordering::Relaxed);
+            stats.busy_nanos.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+            stats.jobs_completed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            let batch_jobs = jobs.len();
+            for ((job, metrics), queue_wait) in jobs.iter().zip(exec.per_problem).zip(waits) {
+                let (diag, superdiag) = job.input.bidiagonal_f64();
+                let result = JobResult {
+                    id: job.id,
+                    n: job.input.n(),
+                    bw: job.input.bw(),
+                    precision: job.input.precision(),
+                    sv: bidiagonal_singular_values(&diag, &superdiag),
+                    metrics,
+                    batch_jobs,
+                    queue_wait,
+                };
+                let _ = job.tx.send(Ok(result));
+            }
+        }
+        Err(e) => {
+            stats.jobs_failed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            let msg = format!("backend {} failed: {e}", backend.name());
+            for job in jobs.iter() {
+                let _ = job.tx.send(Err(msg.clone()));
+            }
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! Bounded LRU plan-and-autotune cache.
+//!
+//! Plan lowering is deterministic — [`LaunchPlan::for_problem`] is a pure
+//! function of `(n, bw, TuneParams)`, [`LaunchPlan::merge_refs`] of its
+//! parts plus the packing knobs, and [`autotune_for`] of its
+//! [`TuneKey`] — so all three are cacheable without invalidation logic:
+//! an entry can never go stale, only cold. The cache therefore amortizes
+//! the per-request lowering/merging/tuning work across the repeated
+//! shapes a serving workload is dominated by (Abdelfattah & Fasi: batch
+//! SVD traffic is many small problems from few distinct shapes).
+//!
+//! Three stores share one handle and one stats block:
+//!
+//! - **solo plans**, keyed by [`PlanKey`] `(n, bw, element size,
+//!   TuneParams)` — shared by the service batcher, admission pricing, and
+//!   [`crate::batch::BatchCoordinator::plan`] (so `batch` and `serve`
+//!   lower through one path);
+//! - **merge skeletons**, keyed by the part keys plus the packing knobs —
+//!   a window of identical shapes re-uses the merged plan outright;
+//! - **autotune results**, keyed by [`TuneKey`].
+//!
+//! Each store is LRU-bounded to `cap` entries; plans are handed out as
+//! `Arc<LaunchPlan>` so hits never clone. Hit/miss counters are exposed
+//! via [`PlanCache::stats`] and surfaced by the service `stats` verb.
+
+use crate::config::{PackingPolicy, TuneParams};
+use crate::plan::LaunchPlan;
+use crate::simulator::hw::GpuArch;
+use crate::simulator::model::BackendCostModel;
+use crate::simulator::{autotune_for, TuneKey, TuneResult};
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Mutex};
+
+/// Identity of one solo lowering. `es` (element size in bytes) does not
+/// change the lowered plan, but it *does* change admission pricing and
+/// tuning, so the service keys shapes by precision throughout — mixed
+/// fp32/fp64 traffic of one shape costs two (identical-valued) entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub n: usize,
+    pub bw: usize,
+    /// Element size in bytes (the paper's precision axis: 2/4/8).
+    pub es: usize,
+    pub params: TuneParams,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct MergeKey {
+    parts: Vec<PlanKey>,
+    capacity: usize,
+    policy: PackingPolicy,
+    max_coresident: usize,
+}
+
+/// Hit/miss counters, split per store. A "hit rate" over everything the
+/// cache absorbed is `hits() / (hits() + misses())`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub merge_hits: u64,
+    pub merge_misses: u64,
+    pub tune_hits: u64,
+    pub tune_misses: u64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.plan_hits + self.merge_hits + self.tune_hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.plan_misses + self.merge_misses + self.tune_misses
+    }
+
+    /// Fraction of lookups served from cache (0.0 when none were made).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits() + self.misses();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / total as f64
+        }
+    }
+}
+
+/// One LRU-bounded store: values stamped with a logical tick; eviction
+/// drops the least-recently-used entry. Eviction scans for the minimum
+/// stamp — O(len) on insert-past-cap, which is irrelevant at the tens to
+/// hundreds of entries the service caps its stores at.
+struct LruStore<K, V> {
+    map: HashMap<K, (u64, V)>,
+    cap: usize,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> LruStore<K, V> {
+    fn new(cap: usize) -> Self {
+        Self { map: HashMap::new(), cap: cap.max(1) }
+    }
+
+    fn get(&mut self, key: &K, tick: u64) -> Option<V> {
+        let (stamp, v) = self.map.get_mut(key)?;
+        *stamp = tick;
+        Some(v.clone())
+    }
+
+    fn insert(&mut self, key: K, value: V, tick: u64) {
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, (stamp, _))| *stamp).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (tick, value));
+    }
+}
+
+struct CacheInner {
+    tick: u64,
+    plans: LruStore<PlanKey, Arc<LaunchPlan>>,
+    merges: LruStore<MergeKey, Arc<LaunchPlan>>,
+    tunes: LruStore<TuneKey, TuneResult>,
+    stats: CacheStats,
+}
+
+impl CacheInner {
+    fn tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+}
+
+/// The shared cache handle — cheap to clone (one `Arc`), safe to consult
+/// from any thread. Lowering/merging/tuning on a miss happens *outside*
+/// the lock, so a cold expensive entry never blocks concurrent hits;
+/// racing misses on the same key both compute and last-insert wins (the
+/// values are identical by determinism, so this is benign).
+#[derive(Clone)]
+pub struct PlanCache {
+    inner: Arc<Mutex<CacheInner>>,
+}
+
+impl PlanCache {
+    /// A cache holding up to `cap` entries per store.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(CacheInner {
+                tick: 0,
+                plans: LruStore::new(cap),
+                merges: LruStore::new(cap),
+                tunes: LruStore::new(cap),
+                stats: CacheStats::default(),
+            })),
+        }
+    }
+
+    /// The solo plan for `key`, lowered on miss. The returned plan is the
+    /// identical value `LaunchPlan::for_problem(key.n, key.bw,
+    /// &key.params)` produces — cached or not.
+    pub fn plan_for(&self, key: PlanKey) -> Arc<LaunchPlan> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let tick = inner.tick();
+            if let Some(plan) = inner.plans.get(&key, tick) {
+                inner.stats.plan_hits += 1;
+                return plan;
+            }
+            inner.stats.plan_misses += 1;
+        }
+        let plan = Arc::new(LaunchPlan::for_problem(key.n, key.bw, &key.params));
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.tick();
+        inner.plans.insert(key, Arc::clone(&plan), tick);
+        plan
+    }
+
+    /// The merged shared-launch plan for `parts` (the plans cached under
+    /// `keys`, in batch order) under the packing knobs — the merge
+    /// skeleton. `keys[i]` must identify `parts[i]`.
+    pub fn merged_for(
+        &self,
+        keys: &[PlanKey],
+        parts: &[Arc<LaunchPlan>],
+        capacity: usize,
+        policy: PackingPolicy,
+        max_coresident: usize,
+    ) -> Arc<LaunchPlan> {
+        debug_assert_eq!(keys.len(), parts.len());
+        let key = MergeKey { parts: keys.to_vec(), capacity, policy, max_coresident };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let tick = inner.tick();
+            if let Some(plan) = inner.merges.get(&key, tick) {
+                inner.stats.merge_hits += 1;
+                return plan;
+            }
+            inner.stats.merge_misses += 1;
+        }
+        let refs: Vec<&LaunchPlan> = parts.iter().map(|p| p.as_ref()).collect();
+        let merged = Arc::new(LaunchPlan::merge_refs(&refs, capacity, policy, max_coresident));
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.tick();
+        inner.merges.insert(key, Arc::clone(&merged), tick);
+        merged
+    }
+
+    /// The [`autotune_for`] result for the workload, searched on miss.
+    pub fn tune_for(
+        &self,
+        arch: &GpuArch,
+        element_bytes: usize,
+        n: usize,
+        bw: usize,
+        backend: &BackendCostModel,
+    ) -> TuneResult {
+        let key = TuneKey::new(arch, element_bytes, n, bw, backend);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let tick = inner.tick();
+            if let Some(result) = inner.tunes.get(&key, tick) {
+                inner.stats.tune_hits += 1;
+                return result;
+            }
+            inner.stats.tune_misses += 1;
+        }
+        let result = autotune_for(arch, element_bytes, n, bw, backend);
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.tick();
+        inner.tunes.insert(key, result.clone(), tick);
+        result
+    }
+
+    /// Snapshot of the hit/miss counters.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Entries currently resident (plans, merges, tunes).
+    pub fn len(&self) -> (usize, usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.plans.map.len(), inner.merges.map.len(), inner.tunes.map.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == (0, 0, 0)
+    }
+}
+
+impl Default for PlanCache {
+    /// A cache with the default [`crate::config::ServiceConfig`]
+    /// capacity ([`crate::config::DEFAULT_CACHE_CAP`]).
+    fn default() -> Self {
+        Self::new(crate::config::DEFAULT_CACHE_CAP)
+    }
+}
+
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (plans, merges, tunes) = self.len();
+        f.debug_struct("PlanCache")
+            .field("plans", &plans)
+            .field("merges", &merges)
+            .field("tunes", &tunes)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw;
+
+    fn key(n: usize, bw: usize, es: usize) -> PlanKey {
+        PlanKey { n, bw, es, params: TuneParams { tpb: 32, tw: 4, max_blocks: 16 } }
+    }
+
+    #[test]
+    fn plan_hits_return_the_same_arc() {
+        let cache = PlanCache::new(8);
+        let a = cache.plan_for(key(64, 8, 8));
+        let b = cache.plan_for(key(64, 8, 8));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(*a, LaunchPlan::for_problem(64, 8, &key(64, 8, 8).params));
+        let s = cache.stats();
+        assert_eq!((s.plan_hits, s.plan_misses), (1, 1));
+        assert!(s.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn precision_is_part_of_the_key() {
+        let cache = PlanCache::new(8);
+        let a = cache.plan_for(key(64, 8, 4));
+        let b = cache.plan_for(key(64, 8, 8));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(*a, *b); // identical plan values, distinct entries
+        assert_eq!(cache.stats().plan_misses, 2);
+    }
+
+    #[test]
+    fn merge_skeletons_cache_and_match_direct_merge() {
+        let cache = PlanCache::new(8);
+        let keys = [key(48, 6, 8), key(32, 4, 8), key(48, 6, 8)];
+        let parts: Vec<Arc<LaunchPlan>> = keys.iter().map(|&k| cache.plan_for(k)).collect();
+        let m1 = cache.merged_for(&keys, &parts, 16, PackingPolicy::RoundRobin, 4);
+        let m2 = cache.merged_for(&keys, &parts, 16, PackingPolicy::RoundRobin, 4);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        let direct: Vec<LaunchPlan> = parts.iter().map(|p| (**p).clone()).collect();
+        assert_eq!(*m1, LaunchPlan::merge(&direct, 16, PackingPolicy::RoundRobin, 4));
+        // Different knobs are different skeletons.
+        let m3 = cache.merged_for(&keys, &parts, 16, PackingPolicy::GreedyFill, 4);
+        assert!(!Arc::ptr_eq(&m1, &m3));
+        let s = cache.stats();
+        assert_eq!((s.merge_hits, s.merge_misses), (1, 2));
+        // The duplicate shape hit the plan store.
+        assert_eq!(s.plan_hits, 1);
+    }
+
+    #[test]
+    fn tune_results_cache_and_reproduce_the_search() {
+        let cache = PlanCache::new(4);
+        let native = BackendCostModel::native();
+        let warm = cache.tune_for(&hw::H100, 4, 4096, 32, &native);
+        let hit = cache.tune_for(&hw::H100, 4, 4096, 32, &native);
+        assert_eq!(warm.params, hit.params);
+        assert_eq!(warm.modeled_seconds, hit.modeled_seconds);
+        let fresh = autotune_for(&hw::H100, 4, 4096, 32, &native);
+        assert_eq!(warm.params, fresh.params);
+        let s = cache.stats();
+        assert_eq!((s.tune_hits, s.tune_misses), (1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recently_used_entry() {
+        let cache = PlanCache::new(2);
+        let (a, b, c) = (key(32, 4, 8), key(40, 5, 8), key(48, 6, 8));
+        cache.plan_for(a);
+        cache.plan_for(b);
+        cache.plan_for(a); // refresh a; b is now LRU
+        cache.plan_for(c); // evicts b
+        assert_eq!(cache.len().0, 2);
+        let before = cache.stats();
+        cache.plan_for(a); // still resident
+        cache.plan_for(b); // evicted -> miss
+        let after = cache.stats();
+        assert_eq!(after.plan_hits - before.plan_hits, 1);
+        assert_eq!(after.plan_misses - before.plan_misses, 1);
+    }
+
+    #[test]
+    fn clones_share_one_cache() {
+        let cache = PlanCache::new(8);
+        let clone = cache.clone();
+        clone.plan_for(key(64, 8, 8));
+        cache.plan_for(key(64, 8, 8));
+        let s = cache.stats();
+        assert_eq!((s.plan_hits, s.plan_misses), (1, 1));
+        assert!(!cache.is_empty());
+    }
+}

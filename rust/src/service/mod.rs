@@ -1,0 +1,395 @@
+//! The reduction service — a long-running subsystem that serves a
+//! *stream* of banded-reduction jobs.
+//!
+//! The batch engine (PR 1–3) answers "reduce these K problems now"; real
+//! serving traffic is the harder shape — many small heterogeneous
+//! problems arriving one at a time, each wanting an answer soon
+//! (Abdelfattah & Fasi, "An Efficient Batch Solver for the SVD on
+//! GPUs"). This module closes that gap with four parts behind one
+//! in-process handle ([`Service`]) and one TCP front end
+//! ([`server::Server`], the `banded-svd serve` subcommand):
+//!
+//! ```text
+//!   submit ──▶ admission (priced by simulate_plan_for     [queue.rs]
+//!   (any          under the backend's BackendCostModel)
+//!   thread)          │ admit / reject
+//!                    ▼
+//!              JobQueue — (priority, admission seq) order
+//!                    │ flush: size (max_coresident) or
+//!                    │        window (BSVD_SERVICE_WINDOW_US)
+//!                    ▼
+//!              micro-batcher worker                       [batcher.rs]
+//!                cached solo plans ── merge_refs ──▶ merged LaunchPlan
+//!                    │                    ▲
+//!                    │          PlanCache (LRU: plans,    [cache.rs]
+//!                    │          merge skeletons, autotune)
+//!                    ▼
+//!              Box<dyn Backend> ──▶ per-job σ + LaunchMetrics
+//! ```
+//!
+//! Everything upstream of the backend is *plan algebra*: lowering and
+//! merging are deterministic, so the [`PlanCache`] amortizes them across
+//! the repeated shapes serving traffic is dominated by, and a served
+//! result is **bitwise identical** to a direct
+//! [`crate::pipeline::banded_singular_values_with`] call on the same
+//! backend (merged plans preserve per-problem launch order; the loopback
+//! integration test `rust/tests/service_roundtrip.rs` locks this in).
+//!
+//! See `docs/service.md` for the wire protocol, the knob reference, the
+//! cache semantics, and a deployment sketch.
+
+pub mod batcher;
+pub mod cache;
+pub mod queue;
+pub mod server;
+
+pub use cache::{CacheStats, PlanCache, PlanKey};
+pub use queue::{Job, JobOutcome, JobResult, JobTicket};
+pub use server::Server;
+
+use crate::backend::{cost_model_for, for_kind};
+use crate::batch::BatchInput;
+use crate::config::ServiceConfig;
+use crate::error::{Error, Result};
+use crate::simulator::hw::GpuArch;
+use crate::simulator::model::BackendCostModel;
+use crate::simulator::{arch_by_name, simulate_plan_for};
+use batcher::WorkerStats;
+use queue::JobQueue;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Snapshot of the service's operational state (the `stats` verb).
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    /// Jobs currently queued (admitted, not yet flushed).
+    pub queue_depth: usize,
+    /// Modeled seconds of queued work (the admission price).
+    pub backlog_seconds: f64,
+    pub jobs_submitted: u64,
+    pub jobs_rejected: u64,
+    pub jobs_completed: u64,
+    /// Jobs that got an error outcome: backend failures plus deadlines
+    /// expired in the queue. `jobs_submitted` always equals
+    /// `jobs_completed + jobs_failed + queue_depth` (+ jobs currently in
+    /// a flush).
+    pub jobs_failed: u64,
+    /// Merged-plan flushes executed.
+    pub batches: u64,
+    /// Shared launches executed across all flushes.
+    pub launches: u64,
+    /// Cycle-tasks executed across all flushes.
+    pub tasks: u64,
+    /// Mean launch occupancy: tasks per offered capacity slot.
+    pub occupancy: f64,
+    /// Mean jobs per flush (the dynamic batching actually achieved).
+    pub avg_batch_jobs: f64,
+    /// Plan/merge/autotune cache counters.
+    pub cache: CacheStats,
+    /// Wall time the worker spent executing merged plans.
+    pub busy_seconds: f64,
+    pub uptime: Duration,
+    /// Completed jobs per second of service uptime.
+    pub throughput_jobs_per_s: f64,
+}
+
+/// The in-process service handle: owns the queue, the plan cache, and
+/// the batcher worker thread. Shareable across submitter threads (the
+/// TCP server holds it in an `Arc`); submission is non-blocking apart
+/// from admission pricing, and results come back per job through a
+/// [`JobTicket`].
+///
+/// # Examples
+///
+/// ```no_run
+/// use banded_svd::prelude::*;
+///
+/// let service = Service::start(ServiceConfig::default()).unwrap();
+/// let mut rng = Xoshiro256::seed_from_u64(0);
+/// let a = random_banded::<f64>(256, 16, 16, &mut rng);
+/// let result = service.submit_wait(BatchInput::from((a, 16)), 0, None).unwrap();
+/// println!("σ_max = {} (co-scheduled with {} jobs)", result.sv[0], result.batch_jobs - 1);
+/// println!("{:#?}", service.stats());
+/// ```
+pub struct Service {
+    cfg: ServiceConfig,
+    arch: GpuArch,
+    cost_model: BackendCostModel,
+    queue: Arc<JobQueue>,
+    cache: PlanCache,
+    worker_stats: Arc<WorkerStats>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    next_id: AtomicU64,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    started: Instant,
+}
+
+impl Service {
+    /// Validate `cfg`, start the batcher worker, and open the queue. The
+    /// backend is constructed *on* the worker thread (it never leaves
+    /// it); admission pricing uses the kind's cost model
+    /// ([`cost_model_for`]) on the submitting side.
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        cfg.validate()?;
+        let arch = arch_by_name(cfg.arch)
+            .ok_or_else(|| Error::Config(format!("unknown service arch {:?}", cfg.arch)))?;
+        let cost_model = cost_model_for(cfg.backend)?;
+        let queue = Arc::new(JobQueue::new(cfg.queue_cap, cfg.backlog_cap_s));
+        let cache = PlanCache::new(cfg.cache_cap);
+        let worker_stats = Arc::new(WorkerStats::default());
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let cache = cache.clone();
+            let stats = Arc::clone(&worker_stats);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("bsvd-service-batcher".into())
+                .spawn(move || {
+                    let backend = for_kind(cfg.backend, cfg.threads)
+                        .expect("backend kind validated by cost_model_for at start");
+                    batcher::run(queue, cfg, cache, backend, stats);
+                })
+                .map_err(Error::Io)?
+        };
+        Ok(Self {
+            cfg,
+            arch,
+            cost_model,
+            queue,
+            cache,
+            worker_stats,
+            worker: Mutex::new(Some(worker)),
+            next_id: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            started: Instant::now(),
+        })
+    }
+
+    /// Submit one job. Validates the storage, prices the job on the
+    /// service cost model, and runs admission; on success the returned
+    /// ticket resolves to the job's [`JobResult`].
+    pub fn submit(
+        &self,
+        input: BatchInput,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> Result<JobTicket> {
+        let admit = || -> Result<JobTicket> {
+            input.validate(&self.cfg.params)?;
+            let est_seconds = self.price(&input);
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let (tx, rx) = mpsc::channel();
+            let deadline = deadline.map(|d| Instant::now() + d);
+            self.queue.submit(id, input, priority, deadline, est_seconds, tx)?;
+            Ok(JobTicket { id, rx })
+        };
+        match admit() {
+            Ok(ticket) => {
+                self.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(ticket)
+            }
+            Err(e) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// [`Service::submit`] and block for the outcome.
+    pub fn submit_wait(
+        &self,
+        input: BatchInput,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> Result<JobResult> {
+        self.submit(input, priority, deadline)?.wait().map_err(Error::Service)
+    }
+
+    /// Modeled solo cost (seconds) of `input` on the service backend —
+    /// the admission price. Uses the cached solo plan, so pricing a
+    /// repeated shape is a cache hit, not a lowering.
+    pub fn price(&self, input: &BatchInput) -> f64 {
+        let key = PlanKey {
+            n: input.n(),
+            bw: input.bw(),
+            es: input.element_bytes(),
+            params: self.cfg.params,
+        };
+        let plan = self.cache.plan_for(key);
+        simulate_plan_for(&self.arch, key.es, plan.as_ref(), key.params.tpb, &self.cost_model)
+            .seconds
+    }
+
+    /// Operational snapshot (queue, batching, cache, throughput).
+    pub fn stats(&self) -> ServiceStats {
+        let w = &self.worker_stats;
+        let completed = w.jobs_completed.load(Ordering::Relaxed);
+        let batches = w.batches.load(Ordering::Relaxed);
+        let uptime = self.started.elapsed();
+        ServiceStats {
+            queue_depth: self.queue.depth(),
+            backlog_seconds: self.queue.backlog_seconds(),
+            jobs_submitted: self.submitted.load(Ordering::Relaxed),
+            jobs_rejected: self.rejected.load(Ordering::Relaxed),
+            jobs_completed: completed,
+            jobs_failed: w.jobs_failed.load(Ordering::Relaxed) + self.queue.expired_jobs(),
+            batches,
+            launches: w.launches.load(Ordering::Relaxed),
+            tasks: w.tasks.load(Ordering::Relaxed),
+            occupancy: w.occupancy(),
+            avg_batch_jobs: if batches == 0 { 0.0 } else { completed as f64 / batches as f64 },
+            cache: self.cache.stats(),
+            busy_seconds: w.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            uptime,
+            throughput_jobs_per_s: completed as f64 / uptime.as_secs_f64().max(1e-9),
+        }
+    }
+
+    /// The plan/autotune cache (shared with the worker).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Close the queue and wait for the worker to drain. Idempotent;
+    /// also invoked by `Drop`, so an explicit call is only needed to
+    /// observe the joined worker before the handle goes away.
+    pub fn shutdown(&self) {
+        self.queue.close();
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SequentialBackend;
+    use crate::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
+    use crate::generate::random_banded;
+    use crate::pipeline::banded_singular_values_with;
+    use crate::util::rng::Xoshiro256;
+
+    fn test_cfg() -> ServiceConfig {
+        ServiceConfig {
+            params: TuneParams { tpb: 32, tw: 4, max_blocks: 24 },
+            batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+            backend: BackendKind::Sequential,
+            threads: 1,
+            window: Duration::from_micros(200),
+            queue_cap: 64,
+            backlog_cap_s: 1e6,
+            cache_cap: 32,
+            arch: "H100",
+        }
+    }
+
+    #[test]
+    fn served_job_matches_direct_pipeline_bitwise() {
+        let cfg = test_cfg();
+        let service = Service::start(cfg.clone()).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = random_banded::<f64>(48, 6, cfg.params.effective_tw(6), &mut rng);
+        let direct = banded_singular_values_with(&SequentialBackend::new(), &a, 6, &cfg.params)
+            .unwrap();
+        let result = service.submit_wait(BatchInput::from((a, 6)), 0, None).unwrap();
+        assert_eq!(result.sv, direct);
+        assert_eq!(result.n, 48);
+        assert_eq!(result.precision, "fp64");
+        assert!(result.metrics.launches > 0);
+        assert!(result.batch_jobs >= 1);
+        service.shutdown();
+        let stats = service.stats();
+        assert_eq!(stats.jobs_completed, 1);
+        assert_eq!(stats.jobs_failed, 0);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn repeated_shapes_hit_the_plan_cache() {
+        let service = Service::start(test_cfg()).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..4 {
+            let a = random_banded::<f64>(40, 5, 4, &mut rng);
+            service.submit_wait(BatchInput::from((a, 5)), 0, None).unwrap();
+        }
+        let stats = service.stats();
+        assert!(stats.cache.plan_hits > 0, "{:?}", stats.cache);
+        assert!(stats.cache.hit_rate() > 0.0);
+        assert_eq!(stats.jobs_completed, 4);
+        assert!(stats.throughput_jobs_per_s > 0.0);
+    }
+
+    #[test]
+    fn invalid_storage_is_rejected_at_admission() {
+        use crate::banded::storage::Banded;
+        let service = Service::start(test_cfg()).unwrap();
+        // kd_sub 1 < tw 4: cannot hold the reduction's fill-in.
+        let bad = Banded::<f64>::zeros(32, 9, 1);
+        assert!(service.submit(BatchInput::from((bad, 8)), 0, None).is_err());
+        assert_eq!(service.stats().jobs_rejected, 1);
+        assert_eq!(service.stats().jobs_submitted, 0);
+    }
+
+    #[test]
+    fn pricing_is_positive_and_cached() {
+        let service = Service::start(test_cfg()).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let a = random_banded::<f64>(64, 8, 4, &mut rng);
+        let input = BatchInput::from((a, 8));
+        let p1 = service.price(&input);
+        let p2 = service.price(&input);
+        assert!(p1 > 0.0);
+        assert_eq!(p1, p2);
+        assert!(service.plan_cache().stats().plan_hits >= 1);
+    }
+
+    #[test]
+    fn shutdown_fails_jobs_submitted_after_close() {
+        let service = Service::start(test_cfg()).unwrap();
+        service.shutdown();
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let a = random_banded::<f64>(24, 3, 2, &mut rng);
+        assert!(service.submit(BatchInput::from((a, 3)), 0, None).is_err());
+        service.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn expired_deadline_reports_a_service_error() {
+        // A generous window guarantees the monotone clock advances past
+        // the zero deadline before the flush drains the job.
+        let cfg = ServiceConfig { window: Duration::from_millis(20), ..test_cfg() };
+        let service = Service::start(cfg).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let a = random_banded::<f64>(24, 3, 2, &mut rng);
+        let err = service
+            .submit_wait(BatchInput::from((a, 3)), 0, Some(Duration::ZERO))
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
+        let stats = service.stats();
+        assert_eq!(stats.jobs_failed, 1);
+        assert_eq!(stats.jobs_completed, 0);
+    }
+
+    #[test]
+    fn rejects_unknown_arch_and_fused_backend() {
+        let bad_arch = ServiceConfig { arch: "NOPE9000", ..test_cfg() };
+        assert!(Service::start(bad_arch).is_err());
+        let fused = ServiceConfig { backend: BackendKind::PjrtFused, ..test_cfg() };
+        assert!(Service::start(fused).is_err());
+    }
+}

@@ -1,0 +1,400 @@
+//! Submission queue with cost-priced admission control.
+//!
+//! A [`Job`] is one banded reduction in flight: its payload
+//! ([`crate::batch::BatchInput`] — shape, precision, matrix), an optional
+//! priority class and deadline, and the channel its result travels back
+//! on. The queue orders jobs by `(priority, admission sequence)`: lower
+//! priority values drain first, and **within a priority class jobs drain
+//! strictly in admission order** — the invariant the batcher's flush
+//! order inherits (property-tested in
+//! `rust/tests/service_roundtrip.rs`).
+//!
+//! Admission control is *priced*, not counted: every job carries the
+//! modeled seconds its solo plan costs on the configured backend
+//! ([`crate::simulator::simulate_plan_for`] under the backend's
+//! [`crate::simulator::BackendCostModel`] — the same model the autotuner
+//! searches), and a submission is rejected while the queue's modeled
+//! backlog exceeds [`crate::config::ServiceConfig::backlog_cap_s`] (or
+//! its depth exceeds `queue_cap`). An empty queue always admits, so one
+//! oversized job cannot deadlock the service.
+
+use crate::batch::BatchInput;
+use crate::coordinator::metrics::LaunchMetrics;
+use crate::error::{Error, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted job, queued for the batcher.
+pub struct Job {
+    /// Service-unique id (monotone, assigned at submission).
+    pub id: u64,
+    /// Admission sequence number (monotone across all classes; the
+    /// within-class drain order).
+    pub seq: u64,
+    /// The problem: matrix + bandwidth, in any supported precision.
+    pub input: BatchInput,
+    /// Priority class; lower drains first. Default 0.
+    pub priority: u8,
+    /// Latest useful completion time; jobs past it are failed at flush
+    /// instead of executed.
+    pub deadline: Option<Instant>,
+    /// Modeled solo cost (seconds) on the service backend — the admission
+    /// price, released when the job leaves the queue.
+    pub est_seconds: f64,
+    pub enqueued: Instant,
+    /// Where the outcome is delivered.
+    pub tx: Sender<JobOutcome>,
+}
+
+/// What a completed job reports back.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub n: usize,
+    pub bw: usize,
+    /// Paper-style precision label ("fp64" / "fp32" / "fp16").
+    pub precision: &'static str,
+    /// Singular values, descending, widened to f64.
+    pub sv: Vec<f64>,
+    /// Per-problem launch accounting from the merged-plan execution —
+    /// identical to what a solo run of the same problem records.
+    pub metrics: LaunchMetrics,
+    /// Jobs co-scheduled in the flush that carried this one.
+    pub batch_jobs: usize,
+    /// Time spent queued before the flush.
+    pub queue_wait: Duration,
+}
+
+/// A job either completes with a [`JobResult`] or fails with a message
+/// (backend error, expired deadline, service shutdown).
+pub type JobOutcome = std::result::Result<JobResult, String>;
+
+/// Blocking handle on one submitted job.
+pub struct JobTicket {
+    pub id: u64,
+    pub(crate) rx: Receiver<JobOutcome>,
+}
+
+impl JobTicket {
+    /// Wait for the job's outcome. A disconnected channel (service torn
+    /// down mid-job) reports as an error outcome.
+    pub fn wait(self) -> JobOutcome {
+        self.rx.recv().unwrap_or_else(|_| Err("service shut down before the job ran".into()))
+    }
+}
+
+struct QueueState {
+    /// Pending jobs, bucketed by priority class, FIFO within a class.
+    classes: BTreeMap<u8, VecDeque<Job>>,
+    depth: usize,
+    /// Sum of pending `est_seconds` (the priced backlog).
+    backlog_s: f64,
+    next_seq: u64,
+    /// Jobs failed at flush because their deadline had passed — feeds
+    /// the service's `jobs_failed` accounting so
+    /// submitted = completed + failed + queued always reconciles.
+    expired: u64,
+    closed: bool,
+}
+
+impl QueueState {
+    fn pop_front(&mut self) -> Option<Job> {
+        let (&class, _) = self.classes.iter().find(|(_, q)| !q.is_empty())?;
+        let q = self.classes.get_mut(&class).unwrap();
+        let job = q.pop_front()?;
+        if q.is_empty() {
+            self.classes.remove(&class);
+        }
+        self.depth -= 1;
+        self.backlog_s = (self.backlog_s - job.est_seconds).max(0.0);
+        Some(job)
+    }
+}
+
+/// The admission-controlled submission queue shared by submitters and the
+/// batcher worker.
+pub struct JobQueue {
+    state: Mutex<QueueState>,
+    /// Signaled on every admission and on close — what the batcher's
+    /// window wait parks on.
+    arrived: Condvar,
+    queue_cap: usize,
+    backlog_cap_s: f64,
+}
+
+impl JobQueue {
+    pub fn new(queue_cap: usize, backlog_cap_s: f64) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                classes: BTreeMap::new(),
+                depth: 0,
+                backlog_s: 0.0,
+                next_seq: 0,
+                expired: 0,
+                closed: false,
+            }),
+            arrived: Condvar::new(),
+            queue_cap: queue_cap.max(1),
+            backlog_cap_s,
+        }
+    }
+
+    /// Admit a job or reject it. Rejection reasons: queue closed, depth at
+    /// `queue_cap`, or (for a non-empty queue) priced backlog past
+    /// `backlog_cap_s`.
+    pub fn submit(
+        &self,
+        id: u64,
+        input: BatchInput,
+        priority: u8,
+        deadline: Option<Instant>,
+        est_seconds: f64,
+        tx: Sender<JobOutcome>,
+    ) -> Result<()> {
+        let mut state = self.state.lock().unwrap();
+        // Transient service-side rejections are `Error::Service` so
+        // callers can tell retryable overload apart from a permanently
+        // malformed request (`Error::Config`).
+        if state.closed {
+            return Err(Error::Service("service is shutting down".into()));
+        }
+        if state.depth >= self.queue_cap {
+            return Err(Error::Service(format!(
+                "queue full: {} jobs pending (cap {})",
+                state.depth, self.queue_cap
+            )));
+        }
+        if state.depth > 0 && state.backlog_s + est_seconds > self.backlog_cap_s {
+            return Err(Error::Service(format!(
+                "admission rejected: modeled backlog {:.3}s + job {:.3}s exceeds cap {:.3}s",
+                state.backlog_s, est_seconds, self.backlog_cap_s
+            )));
+        }
+        let seq = state.next_seq;
+        state.next_seq += 1;
+        let job =
+            Job { id, seq, input, priority, deadline, est_seconds, enqueued: Instant::now(), tx };
+        state.classes.entry(priority).or_default().push_back(job);
+        state.depth += 1;
+        state.backlog_s += est_seconds;
+        drop(state);
+        self.arrived.notify_all();
+        Ok(())
+    }
+
+    /// Pending jobs.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().depth
+    }
+
+    /// Priced backlog (modeled seconds of pending work).
+    pub fn backlog_seconds(&self) -> f64 {
+        self.state.lock().unwrap().backlog_s
+    }
+
+    /// Enqueue time of the earliest-admitted pending job (the instant the
+    /// batcher's time window is measured from). Any pending job is at or
+    /// behind its class front, so the minimum over fronts is the oldest.
+    pub fn oldest_enqueued(&self) -> Option<Instant> {
+        let state = self.state.lock().unwrap();
+        state.classes.values().filter_map(|q| q.front()).map(|job| job.enqueued).min()
+    }
+
+    /// Block until at least one job is pending or the queue is closed.
+    /// Returns `false` when closed *and* drained (the batcher's exit
+    /// signal).
+    pub fn wait_job(&self) -> bool {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if state.depth > 0 {
+                return true;
+            }
+            if state.closed {
+                return false;
+            }
+            state = self.arrived.wait(state).unwrap();
+        }
+    }
+
+    /// Block up to `timeout` for the depth to reach `target` (the size
+    /// flush trigger). Returns the depth observed at wakeup — time-window
+    /// expiry simply reports fewer.
+    pub fn wait_depth(&self, target: usize, timeout: Duration) -> usize {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if state.depth >= target || state.closed {
+                return state.depth;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return state.depth;
+            }
+            let (next, timed_out) = self.arrived.wait_timeout(state, deadline - now).unwrap();
+            state = next;
+            if timed_out.timed_out() {
+                return state.depth;
+            }
+        }
+    }
+
+    /// Drain up to `max` jobs in `(priority, admission seq)` order —
+    /// the batcher's flush. Jobs whose deadline already passed are failed
+    /// (outcome sent) and do not count toward `max`.
+    pub fn pop_batch(&self, max: usize) -> Vec<Job> {
+        let mut out = Vec::new();
+        let now = Instant::now();
+        let mut state = self.state.lock().unwrap();
+        while out.len() < max {
+            let Some(job) = state.pop_front() else { break };
+            if job.deadline.is_some_and(|d| d < now) {
+                state.expired += 1;
+                let _ = job.tx.send(Err(format!(
+                    "deadline exceeded before execution (queued {:.1} ms)",
+                    job.enqueued.elapsed().as_secs_f64() * 1e3
+                )));
+                continue;
+            }
+            out.push(job);
+        }
+        out
+    }
+
+    /// Jobs failed at flush with an expired deadline.
+    pub fn expired_jobs(&self) -> u64 {
+        self.state.lock().unwrap().expired
+    }
+
+    /// Close the queue: no further admissions; blocked waits wake up.
+    /// Already-admitted jobs still drain.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+    use std::sync::mpsc;
+
+    fn input(n: usize, bw: usize, rng: &mut Xoshiro256) -> BatchInput {
+        BatchInput::from((random_banded::<f64>(n, bw, 4, rng), bw))
+    }
+
+    fn submit(q: &JobQueue, id: u64, priority: u8, est: f64) -> Receiver<JobOutcome> {
+        let mut rng = Xoshiro256::seed_from_u64(id);
+        let (tx, rx) = mpsc::channel();
+        q.submit(id, input(24, 3, &mut rng), priority, None, est, tx).unwrap();
+        rx
+    }
+
+    #[test]
+    fn drains_by_priority_then_admission_order() {
+        let q = JobQueue::new(16, 1e9);
+        for (id, priority) in [(0u64, 1u8), (1, 0), (2, 1), (3, 0), (4, 2)] {
+            submit(&q, id, priority, 0.0);
+        }
+        let ids: Vec<u64> = q.pop_batch(16).iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec![1, 3, 0, 2, 4]);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn partial_pops_preserve_order_across_flushes() {
+        let q = JobQueue::new(16, 1e9);
+        for id in 0..6u64 {
+            submit(&q, id, 0, 0.0);
+        }
+        let first: Vec<u64> = q.pop_batch(2).iter().map(|j| j.id).collect();
+        submit(&q, 6, 0, 0.0);
+        let rest: Vec<u64> = q.pop_batch(16).iter().map(|j| j.id).collect();
+        assert_eq!(first, vec![0, 1]);
+        assert_eq!(rest, vec![2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn depth_cap_rejects_but_empty_queue_admits() {
+        let q = JobQueue::new(2, 1e9);
+        submit(&q, 0, 0, 0.0);
+        submit(&q, 1, 0, 0.0);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let (tx, _rx) = mpsc::channel();
+        let err = q.submit(2, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        q.pop_batch(16);
+        submit(&q, 3, 0, 0.0); // admits again once drained
+    }
+
+    #[test]
+    fn priced_backlog_rejects_only_loaded_queues() {
+        let q = JobQueue::new(16, 1.0);
+        // An oversized job is admitted while the queue is empty...
+        submit(&q, 0, 0, 5.0);
+        assert_eq!(q.backlog_seconds(), 5.0);
+        // ...but any further submission is priced out.
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let (tx, _rx) = mpsc::channel();
+        let err = q.submit(1, input(24, 3, &mut rng), 0, None, 0.1, tx).unwrap_err();
+        assert!(err.to_string().contains("admission rejected"), "{err}");
+        q.pop_batch(16);
+        assert_eq!(q.backlog_seconds(), 0.0);
+        submit(&q, 2, 0, 0.1);
+    }
+
+    #[test]
+    fn expired_deadlines_fail_at_flush() {
+        let q = JobQueue::new(16, 1e9);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (tx, rx) = mpsc::channel();
+        let past = Instant::now() - Duration::from_millis(10);
+        q.submit(0, input(24, 3, &mut rng), 0, Some(past), 0.0, tx).unwrap();
+        submit(&q, 1, 0, 0.0);
+        let batch = q.pop_batch(16);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 1);
+        let outcome = rx.try_recv().expect("expired job must get an outcome");
+        assert!(outcome.unwrap_err().contains("deadline"));
+        assert_eq!(q.expired_jobs(), 1);
+    }
+
+    #[test]
+    fn oldest_enqueued_tracks_the_earliest_pending_job() {
+        let q = JobQueue::new(16, 1e9);
+        assert!(q.oldest_enqueued().is_none());
+        submit(&q, 0, 1, 0.0); // lower-urgency class first
+        let first = q.oldest_enqueued().expect("one job pending");
+        submit(&q, 1, 0, 0.0); // more urgent but newer
+        assert_eq!(q.oldest_enqueued(), Some(first), "age, not priority, drives the window");
+        q.pop_batch(16);
+        assert!(q.oldest_enqueued().is_none());
+    }
+
+    #[test]
+    fn close_rejects_new_work_and_wakes_waiters() {
+        let q = JobQueue::new(16, 1e9);
+        q.close();
+        assert!(q.is_closed());
+        assert!(!q.wait_job());
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (tx, _rx) = mpsc::channel();
+        assert!(q.submit(0, input(24, 3, &mut rng), 0, None, 0.0, tx).is_err());
+    }
+
+    #[test]
+    fn wait_depth_returns_current_depth_on_timeout() {
+        let q = JobQueue::new(16, 1e9);
+        submit(&q, 0, 0, 0.0);
+        let d = q.wait_depth(4, Duration::from_millis(5));
+        assert_eq!(d, 1);
+        assert_eq!(q.wait_depth(1, Duration::from_secs(5)), 1); // already met
+    }
+}

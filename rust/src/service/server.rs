@@ -1,0 +1,521 @@
+//! TCP JSON-lines front end over the in-process [`Service`].
+//!
+//! One request per line, one response per line (both single JSON
+//! objects, `\n`-terminated). Verbs:
+//!
+//! | verb | request fields | response |
+//! | --- | --- | --- |
+//! | `submit` | `n`, `bw`, `band` (row-major in-band values, see [`band_values`]), optional `precision` (`fp16\|fp32\|fp64`, default `fp64`), `priority` (default 0), `deadline_ms` | `id`, `sv` (descending, f64), `metrics` (launches/tasks/max_parallel/unrolled_launches/bytes), `batch_jobs`, `queue_us` |
+//! | `stats` | — | queue depth/backlog, job counters, occupancy, mean batch size, cache counters + hit rate, throughput, knobs |
+//! | `ping` | — | `{"ok":true,"verb":"ping"}` |
+//! | `shutdown` | — | acknowledges, then stops accepting and drains the service |
+//!
+//! Every response carries `"ok"`; failures are
+//! `{"ok":false,"error":"..."}`. Numbers ride Rust's shortest-roundtrip
+//! `f64` formatting, so served singular values are **bitwise** what the
+//! backend produced (see [`crate::util::json`]).
+//!
+//! A `submit` blocks its connection until the job completes; concurrency
+//! across connections is what feeds the micro-batcher (each connection is
+//! handled on its own thread). The example client
+//! (`rust/examples/serve_client.rs`) and the loopback integration test
+//! drive exactly this protocol.
+
+use crate::banded::storage::Banded;
+use crate::batch::BatchInput;
+use crate::config::ServiceConfig;
+use crate::coordinator::metrics::LaunchMetrics;
+use crate::error::{Error, Result};
+use crate::scalar::{Scalar, F16};
+use crate::service::queue::JobResult;
+use crate::service::Service;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, BufWriter, Write as _};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Number of in-band values of an upper-banded `n × n` matrix with `bw`
+/// superdiagonals — the required `band` payload length. Closed form
+/// (O(1), `bw` clamped to `n − 1`): full rows contribute `bw + 1`
+/// values, the last `bw` rows taper triangularly.
+pub fn band_expected_len(n: usize, bw: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let bw = bw.min(n - 1);
+    n * (bw + 1) - bw * (bw + 1) / 2
+}
+
+/// Serialize the in-band entries of `a` (rows `i`, columns
+/// `i ..= min(i+bw, n−1)`, row-major) as f64 — the `band` payload of a
+/// `submit` request. Widening to f64 is exact for every supported
+/// precision, so the payload round-trips bitwise.
+pub fn band_values<T: Scalar>(a: &Banded<T>, bw: usize) -> Vec<f64> {
+    let n = a.n();
+    let mut out = Vec::with_capacity(band_expected_len(n, bw));
+    for i in 0..n {
+        for j in i..=(i + bw).min(n - 1) {
+            out.push(a.get(i, j).to_f64());
+        }
+    }
+    out
+}
+
+/// Rebuild a reduction-ready [`BatchInput`] from a `band` payload — the
+/// server side of [`band_values`]. `tw` sizes the fill-in storage (the
+/// service uses its configured tuning).
+pub fn band_from_values(
+    n: usize,
+    bw: usize,
+    tw: usize,
+    precision: &str,
+    values: &[f64],
+) -> Result<BatchInput> {
+    if n < 2 || bw == 0 || bw >= n {
+        return Err(Error::Config(format!(
+            "bad problem shape: need n ≥ 2 and 1 ≤ bw < n (got n={n}, bw={bw})"
+        )));
+    }
+    // O(1) length check in u128: `n` is client-supplied and must be
+    // rejected before anything walks or allocates proportional to it
+    // (the closed form would overflow usize for hostile n × bw).
+    let expected = {
+        let (n, bw) = (n as u128, bw as u128);
+        n * (bw + 1) - bw * (bw + 1) / 2
+    };
+    if values.len() as u128 != expected {
+        return Err(Error::Config(format!(
+            "band payload has {} values; n={n}, bw={bw} needs {expected}",
+            values.len()
+        )));
+    }
+    fn fill<T: Scalar>(n: usize, bw: usize, tw: usize, values: &[f64]) -> Banded<T> {
+        let mut a = Banded::<T>::for_reduction(n, bw, tw);
+        let mut k = 0;
+        for i in 0..n {
+            for j in i..=(i + bw).min(n - 1) {
+                a.set(i, j, T::from_f64(values[k]));
+                k += 1;
+            }
+        }
+        a
+    }
+    Ok(match precision {
+        "fp64" => BatchInput::from((fill::<f64>(n, bw, tw, values), bw)),
+        "fp32" => BatchInput::from((fill::<f32>(n, bw, tw, values), bw)),
+        "fp16" => BatchInput::from((fill::<F16>(n, bw, tw, values), bw)),
+        other => {
+            return Err(Error::Config(format!("unknown precision {other:?} (fp16|fp32|fp64)")))
+        }
+    })
+}
+
+/// Render a complete `submit` request line for `a` — what the example
+/// client sends and what tests replay. The precision label comes from
+/// `T`.
+pub fn submit_request<T: Scalar>(a: &Banded<T>, bw: usize, priority: u8) -> String {
+    let band: Vec<Json> = band_values(a, bw).into_iter().map(Json::Num).collect();
+    Json::obj()
+        .set("verb", "submit")
+        .set("n", a.n())
+        .set("bw", bw)
+        .set("precision", T::NAME)
+        .set("priority", priority as usize)
+        .set("band", Json::Arr(band))
+        .render()
+}
+
+fn metrics_json(m: &LaunchMetrics) -> Json {
+    Json::obj()
+        .set("launches", m.launches)
+        .set("tasks", m.tasks)
+        .set("max_parallel", m.max_parallel)
+        .set("unrolled_launches", m.unrolled_launches)
+        .set("bytes", Json::Int(m.bytes as i64))
+}
+
+fn result_json(r: &JobResult) -> Json {
+    Json::obj()
+        .set("ok", true)
+        .set("verb", "submit")
+        .set("id", Json::Int(r.id as i64))
+        .set("n", r.n)
+        .set("bw", r.bw)
+        .set("precision", r.precision)
+        .set("batch_jobs", r.batch_jobs)
+        .set("queue_us", Json::Int(r.queue_wait.as_micros() as i64))
+        .set("metrics", metrics_json(&r.metrics))
+        .set("sv", Json::Arr(r.sv.iter().map(|&x| Json::Num(x)).collect()))
+}
+
+fn stats_json(service: &Service) -> Json {
+    let s = service.stats();
+    let cfg = service.config();
+    let cache = Json::obj()
+        .set("plan_hits", Json::Int(s.cache.plan_hits as i64))
+        .set("plan_misses", Json::Int(s.cache.plan_misses as i64))
+        .set("merge_hits", Json::Int(s.cache.merge_hits as i64))
+        .set("merge_misses", Json::Int(s.cache.merge_misses as i64))
+        .set("tune_hits", Json::Int(s.cache.tune_hits as i64))
+        .set("tune_misses", Json::Int(s.cache.tune_misses as i64))
+        .set("hit_rate", s.cache.hit_rate());
+    let stats = Json::obj()
+        .set("queue_depth", s.queue_depth)
+        .set("backlog_seconds", s.backlog_seconds)
+        .set("jobs_submitted", Json::Int(s.jobs_submitted as i64))
+        .set("jobs_rejected", Json::Int(s.jobs_rejected as i64))
+        .set("jobs_completed", Json::Int(s.jobs_completed as i64))
+        .set("jobs_failed", Json::Int(s.jobs_failed as i64))
+        .set("batches", Json::Int(s.batches as i64))
+        .set("launches", Json::Int(s.launches as i64))
+        .set("tasks", Json::Int(s.tasks as i64))
+        .set("occupancy", s.occupancy)
+        .set("avg_batch_jobs", s.avg_batch_jobs)
+        .set("busy_seconds", s.busy_seconds)
+        .set("uptime_s", s.uptime.as_secs_f64())
+        .set("throughput_jobs_per_s", s.throughput_jobs_per_s)
+        .set("cache", cache)
+        .set("backend", cfg.backend.name())
+        .set("max_coresident", cfg.batch.max_coresident)
+        .set("window_us", Json::Int(cfg.window.as_micros() as i64))
+        .set("capacity", cfg.params.capacity());
+    Json::obj().set("ok", true).set("verb", "stats").set("stats", stats)
+}
+
+fn error_json(msg: impl Into<String>) -> Json {
+    Json::obj().set("ok", false).set("error", Json::s(msg))
+}
+
+/// Handle one request line. Returns the response and whether the server
+/// should shut down after sending it.
+fn respond(service: &Service, line: &str) -> (Json, bool) {
+    let request = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return (error_json(format!("bad request: {e}")), false),
+    };
+    match request.get("verb").and_then(Json::as_str) {
+        Some("ping") => (Json::obj().set("ok", true).set("verb", "ping"), false),
+        Some("stats") => (stats_json(service), false),
+        Some("shutdown") => (Json::obj().set("ok", true).set("verb", "shutdown"), true),
+        Some("submit") => (handle_submit(service, &request), false),
+        Some(other) => (error_json(format!("unknown verb {other:?}")), false),
+        None => (error_json("missing \"verb\""), false),
+    }
+}
+
+fn handle_submit(service: &Service, request: &Json) -> Json {
+    let field_usize = |key: &str| request.get(key).and_then(Json::as_usize);
+    let (Some(n), Some(bw)) = (field_usize("n"), field_usize("bw")) else {
+        return error_json("submit needs integer \"n\" and \"bw\"");
+    };
+    let precision = request.get("precision").and_then(Json::as_str).unwrap_or("fp64");
+    // Optional fields are absent-or-valid: a present-but-malformed value
+    // is an error, never silently the default (a client must not believe
+    // a deadline or priority class was enforced when it was dropped).
+    let priority: u8 = match request.get("priority") {
+        None => 0,
+        Some(v) => match v.as_usize().and_then(|p| u8::try_from(p).ok()) {
+            Some(p) => p,
+            None => return error_json("priority must be an integer in 0..=255"),
+        },
+    };
+    let deadline = match request.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(ms) => Some(Duration::from_millis(ms as u64)),
+            None => return error_json("deadline_ms must be a non-negative integer"),
+        },
+    };
+    let Some(band) = request.get("band").and_then(Json::as_array) else {
+        return error_json("submit needs a \"band\" array");
+    };
+    let mut values = Vec::with_capacity(band.len());
+    for v in band {
+        match v.as_f64() {
+            Some(x) => values.push(x),
+            None => return error_json("band values must be numbers"),
+        }
+    }
+    let tw = service.config().params.effective_tw(bw);
+    let input = match band_from_values(n, bw, tw, precision, &values) {
+        Ok(input) => input,
+        Err(e) => return error_json(e.to_string()),
+    };
+    match service.submit_wait(input, priority, deadline) {
+        Ok(result) => result_json(&result),
+        Err(e) => error_json(e.to_string()),
+    }
+}
+
+/// The TCP server: a bound listener plus the service it fronts.
+pub struct Server {
+    listener: TcpListener,
+    service: Arc<Service>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Start the service and bind the listener (use port 0 for an
+    /// ephemeral port; read it back with [`Server::local_addr`]).
+    pub fn bind(cfg: ServiceConfig, addr: &str) -> Result<Self> {
+        let service = Arc::new(Service::start(cfg)?);
+        let listener = TcpListener::bind(addr).map_err(Error::Io)?;
+        Ok(Self { listener, service, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// The fronted service (for in-process submission or stats alongside
+    /// the TCP surface).
+    pub fn service(&self) -> &Arc<Service> {
+        &self.service
+    }
+
+    /// Accept and serve connections until a `shutdown` verb arrives, then
+    /// drain the service and return. Each connection runs on its own
+    /// thread; a thread dies with its connection. Requests already being
+    /// answered when the shutdown verb lands still get their responses:
+    /// the drain waits for every in-flight request to finish writing
+    /// (idle connections — blocked reading, not answering — don't hold
+    /// shutdown up).
+    pub fn run(self) -> Result<()> {
+        let addr = self.local_addr();
+        let inflight = Arc::new(AtomicUsize::new(0));
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let service = Arc::clone(&self.service);
+            let stop = Arc::clone(&self.stop);
+            let inflight = Arc::clone(&inflight);
+            let _ = std::thread::Builder::new().name("bsvd-serve-conn".into()).spawn(move || {
+                handle_connection(stream, &service, &stop, &inflight, addr);
+            });
+        }
+        self.service.shutdown();
+        while inflight.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(())
+    }
+}
+
+/// Where the shutdown handler connects to wake the accept loop: a
+/// wildcard bind (`0.0.0.0` / `::`) is not a connectable destination on
+/// every platform, so route the nudge through the loopback of the same
+/// family instead.
+fn nudge_addr(addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        let ip = if addr.is_ipv4() {
+            IpAddr::V4(Ipv4Addr::LOCALHOST)
+        } else {
+            IpAddr::V6(Ipv6Addr::LOCALHOST)
+        };
+        SocketAddr::new(ip, addr.port())
+    } else {
+        addr
+    }
+}
+
+/// Longest request line the server will buffer. Generous for real
+/// payloads (an n = 4096, bw = 128 f64 band is ~10 MiB of JSON) while
+/// bounding what one connection can make the server hold in memory.
+const MAX_LINE_BYTES: u64 = 64 * 1024 * 1024;
+
+fn handle_connection(
+    stream: TcpStream,
+    service: &Service,
+    stop: &AtomicBool,
+    inflight: &AtomicUsize,
+    addr: SocketAddr,
+) {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = BufWriter::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        let read = match (&mut reader).take(MAX_LINE_BYTES).read_until(b'\n', &mut buf) {
+            Ok(0) => break, // EOF
+            Ok(read) => read as u64,
+            Err(_) => break,
+        };
+        if read == MAX_LINE_BYTES && buf.last() != Some(&b'\n') {
+            // The line never ended within the budget; answer once and
+            // drop the connection rather than buffering without bound.
+            let oversized = error_json(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+            let _ = writeln!(writer, "{}", oversized.render());
+            let _ = writer.flush();
+            break;
+        }
+        let line = match std::str::from_utf8(&buf) {
+            Ok(s) => s.trim(),
+            Err(_) => {
+                let _ = writeln!(writer, "{}", error_json("request is not UTF-8").render());
+                let _ = writer.flush();
+                break;
+            }
+        };
+        if line.is_empty() {
+            continue;
+        }
+        inflight.fetch_add(1, Ordering::SeqCst);
+        let (response, shutdown) = respond(service, line);
+        let written = writeln!(writer, "{}", response.render()).is_ok() && writer.flush().is_ok();
+        inflight.fetch_sub(1, Ordering::SeqCst);
+        if !written {
+            break;
+        }
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            // Nudge the accept loop awake so it observes the flag.
+            let _ = TcpStream::connect(nudge_addr(addr));
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SequentialBackend;
+    use crate::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
+    use crate::generate::random_banded;
+    use crate::pipeline::banded_singular_values_with;
+    use crate::util::rng::Xoshiro256;
+
+    fn cfg() -> ServiceConfig {
+        ServiceConfig {
+            params: TuneParams { tpb: 32, tw: 4, max_blocks: 16 },
+            batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+            backend: BackendKind::Sequential,
+            threads: 1,
+            window: Duration::from_micros(100),
+            queue_cap: 32,
+            backlog_cap_s: 1e6,
+            cache_cap: 16,
+            arch: "H100",
+        }
+    }
+
+    #[test]
+    fn band_payload_roundtrips_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (n, bw, tw) = (40, 5, 4);
+        let a = random_banded::<f64>(n, bw, tw, &mut rng);
+        let values = band_values(&a, bw);
+        assert_eq!(values.len(), band_expected_len(n, bw));
+        let back = band_from_values(n, bw, tw, "fp64", &values).unwrap();
+        match back {
+            BatchInput::F64 { a: b, bw: bw2 } => {
+                assert_eq!(bw2, bw);
+                assert_eq!(b, a);
+            }
+            _ => panic!("wrong precision"),
+        }
+    }
+
+    #[test]
+    fn band_payload_validates_shape_and_length() {
+        assert!(band_from_values(1, 1, 1, "fp64", &[]).is_err()); // n too small
+        assert!(band_from_values(8, 0, 1, "fp64", &[]).is_err()); // bw too small
+        assert!(band_from_values(8, 8, 1, "fp64", &[]).is_err()); // bw ≥ n
+        assert!(band_from_values(8, 2, 1, "fp64", &[0.0; 3]).is_err()); // short
+        assert!(band_from_values(8, 2, 1, "nope", &[0.0; 21]).is_err());
+        assert_eq!(band_expected_len(8, 2), 21);
+        assert!(band_from_values(8, 2, 1, "fp32", &[0.0; 21]).is_ok());
+    }
+
+    #[test]
+    fn shutdown_nudge_routes_wildcard_binds_through_loopback() {
+        let v4: SocketAddr = "0.0.0.0:7070".parse().unwrap();
+        assert_eq!(nudge_addr(v4), "127.0.0.1:7070".parse().unwrap());
+        let v6: SocketAddr = "[::]:7070".parse().unwrap();
+        assert_eq!(nudge_addr(v6), "[::1]:7070".parse().unwrap());
+        let concrete: SocketAddr = "192.0.2.1:9".parse().unwrap();
+        assert_eq!(nudge_addr(concrete), concrete);
+    }
+
+    #[test]
+    fn oversized_shape_is_rejected_in_constant_time() {
+        // A hostile n must be rejected by arithmetic, not by iterating
+        // (or allocating) anything proportional to it.
+        let t0 = std::time::Instant::now();
+        let err = band_from_values(usize::MAX / 2, 3, 1, "fp64", &[1.0]).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(1), "shape check not O(1)");
+        assert!(err.to_string().contains("values"), "{err}");
+    }
+
+    #[test]
+    fn respond_handles_the_verb_set_in_process() {
+        let service = Service::start(cfg()).unwrap();
+        let (pong, stop) = respond(&service, "{\"verb\":\"ping\"}");
+        assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(!stop);
+        let (stats, _) = respond(&service, "{\"verb\":\"stats\"}");
+        assert_eq!(stats.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(stats.get("stats").and_then(|s| s.get("backend")).is_some());
+        let (_, stop) = respond(&service, "{\"verb\":\"shutdown\"}");
+        assert!(stop);
+        let (err, _) = respond(&service, "{\"verb\":\"bogus\"}");
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+        let (err, _) = respond(&service, "not json");
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+        let (err, _) = respond(&service, "{\"n\":4}");
+        assert!(err.get("error").unwrap().as_str().unwrap().contains("verb"));
+    }
+
+    #[test]
+    fn submit_verb_matches_direct_pipeline_bitwise_in_process() {
+        let cfg = cfg();
+        let service = Service::start(cfg.clone()).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let (n, bw) = (36, 5);
+        let a = random_banded::<f64>(n, bw, cfg.params.effective_tw(bw), &mut rng);
+        let direct = banded_singular_values_with(&SequentialBackend::new(), &a, bw, &cfg.params)
+            .unwrap();
+        let (response, _) = respond(&service, &submit_request(&a, bw, 0));
+        assert_eq!(response.get("ok").and_then(Json::as_bool), Some(true), "{response:?}");
+        let sv: Vec<f64> = response
+            .get("sv")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(sv.len(), direct.len());
+        for (got, want) in sv.iter().zip(direct.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        let metrics = response.get("metrics").unwrap();
+        assert!(metrics.get("launches").unwrap().as_i64().unwrap() > 0);
+    }
+
+    #[test]
+    fn submit_verb_rejects_malformed_requests() {
+        let service = Service::start(cfg()).unwrap();
+        for bad in [
+            "{\"verb\":\"submit\"}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1,\"x\"]}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"priority\":900}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"priority\":-1}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"priority\":\"hi\"}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"deadline_ms\":\"100\"}",
+        ] {
+            let (r, _) = respond(&service, bad);
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+        }
+    }
+}

@@ -21,6 +21,44 @@ pub struct TuneResult {
     pub evaluated: usize,
 }
 
+/// Memoization key for an [`autotune_for`] call — the cache hook the
+/// service plan/autotune cache ([`crate::service::PlanCache`]) stores
+/// results under. The search is a pure function of exactly these inputs
+/// (grid + refinement over the analytical model, no RNG, no hardware
+/// probing), so equal keys always reproduce the identical `TuneResult`.
+/// Float model fields are keyed by their bit patterns, making the key
+/// `Eq + Hash` without tolerance games.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    arch: &'static str,
+    element_bytes: usize,
+    n: usize,
+    bw: usize,
+    dispatch_bits: u64,
+    element_size: Option<usize>,
+    staged_bits: u64,
+}
+
+impl TuneKey {
+    pub fn new(
+        arch: &GpuArch,
+        element_bytes: usize,
+        n: usize,
+        bw: usize,
+        backend: &BackendCostModel,
+    ) -> Self {
+        Self {
+            arch: arch.name,
+            element_bytes,
+            n,
+            bw,
+            dispatch_bits: backend.dispatch_overhead_s.to_bits(),
+            element_size: backend.element_size,
+            staged_bits: backend.staged_bytes_per_elem.to_bits(),
+        }
+    }
+}
+
 /// The paper's hardware-adapted starting heuristic: tilewidth = one full
 /// cache line of elements, generous TPB, MaxBlocks sized to the device's
 /// execution-unit count.
@@ -164,6 +202,22 @@ mod tests {
             native_under_pjrt
         );
         assert!(for_pjrt.evaluated > 50);
+    }
+
+    #[test]
+    fn tune_keys_distinguish_exactly_the_search_inputs() {
+        let native = BackendCostModel::native();
+        let a = TuneKey::new(&hw::H100, 4, 1024, 32, &native);
+        assert_eq!(a, TuneKey::new(&hw::H100, 4, 1024, 32, &native));
+        assert_ne!(a, TuneKey::new(&hw::A100, 4, 1024, 32, &native));
+        assert_ne!(a, TuneKey::new(&hw::H100, 8, 1024, 32, &native));
+        assert_ne!(a, TuneKey::new(&hw::H100, 4, 2048, 32, &native));
+        assert_ne!(a, TuneKey::new(&hw::H100, 4, 1024, 64, &native));
+        assert_ne!(a, TuneKey::new(&hw::H100, 4, 1024, 32, &BackendCostModel::pjrt()));
+        assert_ne!(
+            TuneKey::new(&hw::H100, 4, 1024, 32, &BackendCostModel::pjrt()),
+            TuneKey::new(&hw::H100, 4, 1024, 32, &BackendCostModel::pjrt_tile_streaming())
+        );
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod model;
 pub mod occupancy;
 pub mod profile;
 
-pub use autotune::{autotune, autotune_for, heuristic_params, TuneResult};
+pub use autotune::{autotune, autotune_for, heuristic_params, TuneKey, TuneResult};
 pub use hw::{all_archs, arch_by_name, GpuArch};
 pub use model::{
     launch_cost, simulate_plan, simulate_plan_for, simulate_reduction, simulate_reduction_for,

@@ -46,6 +46,17 @@ impl Args {
         }
     }
 
+    /// Typed accessor for options whose absence is meaningful: `None`
+    /// when the option is unset or set to the empty string (the
+    /// conventional "defer to another source" default, e.g. an
+    /// environment knob), `Err` when present but unparsable.
+    pub fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None | Some("") => Ok(None),
+            Some(s) => s.parse().map(Some).map_err(|_| format!("bad value for --{key}: {s:?}")),
+        }
+    }
+
     pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, String> {
         match self.get(key) {
             Some(s) => s
@@ -246,6 +257,17 @@ mod tests {
         assert_eq!(p.args.parse_or("n", 0usize), 512);
         assert_eq!(p.args.parse_or("tw", 0usize), 16);
         assert!(p.args.flag("verify"));
+    }
+
+    #[test]
+    fn optional_values_distinguish_absent_empty_and_bad() {
+        let p = cli().parse(&sv(&["reduce", "--tw", "16"])).unwrap();
+        assert_eq!(p.args.parse_opt::<usize>("tw"), Ok(Some(16)));
+        assert_eq!(p.args.parse_opt::<usize>("missing"), Ok(None));
+        let p = cli().parse(&sv(&["reduce", "--tw="])).unwrap();
+        assert_eq!(p.args.parse_opt::<usize>("tw"), Ok(None));
+        let p = cli().parse(&sv(&["reduce", "--tw", "x"])).unwrap();
+        assert!(p.args.parse_opt::<usize>("tw").is_err());
     }
 
     #[test]

@@ -1,8 +1,17 @@
-//! Minimal JSON writer (no `serde` facade in the offline crate set).
+//! Minimal JSON writer + parser (no `serde` facade in the offline crate
+//! set).
 //!
 //! Experiment harnesses emit machine-readable results under
-//! `target/experiments/*.json` alongside the printed paper-style tables.
-//! Only writing is needed; values are built with a small builder enum.
+//! `target/experiments/*.json` alongside the printed paper-style tables;
+//! the reduction service ([`crate::service`]) speaks a JSON-lines wire
+//! protocol through the same value type. Writing uses a small builder
+//! enum; parsing is a recursive-descent reader ([`Json::parse`]).
+//!
+//! Float fidelity: `Num` renders through Rust's shortest-roundtrip
+//! `f64` formatting and parses back with `str::parse::<f64>`, so a
+//! finite `f64` survives a render→parse round trip **bitwise** — the
+//! property the service relies on to return bitwise-identical singular
+//! values over the wire.
 
 use std::fmt::Write as _;
 
@@ -40,6 +49,73 @@ impl Json {
         let mut out = String::new();
         self.write(&mut out);
         out
+    }
+
+    /// Parse one JSON value (object/array/string/number/bool/null) from
+    /// `s`. Trailing non-whitespace is an error — the service protocol is
+    /// one value per line.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: s.as_bytes(), pos: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing characters at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` for non-objects and missing keys; the
+    /// first binding wins, matching the writer which never duplicates).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: `Num` as-is, `Int` widened. (`i64` → `f64` is exact
+    /// up to 2^53 — far beyond any count this crate emits.)
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Integer view: `Int` as-is, integral `Num`s converted exactly.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            Json::Num(x) if x.fract() == 0.0 && x.abs() < 9.0e15 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -97,6 +173,232 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Recursive-descent JSON reader over raw bytes (string contents are
+/// re-validated as UTF-8 when sliced back out, so multi-byte characters
+/// pass through untouched). Nesting is bounded: the parser recurses per
+/// container, and a wire-facing consumer (the reduction service) must
+/// reject a hostile `[[[[…` line with an error instead of overflowing
+/// the thread's stack.
+const MAX_DEPTH: usize = 128;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.nested(Self::array),
+            Some(b'{') => self.nested(Self::object),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => Err(format!("unexpected {:?} at byte {}", c as char, self.pos)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    /// Run a container parser one nesting level down, bounded by
+    /// [`MAX_DEPTH`].
+    fn nested(
+        &mut self,
+        f: impl FnOnce(&mut Self) -> Result<Json, String>,
+    ) -> Result<Json, String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} levels"));
+        }
+        let v = f(self);
+        self.depth -= 1;
+        v
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            pairs.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        let mut run = self.pos; // start of the current unescaped run
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    out.push_str(self.slice(run, self.pos)?);
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    out.push_str(self.slice(run, self.pos)?);
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        other => {
+                            return Err(format!("bad escape \\{} ", other as char));
+                        }
+                    }
+                    run = self.pos;
+                }
+                Some(_) => self.pos += 1,
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hex4 = |p: &mut Self| -> Result<u32, String> {
+            let s = p
+                .bytes
+                .get(p.pos..p.pos + 4)
+                .and_then(|b| std::str::from_utf8(b).ok())
+                .ok_or("truncated \\u escape")?;
+            let v = u32::from_str_radix(s, 16).map_err(|_| format!("bad \\u escape {s:?}"))?;
+            p.pos += 4;
+            Ok(v)
+        };
+        let hi = hex4(self)?;
+        // Surrogate pair (the writer never emits one, but clients may).
+        if (0xD800..0xDC00).contains(&hi) {
+            if self.bytes.get(self.pos..self.pos + 2) != Some(b"\\u") {
+                return Err("unpaired surrogate".into());
+            }
+            self.pos += 2;
+            let lo = hex4(self)?;
+            if !(0xDC00..0xE000).contains(&lo) {
+                return Err("invalid low surrogate".into());
+            }
+            let c = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+            return char::from_u32(c).ok_or_else(|| "invalid surrogate pair".into());
+        }
+        char::from_u32(hi).ok_or_else(|| format!("invalid codepoint {hi:#x}"))
+    }
+
+    fn slice(&self, start: usize, end: usize) -> Result<&str, String> {
+        std::str::from_utf8(&self.bytes[start..end]).map_err(|_| "invalid UTF-8".to_string())
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut integral = true;
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    integral = false;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let tok = self.slice(start, self.pos)?;
+        // "-0" must stay a float: Int(0) would drop the sign bit the
+        // bitwise round-trip guarantee preserves.
+        if integral && tok != "-0" {
+            if let Ok(i) = tok.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        tok.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number {tok:?} at byte {start}"))
     }
 }
 
@@ -180,5 +482,81 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn parses_scalars_and_containers() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-42").unwrap(), Json::Int(-42));
+        assert_eq!(Json::parse("1.5e2").unwrap(), Json::Num(150.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::s("hi"));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{ }").unwrap(), Json::obj());
+        let v = Json::parse("{\"a\": [1, 2.5, \"x\"], \"b\": {\"c\": false}}").unwrap();
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in ["", "{", "[1,", "\"open", "nul", "{\"a\" 1}", "1 2", "{'a':1}", "[1,]"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn nesting_is_bounded_but_generous() {
+        let deep = |levels: usize| format!("{}0{}", "[".repeat(levels), "]".repeat(levels));
+        assert!(Json::parse(&deep(100)).is_ok());
+        let err = Json::parse(&deep(100_000)).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        // Mixed containers count against the same budget (2 levels per
+        // repeat here: 120 total, inside the 128 bound).
+        assert!(Json::parse(&format!("{}1{}", "[{\"k\":".repeat(60), "}]".repeat(60))).is_ok());
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let s = "a\"b\\c\nd\te\u{1F600}é";
+        let rendered = Json::s(s).render();
+        assert_eq!(Json::parse(&rendered).unwrap().as_str(), Some(s));
+        // Client-side \u escapes, including a surrogate pair.
+        assert_eq!(Json::parse("\"\\u0041\\ud83d\\ude00\"").unwrap().as_str(), Some("A\u{1F600}"));
+        assert!(Json::parse("\"\\ud83d\"").is_err()); // unpaired surrogate
+    }
+
+    #[test]
+    fn render_parse_roundtrips_f64_bitwise() {
+        // The property the service wire format relies on: finite doubles
+        // survive render→parse exactly.
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(7);
+        for _ in 0..2000 {
+            let bits = rng.next_u64();
+            let x = f64::from_bits(bits);
+            if !x.is_finite() {
+                continue;
+            }
+            let parsed = Json::parse(&Json::Num(x).render()).unwrap();
+            let y = parsed.as_f64().unwrap();
+            assert_eq!(y.to_bits(), x.to_bits(), "{x:?} -> {y:?}");
+        }
+        // And typical values, including negative zero (kept a float so
+        // the sign bit survives).
+        for x in [0.0f64, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, f64::MAX] {
+            let parsed = Json::parse(&Json::Num(x).render()).unwrap();
+            assert_eq!(parsed.as_f64().unwrap().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn numeric_accessors_convert_exactly() {
+        assert_eq!(Json::Int(7).as_f64(), Some(7.0));
+        assert_eq!(Json::Num(7.0).as_i64(), Some(7));
+        assert_eq!(Json::Num(7.5).as_i64(), None);
+        assert_eq!(Json::Int(-1).as_usize(), None);
+        assert_eq!(Json::Int(3).as_usize(), Some(3));
+        assert_eq!(Json::s("3").as_i64(), None);
     }
 }

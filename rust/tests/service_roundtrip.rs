@@ -1,0 +1,305 @@
+//! The reduction service's contract, end to end over loopback TCP:
+//!
+//! - **Bitwise fidelity** — a job submitted over the wire (JSON-lines
+//!   protocol, concurrent connections, dynamic micro-batching) returns
+//!   exactly the singular values a direct
+//!   [`banded_singular_values_with`] call produces on the same backend,
+//!   for every registry backend that can run without artifacts
+//!   (artifact-dependent backends skip with a loud message, like
+//!   `pjrt_roundtrip.rs`).
+//! - **Admission-order batching** — the batcher's flush order never
+//!   violates admission order within a priority class
+//!   (property-tested against the queue).
+//! - **Cache amortization** — repeated same-shape submissions report a
+//!   positive plan-cache hit rate through the `stats` verb.
+//!
+//! Deterministic by construction: seeded RNG, explicit thread counts,
+//! explicit windows generous enough for coarse platform clocks.
+
+use banded_svd::backend::for_kind;
+use banded_svd::batch::BatchInput;
+use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
+use banded_svd::generate::random_banded;
+use banded_svd::pipeline::banded_singular_values_with;
+use banded_svd::service::server::submit_request;
+use banded_svd::service::{Server, Service};
+use banded_svd::util::json::Json;
+use banded_svd::util::prop::{check, Config};
+use banded_svd::util::rng::Xoshiro256;
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn params() -> TuneParams {
+    TuneParams { tpb: 32, tw: 4, max_blocks: 24 }
+}
+
+fn service_cfg(backend: BackendKind) -> ServiceConfig {
+    ServiceConfig {
+        params: params(),
+        batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+        backend,
+        threads: 2,
+        window: Duration::from_millis(2),
+        queue_cap: 64,
+        backlog_cap_s: 1e9,
+        cache_cap: 32,
+        arch: "H100",
+    }
+}
+
+fn connect(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).expect("connect to loopback server");
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    (reader, stream)
+}
+
+fn roundtrip(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, line: &str) -> Json {
+    writeln!(writer, "{line}").expect("send request");
+    writer.flush().expect("flush request");
+    let mut response = String::new();
+    reader.read_line(&mut response).expect("read response");
+    Json::parse(response.trim_end()).expect("parse response")
+}
+
+fn sv_of(response: &Json) -> Vec<f64> {
+    assert_eq!(response.get("ok").and_then(Json::as_bool), Some(true), "{}", response.render());
+    response
+        .get("sv")
+        .and_then(Json::as_array)
+        .expect("sv array")
+        .iter()
+        .map(|v| v.as_f64().expect("numeric singular value"))
+        .collect()
+}
+
+fn assert_bitwise(got: &[f64], want: &[f64], context: &str) {
+    assert_eq!(got.len(), want.len(), "{context}: length");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{context}: σ[{i}] {g} vs {w}");
+    }
+}
+
+/// One client's precomputed workload: request lines plus the direct
+/// pipeline's answer for each.
+struct ClientLoad {
+    requests: Vec<String>,
+    expected: Vec<Vec<f64>>,
+}
+
+fn build_load(kind: BackendKind, seed: u64, jobs: usize) -> ClientLoad {
+    let backend = for_kind(kind, 2).expect("plan backend");
+    let params = params();
+    let shapes = [(48usize, 6usize, "fp64"), (36, 5, "fp32"), (56, 7, "fp64"), (28, 3, "fp32")];
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut requests = Vec::with_capacity(jobs);
+    let mut expected = Vec::with_capacity(jobs);
+    for job in 0..jobs {
+        let (n, bw, precision) = shapes[job % shapes.len()];
+        let tw = params.effective_tw(bw);
+        if precision == "fp64" {
+            let a = random_banded::<f64>(n, bw, tw, &mut rng);
+            let sv = banded_singular_values_with(backend.as_ref(), &a, bw, &params).unwrap();
+            expected.push(sv);
+            requests.push(submit_request(&a, bw, 0));
+        } else {
+            let a = random_banded::<f32>(n, bw, tw, &mut rng);
+            let sv = banded_singular_values_with(backend.as_ref(), &a, bw, &params).unwrap();
+            expected.push(sv);
+            requests.push(submit_request(&a, bw, 0));
+        }
+    }
+    ClientLoad { requests, expected }
+}
+
+#[test]
+fn served_results_are_bitwise_identical_to_the_direct_pipeline() {
+    for kind in BackendKind::ALL {
+        let backend = match for_kind(kind, 2) {
+            Ok(b) => b,
+            // pjrt-fused has no plan-executor form by design.
+            Err(_) => continue,
+        };
+        if backend.requires_artifacts() {
+            eprintln!("SKIP service roundtrip for {kind:?}: requires compiled artifacts");
+            continue;
+        }
+        drop(backend);
+
+        let server = Server::bind(service_cfg(kind), "127.0.0.1:0").expect("bind ephemeral");
+        let addr = server.local_addr();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        // Three concurrent connections × four jobs each: concurrency
+        // feeds the micro-batcher, so flushes genuinely merge plans.
+        let loads: Vec<ClientLoad> = (0u64..3).map(|c| build_load(kind, 1000 + c, 4)).collect();
+        std::thread::scope(|scope| {
+            for (c, load) in loads.iter().enumerate() {
+                scope.spawn(move || {
+                    let (mut reader, mut writer) = connect(addr);
+                    for (j, (line, want)) in
+                        load.requests.iter().zip(load.expected.iter()).enumerate()
+                    {
+                        let response = roundtrip(&mut reader, &mut writer, line);
+                        let sv = sv_of(&response);
+                        assert_bitwise(&sv, want, &format!("{kind:?} client {c} job {j}"));
+                    }
+                });
+            }
+        });
+
+        // Shutdown through the protocol; the server must exit cleanly.
+        let (mut reader, mut writer) = connect(addr);
+        let stats = roundtrip(&mut reader, &mut writer, "{\"verb\":\"stats\"}");
+        let body = stats.get("stats").expect("stats body");
+        let completed = body.get("jobs_completed").and_then(Json::as_i64).unwrap();
+        assert_eq!(completed, 12, "{kind:?}");
+        let ack = roundtrip(&mut reader, &mut writer, "{\"verb\":\"shutdown\"}");
+        assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
+        server_thread.join().expect("server thread").expect("clean shutdown");
+    }
+}
+
+#[test]
+fn repeated_shapes_report_cache_hits_through_stats() {
+    let server = Server::bind(service_cfg(BackendKind::Sequential), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let (mut reader, mut writer) = connect(addr);
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    for _ in 0..5 {
+        // Same (n, bw, precision, params) every time: the plan store must
+        // hit after the first lowering.
+        let a = random_banded::<f64>(40, 5, 4, &mut rng);
+        let response = roundtrip(&mut reader, &mut writer, &submit_request(&a, 5, 0));
+        assert_eq!(response.get("ok").and_then(Json::as_bool), Some(true));
+    }
+    let stats = roundtrip(&mut reader, &mut writer, "{\"verb\":\"stats\"}");
+    let cache = stats.get("stats").and_then(|s| s.get("cache")).expect("cache stats");
+    let plan_hits = cache.get("plan_hits").and_then(Json::as_i64).unwrap();
+    let hit_rate = cache.get("hit_rate").and_then(Json::as_f64).unwrap();
+    assert!(plan_hits > 0, "no plan-cache hits after repeated shapes: {}", cache.render());
+    assert!(hit_rate > 0.0, "hit rate 0 after repeated shapes: {}", cache.render());
+
+    let ack = roundtrip(&mut reader, &mut writer, "{\"verb\":\"shutdown\"}");
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
+    server_thread.join().unwrap().unwrap();
+}
+
+#[test]
+fn full_size_flushes_co_schedule_all_waiting_jobs() {
+    // Window far above any scheduler hiccup: the flush can only trigger
+    // on size, so all four concurrently submitted jobs must ride one
+    // merged plan — and still match the direct pipeline bitwise.
+    let cfg = ServiceConfig {
+        window: Duration::from_secs(30),
+        batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+        ..service_cfg(BackendKind::Sequential)
+    };
+    let service = Service::start(cfg).unwrap();
+    let params = params();
+    let shapes = [(48usize, 6usize), (36, 5), (56, 7), (28, 3)];
+    let mut rng = Xoshiro256::seed_from_u64(21);
+    let mats: Vec<_> = shapes
+        .iter()
+        .map(|&(n, bw)| random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng))
+        .collect();
+    let direct = for_kind(BackendKind::Sequential, 1).unwrap();
+    let mut expected: Vec<Vec<f64>> = Vec::new();
+    for (a, &(_, bw)) in mats.iter().zip(shapes.iter()) {
+        expected.push(banded_singular_values_with(direct.as_ref(), a, bw, &params).unwrap());
+    }
+
+    let barrier = std::sync::Barrier::new(4);
+    std::thread::scope(|scope| {
+        for ((a, &(_, bw)), want) in mats.iter().zip(shapes.iter()).zip(expected.iter()) {
+            let (service, barrier) = (&service, &barrier);
+            scope.spawn(move || {
+                barrier.wait();
+                let input = BatchInput::from((a.clone(), bw));
+                let result = service.submit_wait(input, 0, None).unwrap();
+                assert_eq!(result.batch_jobs, 4, "flush did not co-schedule all jobs");
+                assert_bitwise(&result.sv, want, &format!("co-scheduled bw={bw}"));
+            });
+        }
+    });
+    let stats = service.stats();
+    assert_eq!(stats.jobs_completed, 4);
+    assert_eq!(stats.batches, 1, "expected one merged flush");
+    assert!(stats.avg_batch_jobs > 3.9);
+}
+
+#[derive(Debug)]
+struct FlushCase {
+    /// (priority, pop-after) for each submitted job: after submitting
+    /// job `i`, pop a batch of `pop_after[i]` jobs (0 = no pop).
+    jobs: Vec<(u8, usize)>,
+}
+
+#[test]
+fn prop_flush_order_never_violates_admission_order_within_a_class() {
+    use banded_svd::service::queue::JobQueue;
+    use std::sync::mpsc;
+
+    let cfg = Config { cases: 64, ..Config::default() };
+    check(
+        "service-flush-order",
+        &cfg,
+        |rng| {
+            let jobs = (0..rng.range_inclusive(3, 24))
+                .map(|_| (rng.below(3) as u8, rng.below(4)))
+                .collect();
+            FlushCase { jobs }
+        },
+        |case| {
+            let queue = JobQueue::new(1024, 1e12);
+            let mut rng = Xoshiro256::seed_from_u64(13);
+            let mut receivers = Vec::new();
+            let mut popped: Vec<(u8, u64)> = Vec::new(); // (priority, id)
+            let mut submitted_per_class: Vec<Vec<u64>> = vec![Vec::new(); 3];
+            let pop = |queue: &JobQueue, max: usize, popped: &mut Vec<(u8, u64)>| {
+                let batch = queue.pop_batch(max);
+                // Within one flush, order is (priority, admission seq).
+                for pair in batch.windows(2) {
+                    let key0 = (pair[0].priority, pair[0].seq);
+                    let key1 = (pair[1].priority, pair[1].seq);
+                    if key0 >= key1 {
+                        return Err(format!("flush out of order: {key0:?} !< {key1:?}"));
+                    }
+                }
+                popped.extend(batch.iter().map(|j| (j.priority, j.id)));
+                Ok(())
+            };
+            for (id, &(priority, pop_after)) in case.jobs.iter().enumerate() {
+                let input = BatchInput::from((random_banded::<f64>(24, 3, 2, &mut rng), 3));
+                let (tx, rx) = mpsc::channel();
+                queue.submit(id as u64, input, priority, None, 0.0, tx).unwrap();
+                receivers.push(rx);
+                submitted_per_class[priority as usize].push(id as u64);
+                if pop_after > 0 {
+                    pop(&queue, pop_after, &mut popped)?;
+                }
+            }
+            while queue.depth() > 0 {
+                pop(&queue, 2, &mut popped)?;
+            }
+            // Every job drained exactly once, and within each priority
+            // class the drain order is the admission order.
+            if popped.len() != case.jobs.len() {
+                return Err(format!("drained {} of {} jobs", popped.len(), case.jobs.len()));
+            }
+            for class in 0u8..3 {
+                let drained: Vec<u64> =
+                    popped.iter().filter(|(p, _)| *p == class).map(|(_, id)| *id).collect();
+                if drained != submitted_per_class[class as usize] {
+                    return Err(format!(
+                        "class {class}: drained {drained:?}, admitted {:?}",
+                        submitted_per_class[class as usize]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
