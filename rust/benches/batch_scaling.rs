@@ -1,20 +1,24 @@
 //! Batch-scaling sweep: problems/sec of the interleaved batch engine as
 //! the batch size grows 1 → 64 (n = 512, bw = 32, f64, parallel native
-//! backend). The single-problem launch loop leaves most of the MaxBlocks
-//! capacity idle at this size (Table I: full occupancy needs much larger
-//! n); co-scheduling K problems fills the shared launches, so throughput
+//! backend), driven through the unified client front door. The
+//! single-problem launch loop leaves most of the MaxBlocks capacity idle
+//! at this size (Table I: full occupancy needs much larger n);
+//! co-scheduling K problems fills the shared launches, so throughput
 //! rises with K until the capacity saturates.
+//!
+//! Timing uses `ReductionOutcome::wall` — the client measures execution
+//! only, excluding request assembly and backend construction.
 //!
 //! Honours BSVD_BENCH_FAST=1 (smaller sweep, fewer trials).
 
 use banded_svd::banded::storage::Banded;
-use banded_svd::batch::{BatchCoordinator, BatchInput};
-use banded_svd::config::{BatchConfig, PackingPolicy, TuneParams};
+use banded_svd::client::{Client, LocalClient, ReductionRequest};
+use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
 use banded_svd::generate::random_banded;
 use banded_svd::util::bench::{fmt_duration, Table};
 use banded_svd::util::json::{write_experiment, Json};
 use banded_svd::util::rng::Xoshiro256;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 fn main() {
     let fast = std::env::var("BSVD_BENCH_FAST").ok().as_deref() == Some("1");
@@ -25,7 +29,7 @@ fn main() {
     let trials = if fast { 2 } else { 3 };
     let max_k = *batch_sizes.last().unwrap();
 
-    println!("=== batch scaling: problems/sec vs batch size ===");
+    println!("=== batch scaling: problems/sec vs batch size (client front door) ===");
     println!("(n={n}, bw={bw}, tw={tw}, f64, parallel native, MaxBlocks={})\n", params.max_blocks);
 
     let mut rng = Xoshiro256::seed_from_u64(512);
@@ -47,26 +51,32 @@ fn main() {
     for &k in batch_sizes {
         for policy in [PackingPolicy::RoundRobin, PackingPolicy::GreedyFill] {
             let cfg = BatchConfig { max_coresident: max_k, policy };
-            let coord = BatchCoordinator::new(params, cfg, 0);
+            let client = LocalClient::direct(params, cfg, BackendKind::Threadpool, 0)
+                .expect("threadpool client");
             let mut best = Duration::MAX;
             let mut launches = 0usize;
             let mut occupancy = 0.0f64;
             for _ in 0..trials {
-                let mut inputs: Vec<BatchInput> =
-                    base[..k].iter().map(|a| BatchInput::from((a.clone(), bw))).collect();
-                let t0 = Instant::now();
-                let report = coord.run(&mut inputs).expect("batched reduction failed");
-                let wall = t0.elapsed();
-                if wall < best {
-                    best = wall;
+                let mut request = ReductionRequest::new();
+                for a in &base[..k] {
+                    request = request.problem((a.clone(), bw));
                 }
-                launches = report.metrics.aggregate.launches;
-                occupancy = report.metrics.occupancy_ratio();
-                for p in &report.problems {
-                    assert_eq!(p.residual_off_band, 0.0, "batch {k}: problem not reduced");
+                let outcome = client.submit_wait(request).expect("batched reduction failed");
+                if outcome.wall < best {
+                    best = outcome.wall;
+                }
+                let batch = outcome.batch.as_ref().expect("direct mode reports batch metrics");
+                launches = batch.aggregate.launches;
+                occupancy = batch.occupancy_ratio();
+                for (i, p) in outcome.problems.iter().enumerate() {
+                    assert_eq!(
+                        p.residual_off_band,
+                        Some(0.0),
+                        "batch {k}: problem {i} not reduced"
+                    );
                 }
             }
-            let tput = k as f64 / best.as_secs_f64();
+            let tput = k as f64 / best.as_secs_f64().max(1e-9);
             if k == 1 && policy == PackingPolicy::RoundRobin {
                 tput_1 = tput;
             }

@@ -10,35 +10,39 @@
 //! Honours BSVD_BENCH_FAST=1 (smaller sweep, fewer jobs).
 
 use banded_svd::banded::storage::Banded;
-use banded_svd::batch::BatchInput;
+use banded_svd::client::{Client, LocalClient, ReductionRequest};
 use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
 use banded_svd::generate::random_banded;
-use banded_svd::service::Service;
 use banded_svd::util::bench::Table;
 use banded_svd::util::json::{write_experiment, Json};
 use banded_svd::util::rng::Xoshiro256;
 use std::time::{Duration, Instant};
 
+/// Drive the load through the unified client in queued mode: the client
+/// embeds the in-process service, and every submitter thread shares the
+/// same `&dyn Client` surface a remote caller would use.
 fn run_load(cfg: &ServiceConfig, base: &[Banded<f64>], bw: usize, submitters: usize) -> (f64, f64) {
-    let service = Service::start(cfg.clone()).expect("service start");
+    let client = LocalClient::queued(cfg.clone()).expect("client start");
     let t0 = Instant::now();
     std::thread::scope(|scope| {
         for s in 0..submitters {
-            let service = &service;
+            let client = &client;
             scope.spawn(move || {
                 let mut job = s;
                 while job < base.len() {
-                    let input = BatchInput::from((base[job].clone(), bw));
-                    let result = service.submit_wait(input, 0, None).expect("job failed");
-                    assert_eq!(result.sv.len(), base[job].n());
+                    let request =
+                        ReductionRequest::new().problem((base[job].clone(), bw));
+                    let outcome = client.submit_wait(request).expect("job failed");
+                    assert_eq!(outcome.problems[0].sv.len(), base[job].n());
                     job += submitters;
                 }
             });
         }
     });
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
-    let stats = service.stats();
+    let stats = client.service().expect("queued mode").stats();
     assert_eq!(stats.jobs_completed as usize, base.len());
+    assert_eq!(client.stats().jobs_completed as usize, base.len());
     (base.len() as f64 / wall, stats.avg_batch_jobs)
 }
 

@@ -1,98 +1,94 @@
-//! Batched reduction demo: eight banded problems of mixed size,
-//! bandwidth, and precision reduced in one interleaved batch, compared
-//! against the same problems run one at a time — the many-small-matrices
-//! workload (covariance spectra, per-head attention blocks) the
-//! single-problem API cannot saturate the device with.
+//! Batched reduction demo through the unified client: eight banded
+//! problems of mixed size, bandwidth, and precision reduced in one
+//! interleaved batch, compared against the same problems submitted one
+//! request at a time — the many-small-matrices workload (covariance
+//! spectra, per-head attention blocks) a single-problem call cannot
+//! saturate the device with.
 //!
 //! Run: `cargo run --release --example batch_throughput`
 
-use banded_svd::banded::storage::Banded;
-use banded_svd::batch::{BatchCoordinator, BatchInput};
-use banded_svd::config::{BackendKind, BatchConfig, TuneParams};
-use banded_svd::coordinator::Coordinator;
-use banded_svd::generate::random_banded;
-use banded_svd::scalar::F16;
+use banded_svd::client::{Client, LocalClient, ReductionRequest};
+use banded_svd::config::TuneParams;
+use banded_svd::scalar::ScalarKind;
 use banded_svd::util::bench::{fmt_duration, Table};
-use banded_svd::util::rng::Xoshiro256;
-use std::time::Instant;
+use std::time::Duration;
 
 fn main() {
     let params = TuneParams { tpb: 32, tw: 8, max_blocks: 192 };
-    let mut rng = Xoshiro256::seed_from_u64(7);
+    let client = LocalClient::new(params);
 
     // A heterogeneous batch: covariance-sized f64 blocks, attention-head
     // f32 blocks, and a couple of f16 probes.
-    let mut inputs: Vec<BatchInput> = Vec::new();
-    let mut solo_f64: Vec<(Banded<f64>, usize)> = Vec::new();
-    for &(n, bw) in &[(384usize, 16usize), (256, 12), (320, 16), (192, 8)] {
-        let a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
-        solo_f64.push((a.clone(), bw));
-        inputs.push(BatchInput::from((a, bw)));
-    }
-    for &(n, bw) in &[(128usize, 8usize), (160, 8)] {
-        let a = random_banded::<f32>(n, bw, params.effective_tw(bw), &mut rng);
-        inputs.push(BatchInput::from((a, bw)));
-    }
-    for &(n, bw) in &[(96usize, 6usize), (96, 6)] {
-        let a = random_banded::<F16>(n, bw, params.effective_tw(bw), &mut rng);
-        inputs.push(BatchInput::from((a, bw)));
-    }
+    let shapes: [(usize, usize, ScalarKind); 8] = [
+        (384, 16, ScalarKind::F64),
+        (256, 12, ScalarKind::F64),
+        (320, 16, ScalarKind::F64),
+        (192, 8, ScalarKind::F64),
+        (128, 8, ScalarKind::F32),
+        (160, 8, ScalarKind::F32),
+        (96, 6, ScalarKind::F16),
+        (96, 6, ScalarKind::F16),
+    ];
+    let request = |seed_base: u64| {
+        let mut request = ReductionRequest::new();
+        for (i, &(n, bw, kind)) in shapes.iter().enumerate() {
+            request = request.random(n, bw, kind, seed_base.wrapping_add(i as u64));
+        }
+        request
+    };
 
-    let coord = BatchCoordinator::new(params, BatchConfig::default(), 0);
-    let plan = coord.plan(&inputs).expect("plan");
-    println!(
-        "batch of {} problems: {} tasks, {} per-problem launches, >= {} shared launches\n",
-        plan.problems.len(),
-        plan.total_tasks(),
-        plan.total_launches(),
-        plan.min_shared_launches()
-    );
-
-    let t0 = Instant::now();
-    let report = coord.run(&mut inputs).expect("batched reduction");
-    let batch_wall = t0.elapsed();
+    let outcome = client.submit_wait(request(7)).expect("batched reduction");
+    let batch_wall = outcome.wall;
 
     let mut table = Table::new(vec!["problem", "precision", "n", "bw", "launches", "sigma_max"]);
-    for (i, p) in report.problems.iter().enumerate() {
-        let sv =
-            banded_svd::pipeline::bidiagonal_singular_values(&p.diag, &p.superdiag);
-        assert_eq!(p.residual_off_band, 0.0, "problem {i} not fully reduced");
+    for (i, p) in outcome.problems.iter().enumerate() {
+        assert_eq!(p.residual_off_band, Some(0.0), "problem {i} not fully reduced");
         table.row(vec![
             i.to_string(),
             p.precision.to_string(),
             p.n.to_string(),
             p.bw.to_string(),
             p.metrics.launches.to_string(),
-            format!("{:.4}", sv[0]),
+            format!("{:.4}", p.sv[0]),
         ]);
     }
     table.print();
 
-    // Reference: the f64 problems one at a time through the solo
-    // coordinator (same backend, batch size 1).
-    let solo_coord = Coordinator::new(params, 0);
-    let t0 = Instant::now();
-    for (a, bw) in &solo_f64 {
-        let mut work = a.clone();
-        solo_coord
-            .reduce_native(&mut work, *bw, BackendKind::Threadpool)
+    // Reference: the same f64 problems one request at a time through the
+    // same client (batch size 1 — no co-scheduling).
+    let mut solo_wall = Duration::ZERO;
+    for (i, &(n, bw, kind)) in shapes.iter().enumerate() {
+        if kind != ScalarKind::F64 {
+            continue;
+        }
+        let solo = client
+            .submit_wait(ReductionRequest::new().random(n, bw, kind, 7u64.wrapping_add(i as u64)))
             .expect("solo reduction");
+        solo_wall += solo.wall;
+        // Same problem, same backend: the batched submission answered
+        // exactly this (the merge preserves per-problem launch order).
+        assert_eq!(solo.problems[0].sv, outcome.problems[i].sv, "problem {i}");
     }
-    let solo_wall = t0.elapsed();
 
+    let batch = outcome.batch.as_ref().expect("direct mode reports batch metrics");
     println!(
         "\nbatched: {} problems in {} ({:.1} problems/s), \
          {} shared launches, occupancy {:.2}, {} co-scheduled",
-        report.problems.len(),
+        outcome.problems.len(),
         fmt_duration(batch_wall),
-        report.throughput(),
-        report.metrics.aggregate.launches,
-        report.metrics.occupancy_ratio(),
-        report.metrics.co_scheduled_launches
+        outcome.throughput(),
+        batch.aggregate.launches,
+        batch.occupancy_ratio(),
+        batch.co_scheduled_launches
     );
     println!(
-        "solo   : {} f64 problems back to back in {} (batch also covered these)",
-        solo_f64.len(),
+        "solo   : f64 problems back to back in {} (batch also covered these, bitwise)",
         fmt_duration(solo_wall)
+    );
+    println!(
+        "provenance: {} on {} (plan cache: {} hits)",
+        outcome.provenance.source.name(),
+        outcome.provenance.backend,
+        outcome.provenance.cache.map(|c| c.hits()).unwrap_or(0)
     );
 }

@@ -1,5 +1,7 @@
 //! Quickstart: reduce a random banded matrix to bidiagonal form and
-//! compute its singular values — the three-line public API.
+//! compute its singular values — first through the kernel-level API
+//! (what the machinery does), then through the unified client front
+//! door (how applications should call it).
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -39,5 +41,23 @@ fn main() {
         sv.iter().map(|s| s * s).sum::<f64>().sqrt()
     );
     assert_eq!(a.max_off_band(1), 0.0, "matrix is exactly bidiagonal");
+
+    // The same computation through the unified client front door — one
+    // request/outcome contract shared with batching, the queued service,
+    // and remote serving (`banded-svd serve` + RemoteClient).
+    let client = LocalClient::new(params);
+    let outcome = client
+        .submit_wait(ReductionRequest::new().random(n, bw, ScalarKind::F64, 0))
+        .expect("reduction");
+    let p = &outcome.problems[0];
+    for (a, b) in p.sv.iter().zip(sv.iter()) {
+        assert!((a - b).abs() <= 1e-12 * sv[0], "front door disagrees: {a} vs {b}");
+    }
+    println!(
+        "client front door: {} on {} agrees ({} launches)",
+        outcome.provenance.source.name(),
+        outcome.provenance.backend,
+        p.metrics.launches
+    );
     println!("OK");
 }

@@ -1,23 +1,22 @@
-//! JSON-lines client for `banded-svd serve` — the quickstart transcript
-//! in `docs/service.md` and the CI smoke driver.
+//! Client for `banded-svd serve` — the quickstart transcript in
+//! `docs/service.md` and the CI smoke driver.
 //!
-//! Opens one TCP connection per submitter thread, streams a mixed-shape
-//! mixed-precision job load at the service (concurrent connections are
-//! what feed the micro-batcher), sanity-checks every response, then
-//! prints the service's own `stats` view. With `--shutdown` it also
-//! stops the server — the CI smoke job asserts the clean-shutdown path.
+//! Built entirely on the unified client API: each submitter thread owns
+//! a [`RemoteClient`] (one TCP connection each — concurrent connections
+//! are what feed the server's micro-batcher), streams a mixed-shape
+//! mixed-precision load through [`Client::submit_wait`], and
+//! sanity-checks every [`ReductionOutcome`]. All wire shaping lives in
+//! `banded_svd::client::wire`; this example contains none. With
+//! `--shutdown` it also stops the server — the CI smoke job asserts the
+//! clean-shutdown path.
 //!
 //! ```text
 //! cargo run --release --example serve_client -- \
 //!     --addr 127.0.0.1:7070 --jobs 16 --submitters 4 --shutdown
 //! ```
 
-use banded_svd::generate::random_banded;
-use banded_svd::service::server::submit_request;
-use banded_svd::util::json::Json;
-use banded_svd::util::rng::Xoshiro256;
-use std::io::{BufRead, BufReader, Write as _};
-use std::net::TcpStream;
+use banded_svd::client::{Client, ReductionOutcome, ReductionRequest, RemoteClient};
+use banded_svd::scalar::ScalarKind;
 
 struct Opts {
     addr: String,
@@ -64,57 +63,31 @@ fn parse_opts() -> Result<Opts, String> {
     Ok(opts)
 }
 
-/// One round-trip on an open connection.
-fn roundtrip(
-    reader: &mut BufReader<TcpStream>,
-    writer: &mut TcpStream,
-    line: &str,
-) -> Result<Json, String> {
-    writeln!(writer, "{line}").map_err(|e| format!("send: {e}"))?;
-    writer.flush().map_err(|e| format!("flush: {e}"))?;
-    let mut response = String::new();
-    reader.read_line(&mut response).map_err(|e| format!("recv: {e}"))?;
-    if response.is_empty() {
-        return Err("server closed the connection".into());
-    }
-    Json::parse(response.trim_end()).map_err(|e| format!("bad response: {e}"))
-}
-
-fn connect(addr: &str) -> Result<(BufReader<TcpStream>, TcpStream), String> {
-    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
-    let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
-    Ok((reader, stream))
-}
-
 /// The cycling job mix: (n, bw, precision).
-const SHAPES: [(usize, usize, &str); 4] =
-    [(96, 8, "fp64"), (64, 6, "fp32"), (48, 5, "fp64"), (80, 10, "fp32")];
+const SHAPES: [(usize, usize, ScalarKind); 4] = [
+    (96, 8, ScalarKind::F64),
+    (64, 6, ScalarKind::F32),
+    (48, 5, ScalarKind::F64),
+    (80, 10, ScalarKind::F32),
+];
 
-fn submit_line(job: usize, seed: u64) -> String {
-    let (n, bw, precision) = SHAPES[job % SHAPES.len()];
-    let mut rng = Xoshiro256::seed_from_u64(seed.wrapping_add(job as u64));
-    match precision {
-        "fp32" => submit_request(&random_banded::<f32>(n, bw, 1, &mut rng), bw, 0),
-        _ => submit_request(&random_banded::<f64>(n, bw, 1, &mut rng), bw, 0),
-    }
+fn request_for(job: usize, seed: u64) -> ReductionRequest {
+    let (n, bw, kind) = SHAPES[job % SHAPES.len()];
+    ReductionRequest::new().random(n, bw, kind, seed.wrapping_add(job as u64))
 }
 
-fn check_submit_response(response: &Json) -> Result<(usize, usize), String> {
-    if response.get("ok").and_then(Json::as_bool) != Some(true) {
-        return Err(format!("rejected: {}", response.render()));
+fn check_outcome(outcome: &ReductionOutcome) -> Result<(usize, usize), String> {
+    let p = outcome.problems.first().ok_or("empty outcome")?;
+    if p.sv.len() != p.n {
+        return Err(format!("{} singular values for n={}", p.sv.len(), p.n));
     }
-    let n = response.get("n").and_then(Json::as_usize).ok_or("missing n")?;
-    let sv = response.get("sv").and_then(Json::as_array).ok_or("missing sv")?;
-    if sv.len() != n {
-        return Err(format!("{} singular values for n={n}", sv.len()));
-    }
-    let values: Vec<f64> = sv.iter().filter_map(Json::as_f64).collect();
-    if values.len() != n || values.windows(2).any(|w| w[0] < w[1]) {
+    if p.sv.windows(2).any(|w| w[0] < w[1]) {
         return Err("singular values not descending".into());
     }
-    let batch_jobs =
-        response.get("batch_jobs").and_then(Json::as_usize).ok_or("missing batch_jobs")?;
-    Ok((n, batch_jobs))
+    if p.metrics.launches == 0 {
+        return Err("no launches recorded".into());
+    }
+    Ok((p.n, p.batch_jobs))
 }
 
 fn main() {
@@ -131,19 +104,20 @@ fn main() {
         for submitter in 0..opts.submitters {
             let (opts, failures, co_scheduled) = (&opts, &failures, &co_scheduled);
             scope.spawn(move || {
-                let (mut reader, mut writer) = match connect(&opts.addr) {
-                    Ok(pair) => pair,
+                let client = match RemoteClient::connect(&opts.addr) {
+                    Ok(c) => c,
                     Err(e) => {
-                        eprintln!("submitter {submitter}: {e}");
+                        eprintln!("submitter {submitter}: connect {}: {e}", opts.addr);
                         failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         return;
                     }
                 };
                 let mut job = submitter;
                 while job < opts.jobs {
-                    let line = submit_line(job, opts.seed);
-                    match roundtrip(&mut reader, &mut writer, &line)
-                        .and_then(|r| check_submit_response(&r))
+                    match client
+                        .submit_wait(request_for(job, opts.seed))
+                        .map_err(|e| e.to_string())
+                        .and_then(|o| check_outcome(&o))
                     {
                         Ok((n, batch_jobs)) => {
                             println!("job {job}: n={n} ok (batch of {batch_jobs})");
@@ -164,21 +138,17 @@ fn main() {
     let failed = failures.load(std::sync::atomic::Ordering::Relaxed);
 
     // One control connection for stats (and the optional shutdown).
-    let code = match connect(&opts.addr) {
-        Ok((mut reader, mut writer)) => {
-            match roundtrip(&mut reader, &mut writer, "{\"verb\":\"stats\"}") {
+    let code = match RemoteClient::connect(&opts.addr) {
+        Ok(control) => {
+            match control.server_stats() {
                 Ok(stats) => println!("stats: {}", stats.render()),
                 Err(e) => eprintln!("stats: {e}"),
             }
             if opts.shutdown {
-                match roundtrip(&mut reader, &mut writer, "{\"verb\":\"shutdown\"}") {
-                    Ok(ack) if ack.get("ok").and_then(Json::as_bool) == Some(true) => {
+                match control.shutdown() {
+                    Ok(()) => {
                         println!("server acknowledged shutdown");
                         0
-                    }
-                    Ok(ack) => {
-                        eprintln!("shutdown refused: {}", ack.render());
-                        1
                     }
                     Err(e) => {
                         eprintln!("shutdown: {e}");

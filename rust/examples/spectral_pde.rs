@@ -9,8 +9,8 @@
 //! Run: `cargo run --release --example spectral_pde`
 
 use banded_svd::banded::storage::Banded;
+use banded_svd::client::{Client, LocalClient, ReductionRequest};
 use banded_svd::config::TuneParams;
-use banded_svd::pipeline::banded_singular_values;
 use banded_svd::scalar::Scalar;
 
 /// Banded spectral operator: D2 + c·D1 in a coefficient basis where D2
@@ -37,11 +37,17 @@ fn main() {
     let bw = 4;
     let params = TuneParams { tpb: 32, tw: 2, max_blocks: 192 };
     let tw = params.effective_tw(bw);
+    let client = LocalClient::new(params);
 
     for &c in &[0.0f64, 1.0, 10.0] {
         let op = spectral_operator(n, c, bw, tw);
         let t0 = std::time::Instant::now();
-        let sv = banded_singular_values(&op, bw, &params);
+        let sv = client
+            .submit_wait(ReductionRequest::new().problem((op.clone(), bw)))
+            .expect("banded reduction")
+            .problems
+            .remove(0)
+            .sv;
         let dt = t0.elapsed();
         let sigma_max = sv[0];
         let sigma_min = sv[n - 1].max(1e-300);

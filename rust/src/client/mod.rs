@@ -1,0 +1,1086 @@
+//! The unified client API — **one front door** over every way this
+//! crate can run a reduction.
+//!
+//! The paper's pitch is a *single function* that is hardware-agnostic
+//! and precision-aware; the crate's execution machinery (plan IR, batch
+//! merge, backends, the serving subsystem) grew four entry points with
+//! four argument conventions. This module collapses them behind one
+//! request/response contract:
+//!
+//! ```text
+//!   ReductionRequest ──▶ Client::submit ──▶ JobHandle
+//!    (problems, params,       │
+//!     priority, deadline)     ▼
+//!                        Client::wait ──▶ ReductionOutcome
+//!                                          (σ per problem, LaunchMetrics,
+//!                                           plan provenance)
+//!
+//!   impl Client ──┬── LocalClient   direct: BatchCoordinator + PlanCache
+//!                 │                 queued: embedded in-process Service
+//!                 └── RemoteClient  JSON-lines wire to `banded-svd serve`
+//! ```
+//!
+//! The contract both implementations uphold (locked in by
+//! `rust/tests/client_equivalence.rs`): for the same
+//! [`ReductionRequest`], [`LocalClient`] and [`RemoteClient`] return
+//! **bitwise-identical** singular values and the same per-problem launch
+//! accounting on the same backend kind — local and served execution are
+//! interchangeable behind `dyn Client`. Failures resolve to the typed
+//! [`JobError`] taxonomy (retryable admission back-pressure vs terminal
+//! errors) on every path, including over the wire.
+//!
+//! # Examples
+//!
+//! ```no_run
+//! use banded_svd::client::{Client, LocalClient, ReductionRequest};
+//! use banded_svd::config::TuneParams;
+//! use banded_svd::scalar::ScalarKind;
+//!
+//! let client = LocalClient::new(TuneParams { tpb: 32, tw: 8, max_blocks: 192 });
+//! let outcome = client
+//!     .submit_wait(
+//!         ReductionRequest::new()
+//!             .random(256, 16, ScalarKind::F64, 7)
+//!             .random(128, 8, ScalarKind::F32, 8),
+//!     )
+//!     .unwrap();
+//! for p in &outcome.problems {
+//!     println!("{} n={}: σ_max = {}", p.precision, p.n, p.sv[0]);
+//! }
+//! println!("ran on {} ({})", outcome.provenance.backend, outcome.provenance.source.name());
+//! ```
+//!
+//! See `docs/client.md` for the request builder reference, the trait
+//! contract, and the local-vs-remote capability matrix.
+
+pub mod wire;
+
+use crate::backend::{cost_model_for, for_kind};
+use crate::batch::{BatchCoordinator, BatchInput, BatchMetrics};
+use crate::config::{BackendKind, BatchConfig, ServiceConfig, TuneParams};
+use crate::coordinator::metrics::LaunchMetrics;
+use crate::error::{Error, JobError, Result};
+use crate::generate::random_banded;
+use crate::pipeline::stage3::bidiagonal_singular_values;
+use crate::scalar::ScalarKind;
+use crate::service::cache::PlanCache;
+use crate::service::queue::JobTicket;
+use crate::service::{CacheStats, Service};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One problem of a request: either an explicit band payload or a
+/// generator spec the client materializes at submit time (both sides of
+/// a local/remote pair generate identical values — the band depends only
+/// on `(n, bw, seed)`).
+#[derive(Clone, Debug)]
+pub enum ProblemSpec {
+    /// An owned banded matrix plus its bandwidth, any supported
+    /// precision.
+    Band(BatchInput),
+    /// A seeded random banded problem ([`random_banded`]) — the
+    /// shape-only form used by the CLI, benches, and tests.
+    Random { n: usize, bw: usize, kind: ScalarKind, seed: u64 },
+}
+
+impl ProblemSpec {
+    fn materialize(self, params: &TuneParams) -> BatchInput {
+        match self {
+            ProblemSpec::Band(input) => input,
+            ProblemSpec::Random { n, bw, kind, seed } => {
+                let tw = params.effective_tw(bw);
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                match kind {
+                    ScalarKind::F64 => {
+                        BatchInput::from((random_banded::<f64>(n, bw, tw, &mut rng), bw))
+                    }
+                    ScalarKind::F32 => {
+                        BatchInput::from((random_banded::<f32>(n, bw, tw, &mut rng), bw))
+                    }
+                    ScalarKind::F16 => BatchInput::from((
+                        random_banded::<crate::scalar::F16>(n, bw, tw, &mut rng),
+                        bw,
+                    )),
+                }
+            }
+        }
+    }
+}
+
+/// Builder-style description of one submission: a batch of N problems
+/// plus the knobs that shape *how* they run (tuning override, priority
+/// class, deadline). Build it fluently, hand it to any
+/// [`Client::submit`].
+///
+/// # Examples
+///
+/// ```
+/// use banded_svd::client::ReductionRequest;
+/// use banded_svd::scalar::ScalarKind;
+/// use std::time::Duration;
+///
+/// let request = ReductionRequest::new()
+///     .random(64, 8, ScalarKind::F64, 1)
+///     .random(48, 6, ScalarKind::F32, 2)
+///     .priority(1)
+///     .deadline(Duration::from_millis(500));
+/// assert_eq!(request.len(), 2);
+/// assert!(!request.is_empty());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct ReductionRequest {
+    problems: Vec<ProblemSpec>,
+    params: Option<TuneParams>,
+    priority: u8,
+    deadline: Option<Duration>,
+}
+
+impl ReductionRequest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an explicit problem (anything convertible to
+    /// [`BatchInput`], e.g. `(Banded<f64>, bw)`).
+    pub fn problem(mut self, input: impl Into<BatchInput>) -> Self {
+        self.problems.push(ProblemSpec::Band(input.into()));
+        self
+    }
+
+    /// Append a seeded random problem of the given shape and precision.
+    pub fn random(mut self, n: usize, bw: usize, kind: ScalarKind, seed: u64) -> Self {
+        self.problems.push(ProblemSpec::Random { n, bw, kind, seed });
+        self
+    }
+
+    /// Override the client's tuning parameters for this request.
+    /// Supported by [`LocalClient`] direct mode only: the queued and
+    /// remote paths run under the serving side's configured tuning (the
+    /// plan cache is keyed on it), and reject an override with a clear
+    /// [`Error::Config`] instead of silently ignoring it.
+    pub fn params(mut self, params: TuneParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Priority class, lower drains first (queued/remote paths; direct
+    /// execution is immediate). Default 0.
+    pub fn priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Deadline relative to submission (queued/remote paths): a problem
+    /// still queued past it fails with [`JobError::DeadlineExpired`]
+    /// instead of executing.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Number of problems in the request.
+    pub fn len(&self) -> usize {
+        self.problems.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.problems.is_empty()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.is_empty() {
+            return Err(Error::Config("request has no problems; add .problem()/.random()".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Opaque handle on one submitted request, resolved by [`Client::wait`]
+/// on the client that issued it.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct JobHandle {
+    id: u64,
+}
+
+/// Handle ids are unique across every client in the process, so a handle
+/// from one client can never silently resolve another client's request —
+/// waiting on a foreign handle fails with the documented
+/// [`Error::Config`] instead.
+static NEXT_HANDLE_ID: AtomicU64 = AtomicU64::new(0);
+
+fn next_handle_id() -> u64 {
+    NEXT_HANDLE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Where a request was executed and which plan machinery served it.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ExecutionSource {
+    /// [`LocalClient`] direct mode: the caller's `BatchCoordinator`.
+    LocalDirect,
+    /// [`LocalClient`] queued mode: the embedded in-process [`Service`].
+    LocalQueued,
+    /// [`RemoteClient`]: a `banded-svd serve` endpoint over TCP.
+    Remote,
+}
+
+impl ExecutionSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecutionSource::LocalDirect => "local-direct",
+            ExecutionSource::LocalQueued => "local-queued",
+            ExecutionSource::Remote => "remote",
+        }
+    }
+}
+
+/// Where this outcome's launch plans came from: execution source,
+/// backend, effective tuning, and — for local paths — the plan-cache
+/// activity this request caused (hits mean the lowering was amortized).
+#[derive(Clone, Debug)]
+pub struct PlanProvenance {
+    pub source: ExecutionSource,
+    /// Backend name (canonical [`BackendKind`] spelling; for remote, the
+    /// serving side's reported backend).
+    pub backend: String,
+    /// Tuning the plans were lowered under. `None` for remote: the
+    /// server owns its tuning and does not expose it per job.
+    pub params: Option<TuneParams>,
+    /// Plan/merge/autotune cache deltas attributable to this request
+    /// (local paths only — the remote cache belongs to the server).
+    pub cache: Option<CacheStats>,
+}
+
+/// One problem's slice of a [`ReductionOutcome`].
+#[derive(Clone, Debug)]
+pub struct ProblemOutcome {
+    pub n: usize,
+    pub bw: usize,
+    /// Paper-style precision label ("fp64" / "fp32" / "fp16").
+    pub precision: &'static str,
+    /// Singular values, descending, widened to f64 — **bitwise identical**
+    /// across local and remote execution on the same backend kind.
+    pub sv: Vec<f64>,
+    /// Per-problem launch accounting — identical to a solo run of the
+    /// same problem (the batch merge preserves per-problem order). Over
+    /// the wire the summary fields ride; `per_launch`/`wall` stay local.
+    pub metrics: LaunchMetrics,
+    /// Problems co-scheduled in the merged plan that carried this one.
+    pub batch_jobs: usize,
+    /// Time spent queued before the flush (queued/remote paths).
+    pub queue_wait: Option<Duration>,
+    /// Largest |element| outside the bidiagonal after the run — observable
+    /// only where the reduced matrix lives (local paths).
+    pub residual_off_band: Option<f64>,
+}
+
+/// What a completed request reports back: one [`ProblemOutcome`] per
+/// problem (request order), wall time, the batch-level accounting where
+/// the client executed locally, and the plan provenance.
+#[derive(Clone, Debug)]
+pub struct ReductionOutcome {
+    pub problems: Vec<ProblemOutcome>,
+    /// Wall-clock from submission to last result, as observed by this
+    /// client (direct mode: execution; queued/remote: queue + execution).
+    pub wall: Duration,
+    /// Shared-launch aggregate of the merged plan ([`LocalClient`]
+    /// direct mode only — elsewhere the batch composition belongs to the
+    /// serving side).
+    pub batch: Option<BatchMetrics>,
+    pub provenance: PlanProvenance,
+}
+
+impl ReductionOutcome {
+    /// Problems completed per second of [`ReductionOutcome::wall`].
+    /// Clamped like `BatchReport::throughput`: coarse monotone clocks can
+    /// report a zero wall for a tiny request, and the rate must stay
+    /// finite on every platform.
+    pub fn throughput(&self) -> f64 {
+        if self.problems.is_empty() {
+            return 0.0;
+        }
+        self.problems.len() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Submission counters a client keeps about its own traffic — the
+/// client-side half of the reconciliation the equivalence test performs
+/// against the server's `stats` verb.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// Problems admitted (handles issued cover this many problems).
+    pub jobs_submitted: u64,
+    /// Problems whose outcome came back successfully.
+    pub jobs_completed: u64,
+    /// Problems rejected at submit or failed at wait.
+    pub jobs_failed: u64,
+}
+
+/// The one obligation every execution surface implements: accept a
+/// [`ReductionRequest`], hand back a [`JobHandle`], resolve it to a
+/// [`ReductionOutcome`]. Local (in-process, direct or queued) and served
+/// (TCP) execution are interchangeable behind `dyn Client`.
+pub trait Client {
+    /// Validate and admit `request`. Depending on the implementation the
+    /// work may run during this call (direct mode) or asynchronously
+    /// (queued and remote modes); either way the returned handle resolves
+    /// through [`Client::wait`] on the same client.
+    fn submit(&self, request: ReductionRequest) -> Result<JobHandle>;
+
+    /// Block until the request behind `handle` completes and return its
+    /// outcome. Each handle resolves exactly once; waiting on a foreign
+    /// or already-resolved handle is an [`Error::Config`]. Job-level
+    /// failures surface as [`Error::Job`] with the typed taxonomy.
+    fn wait(&self, handle: JobHandle) -> Result<ReductionOutcome>;
+
+    /// [`Client::submit`] and immediately [`Client::wait`].
+    fn submit_wait(&self, request: ReductionRequest) -> Result<ReductionOutcome> {
+        let handle = self.submit(request)?;
+        self.wait(handle)
+    }
+
+    /// This client's own submission counters.
+    fn stats(&self) -> ClientStats;
+}
+
+fn cache_delta(after: CacheStats, before: CacheStats) -> CacheStats {
+    CacheStats {
+        plan_hits: after.plan_hits - before.plan_hits,
+        plan_misses: after.plan_misses - before.plan_misses,
+        merge_hits: after.merge_hits - before.merge_hits,
+        merge_misses: after.merge_misses - before.merge_misses,
+        tune_hits: after.tune_hits - before.tune_hits,
+        tune_misses: after.tune_misses - before.tune_misses,
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ClientStats {
+        ClientStats {
+            jobs_submitted: self.submitted.load(Ordering::Relaxed),
+            jobs_completed: self.completed.load(Ordering::Relaxed),
+            jobs_failed: self.failed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+enum LocalPending {
+    /// Direct mode executes at submit; the outcome is ready.
+    Ready(Box<ReductionOutcome>),
+    /// Queued mode: one service ticket per problem, resolved at wait.
+    /// `submitted` anchors the outcome's wall at submission time (the
+    /// reported wall covers queue + execution no matter how late the
+    /// caller waits), and `cache_before` snapshots the service's cache
+    /// counters at submission so the provenance delta covers the flush
+    /// even when it beats the wait.
+    Tickets { tickets: Vec<JobTicket>, submitted: Instant, cache_before: CacheStats },
+}
+
+enum LocalMode {
+    /// Direct execution state: the per-request executor's kind/threads
+    /// plus the batch knobs and the persistent plan cache — all of it
+    /// unused (and therefore not carried) in queued mode, where the
+    /// embedded service owns its own.
+    Direct { kind: BackendKind, threads: usize, batch: BatchConfig, cache: PlanCache },
+    Queued(Service),
+}
+
+/// In-process implementation of [`Client`].
+///
+/// Two modes share one type:
+///
+/// - **direct** ([`LocalClient::new`] / [`LocalClient::direct`]): each
+///   request becomes one merged [`crate::plan::LaunchPlan`] executed by a
+///   [`BatchCoordinator`] on the selected backend, synchronously at
+///   submit. Lowerings route through a persistent [`PlanCache`], so
+///   repeated shapes amortize across requests exactly as they do in the
+///   service.
+/// - **queued** ([`LocalClient::queued`]): requests feed an embedded
+///   in-process [`Service`] — priced admission, priority/deadline,
+///   dynamic micro-batching with concurrent submitters — without a
+///   socket in the path.
+pub struct LocalClient {
+    params: TuneParams,
+    mode: LocalMode,
+    pending: Mutex<HashMap<u64, LocalPending>>,
+    counters: Counters,
+}
+
+impl LocalClient {
+    /// Direct-mode client on the default threadpool backend (all cores).
+    pub fn new(params: TuneParams) -> Self {
+        Self::direct(params, BatchConfig::default(), BackendKind::Threadpool, 0)
+            .expect("threadpool backend always constructs")
+    }
+
+    /// Direct-mode client on an explicit backend kind. Fails for kinds
+    /// with no plan-executor form ([`BackendKind::PjrtFused`]).
+    ///
+    /// Each submit constructs its own executor: backends are deliberately
+    /// not shared across requests — the PJRT backend is not `Send` (the
+    /// service pins it to one worker thread for the same reason), and the
+    /// threadpool's pinned-slot scratch assumes one dispatch at a time —
+    /// which is what keeps the client itself shareable across submitter
+    /// threads. (Holding a `Mutex<Box<dyn Backend>>` instead would make
+    /// the client `!Sync`, because the un-`Send` trait object poisons the
+    /// mutex.) Per-request executor construction is the price of a
+    /// shareable front door; benchmarks should time
+    /// [`ReductionOutcome::wall`], which excludes it, and throughput
+    /// workloads should prefer queued mode, whose embedded service owns
+    /// one long-lived executor.
+    pub fn direct(
+        params: TuneParams,
+        batch: BatchConfig,
+        kind: BackendKind,
+        threads: usize,
+    ) -> Result<Self> {
+        // Validates the kind (rejecting pjrt-fused) without constructing
+        // an executor — kept in lockstep with `for_kind` by the backend
+        // module's own tests.
+        cost_model_for(kind)?;
+        Ok(Self {
+            params,
+            mode: LocalMode::Direct { kind, threads, batch, cache: PlanCache::default() },
+            pending: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        })
+    }
+
+    /// Queued-mode client: starts (and owns) an in-process [`Service`]
+    /// with `cfg`; requests run under the service's tuning and admission
+    /// control.
+    pub fn queued(cfg: ServiceConfig) -> Result<Self> {
+        let params = cfg.params;
+        let service = Service::start(cfg)?;
+        Ok(Self {
+            params,
+            mode: LocalMode::Queued(service),
+            pending: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        })
+    }
+
+    /// The embedded service (queued mode only) — for operational stats
+    /// alongside the client surface.
+    pub fn service(&self) -> Option<&Service> {
+        match &self.mode {
+            LocalMode::Queued(service) => Some(service),
+            LocalMode::Direct { .. } => None,
+        }
+    }
+
+    /// The client's default tuning parameters.
+    pub fn params(&self) -> &TuneParams {
+        &self.params
+    }
+
+    fn submit_direct(
+        &self,
+        request: ReductionRequest,
+        kind: BackendKind,
+        threads: usize,
+        batch: BatchConfig,
+        cache: &PlanCache,
+    ) -> Result<ReductionOutcome> {
+        let params = request.params.unwrap_or(self.params);
+        let mut inputs: Vec<BatchInput> =
+            request.problems.into_iter().map(|p| p.materialize(&params)).collect();
+        let coord = BatchCoordinator::with_backend(params, batch, for_kind(kind, threads)?)
+            .with_plan_cache(cache.clone());
+        let before = cache.stats();
+        let t0 = Instant::now();
+        let report = coord.run(&mut inputs)?;
+        let wall = t0.elapsed();
+        let batch_jobs = report.problems.len();
+        let problems = report
+            .problems
+            .iter()
+            .map(|p| ProblemOutcome {
+                n: p.n,
+                bw: p.bw,
+                precision: p.precision,
+                sv: bidiagonal_singular_values(&p.diag, &p.superdiag),
+                metrics: p.metrics.clone(),
+                batch_jobs,
+                queue_wait: None,
+                residual_off_band: Some(p.residual_off_band),
+            })
+            .collect();
+        Ok(ReductionOutcome {
+            problems,
+            wall,
+            batch: Some(report.metrics.clone()),
+            provenance: PlanProvenance {
+                source: ExecutionSource::LocalDirect,
+                backend: kind.name().to_string(),
+                params: Some(params),
+                cache: Some(cache_delta(cache.stats(), before)),
+            },
+        })
+    }
+
+    /// Submit every problem of `request` to the embedded service. Owns
+    /// the request's counter accounting on every path — including the
+    /// partial-admission one: when problem k of N is rejected, the k
+    /// already-admitted problems still execute on the service, so their
+    /// outcomes are drained (and counted) before the rejection is
+    /// surfaced. Client and service counters therefore always reconcile,
+    /// and a caller retrying a retryable rejection re-submits a request
+    /// whose earlier problems are not silently in flight.
+    fn submit_queued(
+        &self,
+        request: ReductionRequest,
+        service: &Service,
+    ) -> Result<Vec<JobTicket>> {
+        let jobs = request.len() as u64;
+        if let Some(params) = request.params {
+            if params != self.params {
+                self.counters.failed.fetch_add(jobs, Ordering::Relaxed);
+                return Err(Error::Config(format!(
+                    "queued client runs under the service's tuning {:?}; start the service \
+                     with the desired params instead of overriding per request ({params:?})",
+                    self.params
+                )));
+            }
+        }
+        let priority = request.priority;
+        let deadline = request.deadline;
+        let inputs: Vec<BatchInput> =
+            request.problems.into_iter().map(|p| p.materialize(&self.params)).collect();
+        let mut tickets = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            match service.submit(input, priority, deadline) {
+                Ok(ticket) => tickets.push(ticket),
+                Err(e) => {
+                    let admitted = tickets.len() as u64;
+                    self.counters.submitted.fetch_add(admitted, Ordering::Relaxed);
+                    self.counters.failed.fetch_add(jobs - admitted, Ordering::Relaxed);
+                    for ticket in tickets {
+                        match ticket.wait() {
+                            Ok(_) => self.counters.completed.fetch_add(1, Ordering::Relaxed),
+                            Err(_) => self.counters.failed.fetch_add(1, Ordering::Relaxed),
+                        };
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        self.counters.submitted.fetch_add(jobs, Ordering::Relaxed);
+        Ok(tickets)
+    }
+
+    fn wait_queued(
+        &self,
+        tickets: Vec<JobTicket>,
+        submitted: Instant,
+        cache_before: CacheStats,
+        service: &Service,
+    ) -> Result<ReductionOutcome> {
+        let mut problems = Vec::with_capacity(tickets.len());
+        let mut first_error: Option<JobError> = None;
+        for ticket in tickets {
+            match ticket.wait() {
+                Ok(r) => {
+                    self.counters.completed.fetch_add(1, Ordering::Relaxed);
+                    problems.push(ProblemOutcome {
+                        n: r.n,
+                        bw: r.bw,
+                        precision: r.precision,
+                        sv: r.sv,
+                        metrics: r.metrics,
+                        batch_jobs: r.batch_jobs,
+                        queue_wait: Some(r.queue_wait),
+                        residual_off_band: None,
+                    });
+                }
+                Err(e) => {
+                    self.counters.failed.fetch_add(1, Ordering::Relaxed);
+                    first_error.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first_error {
+            return Err(Error::Job(e));
+        }
+        Ok(ReductionOutcome {
+            problems,
+            wall: submitted.elapsed(),
+            batch: None,
+            provenance: PlanProvenance {
+                source: ExecutionSource::LocalQueued,
+                backend: service.config().backend.name().to_string(),
+                params: Some(self.params),
+                cache: Some(cache_delta(service.stats().cache, cache_before)),
+            },
+        })
+    }
+}
+
+impl Client for LocalClient {
+    fn submit(&self, request: ReductionRequest) -> Result<JobHandle> {
+        request.validate()?;
+        let jobs = request.len() as u64;
+        let pending = match &self.mode {
+            LocalMode::Direct { kind, threads, batch, cache } => {
+                let outcome = match self.submit_direct(request, *kind, *threads, *batch, cache) {
+                    Ok(outcome) => outcome,
+                    Err(e) => {
+                        self.counters.failed.fetch_add(jobs, Ordering::Relaxed);
+                        return Err(e);
+                    }
+                };
+                self.counters.submitted.fetch_add(jobs, Ordering::Relaxed);
+                self.counters.completed.fetch_add(jobs, Ordering::Relaxed);
+                LocalPending::Ready(Box::new(outcome))
+            }
+            // submit_queued owns the counter accounting for this arm
+            // (including the partial-admission drain).
+            LocalMode::Queued(service) => {
+                let submitted = Instant::now();
+                let cache_before = service.stats().cache;
+                LocalPending::Tickets {
+                    tickets: self.submit_queued(request, service)?,
+                    submitted,
+                    cache_before,
+                }
+            }
+        };
+        let id = next_handle_id();
+        self.pending.lock().unwrap().insert(id, pending);
+        Ok(JobHandle { id })
+    }
+
+    fn wait(&self, handle: JobHandle) -> Result<ReductionOutcome> {
+        let pending = self.pending.lock().unwrap().remove(&handle.id).ok_or_else(|| {
+            Error::Config(format!("unknown or already-resolved handle {:?}", handle))
+        })?;
+        match pending {
+            LocalPending::Ready(outcome) => Ok(*outcome),
+            LocalPending::Tickets { tickets, submitted, cache_before } => match &self.mode {
+                LocalMode::Queued(service) => {
+                    self.wait_queued(tickets, submitted, cache_before, service)
+                }
+                LocalMode::Direct { .. } => unreachable!("tickets only exist in queued mode"),
+            },
+        }
+    }
+
+    fn stats(&self) -> ClientStats {
+        self.counters.snapshot()
+    }
+}
+
+struct RemoteState {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Outcomes of submitted requests awaiting their [`Client::wait`].
+    done: HashMap<u64, Result<ReductionOutcome>>,
+}
+
+/// [`Client`] over the JSON-lines wire of a `banded-svd serve` endpoint
+/// — the served twin of [`LocalClient`]. One connection per client;
+/// spin up several clients for the concurrency that feeds the server's
+/// micro-batcher.
+///
+/// Each problem is one strict request/response round trip (the server
+/// serializes a connection anyway — a `submit` blocks it until the job
+/// completes — so client-side pipelining would buy nothing and risks
+/// filling both socket buffers). `submit` therefore blocks for the
+/// request's duration, like [`LocalClient`] direct mode.
+pub struct RemoteClient {
+    addr: String,
+    backend: String,
+    state: Mutex<RemoteState>,
+    counters: Counters,
+}
+
+impl RemoteClient {
+    /// Connect and handshake (one `stats` round trip — validates the
+    /// protocol and records the serving backend for provenance).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).map_err(Error::Io)?;
+        let reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
+        let mut state = RemoteState { reader, writer: stream, done: HashMap::new() };
+        let stats = Self::roundtrip(&mut state, "{\"verb\":\"stats\"}")?;
+        let backend = stats
+            .get("stats")
+            .and_then(|s| s.get("backend"))
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        Ok(Self {
+            addr: addr.to_string(),
+            backend,
+            state: Mutex::new(state),
+            counters: Counters::default(),
+        })
+    }
+
+    /// The endpoint this client speaks to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The serving side's backend name (from the connect handshake).
+    pub fn backend(&self) -> &str {
+        &self.backend
+    }
+
+    fn roundtrip(state: &mut RemoteState, line: &str) -> Result<Json> {
+        writeln!(state.writer, "{line}").map_err(Error::Io)?;
+        state.writer.flush().map_err(Error::Io)?;
+        Self::read_response(state)
+    }
+
+    fn read_response(state: &mut RemoteState) -> Result<Json> {
+        let mut response = String::new();
+        state.reader.read_line(&mut response).map_err(Error::Io)?;
+        if response.is_empty() {
+            return Err(Error::Job(JobError::Unavailable {
+                reason: "server closed the connection".into(),
+            }));
+        }
+        Json::parse(response.trim_end())
+            .map_err(|e| Error::Config(format!("bad response from server: {e}")))
+    }
+
+    /// Fetch the server's operational stats (`stats` verb) — the
+    /// server-side counters the equivalence test reconciles client
+    /// counters against.
+    pub fn server_stats(&self) -> Result<Json> {
+        let mut state = self.state.lock().unwrap();
+        let response = Self::roundtrip(&mut state, "{\"verb\":\"stats\"}")?;
+        response
+            .get("stats")
+            .cloned()
+            .ok_or_else(|| Error::Config("stats response missing body".into()))
+    }
+
+    /// Ask the server to shut down (acknowledged, then the endpoint
+    /// drains and exits).
+    pub fn shutdown(&self) -> Result<()> {
+        let mut state = self.state.lock().unwrap();
+        let ack = Self::roundtrip(&mut state, "{\"verb\":\"shutdown\"}")?;
+        if ack.get("ok").and_then(Json::as_bool) == Some(true) {
+            Ok(())
+        } else {
+            Err(Error::Config(format!("shutdown refused: {}", ack.render())))
+        }
+    }
+
+    /// Run one request's problems as strict round trips on the locked
+    /// connection. Every written line gets its response read before the
+    /// next write, so the connection can never desynchronize and the
+    /// socket buffers can never fill in both directions at once.
+    ///
+    /// Counter accounting covers every exit: a transport failure
+    /// (connection gone, unparsable response) counts the current problem
+    /// *and* every not-yet-attempted one into `jobs_failed`, so
+    /// `submitted = completed + failed` reconciles even when the server
+    /// dies mid-request.
+    fn run_request(
+        &self,
+        state: &mut RemoteState,
+        inputs: Vec<BatchInput>,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> Result<ReductionOutcome> {
+        let t0 = Instant::now();
+        let mut problems = Vec::with_capacity(inputs.len());
+        let mut first_error: Option<Error> = None;
+        for (idx, input) in inputs.iter().enumerate() {
+            let fail_rest = |e: Error| {
+                let remaining = (inputs.len() - idx) as u64;
+                self.counters.failed.fetch_add(remaining, Ordering::Relaxed);
+                e
+            };
+            let line = wire::submit_request_for_input(input, priority, deadline);
+            let transport = writeln!(state.writer, "{line}")
+                .and_then(|()| state.writer.flush())
+                .map_err(Error::Io);
+            if let Err(e) = transport {
+                return Err(fail_rest(e));
+            }
+            let response = match Self::read_response(state) {
+                Ok(response) => response,
+                Err(e) => return Err(fail_rest(e)),
+            };
+            match wire::parse_submit_response(&response) {
+                Ok(r) => {
+                    self.counters.completed.fetch_add(1, Ordering::Relaxed);
+                    problems.push(ProblemOutcome {
+                        n: r.n,
+                        bw: r.bw,
+                        precision: r.precision,
+                        sv: r.sv,
+                        metrics: r.metrics,
+                        batch_jobs: r.batch_jobs,
+                        queue_wait: Some(r.queue_wait),
+                        residual_off_band: None,
+                    });
+                }
+                Err(e) => {
+                    self.counters.failed.fetch_add(1, Ordering::Relaxed);
+                    if first_error.is_none() {
+                        first_error = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_error {
+            return Err(e);
+        }
+        Ok(ReductionOutcome {
+            problems,
+            wall: t0.elapsed(),
+            batch: None,
+            provenance: PlanProvenance {
+                source: ExecutionSource::Remote,
+                backend: self.backend.clone(),
+                params: None,
+                cache: None,
+            },
+        })
+    }
+}
+
+impl Client for RemoteClient {
+    fn submit(&self, request: ReductionRequest) -> Result<JobHandle> {
+        request.validate()?;
+        if request.params.is_some() {
+            self.counters.failed.fetch_add(request.len() as u64, Ordering::Relaxed);
+            return Err(Error::Config(
+                "the remote server owns its tuning parameters; start `banded-svd serve` with \
+                 the desired --tw/--tpb/--max-blocks instead of overriding per request"
+                    .into(),
+            ));
+        }
+        let priority = request.priority;
+        let deadline = request.deadline;
+        // Materialization params only size local fill-in storage; the
+        // band payload depends solely on (n, bw, seed), so local and
+        // remote materializations agree (see ProblemSpec).
+        let materialize_params = TuneParams { tpb: 1, tw: 1, max_blocks: 1 };
+        let inputs: Vec<BatchInput> = request
+            .problems
+            .into_iter()
+            .map(|p| p.materialize(&materialize_params))
+            .collect();
+        self.counters.submitted.fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        let mut state = self.state.lock().unwrap();
+        let outcome = self.run_request(&mut state, inputs, priority, deadline);
+        let id = next_handle_id();
+        state.done.insert(id, outcome);
+        Ok(JobHandle { id })
+    }
+
+    fn wait(&self, handle: JobHandle) -> Result<ReductionOutcome> {
+        self.state.lock().unwrap().done.remove(&handle.id).ok_or_else(|| {
+            Error::Config(format!("unknown or already-resolved handle {:?}", handle))
+        })?
+    }
+
+    fn stats(&self) -> ClientStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SequentialBackend;
+    use crate::config::PackingPolicy;
+    use crate::pipeline::banded_singular_values_with;
+
+    fn params() -> TuneParams {
+        TuneParams { tpb: 32, tw: 4, max_blocks: 24 }
+    }
+
+    fn service_cfg() -> ServiceConfig {
+        ServiceConfig {
+            params: params(),
+            batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+            backend: BackendKind::Sequential,
+            threads: 1,
+            window: Duration::from_micros(100),
+            queue_cap: 32,
+            backlog_cap_s: 1e9,
+            cache_cap: 16,
+            arch: "H100",
+        }
+    }
+
+    #[test]
+    fn direct_client_matches_the_explicit_backend_pipeline_bitwise() {
+        let params = params();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let (n, bw) = (48, 6);
+        let a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let want =
+            banded_singular_values_with(&SequentialBackend::new(), &a, bw, &params).unwrap();
+
+        let client =
+            LocalClient::direct(params, BatchConfig::default(), BackendKind::Sequential, 1)
+                .unwrap();
+        let outcome = client.submit_wait(ReductionRequest::new().problem((a, bw))).unwrap();
+        assert_eq!(outcome.problems.len(), 1);
+        let p = &outcome.problems[0];
+        assert_eq!(p.sv, want);
+        assert_eq!((p.n, p.bw, p.precision), (n, bw, "fp64"));
+        assert_eq!(p.residual_off_band, Some(0.0));
+        assert!(p.metrics.launches > 0);
+        assert_eq!(outcome.provenance.source, ExecutionSource::LocalDirect);
+        assert_eq!(outcome.provenance.backend, "sequential");
+        assert_eq!(outcome.provenance.params, Some(params));
+        assert!(outcome.batch.is_some());
+        let stats = client.stats();
+        assert_eq!((stats.jobs_submitted, stats.jobs_completed, stats.jobs_failed), (1, 1, 0));
+    }
+
+    #[test]
+    fn queued_client_matches_direct_client_bitwise() {
+        let request = || {
+            ReductionRequest::new()
+                .random(40, 5, ScalarKind::F64, 3)
+                .random(32, 4, ScalarKind::F32, 4)
+        };
+        let direct =
+            LocalClient::direct(params(), BatchConfig::default(), BackendKind::Sequential, 1)
+                .unwrap();
+        let queued = LocalClient::queued(service_cfg()).unwrap();
+        let d = direct.submit_wait(request()).unwrap();
+        let q = queued.submit_wait(request()).unwrap();
+        assert_eq!(d.problems.len(), q.problems.len());
+        for (dp, qp) in d.problems.iter().zip(q.problems.iter()) {
+            assert_eq!(dp.sv, qp.sv);
+            assert_eq!(dp.metrics.launches, qp.metrics.launches);
+            assert_eq!(dp.metrics.tasks, qp.metrics.tasks);
+            assert_eq!(dp.metrics.bytes, qp.metrics.bytes);
+            assert!(qp.queue_wait.is_some());
+        }
+        assert_eq!(q.provenance.source, ExecutionSource::LocalQueued);
+        assert_eq!(queued.service().unwrap().stats().jobs_completed, 2);
+    }
+
+    #[test]
+    fn plan_cache_amortizes_across_requests() {
+        let client =
+            LocalClient::direct(params(), BatchConfig::default(), BackendKind::Sequential, 1)
+                .unwrap();
+        let request = || ReductionRequest::new().random(36, 5, ScalarKind::F64, 9);
+        let cold = client.submit_wait(request()).unwrap();
+        let warm = client.submit_wait(request()).unwrap();
+        let cold_cache = cold.provenance.cache.unwrap();
+        let warm_cache = warm.provenance.cache.unwrap();
+        assert!(cold_cache.plan_misses > 0);
+        assert!(warm_cache.plan_hits > 0, "{warm_cache:?}");
+        // Bitwise-stable across the cache hit, of course.
+        assert_eq!(cold.problems[0].sv, warm.problems[0].sv);
+    }
+
+    #[test]
+    fn params_override_applies_in_direct_mode_and_rejects_in_queued_mode() {
+        let override_params = TuneParams { tpb: 32, tw: 2, max_blocks: 8 };
+        let client =
+            LocalClient::direct(params(), BatchConfig::default(), BackendKind::Sequential, 1)
+                .unwrap();
+        let outcome = client
+            .submit_wait(
+                ReductionRequest::new()
+                    .random(32, 4, ScalarKind::F64, 5)
+                    .params(override_params),
+            )
+            .unwrap();
+        assert_eq!(outcome.provenance.params, Some(override_params));
+
+        let queued = LocalClient::queued(service_cfg()).unwrap();
+        let err = queued
+            .submit_wait(
+                ReductionRequest::new()
+                    .random(32, 4, ScalarKind::F64, 5)
+                    .params(override_params),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("tuning"), "{err}");
+        // Overriding with the service's own params is fine.
+        queued
+            .submit_wait(
+                ReductionRequest::new().random(32, 4, ScalarKind::F64, 5).params(params()),
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn empty_requests_and_stale_handles_are_config_errors() {
+        let client = LocalClient::new(params());
+        assert!(client.submit(ReductionRequest::new()).is_err());
+        let handle =
+            client.submit(ReductionRequest::new().random(24, 3, ScalarKind::F64, 1)).unwrap();
+        client.wait(handle).unwrap();
+        let err = client.wait(handle).unwrap_err();
+        assert!(err.to_string().contains("handle"), "{err}");
+    }
+
+    #[test]
+    fn queued_rejection_surfaces_the_retryable_taxonomy() {
+        // Depth cap 1 via queue_cap; fill the queue with a long window so
+        // the second submission is rejected at admission.
+        let cfg = ServiceConfig {
+            queue_cap: 1,
+            window: Duration::from_millis(200),
+            batch: BatchConfig { max_coresident: 8, policy: PackingPolicy::RoundRobin },
+            ..service_cfg()
+        };
+        let client = LocalClient::queued(cfg).unwrap();
+        let request = || ReductionRequest::new().random(48, 6, ScalarKind::F64, 2).priority(0);
+        // Two problems in one request: the first occupies the queue, the
+        // second must bounce off the depth cap — retryably.
+        let err = client
+            .submit(
+                ReductionRequest::new()
+                    .random(48, 6, ScalarKind::F64, 2)
+                    .random(48, 6, ScalarKind::F64, 3),
+            )
+            .unwrap_err();
+        assert!(err.is_retryable(), "{err}");
+        assert_eq!(err.as_job().unwrap().kind(), "overloaded");
+        // The taxonomy is actionable: retry until the queue drains.
+        loop {
+            match client.submit_wait(request()) {
+                Ok(_) => break,
+                Err(e) if e.is_retryable() => std::thread::sleep(Duration::from_millis(10)),
+                Err(e) => panic!("non-retryable error during backoff: {e}"),
+            }
+        }
+        let stats = client.stats();
+        assert!(stats.jobs_failed >= 1);
+    }
+
+    #[test]
+    fn expired_deadline_is_a_terminal_deadline_error() {
+        let cfg = ServiceConfig { window: Duration::from_millis(20), ..service_cfg() };
+        let client = LocalClient::queued(cfg).unwrap();
+        let err = client
+            .submit_wait(
+                ReductionRequest::new()
+                    .random(24, 3, ScalarKind::F64, 1)
+                    .deadline(Duration::ZERO),
+            )
+            .unwrap_err();
+        let job = err.as_job().expect("job-level error");
+        assert_eq!(job.kind(), "deadline-expired");
+        assert!(!err.is_retryable());
+    }
+}

@@ -1,0 +1,422 @@
+//! The JSON-lines wire vocabulary shared by **both sides** of the
+//! served protocol: the request/response shaping the TCP server
+//! ([`crate::service::server`]) renders and the [`super::RemoteClient`]
+//! (plus the example client and the loopback tests) parse.
+//!
+//! Keeping encode *and* decode in one module is what makes the remote
+//! path a drop-in for the local one: field names exist exactly once,
+//! floats ride Rust's shortest-roundtrip `f64` formatting (so singular
+//! values survive the wire **bitwise** — see [`crate::util::json`]), and
+//! a [`JobResult`] rendered by [`result_json`] parses back equal via
+//! [`parse_submit_response`] (round-trip–tested below).
+//!
+//! Vocabulary:
+//!
+//! - band payloads: [`band_expected_len`], [`band_values`],
+//!   [`band_from_values`] — the row-major in-band serialization of a
+//!   `submit` request;
+//! - requests: [`submit_request`] (typed matrix),
+//!   [`submit_request_for_input`] (type-erased [`BatchInput`] with
+//!   priority/deadline);
+//! - responses: [`result_json`] / [`parse_submit_response`],
+//!   [`error_json`] / [`job_error_json`] / [`parse_error`].
+
+use crate::banded::storage::Banded;
+use crate::batch::BatchInput;
+use crate::coordinator::metrics::LaunchMetrics;
+use crate::error::{Error, JobError, Result};
+use crate::scalar::{Scalar, F16};
+use crate::service::queue::JobResult;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Number of in-band values of an upper-banded `n × n` matrix with `bw`
+/// superdiagonals — the required `band` payload length. Closed form
+/// (O(1), `bw` clamped to `n − 1`): full rows contribute `bw + 1`
+/// values, the last `bw` rows taper triangularly.
+pub fn band_expected_len(n: usize, bw: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let bw = bw.min(n - 1);
+    n * (bw + 1) - bw * (bw + 1) / 2
+}
+
+/// Serialize the in-band entries of `a` (rows `i`, columns
+/// `i ..= min(i+bw, n−1)`, row-major) as f64 — the `band` payload of a
+/// `submit` request. Widening to f64 is exact for every supported
+/// precision, so the payload round-trips bitwise.
+pub fn band_values<T: Scalar>(a: &Banded<T>, bw: usize) -> Vec<f64> {
+    let n = a.n();
+    let mut out = Vec::with_capacity(band_expected_len(n, bw));
+    for i in 0..n {
+        for j in i..=(i + bw).min(n - 1) {
+            out.push(a.get(i, j).to_f64());
+        }
+    }
+    out
+}
+
+/// Rebuild a reduction-ready [`BatchInput`] from a `band` payload — the
+/// server side of [`band_values`]. `tw` sizes the fill-in storage (the
+/// service uses its configured tuning).
+pub fn band_from_values(
+    n: usize,
+    bw: usize,
+    tw: usize,
+    precision: &str,
+    values: &[f64],
+) -> Result<BatchInput> {
+    if n < 2 || bw == 0 || bw >= n {
+        return Err(Error::Config(format!(
+            "bad problem shape: need n ≥ 2 and 1 ≤ bw < n (got n={n}, bw={bw})"
+        )));
+    }
+    // O(1) length check in u128: `n` is client-supplied and must be
+    // rejected before anything walks or allocates proportional to it
+    // (the closed form would overflow usize for hostile n × bw).
+    let expected = {
+        let (n, bw) = (n as u128, bw as u128);
+        n * (bw + 1) - bw * (bw + 1) / 2
+    };
+    if values.len() as u128 != expected {
+        return Err(Error::Config(format!(
+            "band payload has {} values; n={n}, bw={bw} needs {expected}",
+            values.len()
+        )));
+    }
+    fn fill<T: Scalar>(n: usize, bw: usize, tw: usize, values: &[f64]) -> Banded<T> {
+        let mut a = Banded::<T>::for_reduction(n, bw, tw);
+        let mut k = 0;
+        for i in 0..n {
+            for j in i..=(i + bw).min(n - 1) {
+                a.set(i, j, T::from_f64(values[k]));
+                k += 1;
+            }
+        }
+        a
+    }
+    Ok(match precision {
+        "fp64" => BatchInput::from((fill::<f64>(n, bw, tw, values), bw)),
+        "fp32" => BatchInput::from((fill::<f32>(n, bw, tw, values), bw)),
+        "fp16" => BatchInput::from((fill::<F16>(n, bw, tw, values), bw)),
+        other => {
+            return Err(Error::Config(format!("unknown precision {other:?} (fp16|fp32|fp64)")))
+        }
+    })
+}
+
+fn submit_json(
+    n: usize,
+    bw: usize,
+    precision: &str,
+    priority: u8,
+    deadline: Option<Duration>,
+    band: Vec<f64>,
+) -> String {
+    let band: Vec<Json> = band.into_iter().map(Json::Num).collect();
+    let mut request = Json::obj()
+        .set("verb", "submit")
+        .set("n", n)
+        .set("bw", bw)
+        .set("precision", precision)
+        .set("priority", priority as usize);
+    if let Some(deadline) = deadline {
+        request = request.set("deadline_ms", Json::Int(deadline.as_millis() as i64));
+    }
+    request.set("band", Json::Arr(band)).render()
+}
+
+/// Render a complete `submit` request line for `a`. The precision label
+/// comes from `T`.
+pub fn submit_request<T: Scalar>(a: &Banded<T>, bw: usize, priority: u8) -> String {
+    submit_json(a.n(), bw, T::NAME, priority, None, band_values(a, bw))
+}
+
+/// Render a `submit` request line for a type-erased problem — what the
+/// [`super::RemoteClient`] sends for each problem of a request, carrying
+/// the request's priority class and optional deadline.
+pub fn submit_request_for_input(
+    input: &BatchInput,
+    priority: u8,
+    deadline: Option<Duration>,
+) -> String {
+    let band = match input {
+        BatchInput::F64 { a, bw } => band_values(a, *bw),
+        BatchInput::F32 { a, bw } => band_values(a, *bw),
+        BatchInput::F16 { a, bw } => band_values(a, *bw),
+    };
+    submit_json(input.n(), input.bw(), input.precision(), priority, deadline, band)
+}
+
+fn metrics_json(m: &LaunchMetrics) -> Json {
+    Json::obj()
+        .set("launches", m.launches)
+        .set("tasks", m.tasks)
+        .set("max_parallel", m.max_parallel)
+        .set("unrolled_launches", m.unrolled_launches)
+        .set("bytes", Json::Int(m.bytes as i64))
+}
+
+/// Render a completed job as the `submit` response object — the server
+/// side of [`parse_submit_response`].
+pub fn result_json(r: &JobResult) -> Json {
+    Json::obj()
+        .set("ok", true)
+        .set("verb", "submit")
+        .set("id", Json::Int(r.id as i64))
+        .set("n", r.n)
+        .set("bw", r.bw)
+        .set("precision", r.precision)
+        .set("batch_jobs", r.batch_jobs)
+        .set("queue_us", Json::Int(r.queue_wait.as_micros() as i64))
+        .set("metrics", metrics_json(&r.metrics))
+        .set("sv", Json::Arr(r.sv.iter().map(|&x| Json::Num(x)).collect()))
+}
+
+/// Generic protocol-level error response (malformed request, unknown
+/// verb). Job-level failures use [`job_error_json`] so the taxonomy
+/// rides the wire.
+pub fn error_json(msg: impl Into<String>) -> Json {
+    Json::obj().set("ok", false).set("error", Json::s(msg))
+}
+
+/// Error response for a failed job: carries the taxonomy `kind` and the
+/// `retryable` flag alongside the message (plus the structured
+/// `queued_ms` for deadline expiries), so a remote client surfaces
+/// exactly the [`JobError`] a local caller would see.
+pub fn job_error_json(e: &JobError) -> Json {
+    let mut response = Json::obj()
+        .set("ok", false)
+        .set("error", e.to_string())
+        .set("kind", e.kind())
+        .set("retryable", e.is_retryable());
+    if let JobError::DeadlineExpired { queued_ms } = e {
+        response = response.set("queued_ms", Json::Int(*queued_ms as i64));
+    }
+    response
+}
+
+/// Decode a `{"ok":false,...}` response into the error taxonomy:
+/// responses stamped with a job `kind` rebuild the [`JobError`]; plain
+/// protocol errors (malformed request, bad shape) are terminal
+/// [`Error::Config`]s.
+pub fn parse_error(response: &Json) -> Error {
+    let message = response.get("error").and_then(Json::as_str).unwrap_or("unknown error");
+    match response.get("kind").and_then(Json::as_str) {
+        Some(kind) => {
+            let queued_ms =
+                response.get("queued_ms").and_then(Json::as_i64).map(|ms| ms.max(0) as u64);
+            Error::Job(JobError::from_kind(kind, message, queued_ms))
+        }
+        None => Error::Config(format!("server rejected the request: {message}")),
+    }
+}
+
+fn field_usize(obj: &Json, key: &str) -> Result<usize> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Config(format!("submit response missing integer {key:?}")))
+}
+
+/// Parse a `submit` response line into the same [`JobResult`] the
+/// in-process service delivers. `{"ok":false}` responses decode through
+/// [`parse_error`]. The wire carries the launch-accounting summary, not
+/// the per-launch trace, so `metrics.per_launch` comes back empty and
+/// `metrics.wall` zero; everything else — including the singular values,
+/// bitwise — round-trips exactly.
+pub fn parse_submit_response(response: &Json) -> Result<JobResult> {
+    if response.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(parse_error(response));
+    }
+    let n = field_usize(response, "n")?;
+    let precision = match response.get("precision").and_then(Json::as_str) {
+        Some("fp64") => <f64 as Scalar>::NAME,
+        Some("fp32") => <f32 as Scalar>::NAME,
+        Some("fp16") => F16::NAME,
+        other => {
+            return Err(Error::Config(format!("submit response has bad precision {other:?}")))
+        }
+    };
+    let sv: Vec<f64> = response
+        .get("sv")
+        .and_then(Json::as_array)
+        .ok_or_else(|| Error::Config("submit response missing \"sv\" array".into()))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| Error::Config("non-numeric singular value".into())))
+        .collect::<Result<_>>()?;
+    if sv.len() != n {
+        return Err(Error::Config(format!("{} singular values for n={n}", sv.len())));
+    }
+    let m = response
+        .get("metrics")
+        .ok_or_else(|| Error::Config("submit response missing \"metrics\"".into()))?;
+    let metrics = LaunchMetrics {
+        launches: field_usize(m, "launches")?,
+        tasks: field_usize(m, "tasks")?,
+        max_parallel: field_usize(m, "max_parallel")?,
+        unrolled_launches: field_usize(m, "unrolled_launches")?,
+        bytes: m
+            .get("bytes")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| Error::Config("submit response missing integer \"bytes\"".into()))?
+            as u64,
+        per_launch: Vec::new(),
+        wall: Duration::ZERO,
+    };
+    Ok(JobResult {
+        id: response.get("id").and_then(Json::as_i64).unwrap_or(0) as u64,
+        n,
+        bw: field_usize(response, "bw")?,
+        precision,
+        sv,
+        metrics,
+        batch_jobs: field_usize(response, "batch_jobs")?,
+        queue_wait: Duration::from_micros(
+            response.get("queue_us").and_then(Json::as_i64).unwrap_or(0).max(0) as u64,
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generate::random_banded;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn band_payload_roundtrips_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (n, bw, tw) = (40, 5, 4);
+        let a = random_banded::<f64>(n, bw, tw, &mut rng);
+        let values = band_values(&a, bw);
+        assert_eq!(values.len(), band_expected_len(n, bw));
+        let back = band_from_values(n, bw, tw, "fp64", &values).unwrap();
+        match back {
+            BatchInput::F64 { a: b, bw: bw2 } => {
+                assert_eq!(bw2, bw);
+                assert_eq!(b, a);
+            }
+            _ => panic!("wrong precision"),
+        }
+    }
+
+    #[test]
+    fn band_payload_validates_shape_and_length() {
+        assert!(band_from_values(1, 1, 1, "fp64", &[]).is_err()); // n too small
+        assert!(band_from_values(8, 0, 1, "fp64", &[]).is_err()); // bw too small
+        assert!(band_from_values(8, 8, 1, "fp64", &[]).is_err()); // bw ≥ n
+        assert!(band_from_values(8, 2, 1, "fp64", &[0.0; 3]).is_err()); // short
+        assert!(band_from_values(8, 2, 1, "nope", &[0.0; 21]).is_err());
+        assert_eq!(band_expected_len(8, 2), 21);
+        assert!(band_from_values(8, 2, 1, "fp32", &[0.0; 21]).is_ok());
+    }
+
+    #[test]
+    fn oversized_shape_is_rejected_in_constant_time() {
+        // A hostile n must be rejected by arithmetic, not by iterating
+        // (or allocating) anything proportional to it.
+        let t0 = std::time::Instant::now();
+        let err = band_from_values(usize::MAX / 2, 3, 1, "fp64", &[1.0]).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(1), "shape check not O(1)");
+        assert!(err.to_string().contains("values"), "{err}");
+    }
+
+    #[test]
+    fn typed_and_erased_request_lines_agree() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = random_banded::<f32>(24, 3, 2, &mut rng);
+        let typed = submit_request(&a, 3, 2);
+        let erased = submit_request_for_input(&BatchInput::from((a, 3)), 2, None);
+        assert_eq!(typed, erased);
+    }
+
+    #[test]
+    fn deadline_rides_the_request_line() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let a = random_banded::<f64>(16, 2, 1, &mut rng);
+        let input = BatchInput::from((a, 2));
+        let line = submit_request_for_input(&input, 1, Some(Duration::from_millis(250)));
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("deadline_ms").and_then(Json::as_i64), Some(250));
+        assert_eq!(parsed.get("priority").and_then(Json::as_usize), Some(1));
+        let bare = submit_request_for_input(&input, 0, None);
+        assert!(Json::parse(&bare).unwrap().get("deadline_ms").is_none());
+    }
+
+    #[test]
+    fn submit_response_roundtrips_through_the_wire_shapes() {
+        let result = JobResult {
+            id: 9,
+            n: 5,
+            bw: 2,
+            precision: "fp32",
+            sv: vec![3.5, 1.25, 0.5, 0.25, -0.0],
+            metrics: LaunchMetrics {
+                launches: 7,
+                tasks: 21,
+                max_parallel: 4,
+                unrolled_launches: 1,
+                bytes: 12345,
+                per_launch: Vec::new(),
+                wall: Duration::ZERO,
+            },
+            batch_jobs: 3,
+            queue_wait: Duration::from_micros(417),
+        };
+        let line = result_json(&result).render();
+        let back = parse_submit_response(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.id, result.id);
+        assert_eq!(back.n, result.n);
+        assert_eq!(back.bw, result.bw);
+        assert_eq!(back.precision, result.precision);
+        assert_eq!(back.batch_jobs, result.batch_jobs);
+        assert_eq!(back.queue_wait, result.queue_wait);
+        assert_eq!(back.metrics.launches, result.metrics.launches);
+        assert_eq!(back.metrics.tasks, result.metrics.tasks);
+        assert_eq!(back.metrics.max_parallel, result.metrics.max_parallel);
+        assert_eq!(back.metrics.unrolled_launches, result.metrics.unrolled_launches);
+        assert_eq!(back.metrics.bytes, result.metrics.bytes);
+        for (got, want) in back.sv.iter().zip(result.sv.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn error_responses_decode_into_the_taxonomy() {
+        let overloaded = JobError::Overloaded { reason: "queue full: 8 jobs (cap 8)".into() };
+        let decoded = parse_error(&job_error_json(&overloaded));
+        assert!(decoded.is_retryable());
+        assert_eq!(decoded.as_job().unwrap().kind(), "overloaded");
+
+        // Deadline expiries carry their queue time as a structured field
+        // and rebuild it exactly — the remote display never fabricates 0.
+        let expired = JobError::DeadlineExpired { queued_ms: 150 };
+        let decoded = parse_error(&job_error_json(&expired));
+        assert_eq!(decoded.as_job(), Some(&expired));
+
+        let terminal = parse_error(&job_error_json(&JobError::Execution {
+            reason: "backend pjrt failed".into(),
+        }));
+        assert!(!terminal.is_retryable());
+        assert_eq!(terminal.as_job().unwrap().kind(), "execution");
+
+        // Plain protocol errors (no kind) are config errors, not jobs.
+        let config = parse_error(&error_json("submit needs a \"band\" array"));
+        assert!(config.as_job().is_none());
+        assert!(config.to_string().contains("band"));
+    }
+
+    #[test]
+    fn malformed_submit_responses_are_rejected() {
+        for bad in [
+            "{\"ok\":true}",
+            "{\"ok\":true,\"n\":4,\"bw\":2,\"precision\":\"fp64\",\"batch_jobs\":1,\
+             \"metrics\":{},\"sv\":[1.0]}",
+            "{\"ok\":true,\"n\":2,\"bw\":1,\"precision\":\"fp7\",\"batch_jobs\":1,\"sv\":[1,2]}",
+        ] {
+            let parsed = Json::parse(bad).unwrap();
+            assert!(parse_submit_response(&parsed).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,7 +1,84 @@
 //! Library error type (hand-rolled `Display`/`Error` impls — the offline
 //! crate set has no `thiserror`).
+//!
+//! Job-level failures ride a typed taxonomy ([`JobError`]) instead of a
+//! stringly variant, so every front door — [`crate::client::Client`],
+//! the in-process [`crate::service::Service`], the TCP wire — can tell a
+//! *retryable* admission rejection (back-pressure) apart from a terminal
+//! failure (expired deadline, backend error) without parsing messages.
 
 use std::fmt;
+
+/// Why a reduction job was declined or failed — the error taxonomy of
+/// the client API ([`crate::client::ReductionOutcome`] waits resolve to
+/// this on failure) and of the service queue. The same four kinds ride
+/// the JSON wire (`kind` + `retryable` fields), so a
+/// [`crate::client::RemoteClient`] surfaces exactly what a local one
+/// would.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobError {
+    /// Admission control declined the job because the service is loaded
+    /// (queue depth cap or priced-backlog cap). **Retryable**: the same
+    /// submission is expected to succeed once the queue drains.
+    Overloaded { reason: String },
+    /// The service is not accepting work (shutting down, or torn down
+    /// before the job ran). Not retryable against this endpoint.
+    Unavailable { reason: String },
+    /// The job's deadline passed while it was still queued; it was
+    /// failed at flush instead of executed.
+    DeadlineExpired { queued_ms: u64 },
+    /// The backend failed while executing the job's plan.
+    Execution { reason: String },
+}
+
+impl JobError {
+    /// True when resubmitting the identical job later is expected to
+    /// succeed — the back-pressure signal admission control emits.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, JobError::Overloaded { .. })
+    }
+
+    /// Stable wire code for the `kind` field of an error response.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobError::Overloaded { .. } => "overloaded",
+            JobError::Unavailable { .. } => "unavailable",
+            JobError::DeadlineExpired { .. } => "deadline-expired",
+            JobError::Execution { .. } => "execution",
+        }
+    }
+
+    /// Rebuild a taxonomy member from its wire fields — the decode side
+    /// of [`JobError::kind`] (`queued_ms` rides the error response as its
+    /// own field for deadline expiries, so the decoded error reports the
+    /// server's actual queue time, never a fabricated one). Unknown codes
+    /// map to [`JobError::Execution`] (terminal, message preserved)
+    /// rather than erroring: an old client must still classify a new
+    /// server's failures.
+    pub fn from_kind(kind: &str, message: &str, queued_ms: Option<u64>) -> JobError {
+        match kind {
+            "overloaded" => JobError::Overloaded { reason: message.to_string() },
+            "unavailable" => JobError::Unavailable { reason: message.to_string() },
+            "deadline-expired" => {
+                JobError::DeadlineExpired { queued_ms: queued_ms.unwrap_or(0) }
+            }
+            _ => JobError::Execution { reason: message.to_string() },
+        }
+    }
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::Overloaded { reason } => write!(f, "overloaded (retryable): {reason}"),
+            JobError::Unavailable { reason } => write!(f, "service unavailable: {reason}"),
+            JobError::DeadlineExpired { queued_ms } => {
+                write!(f, "deadline exceeded before execution (queued {queued_ms} ms)")
+            }
+            JobError::Execution { reason } => write!(f, "execution failed: {reason}"),
+        }
+    }
+}
 
 #[derive(Debug)]
 pub enum Error {
@@ -9,10 +86,26 @@ pub enum Error {
     ArtifactMissing { path: String, variant: String },
     Pjrt(String),
     Numerical(String),
-    /// A reduction-service job failed (backend error on the worker,
-    /// expired deadline, or shutdown before execution).
-    Service(String),
+    /// A reduction job was declined or failed — see [`JobError`] for the
+    /// taxonomy (retryable admission rejection vs terminal failure).
+    Job(JobError),
     Io(std::io::Error),
+}
+
+impl Error {
+    /// The job taxonomy member, when this error is job-level.
+    pub fn as_job(&self) -> Option<&JobError> {
+        match self {
+            Error::Job(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// True when retrying the same operation later is expected to
+    /// succeed (job-level back-pressure; everything else is terminal).
+    pub fn is_retryable(&self) -> bool {
+        self.as_job().is_some_and(JobError::is_retryable)
+    }
 }
 
 impl fmt::Display for Error {
@@ -25,7 +118,7 @@ impl fmt::Display for Error {
             ),
             Error::Pjrt(msg) => write!(f, "PJRT runtime error: {msg}"),
             Error::Numerical(msg) => write!(f, "numerical failure: {msg}"),
-            Error::Service(msg) => write!(f, "service error: {msg}"),
+            Error::Job(e) => write!(f, "job error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -43,6 +136,12 @@ impl std::error::Error for Error {
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
         Error::Io(e)
+    }
+}
+
+impl From<JobError> for Error {
+    fn from(e: JobError) -> Self {
+        Error::Job(e)
     }
 }
 
@@ -76,7 +175,6 @@ mod tests {
         assert!(e.to_string().contains("a/b.txt"));
         assert!(e.to_string().contains("n=8"));
         assert!(Error::Pjrt("boom".into()).to_string().starts_with("PJRT"));
-        assert_eq!(Error::Service("queue full".into()).to_string(), "service error: queue full");
     }
 
     #[test]
@@ -85,5 +183,49 @@ mod tests {
         let e: Error = io.into();
         assert!(std::error::Error::source(&e).is_some());
         assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn job_taxonomy_separates_retryable_from_terminal() {
+        let overloaded = JobError::Overloaded { reason: "queue full".into() };
+        assert!(overloaded.is_retryable());
+        assert!(Error::Job(overloaded.clone()).is_retryable());
+        for terminal in [
+            JobError::Unavailable { reason: "shutting down".into() },
+            JobError::DeadlineExpired { queued_ms: 7 },
+            JobError::Execution { reason: "backend".into() },
+        ] {
+            assert!(!terminal.is_retryable(), "{terminal:?}");
+            assert!(!Error::Job(terminal).is_retryable());
+        }
+        assert!(!Error::Config("x".into()).is_retryable());
+        assert_eq!(Error::Job(overloaded).as_job().unwrap().kind(), "overloaded");
+    }
+
+    #[test]
+    fn job_kinds_roundtrip_over_the_wire_codes() {
+        for e in [
+            JobError::Overloaded { reason: "queue full: 4 jobs".into() },
+            JobError::Unavailable { reason: "service is shutting down".into() },
+            JobError::Execution { reason: "backend threadpool failed".into() },
+        ] {
+            let back = JobError::from_kind(e.kind(), &e.to_string(), None);
+            assert_eq!(back.kind(), e.kind());
+            assert_eq!(back.is_retryable(), e.is_retryable());
+        }
+        // The deadline queue time rides its own wire field and rebuilds
+        // exactly — no fabricated zero.
+        let expired = JobError::DeadlineExpired { queued_ms: 150 };
+        let back = JobError::from_kind(expired.kind(), &expired.to_string(), Some(150));
+        assert_eq!(back, expired);
+        assert!(back.to_string().contains("150 ms"), "{back}");
+        // Unknown kinds classify as terminal execution failures.
+        assert_eq!(JobError::from_kind("novel", "msg", None).kind(), "execution");
+    }
+
+    #[test]
+    fn deadline_display_names_the_deadline() {
+        let e = Error::Job(JobError::DeadlineExpired { queued_ms: 3 });
+        assert!(e.to_string().contains("deadline"), "{e}");
     }
 }

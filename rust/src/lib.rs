@@ -128,18 +128,36 @@
 //! results are bitwise identical to the direct pipeline on the same
 //! backend.
 //!
+//! ## One front door: the client API
+//!
+//! All of the above sits behind a single request/response contract —
+//! the [`client`] module. A [`client::ReductionRequest`] (batch of
+//! problems, tuning override, priority/deadline) goes into any
+//! [`client::Client`]; a [`client::ReductionOutcome`] (typed singular
+//! values, per-problem [`coordinator::metrics::LaunchMetrics`], plan
+//! provenance) comes back. [`client::LocalClient`] executes in-process
+//! (directly on a backend, or queued through an embedded
+//! [`service::Service`]); [`client::RemoteClient`] speaks the JSON-lines
+//! wire to a `banded-svd serve` endpoint. The two are interchangeable:
+//! same request, **bitwise-identical** singular values
+//! (`rust/tests/client_equivalence.rs`). Failures resolve to the typed
+//! [`error::JobError`] taxonomy on every path, so retryable
+//! back-pressure is distinguishable from terminal errors without
+//! parsing messages.
+//!
 //! ```no_run
 //! use banded_svd::prelude::*;
 //!
-//! let service = Service::start(ServiceConfig::default()).unwrap();
-//! let mut rng = Xoshiro256::seed_from_u64(0);
-//! let a = random_banded::<f64>(512, 16, 16, &mut rng);
-//! let result = service.submit_wait(BatchInput::from((a, 16)), 0, None).unwrap();
+//! let client = LocalClient::new(TuneParams { tpb: 32, tw: 8, max_blocks: 192 });
+//! let outcome = client
+//!     .submit_wait(ReductionRequest::new().random(512, 16, ScalarKind::F64, 0))
+//!     .unwrap();
+//! let p = &outcome.problems[0];
 //! println!(
-//!     "σ_max = {} ({} jobs co-scheduled, plan-cache hit rate {:.2})",
-//!     result.sv[0],
-//!     result.batch_jobs,
-//!     service.stats().cache.hit_rate()
+//!     "σ_max = {} ({} launches on {})",
+//!     p.sv[0],
+//!     p.metrics.launches,
+//!     outcome.provenance.backend
 //! );
 //! ```
 
@@ -148,6 +166,7 @@ pub mod banded;
 pub mod batch;
 pub mod baselines;
 pub mod bulge;
+pub mod client;
 pub mod config;
 pub mod coordinator;
 pub mod error;
@@ -173,15 +192,18 @@ pub mod prelude {
     pub use crate::bulge::{
         reduce_to_bidiagonal, reduce_to_bidiagonal_parallel, stage_plan, Stage,
     };
+    pub use crate::client::{
+        Client, ClientStats, ExecutionSource, JobHandle, LocalClient, PlanProvenance,
+        ProblemOutcome, ProblemSpec, ReductionOutcome, ReductionRequest, RemoteClient,
+    };
     pub use crate::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
-    pub use crate::error::{Error, Result};
+    pub use crate::error::{Error, JobError, Result};
     pub use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
     pub use crate::pipeline::{
-        batch_singular_values, bidiagonal_singular_values, dense_to_band,
-        singular_values_3stage, SvdOptions,
+        bidiagonal_singular_values, dense_to_band, singular_values_3stage, SvdOptions,
     };
     pub use crate::plan::{LaunchPlan, TaskSlot};
-    pub use crate::scalar::{Scalar, F16};
+    pub use crate::scalar::{Scalar, ScalarKind, F16};
     pub use crate::service::{JobResult, JobTicket, PlanCache, Server, Service, ServiceStats};
     pub use crate::util::rng::Xoshiro256;
     pub use crate::util::threadpool::ThreadPool;

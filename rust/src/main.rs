@@ -4,8 +4,10 @@
 //! plus operational commands for running reductions and pipelines.
 
 use banded_svd::banded::Dense;
-use banded_svd::batch::BatchCoordinator;
-use banded_svd::config::{BackendKind, TuneParams};
+use banded_svd::client::{
+    Client, LocalClient, ReductionOutcome, ReductionRequest, RemoteClient,
+};
+use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::{dense_with_spectrum, random_banded, Spectrum};
 use banded_svd::pipeline::{
@@ -13,11 +15,12 @@ use banded_svd::pipeline::{
     singular_values_3stage_mixed, SvdOptions,
 };
 use banded_svd::runtime::{artifact_dir, PjrtEngine};
-use banded_svd::scalar::F16;
+use banded_svd::scalar::{ScalarKind, F16};
 use banded_svd::simulator::{self, hw};
 use banded_svd::util::bench::{fmt_duration, Table};
 use banded_svd::util::cli::{flag, opt, Cli, Command};
 use banded_svd::util::rng::Xoshiro256;
+use std::time::Duration;
 
 fn cli() -> Cli {
     Cli {
@@ -60,6 +63,34 @@ fn cli() -> Cli {
                     opt("backend", "sequential|threadpool|pjrt", "threadpool"),
                     opt("threads", "worker threads (0 = all cores)", "0"),
                     opt("seed", "rng seed", "42"),
+                ],
+            },
+            Command {
+                name: "client",
+                about: "submit reduction requests through the unified client (local or remote)",
+                opts: vec![
+                    opt("remote", "serve endpoint to submit to (empty = run locally)", ""),
+                    flag("queued", "local mode: queue through an embedded in-process service"),
+                    opt("count", "number of problems", "4"),
+                    opt("n", "matrix size of each problem", "128"),
+                    opt("bw", "bandwidth of each problem", "8"),
+                    opt(
+                        "spec",
+                        "explicit problem list n:bw[:fp16|fp32|fp64],... (overrides count/n/bw)",
+                        "",
+                    ),
+                    opt("precision", "default precision: fp16|fp32|fp64", "fp64"),
+                    opt("priority", "priority class (lower drains first)", "0"),
+                    opt("deadline-ms", "fail jobs still queued after this many ms", ""),
+                    opt("tw", "inner tilewidth (local modes)", "8"),
+                    opt("tpb", "threads per block (local modes)", "32"),
+                    opt("max-blocks", "block capacity per launch (local modes)", "192"),
+                    opt("policy", "packing policy: round-robin|greedy-fill", "round-robin"),
+                    opt("max-coresident", "max problems interleaved at once", "16"),
+                    opt("backend", "sequential|threadpool|pjrt (local modes)", "threadpool"),
+                    opt("threads", "worker threads (0 = all cores, local modes)", "0"),
+                    opt("seed", "rng seed", "42"),
+                    flag("shutdown", "after the run, ask the remote server to shut down"),
                 ],
             },
             Command {
@@ -181,6 +212,7 @@ fn main() {
     let code = match parsed.command.as_str() {
         "reduce" => cmd_reduce(&parsed.args),
         "batch" => cmd_batch(&parsed.args),
+        "client" => cmd_client(&parsed.args),
         "serve" => cmd_serve(&parsed.args),
         "svd" => cmd_svd(&parsed.args),
         "accuracy" => cmd_accuracy(&parsed.args),
@@ -193,6 +225,22 @@ fn main() {
         _ => unreachable!(),
     };
     std::process::exit(code);
+}
+
+/// Verify singular values against the Jacobi oracle on the pre-reduction
+/// dense matrix; returns the process exit code.
+fn verify_against_oracle(sv: &[f64], dense_before: Option<&Dense<f64>>) -> i32 {
+    if let Some(dense) = dense_before {
+        let oracle = jacobi_singular_values(dense);
+        let err = relative_sv_error(sv, &oracle);
+        println!("singular-value relative error vs Jacobi oracle: {err:.3e}");
+        if err > 1e-4 {
+            eprintln!("VERIFICATION FAILED");
+            return 1;
+        }
+        println!("verification OK");
+    }
+    0
 }
 
 fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
@@ -211,57 +259,74 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
         }
     };
     let seed: u64 = args.parse_or("seed", 42);
+    let threads: usize = args.parse_or("threads", 0);
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let tw = params.effective_tw(bw);
-    let mut a = random_banded::<f64>(n, bw, tw, &mut rng);
+    let a = random_banded::<f64>(n, bw, tw, &mut rng);
     let dense_before = if args.flag("verify") && n <= 512 {
         Some(Dense::from_vec(n, n, a.to_dense()))
     } else {
         None
     };
-    let coord = Coordinator::new(params, args.parse_or("threads", 0));
-    let report = match backend {
-        BackendKind::Sequential | BackendKind::Threadpool => {
-            coord.reduce_native(&mut a, bw, backend)
-        }
-        BackendKind::Pjrt | BackendKind::PjrtFused => {
-            let mut af = a.convert::<f32>();
-            let engine = match PjrtEngine::load(&artifact_dir(), n, bw, tw) {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("error: {e}");
-                    return 1;
-                }
-            };
-            let r = coord.reduce_pjrt(&engine, &mut af, backend);
-            let _ = &a;
-            r
+
+    // pjrt-fused executes whole-stage artifacts (one call per stage)
+    // outside the plan-executor path; every plan backend goes through
+    // the unified client front door.
+    if backend == BackendKind::PjrtFused {
+        let mut af = a.convert::<f32>();
+        let engine = match PjrtEngine::load(&artifact_dir(), n, bw, tw) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        let coord = Coordinator::new(params, threads);
+        return match coord.reduce_pjrt(&engine, &mut af, backend) {
+            Ok(r) => {
+                println!(
+                    "reduced n={n} bw={bw} tw={tw} backend={:?}: {} launches, {} tasks, \
+                     max parallel {}, wall {}",
+                    r.backend,
+                    r.metrics.launches,
+                    r.metrics.tasks,
+                    r.metrics.max_parallel,
+                    fmt_duration(r.metrics.wall)
+                );
+                println!("residual off-bidiagonal: {:.3e}", r.residual_off_band);
+                let sv = bidiagonal_singular_values(&r.diag, &r.superdiag);
+                verify_against_oracle(&sv, dense_before.as_ref())
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        };
+    }
+
+    let client = match LocalClient::direct(params, BatchConfig::default(), backend, threads) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
         }
     };
-    match report {
-        Ok(r) => {
+    match client.submit_wait(ReductionRequest::new().problem((a, bw))) {
+        Ok(outcome) => {
+            let p = &outcome.problems[0];
             println!(
-                "reduced n={n} bw={bw} tw={tw} backend={:?}: {} launches, {} tasks, \
+                "reduced n={n} bw={bw} tw={tw} backend={}: {} launches, {} tasks, \
                  max parallel {}, wall {}",
-                r.backend,
-                r.metrics.launches,
-                r.metrics.tasks,
-                r.metrics.max_parallel,
-                fmt_duration(r.metrics.wall)
+                outcome.provenance.backend,
+                p.metrics.launches,
+                p.metrics.tasks,
+                p.metrics.max_parallel,
+                fmt_duration(outcome.wall)
             );
-            println!("residual off-bidiagonal: {:.3e}", r.residual_off_band);
-            if let Some(dense) = dense_before {
-                let sv = bidiagonal_singular_values(&r.diag, &r.superdiag);
-                let oracle = jacobi_singular_values(&dense);
-                let err = relative_sv_error(&sv, &oracle);
-                println!("singular-value relative error vs Jacobi oracle: {err:.3e}");
-                if err > 1e-4 {
-                    eprintln!("VERIFICATION FAILED");
-                    return 1;
-                }
-                println!("verification OK");
+            if let Some(residual) = p.residual_off_band {
+                println!("residual off-bidiagonal: {residual:.3e}");
             }
-            0
+            verify_against_oracle(&p.sv, dense_before.as_ref())
         }
         Err(e) => {
             eprintln!("error: {e}");
@@ -270,10 +335,96 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
     }
 }
 
-fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
-    use banded_svd::batch::BatchInput;
-    use banded_svd::config::{BatchConfig, PackingPolicy};
+/// Parse the shared problem-list options (`--spec` or `--count/--n/--bw`
+/// with `--precision`) into `(n, bw, kind)` shapes.
+fn parse_problem_shapes(
+    args: &banded_svd::util::cli::Args,
+) -> Result<Vec<(usize, usize, ScalarKind)>, String> {
+    let default_prec: ScalarKind = args.get("precision").unwrap_or("fp64").parse()?;
+    let mut shapes = Vec::new();
+    let spec = args.get("spec").unwrap_or("");
+    if spec.is_empty() {
+        let count: usize = args.parse_or("count", 8);
+        let n: usize = args.parse_or("n", 256);
+        let bw: usize = args.parse_or("bw", 16);
+        shapes.extend((0..count).map(|_| (n, bw, default_prec)));
+    } else {
+        for item in spec.split(',') {
+            let parts: Vec<&str> = item.trim().split(':').collect();
+            let parsed = match parts.as_slice() {
+                [n, bw] => (n.parse(), bw.parse(), Ok(default_prec)),
+                [n, bw, prec] => (n.parse(), bw.parse(), prec.parse::<ScalarKind>()),
+                _ => {
+                    return Err(format!("bad --spec entry {item:?} (want n:bw or n:bw:precision)"))
+                }
+            };
+            match parsed {
+                (Ok(n), Ok(bw), Ok(kind)) => shapes.push((n, bw, kind)),
+                (_, _, Err(e)) => return Err(format!("bad --spec entry {item:?}: {e}")),
+                _ => return Err(format!("bad --spec entry {item:?}: n and bw must be integers")),
+            }
+        }
+    }
+    Ok(shapes)
+}
 
+/// Build a [`ReductionRequest`] of seeded random problems from shapes.
+fn request_from_shapes(shapes: &[(usize, usize, ScalarKind)], seed: u64) -> ReductionRequest {
+    let mut request = ReductionRequest::new();
+    for (i, &(n, bw, kind)) in shapes.iter().enumerate() {
+        request = request.random(n, bw, kind, seed.wrapping_add(i as u64));
+    }
+    request
+}
+
+/// Render a completed [`ReductionOutcome`] as the per-problem table plus
+/// the aggregate/provenance summary — shared by `batch` and `client`.
+fn print_outcome(outcome: &ReductionOutcome) {
+    let mut table = Table::new(vec![
+        "problem", "n", "bw", "prec", "launches", "tasks", "max par", "bytes", "sigma_max",
+    ]);
+    for (i, p) in outcome.problems.iter().enumerate() {
+        table.row(vec![
+            i.to_string(),
+            p.n.to_string(),
+            p.bw.to_string(),
+            p.precision.to_string(),
+            p.metrics.launches.to_string(),
+            p.metrics.tasks.to_string(),
+            p.metrics.max_parallel.to_string(),
+            p.metrics.bytes.to_string(),
+            format!("{:.4}", p.sv.first().copied().unwrap_or(0.0)),
+        ]);
+    }
+    table.print();
+    let problems = outcome.problems.len();
+    let throughput = outcome.throughput();
+    if let Some(batch) = &outcome.batch {
+        println!(
+            "aggregate: {} shared launches ({} co-scheduled, <= {} problems/launch), \
+             {} tasks, occupancy {:.2}, {throughput:.1} problems/s, wall {}",
+            batch.aggregate.launches,
+            batch.co_scheduled_launches,
+            batch.max_problems_per_launch,
+            batch.aggregate.tasks,
+            batch.occupancy_ratio(),
+            fmt_duration(outcome.wall)
+        );
+    } else {
+        println!(
+            "aggregate: {problems} problems, {throughput:.1} problems/s, wall {}",
+            fmt_duration(outcome.wall)
+        );
+    }
+    let prov = &outcome.provenance;
+    let cache = match &prov.cache {
+        Some(c) => format!(", plan cache {} hits / {} misses", c.hits(), c.misses()),
+        None => String::new(),
+    };
+    println!("provenance: {} on {}{cache}", prov.source.name(), prov.backend);
+}
+
+fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
     let params = TuneParams {
         tpb: args.parse_or("tpb", 32),
         tw: args.parse_or("tw", 8),
@@ -287,55 +438,16 @@ fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
         }
     };
     let cfg = BatchConfig { max_coresident: args.parse_or("max-coresident", 64).max(1), policy };
-    let default_prec = args.get("precision").unwrap_or("fp64").to_string();
-
-    // Problem list: either an explicit spec or count × (n, bw).
-    let mut shapes: Vec<(usize, usize, String)> = Vec::new();
-    let spec = args.get("spec").unwrap_or("");
-    if spec.is_empty() {
-        let count: usize = args.parse_or("count", 8);
-        let n: usize = args.parse_or("n", 256);
-        let bw: usize = args.parse_or("bw", 16);
-        shapes.extend((0..count).map(|_| (n, bw, default_prec.clone())));
-    } else {
-        for item in spec.split(',') {
-            let parts: Vec<&str> = item.trim().split(':').collect();
-            let parsed = match parts.as_slice() {
-                [n, bw] => (n.parse(), bw.parse(), default_prec.clone()),
-                [n, bw, prec] => (n.parse(), bw.parse(), prec.to_string()),
-                _ => {
-                    eprintln!("bad --spec entry {item:?} (want n:bw or n:bw:precision)");
-                    return 2;
-                }
-            };
-            match parsed {
-                (Ok(n), Ok(bw), prec) => shapes.push((n, bw, prec)),
-                _ => {
-                    eprintln!("bad --spec entry {item:?}: n and bw must be integers");
-                    return 2;
-                }
-            }
+    let shapes = match parse_problem_shapes(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
         }
-    }
-
-    let mut rng = Xoshiro256::seed_from_u64(args.parse_or("seed", 42));
-    let mut inputs: Vec<BatchInput> = Vec::with_capacity(shapes.len());
-    for (n, bw, prec) in &shapes {
-        let tw = params.effective_tw(*bw);
-        inputs.push(match prec.as_str() {
-            "fp16" => BatchInput::from((random_banded::<F16>(*n, *bw, tw, &mut rng), *bw)),
-            "fp32" => BatchInput::from((random_banded::<f32>(*n, *bw, tw, &mut rng), *bw)),
-            "fp64" => BatchInput::from((random_banded::<f64>(*n, *bw, tw, &mut rng), *bw)),
-            other => {
-                eprintln!("unknown precision {other:?} (fp16|fp32|fp64)");
-                return 2;
-            }
-        });
-    }
-
+    };
     // Select the executor through the backend trait: any registered plan
     // backend can carry a merged batch plan (the PJRT backend holds one
-    // device-resident buffer per co-scheduled problem).
+    // device-resident buffer per problem).
     let kind: BackendKind = match args.get("backend").unwrap_or("threadpool").parse() {
         Ok(k) => k,
         Err(e) => {
@@ -343,16 +455,16 @@ fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
             return 2;
         }
     };
-    let backend = match banded_svd::backend::for_kind(kind, args.parse_or("threads", 0)) {
-        Ok(b) => b,
+    let client = match LocalClient::direct(params, cfg, kind, args.parse_or("threads", 0)) {
+        Ok(c) => c,
         Err(e) => {
             eprintln!("error: {e}");
             return 2;
         }
     };
-    let coord = BatchCoordinator::with_backend(params, cfg, backend);
-    let report = match coord.run(&mut inputs) {
-        Ok(r) => r,
+    let request = request_from_shapes(&shapes, args.parse_or("seed", 42));
+    let outcome = match client.submit_wait(request) {
+        Ok(o) => o,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
@@ -360,49 +472,136 @@ fn cmd_batch(args: &banded_svd::util::cli::Args) -> i32 {
     };
     println!(
         "batch of {} problems on {} backend, capacity {} ({:?}), max co-resident {}",
-        report.problems.len(),
-        coord.backend().name(),
-        report.plan.capacity,
-        report.plan.policy,
-        report.plan.max_coresident
+        outcome.problems.len(),
+        outcome.provenance.backend,
+        params.capacity(),
+        cfg.policy,
+        cfg.max_coresident
     );
-    let mut table = Table::new(vec![
-        "problem", "n", "bw", "prec", "launches", "tasks", "max par", "bytes", "residual",
-    ]);
-    for (i, p) in report.problems.iter().enumerate() {
-        table.row(vec![
-            i.to_string(),
-            p.n.to_string(),
-            p.bw.to_string(),
-            p.precision.to_string(),
-            p.metrics.launches.to_string(),
-            p.metrics.tasks.to_string(),
-            p.metrics.max_parallel.to_string(),
-            p.metrics.bytes.to_string(),
-            format!("{:.1e}", p.residual_off_band),
-        ]);
-    }
-    table.print();
-    let agg = &report.metrics;
-    println!(
-        "aggregate: {} shared launches ({} co-scheduled, ≤ {} problems/launch), \
-         {} tasks, occupancy {:.2}, {:.1} problems/s, wall {}",
-        agg.aggregate.launches,
-        agg.co_scheduled_launches,
-        agg.max_problems_per_launch,
-        agg.aggregate.tasks,
-        agg.occupancy_ratio(),
-        report.throughput(),
-        fmt_duration(report.wall)
-    );
+    print_outcome(&outcome);
     0
 }
 
+fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
+    let params = TuneParams {
+        tpb: args.parse_or("tpb", 32),
+        tw: args.parse_or("tw", 8),
+        max_blocks: args.parse_or("max-blocks", 192),
+    };
+    let policy: PackingPolicy = match args.get("policy").unwrap_or("round-robin").parse() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let batch = BatchConfig { max_coresident: args.parse_or("max-coresident", 16).max(1), policy };
+    let kind: BackendKind = match args.get("backend").unwrap_or("threadpool").parse() {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let shapes = match parse_problem_shapes(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut request = request_from_shapes(&shapes, args.parse_or("seed", 42));
+    // Absent-or-valid, like the server's own field handling: an
+    // out-of-range priority is an error, never silently clamped.
+    match args.parse_opt::<u8>("priority") {
+        Ok(Some(p)) => request = request.priority(p),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("{e} (priority must be an integer in 0..=255)");
+            return 2;
+        }
+    }
+    match args.parse_opt::<u64>("deadline-ms") {
+        Ok(Some(ms)) => request = request.deadline(Duration::from_millis(ms)),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+
+    // One driver for every execution surface: request handling below is
+    // identical whether the client is local (direct or queued through an
+    // embedded service) or a remote `banded-svd serve` endpoint.
+    fn drive(client: &dyn Client, request: ReductionRequest, label: &str) -> i32 {
+        match client.submit_wait(request) {
+            Ok(outcome) => {
+                println!("client ({label}): {} problems completed", outcome.problems.len());
+                print_outcome(&outcome);
+                let stats = client.stats();
+                println!(
+                    "client stats: {} submitted, {} completed, {} failed",
+                    stats.jobs_submitted, stats.jobs_completed, stats.jobs_failed
+                );
+                0
+            }
+            Err(e) => {
+                let hint = if e.is_retryable() { " (retryable: server is loaded)" } else { "" };
+                eprintln!("error: {e}{hint}");
+                1
+            }
+        }
+    }
+
+    let remote_addr = args.get("remote").unwrap_or("").to_string();
+    if !remote_addr.is_empty() {
+        let client = match RemoteClient::connect(&remote_addr) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: connect {remote_addr}: {e}");
+                return 1;
+            }
+        };
+        let code = drive(&client, request, &format!("remote {remote_addr}"));
+        if args.flag("shutdown") {
+            if let Err(e) = client.shutdown() {
+                eprintln!("shutdown: {e}");
+                return 1;
+            }
+            println!("server acknowledged shutdown");
+        }
+        code
+    } else if args.flag("queued") {
+        let cfg = ServiceConfig {
+            params,
+            batch,
+            backend: kind,
+            threads: args.parse_or("threads", 0),
+            ..ServiceConfig::default()
+        };
+        let client = match LocalClient::queued(cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        drive(&client, request, "local, queued through an embedded service")
+    } else {
+        let client = match LocalClient::direct(params, batch, kind, args.parse_or("threads", 0)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        drive(&client, request, "local, direct")
+    }
+}
+
 fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
-    use banded_svd::config::{BatchConfig, PackingPolicy, ServiceConfig};
     use banded_svd::service::Server;
     use std::io::Write as _;
-    use std::time::Duration;
 
     let params = TuneParams {
         tpb: args.parse_or("tpb", 32),

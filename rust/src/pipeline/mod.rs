@@ -8,6 +8,12 @@
 //! - [`jacobi`] — one-sided Jacobi oracle for independent validation.
 //! - [`svd`]    — end-to-end drivers, including the mixed-precision
 //!   Fig. 3 protocol.
+//!
+//! The banded-entry convenience functions (`banded_singular_values`,
+//! `batch_singular_values`) are deprecated shims over the unified
+//! [`crate::client`] front door — prefer a
+//! [`crate::client::ReductionRequest`] submitted through a
+//! [`crate::client::Client`].
 
 pub mod dk_qr;
 pub mod jacobi;
@@ -22,7 +28,10 @@ pub use stage3::{
     bidiagonal_singular_values, bidiagonal_singular_values_parallel, relative_sv_error,
 };
 pub use svd::{
-    banded_singular_values, banded_singular_values_with, batch_singular_values,
-    singular_values_3stage, singular_values_3stage_mixed, singular_values_3stage_parallel,
-    StageTimings, SvdOptions,
+    banded_singular_values_with, singular_values_3stage, singular_values_3stage_mixed,
+    singular_values_3stage_parallel, StageTimings, SvdOptions,
 };
+// Deprecated shims stay importable from their historical path; new code
+// goes through `crate::client`.
+#[allow(deprecated)]
+pub use svd::{banded_singular_values, batch_singular_values};

@@ -3,14 +3,21 @@
 //! precision (the Fig. 3 protocol) and on a selectable
 //! [`crate::backend::Backend`] — every stage-2 reduction here executes a
 //! [`crate::plan::LaunchPlan`] through the trait, never a private loop.
+//!
+//! The historical banded-entry convenience functions
+//! ([`banded_singular_values`], [`batch_singular_values`]) are
+//! **deprecated shims** over the unified [`crate::client`] front door;
+//! [`banded_singular_values_with`] remains as the explicit-backend
+//! direct call the client machinery itself is checked against.
 
 use crate::backend::{
     execute_reduction, AsBandStorageMut, Backend, SequentialBackend, ThreadpoolBackend,
 };
 use crate::banded::dense::Dense;
 use crate::banded::storage::Banded;
-use crate::batch::{BatchCoordinator, BatchInput};
-use crate::config::{BatchConfig, TuneParams};
+use crate::batch::BatchInput;
+use crate::client::{Client, LocalClient, ReductionRequest};
+use crate::config::{BackendKind, BatchConfig, TuneParams};
 use crate::error::Result;
 use crate::pipeline::stage1::{dense_to_band_inplace, dense_to_band_inplace_parallel};
 use crate::pipeline::stage3::{bidiagonal_singular_values, bidiagonal_singular_values_parallel};
@@ -119,20 +126,34 @@ pub fn singular_values_3stage_parallel(
     (sv, times)
 }
 
-/// Singular values of an already-banded matrix (stages 2+3 only) — the
-/// "direct applications" entry point (spectral methods for PDEs, §I).
-/// Runs on the [`SequentialBackend`]; use
-/// [`banded_singular_values_with`] to choose the executor.
+/// Singular values of an already-banded matrix (stages 2+3 only).
+///
+/// **Deprecated shim**: delegates to the unified client front door
+/// ([`LocalClient`] in direct mode on the sequential backend), which
+/// produces bitwise-identical values. New code should build a
+/// [`ReductionRequest`] and submit it through a [`Client`] — that path
+/// also covers batching, queued execution, and remote serving — or call
+/// [`banded_singular_values_with`] for a one-shot run on an explicit
+/// backend.
+#[deprecated(
+    since = "0.1.0",
+    note = "submit a client::ReductionRequest through client::LocalClient (the unified front \
+            door), or use banded_singular_values_with for an explicit backend"
+)]
 pub fn banded_singular_values<T: Scalar>(
     banded: &Banded<T>,
     bw: usize,
     params: &TuneParams,
 ) -> Vec<f64>
 where
-    Banded<T>: AsBandStorageMut,
+    BatchInput: From<(Banded<T>, usize)>,
 {
-    banded_singular_values_with(&SequentialBackend::new(), banded, bw, params)
-        .expect("banded storage must be sized for the reduction")
+    let client = LocalClient::direct(*params, BatchConfig::default(), BackendKind::Sequential, 1)
+        .expect("sequential backend always constructs");
+    let outcome = client
+        .submit_wait(ReductionRequest::new().problem((banded.clone(), bw)))
+        .expect("banded storage must be sized for the reduction");
+    outcome.problems.into_iter().next().expect("one problem submitted").sv
 }
 
 /// [`banded_singular_values`] on an explicit [`Backend`] — the pipeline's
@@ -156,46 +177,38 @@ where
 }
 
 /// Singular values of *many* already-banded problems through one batched
-/// stage-2 reduction — the many-small-matrices workload (covariance
-/// spectra, per-head attention blocks) the single-problem entry points
-/// cannot saturate the device with. Problems may mix sizes, bandwidths,
-/// and precisions; each result vector is descending, widened to f64.
+/// stage-2 reduction.
 ///
-/// `threads == 0` uses all available hardware threads.
+/// **Deprecated shim**: delegates to the unified client front door
+/// ([`LocalClient`] in direct mode on the threadpool backend). Unlike the
+/// historical version it borrows the inputs immutably — they are cloned
+/// into the request, **not** reduced in place (the signature changed from
+/// `&mut [BatchInput]` so call sites can see this; `&mut` arguments still
+/// coerce). New code should build the request directly:
 ///
-/// # Examples
-///
+/// ```text
+/// let client = LocalClient::new(params);
+/// let outcome = client.submit_wait(
+///     ReductionRequest::new().problem((a, bw)).problem((b, bw2)))?;
 /// ```
-/// use banded_svd::batch::BatchInput;
-/// use banded_svd::config::{BatchConfig, TuneParams};
-/// use banded_svd::generate::random_banded;
-/// use banded_svd::pipeline::batch_singular_values;
-/// use banded_svd::util::rng::Xoshiro256;
-///
-/// let params = TuneParams { tpb: 32, tw: 4, max_blocks: 32 };
-/// let mut rng = Xoshiro256::seed_from_u64(0);
-/// let mut inputs: Vec<BatchInput> = vec![
-///     BatchInput::from((random_banded::<f64>(48, 6, 4, &mut rng), 6)),
-///     BatchInput::from((random_banded::<f32>(32, 4, 3, &mut rng), 4)),
-/// ];
-/// let sv = batch_singular_values(&mut inputs, &params, &BatchConfig::default(), 2).unwrap();
-/// assert_eq!(sv.len(), 2);
-/// assert_eq!(sv[0].len(), 48);
-/// assert!(sv[0].windows(2).all(|w| w[0] >= w[1])); // descending
-/// ```
+#[deprecated(
+    since = "0.1.0",
+    note = "submit a client::ReductionRequest with several problems through \
+            client::LocalClient (the unified front door)"
+)]
 pub fn batch_singular_values(
-    inputs: &mut [BatchInput],
+    inputs: &[BatchInput],
     params: &TuneParams,
     cfg: &BatchConfig,
     threads: usize,
 ) -> Result<Vec<Vec<f64>>> {
-    let coord = BatchCoordinator::new(*params, *cfg, threads);
-    let report = coord.run(inputs)?;
-    Ok(report
-        .problems
-        .iter()
-        .map(|p| bidiagonal_singular_values(&p.diag, &p.superdiag))
-        .collect())
+    let client = LocalClient::direct(*params, *cfg, BackendKind::Threadpool, threads)?;
+    let mut request = ReductionRequest::new();
+    for input in inputs.iter() {
+        request = request.problem(input.clone());
+    }
+    let outcome = client.submit_wait(request)?;
+    Ok(outcome.problems.into_iter().map(|p| p.sv).collect())
 }
 
 #[cfg(test)]
@@ -285,7 +298,8 @@ mod tests {
         let (n, bw) = (36, 5);
         let params = TuneParams { tpb: 32, tw: 4, max_blocks: 192 };
         let banded = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
-        let sv = banded_singular_values(&banded, bw, &params);
+        let sv =
+            banded_singular_values_with(&SequentialBackend::new(), &banded, bw, &params).unwrap();
         // Oracle: densify and Jacobi.
         let dense = Dense::from_vec(n, n, banded.to_dense());
         let oracle = jacobi_singular_values(&dense);
@@ -295,7 +309,10 @@ mod tests {
     }
 
     #[test]
-    fn batch_entry_point_matches_solo_banded_entry_point() {
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_to_the_client_bitwise() {
+        // The shims must keep answering exactly what the direct
+        // explicit-backend path answers while they exist.
         let mut rng = Xoshiro256::seed_from_u64(37);
         let params = TuneParams { tpb: 32, tw: 4, max_blocks: 192 };
         let shapes = [(36usize, 5usize), (28, 4), (44, 7)];
@@ -303,16 +320,19 @@ mod tests {
             .iter()
             .map(|&(n, bw)| random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng))
             .collect();
-        let mut inputs: Vec<BatchInput> = mats
+        let inputs: Vec<BatchInput> = mats
             .iter()
             .zip(shapes.iter())
             .map(|(a, &(_, bw))| BatchInput::from((a.clone(), bw)))
             .collect();
         let batched =
-            batch_singular_values(&mut inputs, &params, &BatchConfig::default(), 2).unwrap();
+            batch_singular_values(&inputs, &params, &BatchConfig::default(), 2).unwrap();
         for ((a, &(_, bw)), got) in mats.iter().zip(shapes.iter()).zip(batched.iter()) {
-            let want = banded_singular_values(a, bw, &params);
-            assert_eq!(got, &want, "bw={bw}");
+            let solo = banded_singular_values(a, bw, &params);
+            let direct =
+                banded_singular_values_with(&SequentialBackend::new(), a, bw, &params).unwrap();
+            assert_eq!(got, &solo, "bw={bw}");
+            assert_eq!(&solo, &direct, "bw={bw}");
         }
     }
 
@@ -327,7 +347,12 @@ mod tests {
         let tp = banded_singular_values_with(&ThreadpoolBackend::new(2), &banded, bw, &params)
             .unwrap();
         assert_eq!(seq, tp);
-        assert_eq!(seq, banded_singular_values(&banded, bw, &params));
+        // The front door answers the same values.
+        let client = LocalClient::new(params);
+        let via_client = client
+            .submit_wait(ReductionRequest::new().problem((banded.clone(), bw)))
+            .unwrap();
+        assert_eq!(seq, via_client.problems[0].sv);
     }
 
     #[test]
@@ -342,7 +367,8 @@ mod tests {
         for tw in [1usize, 2, 4, 8] {
             let params = TuneParams { tpb: 32, tw, max_blocks: 192 };
             let banded = Banded::from_dense(&dense, n, bw, params.effective_tw(bw));
-            let sv = banded_singular_values(&banded, bw, &params);
+            let sv = banded_singular_values_with(&SequentialBackend::new(), &banded, bw, &params)
+                .unwrap();
             match &reference {
                 None => reference = Some(sv),
                 Some(r) => {

@@ -291,9 +291,81 @@ impl Scalar for F16 {
     }
 }
 
+/// Runtime name for one of the three supported precisions — the typed
+/// form of the paper's `fp16|fp32|fp64` axis used wherever a precision
+/// is *data* rather than a type parameter (client request specs, CLI
+/// flags, wire payloads).
+///
+/// # Examples
+///
+/// ```
+/// use banded_svd::scalar::ScalarKind;
+///
+/// let kind: ScalarKind = "fp32".parse().unwrap();
+/// assert_eq!(kind, ScalarKind::F32);
+/// assert_eq!(kind.name(), "fp32");
+/// assert_eq!(kind.element_bytes(), 4);
+/// assert!("fp128".parse::<ScalarKind>().is_err());
+/// ```
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ScalarKind {
+    F16,
+    F32,
+    F64,
+}
+
+impl ScalarKind {
+    /// Every supported precision, widest first (the paper's accuracy
+    /// axis order).
+    pub const ALL: [ScalarKind; 3] = [ScalarKind::F64, ScalarKind::F32, ScalarKind::F16];
+
+    /// Paper-style label — matches [`Scalar::NAME`] of the concrete type.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScalarKind::F16 => F16::NAME,
+            ScalarKind::F32 => <f32 as Scalar>::NAME,
+            ScalarKind::F64 => <f64 as Scalar>::NAME,
+        }
+    }
+
+    /// Bytes per element — matches [`Scalar::BYTES`].
+    pub fn element_bytes(self) -> usize {
+        match self {
+            ScalarKind::F16 => F16::BYTES,
+            ScalarKind::F32 => <f32 as Scalar>::BYTES,
+            ScalarKind::F64 => <f64 as Scalar>::BYTES,
+        }
+    }
+}
+
+impl std::str::FromStr for ScalarKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "fp16" | "f16" | "half" => Ok(ScalarKind::F16),
+            "fp32" | "f32" | "single" => Ok(ScalarKind::F32),
+            "fp64" | "f64" | "double" => Ok(ScalarKind::F64),
+            other => Err(format!("unknown precision {other:?} (fp16|fp32|fp64)")),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn scalar_kind_names_match_the_scalar_trait() {
+        assert_eq!(ScalarKind::F64.name(), <f64 as Scalar>::NAME);
+        assert_eq!(ScalarKind::F32.name(), <f32 as Scalar>::NAME);
+        assert_eq!(ScalarKind::F16.name(), F16::NAME);
+        assert_eq!(ScalarKind::F64.element_bytes(), 8);
+        assert_eq!(ScalarKind::F16.element_bytes(), 2);
+        for kind in ScalarKind::ALL {
+            assert_eq!(kind.name().parse::<ScalarKind>().unwrap(), kind);
+        }
+    }
 
     #[test]
     fn f16_roundtrip_exact_values() {

@@ -157,9 +157,11 @@ fn flush(
         }
         Err(e) => {
             stats.jobs_failed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-            let msg = format!("backend {} failed: {e}", backend.name());
+            let err = crate::error::JobError::Execution {
+                reason: format!("backend {} failed: {e}", backend.name()),
+            };
             for job in jobs.iter() {
-                let _ = job.tx.send(Err(msg.clone()));
+                let _ = job.tx.send(Err(err.clone()));
             }
         }
     }

@@ -199,14 +199,16 @@ impl Service {
         }
     }
 
-    /// [`Service::submit`] and block for the outcome.
+    /// [`Service::submit`] and block for the outcome. Job-level failures
+    /// come back as [`Error::Job`] with the typed taxonomy (retryable
+    /// admission rejections, expired deadlines, backend errors).
     pub fn submit_wait(
         &self,
         input: BatchInput,
         priority: u8,
         deadline: Option<Duration>,
     ) -> Result<JobResult> {
-        self.submit(input, priority, deadline)?.wait().map_err(Error::Service)
+        self.submit(input, priority, deadline)?.wait().map_err(Error::Job)
     }
 
     /// Modeled solo cost (seconds) of `input` on the service backend —
@@ -369,7 +371,7 @@ mod tests {
     }
 
     #[test]
-    fn expired_deadline_reports_a_service_error() {
+    fn expired_deadline_reports_a_typed_deadline_error() {
         // A generous window guarantees the monotone clock advances past
         // the zero deadline before the flush drains the job.
         let cfg = ServiceConfig { window: Duration::from_millis(20), ..test_cfg() };
@@ -380,6 +382,8 @@ mod tests {
             .submit_wait(BatchInput::from((a, 3)), 0, Some(Duration::ZERO))
             .unwrap_err();
         assert!(err.to_string().contains("deadline"), "{err}");
+        assert_eq!(err.as_job().unwrap().kind(), "deadline-expired");
+        assert!(!err.is_retryable());
         let stats = service.stats();
         assert_eq!(stats.jobs_failed, 1);
         assert_eq!(stats.jobs_completed, 0);

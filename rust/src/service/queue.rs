@@ -20,7 +20,7 @@
 
 use crate::batch::BatchInput;
 use crate::coordinator::metrics::LaunchMetrics;
-use crate::error::{Error, Result};
+use crate::error::{Error, JobError, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Condvar, Mutex};
@@ -67,9 +67,10 @@ pub struct JobResult {
     pub queue_wait: Duration,
 }
 
-/// A job either completes with a [`JobResult`] or fails with a message
-/// (backend error, expired deadline, service shutdown).
-pub type JobOutcome = std::result::Result<JobResult, String>;
+/// A job either completes with a [`JobResult`] or fails with a typed
+/// [`JobError`] (backend error, expired deadline, service shutdown) —
+/// the same taxonomy the client API and the wire surface.
+pub type JobOutcome = std::result::Result<JobResult, JobError>;
 
 /// Blocking handle on one submitted job.
 pub struct JobTicket {
@@ -79,9 +80,11 @@ pub struct JobTicket {
 
 impl JobTicket {
     /// Wait for the job's outcome. A disconnected channel (service torn
-    /// down mid-job) reports as an error outcome.
+    /// down mid-job) reports as [`JobError::Unavailable`].
     pub fn wait(self) -> JobOutcome {
-        self.rx.recv().unwrap_or_else(|_| Err("service shut down before the job ran".into()))
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(JobError::Unavailable { reason: "service shut down before the job ran".into() })
+        })
     }
 }
 
@@ -154,23 +157,30 @@ impl JobQueue {
         tx: Sender<JobOutcome>,
     ) -> Result<()> {
         let mut state = self.state.lock().unwrap();
-        // Transient service-side rejections are `Error::Service` so
-        // callers can tell retryable overload apart from a permanently
-        // malformed request (`Error::Config`).
+        // Rejections carry the typed taxonomy: load-driven rejections are
+        // retryable [`JobError::Overloaded`] (back-pressure), shutdown is
+        // terminal [`JobError::Unavailable`] — so callers can branch on
+        // `Error::is_retryable` instead of parsing messages.
         if state.closed {
-            return Err(Error::Service("service is shutting down".into()));
+            return Err(Error::Job(JobError::Unavailable {
+                reason: "service is shutting down".into(),
+            }));
         }
         if state.depth >= self.queue_cap {
-            return Err(Error::Service(format!(
-                "queue full: {} jobs pending (cap {})",
-                state.depth, self.queue_cap
-            )));
+            return Err(Error::Job(JobError::Overloaded {
+                reason: format!(
+                    "queue full: {} jobs pending (cap {})",
+                    state.depth, self.queue_cap
+                ),
+            }));
         }
         if state.depth > 0 && state.backlog_s + est_seconds > self.backlog_cap_s {
-            return Err(Error::Service(format!(
-                "admission rejected: modeled backlog {:.3}s + job {:.3}s exceeds cap {:.3}s",
-                state.backlog_s, est_seconds, self.backlog_cap_s
-            )));
+            return Err(Error::Job(JobError::Overloaded {
+                reason: format!(
+                    "admission rejected: modeled backlog {:.3}s + job {:.3}s exceeds cap {:.3}s",
+                    state.backlog_s, est_seconds, self.backlog_cap_s
+                ),
+            }));
         }
         let seq = state.next_seq;
         state.next_seq += 1;
@@ -251,10 +261,9 @@ impl JobQueue {
             let Some(job) = state.pop_front() else { break };
             if job.deadline.is_some_and(|d| d < now) {
                 state.expired += 1;
-                let _ = job.tx.send(Err(format!(
-                    "deadline exceeded before execution (queued {:.1} ms)",
-                    job.enqueued.elapsed().as_secs_f64() * 1e3
-                )));
+                let _ = job.tx.send(Err(JobError::DeadlineExpired {
+                    queued_ms: job.enqueued.elapsed().as_millis() as u64,
+                }));
                 continue;
             }
             out.push(job);
@@ -330,6 +339,7 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         let err = q.submit(2, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap_err();
         assert!(err.to_string().contains("queue full"), "{err}");
+        assert!(err.is_retryable(), "depth-cap rejection must be retryable back-pressure");
         q.pop_batch(16);
         submit(&q, 3, 0, 0.0); // admits again once drained
     }
@@ -345,6 +355,7 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         let err = q.submit(1, input(24, 3, &mut rng), 0, None, 0.1, tx).unwrap_err();
         assert!(err.to_string().contains("admission rejected"), "{err}");
+        assert!(err.is_retryable(), "backlog-cap rejection must be retryable back-pressure");
         q.pop_batch(16);
         assert_eq!(q.backlog_seconds(), 0.0);
         submit(&q, 2, 0, 0.1);
@@ -362,7 +373,9 @@ mod tests {
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].id, 1);
         let outcome = rx.try_recv().expect("expired job must get an outcome");
-        assert!(outcome.unwrap_err().contains("deadline"));
+        let err = outcome.unwrap_err();
+        assert_eq!(err.kind(), "deadline-expired");
+        assert!(!err.is_retryable());
         assert_eq!(q.expired_jobs(), 1);
     }
 
@@ -386,7 +399,9 @@ mod tests {
         assert!(!q.wait_job());
         let mut rng = Xoshiro256::seed_from_u64(1);
         let (tx, _rx) = mpsc::channel();
-        assert!(q.submit(0, input(24, 3, &mut rng), 0, None, 0.0, tx).is_err());
+        let err = q.submit(0, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap_err();
+        assert_eq!(err.as_job().unwrap().kind(), "unavailable");
+        assert!(!err.is_retryable(), "shutdown is terminal, not back-pressure");
     }
 
     #[test]

@@ -5,29 +5,31 @@
 //!
 //! | verb | request fields | response |
 //! | --- | --- | --- |
-//! | `submit` | `n`, `bw`, `band` (row-major in-band values, see [`band_values`]), optional `precision` (`fp16\|fp32\|fp64`, default `fp64`), `priority` (default 0), `deadline_ms` | `id`, `sv` (descending, f64), `metrics` (launches/tasks/max_parallel/unrolled_launches/bytes), `batch_jobs`, `queue_us` |
+//! | `submit` | `n`, `bw`, `band` (row-major in-band values, see [`wire::band_values`]), optional `precision` (`fp16\|fp32\|fp64`, default `fp64`), `priority` (default 0), `deadline_ms` | `id`, `sv` (descending, f64), `metrics` (launches/tasks/max_parallel/unrolled_launches/bytes), `batch_jobs`, `queue_us` |
 //! | `stats` | — | queue depth/backlog, job counters, occupancy, mean batch size, cache counters + hit rate, throughput, knobs |
 //! | `ping` | — | `{"ok":true,"verb":"ping"}` |
 //! | `shutdown` | — | acknowledges, then stops accepting and drains the service |
 //!
-//! Every response carries `"ok"`; failures are
-//! `{"ok":false,"error":"..."}`. Numbers ride Rust's shortest-roundtrip
-//! `f64` formatting, so served singular values are **bitwise** what the
-//! backend produced (see [`crate::util::json`]).
+//! Every response carries `"ok"`. Job-level failures additionally carry
+//! the typed taxonomy (`kind` + `retryable` — see
+//! [`crate::error::JobError`]), so a remote caller can branch on
+//! back-pressure exactly like a local one. Numbers ride Rust's
+//! shortest-roundtrip `f64` formatting, so served singular values are
+//! **bitwise** what the backend produced (see [`crate::util::json`]).
+//!
+//! The request/response *vocabulary* — band payload shaping, request
+//! rendering, response encode/decode — lives in [`crate::client::wire`],
+//! shared verbatim with [`crate::client::RemoteClient`], the example
+//! client, and the loopback tests: one schema, both sides.
 //!
 //! A `submit` blocks its connection until the job completes; concurrency
 //! across connections is what feeds the micro-batcher (each connection is
-//! handled on its own thread). The example client
-//! (`rust/examples/serve_client.rs`) and the loopback integration test
-//! drive exactly this protocol.
+//! handled on its own thread). The canonical caller is
+//! [`crate::client::RemoteClient`] (`banded-svd client --remote`).
 
-use crate::banded::storage::Banded;
-use crate::batch::BatchInput;
+use crate::client::wire;
 use crate::config::ServiceConfig;
-use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, Result};
-use crate::scalar::{Scalar, F16};
-use crate::service::queue::JobResult;
 use crate::service::Service;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, BufWriter, Write as _};
@@ -35,120 +37,6 @@ use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
-
-/// Number of in-band values of an upper-banded `n × n` matrix with `bw`
-/// superdiagonals — the required `band` payload length. Closed form
-/// (O(1), `bw` clamped to `n − 1`): full rows contribute `bw + 1`
-/// values, the last `bw` rows taper triangularly.
-pub fn band_expected_len(n: usize, bw: usize) -> usize {
-    if n == 0 {
-        return 0;
-    }
-    let bw = bw.min(n - 1);
-    n * (bw + 1) - bw * (bw + 1) / 2
-}
-
-/// Serialize the in-band entries of `a` (rows `i`, columns
-/// `i ..= min(i+bw, n−1)`, row-major) as f64 — the `band` payload of a
-/// `submit` request. Widening to f64 is exact for every supported
-/// precision, so the payload round-trips bitwise.
-pub fn band_values<T: Scalar>(a: &Banded<T>, bw: usize) -> Vec<f64> {
-    let n = a.n();
-    let mut out = Vec::with_capacity(band_expected_len(n, bw));
-    for i in 0..n {
-        for j in i..=(i + bw).min(n - 1) {
-            out.push(a.get(i, j).to_f64());
-        }
-    }
-    out
-}
-
-/// Rebuild a reduction-ready [`BatchInput`] from a `band` payload — the
-/// server side of [`band_values`]. `tw` sizes the fill-in storage (the
-/// service uses its configured tuning).
-pub fn band_from_values(
-    n: usize,
-    bw: usize,
-    tw: usize,
-    precision: &str,
-    values: &[f64],
-) -> Result<BatchInput> {
-    if n < 2 || bw == 0 || bw >= n {
-        return Err(Error::Config(format!(
-            "bad problem shape: need n ≥ 2 and 1 ≤ bw < n (got n={n}, bw={bw})"
-        )));
-    }
-    // O(1) length check in u128: `n` is client-supplied and must be
-    // rejected before anything walks or allocates proportional to it
-    // (the closed form would overflow usize for hostile n × bw).
-    let expected = {
-        let (n, bw) = (n as u128, bw as u128);
-        n * (bw + 1) - bw * (bw + 1) / 2
-    };
-    if values.len() as u128 != expected {
-        return Err(Error::Config(format!(
-            "band payload has {} values; n={n}, bw={bw} needs {expected}",
-            values.len()
-        )));
-    }
-    fn fill<T: Scalar>(n: usize, bw: usize, tw: usize, values: &[f64]) -> Banded<T> {
-        let mut a = Banded::<T>::for_reduction(n, bw, tw);
-        let mut k = 0;
-        for i in 0..n {
-            for j in i..=(i + bw).min(n - 1) {
-                a.set(i, j, T::from_f64(values[k]));
-                k += 1;
-            }
-        }
-        a
-    }
-    Ok(match precision {
-        "fp64" => BatchInput::from((fill::<f64>(n, bw, tw, values), bw)),
-        "fp32" => BatchInput::from((fill::<f32>(n, bw, tw, values), bw)),
-        "fp16" => BatchInput::from((fill::<F16>(n, bw, tw, values), bw)),
-        other => {
-            return Err(Error::Config(format!("unknown precision {other:?} (fp16|fp32|fp64)")))
-        }
-    })
-}
-
-/// Render a complete `submit` request line for `a` — what the example
-/// client sends and what tests replay. The precision label comes from
-/// `T`.
-pub fn submit_request<T: Scalar>(a: &Banded<T>, bw: usize, priority: u8) -> String {
-    let band: Vec<Json> = band_values(a, bw).into_iter().map(Json::Num).collect();
-    Json::obj()
-        .set("verb", "submit")
-        .set("n", a.n())
-        .set("bw", bw)
-        .set("precision", T::NAME)
-        .set("priority", priority as usize)
-        .set("band", Json::Arr(band))
-        .render()
-}
-
-fn metrics_json(m: &LaunchMetrics) -> Json {
-    Json::obj()
-        .set("launches", m.launches)
-        .set("tasks", m.tasks)
-        .set("max_parallel", m.max_parallel)
-        .set("unrolled_launches", m.unrolled_launches)
-        .set("bytes", Json::Int(m.bytes as i64))
-}
-
-fn result_json(r: &JobResult) -> Json {
-    Json::obj()
-        .set("ok", true)
-        .set("verb", "submit")
-        .set("id", Json::Int(r.id as i64))
-        .set("n", r.n)
-        .set("bw", r.bw)
-        .set("precision", r.precision)
-        .set("batch_jobs", r.batch_jobs)
-        .set("queue_us", Json::Int(r.queue_wait.as_micros() as i64))
-        .set("metrics", metrics_json(&r.metrics))
-        .set("sv", Json::Arr(r.sv.iter().map(|&x| Json::Num(x)).collect()))
-}
 
 fn stats_json(service: &Service) -> Json {
     let s = service.stats();
@@ -184,31 +72,36 @@ fn stats_json(service: &Service) -> Json {
     Json::obj().set("ok", true).set("verb", "stats").set("stats", stats)
 }
 
-fn error_json(msg: impl Into<String>) -> Json {
-    Json::obj().set("ok", false).set("error", Json::s(msg))
-}
-
 /// Handle one request line. Returns the response and whether the server
 /// should shut down after sending it.
 fn respond(service: &Service, line: &str) -> (Json, bool) {
     let request = match Json::parse(line) {
         Ok(v) => v,
-        Err(e) => return (error_json(format!("bad request: {e}")), false),
+        Err(e) => return (wire::error_json(format!("bad request: {e}")), false),
     };
     match request.get("verb").and_then(Json::as_str) {
         Some("ping") => (Json::obj().set("ok", true).set("verb", "ping"), false),
         Some("stats") => (stats_json(service), false),
         Some("shutdown") => (Json::obj().set("ok", true).set("verb", "shutdown"), true),
         Some("submit") => (handle_submit(service, &request), false),
-        Some(other) => (error_json(format!("unknown verb {other:?}")), false),
-        None => (error_json("missing \"verb\""), false),
+        Some(other) => (wire::error_json(format!("unknown verb {other:?}")), false),
+        None => (wire::error_json("missing \"verb\""), false),
+    }
+}
+
+/// Render an [`Error`] as the wire error response: job-level failures
+/// carry their taxonomy, everything else is a plain protocol error.
+fn error_response(e: &Error) -> Json {
+    match e.as_job() {
+        Some(job) => wire::job_error_json(job),
+        None => wire::error_json(e.to_string()),
     }
 }
 
 fn handle_submit(service: &Service, request: &Json) -> Json {
     let field_usize = |key: &str| request.get(key).and_then(Json::as_usize);
     let (Some(n), Some(bw)) = (field_usize("n"), field_usize("bw")) else {
-        return error_json("submit needs integer \"n\" and \"bw\"");
+        return wire::error_json("submit needs integer \"n\" and \"bw\"");
     };
     let precision = request.get("precision").and_then(Json::as_str).unwrap_or("fp64");
     // Optional fields are absent-or-valid: a present-but-malformed value
@@ -218,34 +111,34 @@ fn handle_submit(service: &Service, request: &Json) -> Json {
         None => 0,
         Some(v) => match v.as_usize().and_then(|p| u8::try_from(p).ok()) {
             Some(p) => p,
-            None => return error_json("priority must be an integer in 0..=255"),
+            None => return wire::error_json("priority must be an integer in 0..=255"),
         },
     };
     let deadline = match request.get("deadline_ms") {
         None => None,
         Some(v) => match v.as_usize() {
             Some(ms) => Some(Duration::from_millis(ms as u64)),
-            None => return error_json("deadline_ms must be a non-negative integer"),
+            None => return wire::error_json("deadline_ms must be a non-negative integer"),
         },
     };
     let Some(band) = request.get("band").and_then(Json::as_array) else {
-        return error_json("submit needs a \"band\" array");
+        return wire::error_json("submit needs a \"band\" array");
     };
     let mut values = Vec::with_capacity(band.len());
     for v in band {
         match v.as_f64() {
             Some(x) => values.push(x),
-            None => return error_json("band values must be numbers"),
+            None => return wire::error_json("band values must be numbers"),
         }
     }
     let tw = service.config().params.effective_tw(bw);
-    let input = match band_from_values(n, bw, tw, precision, &values) {
+    let input = match wire::band_from_values(n, bw, tw, precision, &values) {
         Ok(input) => input,
-        Err(e) => return error_json(e.to_string()),
+        Err(e) => return error_response(&e),
     };
     match service.submit_wait(input, priority, deadline) {
-        Ok(result) => result_json(&result),
-        Err(e) => error_json(e.to_string()),
+        Ok(result) => wire::result_json(&result),
+        Err(e) => error_response(&e),
     }
 }
 
@@ -353,7 +246,8 @@ fn handle_connection(
         if read == MAX_LINE_BYTES && buf.last() != Some(&b'\n') {
             // The line never ended within the budget; answer once and
             // drop the connection rather than buffering without bound.
-            let oversized = error_json(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+            let oversized =
+                wire::error_json(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
             let _ = writeln!(writer, "{}", oversized.render());
             let _ = writer.flush();
             break;
@@ -361,7 +255,7 @@ fn handle_connection(
         let line = match std::str::from_utf8(&buf) {
             Ok(s) => s.trim(),
             Err(_) => {
-                let _ = writeln!(writer, "{}", error_json("request is not UTF-8").render());
+                let _ = writeln!(writer, "{}", wire::error_json("request is not UTF-8").render());
                 let _ = writer.flush();
                 break;
             }
@@ -389,6 +283,7 @@ fn handle_connection(
 mod tests {
     use super::*;
     use crate::backend::SequentialBackend;
+    use crate::client::wire::submit_request;
     use crate::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
     use crate::generate::random_banded;
     use crate::pipeline::banded_singular_values_with;
@@ -409,34 +304,6 @@ mod tests {
     }
 
     #[test]
-    fn band_payload_roundtrips_bitwise() {
-        let mut rng = Xoshiro256::seed_from_u64(1);
-        let (n, bw, tw) = (40, 5, 4);
-        let a = random_banded::<f64>(n, bw, tw, &mut rng);
-        let values = band_values(&a, bw);
-        assert_eq!(values.len(), band_expected_len(n, bw));
-        let back = band_from_values(n, bw, tw, "fp64", &values).unwrap();
-        match back {
-            BatchInput::F64 { a: b, bw: bw2 } => {
-                assert_eq!(bw2, bw);
-                assert_eq!(b, a);
-            }
-            _ => panic!("wrong precision"),
-        }
-    }
-
-    #[test]
-    fn band_payload_validates_shape_and_length() {
-        assert!(band_from_values(1, 1, 1, "fp64", &[]).is_err()); // n too small
-        assert!(band_from_values(8, 0, 1, "fp64", &[]).is_err()); // bw too small
-        assert!(band_from_values(8, 8, 1, "fp64", &[]).is_err()); // bw ≥ n
-        assert!(band_from_values(8, 2, 1, "fp64", &[0.0; 3]).is_err()); // short
-        assert!(band_from_values(8, 2, 1, "nope", &[0.0; 21]).is_err());
-        assert_eq!(band_expected_len(8, 2), 21);
-        assert!(band_from_values(8, 2, 1, "fp32", &[0.0; 21]).is_ok());
-    }
-
-    #[test]
     fn shutdown_nudge_routes_wildcard_binds_through_loopback() {
         let v4: SocketAddr = "0.0.0.0:7070".parse().unwrap();
         assert_eq!(nudge_addr(v4), "127.0.0.1:7070".parse().unwrap());
@@ -444,16 +311,6 @@ mod tests {
         assert_eq!(nudge_addr(v6), "[::1]:7070".parse().unwrap());
         let concrete: SocketAddr = "192.0.2.1:9".parse().unwrap();
         assert_eq!(nudge_addr(concrete), concrete);
-    }
-
-    #[test]
-    fn oversized_shape_is_rejected_in_constant_time() {
-        // A hostile n must be rejected by arithmetic, not by iterating
-        // (or allocating) anything proportional to it.
-        let t0 = std::time::Instant::now();
-        let err = band_from_values(usize::MAX / 2, 3, 1, "fp64", &[1.0]).unwrap_err();
-        assert!(t0.elapsed() < Duration::from_secs(1), "shape check not O(1)");
-        assert!(err.to_string().contains("values"), "{err}");
     }
 
     #[test]
@@ -517,5 +374,31 @@ mod tests {
             let (r, _) = respond(&service, bad);
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
         }
+    }
+
+    #[test]
+    fn expired_deadline_carries_the_taxonomy_over_the_wire() {
+        // Deadline 0: the job expires in the queue; the error response
+        // must carry the typed kind so remote callers classify it.
+        let service =
+            Service::start(ServiceConfig { window: Duration::from_millis(20), ..cfg() }).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let a = random_banded::<f64>(24, 3, 2, &mut rng);
+        let line = format!(
+            "{{\"verb\":\"submit\",\"n\":24,\"bw\":3,\"deadline_ms\":0,\"band\":{}}}",
+            Json::Arr(
+                crate::client::wire::band_values(&a, 3).into_iter().map(Json::Num).collect()
+            )
+            .render()
+        );
+        let (response, _) = respond(&service, &line);
+        assert_eq!(response.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            response.get("kind").and_then(Json::as_str),
+            Some("deadline-expired"),
+            "{}",
+            response.render()
+        );
+        assert_eq!(response.get("retryable").and_then(Json::as_bool), Some(false));
     }
 }

@@ -1,0 +1,268 @@
+//! The unified client's core contract, property-tested end to end:
+//! [`LocalClient`] (direct, in-process) and [`RemoteClient`] (JSON-lines
+//! wire to a loopback `serve` endpoint) are **interchangeable** — for
+//! the same [`ReductionRequest`] stream they return bitwise-identical
+//! singular values, the same per-problem launch accounting, and
+//! reconciled job stats (client-side counters agree with each other and
+//! with the server's own `stats` view).
+//!
+//! Runs over every registry backend that works in a bare checkout
+//! (artifact-dependent backends skip loudly, like `pjrt_roundtrip.rs`).
+//! Deterministic: seeded generator specs materialize the same band
+//! values on both sides (`random_banded` values depend only on
+//! `(n, bw, seed)`), so local and remote reduce the *same* matrices.
+
+use banded_svd::backend::for_kind;
+use banded_svd::client::{Client, ClientStats, LocalClient, ReductionRequest, RemoteClient};
+use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
+use banded_svd::scalar::ScalarKind;
+use banded_svd::service::Server;
+use banded_svd::util::json::Json;
+use banded_svd::util::prop::{check, Config};
+use banded_svd::util::rng::Xoshiro256;
+use std::time::Duration;
+
+fn params() -> TuneParams {
+    TuneParams { tpb: 32, tw: 4, max_blocks: 24 }
+}
+
+fn service_cfg(backend: BackendKind) -> ServiceConfig {
+    ServiceConfig {
+        params: params(),
+        batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+        backend,
+        threads: 2,
+        window: Duration::from_millis(2),
+        queue_cap: 256,
+        backlog_cap_s: 1e9,
+        cache_cap: 32,
+        arch: "H100",
+    }
+}
+
+/// Backend kinds that can execute in a bare checkout.
+fn artifact_free_kinds() -> Vec<BackendKind> {
+    BackendKind::ALL
+        .into_iter()
+        .filter(|&kind| match for_kind(kind, 1) {
+            Ok(backend) => {
+                if backend.requires_artifacts() {
+                    eprintln!("SKIP client equivalence for {kind:?}: requires compiled artifacts");
+                    false
+                } else {
+                    true
+                }
+            }
+            // pjrt-fused has no plan-executor form by design.
+            Err(_) => false,
+        })
+        .collect()
+}
+
+/// One generated request: problem specs plus priority. Specs are seeded,
+/// so rebuilding the request for each client yields identical payloads.
+#[derive(Debug, Clone)]
+struct RequestSpec {
+    problems: Vec<(usize, usize, ScalarKind, u64)>,
+    priority: u8,
+}
+
+impl RequestSpec {
+    fn build(&self) -> ReductionRequest {
+        let mut request = ReductionRequest::new().priority(self.priority);
+        for &(n, bw, kind, seed) in &self.problems {
+            request = request.random(n, bw, kind, seed);
+        }
+        request
+    }
+}
+
+#[derive(Debug)]
+struct StreamCase {
+    requests: Vec<RequestSpec>,
+}
+
+fn gen_case(rng: &mut Xoshiro256, case_seed: u64) -> StreamCase {
+    let kinds = [ScalarKind::F64, ScalarKind::F32, ScalarKind::F16];
+    let requests = (0..rng.range_inclusive(1, 3))
+        .map(|r| RequestSpec {
+            problems: (0..rng.range_inclusive(1, 3))
+                .map(|p| {
+                    let bw = rng.range_inclusive(2, 7);
+                    let n = rng.range_inclusive(3 * bw.max(4), 56);
+                    let kind = kinds[rng.below(kinds.len())];
+                    (n, bw, kind, case_seed.wrapping_mul(1000) + (r * 10 + p) as u64)
+                })
+                .collect(),
+            priority: rng.below(3) as u8,
+        })
+        .collect();
+    StreamCase { requests }
+}
+
+fn check_outcomes_match(
+    local: &banded_svd::client::ReductionOutcome,
+    remote: &banded_svd::client::ReductionOutcome,
+    context: &str,
+) -> Result<(), String> {
+    if local.problems.len() != remote.problems.len() {
+        return Err(format!(
+            "{context}: {} local vs {} remote problems",
+            local.problems.len(),
+            remote.problems.len()
+        ));
+    }
+    for (i, (l, r)) in local.problems.iter().zip(remote.problems.iter()).enumerate() {
+        if (l.n, l.bw, l.precision) != (r.n, r.bw, r.precision) {
+            return Err(format!(
+                "{context} problem {i}: shape mismatch ({},{},{}) vs ({},{},{})",
+                l.n, l.bw, l.precision, r.n, r.bw, r.precision
+            ));
+        }
+        if l.sv.len() != r.sv.len() {
+            return Err(format!("{context} problem {i}: sv length mismatch"));
+        }
+        for (j, (a, b)) in l.sv.iter().zip(r.sv.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "{context} problem {i}: σ[{j}] differs bitwise: {a} vs {b}"
+                ));
+            }
+        }
+        // Per-problem launch accounting is batch-composition-independent
+        // (the merge preserves per-problem order), so the summary fields
+        // must agree exactly across local merged execution and remote
+        // served execution.
+        let lm = &l.metrics;
+        let rm = &r.metrics;
+        if (lm.launches, lm.tasks, lm.max_parallel, lm.unrolled_launches, lm.bytes)
+            != (rm.launches, rm.tasks, rm.max_parallel, rm.unrolled_launches, rm.bytes)
+        {
+            return Err(format!(
+                "{context} problem {i}: metrics mismatch {lm:?} vs {rm:?}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn stats_field(stats: &Json, key: &str) -> i64 {
+    stats.get(key).and_then(Json::as_i64).unwrap_or(-1)
+}
+
+#[test]
+fn local_and_remote_clients_are_bitwise_interchangeable() {
+    for kind in artifact_free_kinds() {
+        let server = Server::bind(service_cfg(kind), "127.0.0.1:0").expect("bind ephemeral");
+        let addr = server.local_addr().to_string();
+        let server_thread = std::thread::spawn(move || server.run());
+
+        let local = LocalClient::direct(
+            params(),
+            BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+            kind,
+            2,
+        )
+        .expect("local client");
+        let remote = RemoteClient::connect(&addr).expect("remote client");
+        assert_eq!(remote.backend(), kind.name(), "handshake records the serving backend");
+
+        let mut case_index = 0u64;
+        let cfg = Config { cases: 6, ..Config::default() };
+        check(
+            "client-equivalence",
+            &cfg,
+            |rng| {
+                case_index += 1;
+                gen_case(rng, case_index)
+            },
+            |case| {
+                // Submit the whole stream through the remote client
+                // first (handles park their outcomes until waited), then
+                // run the identical requests on the local client and
+                // compare as the handles resolve.
+                let mut remote_handles = Vec::new();
+                for spec in &case.requests {
+                    remote_handles
+                        .push(remote.submit(spec.build()).map_err(|e| e.to_string())?);
+                }
+                for (spec, handle) in case.requests.iter().zip(remote_handles) {
+                    let local_outcome =
+                        local.submit_wait(spec.build()).map_err(|e| e.to_string())?;
+                    let remote_outcome = remote.wait(handle).map_err(|e| e.to_string())?;
+                    check_outcomes_match(
+                        &local_outcome,
+                        &remote_outcome,
+                        &format!("{kind:?} priority {}", spec.priority),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+
+        // Reconciled job stats: the two clients observed identical
+        // traffic, nothing failed, and the server's own accounting agrees
+        // with the remote client's.
+        let local_stats = local.stats();
+        let remote_stats = remote.stats();
+        assert_eq!(local_stats, remote_stats, "{kind:?}: client counters diverged");
+        assert_eq!(local_stats.jobs_failed, 0, "{kind:?}");
+        assert_eq!(local_stats.jobs_completed, local_stats.jobs_submitted, "{kind:?}");
+        let server_view = remote.server_stats().expect("server stats");
+        assert_eq!(
+            stats_field(&server_view, "jobs_completed"),
+            remote_stats.jobs_completed as i64,
+            "{kind:?}: server accounting diverged: {}",
+            server_view.render()
+        );
+        assert_eq!(stats_field(&server_view, "jobs_failed"), 0, "{kind:?}");
+
+        remote.shutdown().expect("shutdown");
+        server_thread.join().expect("server thread").expect("clean shutdown");
+    }
+}
+
+#[test]
+fn single_and_batched_requests_agree_across_f32_and_f64() {
+    // The acceptance shape spelled out: one client each way, a single-
+    // problem request and a 4-problem mixed-precision batch, bitwise.
+    let kind = BackendKind::Sequential;
+    let server = Server::bind(service_cfg(kind), "127.0.0.1:0").expect("bind ephemeral");
+    let addr = server.local_addr().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let local =
+        LocalClient::direct(params(), BatchConfig::default(), kind, 1).expect("local client");
+    let remote = RemoteClient::connect(&addr).expect("remote client");
+
+    let single = || ReductionRequest::new().random(48, 6, ScalarKind::F64, 77);
+    let batched = || {
+        ReductionRequest::new()
+            .random(48, 6, ScalarKind::F64, 101)
+            .random(36, 5, ScalarKind::F32, 102)
+            .random(56, 7, ScalarKind::F64, 103)
+            .random(28, 3, ScalarKind::F32, 104)
+    };
+
+    for (label, request) in
+        [("single", single as fn() -> ReductionRequest), ("batched", batched)]
+    {
+        let l = local.submit_wait(request()).expect("local");
+        let r = remote.submit_wait(request()).expect("remote");
+        check_outcomes_match(&l, &r, label).unwrap();
+        // Provenance names the surfaces.
+        assert_eq!(l.provenance.source.name(), "local-direct");
+        assert_eq!(r.provenance.source.name(), "remote");
+        assert_eq!(l.provenance.backend, kind.name());
+        assert_eq!(r.provenance.backend, kind.name());
+    }
+
+    assert_eq!(
+        local.stats(),
+        ClientStats { jobs_submitted: 5, jobs_completed: 5, jobs_failed: 0 }
+    );
+    assert_eq!(local.stats(), remote.stats());
+
+    remote.shutdown().expect("shutdown");
+    server_thread.join().expect("server thread").expect("clean shutdown");
+}

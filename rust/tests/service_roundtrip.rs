@@ -21,7 +21,7 @@ use banded_svd::batch::BatchInput;
 use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
 use banded_svd::generate::random_banded;
 use banded_svd::pipeline::banded_singular_values_with;
-use banded_svd::service::server::submit_request;
+use banded_svd::client::wire::submit_request;
 use banded_svd::service::{Server, Service};
 use banded_svd::util::json::Json;
 use banded_svd::util::prop::{check, Config};
