@@ -11,7 +11,9 @@
 
 use banded_svd::banded::storage::Banded;
 use banded_svd::client::{Client, LocalClient, ReductionRequest};
-use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
+use banded_svd::config::{
+    BackendKind, BatchConfig, PackingPolicy, ServiceConfig, ShardRouting, TuneParams,
+};
 use banded_svd::generate::random_banded;
 use banded_svd::util::bench::Table;
 use banded_svd::util::json::{write_experiment, Json};
@@ -62,7 +64,7 @@ fn main() {
     let base: Vec<Banded<f64>> =
         (0..jobs).map(|_| random_banded::<f64>(n, bw, tw, &mut rng)).collect();
 
-    let cfg = |window_us: u64, max_coresident: usize| ServiceConfig {
+    let cfg = |window_us: u64, max_coresident: usize, workers: usize| ServiceConfig {
         params,
         batch: BatchConfig { max_coresident, policy: PackingPolicy::RoundRobin },
         backend: BackendKind::Threadpool,
@@ -72,6 +74,9 @@ fn main() {
         backlog_cap_s: 1e9,
         cache_cap: 64,
         arch: "H100",
+        workers,
+        routing: ShardRouting::LeastLoaded,
+        quota_pending_cap: 0,
     };
 
     let mut table = Table::new(vec!["submitters", "window µs", "jobs/s", "avg batch", "vs solo"]);
@@ -80,7 +85,7 @@ fn main() {
     for &submitters in submitter_counts {
         // Solo baseline: no window, one job per flush — every submission
         // executes alone, as if each request ran the pipeline directly.
-        let (solo_tput, _) = run_load(&cfg(0, 1), &base, bw, submitters);
+        let (solo_tput, _) = run_load(&cfg(0, 1, 1), &base, bw, submitters);
         table.row(vec![
             submitters.to_string(),
             "solo".to_string(),
@@ -89,7 +94,7 @@ fn main() {
             "1.00x".to_string(),
         ]);
         for &window_us in windows_us {
-            let (tput, avg_batch) = run_load(&cfg(window_us, 16), &base, bw, submitters);
+            let (tput, avg_batch) = run_load(&cfg(window_us, 16, 1), &base, bw, submitters);
             let ratio = tput / solo_tput.max(1e-9);
             if submitters == 8 && window_us > 0 && merged_beats_solo_at_8.is_none() {
                 merged_beats_solo_at_8 = Some(ratio);
@@ -112,6 +117,30 @@ fn main() {
         }
     }
     table.print();
+
+    // Shard scaling: the same merged-window load spread over N batcher
+    // workers, each with its own backend executor.
+    let shard_counts: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
+    let shard_submitters = 16usize;
+    println!("\n=== worker shards: window 500µs, {shard_submitters} submitters ===");
+    let mut shard_table = Table::new(vec!["workers", "jobs/s", "avg batch"]);
+    let mut shard_arr = Vec::new();
+    for &workers in shard_counts {
+        let (tput, avg_batch) = run_load(&cfg(500, 16, workers), &base, bw, shard_submitters);
+        shard_table.row(vec![
+            workers.to_string(),
+            format!("{tput:.1}"),
+            format!("{avg_batch:.2}"),
+        ]);
+        shard_arr.push(
+            Json::obj()
+                .set("workers", workers)
+                .set("jobs_per_s", tput)
+                .set("avg_batch_jobs", avg_batch),
+        );
+    }
+    shard_table.print();
+
     if let Some(ratio) = merged_beats_solo_at_8 {
         println!(
             "\nmerged-window vs solo at 8 submitters: {ratio:.2}x \
@@ -123,7 +152,8 @@ fn main() {
         .set("n", n)
         .set("bw", bw)
         .set("jobs", jobs)
-        .set("results", Json::Arr(arr));
+        .set("results", Json::Arr(arr))
+        .set("shard_results", Json::Arr(shard_arr));
     match write_experiment("service_throughput", &json) {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write experiment json: {e}"),

@@ -15,19 +15,22 @@
 //!                                          (σ per problem, LaunchMetrics,
 //!                                           plan provenance)
 //!
-//!   impl Client ──┬── LocalClient   direct: BatchCoordinator + PlanCache
-//!                 │                 queued: embedded in-process Service
-//!                 └── RemoteClient  JSON-lines wire to `banded-svd serve`
+//!   impl Client ──┬── LocalClient    direct: BatchCoordinator + PlanCache
+//!                 │                  queued: embedded in-process Service
+//!                 ├── RemoteClient   JSON-lines wire to `banded-svd serve`
+//!                 └── ShardedClient  several serve endpoints, routed +
+//!                                    health-checked ([`sharded`])
 //! ```
 //!
-//! The contract both implementations uphold (locked in by
+//! The contract every implementation upholds (locked in by
 //! `rust/tests/client_equivalence.rs`): for the same
-//! [`ReductionRequest`], [`LocalClient`] and [`RemoteClient`] return
-//! **bitwise-identical** singular values and the same per-problem launch
-//! accounting on the same backend kind — local and served execution are
-//! interchangeable behind `dyn Client`. Failures resolve to the typed
-//! [`JobError`] taxonomy (retryable admission back-pressure vs terminal
-//! errors) on every path, including over the wire.
+//! [`ReductionRequest`], [`LocalClient`], [`RemoteClient`], and
+//! [`ShardedClient`] return **bitwise-identical** singular values and the
+//! same per-problem launch accounting on the same backend kind — local,
+//! served, and sharded execution are interchangeable behind
+//! `dyn Client`. Failures resolve to the typed [`JobError`] taxonomy
+//! (retryable admission back-pressure vs terminal errors) on every path,
+//! including over the wire.
 //!
 //! # Examples
 //!
@@ -53,7 +56,10 @@
 //! See `docs/client.md` for the request builder reference, the trait
 //! contract, and the local-vs-remote capability matrix.
 
+pub mod sharded;
 pub mod wire;
+
+pub use sharded::{RouteStrategy, ShardedClient};
 
 use crate::backend::{cost_model_for, for_kind};
 use crate::batch::{BatchCoordinator, BatchInput, BatchMetrics};
@@ -139,6 +145,8 @@ pub struct ReductionRequest {
     params: Option<TuneParams>,
     priority: u8,
     deadline: Option<Duration>,
+    client_id: Option<String>,
+    quota_class: Option<String>,
 }
 
 impl ReductionRequest {
@@ -181,6 +189,24 @@ impl ReductionRequest {
     /// instead of executing.
     pub fn deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Caller identity for quota accounting (queued/remote paths). When
+    /// the serving side enforces a per-client pending cap
+    /// ([`crate::config::ServiceConfig::quota_pending_cap`]), this is the
+    /// key it counts against unless a [`ReductionRequest::quota_class`]
+    /// overrides it. Anonymous requests are never quota-limited.
+    pub fn client_id(mut self, id: impl Into<String>) -> Self {
+        self.client_id = Some(id.into());
+        self
+    }
+
+    /// Quota bucket for admission accounting — lets many client ids
+    /// share one pending budget (e.g. a tenant). Takes precedence over
+    /// [`ReductionRequest::client_id`] as the quota key.
+    pub fn quota_class(mut self, class: impl Into<String>) -> Self {
+        self.quota_class = Some(class.into());
         self
     }
 
@@ -227,6 +253,9 @@ pub enum ExecutionSource {
     LocalQueued,
     /// [`RemoteClient`]: a `banded-svd serve` endpoint over TCP.
     Remote,
+    /// [`ShardedClient`]: one of several `banded-svd serve` endpoints,
+    /// chosen by the client-side router.
+    Sharded,
 }
 
 impl ExecutionSource {
@@ -235,6 +264,7 @@ impl ExecutionSource {
             ExecutionSource::LocalDirect => "local-direct",
             ExecutionSource::LocalQueued => "local-queued",
             ExecutionSource::Remote => "remote",
+            ExecutionSource::Sharded => "sharded",
         }
     }
 }
@@ -557,11 +587,19 @@ impl LocalClient {
         }
         let priority = request.priority;
         let deadline = request.deadline;
+        let client_id = request.client_id;
+        let quota_class = request.quota_class;
         let inputs: Vec<BatchInput> =
             request.problems.into_iter().map(|p| p.materialize(&self.params)).collect();
         let mut tickets = Vec::with_capacity(inputs.len());
         for input in inputs {
-            match service.submit(input, priority, deadline) {
+            match service.submit_as(
+                client_id.as_deref(),
+                quota_class.as_deref(),
+                input,
+                priority,
+                deadline,
+            ) {
                 Ok(ticket) => tickets.push(ticket),
                 Err(e) => {
                     let admitted = tickets.len() as u64;
@@ -707,12 +745,36 @@ pub struct RemoteClient {
 }
 
 impl RemoteClient {
-    /// Connect and handshake (one `stats` round trip — validates the
-    /// protocol and records the serving backend for provenance).
+    /// Connect and handshake: a `ping` round trip first (the server must
+    /// speak [`wire::PROTO_VERSION`] — a missing or mismatched `proto`
+    /// is a typed [`JobError::Unavailable`], not a config error, so
+    /// routing layers treat the endpoint as down), then one `stats` round
+    /// trip recording the serving backend for provenance.
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr).map_err(Error::Io)?;
         let reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
         let mut state = RemoteState { reader, writer: stream, done: HashMap::new() };
+        let pong = Self::roundtrip(&mut state, "{\"verb\":\"ping\"}")?;
+        match pong.get("proto").and_then(Json::as_usize) {
+            Some(v) if v == wire::PROTO_VERSION as usize => {}
+            Some(v) => {
+                return Err(Error::Job(JobError::Unavailable {
+                    reason: format!(
+                        "endpoint {addr} speaks wire protocol {v}; this client speaks {}",
+                        wire::PROTO_VERSION
+                    ),
+                }));
+            }
+            None => {
+                return Err(Error::Job(JobError::Unavailable {
+                    reason: format!(
+                        "endpoint {addr} reports no wire protocol version (pre-versioning \
+                         server); this client speaks {}",
+                        wire::PROTO_VERSION
+                    ),
+                }));
+            }
+        }
         let stats = Self::roundtrip(&mut state, "{\"verb\":\"stats\"}")?;
         let backend = stats
             .get("stats")
@@ -796,6 +858,7 @@ impl RemoteClient {
         inputs: Vec<BatchInput>,
         priority: u8,
         deadline: Option<Duration>,
+        identity: wire::RequestIdentity<'_>,
     ) -> Result<ReductionOutcome> {
         let t0 = Instant::now();
         let mut problems = Vec::with_capacity(inputs.len());
@@ -806,7 +869,7 @@ impl RemoteClient {
                 self.counters.failed.fetch_add(remaining, Ordering::Relaxed);
                 e
             };
-            let line = wire::submit_request_for_input(input, priority, deadline);
+            let line = wire::submit_request_for_input(input, priority, deadline, identity);
             let transport = writeln!(state.writer, "{line}")
                 .and_then(|()| state.writer.flush())
                 .map_err(Error::Io);
@@ -869,6 +932,8 @@ impl Client for RemoteClient {
         }
         let priority = request.priority;
         let deadline = request.deadline;
+        let client_id = request.client_id;
+        let quota_class = request.quota_class;
         // Materialization params only size local fill-in storage; the
         // band payload depends solely on (n, bw, seed), so local and
         // remote materializations agree (see ProblemSpec).
@@ -879,8 +944,12 @@ impl Client for RemoteClient {
             .map(|p| p.materialize(&materialize_params))
             .collect();
         self.counters.submitted.fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        let identity = wire::RequestIdentity {
+            client_id: client_id.as_deref(),
+            quota_class: quota_class.as_deref(),
+        };
         let mut state = self.state.lock().unwrap();
-        let outcome = self.run_request(&mut state, inputs, priority, deadline);
+        let outcome = self.run_request(&mut state, inputs, priority, deadline, identity);
         let id = next_handle_id();
         state.done.insert(id, outcome);
         Ok(JobHandle { id })
@@ -919,6 +988,9 @@ mod tests {
             backlog_cap_s: 1e9,
             cache_cap: 16,
             arch: "H100",
+            workers: 1,
+            routing: crate::config::ShardRouting::LeastLoaded,
+            quota_pending_cap: 0,
         }
     }
 
@@ -1066,6 +1138,36 @@ mod tests {
         }
         let stats = client.stats();
         assert!(stats.jobs_failed >= 1);
+    }
+
+    #[test]
+    fn quota_cap_surfaces_the_retryable_quota_taxonomy() {
+        // Pending cap 1 per client: the second problem of an identified
+        // request bounces off the quota, retryably; anonymous traffic
+        // (no client_id/quota_class) is never quota-limited.
+        let cfg = ServiceConfig {
+            quota_pending_cap: 1,
+            window: Duration::from_millis(100),
+            ..service_cfg()
+        };
+        let client = LocalClient::queued(cfg).unwrap();
+        let err = client
+            .submit(
+                ReductionRequest::new()
+                    .random(32, 4, ScalarKind::F64, 1)
+                    .random(32, 4, ScalarKind::F64, 2)
+                    .client_id("tenant-a"),
+            )
+            .unwrap_err();
+        assert!(err.is_retryable(), "{err}");
+        assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
+        client
+            .submit_wait(
+                ReductionRequest::new()
+                    .random(32, 4, ScalarKind::F64, 3)
+                    .random(32, 4, ScalarKind::F64, 4),
+            )
+            .unwrap();
     }
 
     #[test]

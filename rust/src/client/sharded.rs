@@ -1,0 +1,414 @@
+//! [`ShardedClient`] — the [`Client`] over *several* `banded-svd serve`
+//! endpoints at once.
+//!
+//! One serve process is one failure domain and one throughput ceiling;
+//! the sharded client spreads requests over a fleet of them and keeps
+//! working when members die. Per request it:
+//!
+//! 1. **routes** to a preferred endpoint ([`RouteStrategy`]): `hash`
+//!    pins identical request shapes to the same endpoint (its plan cache
+//!    stays hot), `least-loaded` picks the endpoint with the fewest
+//!    in-flight requests from this client;
+//! 2. **fails over** on endpoint death — a transport error or a typed
+//!    [`JobError::Unavailable`] (including the ping handshake refusing a
+//!    protocol mismatch, see [`crate::client::wire::PROTO_VERSION`])
+//!    marks the endpoint down and the request moves to the next one,
+//!    reconnecting lazily when a downed endpoint comes back;
+//! 3. **retries** retryable rejections ([`JobError::is_retryable`]:
+//!    overloaded, quota-exceeded) with a short backoff, bounded by
+//!    [`MAX_RETRY_ROUNDS`] full sweeps of the fleet.
+//!
+//! Replaying a request on another endpoint after a mid-request failure
+//! is safe because a reduction is pure: the band payload determines the
+//! result bitwise on a given backend kind, so the survivor returns
+//! exactly what the dead endpoint would have
+//! (`rust/tests/client_equivalence.rs` kills an endpoint mid-stream and
+//! checks σ stays bitwise equal to [`super::LocalClient`]).
+//!
+//! Only when *every* endpoint is down does a request fail, with
+//! [`JobError::Unavailable`] naming the fleet size — itself retryable
+//! context for a caller-side supervisor.
+
+use super::{
+    next_handle_id, Client, ClientStats, Counters, ExecutionSource, JobHandle, ProblemSpec,
+    ReductionOutcome, ReductionRequest, RemoteClient,
+};
+use crate::error::{Error, JobError, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// How [`ShardedClient`] picks the endpoint a request starts on (failover
+/// then proceeds round-robin from there).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum RouteStrategy {
+    /// Stable FNV-1a hash of the request's problem shapes: the same
+    /// request spec always lands on the same (healthy) endpoint, keeping
+    /// each server's plan cache hot for its slice of the traffic.
+    #[default]
+    Hash,
+    /// The endpoint with the fewest requests in flight *from this
+    /// client*; ties rotate so an idle fleet is filled round-robin.
+    LeastLoaded,
+}
+
+impl RouteStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteStrategy::Hash => "hash",
+            RouteStrategy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+impl std::str::FromStr for RouteStrategy {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "hash" => Ok(RouteStrategy::Hash),
+            "least-loaded" | "load" => Ok(RouteStrategy::LeastLoaded),
+            other => Err(Error::Config(format!(
+                "unknown route strategy {other:?} (hash|least-loaded)"
+            ))),
+        }
+    }
+}
+
+/// Full fleet sweeps a request may spend backing off retryable
+/// rejections before the last rejection is surfaced to the caller.
+pub const MAX_RETRY_ROUNDS: usize = 3;
+
+/// One fleet member: its address, the lazily (re)established connection
+/// (`None` = currently down), and this client's in-flight count against
+/// it (the least-loaded signal).
+struct Endpoint {
+    addr: String,
+    client: Mutex<Option<RemoteClient>>,
+    inflight: AtomicUsize,
+}
+
+/// [`Client`] over several `banded-svd serve` endpoints — routing,
+/// health-checked failover, bounded retry. See the module docs for the
+/// policy; see [`super::RemoteClient`] for the single-endpoint wire
+/// behavior each attempt delegates to.
+pub struct ShardedClient {
+    endpoints: Vec<Endpoint>,
+    strategy: RouteStrategy,
+    /// Tie-break rotation for least-loaded routing.
+    rotate: AtomicUsize,
+    done: Mutex<HashMap<u64, Result<ReductionOutcome>>>,
+    counters: Counters,
+}
+
+impl ShardedClient {
+    /// Connect to a fleet. Each endpoint gets the full [`RemoteClient`]
+    /// handshake (ping-first protocol check, then backend discovery); at
+    /// least one must succeed — members that are down now are retried
+    /// lazily when a request routes to them.
+    pub fn connect<S: AsRef<str>>(addrs: &[S], strategy: RouteStrategy) -> Result<Self> {
+        if addrs.is_empty() {
+            return Err(Error::Config("sharded client needs at least one endpoint".into()));
+        }
+        let endpoints: Vec<Endpoint> = addrs
+            .iter()
+            .map(|a| Endpoint {
+                addr: a.as_ref().to_string(),
+                client: Mutex::new(None),
+                inflight: AtomicUsize::new(0),
+            })
+            .collect();
+        let mut healthy = 0usize;
+        let mut last: Option<Error> = None;
+        for endpoint in &endpoints {
+            match RemoteClient::connect(&endpoint.addr) {
+                Ok(client) => {
+                    *endpoint.client.lock().unwrap() = Some(client);
+                    healthy += 1;
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        if healthy == 0 {
+            return Err(Error::Job(JobError::Unavailable {
+                reason: format!(
+                    "all {} endpoints are down (last: {})",
+                    endpoints.len(),
+                    last.expect("at least one endpoint was attempted")
+                ),
+            }));
+        }
+        Ok(Self {
+            endpoints,
+            strategy,
+            rotate: AtomicUsize::new(0),
+            done: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        })
+    }
+
+    /// The configured endpoint addresses, in routing order.
+    pub fn endpoints(&self) -> Vec<&str> {
+        self.endpoints.iter().map(|e| e.addr.as_str()).collect()
+    }
+
+    /// Endpoints currently holding a live connection. Down members may
+    /// come back: every request routed to one retries the connect.
+    pub fn healthy(&self) -> usize {
+        self.endpoints.iter().filter(|e| e.client.lock().unwrap().is_some()).count()
+    }
+
+    pub fn strategy(&self) -> RouteStrategy {
+        self.strategy
+    }
+
+    /// Ask every reachable endpoint to shut down. Members that are down
+    /// (and stay unreachable) are skipped — they have nothing to stop;
+    /// the first *refusal* from a live endpoint is the returned error,
+    /// after every endpoint has been attempted.
+    pub fn shutdown(&self) -> Result<()> {
+        let mut refused: Option<Error> = None;
+        for endpoint in &self.endpoints {
+            let mut slot = endpoint.client.lock().unwrap();
+            if slot.is_none() {
+                match RemoteClient::connect(&endpoint.addr) {
+                    Ok(client) => *slot = Some(client),
+                    Err(_) => continue, // already down — nothing to stop
+                }
+            }
+            let result = slot.as_ref().expect("slot populated above").shutdown();
+            *slot = None; // the endpoint drains and exits either way
+            if let Err(e) = result {
+                refused.get_or_insert(e);
+            }
+        }
+        match refused {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// An error meaning the endpoint itself is gone (vs a job-level
+    /// outcome): transport failures and the typed unavailable kind —
+    /// which the connect handshake also uses for protocol mismatches.
+    fn endpoint_down(e: &Error) -> bool {
+        matches!(e, Error::Io(_)) || matches!(e.as_job(), Some(JobError::Unavailable { .. }))
+    }
+
+    /// The preferred starting endpoint for `request`.
+    fn route(&self, request: &ReductionRequest) -> usize {
+        let count = self.endpoints.len();
+        if count <= 1 {
+            return 0;
+        }
+        match self.strategy {
+            RouteStrategy::Hash => (fnv_request(request) % count as u64) as usize,
+            RouteStrategy::LeastLoaded => {
+                let offset = self.rotate.fetch_add(1, Ordering::Relaxed) % count;
+                let mut best = offset;
+                let mut best_load = self.endpoints[offset].inflight.load(Ordering::Relaxed);
+                for step in 1..count {
+                    let idx = (offset + step) % count;
+                    let load = self.endpoints[idx].inflight.load(Ordering::Relaxed);
+                    if load < best_load {
+                        best = idx;
+                        best_load = load;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// One attempt on one endpoint: reconnect if down, run the whole
+    /// request as strict round trips, drop the connection on transport
+    /// death so the next attempt reconnects from scratch.
+    fn run_on(&self, endpoint: &Endpoint, request: &ReductionRequest) -> Result<ReductionOutcome> {
+        endpoint.inflight.fetch_add(1, Ordering::Relaxed);
+        let result = (|| {
+            let mut slot = endpoint.client.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(RemoteClient::connect(&endpoint.addr)?);
+            }
+            let client = slot.as_ref().expect("slot populated above");
+            let outcome = client.submit(request.clone()).and_then(|handle| client.wait(handle));
+            if let Err(e) = &outcome {
+                if Self::endpoint_down(e) {
+                    *slot = None;
+                }
+            }
+            outcome
+        })();
+        endpoint.inflight.fetch_sub(1, Ordering::Relaxed);
+        result
+    }
+
+    /// The full policy: route, sweep the fleet failing over downed
+    /// members, back off and re-sweep on retryable rejections, give up
+    /// only when every endpoint is down or the retry budget is spent.
+    fn run_with_failover(&self, request: &ReductionRequest) -> Result<ReductionOutcome> {
+        let count = self.endpoints.len();
+        let start = self.route(request);
+        let mut last: Option<Error> = None;
+        for round in 0..=MAX_RETRY_ROUNDS {
+            let mut saw_retryable = false;
+            for step in 0..count {
+                let endpoint = &self.endpoints[(start + step) % count];
+                match self.run_on(endpoint, request) {
+                    Ok(outcome) => return Ok(outcome),
+                    Err(e) if Self::endpoint_down(&e) => last = Some(e),
+                    Err(e) if e.is_retryable() => {
+                        saw_retryable = true;
+                        last = Some(e);
+                    }
+                    Err(e) => return Err(e), // terminal job/config error
+                }
+            }
+            if !saw_retryable {
+                // Every member of this sweep was down, not busy.
+                return Err(Error::Job(JobError::Unavailable {
+                    reason: format!(
+                        "all {count} endpoints are down (last: {})",
+                        last.expect("a full sweep recorded at least one error")
+                    ),
+                }));
+            }
+            if round < MAX_RETRY_ROUNDS {
+                std::thread::sleep(Duration::from_millis(10 * (round as u64 + 1)));
+            }
+        }
+        Err(last.expect("retry rounds recorded the rejection they backed off"))
+    }
+}
+
+impl Client for ShardedClient {
+    fn submit(&self, request: ReductionRequest) -> Result<JobHandle> {
+        request.validate()?;
+        let jobs = request.len() as u64;
+        if request.params.is_some() {
+            self.counters.failed.fetch_add(jobs, Ordering::Relaxed);
+            return Err(Error::Config(
+                "the serving fleet owns its tuning parameters; start each `banded-svd serve` \
+                 with the desired --tw/--tpb/--max-blocks instead of overriding per request"
+                    .into(),
+            ));
+        }
+        self.counters.submitted.fetch_add(jobs, Ordering::Relaxed);
+        let outcome = self.run_with_failover(&request).map(|mut outcome| {
+            outcome.provenance.source = ExecutionSource::Sharded;
+            outcome
+        });
+        match &outcome {
+            Ok(_) => self.counters.completed.fetch_add(jobs, Ordering::Relaxed),
+            Err(_) => self.counters.failed.fetch_add(jobs, Ordering::Relaxed),
+        }
+        let id = next_handle_id();
+        self.done.lock().unwrap().insert(id, outcome);
+        Ok(JobHandle { id })
+    }
+
+    fn wait(&self, handle: JobHandle) -> Result<ReductionOutcome> {
+        self.done.lock().unwrap().remove(&handle.id).ok_or_else(|| {
+            Error::Config(format!("unknown or already-resolved handle {:?}", handle))
+        })?
+    }
+
+    fn stats(&self) -> ClientStats {
+        self.counters.snapshot()
+    }
+}
+
+/// Stable FNV-1a over the request's problem specs — hashes the *shape*
+/// (and seed, for generated problems), not the band payload, so routing
+/// a large explicit band costs nothing.
+fn fnv_request(request: &ReductionRequest) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |x: u64| {
+        for byte in x.to_le_bytes() {
+            hash ^= byte as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for problem in &request.problems {
+        match problem {
+            ProblemSpec::Band(input) => {
+                eat(input.n() as u64);
+                eat(input.bw() as u64);
+                eat(input.element_bytes() as u64);
+            }
+            ProblemSpec::Random { n, bw, kind, seed } => {
+                eat(*n as u64);
+                eat(*bw as u64);
+                eat(*kind as u64);
+                eat(*seed);
+            }
+        }
+    }
+    hash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalar::ScalarKind;
+
+    fn fleet(count: usize, strategy: RouteStrategy) -> ShardedClient {
+        ShardedClient {
+            endpoints: (0..count)
+                .map(|i| Endpoint {
+                    addr: format!("127.0.0.1:{}", 9000 + i),
+                    client: Mutex::new(None),
+                    inflight: AtomicUsize::new(0),
+                })
+                .collect(),
+            strategy,
+            rotate: AtomicUsize::new(0),
+            done: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+        }
+    }
+
+    #[test]
+    fn route_strategy_parses_and_defaults_to_hash() {
+        assert_eq!(RouteStrategy::default(), RouteStrategy::Hash);
+        assert_eq!("hash".parse::<RouteStrategy>().unwrap(), RouteStrategy::Hash);
+        assert_eq!("least-loaded".parse::<RouteStrategy>().unwrap(), RouteStrategy::LeastLoaded);
+        assert_eq!("load".parse::<RouteStrategy>().unwrap(), RouteStrategy::LeastLoaded);
+        assert!("random".parse::<RouteStrategy>().is_err());
+        assert_eq!(RouteStrategy::Hash.name(), "hash");
+        assert_eq!(RouteStrategy::LeastLoaded.name(), "least-loaded");
+    }
+
+    #[test]
+    fn hash_routing_is_stable_and_seed_sensitive() {
+        let client = fleet(4, RouteStrategy::Hash);
+        let request = |seed| ReductionRequest::new().random(64, 8, ScalarKind::F64, seed);
+        // Identical specs always route identically...
+        assert_eq!(client.route(&request(1)), client.route(&request(1)));
+        // ...and distinct seeds spread over more than one endpoint.
+        let spread: std::collections::HashSet<usize> =
+            (0..32).map(|seed| client.route(&request(seed))).collect();
+        assert!(spread.len() > 1, "32 seeds all hashed to one endpoint");
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_endpoints_and_rotates_ties() {
+        let client = fleet(3, RouteStrategy::LeastLoaded);
+        // All idle: the rotation spreads consecutive picks.
+        let picks: Vec<usize> =
+            (0..3).map(|_| client.route(&ReductionRequest::new())).collect();
+        assert_eq!(picks, vec![0, 1, 2]);
+        // A busy endpoint is avoided regardless of rotation.
+        client.endpoints[1].inflight.store(5, Ordering::Relaxed);
+        for _ in 0..6 {
+            assert_ne!(client.route(&ReductionRequest::new()), 1);
+        }
+    }
+
+    #[test]
+    fn connecting_an_empty_fleet_is_a_config_error() {
+        let err = ShardedClient::connect::<&str>(&[], RouteStrategy::Hash).unwrap_err();
+        assert!(err.to_string().contains("at least one endpoint"), "{err}");
+    }
+}

@@ -30,6 +30,17 @@ use crate::service::queue::JobResult;
 use crate::util::json::Json;
 use std::time::Duration;
 
+/// Version of the JSON-lines protocol this build speaks. Stamped on
+/// every request a client renders and on the server's `ping` response.
+///
+/// Compatibility rule (documented in `docs/client.md`): the server
+/// **tolerates requests without a `proto` field** (the PR 5 wire, v1 —
+/// hand-rolled clients keep working) but **rejects a present, mismatched
+/// `proto`**; clients handshake by pinging first and refuse a server
+/// whose `ping` response is missing or mismatched with a typed
+/// [`JobError::Unavailable`] instead of a parse failure downstream.
+pub const PROTO_VERSION: u32 = 2;
+
 /// Number of in-band values of an upper-banded `n × n` matrix with `bw`
 /// superdiagonals — the required `band` payload length. Closed form
 /// (O(1), `bw` clamped to `n − 1`): full rows contribute `bw + 1`
@@ -112,11 +123,13 @@ fn submit_json(
     precision: &str,
     priority: u8,
     deadline: Option<Duration>,
+    identity: RequestIdentity<'_>,
     band: Vec<f64>,
 ) -> String {
     let band: Vec<Json> = band.into_iter().map(Json::Num).collect();
     let mut request = Json::obj()
         .set("verb", "submit")
+        .set("proto", PROTO_VERSION as usize)
         .set("n", n)
         .set("bw", bw)
         .set("precision", precision)
@@ -124,29 +137,53 @@ fn submit_json(
     if let Some(deadline) = deadline {
         request = request.set("deadline_ms", Json::Int(deadline.as_millis() as i64));
     }
+    if let Some(client_id) = identity.client_id {
+        request = request.set("client_id", client_id);
+    }
+    if let Some(quota_class) = identity.quota_class {
+        request = request.set("quota_class", quota_class);
+    }
     request.set("band", Json::Arr(band)).render()
 }
 
-/// Render a complete `submit` request line for `a`. The precision label
-/// comes from `T`.
+/// Who a `submit` line is from — the request-owned identity fields
+/// ([`super::ReductionRequest::client_id`] /
+/// [`super::ReductionRequest::quota_class`]) as they ride the wire.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestIdentity<'a> {
+    pub client_id: Option<&'a str>,
+    pub quota_class: Option<&'a str>,
+}
+
+/// Render a complete anonymous `submit` request line for `a`. The
+/// precision label comes from `T`.
 pub fn submit_request<T: Scalar>(a: &Banded<T>, bw: usize, priority: u8) -> String {
-    submit_json(a.n(), bw, T::NAME, priority, None, band_values(a, bw))
+    submit_json(
+        a.n(),
+        bw,
+        T::NAME,
+        priority,
+        None,
+        RequestIdentity::default(),
+        band_values(a, bw),
+    )
 }
 
 /// Render a `submit` request line for a type-erased problem — what the
 /// [`super::RemoteClient`] sends for each problem of a request, carrying
-/// the request's priority class and optional deadline.
+/// the request's priority class, optional deadline, and identity.
 pub fn submit_request_for_input(
     input: &BatchInput,
     priority: u8,
     deadline: Option<Duration>,
+    identity: RequestIdentity<'_>,
 ) -> String {
     let band = match input {
         BatchInput::F64 { a, bw } => band_values(a, *bw),
         BatchInput::F32 { a, bw } => band_values(a, *bw),
         BatchInput::F16 { a, bw } => band_values(a, *bw),
     };
-    submit_json(input.n(), input.bw(), input.precision(), priority, deadline, band)
+    submit_json(input.n(), input.bw(), input.precision(), priority, deadline, identity, band)
 }
 
 fn metrics_json(m: &LaunchMetrics) -> Json {
@@ -327,7 +364,12 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(3);
         let a = random_banded::<f32>(24, 3, 2, &mut rng);
         let typed = submit_request(&a, 3, 2);
-        let erased = submit_request_for_input(&BatchInput::from((a, 3)), 2, None);
+        let erased = submit_request_for_input(
+            &BatchInput::from((a, 3)),
+            2,
+            None,
+            RequestIdentity::default(),
+        );
         assert_eq!(typed, erased);
     }
 
@@ -336,12 +378,40 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(4);
         let a = random_banded::<f64>(16, 2, 1, &mut rng);
         let input = BatchInput::from((a, 2));
-        let line = submit_request_for_input(&input, 1, Some(Duration::from_millis(250)));
+        let line = submit_request_for_input(
+            &input,
+            1,
+            Some(Duration::from_millis(250)),
+            RequestIdentity::default(),
+        );
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("deadline_ms").and_then(Json::as_i64), Some(250));
         assert_eq!(parsed.get("priority").and_then(Json::as_usize), Some(1));
-        let bare = submit_request_for_input(&input, 0, None);
+        let bare = submit_request_for_input(&input, 0, None, RequestIdentity::default());
         assert!(Json::parse(&bare).unwrap().get("deadline_ms").is_none());
+    }
+
+    #[test]
+    fn proto_and_identity_ride_the_request_line() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let a = random_banded::<f64>(16, 2, 1, &mut rng);
+        let input = BatchInput::from((a, 2));
+        let identity =
+            RequestIdentity { client_id: Some("tenant-a"), quota_class: Some("batch") };
+        let line = submit_request_for_input(&input, 0, None, identity);
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(
+            parsed.get("proto").and_then(Json::as_usize),
+            Some(PROTO_VERSION as usize)
+        );
+        assert_eq!(parsed.get("client_id").and_then(Json::as_str), Some("tenant-a"));
+        assert_eq!(parsed.get("quota_class").and_then(Json::as_str), Some("batch"));
+        // Anonymous lines omit the identity fields but still carry proto.
+        let bare = submit_request_for_input(&input, 0, None, RequestIdentity::default());
+        let parsed = Json::parse(&bare).unwrap();
+        assert!(parsed.get("client_id").is_none());
+        assert!(parsed.get("quota_class").is_none());
+        assert!(parsed.get("proto").is_some());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! | `BSVD_ARTIFACTS` | `artifacts` | Directory the PJRT backends load AOT-compiled HLO artifacts from ([`crate::runtime::artifact_dir`]). Read on every resolution, so it can be repointed between engine loads. |
 //! | `BSVD_SERVICE_WINDOW_US` | `500` | Micro-batching window of the reduction service ([`ServiceConfig::window`]), in microseconds: how long the batcher holds the first pending job open for co-scheduling before flushing. Read when a [`ServiceConfig`] is constructed with `Default`. |
 //! | `BSVD_SERVICE_QUEUE_CAP` | `1024` | Maximum pending jobs in the service submission queue ([`ServiceConfig::queue_cap`]); submissions beyond it are rejected at admission. Read when a [`ServiceConfig`] is constructed with `Default`. |
+//! | `BSVD_SERVICE_WORKERS` | `1` | Batcher shards the reduction service runs ([`ServiceConfig::workers`]); each shard owns its own backend and admission queue, all sharing one plan cache. Read when a [`ServiceConfig`] is constructed with `Default`. |
 //!
 //! The kernel-path knobs are bitwise-identical in results — they trade
 //! performance, never numerics (see `docs/performance-model.md`). The
@@ -144,11 +145,12 @@ impl Default for BatchConfig {
 /// Knobs of the reduction service ([`crate::service::Service`]): the
 /// long-running subsystem that accepts a *stream* of reduction jobs,
 /// coalesces them into merged [`crate::plan::LaunchPlan`]s, and executes
-/// them on one backend worker.
+/// them on one or more backend shards.
 ///
-/// Two knobs also have environment overrides picked up by `Default`
-/// (`BSVD_SERVICE_WINDOW_US`, `BSVD_SERVICE_QUEUE_CAP` — see the module
-/// docs); explicit field assignment always wins over the environment.
+/// Three knobs also have environment overrides picked up by `Default`
+/// (`BSVD_SERVICE_WINDOW_US`, `BSVD_SERVICE_QUEUE_CAP`,
+/// `BSVD_SERVICE_WORKERS` — see the module docs); explicit field
+/// assignment always wins over the environment.
 ///
 /// # Examples
 ///
@@ -190,6 +192,19 @@ pub struct ServiceConfig {
     /// Architecture name ([`crate::simulator::arch_by_name`]) whose cost
     /// model prices admission.
     pub arch: &'static str,
+    /// Batcher shards the service runs. Each shard owns its own backend
+    /// executor and its own admission queue (`queue_cap` and
+    /// `backlog_cap_s` apply per shard), all sharing one plan cache.
+    /// `1` reproduces the single-worker service exactly.
+    pub workers: usize,
+    /// How admitted jobs pick a shard when `workers > 1`.
+    pub routing: ShardRouting,
+    /// Per-client pending-job cap: a submission is rejected with
+    /// [`crate::error::JobError::QuotaExceeded`] while its quota key
+    /// (the request's `quota_class`, falling back to `client_id`)
+    /// already has this many jobs queued across all shards. `0`
+    /// disables quota enforcement; anonymous jobs are never counted.
+    pub quota_pending_cap: usize,
 }
 
 impl ServiceConfig {
@@ -209,6 +224,9 @@ impl ServiceConfig {
         }
         if self.batch.max_coresident == 0 {
             return Err(Error::Config("service max_coresident must be positive".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("service workers must be positive".into()));
         }
         Ok(())
     }
@@ -235,6 +253,63 @@ impl Default for ServiceConfig {
             backlog_cap_s: 60.0,
             cache_cap: DEFAULT_CACHE_CAP,
             arch: "H100",
+            workers: env_usize("BSVD_SERVICE_WORKERS", 1).max(1),
+            routing: ShardRouting::default(),
+            quota_pending_cap: 0,
+        }
+    }
+}
+
+/// How the service's admission router spreads jobs over its batcher
+/// shards when [`ServiceConfig::workers`] is above one. Either policy
+/// preserves strict (priority, admission-seq) drain order *within* each
+/// shard; they differ only in which shard a job lands on.
+///
+/// # Examples
+///
+/// ```
+/// use banded_svd::config::ShardRouting;
+///
+/// let routing: ShardRouting = "least-loaded".parse().unwrap();
+/// assert_eq!(routing, ShardRouting::LeastLoaded);
+/// assert_eq!(routing.name(), "least-loaded");
+/// assert_eq!("size".parse::<ShardRouting>().unwrap(), ShardRouting::SizeClass);
+/// ```
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum ShardRouting {
+    /// Send each job to the shard with the smallest modeled backlog
+    /// (priced by [`crate::simulator::simulate_plan_for`]), breaking
+    /// ties by queue depth and then a rotating offset. Best utilization
+    /// under mixed job sizes.
+    #[default]
+    LeastLoaded,
+    /// Send each job to the shard owning its problem-size class
+    /// (`log2(n)` bucket modulo the shard count). Same-sized problems
+    /// land together, so merged plans pack densely and the shared plan
+    /// cache sees a hot working set per shard.
+    SizeClass,
+}
+
+impl ShardRouting {
+    /// Canonical CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardRouting::LeastLoaded => "least-loaded",
+            ShardRouting::SizeClass => "size-class",
+        }
+    }
+}
+
+impl std::str::FromStr for ShardRouting {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "least-loaded" | "cost" => Ok(ShardRouting::LeastLoaded),
+            "size-class" | "size" => Ok(ShardRouting::SizeClass),
+            other => Err(format!(
+                "unknown shard routing {other:?} (least-loaded|size-class)"
+            )),
         }
     }
 }
@@ -381,6 +456,21 @@ mod tests {
             ..ServiceConfig::default()
         };
         assert!(bad_batch.validate().is_err());
+        assert!(ServiceConfig { workers: 0, ..ServiceConfig::default() }.validate().is_err());
+        assert!(ServiceConfig { workers: 4, ..ServiceConfig::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn shard_routing_parses_and_defaults_to_least_loaded() {
+        assert_eq!(ServiceConfig::default().routing, ShardRouting::LeastLoaded);
+        assert_eq!(ServiceConfig::default().quota_pending_cap, 0);
+        assert!(ServiceConfig::default().workers >= 1);
+        assert_eq!("cost".parse::<ShardRouting>().unwrap(), ShardRouting::LeastLoaded);
+        assert_eq!("size-class".parse::<ShardRouting>().unwrap(), ShardRouting::SizeClass);
+        assert!("bogus".parse::<ShardRouting>().is_err());
+        for routing in [ShardRouting::LeastLoaded, ShardRouting::SizeClass] {
+            assert_eq!(routing.name().parse::<ShardRouting>().unwrap(), routing);
+        }
     }
 
     #[test]

@@ -11,8 +11,8 @@ use std::fmt;
 
 /// Why a reduction job was declined or failed — the error taxonomy of
 /// the client API ([`crate::client::ReductionOutcome`] waits resolve to
-/// this on failure) and of the service queue. The same four kinds ride
-/// the JSON wire (`kind` + `retryable` fields), so a
+/// this on failure) and of the service queue. Every kind rides the JSON
+/// wire (`kind` + `retryable` fields), so a
 /// [`crate::client::RemoteClient`] surfaces exactly what a local one
 /// would.
 #[derive(Clone, Debug, PartialEq)]
@@ -21,6 +21,12 @@ pub enum JobError {
     /// (queue depth cap or priced-backlog cap). **Retryable**: the same
     /// submission is expected to succeed once the queue drains.
     Overloaded { reason: String },
+    /// Admission control declined the job because the submitting client
+    /// (its `client_id`, or its shared `quota_class`) already has its
+    /// cap of pending jobs in the queue. **Retryable**: the same
+    /// submission is expected to succeed once that client's pending
+    /// jobs drain.
+    QuotaExceeded { reason: String },
     /// The service is not accepting work (shutting down, or torn down
     /// before the job ran). Not retryable against this endpoint.
     Unavailable { reason: String },
@@ -35,13 +41,14 @@ impl JobError {
     /// True when resubmitting the identical job later is expected to
     /// succeed — the back-pressure signal admission control emits.
     pub fn is_retryable(&self) -> bool {
-        matches!(self, JobError::Overloaded { .. })
+        matches!(self, JobError::Overloaded { .. } | JobError::QuotaExceeded { .. })
     }
 
     /// Stable wire code for the `kind` field of an error response.
     pub fn kind(&self) -> &'static str {
         match self {
             JobError::Overloaded { .. } => "overloaded",
+            JobError::QuotaExceeded { .. } => "quota-exceeded",
             JobError::Unavailable { .. } => "unavailable",
             JobError::DeadlineExpired { .. } => "deadline-expired",
             JobError::Execution { .. } => "execution",
@@ -58,6 +65,7 @@ impl JobError {
     pub fn from_kind(kind: &str, message: &str, queued_ms: Option<u64>) -> JobError {
         match kind {
             "overloaded" => JobError::Overloaded { reason: message.to_string() },
+            "quota-exceeded" => JobError::QuotaExceeded { reason: message.to_string() },
             "unavailable" => JobError::Unavailable { reason: message.to_string() },
             "deadline-expired" => {
                 JobError::DeadlineExpired { queued_ms: queued_ms.unwrap_or(0) }
@@ -71,6 +79,9 @@ impl fmt::Display for JobError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             JobError::Overloaded { reason } => write!(f, "overloaded (retryable): {reason}"),
+            JobError::QuotaExceeded { reason } => {
+                write!(f, "quota exceeded (retryable): {reason}")
+            }
             JobError::Unavailable { reason } => write!(f, "service unavailable: {reason}"),
             JobError::DeadlineExpired { queued_ms } => {
                 write!(f, "deadline exceeded before execution (queued {queued_ms} ms)")
@@ -190,6 +201,9 @@ mod tests {
         let overloaded = JobError::Overloaded { reason: "queue full".into() };
         assert!(overloaded.is_retryable());
         assert!(Error::Job(overloaded.clone()).is_retryable());
+        let quota = JobError::QuotaExceeded { reason: "client tenant-a has 4 pending".into() };
+        assert!(quota.is_retryable());
+        assert!(Error::Job(quota).is_retryable());
         for terminal in [
             JobError::Unavailable { reason: "shutting down".into() },
             JobError::DeadlineExpired { queued_ms: 7 },
@@ -206,6 +220,7 @@ mod tests {
     fn job_kinds_roundtrip_over_the_wire_codes() {
         for e in [
             JobError::Overloaded { reason: "queue full: 4 jobs".into() },
+            JobError::QuotaExceeded { reason: "client tenant-a has 4 pending (cap 4)".into() },
             JobError::Unavailable { reason: "service is shutting down".into() },
             JobError::Execution { reason: "backend threadpool failed".into() },
         ] {

@@ -124,9 +124,12 @@
 //! pending jobs into merged plans (size or time-window flush), and a
 //! bounded LRU cache over plan lowering, merge skeletons, and autotune
 //! results — fronted in-process by [`service::Service`] and over TCP
-//! JSON-lines by [`service::Server`] (`banded-svd serve`). Served
-//! results are bitwise identical to the direct pipeline on the same
-//! backend.
+//! JSON-lines by [`service::Server`] (`banded-svd serve`). A service
+//! runs one or more batcher **shards** (`--workers N`), each with its
+//! own queue and backend executor, routed by modeled load or problem
+//! size class and sharing one plan cache ([`service::shard`]); per-shard
+//! breakdowns ride [`service::ServiceStats::shards`]. Served results are
+//! bitwise identical to the direct pipeline on the same backend.
 //!
 //! ## One front door: the client API
 //!
@@ -137,12 +140,16 @@
 //! values, per-problem [`coordinator::metrics::LaunchMetrics`], plan
 //! provenance) comes back. [`client::LocalClient`] executes in-process
 //! (directly on a backend, or queued through an embedded
-//! [`service::Service`]); [`client::RemoteClient`] speaks the JSON-lines
-//! wire to a `banded-svd serve` endpoint. The two are interchangeable:
+//! [`service::Service`]); [`client::RemoteClient`] speaks the
+//! version-checked JSON-lines wire to a `banded-svd serve` endpoint;
+//! [`client::ShardedClient`] spreads requests over a *fleet* of
+//! endpoints with hash or least-loaded routing, ping-based health
+//! checks, and failover when a member dies. All are interchangeable:
 //! same request, **bitwise-identical** singular values
-//! (`rust/tests/client_equivalence.rs`). Failures resolve to the typed
-//! [`error::JobError`] taxonomy on every path, so retryable
-//! back-pressure is distinguishable from terminal errors without
+//! (`rust/tests/client_equivalence.rs`, including under single-endpoint
+//! failure). Failures resolve to the typed [`error::JobError`] taxonomy
+//! on every path, so retryable back-pressure (overloaded,
+//! quota-exceeded) is distinguishable from terminal errors without
 //! parsing messages.
 //!
 //! ```no_run
@@ -195,8 +202,11 @@ pub mod prelude {
     pub use crate::client::{
         Client, ClientStats, ExecutionSource, JobHandle, LocalClient, PlanProvenance,
         ProblemOutcome, ProblemSpec, ReductionOutcome, ReductionRequest, RemoteClient,
+        RouteStrategy, ShardedClient,
     };
-    pub use crate::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
+    pub use crate::config::{
+        BackendKind, BatchConfig, PackingPolicy, ServiceConfig, ShardRouting, TuneParams,
+    };
     pub use crate::error::{Error, JobError, Result};
     pub use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
     pub use crate::pipeline::{
@@ -204,7 +214,9 @@ pub mod prelude {
     };
     pub use crate::plan::{LaunchPlan, TaskSlot};
     pub use crate::scalar::{Scalar, ScalarKind, F16};
-    pub use crate::service::{JobResult, JobTicket, PlanCache, Server, Service, ServiceStats};
+    pub use crate::service::{
+        JobResult, JobTicket, PlanCache, Server, Service, ServiceStats, ShardStats,
+    };
     pub use crate::util::rng::Xoshiro256;
     pub use crate::util::threadpool::ThreadPool;
 }

@@ -5,9 +5,12 @@
 
 use banded_svd::banded::Dense;
 use banded_svd::client::{
-    Client, LocalClient, ReductionOutcome, ReductionRequest, RemoteClient,
+    Client, LocalClient, ReductionOutcome, ReductionRequest, RemoteClient, RouteStrategy,
+    ShardedClient,
 };
-use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
+use banded_svd::config::{
+    BackendKind, BatchConfig, PackingPolicy, ServiceConfig, ShardRouting, TuneParams,
+};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::{dense_with_spectrum, random_banded, Spectrum};
 use banded_svd::pipeline::{
@@ -69,7 +72,15 @@ fn cli() -> Cli {
                 name: "client",
                 about: "submit reduction requests through the unified client (local or remote)",
                 opts: vec![
-                    opt("remote", "serve endpoint to submit to (empty = run locally)", ""),
+                    opt(
+                        "remote",
+                        "serve endpoint(s) to submit to, comma-separated (several = sharded \
+                         client with failover; empty = run locally)",
+                        "",
+                    ),
+                    opt("route", "sharded endpoint routing: hash|least-loaded", "hash"),
+                    opt("client-id", "caller identity for server-side quota accounting", ""),
+                    opt("quota-class", "quota bucket shared across client ids", ""),
                     flag("queued", "local mode: queue through an embedded in-process service"),
                     opt("count", "number of problems", "4"),
                     opt("n", "matrix size of each problem", "128"),
@@ -90,7 +101,7 @@ fn cli() -> Cli {
                     opt("backend", "sequential|threadpool|pjrt (local modes)", "threadpool"),
                     opt("threads", "worker threads (0 = all cores, local modes)", "0"),
                     opt("seed", "rng seed", "42"),
-                    flag("shutdown", "after the run, ask the remote server to shut down"),
+                    flag("shutdown", "after the run, ask the remote server(s) to shut down"),
                 ],
             },
             Command {
@@ -100,6 +111,9 @@ fn cli() -> Cli {
                     opt("addr", "listen address (port 0 = ephemeral)", "127.0.0.1:7070"),
                     opt("backend", "sequential|threadpool|pjrt", "threadpool"),
                     opt("threads", "worker threads (0 = all cores)", "0"),
+                    opt("workers", "batcher shards, each with its own backend (overrides env)", ""),
+                    opt("routing", "job-to-shard routing: least-loaded|size-class", "least-loaded"),
+                    opt("quota-cap", "max pending jobs per client (0 = no quota)", "0"),
                     opt("max-coresident", "micro-batch size flush trigger", "16"),
                     opt("policy", "packing policy: round-robin|greedy-fill", "round-robin"),
                     opt("window-us", "micro-batch window in µs (overrides env)", ""),
@@ -529,6 +543,12 @@ fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
             return 2;
         }
     }
+    if let Some(id) = args.get("client-id").filter(|s| !s.is_empty()) {
+        request = request.client_id(id);
+    }
+    if let Some(class) = args.get("quota-class").filter(|s| !s.is_empty()) {
+        request = request.quota_class(class);
+    }
 
     // One driver for every execution surface: request handling below is
     // identical whether the client is local (direct or queued through an
@@ -554,15 +574,47 @@ fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
     }
 
     let remote_addr = args.get("remote").unwrap_or("").to_string();
-    if !remote_addr.is_empty() {
-        let client = match RemoteClient::connect(&remote_addr) {
+    let endpoints: Vec<&str> =
+        remote_addr.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if endpoints.len() > 1 {
+        // Several endpoints: the sharded client routes, health-checks,
+        // and fails over across the fleet.
+        let route: RouteStrategy = match args.get("route").unwrap_or("hash").parse() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let client = match ShardedClient::connect(&endpoints, route) {
             Ok(c) => c,
             Err(e) => {
                 eprintln!("error: connect {remote_addr}: {e}");
                 return 1;
             }
         };
-        let code = drive(&client, request, &format!("remote {remote_addr}"));
+        let code = drive(
+            &client,
+            request,
+            &format!("sharded over {} endpoints, {} routing", endpoints.len(), route.name()),
+        );
+        if args.flag("shutdown") {
+            if let Err(e) = client.shutdown() {
+                eprintln!("shutdown: {e}");
+                return 1;
+            }
+            println!("servers acknowledged shutdown");
+        }
+        code
+    } else if let Some(&addr) = endpoints.first() {
+        let client = match RemoteClient::connect(addr) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: connect {addr}: {e}");
+                return 1;
+            }
+        };
+        let code = drive(&client, request, &format!("remote {addr}"));
         if args.flag("shutdown") {
             if let Err(e) = client.shutdown() {
                 eprintln!("shutdown: {e}");
@@ -640,6 +692,25 @@ fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
             return 2;
         }
     };
+    let routing: ShardRouting = match args.get("routing").unwrap_or("least-loaded").parse() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let workers = match args.parse_opt::<usize>("workers") {
+        Ok(Some(w)) if w > 0 => w,
+        Ok(Some(_)) => {
+            eprintln!("--workers must be positive");
+            return 2;
+        }
+        Ok(None) => base.workers,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let cfg = ServiceConfig {
         params,
         batch: BatchConfig { max_coresident: args.parse_or("max-coresident", 16).max(1), policy },
@@ -650,6 +721,9 @@ fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
         backlog_cap_s: args.parse_or("backlog-cap-s", base.backlog_cap_s),
         cache_cap: args.parse_or("cache-cap", base.cache_cap),
         arch,
+        workers,
+        routing,
+        quota_pending_cap: args.parse_or("quota-cap", 0),
     };
     let addr = args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
     let server = match Server::bind(cfg, &addr) {
@@ -662,10 +736,12 @@ fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
     {
         let cfg = server.service().config();
         println!(
-            "banded-svd serve listening on {} (backend {}, max co-resident {}, window {} µs, \
-             queue cap {})",
+            "banded-svd serve listening on {} (backend {}, {} worker shard(s), {} routing, \
+             max co-resident {}, window {} µs, queue cap {})",
             server.local_addr(),
             cfg.backend.name(),
+            cfg.workers,
+            cfg.routing.name(),
             cfg.batch.max_coresident,
             cfg.window.as_micros(),
             cfg.queue_cap

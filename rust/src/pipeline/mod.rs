@@ -9,11 +9,11 @@
 //! - [`svd`]    — end-to-end drivers, including the mixed-precision
 //!   Fig. 3 protocol.
 //!
-//! The banded-entry convenience functions (`banded_singular_values`,
-//! `batch_singular_values`) are deprecated shims over the unified
-//! [`crate::client`] front door — prefer a
-//! [`crate::client::ReductionRequest`] submitted through a
-//! [`crate::client::Client`].
+//! Banded-entry convenience lives behind the unified [`crate::client`]
+//! front door — build a [`crate::client::ReductionRequest`] and submit
+//! it through a [`crate::client::Client`];
+//! [`banded_singular_values_with`] remains as the one-shot
+//! explicit-backend call the client machinery is checked against.
 
 pub mod dk_qr;
 pub mod jacobi;
@@ -31,7 +31,3 @@ pub use svd::{
     banded_singular_values_with, singular_values_3stage, singular_values_3stage_mixed,
     singular_values_3stage_parallel, StageTimings, SvdOptions,
 };
-// Deprecated shims stay importable from their historical path; new code
-// goes through `crate::client`.
-#[allow(deprecated)]
-pub use svd::{banded_singular_values, batch_singular_values};

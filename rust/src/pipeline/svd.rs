@@ -4,20 +4,18 @@
 //! [`crate::backend::Backend`] — every stage-2 reduction here executes a
 //! [`crate::plan::LaunchPlan`] through the trait, never a private loop.
 //!
-//! The historical banded-entry convenience functions
-//! ([`banded_singular_values`], [`batch_singular_values`]) are
-//! **deprecated shims** over the unified [`crate::client`] front door;
-//! [`banded_singular_values_with`] remains as the explicit-backend
-//! direct call the client machinery itself is checked against.
+//! Banded-entry convenience goes through the unified [`crate::client`]
+//! front door (a [`crate::client::ReductionRequest`] submitted to any
+//! [`crate::client::Client`]); [`banded_singular_values_with`] remains
+//! as the explicit-backend direct call the client machinery itself is
+//! checked against.
 
 use crate::backend::{
     execute_reduction, AsBandStorageMut, Backend, SequentialBackend, ThreadpoolBackend,
 };
 use crate::banded::dense::Dense;
 use crate::banded::storage::Banded;
-use crate::batch::BatchInput;
-use crate::client::{Client, LocalClient, ReductionRequest};
-use crate::config::{BackendKind, BatchConfig, TuneParams};
+use crate::config::TuneParams;
 use crate::error::Result;
 use crate::pipeline::stage1::{dense_to_band_inplace, dense_to_band_inplace_parallel};
 use crate::pipeline::stage3::{bidiagonal_singular_values, bidiagonal_singular_values_parallel};
@@ -126,39 +124,12 @@ pub fn singular_values_3stage_parallel(
     (sv, times)
 }
 
-/// Singular values of an already-banded matrix (stages 2+3 only).
-///
-/// **Deprecated shim**: delegates to the unified client front door
-/// ([`LocalClient`] in direct mode on the sequential backend), which
-/// produces bitwise-identical values. New code should build a
-/// [`ReductionRequest`] and submit it through a [`Client`] — that path
-/// also covers batching, queued execution, and remote serving — or call
-/// [`banded_singular_values_with`] for a one-shot run on an explicit
-/// backend.
-#[deprecated(
-    since = "0.1.0",
-    note = "submit a client::ReductionRequest through client::LocalClient (the unified front \
-            door), or use banded_singular_values_with for an explicit backend"
-)]
-pub fn banded_singular_values<T: Scalar>(
-    banded: &Banded<T>,
-    bw: usize,
-    params: &TuneParams,
-) -> Vec<f64>
-where
-    BatchInput: From<(Banded<T>, usize)>,
-{
-    let client = LocalClient::direct(*params, BatchConfig::default(), BackendKind::Sequential, 1)
-        .expect("sequential backend always constructs");
-    let outcome = client
-        .submit_wait(ReductionRequest::new().problem((banded.clone(), bw)))
-        .expect("banded storage must be sized for the reduction");
-    outcome.problems.into_iter().next().expect("one problem submitted").sv
-}
-
-/// [`banded_singular_values`] on an explicit [`Backend`] — the pipeline's
-/// backend-selection point. The reduction result is bitwise identical
-/// across native backends; a PJRT backend rounds through f32.
+/// Singular values of an already-banded matrix (stages 2+3 only) on an
+/// explicit [`Backend`] — the pipeline's backend-selection point. The
+/// reduction result is bitwise identical across native backends; a PJRT
+/// backend rounds through f32. For batching, queued execution, and
+/// remote serving, build a [`crate::client::ReductionRequest`] and
+/// submit it through a [`crate::client::Client`] instead.
 pub fn banded_singular_values_with<T: Scalar>(
     backend: &dyn Backend,
     banded: &Banded<T>,
@@ -176,44 +147,10 @@ where
     Ok(bidiagonal_singular_values(&d, &e))
 }
 
-/// Singular values of *many* already-banded problems through one batched
-/// stage-2 reduction.
-///
-/// **Deprecated shim**: delegates to the unified client front door
-/// ([`LocalClient`] in direct mode on the threadpool backend). Unlike the
-/// historical version it borrows the inputs immutably — they are cloned
-/// into the request, **not** reduced in place (the signature changed from
-/// `&mut [BatchInput]` so call sites can see this; `&mut` arguments still
-/// coerce). New code should build the request directly:
-///
-/// ```text
-/// let client = LocalClient::new(params);
-/// let outcome = client.submit_wait(
-///     ReductionRequest::new().problem((a, bw)).problem((b, bw2)))?;
-/// ```
-#[deprecated(
-    since = "0.1.0",
-    note = "submit a client::ReductionRequest with several problems through \
-            client::LocalClient (the unified front door)"
-)]
-pub fn batch_singular_values(
-    inputs: &[BatchInput],
-    params: &TuneParams,
-    cfg: &BatchConfig,
-    threads: usize,
-) -> Result<Vec<Vec<f64>>> {
-    let client = LocalClient::direct(*params, *cfg, BackendKind::Threadpool, threads)?;
-    let mut request = ReductionRequest::new();
-    for input in inputs.iter() {
-        request = request.problem(input.clone());
-    }
-    let outcome = client.submit_wait(request)?;
-    Ok(outcome.problems.into_iter().map(|p| p.sv).collect())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::client::{Client, LocalClient, ReductionRequest};
     use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
     use crate::pipeline::jacobi::jacobi_singular_values;
     use crate::scalar::F16;
@@ -309,10 +246,10 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_delegate_to_the_client_bitwise() {
-        // The shims must keep answering exactly what the direct
-        // explicit-backend path answers while they exist.
+    fn client_front_door_matches_the_direct_path_bitwise() {
+        // The unified client (batched and solo) must answer exactly what
+        // the direct explicit-backend path answers.
+        use crate::config::{BackendKind, BatchConfig};
         let mut rng = Xoshiro256::seed_from_u64(37);
         let params = TuneParams { tpb: 32, tw: 4, max_blocks: 192 };
         let shapes = [(36usize, 5usize), (28, 4), (44, 7)];
@@ -320,19 +257,22 @@ mod tests {
             .iter()
             .map(|&(n, bw)| random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng))
             .collect();
-        let inputs: Vec<BatchInput> = mats
-            .iter()
-            .zip(shapes.iter())
-            .map(|(a, &(_, bw))| BatchInput::from((a.clone(), bw)))
-            .collect();
-        let batched =
-            batch_singular_values(&inputs, &params, &BatchConfig::default(), 2).unwrap();
-        for ((a, &(_, bw)), got) in mats.iter().zip(shapes.iter()).zip(batched.iter()) {
-            let solo = banded_singular_values(a, bw, &params);
+        let client =
+            LocalClient::direct(params, BatchConfig::default(), BackendKind::Sequential, 1)
+                .unwrap();
+        let mut batched = ReductionRequest::new();
+        for (a, &(_, bw)) in mats.iter().zip(shapes.iter()) {
+            batched = batched.problem((a.clone(), bw));
+        }
+        let outcome = client.submit_wait(batched).unwrap();
+        for ((a, &(_, bw)), got) in mats.iter().zip(shapes.iter()).zip(outcome.problems.iter()) {
+            let solo = client
+                .submit_wait(ReductionRequest::new().problem((a.clone(), bw)))
+                .unwrap();
             let direct =
                 banded_singular_values_with(&SequentialBackend::new(), a, bw, &params).unwrap();
-            assert_eq!(got, &solo, "bw={bw}");
-            assert_eq!(&solo, &direct, "bw={bw}");
+            assert_eq!(got.sv, solo.problems[0].sv, "bw={bw}");
+            assert_eq!(solo.problems[0].sv, direct, "bw={bw}");
         }
     }
 

@@ -1,5 +1,7 @@
-//! The dynamic micro-batcher: one dedicated worker thread that coalesces
-//! pending jobs into merged [`LaunchPlan`]s and executes them.
+//! The dynamic micro-batcher: a dedicated worker thread that coalesces
+//! pending jobs into merged [`LaunchPlan`]s and executes them. The
+//! service runs one batcher per shard ([`crate::service::shard`]), each
+//! draining its own queue on its own backend.
 //!
 //! Flush policy (Abdelfattah & Fasi's dynamic-batching argument applied
 //! to the plan IR): once at least one job is pending, the batcher holds
@@ -49,6 +51,11 @@ pub(crate) struct WorkerStats {
     pub capacity_slots: AtomicU64,
     /// Wall time spent executing merged plans (nanoseconds).
     pub busy_nanos: AtomicU64,
+    /// Plan/merge lookups this worker served from the shared cache —
+    /// per-shard attribution the global [`PlanCache`] counters cannot
+    /// give once several shards share one cache.
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
 }
 
 impl WorkerStats {
@@ -115,9 +122,27 @@ fn flush(
             params: cfg.params,
         })
         .collect();
-    let parts: Vec<Arc<LaunchPlan>> = keys.iter().map(|&k| cache.plan_for(k)).collect();
-    let merged =
-        cache.merged_for(&keys, &parts, capacity, cfg.batch.policy, cfg.batch.max_coresident);
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut trace = |hit: bool| if hit { hits += 1 } else { misses += 1 };
+    let parts: Vec<Arc<LaunchPlan>> = keys
+        .iter()
+        .map(|&k| {
+            let (plan, hit) = cache.plan_for_traced(k);
+            trace(hit);
+            plan
+        })
+        .collect();
+    let (merged, merge_hit) = cache.merged_for_traced(
+        &keys,
+        &parts,
+        capacity,
+        cfg.batch.policy,
+        cfg.batch.max_coresident,
+    );
+    trace(merge_hit);
+    stats.cache_hits.fetch_add(hits, Ordering::Relaxed);
+    stats.cache_misses.fetch_add(misses, Ordering::Relaxed);
 
     // Queue waits end here: everything after is execution time.
     let waits: Vec<std::time::Duration> = jobs.iter().map(|job| job.enqueued.elapsed()).collect();

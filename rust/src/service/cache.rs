@@ -160,12 +160,20 @@ impl PlanCache {
     /// identical value `LaunchPlan::for_problem(key.n, key.bw,
     /// &key.params)` produces — cached or not.
     pub fn plan_for(&self, key: PlanKey) -> Arc<LaunchPlan> {
+        self.plan_for_traced(key).0
+    }
+
+    /// Like [`PlanCache::plan_for`], also reporting whether the lookup
+    /// hit (`true`) or lowered fresh (`false`) — callers that attribute
+    /// cache behavior to a shard read this instead of diffing the global
+    /// counters, which other shards mutate concurrently.
+    pub fn plan_for_traced(&self, key: PlanKey) -> (Arc<LaunchPlan>, bool) {
         {
             let mut inner = self.inner.lock().unwrap();
             let tick = inner.tick();
             if let Some(plan) = inner.plans.get(&key, tick) {
                 inner.stats.plan_hits += 1;
-                return plan;
+                return (plan, true);
             }
             inner.stats.plan_misses += 1;
         }
@@ -173,7 +181,7 @@ impl PlanCache {
         let mut inner = self.inner.lock().unwrap();
         let tick = inner.tick();
         inner.plans.insert(key, Arc::clone(&plan), tick);
-        plan
+        (plan, false)
     }
 
     /// The merged shared-launch plan for `parts` (the plans cached under
@@ -187,6 +195,19 @@ impl PlanCache {
         policy: PackingPolicy,
         max_coresident: usize,
     ) -> Arc<LaunchPlan> {
+        self.merged_for_traced(keys, parts, capacity, policy, max_coresident).0
+    }
+
+    /// [`PlanCache::merged_for`] with the same hit/miss trace as
+    /// [`PlanCache::plan_for_traced`].
+    pub fn merged_for_traced(
+        &self,
+        keys: &[PlanKey],
+        parts: &[Arc<LaunchPlan>],
+        capacity: usize,
+        policy: PackingPolicy,
+        max_coresident: usize,
+    ) -> (Arc<LaunchPlan>, bool) {
         debug_assert_eq!(keys.len(), parts.len());
         let key = MergeKey { parts: keys.to_vec(), capacity, policy, max_coresident };
         {
@@ -194,7 +215,7 @@ impl PlanCache {
             let tick = inner.tick();
             if let Some(plan) = inner.merges.get(&key, tick) {
                 inner.stats.merge_hits += 1;
-                return plan;
+                return (plan, true);
             }
             inner.stats.merge_misses += 1;
         }
@@ -203,7 +224,7 @@ impl PlanCache {
         let mut inner = self.inner.lock().unwrap();
         let tick = inner.tick();
         inner.merges.insert(key, Arc::clone(&merged), tick);
-        merged
+        (merged, false)
     }
 
     /// The [`autotune_for`] result for the workload, searched on miss.
@@ -347,6 +368,24 @@ mod tests {
         let after = cache.stats();
         assert_eq!(after.plan_hits - before.plan_hits, 1);
         assert_eq!(after.plan_misses - before.plan_misses, 1);
+    }
+
+    #[test]
+    fn traced_lookups_agree_with_the_global_counters() {
+        let cache = PlanCache::new(8);
+        let (_, hit) = cache.plan_for_traced(key(64, 8, 8));
+        assert!(!hit);
+        let (_, hit) = cache.plan_for_traced(key(64, 8, 8));
+        assert!(hit);
+        let keys = [key(64, 8, 8), key(64, 8, 8)];
+        let parts: Vec<Arc<LaunchPlan>> = keys.iter().map(|&k| cache.plan_for(k)).collect();
+        let (_, hit) = cache.merged_for_traced(&keys, &parts, 16, PackingPolicy::RoundRobin, 4);
+        assert!(!hit);
+        let (_, hit) = cache.merged_for_traced(&keys, &parts, 16, PackingPolicy::RoundRobin, 4);
+        assert!(hit);
+        let s = cache.stats();
+        assert_eq!((s.plan_hits, s.plan_misses), (3, 1));
+        assert_eq!((s.merge_hits, s.merge_misses), (1, 1));
     }
 
     #[test]

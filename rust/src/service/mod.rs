@@ -11,20 +11,27 @@
 //!
 //! ```text
 //!   submit ──▶ admission (priced by simulate_plan_for     [queue.rs]
-//!   (any          under the backend's BackendCostModel)
-//!   thread)          │ admit / reject
+//!   (any          under the backend's BackendCostModel;
+//!   thread)        per-client quota via QuotaTracker)
+//!                    │ admit / reject
 //!                    ▼
-//!              JobQueue — (priority, admission seq) order
-//!                    │ flush: size (max_coresident) or
-//!                    │        window (BSVD_SERVICE_WINDOW_US)
-//!                    ▼
-//!              micro-batcher worker                       [batcher.rs]
-//!                cached solo plans ── merge_refs ──▶ merged LaunchPlan
-//!                    │                    ▲
-//!                    │          PlanCache (LRU: plans,    [cache.rs]
-//!                    │          merge skeletons, autotune)
-//!                    ▼
-//!              Box<dyn Backend> ──▶ per-job σ + LaunchMetrics
+//!              Router — least-loaded or size-class        [shard.rs]
+//!                    │ picks one of `workers` shards
+//!        ┌───────────┴───────────┐
+//!        ▼                       ▼
+//!   shard 0                 shard N-1
+//!   JobQueue — (priority,   JobQueue — strict order
+//!     admission seq) order    *within each shard*
+//!        │ flush: size (max_coresident) or
+//!        │        window (BSVD_SERVICE_WINDOW_US)
+//!        ▼                       ▼
+//!   micro-batcher worker    micro-batcher worker          [batcher.rs]
+//!     cached solo plans ── merge_refs ──▶ merged LaunchPlan
+//!        │                  ▲
+//!        │     shared PlanCache (LRU: plans,              [cache.rs]
+//!        │     merge skeletons, autotune)
+//!        ▼                       ▼
+//!   Box<dyn Backend>        Box<dyn Backend> ──▶ per-job σ + LaunchMetrics
 //! ```
 //!
 //! Everything upstream of the backend is *plan algebra*: lowering and
@@ -42,23 +49,25 @@ pub mod batcher;
 pub mod cache;
 pub mod queue;
 pub mod server;
+pub mod shard;
 
 pub use cache::{CacheStats, PlanCache, PlanKey};
 pub use queue::{Job, JobOutcome, JobResult, JobTicket};
 pub use server::Server;
+pub use shard::ShardStats;
 
-use crate::backend::{cost_model_for, for_kind};
+use crate::backend::cost_model_for;
 use crate::batch::BatchInput;
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
 use crate::simulator::hw::GpuArch;
 use crate::simulator::model::BackendCostModel;
 use crate::simulator::{arch_by_name, simulate_plan_for};
-use batcher::WorkerStats;
-use queue::JobQueue;
+use queue::QuotaTracker;
+use shard::{Router, Shard};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Snapshot of the service's operational state (the `stats` verb).
@@ -93,13 +102,18 @@ pub struct ServiceStats {
     pub uptime: Duration,
     /// Completed jobs per second of service uptime.
     pub throughput_jobs_per_s: f64,
+    /// Per-shard breakdowns, one entry per batcher worker. The aggregate
+    /// fields above are the sums (plus the shared-cache view), so
+    /// per-shard counters always reconcile with them exactly.
+    pub shards: Vec<ShardStats>,
 }
 
-/// The in-process service handle: owns the queue, the plan cache, and
-/// the batcher worker thread. Shareable across submitter threads (the
-/// TCP server holds it in an `Arc`); submission is non-blocking apart
-/// from admission pricing, and results come back per job through a
-/// [`JobTicket`].
+/// The in-process service handle: owns the batcher shards (each a
+/// queue + worker thread + backend), the router that spreads jobs over
+/// them, and the shared plan cache. Shareable across submitter threads
+/// (the TCP server holds it in an `Arc`); submission is non-blocking
+/// apart from admission pricing, and results come back per job through
+/// a [`JobTicket`].
 ///
 /// # Examples
 ///
@@ -117,10 +131,9 @@ pub struct Service {
     cfg: ServiceConfig,
     arch: GpuArch,
     cost_model: BackendCostModel,
-    queue: Arc<JobQueue>,
+    shards: Vec<Shard>,
+    router: Router,
     cache: PlanCache,
-    worker_stats: Arc<WorkerStats>,
-    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     next_id: AtomicU64,
     submitted: AtomicU64,
     rejected: AtomicU64,
@@ -128,40 +141,28 @@ pub struct Service {
 }
 
 impl Service {
-    /// Validate `cfg`, start the batcher worker, and open the queue. The
-    /// backend is constructed *on* the worker thread (it never leaves
-    /// it); admission pricing uses the kind's cost model
-    /// ([`cost_model_for`]) on the submitting side.
+    /// Validate `cfg`, start `cfg.workers` batcher shards, and open
+    /// their queues. Each shard's backend is constructed *on* its worker
+    /// thread (it never leaves it); admission pricing uses the kind's
+    /// cost model ([`cost_model_for`]) on the submitting side.
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
         cfg.validate()?;
         let arch = arch_by_name(cfg.arch)
             .ok_or_else(|| Error::Config(format!("unknown service arch {:?}", cfg.arch)))?;
         let cost_model = cost_model_for(cfg.backend)?;
-        let queue = Arc::new(JobQueue::new(cfg.queue_cap, cfg.backlog_cap_s));
         let cache = PlanCache::new(cfg.cache_cap);
-        let worker_stats = Arc::new(WorkerStats::default());
-        let worker = {
-            let queue = Arc::clone(&queue);
-            let cache = cache.clone();
-            let stats = Arc::clone(&worker_stats);
-            let cfg = cfg.clone();
-            std::thread::Builder::new()
-                .name("bsvd-service-batcher".into())
-                .spawn(move || {
-                    let backend = for_kind(cfg.backend, cfg.threads)
-                        .expect("backend kind validated by cost_model_for at start");
-                    batcher::run(queue, cfg, cache, backend, stats);
-                })
-                .map_err(Error::Io)?
-        };
+        let quota = Arc::new(QuotaTracker::new(cfg.quota_pending_cap));
+        let shards = (0..cfg.workers)
+            .map(|i| Shard::start(i, &cfg, cache.clone(), Arc::clone(&quota)))
+            .collect::<Result<Vec<Shard>>>()?;
+        let router = Router::new(cfg.routing);
         Ok(Self {
             cfg,
             arch,
             cost_model,
-            queue,
+            shards,
+            router,
             cache,
-            worker_stats,
-            worker: Mutex::new(Some(worker)),
             next_id: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -169,22 +170,41 @@ impl Service {
         })
     }
 
-    /// Submit one job. Validates the storage, prices the job on the
-    /// service cost model, and runs admission; on success the returned
-    /// ticket resolves to the job's [`JobResult`].
+    /// Submit one anonymous job — [`Service::submit_as`] with no
+    /// identity (never counted against a quota).
     pub fn submit(
         &self,
         input: BatchInput,
         priority: u8,
         deadline: Option<Duration>,
     ) -> Result<JobTicket> {
+        self.submit_as(None, None, input, priority, deadline)
+    }
+
+    /// Submit one job under a client identity. Validates the storage,
+    /// prices the job on the service cost model, routes it to a shard,
+    /// and runs admission (including the per-client pending quota, keyed
+    /// by `quota_class` falling back to `client_id`); on success the
+    /// returned ticket resolves to the job's [`JobResult`].
+    pub fn submit_as(
+        &self,
+        client_id: Option<&str>,
+        quota_class: Option<&str>,
+        input: BatchInput,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> Result<JobTicket> {
+        let quota_key = quota_class.or(client_id);
         let admit = || -> Result<JobTicket> {
             input.validate(&self.cfg.params)?;
             let est_seconds = self.price(&input);
+            let shard = &self.shards[self.router.pick(&self.shards, input.n())];
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             let (tx, rx) = mpsc::channel();
             let deadline = deadline.map(|d| Instant::now() + d);
-            self.queue.submit(id, input, priority, deadline, est_seconds, tx)?;
+            shard
+                .queue
+                .submit_for(quota_key, id, input, priority, deadline, est_seconds, tx)?;
             Ok(JobTicket { id, rx })
         };
         match admit() {
@@ -211,6 +231,20 @@ impl Service {
         self.submit(input, priority, deadline)?.wait().map_err(Error::Job)
     }
 
+    /// [`Service::submit_as`] and block for the outcome.
+    pub fn submit_wait_as(
+        &self,
+        client_id: Option<&str>,
+        quota_class: Option<&str>,
+        input: BatchInput,
+        priority: u8,
+        deadline: Option<Duration>,
+    ) -> Result<JobResult> {
+        self.submit_as(client_id, quota_class, input, priority, deadline)?
+            .wait()
+            .map_err(Error::Job)
+    }
+
     /// Modeled solo cost (seconds) of `input` on the service backend —
     /// the admission price. Uses the cached solo plan, so pricing a
     /// repeated shape is a cache hit, not a lowering.
@@ -226,32 +260,42 @@ impl Service {
             .seconds
     }
 
-    /// Operational snapshot (queue, batching, cache, throughput).
+    /// Operational snapshot (queue, batching, cache, throughput) with a
+    /// per-shard breakdown. Aggregate counters are the sums of the
+    /// per-shard snapshots, so the two views reconcile by construction.
     pub fn stats(&self) -> ServiceStats {
-        let w = &self.worker_stats;
-        let completed = w.jobs_completed.load(Ordering::Relaxed);
-        let batches = w.batches.load(Ordering::Relaxed);
         let uptime = self.started.elapsed();
+        let shards: Vec<ShardStats> =
+            self.shards.iter().map(|s| s.snapshot(uptime)).collect();
+        let completed: u64 = shards.iter().map(|s| s.jobs_completed).sum();
+        let batches: u64 = shards.iter().map(|s| s.batches).sum();
+        let tasks: u64 = shards.iter().map(|s| s.tasks).sum();
+        let capacity_slots: u64 = self.shards.iter().map(Shard::capacity_slots).sum();
         ServiceStats {
-            queue_depth: self.queue.depth(),
-            backlog_seconds: self.queue.backlog_seconds(),
+            queue_depth: shards.iter().map(|s| s.queue_depth).sum(),
+            backlog_seconds: shards.iter().map(|s| s.backlog_seconds).sum(),
             jobs_submitted: self.submitted.load(Ordering::Relaxed),
             jobs_rejected: self.rejected.load(Ordering::Relaxed),
             jobs_completed: completed,
-            jobs_failed: w.jobs_failed.load(Ordering::Relaxed) + self.queue.expired_jobs(),
+            jobs_failed: shards.iter().map(|s| s.jobs_failed).sum(),
             batches,
-            launches: w.launches.load(Ordering::Relaxed),
-            tasks: w.tasks.load(Ordering::Relaxed),
-            occupancy: w.occupancy(),
+            launches: shards.iter().map(|s| s.launches).sum(),
+            tasks,
+            occupancy: if capacity_slots == 0 {
+                0.0
+            } else {
+                tasks as f64 / capacity_slots as f64
+            },
             avg_batch_jobs: if batches == 0 { 0.0 } else { completed as f64 / batches as f64 },
             cache: self.cache.stats(),
-            busy_seconds: w.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            busy_seconds: shards.iter().map(|s| s.busy_seconds).sum(),
             uptime,
             throughput_jobs_per_s: completed as f64 / uptime.as_secs_f64().max(1e-9),
+            shards,
         }
     }
 
-    /// The plan/autotune cache (shared with the worker).
+    /// The plan/autotune cache (shared by every shard).
     pub fn plan_cache(&self) -> &PlanCache {
         &self.cache
     }
@@ -260,13 +304,15 @@ impl Service {
         &self.cfg
     }
 
-    /// Close the queue and wait for the worker to drain. Idempotent;
-    /// also invoked by `Drop`, so an explicit call is only needed to
-    /// observe the joined worker before the handle goes away.
+    /// Close every shard's queue, then wait for the workers to drain.
+    /// Idempotent; also invoked by `Drop`, so an explicit call is only
+    /// needed to observe the joined workers before the handle goes away.
     pub fn shutdown(&self) {
-        self.queue.close();
-        if let Some(handle) = self.worker.lock().unwrap().take() {
-            let _ = handle.join();
+        for shard in &self.shards {
+            shard.close();
+        }
+        for shard in &self.shards {
+            shard.join();
         }
     }
 }
@@ -297,6 +343,9 @@ mod tests {
             backlog_cap_s: 1e6,
             cache_cap: 32,
             arch: "H100",
+            workers: 1,
+            routing: crate::config::ShardRouting::LeastLoaded,
+            quota_pending_cap: 0,
         }
     }
 
@@ -395,5 +444,93 @@ mod tests {
         assert!(Service::start(bad_arch).is_err());
         let fused = ServiceConfig { backend: BackendKind::PjrtFused, ..test_cfg() };
         assert!(Service::start(fused).is_err());
+    }
+
+    #[test]
+    fn sharded_service_drains_mixed_priorities_and_stats_reconcile() {
+        // Two shards, mixed priorities, results bitwise-stable: the
+        // router only decides placement, never numerics, and the
+        // per-shard breakdown sums back to the aggregate exactly.
+        let cfg = ServiceConfig { workers: 2, ..test_cfg() };
+        let service = Service::start(cfg.clone()).unwrap();
+        let direct = SequentialBackend::new();
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let mut tickets = Vec::new();
+        let mut expected = Vec::new();
+        for i in 0..10u8 {
+            let (n, bw) = [(48usize, 6usize), (36, 5), (28, 3)][i as usize % 3];
+            let a = random_banded::<f64>(n, bw, cfg.params.effective_tw(bw), &mut rng);
+            expected.push(
+                banded_singular_values_with(&direct, &a, bw, &cfg.params).unwrap(),
+            );
+            tickets.push(service.submit(BatchInput::from((a, bw)), i % 3, None).unwrap());
+        }
+        for (ticket, want) in tickets.into_iter().zip(expected) {
+            assert_eq!(ticket.wait().unwrap().sv, want);
+        }
+        service.shutdown();
+        let stats = service.stats();
+        assert_eq!(stats.shards.len(), 2);
+        assert_eq!(stats.jobs_completed, 10);
+        assert_eq!(stats.jobs_failed, 0);
+        assert_eq!(stats.queue_depth, 0);
+        let by_shard: u64 = stats.shards.iter().map(|s| s.jobs_completed).sum();
+        assert_eq!(by_shard, stats.jobs_completed, "per-shard completions reconcile");
+        assert_eq!(
+            stats.shards.iter().map(|s| s.batches).sum::<u64>(),
+            stats.batches,
+            "per-shard batches reconcile"
+        );
+        assert_eq!(
+            stats.shards.iter().map(|s| s.launches).sum::<u64>(),
+            stats.launches,
+            "per-shard launches reconcile"
+        );
+        assert_eq!(
+            stats.shards.iter().map(|s| s.tasks).sum::<u64>(),
+            stats.tasks,
+            "per-shard tasks reconcile"
+        );
+        // The shared cache saw every shard's lookups.
+        let lookups: u64 =
+            stats.shards.iter().map(|s| s.cache_hits + s.cache_misses).sum();
+        assert_eq!(lookups, stats.cache.hits() + stats.cache.misses());
+    }
+
+    #[test]
+    fn quota_cap_limits_one_client_without_starving_others() {
+        // A huge window keeps submissions queued, so the second job of
+        // the capped client is still pending when the third arrives.
+        let cfg = ServiceConfig {
+            window: Duration::from_secs(30),
+            quota_pending_cap: 2,
+            ..test_cfg()
+        };
+        let service = Service::start(cfg).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let mut input = || BatchInput::from((random_banded::<f64>(24, 3, 2, &mut rng), 3));
+        let t1 = service.submit_as(Some("hog"), None, input(), 0, None).unwrap();
+        let t2 = service.submit_as(Some("hog"), None, input(), 0, None).unwrap();
+        let err = service.submit_as(Some("hog"), None, input(), 0, None).unwrap_err();
+        assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
+        assert!(err.is_retryable());
+        // quota_class overrides client_id as the key: same budget.
+        let err =
+            service.submit_as(Some("other"), Some("hog"), input(), 0, None).unwrap_err();
+        assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
+        // Other clients and anonymous submitters are unaffected.
+        let t3 = service.submit_as(Some("guest"), None, input(), 0, None).unwrap();
+        let t4 = service.submit(input(), 0, None).unwrap();
+        for t in [t1, t2, t3, t4] {
+            t.wait().unwrap();
+        }
+        // Budget freed once the jobs drained; shutdown flushes the last
+        // job immediately instead of holding the 30 s window open.
+        let t5 = service.submit_as(Some("hog"), None, input(), 0, None).unwrap();
+        service.shutdown();
+        t5.wait().unwrap();
+        let stats = service.stats();
+        assert_eq!(stats.jobs_rejected, 2);
+        assert_eq!(stats.jobs_completed, 5);
     }
 }

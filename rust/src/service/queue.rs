@@ -21,9 +21,9 @@
 use crate::batch::BatchInput;
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, JobError, Result};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One admitted job, queued for the batcher.
@@ -44,8 +44,56 @@ pub struct Job {
     /// price, released when the job leaves the queue.
     pub est_seconds: f64,
     pub enqueued: Instant,
+    /// Quota key the job was admitted under (the request's
+    /// `quota_class`, falling back to `client_id`); its pending count is
+    /// released when the job leaves the queue. `None` = anonymous.
+    pub client: Option<String>,
     /// Where the outcome is delivered.
     pub tx: Sender<JobOutcome>,
+}
+
+/// Pending-job counts per quota key, shared by every shard's queue so a
+/// client's cap applies service-wide. A zero cap disables enforcement
+/// (nothing is counted); anonymous jobs always pass.
+pub(crate) struct QuotaTracker {
+    cap: usize,
+    pending: Mutex<HashMap<String, usize>>,
+}
+
+impl QuotaTracker {
+    pub(crate) fn new(cap: usize) -> Self {
+        Self { cap, pending: Mutex::new(HashMap::new()) }
+    }
+
+    /// Count a job against `client`'s pending budget, or reject with the
+    /// retryable [`JobError::QuotaExceeded`] when the budget is spent.
+    fn admit(&self, client: Option<&str>) -> std::result::Result<(), JobError> {
+        let (Some(client), true) = (client, self.cap > 0) else { return Ok(()) };
+        let mut pending = self.pending.lock().unwrap();
+        let count = pending.entry(client.to_string()).or_insert(0);
+        if *count >= self.cap {
+            return Err(JobError::QuotaExceeded {
+                reason: format!(
+                    "client {client:?} has {count} jobs pending (cap {})",
+                    self.cap
+                ),
+            });
+        }
+        *count += 1;
+        Ok(())
+    }
+
+    /// Return a popped job's slot to its quota key.
+    fn release(&self, client: Option<&str>) {
+        let (Some(client), true) = (client, self.cap > 0) else { return };
+        let mut pending = self.pending.lock().unwrap();
+        if let Some(count) = pending.get_mut(client) {
+            *count = count.saturating_sub(1);
+            if *count == 0 {
+                pending.remove(client);
+            }
+        }
+    }
 }
 
 /// What a completed job reports back.
@@ -125,10 +173,21 @@ pub struct JobQueue {
     arrived: Condvar,
     queue_cap: usize,
     backlog_cap_s: f64,
+    /// Per-client pending counts, shared across shards (quota caps are
+    /// service-wide, not per queue).
+    quota: Arc<QuotaTracker>,
 }
 
 impl JobQueue {
     pub fn new(queue_cap: usize, backlog_cap_s: f64) -> Self {
+        Self::with_quota(queue_cap, backlog_cap_s, Arc::new(QuotaTracker::new(0)))
+    }
+
+    pub(crate) fn with_quota(
+        queue_cap: usize,
+        backlog_cap_s: f64,
+        quota: Arc<QuotaTracker>,
+    ) -> Self {
         Self {
             state: Mutex::new(QueueState {
                 classes: BTreeMap::new(),
@@ -141,14 +200,30 @@ impl JobQueue {
             arrived: Condvar::new(),
             queue_cap: queue_cap.max(1),
             backlog_cap_s,
+            quota,
         }
     }
 
-    /// Admit a job or reject it. Rejection reasons: queue closed, depth at
-    /// `queue_cap`, or (for a non-empty queue) priced backlog past
-    /// `backlog_cap_s`.
+    /// Admit an anonymous job or reject it — [`JobQueue::submit_for`]
+    /// with no quota key.
     pub fn submit(
         &self,
+        id: u64,
+        input: BatchInput,
+        priority: u8,
+        deadline: Option<Instant>,
+        est_seconds: f64,
+        tx: Sender<JobOutcome>,
+    ) -> Result<()> {
+        self.submit_for(None, id, input, priority, deadline, est_seconds, tx)
+    }
+
+    /// Admit a job or reject it. Rejection reasons: queue closed, depth at
+    /// `queue_cap`, (for a non-empty queue) priced backlog past
+    /// `backlog_cap_s`, or `client`'s pending-job quota spent.
+    pub fn submit_for(
+        &self,
+        client: Option<&str>,
         id: u64,
         input: BatchInput,
         priority: u8,
@@ -182,10 +257,22 @@ impl JobQueue {
                 ),
             }));
         }
+        // Quota is checked last, so a quota rejection always means "your
+        // jobs are the bottleneck", never "the service is loaded".
+        self.quota.admit(client).map_err(Error::Job)?;
         let seq = state.next_seq;
         state.next_seq += 1;
-        let job =
-            Job { id, seq, input, priority, deadline, est_seconds, enqueued: Instant::now(), tx };
+        let job = Job {
+            id,
+            seq,
+            input,
+            priority,
+            deadline,
+            est_seconds,
+            enqueued: Instant::now(),
+            client: client.map(String::from),
+            tx,
+        };
         state.classes.entry(priority).or_default().push_back(job);
         state.depth += 1;
         state.backlog_s += est_seconds;
@@ -259,6 +346,9 @@ impl JobQueue {
         let mut state = self.state.lock().unwrap();
         while out.len() < max {
             let Some(job) = state.pop_front() else { break };
+            // A popped job has left the queue whether it executes or
+            // expires — its quota slot frees either way.
+            self.quota.release(job.client.as_deref());
             if job.deadline.is_some_and(|d| d < now) {
                 state.expired += 1;
                 let _ = job.tx.send(Err(JobError::DeadlineExpired {
@@ -402,6 +492,60 @@ mod tests {
         let err = q.submit(0, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap_err();
         assert_eq!(err.as_job().unwrap().kind(), "unavailable");
         assert!(!err.is_retryable(), "shutdown is terminal, not back-pressure");
+    }
+
+    #[test]
+    fn quota_cap_rejects_the_hog_but_not_other_clients() {
+        let quota = Arc::new(QuotaTracker::new(2));
+        let q = JobQueue::with_quota(16, 1e9, quota);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut submit_as = |client: Option<&str>, id: u64| {
+            let (tx, _rx) = mpsc::channel::<JobOutcome>();
+            q.submit_for(client, id, input(24, 3, &mut rng), 0, None, 0.0, tx)
+        };
+        submit_as(Some("tenant-a"), 0).unwrap();
+        submit_as(Some("tenant-a"), 1).unwrap();
+        let err = submit_as(Some("tenant-a"), 2).unwrap_err();
+        assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
+        assert!(err.is_retryable(), "quota rejection must be retryable back-pressure");
+        // Other clients and anonymous jobs are unaffected.
+        submit_as(Some("tenant-b"), 3).unwrap();
+        submit_as(None, 4).unwrap();
+        // Draining releases the budget.
+        q.pop_batch(16);
+        submit_as(Some("tenant-a"), 5).unwrap();
+    }
+
+    #[test]
+    fn quota_slots_are_shared_across_queues_and_freed_on_expiry() {
+        let quota = Arc::new(QuotaTracker::new(1));
+        let qa = JobQueue::with_quota(16, 1e9, Arc::clone(&quota));
+        let qb = JobQueue::with_quota(16, 1e9, Arc::clone(&quota));
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let past = Instant::now() - Duration::from_millis(10);
+        let (tx, _rx) = mpsc::channel::<JobOutcome>();
+        qa.submit_for(Some("c"), 0, input(24, 3, &mut rng), 0, Some(past), 0.0, tx).unwrap();
+        // The cap is service-wide: the second queue sees the same budget.
+        let (tx, _rx) = mpsc::channel::<JobOutcome>();
+        let err =
+            qb.submit_for(Some("c"), 1, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap_err();
+        assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
+        // The job expires at flush — the slot frees anyway.
+        assert!(qa.pop_batch(16).is_empty());
+        assert_eq!(qa.expired_jobs(), 1);
+        let (tx, _rx) = mpsc::channel::<JobOutcome>();
+        qb.submit_for(Some("c"), 2, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap();
+    }
+
+    #[test]
+    fn zero_cap_disables_quota_enforcement() {
+        let q = JobQueue::new(16, 1e9);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for id in 0..8u64 {
+            let (tx, _rx) = mpsc::channel::<JobOutcome>();
+            q.submit_for(Some("free"), id, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap();
+        }
+        assert_eq!(q.depth(), 8);
     }
 
     #[test]

@@ -5,10 +5,15 @@
 //!
 //! | verb | request fields | response |
 //! | --- | --- | --- |
-//! | `submit` | `n`, `bw`, `band` (row-major in-band values, see [`wire::band_values`]), optional `precision` (`fp16\|fp32\|fp64`, default `fp64`), `priority` (default 0), `deadline_ms` | `id`, `sv` (descending, f64), `metrics` (launches/tasks/max_parallel/unrolled_launches/bytes), `batch_jobs`, `queue_us` |
-//! | `stats` | — | queue depth/backlog, job counters, occupancy, mean batch size, cache counters + hit rate, throughput, knobs |
-//! | `ping` | — | `{"ok":true,"verb":"ping"}` |
+//! | `submit` | `n`, `bw`, `band` (row-major in-band values, see [`wire::band_values`]), optional `precision` (`fp16\|fp32\|fp64`, default `fp64`), `priority` (default 0), `deadline_ms`, `client_id`/`quota_class` (identity for quota accounting), `proto` | `id`, `sv` (descending, f64), `metrics` (launches/tasks/max_parallel/unrolled_launches/bytes), `batch_jobs`, `queue_us` |
+//! | `stats` | — | queue depth/backlog, job counters, occupancy, mean batch size, cache counters + hit rate, throughput, knobs, per-shard breakdowns |
+//! | `ping` | — | `{"ok":true,"verb":"ping","proto":N}` |
 //! | `shutdown` | — | acknowledges, then stops accepting and drains the service |
+//!
+//! Versioning: requests *may* carry `proto`
+//! ([`wire::PROTO_VERSION`]). Absent means the pre-versioning wire and
+//! is accepted; present-but-mismatched is rejected with a protocol
+//! error. Clients handshake against the `ping` response's `proto`.
 //!
 //! Every response carries `"ok"`. Job-level failures additionally carry
 //! the typed taxonomy (`kind` + `retryable` — see
@@ -49,6 +54,28 @@ fn stats_json(service: &Service) -> Json {
         .set("tune_hits", Json::Int(s.cache.tune_hits as i64))
         .set("tune_misses", Json::Int(s.cache.tune_misses as i64))
         .set("hit_rate", s.cache.hit_rate());
+    let shards = Json::Arr(
+        s.shards
+            .iter()
+            .map(|shard| {
+                Json::obj()
+                    .set("shard", shard.shard)
+                    .set("queue_depth", shard.queue_depth)
+                    .set("backlog_seconds", shard.backlog_seconds)
+                    .set("jobs_completed", Json::Int(shard.jobs_completed as i64))
+                    .set("jobs_failed", Json::Int(shard.jobs_failed as i64))
+                    .set("batches", Json::Int(shard.batches as i64))
+                    .set("launches", Json::Int(shard.launches as i64))
+                    .set("tasks", Json::Int(shard.tasks as i64))
+                    .set("occupancy", shard.occupancy)
+                    .set("busy_seconds", shard.busy_seconds)
+                    .set("busy_fraction", shard.busy_fraction)
+                    .set("cache_hits", Json::Int(shard.cache_hits as i64))
+                    .set("cache_misses", Json::Int(shard.cache_misses as i64))
+                    .set("cache_hit_rate", shard.cache_hit_rate())
+            })
+            .collect(),
+    );
     let stats = Json::obj()
         .set("queue_depth", s.queue_depth)
         .set("backlog_seconds", s.backlog_seconds)
@@ -65,11 +92,18 @@ fn stats_json(service: &Service) -> Json {
         .set("uptime_s", s.uptime.as_secs_f64())
         .set("throughput_jobs_per_s", s.throughput_jobs_per_s)
         .set("cache", cache)
+        .set("shards", shards)
         .set("backend", cfg.backend.name())
+        .set("workers", cfg.workers)
+        .set("routing", cfg.routing.name())
         .set("max_coresident", cfg.batch.max_coresident)
         .set("window_us", Json::Int(cfg.window.as_micros() as i64))
         .set("capacity", cfg.params.capacity());
-    Json::obj().set("ok", true).set("verb", "stats").set("stats", stats)
+    Json::obj()
+        .set("ok", true)
+        .set("verb", "stats")
+        .set("proto", wire::PROTO_VERSION as usize)
+        .set("stats", stats)
 }
 
 /// Handle one request line. Returns the response and whether the server
@@ -79,8 +113,30 @@ fn respond(service: &Service, line: &str) -> (Json, bool) {
         Ok(v) => v,
         Err(e) => return (wire::error_json(format!("bad request: {e}")), false),
     };
+    // Version gate: an absent `proto` is the pre-versioning wire and is
+    // accepted; a present-but-different one is a client this server does
+    // not speak to (see the compatibility rule in `docs/client.md`).
+    if let Some(proto) = request.get("proto") {
+        match proto.as_usize() {
+            Some(v) if v == wire::PROTO_VERSION as usize => {}
+            _ => {
+                let msg = format!(
+                    "protocol version mismatch: request carries proto {}, server speaks {}",
+                    proto.render(),
+                    wire::PROTO_VERSION
+                );
+                return (wire::error_json(msg), false);
+            }
+        }
+    }
     match request.get("verb").and_then(Json::as_str) {
-        Some("ping") => (Json::obj().set("ok", true).set("verb", "ping"), false),
+        Some("ping") => (
+            Json::obj()
+                .set("ok", true)
+                .set("verb", "ping")
+                .set("proto", wire::PROTO_VERSION as usize),
+            false,
+        ),
         Some("stats") => (stats_json(service), false),
         Some("shutdown") => (Json::obj().set("ok", true).set("verb", "shutdown"), true),
         Some("submit") => (handle_submit(service, &request), false),
@@ -121,6 +177,23 @@ fn handle_submit(service: &Service, request: &Json) -> Json {
             None => return wire::error_json("deadline_ms must be a non-negative integer"),
         },
     };
+    // Identity rides the request for quota accounting; same
+    // absent-or-valid rule as the fields above.
+    let identity = |key: &str| match request.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_str() {
+            Some(s) => Ok(Some(s.to_string())),
+            None => Err(wire::error_json(format!("{key} must be a string"))),
+        },
+    };
+    let client_id = match identity("client_id") {
+        Ok(v) => v,
+        Err(e) => return e,
+    };
+    let quota_class = match identity("quota_class") {
+        Ok(v) => v,
+        Err(e) => return e,
+    };
     let Some(band) = request.get("band").and_then(Json::as_array) else {
         return wire::error_json("submit needs a \"band\" array");
     };
@@ -136,7 +209,13 @@ fn handle_submit(service: &Service, request: &Json) -> Json {
         Ok(input) => input,
         Err(e) => return error_response(&e),
     };
-    match service.submit_wait(input, priority, deadline) {
+    match service.submit_wait_as(
+        client_id.as_deref(),
+        quota_class.as_deref(),
+        input,
+        priority,
+        deadline,
+    ) {
         Ok(result) => wire::result_json(&result),
         Err(e) => error_response(&e),
     }
@@ -284,7 +363,7 @@ mod tests {
     use super::*;
     use crate::backend::SequentialBackend;
     use crate::client::wire::submit_request;
-    use crate::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
+    use crate::config::{BackendKind, BatchConfig, PackingPolicy, ShardRouting, TuneParams};
     use crate::generate::random_banded;
     use crate::pipeline::banded_singular_values_with;
     use crate::util::rng::Xoshiro256;
@@ -300,6 +379,9 @@ mod tests {
             backlog_cap_s: 1e6,
             cache_cap: 16,
             arch: "H100",
+            workers: 1,
+            routing: ShardRouting::LeastLoaded,
+            quota_pending_cap: 0,
         }
     }
 
@@ -330,6 +412,66 @@ mod tests {
         assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
         let (err, _) = respond(&service, "{\"n\":4}");
         assert!(err.get("error").unwrap().as_str().unwrap().contains("verb"));
+    }
+
+    #[test]
+    fn ping_carries_the_protocol_version() {
+        let service = Service::start(cfg()).unwrap();
+        let (pong, _) = respond(&service, "{\"verb\":\"ping\"}");
+        assert_eq!(
+            pong.get("proto").and_then(Json::as_usize),
+            Some(wire::PROTO_VERSION as usize),
+            "{}",
+            pong.render()
+        );
+    }
+
+    #[test]
+    fn mismatched_proto_is_rejected_but_absent_proto_is_legacy() {
+        let service = Service::start(cfg()).unwrap();
+        // Future (or garbage) versions are refused outright...
+        for bad in ["{\"verb\":\"ping\",\"proto\":99}", "{\"verb\":\"ping\",\"proto\":\"v2\"}"] {
+            let (r, stop) = respond(&service, bad);
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+            assert!(r.get("error").unwrap().as_str().unwrap().contains("protocol version"));
+            assert!(!stop);
+        }
+        // ...the matching version and the pre-versioning wire both work.
+        for good in [
+            format!("{{\"verb\":\"ping\",\"proto\":{}}}", wire::PROTO_VERSION),
+            "{\"verb\":\"ping\"}".to_string(),
+        ] {
+            let (r, _) = respond(&service, &good);
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{good}");
+        }
+    }
+
+    #[test]
+    fn stats_reports_per_shard_breakdowns() {
+        let service = Service::start(ServiceConfig { workers: 2, ..cfg() }).unwrap();
+        let (response, _) = respond(&service, "{\"verb\":\"stats\"}");
+        let stats = response.get("stats").unwrap();
+        assert_eq!(stats.get("workers").and_then(Json::as_usize), Some(2));
+        assert_eq!(stats.get("routing").and_then(Json::as_str), Some("least-loaded"));
+        let shards = stats.get("shards").and_then(Json::as_array).unwrap();
+        assert_eq!(shards.len(), 2);
+        for (i, shard) in shards.iter().enumerate() {
+            assert_eq!(shard.get("shard").and_then(Json::as_usize), Some(i));
+            assert_eq!(shard.get("jobs_completed").and_then(|v| v.as_i64()), Some(0));
+        }
+    }
+
+    #[test]
+    fn submit_verb_rejects_malformed_identity_fields() {
+        let service = Service::start(cfg()).unwrap();
+        for bad in [
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"client_id\":7}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"quota_class\":[]}",
+        ] {
+            let (r, _) = respond(&service, bad);
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+            assert!(r.get("error").unwrap().as_str().unwrap().contains("must be a string"));
+        }
     }
 
     #[test]

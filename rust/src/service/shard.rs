@@ -1,0 +1,281 @@
+//! One batcher shard — its own admission queue, its own backend
+//! executor, its own worker thread — plus the [`Router`] that spreads
+//! admitted jobs over the shards.
+//!
+//! The paper's scaling argument (memory-bound bulge-chasing wants work
+//! spread over many parallel compute resources with careful placement)
+//! applies to the serving tier too: one batcher thread on one backend is
+//! the throughput ceiling no matter how large the machine. A sharded
+//! [`crate::service::Service`] runs `workers` independent batcher loops,
+//! each owning a `Box<dyn Backend>` built on its own thread (PJRT
+//! executors never cross threads), all sharing one
+//! [`PlanCache`] — lowering and merging stay amortized service-wide
+//! while execution scales out.
+//!
+//! Each shard keeps its own [`crate::service::queue::JobQueue`], so the
+//! strict `(priority, admission seq)` drain order holds *within a
+//! shard*; the router decides only which shard a job lands on
+//! ([`crate::config::ShardRouting`]). Admission caps (`queue_cap`,
+//! `backlog_cap_s`) apply per shard; client quota
+//! ([`crate::service::queue::QuotaTracker`]) is shared, so a client's
+//! pending cap is service-wide.
+
+use crate::backend::for_kind;
+use crate::config::{ServiceConfig, ShardRouting};
+use crate::error::{Error, Result};
+use crate::service::batcher::{self, WorkerStats};
+use crate::service::cache::PlanCache;
+use crate::service::queue::{JobQueue, QuotaTracker};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Operational snapshot of one batcher shard — the per-shard breakdown
+/// riding [`crate::service::ServiceStats::shards`]. Summing the
+/// per-shard counters reproduces the aggregate view exactly (the
+/// aggregate *is* the sum; `rust/src/service/mod.rs` tests lock the
+/// reconciliation in).
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    /// Shard index — also the suffix of its worker thread's name
+    /// (`bsvd-service-batcher-{shard}`).
+    pub shard: usize,
+    /// Jobs queued on this shard (admitted, not yet flushed).
+    pub queue_depth: usize,
+    /// Modeled seconds of this shard's queued work.
+    pub backlog_seconds: f64,
+    pub jobs_completed: u64,
+    /// Backend failures plus deadlines expired in this shard's queue.
+    pub jobs_failed: u64,
+    /// Merged-plan flushes this shard executed.
+    pub batches: u64,
+    pub launches: u64,
+    pub tasks: u64,
+    /// Mean launch occupancy of this shard's flushes.
+    pub occupancy: f64,
+    /// Wall time this shard spent executing merged plans.
+    pub busy_seconds: f64,
+    /// Fraction of service uptime this shard spent executing — the
+    /// utilization signal the least-loaded router is balancing.
+    pub busy_fraction: f64,
+    /// This shard's lookups into the *shared* plan cache (the global
+    /// [`crate::service::CacheStats`] cannot attribute hits to shards).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ShardStats {
+    /// Fraction of this shard's cache lookups served from cache
+    /// (0.0 when it has made none).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// One running batcher worker and the queue that feeds it.
+pub(crate) struct Shard {
+    index: usize,
+    pub(crate) queue: Arc<JobQueue>,
+    stats: Arc<WorkerStats>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Shard {
+    /// Spawn the shard's worker thread. The backend is constructed *on*
+    /// that thread and never leaves it (PJRT executors are not `Send`);
+    /// the kind must already be validated by
+    /// [`crate::backend::cost_model_for`].
+    pub(crate) fn start(
+        index: usize,
+        cfg: &ServiceConfig,
+        cache: PlanCache,
+        quota: Arc<QuotaTracker>,
+    ) -> Result<Self> {
+        let queue = Arc::new(JobQueue::with_quota(cfg.queue_cap, cfg.backlog_cap_s, quota));
+        let stats = Arc::new(WorkerStats::default());
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let stats = Arc::clone(&stats);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name(format!("bsvd-service-batcher-{index}"))
+                .spawn(move || {
+                    let backend = for_kind(cfg.backend, cfg.threads)
+                        .expect("backend kind validated by cost_model_for at start");
+                    batcher::run(queue, cfg, cache, backend, stats);
+                })
+                .map_err(Error::Io)?
+        };
+        Ok(Self { index, queue, stats, worker: Mutex::new(Some(worker)) })
+    }
+
+    /// The per-shard breakdown at this instant.
+    pub(crate) fn snapshot(&self, uptime: Duration) -> ShardStats {
+        let w = &self.stats;
+        let busy_seconds = w.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+        ShardStats {
+            shard: self.index,
+            queue_depth: self.queue.depth(),
+            backlog_seconds: self.queue.backlog_seconds(),
+            jobs_completed: w.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: w.jobs_failed.load(Ordering::Relaxed) + self.queue.expired_jobs(),
+            batches: w.batches.load(Ordering::Relaxed),
+            launches: w.launches.load(Ordering::Relaxed),
+            tasks: w.tasks.load(Ordering::Relaxed),
+            occupancy: w.occupancy(),
+            busy_seconds,
+            busy_fraction: busy_seconds / uptime.as_secs_f64().max(1e-9),
+            cache_hits: w.cache_hits.load(Ordering::Relaxed),
+            cache_misses: w.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Capacity slots this shard's flushes offered (the occupancy
+    /// denominator — the aggregate occupancy needs the raw sum).
+    pub(crate) fn capacity_slots(&self) -> u64 {
+        self.stats.capacity_slots.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting work; already-admitted jobs still drain.
+    pub(crate) fn close(&self) {
+        self.queue.close();
+    }
+
+    /// Join the worker after [`Shard::close`]. Idempotent.
+    pub(crate) fn join(&self) {
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Picks the shard an admitted job lands on
+/// ([`crate::config::ShardRouting`]).
+pub(crate) struct Router {
+    routing: ShardRouting,
+    /// Tie-break rotation for least-loaded: equally idle shards take
+    /// turns going first, so a burst hitting an idle service spreads
+    /// round-robin instead of piling onto shard 0.
+    rotate: AtomicUsize,
+}
+
+impl Router {
+    pub(crate) fn new(routing: ShardRouting) -> Self {
+        Self { routing, rotate: AtomicUsize::new(0) }
+    }
+
+    /// The shard index for a job on an `n × n` problem.
+    pub(crate) fn pick(&self, shards: &[Shard], n: usize) -> usize {
+        if shards.len() <= 1 {
+            return 0;
+        }
+        match self.routing {
+            ShardRouting::LeastLoaded => {
+                let offset = self.rotate.fetch_add(1, Ordering::Relaxed) % shards.len();
+                let load = |idx: usize| {
+                    (shards[idx].queue.backlog_seconds(), shards[idx].queue.depth())
+                };
+                let mut best = offset;
+                let mut best_load = load(offset);
+                for step in 1..shards.len() {
+                    let idx = (offset + step) % shards.len();
+                    let candidate = load(idx);
+                    if candidate.0 < best_load.0
+                        || (candidate.0 == best_load.0 && candidate.1 < best_load.1)
+                    {
+                        best = idx;
+                        best_load = candidate;
+                    }
+                }
+                best
+            }
+            ShardRouting::SizeClass => {
+                // log2(n) buckets: problems within a factor of two of each
+                // other share a shard, so merged plans pack densely and
+                // each shard's slice of the shared cache stays hot.
+                let bucket = (usize::BITS - n.max(1).leading_zeros()) as usize;
+                bucket % shards.len()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, BatchConfig, PackingPolicy, TuneParams};
+    use std::time::Duration;
+
+    fn cfg() -> ServiceConfig {
+        ServiceConfig {
+            params: TuneParams { tpb: 32, tw: 4, max_blocks: 24 },
+            batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+            backend: BackendKind::Sequential,
+            threads: 1,
+            window: Duration::from_micros(100),
+            queue_cap: 16,
+            backlog_cap_s: 1e9,
+            cache_cap: 16,
+            arch: "H100",
+            workers: 2,
+            routing: ShardRouting::LeastLoaded,
+            quota_pending_cap: 0,
+        }
+    }
+
+    fn idle_shards(count: usize) -> Vec<Shard> {
+        let cfg = cfg();
+        let cache = PlanCache::new(16);
+        let quota = Arc::new(QuotaTracker::new(0));
+        (0..count)
+            .map(|i| Shard::start(i, &cfg, cache.clone(), Arc::clone(&quota)).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn least_loaded_rotates_over_idle_shards() {
+        let shards = idle_shards(3);
+        let router = Router::new(ShardRouting::LeastLoaded);
+        // All idle: the rotating offset spreads a burst round-robin.
+        let picks: Vec<usize> = (0..6).map(|_| router.pick(&shards, 64)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        for shard in &shards {
+            shard.close();
+            shard.join();
+        }
+    }
+
+    #[test]
+    fn size_class_routes_same_sizes_together() {
+        let shards = idle_shards(2);
+        let router = Router::new(ShardRouting::SizeClass);
+        // Same size class always lands on the same shard...
+        let a = router.pick(&shards, 48);
+        assert_eq!(router.pick(&shards, 48), a);
+        assert_eq!(router.pick(&shards, 40), a, "same log2 bucket (32..=63)");
+        // ...and the adjacent class lands on the other one.
+        assert_ne!(router.pick(&shards, 64), a);
+        for shard in &shards {
+            shard.close();
+            shard.join();
+        }
+    }
+
+    #[test]
+    fn snapshot_starts_clean_and_hit_rate_handles_zero() {
+        let shards = idle_shards(1);
+        let stats = shards[0].snapshot(Duration::from_secs(1));
+        assert_eq!(stats.shard, 0);
+        assert_eq!(stats.queue_depth, 0);
+        assert_eq!((stats.jobs_completed, stats.jobs_failed), (0, 0));
+        assert_eq!(stats.cache_hit_rate(), 0.0);
+        assert_eq!(stats.busy_fraction, 0.0);
+        shards[0].close();
+        shards[0].join();
+    }
+}

@@ -1,10 +1,13 @@
 //! The unified client's core contract, property-tested end to end:
-//! [`LocalClient`] (direct, in-process) and [`RemoteClient`] (JSON-lines
-//! wire to a loopback `serve` endpoint) are **interchangeable** — for
-//! the same [`ReductionRequest`] stream they return bitwise-identical
-//! singular values, the same per-problem launch accounting, and
-//! reconciled job stats (client-side counters agree with each other and
-//! with the server's own `stats` view).
+//! [`LocalClient`] (direct, in-process), [`RemoteClient`] (JSON-lines
+//! wire to a loopback `serve` endpoint), and [`ShardedClient`] (a fleet
+//! of such endpoints with routing and failover) are **interchangeable**
+//! — for the same [`ReductionRequest`] stream they return
+//! bitwise-identical singular values, the same per-problem launch
+//! accounting, and reconciled job stats (client-side counters agree
+//! with each other and with the server's own `stats` view). The sharded
+//! contract holds even when an endpoint is killed mid-stream: failover
+//! absorbs the death without a single caller-visible failure.
 //!
 //! Runs over every registry backend that works in a bare checkout
 //! (artifact-dependent backends skip loudly, like `pjrt_roundtrip.rs`).
@@ -13,8 +16,12 @@
 //! `(n, bw, seed)`), so local and remote reduce the *same* matrices.
 
 use banded_svd::backend::for_kind;
-use banded_svd::client::{Client, ClientStats, LocalClient, ReductionRequest, RemoteClient};
-use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
+use banded_svd::client::{
+    Client, ClientStats, LocalClient, ReductionRequest, RemoteClient, RouteStrategy, ShardedClient,
+};
+use banded_svd::config::{
+    BackendKind, BatchConfig, PackingPolicy, ServiceConfig, ShardRouting, TuneParams,
+};
 use banded_svd::scalar::ScalarKind;
 use banded_svd::service::Server;
 use banded_svd::util::json::Json;
@@ -37,6 +44,9 @@ fn service_cfg(backend: BackendKind) -> ServiceConfig {
         backlog_cap_s: 1e9,
         cache_cap: 32,
         arch: "H100",
+        workers: 1,
+        routing: ShardRouting::LeastLoaded,
+        quota_pending_cap: 0,
     }
 }
 
@@ -265,4 +275,68 @@ fn single_and_batched_requests_agree_across_f32_and_f64() {
 
     remote.shutdown().expect("shutdown");
     server_thread.join().expect("server thread").expect("clean shutdown");
+}
+
+#[test]
+fn sharded_client_matches_local_bitwise_even_when_an_endpoint_dies_mid_stream() {
+    let kind = BackendKind::Sequential;
+    let server_a = Server::bind(service_cfg(kind), "127.0.0.1:0").expect("bind a");
+    let server_b = Server::bind(service_cfg(kind), "127.0.0.1:0").expect("bind b");
+    let addr_a = server_a.local_addr().to_string();
+    let addr_b = server_b.local_addr().to_string();
+    let thread_a = std::thread::spawn(move || server_a.run());
+    let mut thread_b = Some(std::thread::spawn(move || server_b.run()));
+
+    let local = LocalClient::direct(
+        params(),
+        BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+        kind,
+        2,
+    )
+    .expect("local client");
+    // Least-loaded routing alternates an idle fleet deterministically
+    // (the tie rotation), so the post-kill half of the stream provably
+    // starts on the dead endpoint and must fail over to the survivor.
+    let sharded =
+        ShardedClient::connect(&[addr_a.as_str(), addr_b.as_str()], RouteStrategy::LeastLoaded)
+            .expect("sharded client");
+    assert_eq!(sharded.endpoints().len(), 2);
+    assert_eq!(sharded.healthy(), 2);
+    assert_eq!(sharded.strategy(), RouteStrategy::LeastLoaded);
+
+    let specs: Vec<RequestSpec> = (0..10u64)
+        .map(|i| RequestSpec {
+            problems: vec![(48, 6, ScalarKind::F64, 900 + i), (36, 5, ScalarKind::F32, 950 + i)],
+            priority: (i % 3) as u8,
+        })
+        .collect();
+
+    for (i, spec) in specs.iter().enumerate() {
+        if i == 4 {
+            // Kill endpoint B mid-stream over its own control connection;
+            // the sharded client must keep answering without the caller
+            // seeing a single failure.
+            RemoteClient::connect(&addr_b).expect("control connection").shutdown().expect("ack");
+            let handle = thread_b.take().expect("endpoint b killed exactly once");
+            handle.join().expect("server b thread").expect("clean shutdown");
+        }
+        let want = local.submit_wait(spec.build()).expect("local");
+        let got = sharded.submit_wait(spec.build()).expect("sharded survives the dead endpoint");
+        check_outcomes_match(&want, &got, &format!("request {i}")).unwrap();
+        assert_eq!(got.provenance.source.name(), "sharded");
+        assert_eq!(got.provenance.backend, kind.name());
+    }
+
+    // Failover absorbed the death: every submitted job completed, and the
+    // fleet's health view shows exactly one live member.
+    assert_eq!(
+        sharded.stats(),
+        ClientStats { jobs_submitted: 20, jobs_completed: 20, jobs_failed: 0 }
+    );
+    assert_eq!(sharded.healthy(), 1, "the dead endpoint must be marked down");
+
+    // Fleet-wide shutdown: the survivor acknowledges, the dead member is
+    // skipped without surfacing an error.
+    sharded.shutdown().expect("fleet shutdown");
+    thread_a.join().expect("server a thread").expect("clean shutdown");
 }

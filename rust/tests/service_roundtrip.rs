@@ -18,7 +18,9 @@
 
 use banded_svd::backend::for_kind;
 use banded_svd::batch::BatchInput;
-use banded_svd::config::{BackendKind, BatchConfig, PackingPolicy, ServiceConfig, TuneParams};
+use banded_svd::config::{
+    BackendKind, BatchConfig, PackingPolicy, ServiceConfig, ShardRouting, TuneParams,
+};
 use banded_svd::generate::random_banded;
 use banded_svd::pipeline::banded_singular_values_with;
 use banded_svd::client::wire::submit_request;
@@ -45,6 +47,9 @@ fn service_cfg(backend: BackendKind) -> ServiceConfig {
         backlog_cap_s: 1e9,
         cache_cap: 32,
         arch: "H100",
+        workers: 1,
+        routing: ShardRouting::LeastLoaded,
+        quota_pending_cap: 0,
     }
 }
 
@@ -158,6 +163,68 @@ fn served_results_are_bitwise_identical_to_the_direct_pipeline() {
         assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
         server_thread.join().expect("server thread").expect("clean shutdown");
     }
+}
+
+#[test]
+fn multi_worker_service_drains_mixed_priorities_with_reconciling_shard_stats() {
+    // Two batcher shards, each with its own backend, fed by the router.
+    // Mixed-priority traffic from concurrent connections must still come
+    // back bitwise identical to the direct pipeline, and the per-shard
+    // stats rows exposed through the `stats` verb must reconcile with
+    // the aggregate counters.
+    let cfg = ServiceConfig { workers: 2, ..service_cfg(BackendKind::Sequential) };
+    let server = Server::bind(cfg, "127.0.0.1:0").expect("bind ephemeral");
+    let addr = server.local_addr();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let direct = for_kind(BackendKind::Sequential, 2).expect("direct backend");
+    let params = params();
+    let shapes = [(48usize, 6usize), (36, 5), (56, 7), (28, 3)];
+    let mut rng = Xoshiro256::seed_from_u64(77);
+    // (request line, expected σ) with priorities cycling 2, 1, 0, …
+    let mut jobs: Vec<(String, Vec<f64>)> = Vec::new();
+    for job in 0..12usize {
+        let (n, bw) = shapes[job % shapes.len()];
+        let a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let want = banded_singular_values_with(direct.as_ref(), &a, bw, &params).unwrap();
+        jobs.push((submit_request(&a, bw, (job % 3) as u8), want));
+    }
+
+    std::thread::scope(|scope| {
+        for (c, chunk) in jobs.chunks(4).enumerate() {
+            scope.spawn(move || {
+                let (mut reader, mut writer) = connect(addr);
+                for (j, (line, want)) in chunk.iter().enumerate() {
+                    let response = roundtrip(&mut reader, &mut writer, line);
+                    let sv = sv_of(&response);
+                    assert_bitwise(&sv, want, &format!("sharded client {c} job {j}"));
+                }
+            });
+        }
+    });
+
+    let (mut reader, mut writer) = connect(addr);
+    let stats = roundtrip(&mut reader, &mut writer, "{\"verb\":\"stats\"}");
+    let body = stats.get("stats").expect("stats body");
+    assert_eq!(body.get("workers").and_then(Json::as_i64), Some(2), "{}", body.render());
+    let shards = body.get("shards").and_then(Json::as_array).expect("shards array");
+    assert_eq!(shards.len(), 2, "{}", body.render());
+    let aggregate = body.get("jobs_completed").and_then(Json::as_i64).unwrap();
+    assert_eq!(aggregate, 12, "{}", body.render());
+    let per_shard: i64 = shards
+        .iter()
+        .map(|s| s.get("jobs_completed").and_then(Json::as_i64).expect("shard jobs_completed"))
+        .sum();
+    assert_eq!(per_shard, aggregate, "per-shard rows must reconcile: {}", body.render());
+    for (i, shard) in shards.iter().enumerate() {
+        assert_eq!(shard.get("shard").and_then(Json::as_i64), Some(i as i64));
+        assert_eq!(shard.get("jobs_failed").and_then(Json::as_i64), Some(0));
+        assert_eq!(shard.get("queue_depth").and_then(Json::as_i64), Some(0));
+    }
+
+    let ack = roundtrip(&mut reader, &mut writer, "{\"verb\":\"shutdown\"}");
+    assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true));
+    server_thread.join().expect("server thread").expect("clean shutdown");
 }
 
 #[test]
