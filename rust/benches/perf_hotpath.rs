@@ -7,42 +7,63 @@
 //!   `make artifacts`).
 
 use banded_svd::bulge::cycle::{
-    exec_cycle_inplace, exec_cycle_packed, stage_uses_packed, CycleWorkspace, SharedBanded,
+    exec_cycle_inplace, exec_cycle_packed, exec_cycle_packed_with, stage_uses_packed,
+    CycleWorkspace, SharedBanded,
 };
 use banded_svd::bulge::schedule::Stage;
 use banded_svd::bulge::{reduce_to_bidiagonal, reduce_to_bidiagonal_parallel};
 use banded_svd::config::TuneParams;
 use banded_svd::generate::random_banded;
 use banded_svd::runtime::{artifact_dir, PjrtEngine};
+use banded_svd::simd::{detect_isa, SimdSpec};
 use banded_svd::util::bench::{fmt_duration, Bencher, Table};
+use banded_svd::util::json::{write_experiment, Json};
 use banded_svd::util::rng::Xoshiro256;
 use banded_svd::util::threadpool::ThreadPool;
+
+/// Which cycle-kernel arm a timing run exercises.
+#[derive(Copy, Clone)]
+enum Arm {
+    Inplace,
+    PackedScalar,
+    PackedSimd(SimdSpec),
+}
 
 fn main() {
     let bench = Bencher::from_env();
     println!("=== perf: hot-path micro-benchmarks ===\n");
 
-    // --- L1-analog: cycle kernel cost, in-place vs packed-tile ------------
+    // --- L1-analog: cycle kernel cost, in-place vs packed vs SIMD ---------
     // Measuring one task repeatedly would hit the tau=0 fast path after
     // the first call; instead run a whole stage sweep-major on a fresh
-    // matrix and divide by the task count. Both paths execute the exact
-    // same float ops (results are bitwise identical); the packed path
-    // gathers each cycle's footprint into a contiguous per-worker tile,
-    // chases there, and writes back once. The acceptance bar: packed must
-    // be no slower than in-place at bw ≥ 64 (the default gate routes
-    // stages with b + d ≥ 48 through the packed path).
+    // matrix and divide by the task count. All arms execute the exact
+    // same float ops (results are bitwise identical); the packed arms
+    // gather each cycle's footprint into a contiguous per-worker tile,
+    // chase there, and write back once — the SIMD arm additionally runs
+    // the tile chase through the lane kernels (the `--backend simd` hot
+    // path). Acceptance bars: packed no slower than in-place at bw ≥ 64
+    // (the default gate routes b + d ≥ 48 through the packed path), and
+    // SIMD no slower than packed-scalar above that same gate.
+    let simd_spec = SimdSpec::resolve("force", false, detect_isa());
+    println!("simd lane kernels: {}\n", simd_spec.describe());
+    let reps = if std::env::var("BSVD_BENCH_FAST").ok().as_deref() == Some("1") {
+        2
+    } else {
+        5
+    };
     let mut t = Table::new(vec![
-        "kernel", "in-place/task", "packed/task", "packed/in-place", "default path",
+        "kernel", "in-place/task", "packed/task", "simd/task", "simd/packed", "default path",
     ]);
+    let mut kernel_rows = Vec::new();
     for (b, d) in [(16usize, 8usize), (32, 16), (64, 32), (96, 48), (128, 64)] {
         let stage = Stage::new(b, d);
         let n = 16 * b;
         let mut rng = Xoshiro256::seed_from_u64(1);
         let base = random_banded::<f64>(n, b, d, &mut rng);
         let tasks: usize = (0..stage.num_sweeps(n)).map(|k| stage.cmax(n, k) + 1).sum();
-        let run = |packed: bool| {
+        let run = |arm: Arm| {
             let mut best = f64::INFINITY;
-            for _ in 0..5 {
+            for _ in 0..reps {
                 let mut a = base.clone();
                 let mut ws = CycleWorkspace::new(&stage);
                 let view = SharedBanded::new(&mut a);
@@ -52,10 +73,14 @@ fn main() {
                         let task = stage.task(k, c);
                         // SAFETY: exclusive access, single thread.
                         unsafe {
-                            if packed {
-                                exec_cycle_packed(&view, &stage, &task, &mut ws);
-                            } else {
-                                exec_cycle_inplace(&view, &stage, &task, &mut ws);
+                            match arm {
+                                Arm::Inplace => exec_cycle_inplace(&view, &stage, &task, &mut ws),
+                                Arm::PackedScalar => {
+                                    exec_cycle_packed(&view, &stage, &task, &mut ws)
+                                }
+                                Arm::PackedSimd(spec) => {
+                                    exec_cycle_packed_with(&view, &stage, &task, &mut ws, spec)
+                                }
                             }
                         }
                     }
@@ -64,15 +89,25 @@ fn main() {
             }
             best
         };
-        let inplace = run(false);
-        let packed = run(true);
+        let inplace = run(Arm::Inplace);
+        let packed = run(Arm::PackedScalar);
+        let simd = run(Arm::PackedSimd(simd_spec));
         t.row(vec![
             format!("cycle b={b} d={d}"),
             format!("{:.0} ns", inplace * 1e9),
             format!("{:.0} ns", packed * 1e9),
-            format!("{:.2}x", packed / inplace),
+            format!("{:.0} ns", simd * 1e9),
+            format!("{:.2}x", simd / packed),
             if stage_uses_packed(&stage) { "packed".into() } else { "in-place".into() },
         ]);
+        kernel_rows.push(
+            Json::obj()
+                .set("b", b)
+                .set("d", d)
+                .set("inplace_ns", inplace * 1e9)
+                .set("scalar_ns", packed * 1e9)
+                .set("simd_ns", simd * 1e9),
+        );
     }
     t.print();
 
@@ -136,5 +171,16 @@ fn main() {
             t.print();
         }
         Err(e) => println!("skipped (artifacts missing: {e})"),
+    }
+
+    // Machine-readable per-kernel numbers for `banded-svd bench-collect`
+    // (the measured perf trajectory: BENCH_PR7.json and the CI gate).
+    let json = Json::obj()
+        .set("experiment", "perf_hotpath")
+        .set("simd", simd_spec.describe())
+        .set("packed_kernels", Json::Arr(kernel_rows));
+    match write_experiment("perf_hotpath", &json) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write experiment json: {e}"),
     }
 }

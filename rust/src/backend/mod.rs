@@ -9,7 +9,7 @@
 //! before any backend is involved, so adding a device means implementing
 //! one trait, not re-deriving a schedule.
 //!
-//! Three executors ship with the crate (see `docs/backends.md` for the
+//! Four executors ship with the crate (see `docs/backends.md` for the
 //! full contract a new backend must uphold):
 //!
 //! - [`SequentialBackend`] — inline, one task at a time, in plan order.
@@ -17,6 +17,10 @@
 //! - [`ThreadpoolBackend`] — one pinned pool dispatch + one barrier per
 //!   launch, sticky column-window affinity, persistent per-slot
 //!   workspaces (the CPU analog of the paper's GPU execution model).
+//! - [`SimdBackend`] — the threadpool loop with packed-path tasks routed
+//!   through the explicit vector kernels of [`crate::simd`] (runtime ISA
+//!   detection, `BSVD_SIMD` knob, scalar fallback); bitwise-identical to
+//!   the reference with contraction off.
 //! - [`PjrtBackend`] — walks the plan launch by launch through
 //!   AOT-compiled HLO artifacts on the PJRT client, holding one
 //!   device-resident buffer *per plan problem* (so merged batch plans map
@@ -66,10 +70,12 @@
 
 pub mod pjrt;
 mod sequential;
+mod simd;
 mod threadpool;
 
 pub use pjrt::PjrtBackend;
 pub use sequential::SequentialBackend;
+pub use simd::SimdBackend;
 pub use threadpool::ThreadpoolBackend;
 
 use crate::banded::storage::Banded;
@@ -265,8 +271,10 @@ pub(crate) fn check_problems(plan: &LaunchPlan, problems: &[BandStorageMut<'_>])
 
 /// Construct the backend registered under `kind`.
 ///
-/// `threads` only affects [`ThreadpoolBackend`] (`0` = all hardware
-/// threads). [`BackendKind::Pjrt`] resolves artifacts from
+/// `threads` affects [`ThreadpoolBackend`] and [`SimdBackend`] (`0` =
+/// all hardware threads); [`SimdBackend`] additionally resolves its
+/// kernel spec from `BSVD_SIMD` / `BSVD_SIMD_CONTRACT` at construction.
+/// [`BackendKind::Pjrt`] resolves artifacts from
 /// [`crate::runtime::artifact_dir`] lazily at execute time, so
 /// construction always succeeds; execution fails cleanly when artifacts
 /// (or the `pjrt` feature) are missing. [`BackendKind::PjrtFused`] runs
@@ -277,6 +285,7 @@ pub fn for_kind(kind: BackendKind, threads: usize) -> Result<Box<dyn Backend>> {
     match kind {
         BackendKind::Sequential => Ok(Box::new(SequentialBackend::new())),
         BackendKind::Threadpool => Ok(Box::new(ThreadpoolBackend::new(threads))),
+        BackendKind::Simd => Ok(Box::new(SimdBackend::new(threads))),
         BackendKind::Pjrt => Ok(Box::new(PjrtBackend::from_env())),
         BackendKind::PjrtFused => Err(Error::Config(
             "pjrt-fused executes whole-stage artifacts (one call per stage), not a \
@@ -296,6 +305,7 @@ pub fn for_kind(kind: BackendKind, threads: usize) -> Result<Box<dyn Backend>> {
 pub fn cost_model_for(kind: BackendKind) -> Result<BackendCostModel> {
     match kind {
         BackendKind::Sequential | BackendKind::Threadpool => Ok(BackendCostModel::native()),
+        BackendKind::Simd => Ok(BackendCostModel::simd()),
         BackendKind::Pjrt => Ok(BackendCostModel::pjrt()),
         BackendKind::PjrtFused => Err(Error::Config(
             "pjrt-fused executes whole-stage artifacts (one call per stage), not a \
@@ -390,7 +400,7 @@ mod tests {
     #[test]
     fn undersized_storage_is_rejected_by_every_native_backend() {
         let params = TuneParams { tpb: 32, tw: 8, max_blocks: 8 };
-        for kind in [BackendKind::Sequential, BackendKind::Threadpool] {
+        for kind in [BackendKind::Sequential, BackendKind::Threadpool, BackendKind::Simd] {
             let backend = for_kind(kind, 1).unwrap();
             let mut bad = Banded::<f64>::zeros(32, 9, 1); // kd_sub 1 < tw 8
             assert!(

@@ -1,0 +1,168 @@
+//! The SIMD executor — the threadpool pinned-dispatch loop with packed
+//! tasks routed through the explicit vector kernels of [`crate::simd`].
+//!
+//! Everything about scheduling is shared with [`ThreadpoolBackend`]:
+//! same launch loop, same sticky column-window affinity, same persistent
+//! per-slot workspaces. The only difference is the [`SimdSpec`] threaded
+//! into each problem's runner, which swaps the packed-tile hot loops
+//! (reflector generate/apply over the contiguous 64-byte-aligned
+//! workspace) for fixed-width lane kernels. Below-gate (in-place) stages
+//! stay scalar on every backend.
+//!
+//! With contraction off (the default) results are **bitwise-identical**
+//! to [`SequentialBackend`](crate::backend::SequentialBackend) — the
+//! same equivalence property every native backend carries. The resolved
+//! ISA is an executor detail, not part of the backend's identity: the
+//! backend is always named `"simd"` (stable across hosts, which is what
+//! the client handshake records), and [`SimdBackend::spec`] /
+//! [`SimdBackend::isa_name`] surface what actually runs.
+
+use crate::backend::{check_problems, Backend, BandStorageMut, Execution, ThreadpoolBackend};
+use crate::batch::engine::{execute_plan, Runner};
+use crate::config::BackendKind;
+use crate::error::Result;
+use crate::plan::LaunchPlan;
+use crate::simd::SimdSpec;
+use crate::simulator::model::BackendCostModel;
+use crate::util::threadpool::ThreadPool;
+
+/// Executes a [`LaunchPlan`] like [`ThreadpoolBackend`], but chases
+/// packed-path tasks with the SIMD lane kernels selected by its
+/// [`SimdSpec`] (resolved once from `BSVD_SIMD` / `BSVD_SIMD_CONTRACT`
+/// by [`SimdBackend::new`], or injected via [`SimdBackend::with_spec`]).
+pub struct SimdBackend<'p> {
+    inner: ThreadpoolBackend<'p>,
+    spec: SimdSpec,
+}
+
+impl SimdBackend<'static> {
+    /// Backend with its own pool and the process-wide spec from the
+    /// environment; `threads == 0` uses all available hardware threads.
+    pub fn new(threads: usize) -> Self {
+        Self::with_spec(SimdSpec::from_env(), threads)
+    }
+
+    /// Backend with an explicit kernel spec — the injectable form tests
+    /// use to pin an ISA / contraction mode without touching the
+    /// process environment.
+    pub fn with_spec(spec: SimdSpec, threads: usize) -> Self {
+        Self { inner: ThreadpoolBackend::new(threads), spec }
+    }
+}
+
+impl<'p> SimdBackend<'p> {
+    /// Backend over an existing pool (no threads spawned), environment
+    /// spec — what the coordinator uses for its resident pool.
+    pub fn borrowing(pool: &'p ThreadPool) -> Self {
+        Self { inner: ThreadpoolBackend::borrowing(pool), spec: SimdSpec::from_env() }
+    }
+
+    /// The kernel spec every packed task runs under.
+    pub fn spec(&self) -> SimdSpec {
+        self.spec
+    }
+
+    /// Resolved ISA label for provenance output, e.g. `"avx2+fma"` or
+    /// `"scalar"` (after `BSVD_SIMD=off` or failed detection).
+    pub fn isa_name(&self) -> &'static str {
+        self.spec.isa.name()
+    }
+}
+
+impl Backend for SimdBackend<'_> {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Simd
+    }
+
+    fn execute(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+    ) -> Result<Execution> {
+        check_problems(plan, problems)?;
+        let mut runners: Vec<Runner<'_>> = problems
+            .iter_mut()
+            .zip(plan.problems.iter())
+            .map(|(band, shape)| Runner::for_band_with_kernel(band, shape, self.spec))
+            .collect::<Result<_>>()?;
+        let aggregate = execute_plan(plan, &mut runners, self.inner.pool());
+        Ok(Execution {
+            per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),
+            aggregate,
+        })
+    }
+
+    fn cost_model(&self) -> BackendCostModel {
+        BackendCostModel::simd()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{AsBandStorageMut, SequentialBackend};
+    use crate::config::TuneParams;
+    use crate::generate::random_banded;
+    use crate::simd::SimdIsa;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn simd_backend_matches_sequential_bitwise_above_the_gate() {
+        // tw = 32 against bw = 40 keeps every stage span b + d ≥ 48: the
+        // whole reduction runs through the packed (vectorized) path.
+        let params = TuneParams { tpb: 32, tw: 32, max_blocks: 16 };
+        let (n, bw) = (192, 40);
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let base = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let plan = LaunchPlan::for_problem(n, bw, &params);
+
+        let mut reference = base.clone();
+        SequentialBackend::new()
+            .execute(&plan, &mut [reference.as_band_storage_mut()])
+            .unwrap();
+
+        for spec in [
+            SimdSpec::scalar(),
+            SimdSpec::with_contract(SimdIsa::Portable, false),
+        ] {
+            let mut vectored = base.clone();
+            let backend = SimdBackend::with_spec(spec, 3);
+            let exec = backend
+                .execute(&plan, &mut [vectored.as_band_storage_mut()])
+                .unwrap();
+            assert_eq!(reference, vectored, "{spec:?}");
+            assert_eq!(exec.aggregate.launches, plan.num_launches());
+        }
+    }
+
+    #[test]
+    fn backend_identity_is_stable_but_isa_is_surfaced() {
+        let backend = SimdBackend::with_spec(SimdSpec::with_contract(SimdIsa::Portable, true), 1);
+        assert_eq!(backend.kind(), BackendKind::Simd);
+        assert_eq!(backend.name(), "simd");
+        assert_eq!(backend.isa_name(), "portable");
+        assert!(backend.spec().contract);
+        assert!(!backend.requires_artifacts());
+        assert_eq!(backend.cost_model(), BackendCostModel::simd());
+    }
+
+    #[test]
+    fn borrowed_pool_matches_owned_pool_bitwise() {
+        let params = TuneParams { tpb: 32, tw: 24, max_blocks: 8 };
+        let (n, bw) = (128, 28);
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        let base = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let plan = LaunchPlan::for_problem(n, bw, &params);
+
+        let mut owned = base.clone();
+        SimdBackend::new(2).execute(&plan, &mut [owned.as_band_storage_mut()]).unwrap();
+
+        let pool = ThreadPool::new(2);
+        let mut borrowed = base.clone();
+        SimdBackend::borrowing(&pool)
+            .execute(&plan, &mut [borrowed.as_band_storage_mut()])
+            .unwrap();
+
+        assert_eq!(owned, borrowed);
+    }
+}

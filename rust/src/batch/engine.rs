@@ -17,7 +17,7 @@ use crate::backend::{Backend, BandStorageMut, ThreadpoolBackend};
 use crate::banded::storage::Banded;
 use crate::batch::plan::BatchPlan;
 use crate::batch::BatchInput;
-use crate::bulge::cycle::{exec_cycle_shared, CycleWorkspace, SharedBanded};
+use crate::bulge::cycle::{exec_cycle_shared_with, CycleWorkspace, SharedBanded};
 use crate::bulge::schedule::{CycleTask, Stage};
 use crate::config::{BatchConfig, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
@@ -25,6 +25,7 @@ use crate::error::Result;
 use crate::plan::{slot_bytes, LaunchPlan, ProblemShape};
 use crate::service::cache::PlanCache;
 use crate::scalar::Scalar;
+use crate::simd::SimdSpec;
 use crate::util::threadpool::{ThreadPool, WorkerLocal};
 use std::any::{Any, TypeId};
 use std::collections::HashMap;
@@ -73,6 +74,9 @@ trait ProblemExec: Sync {
 struct NativeExec<T> {
     view: SharedBanded<T>,
     stages: Vec<Stage>,
+    /// SIMD kernel selection for packed-path tasks —
+    /// `SimdSpec::scalar()` on every backend except `SimdBackend`.
+    spec: SimdSpec,
 }
 
 impl<T: Scalar> ProblemExec for NativeExec<T> {
@@ -80,7 +84,7 @@ impl<T: Scalar> ProblemExec for NativeExec<T> {
         let stage = &self.stages[si];
         let ws = scratch.workspace::<T>();
         ws.ensure_stage(stage);
-        exec_cycle_shared(&self.view, stage, task, ws);
+        exec_cycle_shared_with(&self.view, stage, task, ws, self.spec);
     }
 
     fn element_bytes(&self) -> usize {
@@ -99,11 +103,25 @@ pub(crate) struct Runner<'a> {
 }
 
 impl<'a> Runner<'a> {
-    /// Build a runner for `a` against its plan shape.
+    /// Build a runner for `a` against its plan shape (scalar kernels).
     pub(crate) fn new<T: Scalar>(a: &'a mut Banded<T>, shape: &ProblemShape) -> Result<Self> {
+        Self::with_kernel(a, shape, SimdSpec::scalar())
+    }
+
+    /// Build a runner whose packed-path tasks run the SIMD kernels
+    /// selected by `spec` — the seam `SimdBackend` threads its resolved
+    /// spec through.
+    pub(crate) fn with_kernel<T: Scalar>(
+        a: &'a mut Banded<T>,
+        shape: &ProblemShape,
+        spec: SimdSpec,
+    ) -> Result<Self> {
         a.check_reduction_storage(shape.bw, shape.tw)?;
-        let exec: Box<dyn ProblemExec + Sync + 'a> =
-            Box::new(NativeExec { view: SharedBanded::new(a), stages: shape.stages.clone() });
+        let exec: Box<dyn ProblemExec + Sync + 'a> = Box::new(NativeExec {
+            view: SharedBanded::new(a),
+            stages: shape.stages.clone(),
+            spec,
+        });
         Ok(Self { exec, metrics: LaunchMetrics::default(), _borrow: PhantomData })
     }
 
@@ -113,10 +131,19 @@ impl<'a> Runner<'a> {
         band: &'a mut BandStorageMut<'_>,
         shape: &ProblemShape,
     ) -> Result<Self> {
+        Self::for_band_with_kernel(band, shape, SimdSpec::scalar())
+    }
+
+    /// [`Runner::for_band`] with an explicit SIMD spec.
+    pub(crate) fn for_band_with_kernel(
+        band: &'a mut BandStorageMut<'_>,
+        shape: &ProblemShape,
+        spec: SimdSpec,
+    ) -> Result<Self> {
         match band {
-            BandStorageMut::F64(a) => Runner::new(&mut **a, shape),
-            BandStorageMut::F32(a) => Runner::new(&mut **a, shape),
-            BandStorageMut::F16(a) => Runner::new(&mut **a, shape),
+            BandStorageMut::F64(a) => Runner::with_kernel(&mut **a, shape, spec),
+            BandStorageMut::F32(a) => Runner::with_kernel(&mut **a, shape, spec),
+            BandStorageMut::F16(a) => Runner::with_kernel(&mut **a, shape, spec),
         }
     }
 
@@ -556,6 +583,21 @@ mod tests {
         assert_eq!(ran.plan_misses, planned.plan_misses, "run re-lowered a plan");
         assert_eq!(ran.merge_misses, planned.merge_misses, "run re-merged the skeleton");
         assert_eq!(ran.plan_hits, planned.plan_hits + inputs.len() as u64);
+    }
+
+    #[test]
+    fn slot_scratch_hands_out_aligned_workspaces() {
+        // The scratch a pool slot receives is what the SIMD kernels
+        // stream over — alignment must survive the type-erased route and
+        // on-demand growth.
+        let mut scratch = SlotScratch::new();
+        let wide = Stage::new(40, 24);
+        let ws = scratch.workspace::<f64>();
+        ws.ensure_stage(&wide);
+        assert!(ws.alignment_ok());
+        let ws32 = scratch.workspace::<f32>();
+        ws32.ensure_stage(&Stage::new(12, 6));
+        assert!(ws32.alignment_ok());
     }
 
     #[test]

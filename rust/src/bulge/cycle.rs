@@ -26,30 +26,59 @@
 
 use crate::banded::storage::{Banded, TileSpec};
 use crate::bulge::schedule::{CycleTask, Stage};
-use crate::householder::make_reflector;
+use crate::householder::make_reflector_simd;
 use crate::plan::LaunchPlan;
 use crate::scalar::Scalar;
+use crate::simd::{AlignedVec, SimdSpec};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Default minimum stage span `b + d` for routing through the packed-tile
 /// path. Narrow tiles fit a handful of cache lines each — the pack/unpack
 /// copies cost more than contiguity saves. Wide stages (the bw ≥ 64
 /// regime the paper profiles) chase cache-resident.
 ///
-/// Overridable without a rebuild via `BSVD_PACKED_SPAN_MIN` (read once):
-/// `0` forces every stage through the packed path, a huge value forces
-/// in-place — the tuning lever `benches/perf_hotpath.rs` measures (see
-/// ROADMAP: calibrate this on real hardware).
+/// Overridable without a rebuild via `BSVD_PACKED_SPAN_MIN` (resolved on
+/// first use): `0` forces every stage through the packed path, a huge
+/// value forces in-place — the tuning lever `benches/perf_hotpath.rs`
+/// measures (see docs/performance-model.md for the tuning recipe).
+/// In-process, tests and benches pin it with [`set_packed_span_min`].
 pub const PACKED_SPAN_MIN: usize = 48;
 
-static PACKED_SPAN_MIN_OVERRIDE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+/// Sentinel for "gate not yet resolved from the environment".
+const GATE_UNSET: usize = usize::MAX;
+
+static PACKED_SPAN_MIN_GATE: AtomicUsize = AtomicUsize::new(GATE_UNSET);
 
 fn packed_span_min() -> usize {
-    *PACKED_SPAN_MIN_OVERRIDE.get_or_init(|| {
-        std::env::var("BSVD_PACKED_SPAN_MIN")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(PACKED_SPAN_MIN)
-    })
+    let v = PACKED_SPAN_MIN_GATE.load(Ordering::Relaxed);
+    if v != GATE_UNSET {
+        return v;
+    }
+    // First read (or post-reset): resolve env → default. Two racing
+    // threads resolve the same value, so the double-store is benign.
+    let resolved = std::env::var("BSVD_PACKED_SPAN_MIN")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|v| v.min(GATE_UNSET - 1))
+        .unwrap_or(PACKED_SPAN_MIN);
+    PACKED_SPAN_MIN_GATE.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Override the packed-path gate **process-wide**: `Some(v)` pins
+/// `stage_uses_packed` to `b + d >= v` (so `Some(0)` forces every stage
+/// packed and `Some(usize::MAX - 1)` forces in-place); `None` resets the
+/// gate so the next read re-resolves `BSVD_PACKED_SPAN_MIN` / the
+/// default. For tests and benches exercising both paths in one process —
+/// not part of the tuning API, and racy against concurrently running
+/// executors, so test binaries using it must serialize around it.
+#[doc(hidden)]
+pub fn set_packed_span_min(gate: Option<usize>) {
+    let v = match gate {
+        Some(v) => v.min(GATE_UNSET - 1),
+        None => GATE_UNSET,
+    };
+    PACKED_SPAN_MIN_GATE.store(v, Ordering::Relaxed);
 }
 
 /// True when `stage`'s cycles run through the packed-tile workspace.
@@ -64,26 +93,31 @@ pub fn stage_uses_packed(stage: &Stage) -> bool {
 /// the paper keeps these in shared memory / registers). One lives per
 /// worker slot, persistently, so the tile workspace stays in that core's
 /// cache across launches (see `ThreadPool::for_each_slot`).
+///
+/// All three buffers are 64-byte aligned ([`AlignedVec`]): the packed
+/// tile and the `w` accumulator are exactly what the SIMD lane kernels
+/// stream over, so their loads never start from a split cache line.
 #[derive(Clone, Debug)]
 pub struct CycleWorkspace<T> {
     /// Householder vector: x[0] = β after `make_reflector`, x[1..] = tail.
-    x: Vec<T>,
+    x: AlignedVec<T>,
     /// Per-row dot products for the right op.
-    w: Vec<T>,
+    w: AlignedVec<T>,
     /// Packed tile buffer (empty until a packed-path stage runs).
-    tile: Vec<T>,
+    tile: AlignedVec<T>,
 }
 
 impl<T: Scalar> CycleWorkspace<T> {
     pub fn new(stage: &Stage) -> Self {
         let tile = if stage_uses_packed(stage) {
-            vec![T::zero(); (stage.b + stage.d + 1) * (stage.b + stage.d + 1)]
+            let side = stage.b + stage.d + 1;
+            AlignedVec::filled(side * side, T::zero())
         } else {
-            Vec::new()
+            AlignedVec::new()
         };
         Self {
-            x: vec![T::zero(); stage.d + 1],
-            w: vec![T::zero(); stage.b + stage.d + 1],
+            x: AlignedVec::filled(stage.d + 1, T::zero()),
+            w: AlignedVec::filled(stage.b + stage.d + 1, T::zero()),
             tile,
         }
     }
@@ -92,7 +126,7 @@ impl<T: Scalar> CycleWorkspace<T> {
     /// used by the plan executor's per-slot scratch, which is shared by
     /// problems of mixed shapes.
     pub fn growable() -> Self {
-        Self { x: Vec::new(), w: Vec::new(), tile: Vec::new() }
+        Self { x: AlignedVec::new(), w: AlignedVec::new(), tile: AlignedVec::new() }
     }
 
     /// Grow the Householder buffers to cover `stage` (the packed-tile
@@ -107,6 +141,15 @@ impl<T: Scalar> CycleWorkspace<T> {
         }
     }
 
+    /// Test-only: every buffer starts on a 64-byte boundary (empty
+    /// buffers report their well-aligned dangling pointer).
+    #[cfg(test)]
+    pub(crate) fn alignment_ok(&self) -> bool {
+        self.x.as_ptr() as usize % 64 == 0
+            && self.w.as_ptr() as usize % 64 == 0
+            && self.tile.as_ptr() as usize % 64 == 0
+    }
+
     /// Workspace sized for every launch of a plan, straight from the IR's
     /// max-slot metadata (`max_d`, `max_bd`) — no stage re-scan.
     pub fn for_plan(plan: &LaunchPlan) -> Self {
@@ -117,9 +160,13 @@ impl<T: Scalar> CycleWorkspace<T> {
             .flat_map(|p| p.stages.iter())
             .any(stage_uses_packed);
         Self {
-            x: vec![T::zero(); plan.max_d + 1],
-            w: vec![T::zero(); plan.max_bd + 1],
-            tile: if needs_tile { vec![T::zero(); tile_side * tile_side] } else { Vec::new() },
+            x: AlignedVec::filled(plan.max_d + 1, T::zero()),
+            w: AlignedVec::filled(plan.max_bd + 1, T::zero()),
+            tile: if needs_tile {
+                AlignedVec::filled(tile_side * tile_side, T::zero())
+            } else {
+                AlignedVec::new()
+            },
         }
     }
 }
@@ -292,6 +339,23 @@ pub unsafe fn exec_right<T: Scalar, V: BandView<T>>(
     task: &CycleTask,
     ws: &mut CycleWorkspace<T>,
 ) {
+    exec_right_with(view, stage, task, ws, SimdSpec::scalar())
+}
+
+/// [`exec_right`] with every hot loop routed through the [`Scalar`]
+/// `simd_*` hooks under `spec` — the SIMD dispatch seam. With the scalar
+/// spec (or a non-contracting vector spec) results are bitwise-identical
+/// to the historical loops; see the `crate::simd` equivalence contract.
+///
+/// # Safety
+/// As [`exec_right`].
+pub unsafe fn exec_right_with<T: Scalar, V: BandView<T>>(
+    view: &V,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+    spec: SimdSpec,
+) {
     let n = view.n();
     let j0 = task.anchor;
     let rp = task.pivot_row;
@@ -307,7 +371,7 @@ pub unsafe fn exec_right<T: Scalar, V: BandView<T>>(
     for (jj, xv) in x.iter_mut().enumerate() {
         *xv = view.get(rp, j0 + jj);
     }
-    let tau = make_reflector(x);
+    let tau = make_reflector_simd(x, spec);
     // Write back β and exact zeros (Alg. 2 line 6).
     view.set(rp, j0, x[0]);
     for jj in 1..=dd {
@@ -333,27 +397,19 @@ pub unsafe fn exec_right<T: Scalar, V: BandView<T>>(
     for jj in 1..=dd {
         let vj = x[jj];
         let seg = view.col_segment_mut(j0 + jj, r0, r1);
-        for (wi, si) in w.iter_mut().zip(seg.iter()) {
-            *wi = vj.mul_add(*si, *wi);
-        }
+        T::simd_fma_axpy(spec, w, vj, seg);
     }
     // Scale by τ once.
-    for wi in w.iter_mut() {
-        *wi = tau * *wi;
-    }
+    T::simd_scale(spec, w, tau);
     // Pass 2: A[., j0+jj] −= w · v_jj
     {
         let seg = view.col_segment_mut(j0, r0, r1);
-        for (si, wi) in seg.iter_mut().zip(w.iter()) {
-            *si = *si - *wi;
-        }
+        T::simd_sub(spec, seg, w);
     }
     for jj in 1..=dd {
         let vj = x[jj];
         let seg = view.col_segment_mut(j0 + jj, r0, r1);
-        for (si, wi) in seg.iter_mut().zip(w.iter()) {
-            *si = *si - *wi * vj;
-        }
+        T::simd_sub_scaled(spec, seg, w, vj);
     }
 }
 
@@ -370,6 +426,21 @@ pub unsafe fn exec_left<T: Scalar, V: BandView<T>>(
     task: &CycleTask,
     ws: &mut CycleWorkspace<T>,
 ) {
+    exec_left_with(view, stage, task, ws, SimdSpec::scalar())
+}
+
+/// [`exec_left`] with the column dot/update loops routed through the
+/// [`Scalar`] `simd_*` hooks under `spec` (see [`exec_right_with`]).
+///
+/// # Safety
+/// As [`exec_left`].
+pub unsafe fn exec_left_with<T: Scalar, V: BandView<T>>(
+    view: &V,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+    spec: SimdSpec,
+) {
     let n = view.n();
     let j0 = task.anchor;
     let i1 = (j0 + stage.d).min(n - 1);
@@ -383,7 +454,7 @@ pub unsafe fn exec_left<T: Scalar, V: BandView<T>>(
         let seg = view.col_segment_mut(j0, j0, i1);
         x.copy_from_slice(seg);
     }
-    let tau = make_reflector(x);
+    let tau = make_reflector_simd(x, spec);
     {
         let seg = view.col_segment_mut(j0, j0, i1);
         seg[0] = x[0];
@@ -400,15 +471,10 @@ pub unsafe fn exec_left<T: Scalar, V: BandView<T>>(
     let c1 = (j0 + stage.b + stage.d).min(n - 1);
     for col in (j0 + 1)..=c1 {
         let seg = view.col_segment_mut(col, j0, i1);
-        let mut dot = seg[0];
-        for (vi, si) in x[1..].iter().zip(seg[1..].iter()) {
-            dot = vi.mul_add(*si, dot);
-        }
+        let dot = T::simd_dot_fma(spec, seg[0], &x[1..], &seg[1..]);
         let cfac = tau * dot;
         seg[0] = seg[0] - cfac;
-        for (vi, si) in x[1..].iter().zip(seg[1..].iter_mut()) {
-            *si = *si - cfac * *vi;
-        }
+        T::simd_sub_scaled(spec, &mut seg[1..], &x[1..], cfac);
     }
 }
 
@@ -426,6 +492,23 @@ pub unsafe fn exec_cycle_packed<T: Scalar>(
     task: &CycleTask,
     ws: &mut CycleWorkspace<T>,
 ) {
+    exec_cycle_packed_with(view, stage, task, ws, SimdSpec::scalar())
+}
+
+/// [`exec_cycle_packed`] chasing the packed tile with the SIMD kernels
+/// selected by `spec` — the only place vector kernels run: the packed
+/// workspace is the contiguous, 64-byte-aligned memory they are built
+/// for. Bitwise-identical to the scalar path for non-contracting specs.
+///
+/// # Safety
+/// As [`exec_cycle_packed`].
+pub unsafe fn exec_cycle_packed_with<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+    simd: SimdSpec,
+) {
     let spec = task_tile_spec(stage, task, view.n);
     let elems = spec.elems();
     let mut tile = std::mem::take(&mut ws.tile);
@@ -434,8 +517,8 @@ pub unsafe fn exec_cycle_packed<T: Scalar>(
     }
     view.pack_tile(&spec, &mut tile[..elems]);
     let tv = TileView { data: tile.as_mut_ptr(), spec, pitch: spec.pitch(), n: view.n };
-    exec_right(&tv, stage, task, ws);
-    exec_left(&tv, stage, task, ws);
+    exec_right_with(&tv, stage, task, ws, simd);
+    exec_left_with(&tv, stage, task, ws, simd);
     view.unpack_tile(&spec, &tile[..elems]);
     ws.tile = tile;
 }
@@ -481,8 +564,26 @@ pub unsafe fn exec_cycle_shared<T: Scalar>(
     task: &CycleTask,
     ws: &mut CycleWorkspace<T>,
 ) {
+    exec_cycle_shared_with(view, stage, task, ws, SimdSpec::scalar())
+}
+
+/// [`exec_cycle_shared`] with a SIMD spec: packed-path stages chase
+/// through the vector kernels, in-place (below-gate) stages always run
+/// the scalar loops — narrow strided columns have nothing for the lanes
+/// to stream over, and keeping them scalar keeps the below-gate path
+/// byte-for-byte shared with every other backend.
+///
+/// # Safety
+/// As [`exec_cycle_shared`].
+pub unsafe fn exec_cycle_shared_with<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+    simd: SimdSpec,
+) {
     if stage_uses_packed(stage) {
-        exec_cycle_packed(view, stage, task, ws);
+        exec_cycle_packed_with(view, stage, task, ws, simd);
     } else {
         exec_cycle_inplace(view, stage, task, ws);
     }
@@ -493,6 +594,7 @@ mod tests {
     use super::*;
     use crate::banded::dense::Dense;
     use crate::generate::random_banded;
+    use crate::householder::make_reflector;
     use crate::util::rng::Xoshiro256;
 
     /// Dense-oracle version of one cycle, built from the generic dense
@@ -622,6 +724,93 @@ mod tests {
         // Narrow plans skip the tile allocation.
         let narrow = LaunchPlan::for_problem(64, 4, &TuneParams { tpb: 32, tw: 2, max_blocks: 8 });
         assert!(CycleWorkspace::<f64>::for_plan(&narrow).tile.is_empty());
+    }
+
+    #[test]
+    fn workspace_buffers_are_64_byte_aligned() {
+        // The SIMD alignment contract: every buffer the lane kernels can
+        // stream over starts on a cache line, through growth.
+        let stage = Stage::new(40, 24); // above the packed gate
+        let ws = CycleWorkspace::<f64>::new(&stage);
+        assert_eq!(ws.x.as_ptr() as usize % 64, 0);
+        assert_eq!(ws.w.as_ptr() as usize % 64, 0);
+        assert_eq!(ws.tile.as_ptr() as usize % 64, 0);
+        let mut grown = CycleWorkspace::<f32>::growable();
+        grown.ensure_stage(&stage);
+        assert_eq!(grown.x.as_ptr() as usize % 64, 0);
+        assert_eq!(grown.w.as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn simd_packed_cycle_is_bitwise_equal_to_scalar_packed_cycle() {
+        use crate::simd::{detect_isa, SimdIsa};
+        // Full sweeps over shapes above the gate (b + d ≥ 48), every
+        // host-constructible non-contracting spec vs the scalar loops.
+        let mut rng = Xoshiro256::seed_from_u64(91);
+        let isas = [SimdIsa::Portable, detect_isa().unwrap_or(SimdIsa::Portable)];
+        for (n, b, d) in [(200usize, 32usize, 16usize), (280, 40, 24)] {
+            let stage = Stage::new(b, d);
+            let base = random_banded::<f64>(n, b, d, &mut rng);
+            for isa in isas {
+                let spec = SimdSpec::with_contract(isa, false);
+                let mut a1 = base.clone();
+                let mut a2 = base.clone();
+                let mut ws1 = CycleWorkspace::new(&stage);
+                let mut ws2 = CycleWorkspace::new(&stage);
+                for k in 0..stage.num_sweeps(n) {
+                    for c in 0..=stage.cmax(n, k) {
+                        let task = stage.task(k, c);
+                        let v1 = SharedBanded::new(&mut a1);
+                        let v2 = SharedBanded::new(&mut a2);
+                        // SAFETY: exclusive borrows, no concurrency.
+                        unsafe {
+                            exec_cycle_packed(&v1, &stage, &task, &mut ws1);
+                            exec_cycle_packed_with(&v2, &stage, &task, &mut ws2, spec);
+                        }
+                    }
+                }
+                assert_eq!(a1, a2, "n={n} b={b} d={d} {isa:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn contracted_simd_cycle_stays_within_reduction_tolerance() {
+        use crate::simd::SimdIsa;
+        // The contracted path reassociates only the reductions; a chased
+        // band must stay element-wise close to the scalar result and
+        // still annihilate exactly (zeros are written, not computed).
+        let mut rng = Xoshiro256::seed_from_u64(92);
+        let (n, b, d) = (200usize, 32usize, 16usize);
+        let stage = Stage::new(b, d);
+        let base = random_banded::<f64>(n, b, d, &mut rng);
+        let spec = SimdSpec::with_contract(SimdIsa::Portable, true);
+        let mut a1 = base.clone();
+        let mut a2 = base.clone();
+        let mut ws1 = CycleWorkspace::new(&stage);
+        let mut ws2 = CycleWorkspace::new(&stage);
+        for k in 0..stage.num_sweeps(n) {
+            for c in 0..=stage.cmax(n, k) {
+                let task = stage.task(k, c);
+                let v1 = SharedBanded::new(&mut a1);
+                let v2 = SharedBanded::new(&mut a2);
+                // SAFETY: exclusive borrows, no concurrency.
+                unsafe {
+                    exec_cycle_packed(&v1, &stage, &task, &mut ws1);
+                    exec_cycle_packed_with(&v2, &stage, &task, &mut ws2, spec);
+                }
+            }
+        }
+        assert_eq!(a2.max_off_band(stage.b_out()), 0.0, "exact zeros survive contraction");
+        let scale = a1.fro_norm();
+        let mut worst = 0.0f64;
+        for (x, y) in a1.data().iter().zip(a2.data().iter()) {
+            worst = worst.max((x - y).abs());
+        }
+        // Loose sanity bound: reassociation perturbs each reflector at
+        // O(d·eps); the chase amplifies but must stay far below 1e-8
+        // relative for this well-conditioned random band.
+        assert!(worst <= 1e-8 * scale, "worst {worst:e} vs scale {scale:e}");
     }
 
     #[test]

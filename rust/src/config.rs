@@ -7,7 +7,9 @@
 //!
 //! | Variable | Default | Effect |
 //! | --- | --- | --- |
-//! | `BSVD_PACKED_SPAN_MIN` | `48` | Minimum stage span `b + d` routed through the packed-tile kernel path ([`crate::bulge::cycle::PACKED_SPAN_MIN`]); `0` forces every stage packed, a huge value forces in-place. Read once, on first use. |
+//! | `BSVD_PACKED_SPAN_MIN` | `48` | Minimum stage span `b + d` routed through the packed-tile kernel path ([`crate::bulge::cycle::PACKED_SPAN_MIN`]); `0` forces every stage packed, a huge value forces in-place. Read once, on first use (tests/benches may override via [`crate::bulge::cycle::set_packed_span_min`]). |
+//! | `BSVD_SIMD` | `auto` | ISA policy of the [`crate::backend::SimdBackend`] kernel spec ([`crate::simd::SimdSpec::from_env`]): `auto` uses the detected ISA and falls back to scalar, `force` insists on a vector path (portable lanes when detection fails), `off` pins the scalar kernels. Read once, on first use. |
+//! | `BSVD_SIMD_CONTRACT` | `0` | `1` lets the SIMD reductions (dot, column norm) use fixed-width lane partials — deterministic and ulp-bounded, but no longer bitwise-identical to the sequential oracle. Read once, with `BSVD_SIMD`. |
 //! | `BSVD_ARTIFACTS` | `artifacts` | Directory the PJRT backends load AOT-compiled HLO artifacts from ([`crate::runtime::artifact_dir`]). Read on every resolution, so it can be repointed between engine loads. |
 //! | `BSVD_SERVICE_WINDOW_US` | `500` | Micro-batching window of the reduction service ([`ServiceConfig::window`]), in microseconds: how long the batcher holds the first pending job open for co-scheduling before flushing. Read when a [`ServiceConfig`] is constructed with `Default`. |
 //! | `BSVD_SERVICE_QUEUE_CAP` | `1024` | Maximum pending jobs in the service submission queue ([`ServiceConfig::queue_cap`]); submissions beyond it are rejected at admission. Read when a [`ServiceConfig`] is constructed with `Default`. |
@@ -338,6 +340,18 @@ pub enum BackendKind {
     /// Pure-Rust, launch-level parallelism over the worker thread pool
     /// (one pinned dispatch + one barrier per launch).
     Threadpool,
+    /// The threadpool launch loop with packed-path cycle kernels routed
+    /// through explicit SIMD lanes (`BSVD_SIMD` selects the ISA policy;
+    /// scalar fallback keeps it runnable everywhere).
+    ///
+    /// ```
+    /// use banded_svd::config::BackendKind;
+    ///
+    /// let kind: BackendKind = "simd".parse().unwrap();
+    /// assert_eq!(kind.name(), "simd");
+    /// assert!(BackendKind::ALL.contains(&BackendKind::Simd));
+    /// ```
+    Simd,
     /// AOT JAX/Pallas artifacts executed through PJRT, one call per
     /// launch, with per-problem device-resident buffers.
     Pjrt,
@@ -348,9 +362,10 @@ pub enum BackendKind {
 impl BackendKind {
     /// Every registered backend kind, in reference-first order (the
     /// equivalence property test iterates this).
-    pub const ALL: [BackendKind; 4] = [
+    pub const ALL: [BackendKind; 5] = [
         BackendKind::Sequential,
         BackendKind::Threadpool,
+        BackendKind::Simd,
         BackendKind::Pjrt,
         BackendKind::PjrtFused,
     ];
@@ -360,6 +375,7 @@ impl BackendKind {
         match self {
             BackendKind::Sequential => "sequential",
             BackendKind::Threadpool => "threadpool",
+            BackendKind::Simd => "simd",
             BackendKind::Pjrt => "pjrt",
             BackendKind::PjrtFused => "pjrt-fused",
         }
@@ -374,10 +390,11 @@ impl std::str::FromStr for BackendKind {
             // "par"/"parallel" kept as aliases from when the threadpool
             // executor was the only parallel backend.
             "par" | "parallel" | "tp" | "threadpool" => Ok(BackendKind::Threadpool),
+            "simd" | "vector" => Ok(BackendKind::Simd),
             "pjrt" => Ok(BackendKind::Pjrt),
             "pjrt-fused" | "fused" => Ok(BackendKind::PjrtFused),
             other => Err(format!(
-                "unknown backend {other:?} (sequential|threadpool|pjrt|pjrt-fused)"
+                "unknown backend {other:?} (sequential|threadpool|simd|pjrt|pjrt-fused)"
             )),
         }
     }
@@ -488,6 +505,8 @@ mod tests {
         assert_eq!("threadpool".parse::<BackendKind>().unwrap(), BackendKind::Threadpool);
         // Legacy aliases from before the trait refactor keep working.
         assert_eq!("par".parse::<BackendKind>().unwrap(), BackendKind::Threadpool);
+        assert_eq!("simd".parse::<BackendKind>().unwrap(), BackendKind::Simd);
+        assert_eq!("vector".parse::<BackendKind>().unwrap(), BackendKind::Simd);
         assert_eq!("pjrt-fused".parse::<BackendKind>().unwrap(), BackendKind::PjrtFused);
         assert!("bogus".parse::<BackendKind>().is_err());
         for kind in BackendKind::ALL {

@@ -10,6 +10,10 @@
 //!   Rust cycle kernels (any precision), executed by
 //!   [`crate::backend::SequentialBackend`] /
 //!   [`crate::backend::ThreadpoolBackend`].
+//! - [`BackendKind::Simd`] — the same launch loop over the coordinator's
+//!   resident pool, with packed-path tasks routed through the
+//!   [`crate::simd`] vector kernels
+//!   ([`crate::backend::SimdBackend::borrowing`]).
 //! - [`BackendKind::Pjrt`] — the plan-driven PJRT executor
 //!   ([`crate::backend::PjrtBackend`]): per-launch AOT artifacts, one
 //!   device-resident buffer, f32.
@@ -20,7 +24,7 @@ pub mod metrics;
 
 use crate::backend::{
     execute_reduction, pjrt::execute_plan_on_engine, AsBandStorageMut, Backend, SequentialBackend,
-    ThreadpoolBackend,
+    SimdBackend, ThreadpoolBackend,
 };
 use crate::banded::storage::Banded;
 use crate::config::{BackendKind, TuneParams};
@@ -108,6 +112,9 @@ impl Coordinator {
         match kind {
             BackendKind::Sequential => self.reduce_with(&SequentialBackend::new(), a, bw),
             BackendKind::Threadpool => self.reduce_with(&self.threadpool, a, bw),
+            // Borrows the resident pool: no extra threads, just the
+            // environment-resolved kernel spec on the packed path.
+            BackendKind::Simd => self.reduce_with(&SimdBackend::borrowing(self.pool()), a, bw),
             other => Err(Error::Config(format!(
                 "reduce_native cannot run backend {other:?}; use reduce_pjrt"
             ))),
@@ -203,9 +210,18 @@ mod tests {
         let (n, bw) = (64, 8);
         let mut a1 = random_banded::<f64>(n, bw, 4, &mut rng);
         let mut a2 = a1.clone();
+        let mut a3 = a1.clone();
         let r1 = coord.reduce_native(&mut a1, bw, BackendKind::Sequential).unwrap();
         let r2 = coord.reduce_native(&mut a2, bw, BackendKind::Threadpool).unwrap();
+        let r3 = coord.reduce_native(&mut a3, bw, BackendKind::Simd).unwrap();
         assert_eq!(a1, a2);
+        // The SIMD kind borrows the resident pool; under the default
+        // (non-contracting) spec it matches the oracle bitwise too.
+        if std::env::var("BSVD_SIMD_CONTRACT").as_deref() != Ok("1") {
+            assert_eq!(a1, a3);
+        }
+        assert_eq!(r3.backend, BackendKind::Simd);
+        assert_eq!(r1.metrics.per_launch, r3.metrics.per_launch);
         assert_eq!(r1.metrics.launches, r2.metrics.launches);
         assert_eq!(r1.metrics.tasks, r2.metrics.tasks);
         assert_eq!(r1.metrics.per_launch, r2.metrics.per_launch);

@@ -9,4 +9,5 @@ mod reflector;
 
 pub use reflector::{
     apply_reflector_cols, apply_reflector_rows, apply_reflector_vec, make_reflector,
+    make_reflector_simd,
 };

@@ -2,6 +2,7 @@
 
 use crate::banded::dense::Dense;
 use crate::scalar::Scalar;
+use crate::simd::SimdSpec;
 
 /// Compute a Householder reflector for `x` (length ≥ 1), LAPACK
 /// `larfg`-style, **in place**:
@@ -13,22 +14,34 @@ use crate::scalar::Scalar;
 /// element" guard that keeps bulge chasing stable when a bulge is already
 /// annihilated.
 pub fn make_reflector<T: Scalar>(x: &mut [T]) -> T {
+    make_reflector_simd(x, SimdSpec::scalar())
+}
+
+/// [`make_reflector`] with the column-norm reduction routed through the
+/// [`Scalar::simd_tail_sum_squares`] hook under `spec`. With a
+/// non-contracting spec the reduction stays sequential, so this is
+/// bitwise-identical to [`make_reflector`]; a contracting spec trades
+/// that for the ulp-bounded deterministic reduction (see
+/// [`crate::simd`]).
+pub fn make_reflector_simd<T: Scalar>(x: &mut [T], spec: SimdSpec) -> T {
     let m = x.len();
     if m <= 1 {
         return T::zero();
     }
-    let alpha = x[0];
     // ||x[1..]||² with scaling guard: compute in f64 for the norm only —
     // the working precision still dominates rounding via the stored v, β.
-    let mut ssq = 0.0f64;
-    for v in &x[1..] {
-        let t = v.to_f64();
-        ssq += t * t;
-    }
+    let ssq = T::simd_tail_sum_squares(spec, &x[1..]);
+    make_reflector_with_sumsq(x, ssq)
+}
+
+/// The tail of reflector construction, once `ssq = Σ to_f64(x[i])²` over
+/// `x[1..]` is known. Split out so every norm strategy (sequential,
+/// contracted lanes) funnels into one β/τ/scale computation.
+fn make_reflector_with_sumsq<T: Scalar>(x: &mut [T], ssq: f64) -> T {
     if ssq == 0.0 {
         return T::zero();
     }
-    let a = alpha.to_f64();
+    let a = x[0].to_f64();
     let norm = (a * a + ssq).sqrt();
     // β takes the opposite sign of α to avoid cancellation.
     let beta = if a >= 0.0 { -norm } else { norm };
@@ -219,6 +232,36 @@ mod tests {
         for j in 0..3 {
             assert!((a.get(1, j) - row1[j]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn simd_reflector_matches_scalar_bitwise_without_contraction() {
+        use crate::simd::{detect_isa, SimdIsa};
+        let orig: Vec<f64> = (0..37).map(|i| (i as f64 * 0.731 - 11.0) / 3.0).collect();
+        for isa in [SimdIsa::Portable, detect_isa().unwrap_or(SimdIsa::Portable)] {
+            let mut x_ref = orig.clone();
+            let tau_ref = make_reflector(&mut x_ref);
+            let mut x = orig.clone();
+            let tau = make_reflector_simd(&mut x, SimdSpec::with_contract(isa, false));
+            assert_eq!(tau.to_bits(), tau_ref.to_bits(), "{isa:?}");
+            let same = x.iter().zip(&x_ref).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{isa:?}");
+            // Contracted norm: not bitwise, but ulp-close and still a
+            // valid reflector (tail annihilated).
+            let mut xc = orig.clone();
+            let tau_c = make_reflector_simd(&mut xc, SimdSpec::with_contract(isa, true));
+            assert!((tau_c - tau_ref).abs() <= 16.0 * f64::EPSILON * tau_ref.abs());
+            let mut y = orig.clone();
+            apply_reflector_vec(tau_c, &xc[1..], &mut y);
+            for v in &y[1..] {
+                assert!(v.abs() < 1e-12, "tail not annihilated under contraction");
+            }
+        }
+        // Zero tail: identity on every path, x untouched.
+        let mut z = vec![7.0f64, 0.0, 0.0];
+        let spec = SimdSpec::with_contract(SimdIsa::Portable, true);
+        assert_eq!(make_reflector_simd(&mut z, spec), 0.0);
+        assert_eq!(z, vec![7.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -29,11 +29,11 @@
 //!                ┌─────────────────────┼──────────────────────┐
 //!                ▼                     ▼                      ▼
 //!        backend::Backend     simulator::simulate_plan   autotune_for
-//!     ┌──────────┼──────────┐  (costs the identical      (per-backend
-//!     ▼          ▼          ▼   value, exactly)           cost hook)
-//! Sequential Threadpool   Pjrt
-//!  (inline)  (pool+pins) (AOT artifacts, one
-//!                         device buffer per problem)
+//!   ┌────────┬───┴───┬────────┐ (costs the identical     (per-backend
+//!   ▼        ▼       ▼        ▼  value, exactly)          cost hook)
+//! Sequential Threadpool Simd Pjrt
+//!  (inline) (pool+pins) (pool+  (AOT artifacts, one
+//!                   lane kernels) device buffer per problem)
 //! ```
 //!
 //! - The **scheduler** lowers the 3-cycle schedule into symbolic
@@ -184,13 +184,15 @@ pub mod plan;
 pub mod runtime;
 pub mod scalar;
 pub mod service;
+pub mod simd;
 pub mod simulator;
 pub mod util;
 
 /// Convenient re-exports of the public API surface.
 pub mod prelude {
     pub use crate::backend::{
-        AsBandStorageMut, Backend, PjrtBackend, SequentialBackend, ThreadpoolBackend,
+        AsBandStorageMut, Backend, PjrtBackend, SequentialBackend, SimdBackend,
+        ThreadpoolBackend,
     };
     pub use crate::banded::{Banded, Dense};
     pub use crate::batch::{
@@ -214,6 +216,7 @@ pub mod prelude {
     };
     pub use crate::plan::{LaunchPlan, TaskSlot};
     pub use crate::scalar::{Scalar, ScalarKind, F16};
+    pub use crate::simd::{SimdIsa, SimdSpec};
     pub use crate::service::{
         JobResult, JobTicket, PlanCache, Server, Service, ServiceStats, ShardStats,
     };

@@ -39,7 +39,7 @@ fn cli() -> Cli {
                     opt("tw", "inner tilewidth", "8"),
                     opt("tpb", "threads per block", "32"),
                     opt("max-blocks", "block capacity per launch", "192"),
-                    opt("backend", "sequential|threadpool|pjrt|pjrt-fused", "threadpool"),
+                    opt("backend", "sequential|threadpool|simd|pjrt|pjrt-fused", "threadpool"),
                     opt("threads", "worker threads (0 = all cores)", "0"),
                     opt("seed", "rng seed", "42"),
                     flag("verify", "check singular values against the Jacobi oracle (n ≤ 512)"),
@@ -63,7 +63,7 @@ fn cli() -> Cli {
                     opt("max-blocks", "joint block capacity per shared launch", "192"),
                     opt("policy", "packing policy: round-robin|greedy-fill", "round-robin"),
                     opt("max-coresident", "max problems interleaved at once", "64"),
-                    opt("backend", "sequential|threadpool|pjrt", "threadpool"),
+                    opt("backend", "sequential|threadpool|simd|pjrt", "threadpool"),
                     opt("threads", "worker threads (0 = all cores)", "0"),
                     opt("seed", "rng seed", "42"),
                 ],
@@ -98,7 +98,7 @@ fn cli() -> Cli {
                     opt("max-blocks", "block capacity per launch (local modes)", "192"),
                     opt("policy", "packing policy: round-robin|greedy-fill", "round-robin"),
                     opt("max-coresident", "max problems interleaved at once", "16"),
-                    opt("backend", "sequential|threadpool|pjrt (local modes)", "threadpool"),
+                    opt("backend", "sequential|threadpool|simd|pjrt (local modes)", "threadpool"),
                     opt("threads", "worker threads (0 = all cores, local modes)", "0"),
                     opt("seed", "rng seed", "42"),
                     flag("shutdown", "after the run, ask the remote server(s) to shut down"),
@@ -109,7 +109,7 @@ fn cli() -> Cli {
                 about: "serve a stream of reduction jobs over TCP (JSON lines)",
                 opts: vec![
                     opt("addr", "listen address (port 0 = ephemeral)", "127.0.0.1:7070"),
-                    opt("backend", "sequential|threadpool|pjrt", "threadpool"),
+                    opt("backend", "sequential|threadpool|simd|pjrt", "threadpool"),
                     opt("threads", "worker threads (0 = all cores)", "0"),
                     opt("workers", "batcher shards, each with its own backend (overrides env)", ""),
                     opt("routing", "job-to-shard routing: least-loaded|size-class", "least-loaded"),
@@ -188,9 +188,27 @@ fn cli() -> Cli {
                     opt("precision", "fp16|fp32|fp64", "fp32"),
                     opt(
                         "backend",
-                        "cost profile to tune for: native|pjrt|pjrt-streaming",
+                        "cost profile to tune for: native|simd|pjrt|pjrt-streaming",
                         "native",
                     ),
+                ],
+            },
+            Command {
+                name: "bench-collect",
+                about: "merge bench experiment JSON into one BENCH snapshot file",
+                opts: vec![
+                    opt("dir", "experiments directory to harvest", "target/experiments"),
+                    opt("out", "snapshot file to write", "BENCH.json"),
+                    opt("label", "snapshot label (e.g. a PR or host name)", "local"),
+                ],
+            },
+            Command {
+                name: "bench-gate",
+                about: "fail (exit 1) when a BENCH snapshot regresses vs a baseline",
+                opts: vec![
+                    opt("baseline", "committed baseline snapshot", "BENCH_PR7.json"),
+                    opt("current", "freshly collected snapshot", "BENCH.json"),
+                    opt("tolerance", "allowed fractional regression", "0.10"),
                 ],
             },
             Command {
@@ -235,6 +253,8 @@ fn main() {
         "hardware" => cmd_hardware(&parsed.args),
         "profile" => cmd_profile(),
         "tune" => cmd_tune(&parsed.args),
+        "bench-collect" => cmd_bench_collect(&parsed.args),
+        "bench-gate" => cmd_bench_gate(&parsed.args),
         "artifacts-info" => cmd_artifacts_info(&parsed.args),
         _ => unreachable!(),
     };
@@ -274,6 +294,11 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
     };
     let seed: u64 = args.parse_or("seed", 42);
     let threads: usize = args.parse_or("threads", 0);
+    if backend == BackendKind::Simd {
+        // Provenance: the backend name stays "simd" everywhere; what ISA
+        // actually resolved is an executor detail, reported here.
+        println!("simd kernels: {}", banded_svd::simd::SimdSpec::from_env().describe());
+    }
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let tw = params.effective_tw(bw);
     let a = random_banded::<f64>(n, bw, tw, &mut rng);
@@ -735,6 +760,9 @@ fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
     };
     {
         let cfg = server.service().config();
+        if cfg.backend == BackendKind::Simd {
+            println!("simd kernels: {}", banded_svd::simd::SimdSpec::from_env().describe());
+        }
         println!(
             "banded-svd serve listening on {} (backend {}, {} worker shard(s), {} routing, \
              max co-resident {}, window {} µs, queue cap {})",
@@ -970,10 +998,11 @@ fn cmd_tune(args: &banded_svd::util::cli::Args) -> i32 {
     let profile_name = args.get("backend").unwrap_or("native");
     let profile = match profile_name {
         "native" => simulator::BackendCostModel::native(),
+        "simd" => simulator::BackendCostModel::simd(),
         "pjrt" => simulator::BackendCostModel::pjrt(),
         "pjrt-streaming" => simulator::BackendCostModel::pjrt_tile_streaming(),
         other => {
-            eprintln!("unknown cost profile {other:?} (native|pjrt|pjrt-streaming)");
+            eprintln!("unknown cost profile {other:?} (native|simd|pjrt|pjrt-streaming)");
             return 2;
         }
     };
@@ -994,6 +1023,90 @@ fn cmd_tune(args: &banded_svd::util::cli::Args) -> i32 {
         100.0 * (h_time - tuned.modeled_seconds) / h_time
     );
     0
+}
+
+fn cmd_bench_collect(args: &banded_svd::util::cli::Args) -> i32 {
+    use banded_svd::util::benchcmp::{collect_experiments, snapshot};
+    let dir = std::path::PathBuf::from(args.get("dir").unwrap_or("target/experiments"));
+    let out = args.get("out").unwrap_or("BENCH.json").to_string();
+    let label = args.get("label").unwrap_or("local").to_string();
+    let metrics = collect_experiments(&dir);
+    if metrics.is_empty() {
+        eprintln!(
+            "no bench metrics under {} (run the perf benches first: \
+             perf_hotpath, batch_scaling, service_throughput)",
+            dir.display()
+        );
+        return 1;
+    }
+    let snap = snapshot(&label, true, &metrics);
+    match std::fs::write(&out, snap.render() + "\n") {
+        Ok(()) => {
+            println!("wrote {} metrics to {out} (label {label}, measured)", metrics.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: write {out}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_bench_gate(args: &banded_svd::util::cli::Args) -> i32 {
+    use banded_svd::util::benchcmp::{gate, GateOutcome};
+    use banded_svd::util::json::Json;
+    let read = |path: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))
+    };
+    let baseline_path = args.get("baseline").unwrap_or("BENCH_PR7.json");
+    let current_path = args.get("current").unwrap_or("BENCH.json");
+    let tolerance: f64 = args.parse_or("tolerance", 0.10);
+    let (baseline, current) = match (read(baseline_path), read(current_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    match gate(&baseline, &current, tolerance) {
+        GateOutcome::SkippedUnmeasured => {
+            println!(
+                "baseline {baseline_path} is an unmeasured seed (or not a bench snapshot); \
+                 nothing to gate against — passing"
+            );
+            0
+        }
+        GateOutcome::Compared(deltas) => {
+            let mut table = Table::new(vec!["metric", "baseline", "current", "worse%", "verdict"]);
+            let mut failed = false;
+            for d in &deltas {
+                failed |= d.regressed;
+                table.row(vec![
+                    d.name.clone(),
+                    format!("{:.1}", d.baseline),
+                    format!("{:.1}", d.current),
+                    format!("{:+.1}", d.worsened_by * 100.0),
+                    if d.regressed { "REGRESSED".into() } else { "ok".into() },
+                ]);
+            }
+            table.print();
+            if failed {
+                eprintln!(
+                    "bench gate FAILED: regression beyond {:.0}% vs {baseline_path}",
+                    tolerance * 100.0
+                );
+                1
+            } else {
+                println!(
+                    "bench gate passed: {} metric(s) within {:.0}% of {baseline_path}",
+                    deltas.len(),
+                    tolerance * 100.0
+                );
+                0
+            }
+        }
+    }
 }
 
 fn cmd_artifacts_info(args: &banded_svd::util::cli::Args) -> i32 {

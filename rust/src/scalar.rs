@@ -5,6 +5,7 @@
 //! how GPU half-precision behaves for the scalar operations bulge-chasing
 //! performs — every op rounds back to binary16).
 
+use crate::simd::SimdSpec;
 use std::fmt;
 use std::ops::{Add, Div, Mul, Neg, Sub};
 
@@ -61,6 +62,76 @@ pub trait Scalar:
     fn is_finite(self) -> bool {
         self.to_f64().is_finite()
     }
+
+    /// SIMD lane width of this type's explicit vector kernels — `1`
+    /// means the type has none, and every `simd_*` hook below runs its
+    /// scalar default body regardless of the requested
+    /// [`SimdSpec`].
+    const LANES: usize = 1;
+
+    /// `w[i] = v.mul_add(s[i], w[i])` over the zipped prefix — the
+    /// streaming reflector-apply accumulation of the cycle kernels.
+    ///
+    /// The default body is the scalar reference loop; `f32`/`f64`
+    /// override it to dispatch through [`crate::simd::kernels`], whose
+    /// element-wise arms are bitwise-identical to this body on every
+    /// ISA (see the `crate::simd` equivalence contract).
+    #[inline]
+    fn simd_fma_axpy(_spec: SimdSpec, w: &mut [Self], v: Self, s: &[Self]) {
+        for (wi, si) in w.iter_mut().zip(s.iter()) {
+            *wi = v.mul_add(*si, *wi);
+        }
+    }
+
+    /// `w[i] = c * w[i]` — the `tau` scaling pass.
+    #[inline]
+    fn simd_scale(_spec: SimdSpec, w: &mut [Self], c: Self) {
+        for wi in w.iter_mut() {
+            *wi = c * *wi;
+        }
+    }
+
+    /// `dst[i] = dst[i] - src[i]` over the zipped prefix.
+    #[inline]
+    fn simd_sub(_spec: SimdSpec, dst: &mut [Self], src: &[Self]) {
+        for (di, si) in dst.iter_mut().zip(src.iter()) {
+            *di = *di - *si;
+        }
+    }
+
+    /// `dst[i] = dst[i] - src[i] * c` — the rank-1 update column pass.
+    #[inline]
+    fn simd_sub_scaled(_spec: SimdSpec, dst: &mut [Self], src: &[Self], c: Self) {
+        for (di, si) in dst.iter_mut().zip(src.iter()) {
+            *di = *di - *si * c;
+        }
+    }
+
+    /// Fused dot product `init + Σ v[i]*s[i]`, accumulated with
+    /// `mul_add` in sequence. A reduction: stays sequential (bitwise
+    /// vs this default) unless the spec opts in to contracted lane
+    /// partials, which are deterministic but only ulp-close.
+    #[inline]
+    fn simd_dot_fma(_spec: SimdSpec, init: Self, v: &[Self], s: &[Self]) -> Self {
+        let mut acc = init;
+        for (vi, si) in v.iter().zip(s.iter()) {
+            acc = vi.mul_add(*si, acc);
+        }
+        acc
+    }
+
+    /// Widened sum of squares `Σ to_f64(x[i])²` — the column norm
+    /// behind `householder::make_reflector`. Same reduction contract
+    /// as [`Scalar::simd_dot_fma`].
+    #[inline]
+    fn simd_tail_sum_squares(_spec: SimdSpec, x: &[Self]) -> f64 {
+        let mut ssq = 0.0f64;
+        for v in x {
+            let t = v.to_f64();
+            ssq += t * t;
+        }
+        ssq
+    }
 }
 
 impl Scalar for f64 {
@@ -96,6 +167,33 @@ impl Scalar for f64 {
     fn mul_add(self, a: Self, b: Self) -> Self {
         f64::mul_add(self, a, b)
     }
+
+    const LANES: usize = crate::simd::lane::F64x4::LANES;
+
+    #[inline]
+    fn simd_fma_axpy(spec: SimdSpec, w: &mut [Self], v: Self, s: &[Self]) {
+        crate::simd::kernels::kern_f64::fma_axpy(spec, w, v, s)
+    }
+    #[inline]
+    fn simd_scale(spec: SimdSpec, w: &mut [Self], c: Self) {
+        crate::simd::kernels::kern_f64::scale(spec, w, c)
+    }
+    #[inline]
+    fn simd_sub(spec: SimdSpec, dst: &mut [Self], src: &[Self]) {
+        crate::simd::kernels::kern_f64::sub(spec, dst, src)
+    }
+    #[inline]
+    fn simd_sub_scaled(spec: SimdSpec, dst: &mut [Self], src: &[Self], c: Self) {
+        crate::simd::kernels::kern_f64::sub_scaled(spec, dst, src, c)
+    }
+    #[inline]
+    fn simd_dot_fma(spec: SimdSpec, init: Self, v: &[Self], s: &[Self]) -> Self {
+        crate::simd::kernels::kern_f64::dot_fma(spec, init, v, s)
+    }
+    #[inline]
+    fn simd_tail_sum_squares(spec: SimdSpec, x: &[Self]) -> f64 {
+        crate::simd::kernels::kern_f64::tail_sum_squares(spec, x)
+    }
 }
 
 impl Scalar for f32 {
@@ -130,6 +228,33 @@ impl Scalar for f32 {
     #[inline]
     fn mul_add(self, a: Self, b: Self) -> Self {
         f32::mul_add(self, a, b)
+    }
+
+    const LANES: usize = crate::simd::lane::F32x8::LANES;
+
+    #[inline]
+    fn simd_fma_axpy(spec: SimdSpec, w: &mut [Self], v: Self, s: &[Self]) {
+        crate::simd::kernels::kern_f32::fma_axpy(spec, w, v, s)
+    }
+    #[inline]
+    fn simd_scale(spec: SimdSpec, w: &mut [Self], c: Self) {
+        crate::simd::kernels::kern_f32::scale(spec, w, c)
+    }
+    #[inline]
+    fn simd_sub(spec: SimdSpec, dst: &mut [Self], src: &[Self]) {
+        crate::simd::kernels::kern_f32::sub(spec, dst, src)
+    }
+    #[inline]
+    fn simd_sub_scaled(spec: SimdSpec, dst: &mut [Self], src: &[Self], c: Self) {
+        crate::simd::kernels::kern_f32::sub_scaled(spec, dst, src, c)
+    }
+    #[inline]
+    fn simd_dot_fma(spec: SimdSpec, init: Self, v: &[Self], s: &[Self]) -> Self {
+        crate::simd::kernels::kern_f32::dot_fma(spec, init, v, s)
+    }
+    #[inline]
+    fn simd_tail_sum_squares(spec: SimdSpec, x: &[Self]) -> f64 {
+        crate::simd::kernels::kern_f32::tail_sum_squares(spec, x)
     }
 }
 
@@ -443,6 +568,50 @@ mod tests {
         probe::<f64>();
         probe::<f32>();
         probe::<F16>();
+    }
+
+    #[test]
+    fn simd_hooks_match_their_scalar_defaults_bitwise() {
+        use crate::simd::{detect_isa, SimdIsa, SimdSpec};
+        // Element-wise hooks must be bitwise-identical on every arm the
+        // host can construct; F16 has no vector kernels (LANES == 1) so
+        // the spec is inert there by construction.
+        assert_eq!(<f64 as Scalar>::LANES, 4);
+        assert_eq!(<f32 as Scalar>::LANES, 8);
+        assert_eq!(<F16 as Scalar>::LANES, 1);
+        let specs = [
+            SimdSpec::scalar(),
+            SimdSpec::with_contract(SimdIsa::Portable, false),
+            SimdSpec::with_contract(detect_isa().unwrap_or(SimdIsa::Portable), false),
+        ];
+        fn probe<T: Scalar>(spec: SimdSpec) {
+            let v: Vec<T> = (0..13).map(|i| T::from_f64(i as f64 * 0.375 - 2.0)).collect();
+            let s: Vec<T> = (0..13).map(|i| T::from_f64(1.0 / (i as f64 + 1.5))).collect();
+            let mut w = v.clone();
+            T::simd_fma_axpy(spec, &mut w, T::from_f64(1.25), &s);
+            let mut want = v.clone();
+            for (wi, si) in want.iter_mut().zip(s.iter()) {
+                *wi = T::from_f64(1.25).mul_add(*si, *wi);
+            }
+            assert!(w.iter().zip(&want).all(|(a, b)| a.to_f64() == b.to_f64()));
+            let dot = T::simd_dot_fma(spec, T::one(), &v, &s);
+            let mut acc = T::one();
+            for (vi, si) in v.iter().zip(s.iter()) {
+                acc = vi.mul_add(*si, acc);
+            }
+            assert_eq!(dot.to_f64(), acc.to_f64(), "{spec:?}");
+            let mut ssq = 0.0f64;
+            for x in &v {
+                let t = x.to_f64();
+                ssq += t * t;
+            }
+            assert_eq!(T::simd_tail_sum_squares(spec, &v), ssq, "{spec:?}");
+        }
+        for spec in specs {
+            probe::<f64>(spec);
+            probe::<f32>(spec);
+            probe::<F16>(spec);
+        }
     }
 
     #[test]

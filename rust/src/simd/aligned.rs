@@ -1,0 +1,173 @@
+//! 64-byte-aligned growable buffers for the packed-tile workspaces.
+//!
+//! `Vec<f64>` guarantees only the element's own alignment (8), so a
+//! packed tile starting mid-cache-line splits every vector load that
+//! crosses the line. [`AlignedVec`] allocates in 64-byte blocks —
+//! cache-line and widest-vector-register aligned — so the lane kernels
+//! in [`crate::simd::kernels`] never start from a split line. It
+//! implements exactly the surface `bulge::cycle::CycleWorkspace` needs
+//! (`Deref`/`DerefMut` to `[T]`, `resize`, `Default` for `mem::take`),
+//! nothing more.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::ops::{Deref, DerefMut};
+
+/// The allocation granule: one cache line.
+const BLOCK: usize = 64;
+
+/// One 64-byte-aligned block; `Vec<Chunk>`'s buffer is therefore
+/// 64-byte-aligned as a whole (including the dangling pointer of an
+/// empty vec, which `Vec` aligns to the element type).
+#[derive(Copy, Clone)]
+#[repr(C, align(64))]
+struct Chunk([u8; BLOCK]);
+
+const ZERO_CHUNK: Chunk = Chunk([0u8; BLOCK]);
+
+/// A growable buffer of `T` whose data pointer is always 64-byte
+/// aligned. Grows like the `Vec` it wraps (shrinking keeps capacity);
+/// all element access goes through `Deref`/`DerefMut` to `[T]`.
+///
+/// `T` must be `Copy` and no more than 64-byte aligned — the element
+/// types here are the crate's scalar kinds (`f64`/`f32`/`F16`). Every
+/// element below `len` is written through [`AlignedVec::resize`] before
+/// it is ever exposed, so the `Deref` slice never observes an
+/// unwritten value.
+pub struct AlignedVec<T> {
+    chunks: Vec<Chunk>,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<T> Default for AlignedVec<T> {
+    fn default() -> Self {
+        Self { chunks: Vec::new(), len: 0, _elem: PhantomData }
+    }
+}
+
+impl<T> Clone for AlignedVec<T> {
+    fn clone(&self) -> Self {
+        Self { chunks: self.chunks.clone(), len: self.len, _elem: PhantomData }
+    }
+}
+
+impl<T: Copy> AlignedVec<T> {
+    /// An empty buffer (no allocation).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A buffer of `len` copies of `fill`.
+    pub fn filled(len: usize, fill: T) -> Self {
+        let mut v = Self::new();
+        v.resize(len, fill);
+        v
+    }
+
+    /// Resize to `len` elements, writing `fill` into any newly exposed
+    /// tail. Shrinking only moves the length; capacity (and the values
+    /// beyond `len`) stay, so regrowth re-fills them deterministically.
+    pub fn resize(&mut self, len: usize, fill: T) {
+        let elem = std::mem::size_of::<T>();
+        assert!(elem > 0 && std::mem::align_of::<T>() <= BLOCK);
+        let chunks_needed = (len * elem + BLOCK - 1) / BLOCK;
+        if chunks_needed > self.chunks.len() {
+            self.chunks.resize(chunks_needed, ZERO_CHUNK);
+        }
+        let old = self.len;
+        if len > old {
+            let base = self.chunks.as_mut_ptr() as *mut T;
+            // SAFETY: the resize above reserved >= len elements' worth of
+            // aligned storage; writes go through raw pointers so no
+            // reference to a not-yet-written element is ever formed.
+            unsafe {
+                for i in old..len {
+                    base.add(i).write(fill);
+                }
+            }
+        }
+        self.len = len;
+    }
+}
+
+impl<T> Deref for AlignedVec<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        // SAFETY: every element below `len` was written by `resize`, the
+        // chunk storage covers `len * size_of::<T>()` bytes, and Chunk's
+        // 64-byte alignment satisfies T's.
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr() as *const T, self.len) }
+    }
+}
+
+impl<T> DerefMut for AlignedVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // SAFETY: as in `deref`, plus exclusive access through `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr() as *mut T, self.len) }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for AlignedVec<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr_of<T>(v: &AlignedVec<T>) -> usize {
+        v.as_ptr() as usize
+    }
+
+    #[test]
+    fn data_pointer_is_64_byte_aligned_through_growth() {
+        let mut v = AlignedVec::<f64>::filled(3, 1.5);
+        assert_eq!(addr_of(&v) % 64, 0);
+        for len in [9usize, 64, 65, 1000, 7, 4096] {
+            v.resize(len, 0.25);
+            assert_eq!(addr_of(&v) % 64, 0, "len {len}");
+            assert_eq!(v.len(), len);
+        }
+        let f32s = AlignedVec::<f32>::filled(129, 0.0);
+        assert_eq!(addr_of(&f32s) % 64, 0);
+    }
+
+    #[test]
+    fn resize_fills_the_exposed_tail_and_keeps_the_prefix() {
+        let mut v = AlignedVec::<f64>::filled(4, 2.0);
+        v[1] = -7.0;
+        v.resize(7, 9.0);
+        assert_eq!(&v[..], &[2.0, -7.0, 2.0, 2.0, 9.0, 9.0, 9.0]);
+        // Shrink then regrow: the regrown tail is re-filled, not stale.
+        v.resize(2, 0.0);
+        assert_eq!(&v[..], &[2.0, -7.0]);
+        v.resize(4, 5.0);
+        assert_eq!(&v[..], &[2.0, -7.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn behaves_like_a_slice_and_supports_mem_take() {
+        let mut v = AlignedVec::<f64>::filled(5, 1.0);
+        v.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(v.iter().sum::<f64>(), 15.0);
+        assert!(!v.is_empty());
+        let taken = std::mem::take(&mut v);
+        assert_eq!(taken.len(), 5);
+        assert!(v.is_empty());
+        let cloned = taken.clone();
+        assert_eq!(&cloned[..], &taken[..]);
+        assert_ne!(addr_of(&cloned), addr_of(&taken));
+    }
+
+    #[test]
+    fn empty_buffer_is_valid() {
+        let v = AlignedVec::<f32>::new();
+        assert!(v.is_empty());
+        assert_eq!(v.len(), 0);
+        assert_eq!(format!("{v:?}"), "[]");
+    }
+}

@@ -1,0 +1,438 @@
+//! Concrete vector kernels behind the [`crate::scalar::Scalar`]
+//! `simd_*` hooks — one monomorphic module per vectorizable element
+//! type ([`kern_f64`], [`kern_f32`]).
+//!
+//! Every kernel takes the resolved [`SimdSpec`] and dispatches:
+//!
+//! - [`SimdIsa::Scalar`] → the exact scalar loop the generic cycle
+//!   kernels ran before this module existed (the reference body).
+//! - [`SimdIsa::Portable`] / [`SimdIsa::Neon`] → the lane body from
+//!   [`crate::simd::lane`], compiled with baseline target features.
+//! - [`SimdIsa::Avx2Fma`] → the same lane body recompiled inside a
+//!   `#[target_feature(enable = "avx2,fma")]` wrapper; sound because
+//!   that ISA is only ever constructed after runtime detection.
+//!
+//! Element-wise kernels (`fma_axpy`, `scale`, `sub`, `sub_scaled`) are
+//! bitwise-identical across all three arms: each lane op is correctly
+//! rounded, exactly like the scalar loop's per-element op. The
+//! reductions (`dot_fma`, `tail_sum_squares`) run the sequential
+//! reference order unless `spec.contract` is set, in which case they
+//! use fixed-width lane partials folded in [`lane`]'s deterministic
+//! tree order — reproducible everywhere, but reassociated, so only
+//! ulp-close to the sequential result (bound tested below).
+
+use super::lane::{F32x8, F64x4};
+use super::{SimdIsa, SimdSpec};
+
+macro_rules! lane_kernels {
+    ($mod_name:ident, $ty:ty, $lane:ident) => {
+        pub mod $mod_name {
+            use super::{$lane, SimdIsa, SimdSpec};
+
+            const N: usize = $lane::LANES;
+
+            /// `w[i] = v.mul_add(s[i], w[i])` over the zipped prefix —
+            /// the streaming reflector-apply accumulation.
+            pub fn fma_axpy(spec: SimdSpec, w: &mut [$ty], v: $ty, s: &[$ty]) {
+                match spec.isa {
+                    SimdIsa::Scalar => scalar_fma_axpy(w, v, s),
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: Avx2Fma is only constructed after runtime
+                    // detection of avx2+fma (see `SimdIsa` docs).
+                    SimdIsa::Avx2Fma => unsafe { avx2::fma_axpy(w, v, s) },
+                    _ => portable_fma_axpy(w, v, s),
+                }
+            }
+
+            /// `w[i] = c * w[i]` — the `tau` scaling pass.
+            pub fn scale(spec: SimdSpec, w: &mut [$ty], c: $ty) {
+                match spec.isa {
+                    SimdIsa::Scalar => scalar_scale(w, c),
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: as in `fma_axpy`.
+                    SimdIsa::Avx2Fma => unsafe { avx2::scale(w, c) },
+                    _ => portable_scale(w, c),
+                }
+            }
+
+            /// `dst[i] = dst[i] - src[i]` over the zipped prefix.
+            pub fn sub(spec: SimdSpec, dst: &mut [$ty], src: &[$ty]) {
+                match spec.isa {
+                    SimdIsa::Scalar => scalar_sub(dst, src),
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: as in `fma_axpy`.
+                    SimdIsa::Avx2Fma => unsafe { avx2::sub(dst, src) },
+                    _ => portable_sub(dst, src),
+                }
+            }
+
+            /// `dst[i] = dst[i] - src[i] * c` over the zipped prefix —
+            /// the rank-1 update column pass.
+            pub fn sub_scaled(spec: SimdSpec, dst: &mut [$ty], src: &[$ty], c: $ty) {
+                match spec.isa {
+                    SimdIsa::Scalar => scalar_sub_scaled(dst, src, c),
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: as in `fma_axpy`.
+                    SimdIsa::Avx2Fma => unsafe { avx2::sub_scaled(dst, src, c) },
+                    _ => portable_sub_scaled(dst, src, c),
+                }
+            }
+
+            /// Fused dot product `init + Σ v[i]*s[i]`, accumulated with
+            /// `mul_add`. Sequential (bitwise vs the scalar reference)
+            /// unless `spec.contract` — then fixed-width lane partials.
+            pub fn dot_fma(spec: SimdSpec, init: $ty, v: &[$ty], s: &[$ty]) -> $ty {
+                if spec.contract && spec.isa != SimdIsa::Scalar {
+                    #[cfg(target_arch = "x86_64")]
+                    if spec.isa == SimdIsa::Avx2Fma {
+                        // SAFETY: as in `fma_axpy`.
+                        return unsafe { avx2::dot_fma_contracted(init, v, s) };
+                    }
+                    return portable_dot_fma_contracted(init, v, s);
+                }
+                sequential_dot_fma(init, v, s)
+            }
+
+            /// Widened sum of squares `Σ (x[i] as f64)^2` — the column
+            /// norm behind `make_reflector`. Sequential unless
+            /// `spec.contract` — then four fixed f64 partials (fixed
+            /// regardless of the element type, so f32 and f64 problems
+            /// contract identically).
+            pub fn tail_sum_squares(spec: SimdSpec, x: &[$ty]) -> f64 {
+                if spec.contract && spec.isa != SimdIsa::Scalar {
+                    #[cfg(target_arch = "x86_64")]
+                    if spec.isa == SimdIsa::Avx2Fma {
+                        // SAFETY: as in `fma_axpy`.
+                        return unsafe { avx2::tail_sum_squares_contracted(x) };
+                    }
+                    return portable_tail_sum_squares_contracted(x);
+                }
+                sequential_tail_sum_squares(x)
+            }
+
+            // --- scalar reference bodies ---
+
+            fn scalar_fma_axpy(w: &mut [$ty], v: $ty, s: &[$ty]) {
+                for (wi, si) in w.iter_mut().zip(s.iter()) {
+                    *wi = v.mul_add(*si, *wi);
+                }
+            }
+
+            fn scalar_scale(w: &mut [$ty], c: $ty) {
+                for wi in w.iter_mut() {
+                    *wi *= c;
+                }
+            }
+
+            fn scalar_sub(dst: &mut [$ty], src: &[$ty]) {
+                for (di, si) in dst.iter_mut().zip(src.iter()) {
+                    *di -= *si;
+                }
+            }
+
+            fn scalar_sub_scaled(dst: &mut [$ty], src: &[$ty], c: $ty) {
+                for (di, si) in dst.iter_mut().zip(src.iter()) {
+                    *di -= *si * c;
+                }
+            }
+
+            fn sequential_dot_fma(init: $ty, v: &[$ty], s: &[$ty]) -> $ty {
+                let mut acc = init;
+                for (vi, si) in v.iter().zip(s.iter()) {
+                    acc = vi.mul_add(*si, acc);
+                }
+                acc
+            }
+
+            fn sequential_tail_sum_squares(x: &[$ty]) -> f64 {
+                let mut ssq = 0.0f64;
+                for v in x {
+                    let t = f64::from(*v);
+                    ssq += t * t;
+                }
+                ssq
+            }
+
+            // --- portable lane bodies (also the avx2 bodies, below) ---
+
+            #[inline(always)]
+            fn portable_fma_axpy(w: &mut [$ty], v: $ty, s: &[$ty]) {
+                let n = w.len().min(s.len());
+                let vv = $lane::splat(v);
+                let mut i = 0;
+                while i + N <= n {
+                    vv.fma($lane::load(&s[i..]), $lane::load(&w[i..])).store(&mut w[i..]);
+                    i += N;
+                }
+                while i < n {
+                    w[i] = v.mul_add(s[i], w[i]);
+                    i += 1;
+                }
+            }
+
+            #[inline(always)]
+            fn portable_scale(w: &mut [$ty], c: $ty) {
+                let n = w.len();
+                let cc = $lane::splat(c);
+                let mut i = 0;
+                while i + N <= n {
+                    cc.mul($lane::load(&w[i..])).store(&mut w[i..]);
+                    i += N;
+                }
+                while i < n {
+                    w[i] *= c;
+                    i += 1;
+                }
+            }
+
+            #[inline(always)]
+            fn portable_sub(dst: &mut [$ty], src: &[$ty]) {
+                let n = dst.len().min(src.len());
+                let mut i = 0;
+                while i + N <= n {
+                    $lane::load(&dst[i..]).sub($lane::load(&src[i..])).store(&mut dst[i..]);
+                    i += N;
+                }
+                while i < n {
+                    dst[i] -= src[i];
+                    i += 1;
+                }
+            }
+
+            #[inline(always)]
+            fn portable_sub_scaled(dst: &mut [$ty], src: &[$ty], c: $ty) {
+                let n = dst.len().min(src.len());
+                let cc = $lane::splat(c);
+                let mut i = 0;
+                while i + N <= n {
+                    $lane::load(&dst[i..])
+                        .sub($lane::load(&src[i..]).mul(cc))
+                        .store(&mut dst[i..]);
+                    i += N;
+                }
+                while i < n {
+                    dst[i] -= src[i] * c;
+                    i += 1;
+                }
+            }
+
+            #[inline(always)]
+            fn portable_dot_fma_contracted(init: $ty, v: &[$ty], s: &[$ty]) -> $ty {
+                let n = v.len().min(s.len());
+                let mut acc = $lane::splat(0.0);
+                let mut i = 0;
+                while i + N <= n {
+                    acc = $lane::load(&v[i..]).fma($lane::load(&s[i..]), acc);
+                    i += N;
+                }
+                let mut total = init + acc.hsum();
+                while i < n {
+                    total = v[i].mul_add(s[i], total);
+                    i += 1;
+                }
+                total
+            }
+
+            #[inline(always)]
+            fn portable_tail_sum_squares_contracted(x: &[$ty]) -> f64 {
+                // Four f64 partials for every element type: the
+                // accumulation is widened to f64 first, so the partial
+                // width cannot follow the element lane count.
+                const P: usize = 4;
+                let mut acc = [0.0f64; P];
+                let chunks = x.len() / P;
+                for c in 0..chunks {
+                    for l in 0..P {
+                        let t = f64::from(x[c * P + l]);
+                        acc[l] += t * t;
+                    }
+                }
+                let mut ssq = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+                for v in &x[chunks * P..] {
+                    let t = f64::from(*v);
+                    ssq += t * t;
+                }
+                ssq
+            }
+
+            /// The portable lane bodies recompiled with AVX2+FMA enabled
+            /// (function multiversioning): `#[inline(always)]` bodies
+            /// inline here and pick up the wider codegen.
+            #[cfg(target_arch = "x86_64")]
+            mod avx2 {
+                /// # Safety
+                /// Requires avx2+fma, verified at runtime by the caller.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn fma_axpy(w: &mut [$ty], v: $ty, s: &[$ty]) {
+                    super::portable_fma_axpy(w, v, s)
+                }
+
+                /// # Safety
+                /// Requires avx2+fma, verified at runtime by the caller.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn scale(w: &mut [$ty], c: $ty) {
+                    super::portable_scale(w, c)
+                }
+
+                /// # Safety
+                /// Requires avx2+fma, verified at runtime by the caller.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn sub(dst: &mut [$ty], src: &[$ty]) {
+                    super::portable_sub(dst, src)
+                }
+
+                /// # Safety
+                /// Requires avx2+fma, verified at runtime by the caller.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn sub_scaled(dst: &mut [$ty], src: &[$ty], c: $ty) {
+                    super::portable_sub_scaled(dst, src, c)
+                }
+
+                /// # Safety
+                /// Requires avx2+fma, verified at runtime by the caller.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn dot_fma_contracted(init: $ty, v: &[$ty], s: &[$ty]) -> $ty {
+                    super::portable_dot_fma_contracted(init, v, s)
+                }
+
+                /// # Safety
+                /// Requires avx2+fma, verified at runtime by the caller.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn tail_sum_squares_contracted(x: &[$ty]) -> f64 {
+                    super::portable_tail_sum_squares_contracted(x)
+                }
+            }
+        }
+    };
+}
+
+lane_kernels!(kern_f64, f64, F64x4);
+lane_kernels!(kern_f32, f32, F32x8);
+
+#[cfg(test)]
+mod tests {
+    use super::super::detect_isa;
+    use super::*;
+
+    /// Every ISA arm constructible on this host, scalar first.
+    fn arms() -> Vec<SimdSpec> {
+        let mut specs = vec![SimdSpec::scalar(), SimdSpec::with_contract(SimdIsa::Portable, false)];
+        if let Some(isa) = detect_isa() {
+            specs.push(SimdSpec::with_contract(isa, false));
+        }
+        specs
+    }
+
+    fn data_f64(len: usize) -> (Vec<f64>, Vec<f64>) {
+        // Awkward magnitudes on purpose: rounding differences would show.
+        let a: Vec<f64> = (0..len).map(|i| ((i * 37 + 11) % 97) as f64 * 0.671 - 31.0).collect();
+        let b: Vec<f64> = (0..len).map(|i| ((i * 53 + 7) % 89) as f64 * 1.37e-3 + 0.11).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn elementwise_kernels_are_bitwise_identical_across_arms() {
+        // Lengths straddle the lane width: below, exact multiples, and
+        // off-by-one tails.
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 31, 64, 65] {
+            let (a, b) = data_f64(len);
+            for spec in arms() {
+                let mut w = a.clone();
+                kern_f64::fma_axpy(spec, &mut w, 1.75, &b);
+                let mut w_ref = a.clone();
+                kern_f64::fma_axpy(SimdSpec::scalar(), &mut w_ref, 1.75, &b);
+                assert_eq!(bits(&w), bits(&w_ref), "fma_axpy {spec:?} len {len}");
+
+                let mut w = a.clone();
+                kern_f64::scale(spec, &mut w, -0.37);
+                let mut w_ref = a.clone();
+                kern_f64::scale(SimdSpec::scalar(), &mut w_ref, -0.37);
+                assert_eq!(bits(&w), bits(&w_ref), "scale {spec:?} len {len}");
+
+                let mut w = a.clone();
+                kern_f64::sub(spec, &mut w, &b);
+                let mut w_ref = a.clone();
+                kern_f64::sub(SimdSpec::scalar(), &mut w_ref, &b);
+                assert_eq!(bits(&w), bits(&w_ref), "sub {spec:?} len {len}");
+
+                let mut w = a.clone();
+                kern_f64::sub_scaled(spec, &mut w, &b, 2.625);
+                let mut w_ref = a.clone();
+                kern_f64::sub_scaled(SimdSpec::scalar(), &mut w_ref, &b, 2.625);
+                assert_eq!(bits(&w), bits(&w_ref), "sub_scaled {spec:?} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_kernels_are_bitwise_identical_across_arms() {
+        for len in [0usize, 5, 8, 13, 16, 40] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32) * 0.37 - 3.0).collect();
+            let b: Vec<f32> = (0..len).map(|i| 1.0 / (i as f32 + 1.5)).collect();
+            for spec in arms() {
+                let mut w = a.clone();
+                kern_f32::fma_axpy(spec, &mut w, -1.1, &b);
+                let mut w_ref = a.clone();
+                kern_f32::fma_axpy(SimdSpec::scalar(), &mut w_ref, -1.1, &b);
+                let same = w.iter().zip(&w_ref).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "f32 fma_axpy {spec:?} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn uncontracted_reductions_are_bitwise_identical_across_arms() {
+        for len in [0usize, 1, 4, 7, 16, 33] {
+            let (a, b) = data_f64(len);
+            let want_dot = kern_f64::dot_fma(SimdSpec::scalar(), 0.125, &a, &b);
+            let want_ssq = kern_f64::tail_sum_squares(SimdSpec::scalar(), &a);
+            for spec in arms() {
+                let dot = kern_f64::dot_fma(spec, 0.125, &a, &b);
+                assert_eq!(dot.to_bits(), want_dot.to_bits(), "dot {spec:?} len {len}");
+                let ssq = kern_f64::tail_sum_squares(spec, &a);
+                assert_eq!(ssq.to_bits(), want_ssq.to_bits(), "ssq {spec:?} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn contracted_reductions_are_ulp_bounded_and_host_deterministic() {
+        for len in [3usize, 8, 15, 64, 257] {
+            let (a, b) = data_f64(len);
+            let seq_dot = kern_f64::dot_fma(SimdSpec::scalar(), 1.0, &a, &b);
+            let seq_ssq = kern_f64::tail_sum_squares(SimdSpec::scalar(), &a);
+            // Condition-aware bound: n * eps * sum |v_i * s_i| absolute
+            // terms (the usual reassociation error bound).
+            let mag: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>() + 1.0;
+            let bound = len as f64 * f64::EPSILON * mag;
+            let portable = SimdSpec::with_contract(SimdIsa::Portable, true);
+            assert!(portable.contract);
+            let por_dot = kern_f64::dot_fma(portable, 1.0, &a, &b);
+            let por_ssq = kern_f64::tail_sum_squares(portable, &a);
+            assert!((por_dot - seq_dot).abs() <= bound, "dot len {len}");
+            let ssq_mag: f64 = a.iter().map(|x| x * x).sum::<f64>() + 1.0;
+            assert!((por_ssq - seq_ssq).abs() <= len as f64 * f64::EPSILON * ssq_mag);
+            // Fixed-width partials: the detected wider ISA must contract
+            // to the *same bits* as the portable arm.
+            if let Some(isa) = detect_isa() {
+                let wide = SimdSpec::with_contract(isa, true);
+                assert_eq!(kern_f64::dot_fma(wide, 1.0, &a, &b).to_bits(), por_dot.to_bits());
+                assert_eq!(kern_f64::tail_sum_squares(wide, &a).to_bits(), por_ssq.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn contract_flag_without_vector_isa_stays_sequential() {
+        // `with_contract` normalizes it away, but a hand-built spec must
+        // still take the sequential path.
+        let spec = SimdSpec { isa: SimdIsa::Scalar, contract: true };
+        let (a, b) = data_f64(21);
+        let want = kern_f64::dot_fma(SimdSpec::scalar(), 0.0, &a, &b);
+        assert_eq!(kern_f64::dot_fma(spec, 0.0, &a, &b).to_bits(), want.to_bits());
+    }
+
+    fn bits(xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+}

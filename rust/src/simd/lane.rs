@@ -1,0 +1,148 @@
+//! Fixed-width lane types: the portable vector registers of the SIMD
+//! kernels.
+//!
+//! Each type is a plain array the compiler can keep in one vector
+//! register; every op is `#[inline(always)]` so the
+//! `#[target_feature(enable = "avx2,fma")]` wrappers in
+//! [`crate::simd::kernels`] recompile the same bodies with wider
+//! instructions. Widths are **fixed per element type** (4×f64 = 8×f32 =
+//! one 256-bit register), not per host ISA — that is what makes the
+//! contracted-reduction mode deterministic across machines.
+//!
+//! Element-wise ops round per lane exactly like the scalar loop rounds
+//! per element (IEEE add/sub/mul/fma are correctly rounded), so results
+//! are bitwise-identical to scalar regardless of which arm ran.
+//! [`F64x4::hsum`] folds in a fixed tree order, so contracted reductions
+//! are deterministic too — just not scalar-ordered.
+
+macro_rules! define_lane {
+    ($(#[$doc:meta])* $name:ident, $elem:ty, $lanes:expr) => {
+        $(#[$doc])*
+        #[derive(Copy, Clone, Debug)]
+        pub struct $name(pub [$elem; $lanes]);
+
+        impl $name {
+            /// Lane count — fixed for this element type on every ISA.
+            pub const LANES: usize = $lanes;
+
+            /// All lanes set to `v`.
+            #[inline(always)]
+            pub fn splat(v: $elem) -> Self {
+                Self([v; $lanes])
+            }
+
+            /// Load the first `LANES` elements of `src`.
+            #[inline(always)]
+            pub fn load(src: &[$elem]) -> Self {
+                Self(std::array::from_fn(|i| src[i]))
+            }
+
+            /// Store into the first `LANES` elements of `dst`.
+            #[inline(always)]
+            pub fn store(self, dst: &mut [$elem]) {
+                dst[..$lanes].copy_from_slice(&self.0);
+            }
+
+            /// Per-lane `self + rhs`.
+            #[inline(always)]
+            pub fn add(self, rhs: Self) -> Self {
+                Self(std::array::from_fn(|i| self.0[i] + rhs.0[i]))
+            }
+
+            /// Per-lane `self - rhs`.
+            #[inline(always)]
+            pub fn sub(self, rhs: Self) -> Self {
+                Self(std::array::from_fn(|i| self.0[i] - rhs.0[i]))
+            }
+
+            /// Per-lane `self * rhs`.
+            #[inline(always)]
+            pub fn mul(self, rhs: Self) -> Self {
+                Self(std::array::from_fn(|i| self.0[i] * rhs.0[i]))
+            }
+
+            /// Per-lane fused `self * a + b` (one rounding, like the
+            /// scalar kernels' `mul_add`).
+            #[inline(always)]
+            pub fn fma(self, a: Self, b: Self) -> Self {
+                Self(std::array::from_fn(|i| self.0[i].mul_add(a.0[i], b.0[i])))
+            }
+
+            /// Horizontal sum in a fixed halving-tree order —
+            /// `(l0+l2) + (l1+l3)` for 4 lanes — independent of ISA, so
+            /// contracted reductions reproduce across hosts.
+            #[inline(always)]
+            pub fn hsum(self) -> $elem {
+                let mut v = self.0;
+                let mut half = $lanes / 2;
+                while half > 0 {
+                    for i in 0..half {
+                        v[i] += v[i + half];
+                    }
+                    half /= 2;
+                }
+                v[0]
+            }
+        }
+    };
+}
+
+define_lane!(
+    /// Four f64 lanes — one 256-bit register.
+    F64x4,
+    f64,
+    4
+);
+define_lane!(
+    /// Eight f32 lanes — one 256-bit register.
+    F32x8,
+    f32,
+    8
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_ops_match_scalar_bitwise() {
+        let a = [1.5f64, -2.25, 1e-300, 3.7e10];
+        let b = [0.1f64, 7.5, -1e300, 0.333];
+        let c = [9.0f64, -0.5, 2.0, 1e-5];
+        let va = F64x4::load(&a);
+        let vb = F64x4::load(&b);
+        let vc = F64x4::load(&c);
+        for i in 0..4 {
+            assert_eq!(va.add(vb).0[i].to_bits(), (a[i] + b[i]).to_bits());
+            assert_eq!(va.sub(vb).0[i].to_bits(), (a[i] - b[i]).to_bits());
+            assert_eq!(va.mul(vb).0[i].to_bits(), (a[i] * b[i]).to_bits());
+            assert_eq!(va.fma(vb, vc).0[i].to_bits(), a[i].mul_add(b[i], c[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn load_store_splat_round_trip() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 99.0];
+        let v = F32x8::load(&src);
+        let mut dst = [0.0f32; 10];
+        v.store(&mut dst);
+        assert_eq!(&dst[..8], &src[..8]);
+        assert_eq!(dst[8], 0.0, "store writes exactly LANES elements");
+        assert_eq!(F64x4::splat(2.5).0, [2.5; 4]);
+        assert_eq!(F32x8::LANES, 8);
+        assert_eq!(F64x4::LANES, 4);
+    }
+
+    #[test]
+    fn hsum_folds_in_the_documented_tree_order() {
+        let v = F64x4([1e16, 1.0, -1e16, 1.0]);
+        // Halving tree: lanes fold as (l0+l2) + (l1+l3), so the two
+        // big values cancel exactly before the small ones are added.
+        let want = (1e16f64 + -1e16) + (1.0f64 + 1.0);
+        assert_eq!(v.hsum().to_bits(), want.to_bits());
+        assert_eq!(v.hsum(), 2.0);
+        let w = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let want32 = ((1.0f32 + 5.0) + (3.0 + 7.0)) + ((2.0 + 6.0) + (4.0 + 8.0));
+        assert_eq!(w.hsum().to_bits(), want32.to_bits());
+    }
+}

@@ -1,0 +1,238 @@
+//! Explicit-SIMD execution path for the packed-tile cycle kernels.
+//!
+//! The packed-tile workspace (`bulge::cycle::exec_cycle_packed`) exists
+//! to make every reflector generate/apply touch **contiguous** memory —
+//! this module cashes that contiguity in. It provides fixed-width lane
+//! kernels ([`lane`]: `F64x4` / `F32x8`) for the two hot shapes of the
+//! cycle kernel — streaming FMA reflector-apply over packed rows/columns
+//! and the horizontal-reduction column norm behind
+//! [`crate::householder::make_reflector`] — dispatched per call through a
+//! resolved [`SimdSpec`].
+//!
+//! # Dispatch
+//!
+//! - [`SimdIsa::Scalar`] — the exact scalar loops the generic cycle
+//!   kernels always ran; the fallback and the reference.
+//! - [`SimdIsa::Portable`] / [`SimdIsa::Neon`] — the lane kernels
+//!   compiled with the build's baseline features (NEON is baseline on
+//!   aarch64, so no runtime gate is needed there).
+//! - [`SimdIsa::Avx2Fma`] — the same lane bodies recompiled under
+//!   `#[target_feature(enable = "avx2,fma")]`, selected only after
+//!   runtime detection ([`detect_isa`]).
+//!
+//! # Equivalence contract
+//!
+//! Element-wise lane ops (fma/mul/sub) round each lane exactly like the
+//! scalar loop rounds each element, so every ISA produces
+//! **bitwise-identical** storage — the backend-equivalence property in
+//! `rust/tests/plan_consistency.rs` holds `BackendKind::Simd` to the
+//! sequential oracle bitwise. Reductions (the dot product in the left
+//! update, the sum of squares in the column norm) are order-sensitive;
+//! by default they stay sequential (bitwise). Opting in to
+//! `BSVD_SIMD_CONTRACT=1` reassociates them into **fixed-width** lane
+//! partials (ISA-independent widths, fixed tree-order fold), trading
+//! bitwise identity for a documented ulp bound — see
+//! `docs/backends.md`.
+//!
+//! # Environment knobs (read once per process)
+//!
+//! - `BSVD_SIMD=auto|force|off` — `auto` (default) uses the detected
+//!   ISA, falling back to scalar; `force` uses the detected ISA but
+//!   falls back to [`SimdIsa::Portable`] (so the lane code paths are
+//!   exercised on any host); `off` pins [`SimdIsa::Scalar`].
+//! - `BSVD_SIMD_CONTRACT=1` — allow contracted (reassociated)
+//!   reductions; ignored when the ISA resolves to scalar.
+
+pub mod aligned;
+pub mod kernels;
+pub mod lane;
+
+pub use aligned::AlignedVec;
+
+use std::sync::OnceLock;
+
+/// The instruction-set flavor a [`SimdSpec`] dispatches vector kernels
+/// to. Construction goes through [`detect_isa`] / [`SimdSpec::resolve`];
+/// in particular [`SimdIsa::Avx2Fma`] is only ever produced after a
+/// positive runtime feature check, which is what makes the
+/// `target_feature` calls in [`kernels`] sound.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// Plain scalar loops — the fallback and the bitwise reference.
+    Scalar,
+    /// Fixed-width lane kernels compiled with the build's baseline
+    /// target features (auto-vectorizable, no runtime gate).
+    Portable,
+    /// AArch64 NEON — baseline on every aarch64 target, so it is the
+    /// portable lane path compiled with NEON available.
+    Neon,
+    /// x86-64 AVX2 + FMA, entered through runtime-detected
+    /// function multiversioning.
+    Avx2Fma,
+}
+
+impl SimdIsa {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Portable => "portable",
+            SimdIsa::Neon => "neon",
+            SimdIsa::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+/// Resolved SIMD configuration, passed by value into every vector kernel
+/// call. [`SimdSpec::scalar`] is the identity spec every pre-existing
+/// entry point uses; [`SimdSpec::from_env`] is what
+/// [`crate::backend::SimdBackend`] resolves once per process.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct SimdSpec {
+    /// Which kernel arm element-wise ops dispatch to.
+    pub isa: SimdIsa,
+    /// Allow contracted (fixed-width reassociated) reductions. `false`
+    /// keeps every reduction sequential and therefore bitwise-identical
+    /// to the scalar path; `true` is ulp-bounded instead (see module
+    /// docs). Never set while `isa` is [`SimdIsa::Scalar`] —
+    /// constructors normalize it away.
+    pub contract: bool,
+}
+
+impl SimdSpec {
+    /// The scalar identity spec: every kernel runs the reference loop.
+    pub fn scalar() -> Self {
+        Self { isa: SimdIsa::Scalar, contract: false }
+    }
+
+    /// Spec for an explicit ISA, normalizing `contract` off when the ISA
+    /// is scalar (the scalar path has nothing to contract).
+    pub fn with_contract(isa: SimdIsa, contract: bool) -> Self {
+        Self { isa, contract: contract && isa != SimdIsa::Scalar }
+    }
+
+    /// The process-wide spec from `BSVD_SIMD` / `BSVD_SIMD_CONTRACT`,
+    /// read once (first call wins, like the other `BSVD_*` knobs).
+    /// Tests that need a specific spec should construct it directly
+    /// (e.g. [`crate::backend::SimdBackend::with_spec`]) instead of
+    /// mutating the environment.
+    pub fn from_env() -> Self {
+        static SPEC: OnceLock<SimdSpec> = OnceLock::new();
+        *SPEC.get_or_init(|| {
+            let mode = std::env::var("BSVD_SIMD").unwrap_or_default();
+            let contract =
+                std::env::var("BSVD_SIMD_CONTRACT").map(|v| v == "1").unwrap_or(false);
+            Self::resolve(&mode, contract, detect_isa())
+        })
+    }
+
+    /// Pure resolution of the `BSVD_SIMD` mode string against a detection
+    /// result — the entire policy of [`SimdSpec::from_env`], exposed so
+    /// tests can cover it without touching the process environment.
+    pub fn resolve(mode: &str, contract: bool, detected: Option<SimdIsa>) -> Self {
+        let isa = match mode {
+            "off" | "0" | "scalar" => SimdIsa::Scalar,
+            "force" | "on" | "1" => detected.unwrap_or(SimdIsa::Portable),
+            // "auto", the empty default, and anything unrecognized.
+            _ => detected.unwrap_or(SimdIsa::Scalar),
+        };
+        Self::with_contract(isa, contract)
+    }
+
+    /// Whether any lane kernel arm is active (false = pure scalar).
+    pub fn is_vector(self) -> bool {
+        self.isa != SimdIsa::Scalar
+    }
+
+    /// Human-readable form for provenance/CLI output, e.g.
+    /// `"avx2+fma"` or `"portable, contracted reductions"`.
+    pub fn describe(self) -> String {
+        if self.contract {
+            format!("{}, contracted reductions", self.isa.name())
+        } else {
+            self.isa.name().to_string()
+        }
+    }
+}
+
+/// Runtime ISA detection: AVX2+FMA on x86-64 when the CPU reports both,
+/// NEON on aarch64 (baseline), `None` elsewhere.
+pub fn detect_isa() -> Option<SimdIsa> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            Some(SimdIsa::Avx2Fma)
+        } else {
+            None
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Some(SimdIsa::Neon)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_spec_is_the_identity() {
+        let spec = SimdSpec::scalar();
+        assert_eq!(spec.isa, SimdIsa::Scalar);
+        assert!(!spec.contract);
+        assert!(!spec.is_vector());
+        assert_eq!(spec.describe(), "scalar");
+    }
+
+    #[test]
+    fn resolve_covers_the_knob_table() {
+        let detected = Some(SimdIsa::Avx2Fma);
+        // off pins scalar regardless of detection.
+        assert_eq!(SimdSpec::resolve("off", false, detected).isa, SimdIsa::Scalar);
+        assert_eq!(SimdSpec::resolve("0", true, detected).isa, SimdIsa::Scalar);
+        // auto (and the empty default) takes the detected ISA, scalar
+        // when there is none.
+        assert_eq!(SimdSpec::resolve("auto", false, detected).isa, SimdIsa::Avx2Fma);
+        assert_eq!(SimdSpec::resolve("", false, detected).isa, SimdIsa::Avx2Fma);
+        assert_eq!(SimdSpec::resolve("auto", false, None).isa, SimdIsa::Scalar);
+        // force falls back to the portable lane path, never to scalar.
+        assert_eq!(SimdSpec::resolve("force", false, None).isa, SimdIsa::Portable);
+        assert_eq!(SimdSpec::resolve("force", false, detected).isa, SimdIsa::Avx2Fma);
+        assert_eq!(SimdSpec::resolve("1", false, None).isa, SimdIsa::Portable);
+    }
+
+    #[test]
+    fn contract_is_normalized_off_on_the_scalar_isa() {
+        assert!(!SimdSpec::resolve("off", true, Some(SimdIsa::Avx2Fma)).contract);
+        assert!(SimdSpec::resolve("force", true, None).contract);
+        assert!(!SimdSpec::with_contract(SimdIsa::Scalar, true).contract);
+        assert!(SimdSpec::with_contract(SimdIsa::Portable, true).contract);
+        assert_eq!(
+            SimdSpec::with_contract(SimdIsa::Portable, true).describe(),
+            "portable, contracted reductions"
+        );
+    }
+
+    #[test]
+    fn from_env_is_stable_across_calls() {
+        // Read-once semantics: whatever the first call resolved, every
+        // later call returns the identical spec.
+        assert_eq!(SimdSpec::from_env(), SimdSpec::from_env());
+    }
+
+    #[test]
+    fn detection_never_reports_a_foreign_isa() {
+        match detect_isa() {
+            Some(SimdIsa::Avx2Fma) => assert!(cfg!(target_arch = "x86_64")),
+            Some(SimdIsa::Neon) => assert!(cfg!(target_arch = "aarch64")),
+            Some(other) => panic!("detect_isa returned non-hardware ISA {other:?}"),
+            None => {}
+        }
+    }
+}

@@ -91,7 +91,8 @@ impl SimReport {
 }
 
 /// Model one kernel launch executing `blocks` bulge tasks of stage
-/// (b, d) in element size `es` with tuning `(tpb, max_blocks)`.
+/// (b, d) in element size `es` with tuning `(tpb, max_blocks)`, under
+/// the native (scalar-issue, zero-dispatch) backend profile.
 pub fn launch_cost(
     arch: &GpuArch,
     es: usize,
@@ -99,6 +100,25 @@ pub fn launch_cost(
     tpb: usize,
     max_blocks: usize,
     blocks: usize,
+) -> LaunchCost {
+    launch_cost_for(arch, es, stage, tpb, max_blocks, blocks, &BackendCostModel::native())
+}
+
+/// [`launch_cost`] under a backend's [`BackendCostModel`]: a non-zero
+/// `vector_width_bytes` scales the compute term by the lane speedup
+/// `1 + 0.6·(lanes − 1)` with `lanes = vector_width / es` — full-width
+/// issue discounted for the scalar tails, reflector latency chains, and
+/// below-gate stages the vector path cannot touch. Memory terms are
+/// unchanged: SIMD does not add bandwidth, so a launch that was
+/// bandwidth- or latency-bound stays exactly where it was.
+pub fn launch_cost_for(
+    arch: &GpuArch,
+    es: usize,
+    stage: &Stage,
+    tpb: usize,
+    max_blocks: usize,
+    blocks: usize,
+    backend: &BackendCostModel,
 ) -> LaunchCost {
     if blocks == 0 {
         return LaunchCost { seconds: arch.launch_overhead_s(), ..Default::default() };
@@ -175,9 +195,12 @@ pub fn launch_cost(
     let t_l1 = batch * l1_bytes / (arch.l1_peak_bytes_per_s() * eff);
     let t_l2 = batch * l2_bytes / (arch.l2_peak_bytes_per_s() * eff);
     let t_dram = batch * dram_bytes / (arch.dram_peak_bytes_per_s() * eff);
-    // Element-size-aware vector throughput (fp16 ≈ 2× fp32; fp64 ≈ ½).
-    let t_compute =
-        batch * flops / (arch.fp32_peak_flops() * (4.0 / es_f).clamp(0.5, 2.0));
+    // Element-size-aware vector throughput (fp16 ≈ 2× fp32; fp64 ≈ ½),
+    // times the backend's lane speedup (1.0 for scalar-issue backends).
+    let lanes = (backend.vector_width_bytes / es_f).max(1.0);
+    let lane_speedup = 1.0 + 0.6 * (lanes - 1.0);
+    let t_compute = batch * flops
+        / (arch.fp32_peak_flops() * (4.0 / es_f).clamp(0.5, 2.0) * lane_speedup);
 
     let mut per_batch = t_latency;
     let mut bound_by = "latency";
@@ -225,6 +248,12 @@ pub struct BackendCostModel {
     /// device-resident backends; positive for tile-streaming execution
     /// that uploads/downloads each launch's footprint.
     pub staged_bytes_per_elem: f64,
+    /// Vector register width (bytes) the backend's packed kernels issue
+    /// at, or `0.0` for scalar issue. Feeds the compute-term lane
+    /// speedup in [`launch_cost_for`]; `lanes = width / element_size`,
+    /// so one width models f64×4 and f32×8 at once (a 32-byte AVX2
+    /// register, the paper-repro host baseline).
+    pub vector_width_bytes: f64,
 }
 
 impl BackendCostModel {
@@ -232,14 +261,32 @@ impl BackendCostModel {
     /// modeled device overhead, runs at the storage precision, fully
     /// resident.
     pub fn native() -> Self {
-        Self { dispatch_overhead_s: 0.0, element_size: None, staged_bytes_per_elem: 0.0 }
+        Self {
+            dispatch_overhead_s: 0.0,
+            element_size: None,
+            staged_bytes_per_elem: 0.0,
+            vector_width_bytes: 0.0,
+        }
+    }
+
+    /// The SIMD launch loop: the native profile with packed kernels
+    /// issuing 32-byte (AVX2-class) vectors — same dispatch, same
+    /// storage precision, same residency; only the compute term speeds
+    /// up, so memory-bound launches cost exactly what native ones do.
+    pub fn simd() -> Self {
+        Self { vector_width_bytes: 32.0, ..Self::native() }
     }
 
     /// The PJRT plan executor: one FFI call per launch (≈ µs-scale
     /// dispatch), f32 artifacts, device-resident buffers (no per-launch
     /// staging — storage uploads once per problem).
     pub fn pjrt() -> Self {
-        Self { dispatch_overhead_s: 3e-6, element_size: Some(4), staged_bytes_per_elem: 0.0 }
+        Self {
+            dispatch_overhead_s: 3e-6,
+            element_size: Some(4),
+            staged_bytes_per_elem: 0.0,
+            vector_width_bytes: 0.0,
+        }
     }
 
     /// A hypothetical tile-streaming PJRT executor that stages each
@@ -247,7 +294,7 @@ impl BackendCostModel {
     /// the quantity to beat when deciding whether tile-payload artifacts
     /// are worth compiling (see `docs/performance-model.md`).
     pub fn pjrt_tile_streaming() -> Self {
-        Self { dispatch_overhead_s: 3e-6, element_size: Some(4), staged_bytes_per_elem: 8.0 }
+        Self { staged_bytes_per_elem: 8.0, ..Self::pjrt() }
     }
 }
 
@@ -302,7 +349,15 @@ pub fn simulate_plan_for(
             let cost = cache
                 .entry((slot.problem, slot.stage, slot.count))
                 .or_insert_with(|| {
-                    launch_cost(arch, es, stage, tpb, plan.capacity, slot.count as usize)
+                    launch_cost_for(
+                        arch,
+                        es,
+                        stage,
+                        tpb,
+                        plan.capacity,
+                        slot.count as usize,
+                        backend,
+                    )
                 });
             busy += cost.seconds - overhead;
             report.dram_bytes += cost.dram_bytes;
@@ -507,6 +562,38 @@ mod tests {
         let native64 = simulate_plan_for(&hw::H100, 8, &plan, 32, &BackendCostModel::native());
         let pjrt64 = simulate_plan_for(&hw::H100, 8, &plan, 32, &BackendCostModel::pjrt());
         assert_eq!(pjrt64.algo_bytes * 2, native64.algo_bytes);
+    }
+
+    #[test]
+    fn simd_profile_speeds_up_compute_and_only_compute() {
+        // Compute-bound regime: many blocks of a wide stage on a small
+        // part. The SIMD profile must be strictly faster there…
+        let stage = Stage::new(64, 32);
+        let scalar = launch_cost(&hw::RTX4060, 8, &stage, 32, 192, 192);
+        let simd =
+            launch_cost_for(&hw::RTX4060, 8, &stage, 32, 192, 192, &BackendCostModel::simd());
+        if scalar.bound_by == "compute" {
+            assert!(simd.seconds < scalar.seconds, "{} vs {}", simd.seconds, scalar.seconds);
+        }
+        // …never slower anywhere, and identical in traffic.
+        assert!(simd.seconds <= scalar.seconds);
+        assert_eq!(simd.dram_bytes, scalar.dram_bytes);
+        assert_eq!(simd.l2_bytes, scalar.l2_bytes);
+        assert_eq!(simd.flops, scalar.flops);
+
+        // Whole-plan ordering: simd ≤ native, equal byte accounting.
+        let p = params(32, 16, 48);
+        let plan = LaunchPlan::for_problem(2048, 64, &p);
+        let native = simulate_plan_for(&hw::H100, 8, &plan, 32, &BackendCostModel::native());
+        let simd = simulate_plan_for(&hw::H100, 8, &plan, 32, &BackendCostModel::simd());
+        assert!(simd.seconds <= native.seconds);
+        assert_eq!(simd.algo_bytes, native.algo_bytes);
+        assert_eq!(simd.launches, native.launches);
+        // Lane speedup: f64 lanes = 32/8 = 4 → divisor 1 + 0.6·3 = 2.8.
+        let m = BackendCostModel::simd();
+        assert_eq!(m.vector_width_bytes, 32.0);
+        assert_eq!(m.element_size, None);
+        assert_eq!(m.dispatch_overhead_s, 0.0);
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! Machine-readable benchmark snapshots and regression gating.
+//!
+//! The perf benches (`perf_hotpath`, `batch_scaling`,
+//! `service_throughput`) each emit a JSON result file under
+//! `target/experiments/`. This module turns those into one *snapshot*
+//! (`BENCH_*.json` at the repo root, committed per PR) and compares two
+//! snapshots with a direction-aware tolerance — the `banded-svd
+//! bench-collect` / `bench-gate` subcommands CI runs after the bench
+//! sweep.
+//!
+//! A snapshot is honest about provenance: `measured: false` marks a seed
+//! committed from an environment that could not run the benches (numbers
+//! are placeholders), and the gate *skips* unmeasured baselines instead
+//! of failing against fiction. The first CI run on real hardware
+//! replaces the seed with `measured: true` numbers via the uploaded
+//! artifact.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Snapshot schema tag — bumped if the metric encoding changes shape.
+pub const SCHEMA: &str = "bsvd-bench-v1";
+
+/// Which way a metric improves.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Throughputs: problems/s, jobs/s.
+    HigherIsBetter,
+    /// Latencies: ns/task.
+    LowerIsBetter,
+}
+
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::HigherIsBetter => "higher",
+            Direction::LowerIsBetter => "lower",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "higher" => Some(Direction::HigherIsBetter),
+            "lower" => Some(Direction::LowerIsBetter),
+            _ => None,
+        }
+    }
+}
+
+/// One benchmark observation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: &'static str,
+    pub direction: Direction,
+}
+
+impl Metric {
+    pub fn new(name: impl Into<String>, value: f64, unit: &'static str, dir: Direction) -> Self {
+        Self { name: name.into(), value, unit, direction: dir }
+    }
+}
+
+/// Render a snapshot value ready to write to a `BENCH_*.json` file.
+pub fn snapshot(label: &str, measured: bool, metrics: &[Metric]) -> Json {
+    let mut obj = Json::obj();
+    for m in metrics {
+        obj = obj.set(
+            m.name.clone(),
+            Json::obj()
+                .set("value", m.value)
+                .set("unit", m.unit)
+                .set("direction", m.direction.name()),
+        );
+    }
+    Json::obj()
+        .set("schema", SCHEMA)
+        .set("label", label)
+        .set("measured", measured)
+        .set("metrics", obj)
+}
+
+/// Parse a snapshot back into metrics; `None` for wrong-schema values.
+pub fn parse_snapshot(j: &Json) -> Option<(bool, Vec<Metric>)> {
+    if j.get("schema")?.as_str()? != SCHEMA {
+        return None;
+    }
+    let measured = j.get("measured")?.as_bool()?;
+    let mut out = Vec::new();
+    if let Json::Obj(pairs) = j.get("metrics")? {
+        for (name, m) in pairs {
+            let value = m.get("value")?.as_f64()?;
+            let direction = Direction::parse(m.get("direction")?.as_str()?)?;
+            // The unit is display-only; a leaked &'static str per distinct
+            // unit string is fine for a CLI-lifetime value.
+            let unit: &'static str =
+                Box::leak(m.get("unit")?.as_str()?.to_string().into_boxed_str());
+            out.push(Metric { name: name.clone(), value, unit, direction });
+        }
+    }
+    Some((measured, out))
+}
+
+/// Harvest metrics from the experiment files the perf benches wrote
+/// under `dir` (normally `target/experiments/`). Missing files are
+/// skipped — the snapshot records whatever the sweep produced.
+pub fn collect_experiments(dir: &Path) -> Vec<Metric> {
+    let mut out = Vec::new();
+    if let Some(j) = read_json(&dir.join("perf_hotpath.json")) {
+        if let Some(rows) = j.get("packed_kernels").and_then(Json::as_array) {
+            for row in rows {
+                let (Some(b), Some(d)) = (
+                    row.get("b").and_then(Json::as_usize),
+                    row.get("d").and_then(Json::as_usize),
+                ) else {
+                    continue;
+                };
+                for key in ["scalar_ns", "simd_ns"] {
+                    if let Some(ns) = row.get(key).and_then(Json::as_f64) {
+                        out.push(Metric::new(
+                            format!("hotpath/cycle_b{b}_d{d}_{key}"),
+                            ns,
+                            "ns/task",
+                            Direction::LowerIsBetter,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    if let Some(j) = read_json(&dir.join("batch_scaling.json")) {
+        if let Some(best) = best_of(&j, "results", "problems_per_s") {
+            out.push(Metric::new(
+                "batch/problems_per_s",
+                best,
+                "problems/s",
+                Direction::HigherIsBetter,
+            ));
+        }
+    }
+    if let Some(j) = read_json(&dir.join("service_throughput.json")) {
+        if let Some(best) = best_of(&j, "results", "jobs_per_s") {
+            out.push(Metric::new("service/jobs_per_s", best, "jobs/s", Direction::HigherIsBetter));
+        }
+    }
+    out
+}
+
+fn read_json(path: &Path) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    Json::parse(&text).ok()
+}
+
+/// Max of `field` over the objects in the `rows` array of `j`.
+fn best_of(j: &Json, rows: &str, field: &str) -> Option<f64> {
+    j.get(rows)?
+        .as_array()?
+        .iter()
+        .filter_map(|r| r.get(field).and_then(Json::as_f64))
+        .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
+}
+
+/// One metric's baseline-vs-current verdict.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Fractional change in the *bad* direction (positive = worse);
+    /// e.g. `0.12` = 12% slower (or 12% less throughput).
+    pub worsened_by: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of gating `current` against `baseline`.
+#[derive(Clone, Debug)]
+pub enum GateOutcome {
+    /// Baseline was a `measured: false` seed (or wrong schema): nothing
+    /// to compare against, gate passes vacuously.
+    SkippedUnmeasured,
+    /// Per-metric deltas for every metric present in both snapshots.
+    Compared(Vec<Delta>),
+}
+
+impl GateOutcome {
+    /// True when no compared metric regressed beyond tolerance.
+    pub fn passed(&self) -> bool {
+        match self {
+            GateOutcome::SkippedUnmeasured => true,
+            GateOutcome::Compared(deltas) => deltas.iter().all(|d| !d.regressed),
+        }
+    }
+}
+
+/// Compare two snapshots. A metric regresses when it moves more than
+/// `tolerance` (fraction, e.g. `0.10`) in its bad direction; metrics
+/// missing from either side are ignored (benches may gain kernels
+/// between PRs). An unmeasured baseline skips the comparison entirely.
+pub fn gate(baseline: &Json, current: &Json, tolerance: f64) -> GateOutcome {
+    let Some((measured, base)) = parse_snapshot(baseline) else {
+        return GateOutcome::SkippedUnmeasured;
+    };
+    if !measured {
+        return GateOutcome::SkippedUnmeasured;
+    }
+    let Some((_, cur)) = parse_snapshot(current) else {
+        return GateOutcome::Compared(Vec::new());
+    };
+    let mut deltas = Vec::new();
+    for b in &base {
+        let Some(c) = cur.iter().find(|c| c.name == b.name) else {
+            continue;
+        };
+        if b.value <= 0.0 {
+            continue; // degenerate baseline (empty sweep); nothing to gate
+        }
+        let change = (c.value - b.value) / b.value;
+        let worsened_by = match b.direction {
+            Direction::HigherIsBetter => -change,
+            Direction::LowerIsBetter => change,
+        };
+        deltas.push(Delta {
+            name: b.name.clone(),
+            baseline: b.value,
+            current: c.value,
+            worsened_by,
+            regressed: worsened_by > tolerance,
+        });
+    }
+    GateOutcome::Compared(deltas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> Vec<Metric> {
+        vec![
+            Metric::new(
+                "hotpath/cycle_b64_d32_simd_ns",
+                120.0,
+                "ns/task",
+                Direction::LowerIsBetter,
+            ),
+            Metric::new("batch/problems_per_s", 900.0, "problems/s", Direction::HigherIsBetter),
+        ]
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json_text() {
+        let j = snapshot("PR7", true, &metrics());
+        let back = Json::parse(&j.render()).unwrap();
+        let (measured, parsed) = parse_snapshot(&back).unwrap();
+        assert!(measured);
+        assert_eq!(parsed, metrics());
+        assert_eq!(back.get("schema").unwrap().as_str(), Some(SCHEMA));
+    }
+
+    #[test]
+    fn gate_is_direction_aware() {
+        let base = snapshot("base", true, &metrics());
+        // Latency up 20% (bad), throughput up 20% (good).
+        let cur = snapshot(
+            "cur",
+            true,
+            &[
+                Metric::new(
+                    "hotpath/cycle_b64_d32_simd_ns",
+                    144.0,
+                    "ns/task",
+                    Direction::LowerIsBetter,
+                ),
+                Metric::new(
+                    "batch/problems_per_s",
+                    1080.0,
+                    "problems/s",
+                    Direction::HigherIsBetter,
+                ),
+            ],
+        );
+        let out = gate(&base, &cur, 0.10);
+        assert!(!out.passed());
+        let GateOutcome::Compared(deltas) = out else { panic!("expected comparison") };
+        assert!(deltas[0].regressed && deltas[0].worsened_by > 0.19);
+        assert!(!deltas[1].regressed && deltas[1].worsened_by < 0.0);
+
+        // Throughput down 20% regresses too.
+        let cur = snapshot(
+            "cur",
+            true,
+            &[Metric::new("batch/problems_per_s", 720.0, "problems/s", Direction::HigherIsBetter)],
+        );
+        assert!(!gate(&base, &cur, 0.10).passed());
+
+        // Within tolerance passes.
+        let cur = snapshot(
+            "cur",
+            true,
+            &[Metric::new("batch/problems_per_s", 860.0, "problems/s", Direction::HigherIsBetter)],
+        );
+        assert!(gate(&base, &cur, 0.10).passed());
+    }
+
+    #[test]
+    fn unmeasured_or_alien_baseline_is_skipped() {
+        let cur = snapshot("cur", true, &metrics());
+        let seed = snapshot("seed", false, &metrics());
+        assert!(matches!(gate(&seed, &cur, 0.1), GateOutcome::SkippedUnmeasured));
+        assert!(gate(&seed, &cur, 0.1).passed());
+        let alien = Json::obj().set("schema", "something-else");
+        assert!(matches!(gate(&alien, &cur, 0.1), GateOutcome::SkippedUnmeasured));
+    }
+
+    #[test]
+    fn missing_and_new_metrics_are_ignored() {
+        let base = snapshot("base", true, &metrics());
+        let cur = snapshot(
+            "cur",
+            true,
+            &[
+                Metric::new("batch/problems_per_s", 900.0, "problems/s", Direction::HigherIsBetter),
+                Metric::new("brand/new_metric", 1.0, "x", Direction::LowerIsBetter),
+            ],
+        );
+        let out = gate(&base, &cur, 0.10);
+        let GateOutcome::Compared(deltas) = &out else { panic!("expected comparison") };
+        assert_eq!(deltas.len(), 1, "only the shared metric is compared");
+        assert!(out.passed());
+    }
+
+    #[test]
+    fn collect_reads_the_experiment_files() {
+        let dir = std::env::temp_dir().join(format!("bsvd-benchcmp-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let hotpath = Json::obj().set(
+            "packed_kernels",
+            Json::Arr(vec![Json::obj()
+                .set("b", 64usize)
+                .set("d", 32usize)
+                .set("scalar_ns", 250.0)
+                .set("simd_ns", 120.0)]),
+        );
+        std::fs::write(dir.join("perf_hotpath.json"), hotpath.render()).unwrap();
+        let batch = Json::obj().set(
+            "results",
+            Json::Arr(vec![
+                Json::obj().set("problems_per_s", 400.0),
+                Json::obj().set("problems_per_s", 900.0),
+            ]),
+        );
+        std::fs::write(dir.join("batch_scaling.json"), batch.render()).unwrap();
+
+        let got = collect_experiments(&dir);
+        std::fs::remove_dir_all(&dir).ok();
+        let find = |n: &str| got.iter().find(|m| m.name == n).map(|m| m.value);
+        assert_eq!(find("hotpath/cycle_b64_d32_scalar_ns"), Some(250.0));
+        assert_eq!(find("hotpath/cycle_b64_d32_simd_ns"), Some(120.0));
+        assert_eq!(find("batch/problems_per_s"), Some(900.0), "best row wins");
+        // service_throughput.json absent: simply no service metric.
+        assert!(find("service/jobs_per_s").is_none());
+    }
+}

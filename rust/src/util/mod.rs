@@ -3,6 +3,7 @@
 //! property testing, and JSON output.
 
 pub mod bench;
+pub mod benchcmp;
 pub mod cli;
 pub mod json;
 pub mod prop;

@@ -278,6 +278,47 @@ fn single_and_batched_requests_agree_across_f32_and_f64() {
 }
 
 #[test]
+fn simd_backend_round_trips_above_the_packed_gate() {
+    // The generated stream above stays below the packed-span gate
+    // (bw ≤ 7, tw = 4), so it exercises the SIMD backend's scalar
+    // in-place path only. This shape (bw + tw = 72 ≥ 48) routes the
+    // served reduction through the packed/vector kernels, proving the
+    // wire protocol and the vector path compose: local-direct and
+    // remote-served `--backend simd` stay bitwise interchangeable.
+    let kind = BackendKind::Simd;
+    let wide = TuneParams { tpb: 32, tw: 32, max_blocks: 24 };
+    let mut cfg = service_cfg(kind);
+    cfg.params = wide;
+    let server = Server::bind(cfg, "127.0.0.1:0").expect("bind ephemeral");
+    let addr = server.local_addr().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let local = LocalClient::direct(
+        wide,
+        BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+        kind,
+        2,
+    )
+    .expect("local client");
+    let remote = RemoteClient::connect(&addr).expect("remote client");
+    assert_eq!(remote.backend(), "simd", "handshake reports the stable backend name");
+
+    let request = || {
+        ReductionRequest::new()
+            .random(192, 40, ScalarKind::F64, 7001)
+            .random(160, 36, ScalarKind::F32, 7002)
+    };
+    let l = local.submit_wait(request()).expect("local");
+    let r = remote.submit_wait(request()).expect("remote");
+    check_outcomes_match(&l, &r, "simd above-gate").unwrap();
+    assert_eq!(l.provenance.backend, "simd");
+    assert_eq!(r.provenance.backend, "simd");
+
+    remote.shutdown().expect("shutdown");
+    server_thread.join().expect("server thread").expect("clean shutdown");
+}
+
+#[test]
 fn sharded_client_matches_local_bitwise_even_when_an_endpoint_dies_mid_stream() {
     let kind = BackendKind::Sequential;
     let server_a = Server::bind(service_cfg(kind), "127.0.0.1:0").expect("bind a");

@@ -6,11 +6,13 @@
 //! and every registered backend that can run without artifacts produces
 //! **bitwise-identical** storage to the sequential reference.
 
-use banded_svd::backend::{execute_reduction, for_kind, SequentialBackend};
+use banded_svd::backend::{execute_reduction, for_kind, SequentialBackend, SimdBackend};
 use banded_svd::config::{BackendKind, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::random_banded;
 use banded_svd::plan::LaunchPlan;
+use banded_svd::scalar::Scalar;
+use banded_svd::simd::{detect_isa, SimdIsa, SimdSpec};
 use banded_svd::simulator::{hw, simulate_plan, simulate_reduction};
 use banded_svd::util::prop::{check, Config};
 use banded_svd::util::rng::Xoshiro256;
@@ -167,6 +169,105 @@ fn prop_every_registered_backend_matches_the_sequential_reference() {
         }
         Ok(())
     });
+}
+
+/// The specs the SIMD equivalence tests sweep: forced-scalar (the
+/// `BSVD_SIMD=off` configuration), the portable lane path, and whatever
+/// ISA this host detects (AVX2+FMA on x86-64, NEON on aarch64 — equal to
+/// portable where detection fails).
+fn simd_specs(contract: bool) -> Vec<SimdSpec> {
+    vec![
+        SimdSpec::scalar(),
+        SimdSpec::with_contract(SimdIsa::Portable, contract),
+        SimdSpec::with_contract(detect_isa().unwrap_or(SimdIsa::Portable), contract),
+    ]
+}
+
+/// Shapes straddling the packed gate (`b + d ≥ 48`): the wide ones route
+/// every stage through the packed (vectorizable) kernels, the narrow one
+/// stays entirely on the in-place scalar path.
+const SIMD_SHAPES: [(usize, usize, usize); 3] = [(192, 40, 32), (280, 56, 16), (96, 10, 4)];
+
+fn simd_matches_sequential_bitwise<T: Scalar>(seed: u64)
+where
+    banded_svd::banded::Banded<T>: banded_svd::backend::AsBandStorageMut,
+{
+    for &(n, bw, tw) in &SIMD_SHAPES {
+        let params = TuneParams { tpb: 32, tw, max_blocks: 24 };
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let base = random_banded::<T>(n, bw, params.effective_tw(bw), &mut rng);
+
+        let mut reference = base.clone();
+        let (plan, ref_exec) =
+            execute_reduction(&SequentialBackend::new(), &mut reference, bw, &params).unwrap();
+        assert_eq!(reference.max_off_band(1), 0.0, "reference incomplete (n={n}, bw={bw})");
+
+        for spec in simd_specs(false) {
+            let mut work = base.clone();
+            let backend = SimdBackend::with_spec(spec, 3);
+            let (_, exec) = execute_reduction(&backend, &mut work, bw, &params).unwrap();
+            assert_eq!(work, reference, "n={n} bw={bw} {spec:?}");
+            assert_eq!(
+                exec.per_problem[0].per_launch, ref_exec.per_problem[0].per_launch,
+                "n={n} bw={bw} {spec:?}"
+            );
+            assert_eq!(exec.aggregate.launches, plan.num_launches());
+        }
+    }
+}
+
+#[test]
+fn simd_backend_is_bitwise_equal_to_sequential_in_f64() {
+    // The tentpole equivalence bar: with contraction off, the SIMD
+    // backend is bitwise-identical to the sequential oracle across
+    // shapes above and below the packed gate — on every ISA arm,
+    // including the forced-scalar fallback (`BSVD_SIMD=off`).
+    simd_matches_sequential_bitwise::<f64>(11);
+}
+
+#[test]
+fn simd_backend_is_bitwise_equal_to_sequential_in_f32() {
+    simd_matches_sequential_bitwise::<f32>(13);
+}
+
+#[test]
+fn contracted_simd_reductions_stay_within_ulp_scale_tolerance() {
+    // `BSVD_SIMD_CONTRACT=1` trades bitwise identity for lane-parallel
+    // reductions: results must stay a tiny multiple of machine epsilon
+    // from the oracle (relative to the matrix norm) and remain exactly
+    // bidiagonal, deterministically on every vector ISA.
+    let (n, bw, tw) = (192usize, 40usize, 32usize);
+    let params = TuneParams { tpb: 32, tw, max_blocks: 24 };
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let base = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+
+    let mut reference = base.clone();
+    execute_reduction(&SequentialBackend::new(), &mut reference, bw, &params).unwrap();
+    let scale = reference.fro_norm();
+
+    let mut portable_result = None;
+    for spec in simd_specs(true) {
+        if !spec.is_vector() {
+            continue;
+        }
+        let mut work = base.clone();
+        let backend = SimdBackend::with_spec(spec, 2);
+        execute_reduction(&backend, &mut work, bw, &params).unwrap();
+        assert_eq!(work.max_off_band(1), 0.0, "{spec:?}: not bidiagonal");
+        let worst = work
+            .data()
+            .iter()
+            .zip(reference.data().iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(worst <= 1e-10 * scale, "{spec:?}: drift {worst:e} vs scale {scale:e}");
+        // Contracted reductions use a fixed fold tree, so every vector
+        // ISA produces the same bits — host-independent determinism.
+        match &portable_result {
+            None => portable_result = Some(work),
+            Some(first) => assert_eq!(&work, first, "{spec:?}: contract result is ISA-dependent"),
+        }
+    }
 }
 
 #[test]
