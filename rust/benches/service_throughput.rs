@@ -77,6 +77,7 @@ fn main() {
         workers,
         routing: ShardRouting::LeastLoaded,
         quota_pending_cap: 0,
+        vectors_cap_n: banded_svd::config::DEFAULT_VECTORS_CAP_N,
     };
 
     let mut table = Table::new(vec!["submitters", "window µs", "jobs/s", "avg batch", "vs solo"]);

@@ -82,7 +82,7 @@ use crate::banded::storage::Banded;
 use crate::config::{BackendKind, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, Result};
-use crate::plan::LaunchPlan;
+use crate::plan::{LaunchPlan, ReflectorLog};
 use crate::scalar::{Scalar, F16};
 use crate::simulator::model::BackendCostModel;
 
@@ -230,6 +230,28 @@ pub trait Backend {
         problems: &mut [BandStorageMut<'_>],
     ) -> Result<Execution>;
 
+    /// Execute like [`Backend::execute`], additionally recording every
+    /// bulge-chasing reflector into `log` (a [`ReflectorLog`] sized for
+    /// this exact plan, see [`ReflectorLog::for_plan`]) — the capture
+    /// side of singular-vector accumulation
+    /// (`crate::pipeline::vectors`). Captured bits must be identical
+    /// across backends, exactly like the band storage itself. Backends
+    /// that cannot observe individual reflectors (the artifact-based
+    /// PJRT executor) keep this default, a typed configuration error.
+    fn execute_logged(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+        log: &mut ReflectorLog,
+    ) -> Result<Execution> {
+        let _ = (plan, problems, log);
+        Err(Error::Config(format!(
+            "backend '{}' cannot record reflectors for singular vectors; \
+             use a native backend (sequential/threadpool/simd)",
+            self.name()
+        )))
+    }
+
     /// True when the backend needs pre-compiled artifacts (and therefore
     /// cannot run in a bare checkout). Native backends return `false`.
     fn requires_artifacts(&self) -> bool {
@@ -333,6 +355,26 @@ pub fn execute_reduction<A: AsBandStorageMut + ?Sized>(
     Ok((plan, exec))
 }
 
+/// [`execute_reduction`] with reflector capture: sizes a
+/// [`ReflectorLog`] for the lowered plan, executes through
+/// [`Backend::execute_logged`], and returns the filled log alongside
+/// the plan — everything [`crate::pipeline::vectors`] needs to
+/// accumulate U/Vᵀ panels.
+pub fn execute_reduction_logged<A: AsBandStorageMut + ?Sized>(
+    backend: &dyn Backend,
+    a: &mut A,
+    bw: usize,
+    params: &TuneParams,
+) -> Result<(LaunchPlan, Execution, ReflectorLog)> {
+    let mut band = a.as_band_storage_mut();
+    let n = band.n();
+    band.check_reduction_storage(bw, params.effective_tw(bw))?;
+    let plan = LaunchPlan::for_problem(n, bw, params);
+    let mut log = ReflectorLog::for_plan(&plan);
+    let exec = backend.execute_logged(&plan, std::slice::from_mut(&mut band), &mut log)?;
+    Ok((plan, exec, log))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,6 +430,38 @@ mod tests {
         assert_eq!(exec_seq.aggregate.per_launch, exec_tp.aggregate.per_launch);
         assert_eq!(exec_seq.per_problem[0].bytes, exec_tp.per_problem[0].bytes);
         assert_eq!(reference.max_off_band(1), 0.0);
+    }
+
+    #[test]
+    fn logged_execution_matches_plain_and_pjrt_declines() {
+        let params = params();
+        let (n, bw) = (48, 6);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let base = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+
+        let mut plain = base.clone();
+        execute_reduction(&SequentialBackend::new(), &mut plain, bw, &params).unwrap();
+        let mut logged = base.clone();
+        let (plan, _, log) =
+            execute_reduction_logged(&SequentialBackend::new(), &mut logged, bw, &params)
+                .unwrap();
+        assert_eq!(plain, logged, "capture changed the band");
+        assert_eq!(log.tasks(0), plan.total_tasks());
+
+        // A log sized for a different plan is rejected before any work.
+        let other = LaunchPlan::for_problem(24, 3, &params);
+        let mut wrong = ReflectorLog::for_plan(&other);
+        let mut a = base.clone();
+        let seq = SequentialBackend::new();
+        assert!(seq
+            .execute_logged(&plan, &mut [a.as_band_storage_mut()], &mut wrong)
+            .is_err());
+
+        // The artifact-based backend declines with a typed config error.
+        let mut a = base.clone();
+        let err = execute_reduction_logged(&PjrtBackend::from_env(), &mut a, bw, &params)
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
     }
 
     #[test]

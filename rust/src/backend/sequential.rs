@@ -6,7 +6,8 @@ use crate::bulge::schedule::CycleTask;
 use crate::config::BackendKind;
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::Result;
-use crate::plan::{slot_bytes, LaunchPlan};
+use crate::plan::{slot_bytes, LaunchPlan, ReflectorLog};
+use crate::simd::SimdSpec;
 
 /// Executes a [`LaunchPlan`] inline on the calling thread, in plan order,
 /// one task at a time — the schedule-order oracle. Every other backend's
@@ -23,27 +24,27 @@ impl SequentialBackend {
     pub fn new() -> Self {
         Self
     }
-}
 
-impl Backend for SequentialBackend {
-    fn kind(&self) -> BackendKind {
-        BackendKind::Sequential
-    }
-
-    fn execute(
+    fn run(
         &self,
         plan: &LaunchPlan,
         problems: &mut [BandStorageMut<'_>],
+        mut log: Option<&mut ReflectorLog>,
     ) -> Result<Execution> {
         check_problems(plan, problems)?;
         let capacity = plan.capacity;
         let mut runners: Vec<Runner<'_>> = problems
             .iter_mut()
             .zip(plan.problems.iter())
-            .map(|(band, shape)| Runner::for_band(band, shape))
+            .enumerate()
+            .map(|(p, (band, shape))| {
+                let view = log.as_deref_mut().map(|l| l.view(p));
+                Runner::for_band_logged(band, shape, SimdSpec::scalar(), view)
+            })
             .collect::<Result<_>>()?;
         let mut scratch = SlotScratch::new();
         let mut tasks: Vec<CycleTask> = Vec::new();
+        let mut ordinals: Vec<usize> = vec![0; runners.len()];
         let mut aggregate = LaunchMetrics::default();
         for li in 0..plan.num_launches() {
             let mut launch_tasks = 0usize;
@@ -58,12 +59,16 @@ impl Backend for SequentialBackend {
                 tasks.clear();
                 stage.tasks_at_into(shape.n, slot.t as usize, &mut tasks);
                 debug_assert_eq!(tasks.len(), count);
-                for task in &tasks {
+                let base = ordinals[p];
+                for (i, task) in tasks.iter().enumerate() {
                     // SAFETY: problems are exclusively borrowed for the
                     // whole call and tasks execute strictly one at a
                     // time — no concurrent access exists at all.
-                    unsafe { runners[p].exec_task(slot.stage as usize, task, &mut scratch) };
+                    unsafe {
+                        runners[p].exec_task(slot.stage as usize, task, base + i, &mut scratch)
+                    };
                 }
+                ordinals[p] = base + count;
                 launch_tasks += count;
                 launch_bytes += bytes;
             }
@@ -73,6 +78,30 @@ impl Backend for SequentialBackend {
             per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),
             aggregate,
         })
+    }
+}
+
+impl Backend for SequentialBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sequential
+    }
+
+    fn execute(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+    ) -> Result<Execution> {
+        self.run(plan, problems, None)
+    }
+
+    fn execute_logged(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+        log: &mut ReflectorLog,
+    ) -> Result<Execution> {
+        log.check_plan(plan)?;
+        self.run(plan, problems, Some(log))
     }
 }
 

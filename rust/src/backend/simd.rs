@@ -21,7 +21,7 @@ use crate::backend::{check_problems, Backend, BandStorageMut, Execution, Threadp
 use crate::batch::engine::{execute_plan, Runner};
 use crate::config::BackendKind;
 use crate::error::Result;
-use crate::plan::LaunchPlan;
+use crate::plan::{LaunchPlan, ReflectorLog};
 use crate::simd::SimdSpec;
 use crate::simulator::model::BackendCostModel;
 use crate::util::threadpool::ThreadPool;
@@ -67,6 +67,29 @@ impl<'p> SimdBackend<'p> {
     pub fn isa_name(&self) -> &'static str {
         self.spec.isa.name()
     }
+
+    fn run(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+        mut log: Option<&mut ReflectorLog>,
+    ) -> Result<Execution> {
+        check_problems(plan, problems)?;
+        let mut runners: Vec<Runner<'_>> = problems
+            .iter_mut()
+            .zip(plan.problems.iter())
+            .enumerate()
+            .map(|(p, (band, shape))| {
+                let view = log.as_deref_mut().map(|l| l.view(p));
+                Runner::for_band_logged(band, shape, self.spec, view)
+            })
+            .collect::<Result<_>>()?;
+        let aggregate = execute_plan(plan, &mut runners, self.inner.pool());
+        Ok(Execution {
+            per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),
+            aggregate,
+        })
+    }
 }
 
 impl Backend for SimdBackend<'_> {
@@ -79,17 +102,17 @@ impl Backend for SimdBackend<'_> {
         plan: &LaunchPlan,
         problems: &mut [BandStorageMut<'_>],
     ) -> Result<Execution> {
-        check_problems(plan, problems)?;
-        let mut runners: Vec<Runner<'_>> = problems
-            .iter_mut()
-            .zip(plan.problems.iter())
-            .map(|(band, shape)| Runner::for_band_with_kernel(band, shape, self.spec))
-            .collect::<Result<_>>()?;
-        let aggregate = execute_plan(plan, &mut runners, self.inner.pool());
-        Ok(Execution {
-            per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),
-            aggregate,
-        })
+        self.run(plan, problems, None)
+    }
+
+    fn execute_logged(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+        log: &mut ReflectorLog,
+    ) -> Result<Execution> {
+        log.check_plan(plan)?;
+        self.run(plan, problems, Some(log))
     }
 
     fn cost_model(&self) -> BackendCostModel {

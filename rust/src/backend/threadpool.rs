@@ -5,7 +5,8 @@ use crate::backend::{check_problems, Backend, BandStorageMut, Execution};
 use crate::batch::engine::{execute_plan, Runner};
 use crate::config::BackendKind;
 use crate::error::Result;
-use crate::plan::LaunchPlan;
+use crate::plan::{LaunchPlan, ReflectorLog};
+use crate::simd::SimdSpec;
 use crate::util::threadpool::ThreadPool;
 
 enum PoolRef<'p> {
@@ -47,6 +48,29 @@ impl<'p> ThreadpoolBackend<'p> {
             PoolRef::Borrowed(p) => p,
         }
     }
+
+    fn run(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+        mut log: Option<&mut ReflectorLog>,
+    ) -> Result<Execution> {
+        check_problems(plan, problems)?;
+        let mut runners: Vec<Runner<'_>> = problems
+            .iter_mut()
+            .zip(plan.problems.iter())
+            .enumerate()
+            .map(|(p, (band, shape))| {
+                let view = log.as_deref_mut().map(|l| l.view(p));
+                Runner::for_band_logged(band, shape, SimdSpec::scalar(), view)
+            })
+            .collect::<Result<_>>()?;
+        let aggregate = execute_plan(plan, &mut runners, self.pool());
+        Ok(Execution {
+            per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),
+            aggregate,
+        })
+    }
 }
 
 impl Backend for ThreadpoolBackend<'_> {
@@ -59,17 +83,17 @@ impl Backend for ThreadpoolBackend<'_> {
         plan: &LaunchPlan,
         problems: &mut [BandStorageMut<'_>],
     ) -> Result<Execution> {
-        check_problems(plan, problems)?;
-        let mut runners: Vec<Runner<'_>> = problems
-            .iter_mut()
-            .zip(plan.problems.iter())
-            .map(|(band, shape)| Runner::for_band(band, shape))
-            .collect::<Result<_>>()?;
-        let aggregate = execute_plan(plan, &mut runners, self.pool());
-        Ok(Execution {
-            per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),
-            aggregate,
-        })
+        self.run(plan, problems, None)
+    }
+
+    fn execute_logged(
+        &self,
+        plan: &LaunchPlan,
+        problems: &mut [BandStorageMut<'_>],
+        log: &mut ReflectorLog,
+    ) -> Result<Execution> {
+        log.check_plan(plan)?;
+        self.run(plan, problems, Some(log))
     }
 }
 

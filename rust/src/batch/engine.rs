@@ -17,12 +17,16 @@ use crate::backend::{Backend, BandStorageMut, ThreadpoolBackend};
 use crate::banded::storage::Banded;
 use crate::batch::plan::BatchPlan;
 use crate::batch::BatchInput;
-use crate::bulge::cycle::{exec_cycle_shared_with, CycleWorkspace, SharedBanded};
+use crate::bulge::cycle::{
+    exec_cycle_shared_logged_with, exec_cycle_shared_with, CycleWorkspace, SharedBanded,
+    TaskCapture,
+};
 use crate::bulge::schedule::{CycleTask, Stage};
 use crate::config::{BatchConfig, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::Result;
-use crate::plan::{slot_bytes, LaunchPlan, ProblemShape};
+use crate::plan::reflectors::LogView;
+use crate::plan::{slot_bytes, LaunchPlan, ProblemShape, ReflectorLog};
 use crate::service::cache::PlanCache;
 use crate::scalar::Scalar;
 use crate::simd::SimdSpec;
@@ -59,13 +63,22 @@ impl SlotScratch {
 /// type so problems of mixed precision share one launch loop).
 trait ProblemExec: Sync {
     /// Execute one task of stage `si` using the calling slot's scratch.
+    /// `ordinal` is the task's plan-order index within its problem —
+    /// the position its reflector record occupies in an attached
+    /// [`LogView`] (ignored when no log is attached).
     ///
     /// # Safety
     /// The task must be element-disjoint from every other task
     /// concurrently executing on the same problem (guaranteed within one
     /// plan launch), and the problem's buffer must not be otherwise
     /// accessed for the duration of the call.
-    unsafe fn exec_task(&self, si: usize, task: &CycleTask, scratch: &mut SlotScratch);
+    unsafe fn exec_task(
+        &self,
+        si: usize,
+        task: &CycleTask,
+        ordinal: usize,
+        scratch: &mut SlotScratch,
+    );
 
     /// Element size of the problem's scalar type (for traffic accounting).
     fn element_bytes(&self) -> usize;
@@ -77,14 +90,38 @@ struct NativeExec<T> {
     /// SIMD kernel selection for packed-path tasks —
     /// `SimdSpec::scalar()` on every backend except `SimdBackend`.
     spec: SimdSpec,
+    /// Reflector capture destination (`Backend::execute_logged`), or
+    /// `None` for plain value-only execution.
+    log: Option<LogView>,
 }
 
 impl<T: Scalar> ProblemExec for NativeExec<T> {
-    unsafe fn exec_task(&self, si: usize, task: &CycleTask, scratch: &mut SlotScratch) {
+    unsafe fn exec_task(
+        &self,
+        si: usize,
+        task: &CycleTask,
+        ordinal: usize,
+        scratch: &mut SlotScratch,
+    ) {
         let stage = &self.stages[si];
         let ws = scratch.workspace::<T>();
         ws.ensure_stage(stage);
-        exec_cycle_shared_with(&self.view, stage, task, ws, self.spec);
+        match self.log {
+            Some(log) => {
+                // SAFETY: each plan ordinal names exactly one task, so
+                // this record is aliased by no concurrent task.
+                let (right, left) = log.task_mut(ordinal);
+                exec_cycle_shared_logged_with(
+                    &self.view,
+                    stage,
+                    task,
+                    ws,
+                    self.spec,
+                    TaskCapture { right, left },
+                );
+            }
+            None => exec_cycle_shared_with(&self.view, stage, task, ws, self.spec),
+        }
     }
 
     fn element_bytes(&self) -> usize {
@@ -116,11 +153,24 @@ impl<'a> Runner<'a> {
         shape: &ProblemShape,
         spec: SimdSpec,
     ) -> Result<Self> {
+        Self::with_kernel_logged(a, shape, spec, None)
+    }
+
+    /// [`Runner::with_kernel`] with an optional reflector-log view the
+    /// runner records every task's reflectors into (the capture side of
+    /// `Backend::execute_logged`).
+    pub(crate) fn with_kernel_logged<T: Scalar>(
+        a: &'a mut Banded<T>,
+        shape: &ProblemShape,
+        spec: SimdSpec,
+        log: Option<LogView>,
+    ) -> Result<Self> {
         a.check_reduction_storage(shape.bw, shape.tw)?;
         let exec: Box<dyn ProblemExec + Sync + 'a> = Box::new(NativeExec {
             view: SharedBanded::new(a),
             stages: shape.stages.clone(),
             spec,
+            log,
         });
         Ok(Self { exec, metrics: LaunchMetrics::default(), _borrow: PhantomData })
     }
@@ -140,22 +190,41 @@ impl<'a> Runner<'a> {
         shape: &ProblemShape,
         spec: SimdSpec,
     ) -> Result<Self> {
+        Self::for_band_logged(band, shape, spec, None)
+    }
+
+    /// [`Runner::for_band_with_kernel`] with an optional reflector-log
+    /// view (see [`Runner::with_kernel_logged`]).
+    pub(crate) fn for_band_logged(
+        band: &'a mut BandStorageMut<'_>,
+        shape: &ProblemShape,
+        spec: SimdSpec,
+        log: Option<LogView>,
+    ) -> Result<Self> {
         match band {
-            BandStorageMut::F64(a) => Runner::with_kernel(&mut **a, shape, spec),
-            BandStorageMut::F32(a) => Runner::with_kernel(&mut **a, shape, spec),
-            BandStorageMut::F16(a) => Runner::with_kernel(&mut **a, shape, spec),
+            BandStorageMut::F64(a) => Runner::with_kernel_logged(&mut **a, shape, spec, log),
+            BandStorageMut::F32(a) => Runner::with_kernel_logged(&mut **a, shape, spec, log),
+            BandStorageMut::F16(a) => Runner::with_kernel_logged(&mut **a, shape, spec, log),
         }
     }
 
-    /// Execute one task of stage `si` using `scratch`.
+    /// Execute one task of stage `si` using `scratch`; `ordinal` is the
+    /// task's plan-order index within its problem (consumed by the
+    /// reflector log, ignored otherwise).
     ///
     /// # Safety
     /// See [`ProblemExec::exec_task`]: the task must be element-disjoint
     /// from every task concurrently executing on the same problem, and
     /// the problem's buffer must not be otherwise accessed for the
     /// duration of the call.
-    pub(crate) unsafe fn exec_task(&self, si: usize, task: &CycleTask, scratch: &mut SlotScratch) {
-        self.exec.exec_task(si, task, scratch)
+    pub(crate) unsafe fn exec_task(
+        &self,
+        si: usize,
+        task: &CycleTask,
+        ordinal: usize,
+        scratch: &mut SlotScratch,
+    ) {
+        self.exec.exec_task(si, task, ordinal, scratch)
     }
 
     /// Element size of the problem's scalar type.
@@ -218,11 +287,15 @@ pub(crate) fn execute_plan(
     // workspace), alive across every launch of the run.
     let scratch: WorkerLocal<SlotScratch> = WorkerLocal::new(slots, |_| SlotScratch::new());
     // Flattened launch buffers, reused across launches: `keys[i]` names
-    // the (problem, stage) of `tasks[i]`; `buckets[w]` lists the task
-    // indices routed to pool slot `w`.
+    // the (problem, stage, per-problem task ordinal) of `tasks[i]`;
+    // `buckets[w]` lists the task indices routed to pool slot `w`. The
+    // ordinal advances in *plan* order (slot order × tasks_at order) —
+    // never execution order — so a reflector log filled concurrently is
+    // position-identical to one filled by the sequential oracle.
     let mut tasks: Vec<CycleTask> = Vec::new();
-    let mut keys: Vec<(u32, u32)> = Vec::new();
+    let mut keys: Vec<(u32, u32, u32)> = Vec::new();
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); slots];
+    let mut ordinals: Vec<u32> = vec![0; runners.len()];
     for li in 0..plan.num_launches() {
         tasks.clear();
         keys.clear();
@@ -241,18 +314,20 @@ pub(crate) fn execute_plan(
             let start = tasks.len();
             stage.tasks_at_into(shape.n, slot.t as usize, &mut tasks);
             debug_assert_eq!(tasks.len() - start, slot.count as usize);
+            let base = ordinals[p];
             for (i, task) in tasks[start..].iter().enumerate() {
-                keys.push((slot.problem, slot.stage));
+                keys.push((slot.problem, slot.stage, base + i as u32));
                 let w = affinity_slot(p, stage, task, lanes);
                 buckets[w].push((start + i) as u32);
             }
+            ordinals[p] = base + slot.count;
         }
         aggregate.record_launch(tasks.len(), capacity, launch_bytes);
 
         // Execute: one pinned pool dispatch, one barrier — tasks within
         // the launch are disjoint (schedule property within a problem,
         // separate buffers across problems).
-        let keys_ref: &[(u32, u32)] = &keys;
+        let keys_ref: &[(u32, u32, u32)] = &keys;
         let tasks_ref: &[CycleTask] = &tasks;
         let buckets_ref: &[Vec<u32>] = &buckets;
         let runners_ref: &[Runner<'_>] = runners;
@@ -262,12 +337,17 @@ pub(crate) fn execute_plan(
             // one thread at a time.
             let ws = unsafe { scratch_ref.get_mut(w) };
             for &i in &buckets_ref[w] {
-                let (p, si) = keys_ref[i as usize];
+                let (p, si, ord) = keys_ref[i as usize];
                 // SAFETY: within a launch every task is disjoint from
                 // every other (see above); launches are ordered by the
                 // pool barrier.
                 unsafe {
-                    runners_ref[p as usize].exec.exec_task(si as usize, &tasks_ref[i as usize], ws)
+                    runners_ref[p as usize].exec.exec_task(
+                        si as usize,
+                        &tasks_ref[i as usize],
+                        ord as usize,
+                        ws,
+                    )
                 };
             }
         });
@@ -365,11 +445,41 @@ impl BatchCoordinator {
     /// merged shared-launch plan on the selected backend.
     pub fn run(&self, inputs: &mut [BatchInput]) -> Result<BatchReport> {
         let plan = self.plan(inputs)?;
+        self.execute(plan, inputs, None)
+    }
+
+    /// [`BatchCoordinator::run`] with reflector capture: executes the
+    /// same merged plan through [`Backend::execute_logged`] and returns
+    /// the filled [`ReflectorLog`] alongside the report, so callers can
+    /// accumulate singular-vector panels
+    /// ([`crate::pipeline::accumulate_panels`]) per plan problem.
+    /// Bands, σ inputs, and metrics are bitwise identical to
+    /// [`BatchCoordinator::run`] — recording never changes what the
+    /// kernels write.
+    pub fn run_logged(&self, inputs: &mut [BatchInput]) -> Result<(BatchReport, ReflectorLog)> {
+        let plan = self.plan(inputs)?;
+        let mut log = ReflectorLog::for_plan(plan.merged.as_ref());
+        let report = self.execute(plan, inputs, Some(&mut log))?;
+        Ok((report, log))
+    }
+
+    /// Shared execution body of [`BatchCoordinator::run`] /
+    /// [`BatchCoordinator::run_logged`].
+    fn execute(
+        &self,
+        plan: BatchPlan,
+        inputs: &mut [BatchInput],
+        log: Option<&mut ReflectorLog>,
+    ) -> Result<BatchReport> {
         let t_start = Instant::now();
-        let mut bands: Vec<BandStorageMut<'_>> =
-            inputs.iter_mut().map(|input| input.as_band_storage_mut()).collect();
-        let exec = self.backend.execute(plan.merged.as_ref(), &mut bands)?;
-        drop(bands);
+        let exec = {
+            let mut bands: Vec<BandStorageMut<'_>> =
+                inputs.iter_mut().map(|input| input.as_band_storage_mut()).collect();
+            match log {
+                Some(log) => self.backend.execute_logged(plan.merged.as_ref(), &mut bands, log)?,
+                None => self.backend.execute(plan.merged.as_ref(), &mut bands)?,
+            }
+        };
         let wall = t_start.elapsed();
         let mut aggregate = exec.aggregate;
         aggregate.wall = wall;
@@ -471,6 +581,29 @@ mod tests {
             assert_eq!(r.metrics.tasks, p.metrics.tasks);
             assert_eq!(r.metrics.per_launch, p.metrics.per_launch);
             assert_eq!(r.metrics.bytes, p.metrics.bytes);
+        }
+    }
+
+    #[test]
+    fn logged_runs_match_plain_runs_bitwise() {
+        // Recording reflectors must not perturb the reduction: bands,
+        // σ inputs, and metrics are bitwise those of the plain run, and
+        // the filled log matches the merged plan it was built for.
+        let cfg = BatchConfig { max_coresident: 8, policy: PackingPolicy::RoundRobin };
+        let coord = BatchCoordinator::new(params(), cfg, 4);
+        let mut plain = mixed_batch(91);
+        let mut logged = mixed_batch(91);
+        let report = coord.run(&mut plain).unwrap();
+        let (logged_report, log) = coord.run_logged(&mut logged).unwrap();
+        assert_eq!(log.num_problems(), logged_report.problems.len());
+        log.check_plan(logged_report.plan.merged.as_ref()).unwrap();
+        for (a, b) in report.problems.iter().zip(logged_report.problems.iter()) {
+            assert_eq!(a.diag, b.diag);
+            assert_eq!(a.superdiag, b.superdiag);
+            assert_eq!(a.residual_off_band, b.residual_off_band);
+            assert_eq!(a.metrics.launches, b.metrics.launches);
+            assert_eq!(a.metrics.tasks, b.metrics.tasks);
+            assert_eq!(a.metrics.bytes, b.metrics.bytes);
         }
     }
 

@@ -326,6 +326,28 @@ pub fn task_tile_spec(stage: &Stage, task: &CycleTask, n: usize) -> TileSpec {
     TileSpec::new(j0, jd, c1, task.pivot_row, j0, jd)
 }
 
+/// Destination for one task's two reflector records — a borrowed slice
+/// pair over a [`crate::plan::ReflectorLog`] arena record, each laid out
+/// as `[τ, v₁ .. v_dd]`. Values are converted to f64 at capture time
+/// (exact for every supported working precision), immediately after
+/// `make_reflector_simd` forms them — before the apply loops (and, on
+/// the packed path, the tile write-back) can overwrite the workspace.
+pub struct TaskCapture<'a> {
+    /// Right (column-combining, V-side) reflector record.
+    pub right: &'a mut [f64],
+    /// Left (row-combining, U-side) reflector record.
+    pub left: &'a mut [f64],
+}
+
+#[inline]
+fn record_reflector<T: Scalar>(out: &mut [f64], tau: T, tail: &[T]) {
+    debug_assert_eq!(out.len(), tail.len() + 1, "capture record sized for another task");
+    out[0] = tau.to_f64();
+    for (o, v) in out[1..].iter_mut().zip(tail.iter()) {
+        *o = v.to_f64();
+    }
+}
+
 /// Execute the **right** op of `task`: annihilate the pivot row's elements
 /// in columns `anchor+1 ..= min(anchor+d, n−1)` into `(pivot, anchor)`,
 /// applying the reflector to rows `pivot+1 ..= min(anchor+d, n−1)`.
@@ -356,6 +378,25 @@ pub unsafe fn exec_right_with<T: Scalar, V: BandView<T>>(
     ws: &mut CycleWorkspace<T>,
     spec: SimdSpec,
 ) {
+    exec_right_cap(view, stage, task, ws, spec, None)
+}
+
+/// [`exec_right_with`] with an optional reflector-capture destination
+/// (`Some` records `[τ, v₁..v_dd]` the moment the reflector is formed).
+/// The numerical path is byte-for-byte the uncaptured one — the capture
+/// only *reads* the workspace between `make_reflector_simd` and the
+/// apply loops.
+///
+/// # Safety
+/// As [`exec_right`].
+unsafe fn exec_right_cap<T: Scalar, V: BandView<T>>(
+    view: &V,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+    spec: SimdSpec,
+    cap: Option<&mut [f64]>,
+) {
     let n = view.n();
     let j0 = task.anchor;
     let rp = task.pivot_row;
@@ -372,6 +413,9 @@ pub unsafe fn exec_right_with<T: Scalar, V: BandView<T>>(
         *xv = view.get(rp, j0 + jj);
     }
     let tau = make_reflector_simd(x, spec);
+    if let Some(out) = cap {
+        record_reflector(out, tau, &x[1..=dd]);
+    }
     // Write back β and exact zeros (Alg. 2 line 6).
     view.set(rp, j0, x[0]);
     for jj in 1..=dd {
@@ -441,6 +485,22 @@ pub unsafe fn exec_left_with<T: Scalar, V: BandView<T>>(
     ws: &mut CycleWorkspace<T>,
     spec: SimdSpec,
 ) {
+    exec_left_cap(view, stage, task, ws, spec, None)
+}
+
+/// [`exec_left_with`] with an optional reflector-capture destination —
+/// see [`exec_right_cap`].
+///
+/// # Safety
+/// As [`exec_left`].
+unsafe fn exec_left_cap<T: Scalar, V: BandView<T>>(
+    view: &V,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+    spec: SimdSpec,
+    cap: Option<&mut [f64]>,
+) {
     let n = view.n();
     let j0 = task.anchor;
     let i1 = (j0 + stage.d).min(n - 1);
@@ -455,6 +515,9 @@ pub unsafe fn exec_left_with<T: Scalar, V: BandView<T>>(
         x.copy_from_slice(seg);
     }
     let tau = make_reflector_simd(x, spec);
+    if let Some(out) = cap {
+        record_reflector(out, tau, &x[1..=dd]);
+    }
     {
         let seg = view.col_segment_mut(j0, j0, i1);
         seg[0] = x[0];
@@ -509,6 +572,22 @@ pub unsafe fn exec_cycle_packed_with<T: Scalar>(
     ws: &mut CycleWorkspace<T>,
     simd: SimdSpec,
 ) {
+    exec_cycle_packed_cap(view, stage, task, ws, simd, None)
+}
+
+/// [`exec_cycle_packed_with`] with an optional [`TaskCapture`] — both
+/// reflectors are recorded from inside the tile, before the write-back.
+///
+/// # Safety
+/// As [`exec_cycle_packed`].
+unsafe fn exec_cycle_packed_cap<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+    simd: SimdSpec,
+    cap: Option<TaskCapture<'_>>,
+) {
     let spec = task_tile_spec(stage, task, view.n);
     let elems = spec.elems();
     let mut tile = std::mem::take(&mut ws.tile);
@@ -517,8 +596,12 @@ pub unsafe fn exec_cycle_packed_with<T: Scalar>(
     }
     view.pack_tile(&spec, &mut tile[..elems]);
     let tv = TileView { data: tile.as_mut_ptr(), spec, pitch: spec.pitch(), n: view.n };
-    exec_right_with(&tv, stage, task, ws, simd);
-    exec_left_with(&tv, stage, task, ws, simd);
+    let (rcap, lcap) = match cap {
+        Some(c) => (Some(c.right), Some(c.left)),
+        None => (None, None),
+    };
+    exec_right_cap(&tv, stage, task, ws, simd, rcap);
+    exec_left_cap(&tv, stage, task, ws, simd, lcap);
     view.unpack_tile(&spec, &tile[..elems]);
     ws.tile = tile;
 }
@@ -586,6 +669,33 @@ pub unsafe fn exec_cycle_shared_with<T: Scalar>(
         exec_cycle_packed_with(view, stage, task, ws, simd);
     } else {
         exec_cycle_inplace(view, stage, task, ws);
+    }
+}
+
+/// [`exec_cycle_shared_with`] additionally recording the task's two
+/// reflectors into `cap` — the seam every vectors-capable backend runs
+/// through (`Backend::execute_logged`). Below-gate stages capture from
+/// the scalar in-place kernels, above-gate stages from inside the
+/// packed tile, so the captured bits are identical across paths exactly
+/// like the band bits are.
+///
+/// # Safety
+/// As [`exec_cycle_shared`]; additionally `cap`'s record slices must
+/// not be aliased by any concurrently executing task (the reflector log
+/// hands out disjoint records per plan task ordinal).
+pub unsafe fn exec_cycle_shared_logged_with<T: Scalar>(
+    view: &SharedBanded<T>,
+    stage: &Stage,
+    task: &CycleTask,
+    ws: &mut CycleWorkspace<T>,
+    simd: SimdSpec,
+    cap: TaskCapture<'_>,
+) {
+    if stage_uses_packed(stage) {
+        exec_cycle_packed_cap(view, stage, task, ws, simd, Some(cap));
+    } else {
+        exec_right_cap(view, stage, task, ws, SimdSpec::scalar(), Some(cap.right));
+        exec_left_cap(view, stage, task, ws, SimdSpec::scalar(), Some(cap.left));
     }
 }
 
@@ -686,6 +796,66 @@ mod tests {
             }
             assert_eq!(a1, a2, "n={n} b={b} d={d}");
             assert_eq!(a1.max_off_band(stage.b_out()), 0.0);
+        }
+    }
+
+    #[test]
+    fn captured_reflectors_are_path_invariant_and_leave_numerics_alone() {
+        // The capture seam must (a) record identical bits from the
+        // in-place and packed paths, and (b) never perturb the chased
+        // band relative to the uncaptured kernels.
+        let mut rng = Xoshiro256::seed_from_u64(123);
+        for (n, b, d) in [(40usize, 5usize, 4usize), (96, 12, 6), (200, 32, 16)] {
+            let stage = Stage::new(b, d);
+            let base = random_banded::<f64>(n, b, d, &mut rng);
+            let mut plain = base.clone();
+            let mut inplace = base.clone();
+            let mut packed = base.clone();
+            let mut ws0 = CycleWorkspace::new(&stage);
+            let mut ws1 = CycleWorkspace::new(&stage);
+            let mut ws2 = CycleWorkspace::new(&stage);
+            let mut rec1: Vec<Vec<f64>> = Vec::new();
+            let mut rec2: Vec<Vec<f64>> = Vec::new();
+            for k in 0..stage.num_sweeps(n) {
+                for c in 0..=stage.cmax(n, k) {
+                    let task = stage.task(k, c);
+                    let jd = (task.anchor + d).min(n - 1);
+                    let dd = jd - task.anchor;
+                    let mut r1 = vec![0.0; 2 * (dd + 1)];
+                    let mut r2 = vec![0.0; 2 * (dd + 1)];
+                    let v0 = SharedBanded::new(&mut plain);
+                    let v1 = SharedBanded::new(&mut inplace);
+                    let v2 = SharedBanded::new(&mut packed);
+                    // SAFETY: exclusive borrows, no concurrency.
+                    unsafe {
+                        exec_cycle_inplace(&v0, &stage, &task, &mut ws0);
+                        {
+                            let (right, left) = r1.split_at_mut(dd + 1);
+                            exec_right_cap(
+                                &v1, &stage, &task, &mut ws1,
+                                SimdSpec::scalar(), Some(right),
+                            );
+                            exec_left_cap(
+                                &v1, &stage, &task, &mut ws1,
+                                SimdSpec::scalar(), Some(left),
+                            );
+                        }
+                        {
+                            let (right, left) = r2.split_at_mut(dd + 1);
+                            exec_cycle_packed_cap(
+                                &v2, &stage, &task, &mut ws2,
+                                SimdSpec::scalar(),
+                                Some(TaskCapture { right, left }),
+                            );
+                        }
+                    }
+                    rec1.push(r1);
+                    rec2.push(r2);
+                }
+            }
+            assert_eq!(rec1, rec2, "n={n} b={b} d={d}: capture diverges across paths");
+            assert_eq!(plain, inplace, "n={n} b={b} d={d}: capture perturbed the band");
+            assert_eq!(plain, packed, "n={n} b={b} d={d}: packed capture perturbed the band");
         }
     }
 

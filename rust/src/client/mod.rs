@@ -62,12 +62,14 @@ pub mod wire;
 pub use sharded::{RouteStrategy, ShardedClient};
 
 use crate::backend::{cost_model_for, for_kind};
+use crate::banded::dense::Dense;
 use crate::batch::{BatchCoordinator, BatchInput, BatchMetrics};
 use crate::config::{BackendKind, BatchConfig, ServiceConfig, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, JobError, Result};
 use crate::generate::random_banded;
 use crate::pipeline::stage3::bidiagonal_singular_values;
+use crate::pipeline::{accumulate_panels, complete_svd};
 use crate::scalar::ScalarKind;
 use crate::service::cache::PlanCache;
 use crate::service::queue::JobTicket;
@@ -147,6 +149,7 @@ pub struct ReductionRequest {
     deadline: Option<Duration>,
     client_id: Option<String>,
     quota_class: Option<String>,
+    vectors: bool,
 }
 
 impl ReductionRequest {
@@ -207,6 +210,23 @@ impl ReductionRequest {
     /// [`ReductionRequest::client_id`] as the quota key.
     pub fn quota_class(mut self, class: impl Into<String>) -> Self {
         self.quota_class = Some(class.into());
+        self
+    }
+
+    /// Request full singular vectors: every [`ProblemOutcome`] carries
+    /// dense n×n `u` / `vt` panels (and σ from the same Demmel–Kahan
+    /// rotation stream, so (σ, U, Vᵀ) is one consistent factorization).
+    /// The panels are **bitwise identical** across every execution
+    /// surface and backend kind — direct, queued, remote, sharded.
+    ///
+    /// Costs 2·n² f64 per problem; the serving paths decline requests
+    /// above [`crate::config::ServiceConfig::vectors_cap_n`] with the
+    /// terminal [`JobError::TooLarge`], and a [`RemoteClient`] connected
+    /// to a pre-vectors server (wire protocol < 3) declines with the
+    /// terminal [`JobError::Unavailable`] instead of silently returning
+    /// values only.
+    pub fn with_vectors(mut self, vectors: bool) -> Self {
+        self.vectors = vectors;
         self
     }
 
@@ -307,6 +327,13 @@ pub struct ProblemOutcome {
     /// Largest |element| outside the bidiagonal after the run — observable
     /// only where the reduced matrix lives (local paths).
     pub residual_off_band: Option<f64>,
+    /// Dense n×n left singular-vector panel (columns of U), present iff
+    /// the request set [`ReductionRequest::with_vectors`]. Widened to
+    /// f64 and bitwise identical across every execution surface.
+    pub u: Option<Dense<f64>>,
+    /// Dense n×n right singular-vector panel (rows of Vᵀ), present iff
+    /// the request set [`ReductionRequest::with_vectors`].
+    pub vt: Option<Dense<f64>>,
 }
 
 /// What a completed request reports back: one [`ProblemOutcome`] per
@@ -525,27 +552,57 @@ impl LocalClient {
         cache: &PlanCache,
     ) -> Result<ReductionOutcome> {
         let params = request.params.unwrap_or(self.params);
+        let vectors = request.vectors;
         let mut inputs: Vec<BatchInput> =
             request.problems.into_iter().map(|p| p.materialize(&params)).collect();
         let coord = BatchCoordinator::with_backend(params, batch, for_kind(kind, threads)?)
             .with_plan_cache(cache.clone());
         let before = cache.stats();
         let t0 = Instant::now();
-        let report = coord.run(&mut inputs)?;
+        let (report, log) = if vectors {
+            let (report, log) = coord.run_logged(&mut inputs)?;
+            (report, Some(log))
+        } else {
+            (coord.run(&mut inputs)?, None)
+        };
         let wall = t0.elapsed();
         let batch_jobs = report.problems.len();
         let problems = report
             .problems
             .iter()
-            .map(|p| ProblemOutcome {
-                n: p.n,
-                bw: p.bw,
-                precision: p.precision,
-                sv: bidiagonal_singular_values(&p.diag, &p.superdiag),
-                metrics: p.metrics.clone(),
-                batch_jobs,
-                queue_wait: None,
-                residual_off_band: Some(p.residual_off_band),
+            .enumerate()
+            .map(|(p_idx, p)| {
+                // Vectors requests take σ from the Demmel–Kahan rotation
+                // stream so (σ, U, Vᵀ) is one consistent factorization;
+                // values-only requests keep the bisection path bit-for-bit.
+                let (sv, u, vt) = match log.as_ref() {
+                    Some(log) => {
+                        let mut u = Dense::<f64>::identity(p.n);
+                        let mut vt = Dense::<f64>::identity(p.n);
+                        accumulate_panels(
+                            report.plan.merged.as_ref(),
+                            log,
+                            p_idx,
+                            &mut u,
+                            &mut vt,
+                        );
+                        let sv = complete_svd(&p.diag, &p.superdiag, &mut u, &mut vt);
+                        (sv, Some(u), Some(vt))
+                    }
+                    None => (bidiagonal_singular_values(&p.diag, &p.superdiag), None, None),
+                };
+                ProblemOutcome {
+                    n: p.n,
+                    bw: p.bw,
+                    precision: p.precision,
+                    sv,
+                    metrics: p.metrics.clone(),
+                    batch_jobs,
+                    queue_wait: None,
+                    residual_off_band: Some(p.residual_off_band),
+                    u,
+                    vt,
+                }
             })
             .collect();
         Ok(ReductionOutcome {
@@ -589,6 +646,7 @@ impl LocalClient {
         let deadline = request.deadline;
         let client_id = request.client_id;
         let quota_class = request.quota_class;
+        let vectors = request.vectors;
         let inputs: Vec<BatchInput> =
             request.problems.into_iter().map(|p| p.materialize(&self.params)).collect();
         let mut tickets = Vec::with_capacity(inputs.len());
@@ -599,6 +657,7 @@ impl LocalClient {
                 input,
                 priority,
                 deadline,
+                vectors,
             ) {
                 Ok(ticket) => tickets.push(ticket),
                 Err(e) => {
@@ -641,6 +700,8 @@ impl LocalClient {
                         batch_jobs: r.batch_jobs,
                         queue_wait: Some(r.queue_wait),
                         residual_off_band: None,
+                        u: r.u,
+                        vt: r.vt,
                     });
                 }
                 Err(e) => {
@@ -740,28 +801,36 @@ struct RemoteState {
 pub struct RemoteClient {
     addr: String,
     backend: String,
+    /// Wire protocol version the endpoint reported at connect — one of
+    /// [`wire::PROTO_ACCEPTED`]. Capability gate: vector requests need
+    /// protocol ≥ 3 (older servers would silently drop the flag).
+    proto: u32,
     state: Mutex<RemoteState>,
     counters: Counters,
 }
 
 impl RemoteClient {
     /// Connect and handshake: a `ping` round trip first (the server must
-    /// speak [`wire::PROTO_VERSION`] — a missing or mismatched `proto`
-    /// is a typed [`JobError::Unavailable`], not a config error, so
-    /// routing layers treat the endpoint as down), then one `stats` round
-    /// trip recording the serving backend for provenance.
+    /// speak a protocol in [`wire::PROTO_ACCEPTED`] — a missing or
+    /// unsupported `proto` is a typed [`JobError::Unavailable`], not a
+    /// config error, so routing layers treat the endpoint as down), then
+    /// one `stats` round trip recording the serving backend for
+    /// provenance. The negotiated version is kept: a protocol-2 server
+    /// serves values-only traffic exactly as before, and a vectors
+    /// request against it fails client-side with a terminal
+    /// [`JobError::Unavailable`] instead of a silently degraded result.
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr).map_err(Error::Io)?;
         let reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
         let mut state = RemoteState { reader, writer: stream, done: HashMap::new() };
         let pong = Self::roundtrip(&mut state, "{\"verb\":\"ping\"}")?;
-        match pong.get("proto").and_then(Json::as_usize) {
-            Some(v) if v == wire::PROTO_VERSION as usize => {}
+        let proto = match pong.get("proto").and_then(Json::as_usize) {
+            Some(v) if wire::PROTO_ACCEPTED.contains(&(v as u32)) => v as u32,
             Some(v) => {
                 return Err(Error::Job(JobError::Unavailable {
                     reason: format!(
-                        "endpoint {addr} speaks wire protocol {v}; this client speaks {}",
-                        wire::PROTO_VERSION
+                        "endpoint {addr} speaks wire protocol {v}; this client accepts {:?}",
+                        wire::PROTO_ACCEPTED
                     ),
                 }));
             }
@@ -769,12 +838,12 @@ impl RemoteClient {
                 return Err(Error::Job(JobError::Unavailable {
                     reason: format!(
                         "endpoint {addr} reports no wire protocol version (pre-versioning \
-                         server); this client speaks {}",
-                        wire::PROTO_VERSION
+                         server); this client accepts {:?}",
+                        wire::PROTO_ACCEPTED
                     ),
                 }));
             }
-        }
+        };
         let stats = Self::roundtrip(&mut state, "{\"verb\":\"stats\"}")?;
         let backend = stats
             .get("stats")
@@ -785,6 +854,7 @@ impl RemoteClient {
         Ok(Self {
             addr: addr.to_string(),
             backend,
+            proto,
             state: Mutex::new(state),
             counters: Counters::default(),
         })
@@ -798,6 +868,12 @@ impl RemoteClient {
     /// The serving side's backend name (from the connect handshake).
     pub fn backend(&self) -> &str {
         &self.backend
+    }
+
+    /// The wire protocol version negotiated at connect (one of
+    /// [`wire::PROTO_ACCEPTED`]).
+    pub fn proto(&self) -> u32 {
+        self.proto
     }
 
     fn roundtrip(state: &mut RemoteState, line: &str) -> Result<Json> {
@@ -859,6 +935,7 @@ impl RemoteClient {
         priority: u8,
         deadline: Option<Duration>,
         identity: wire::RequestIdentity<'_>,
+        vectors: bool,
     ) -> Result<ReductionOutcome> {
         let t0 = Instant::now();
         let mut problems = Vec::with_capacity(inputs.len());
@@ -869,7 +946,8 @@ impl RemoteClient {
                 self.counters.failed.fetch_add(remaining, Ordering::Relaxed);
                 e
             };
-            let line = wire::submit_request_for_input(input, priority, deadline, identity);
+            let line =
+                wire::submit_request_for_input(input, priority, deadline, identity, vectors);
             let transport = writeln!(state.writer, "{line}")
                 .and_then(|()| state.writer.flush())
                 .map_err(Error::Io);
@@ -892,6 +970,8 @@ impl RemoteClient {
                         batch_jobs: r.batch_jobs,
                         queue_wait: Some(r.queue_wait),
                         residual_off_band: None,
+                        u: r.u,
+                        vt: r.vt,
                     });
                 }
                 Err(e) => {
@@ -930,10 +1010,21 @@ impl Client for RemoteClient {
                     .into(),
             ));
         }
+        if request.vectors && self.proto < 3 {
+            self.counters.failed.fetch_add(request.len() as u64, Ordering::Relaxed);
+            return Err(Error::Job(JobError::Unavailable {
+                reason: format!(
+                    "endpoint {} speaks wire protocol {}, which predates singular-vector \
+                     serving (needs >= 3); upgrade the server or drop .with_vectors()",
+                    self.addr, self.proto
+                ),
+            }));
+        }
         let priority = request.priority;
         let deadline = request.deadline;
         let client_id = request.client_id;
         let quota_class = request.quota_class;
+        let vectors = request.vectors;
         // Materialization params only size local fill-in storage; the
         // band payload depends solely on (n, bw, seed), so local and
         // remote materializations agree (see ProblemSpec).
@@ -949,7 +1040,7 @@ impl Client for RemoteClient {
             quota_class: quota_class.as_deref(),
         };
         let mut state = self.state.lock().unwrap();
-        let outcome = self.run_request(&mut state, inputs, priority, deadline, identity);
+        let outcome = self.run_request(&mut state, inputs, priority, deadline, identity, vectors);
         let id = next_handle_id();
         state.done.insert(id, outcome);
         Ok(JobHandle { id })
@@ -991,6 +1082,7 @@ mod tests {
             workers: 1,
             routing: crate::config::ShardRouting::LeastLoaded,
             quota_pending_cap: 0,
+            vectors_cap_n: crate::config::DEFAULT_VECTORS_CAP_N,
         }
     }
 
@@ -1044,6 +1136,69 @@ mod tests {
         }
         assert_eq!(q.provenance.source, ExecutionSource::LocalQueued);
         assert_eq!(queued.service().unwrap().stats().jobs_completed, 2);
+    }
+
+    #[test]
+    fn direct_client_vector_panels_match_the_logged_pipeline_bitwise() {
+        use crate::pipeline::banded_svd_vectors_with;
+        let params = params();
+        let mut rng = Xoshiro256::seed_from_u64(29);
+        let (n, bw) = (48, 6);
+        let a = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let want =
+            banded_svd_vectors_with(&SequentialBackend::new(), &a, bw, &params).unwrap();
+
+        let client =
+            LocalClient::direct(params, BatchConfig::default(), BackendKind::Sequential, 1)
+                .unwrap();
+        let outcome = client
+            .submit_wait(ReductionRequest::new().problem((a.clone(), bw)).with_vectors(true))
+            .unwrap();
+        let p = &outcome.problems[0];
+        assert_eq!(p.sv, want.sv);
+        assert_eq!(p.u.as_ref().unwrap().data, want.u.data);
+        assert_eq!(p.vt.as_ref().unwrap().data, want.vt.data);
+        // Values-only requests stay panel-free (and keep bisection σ).
+        let plain = client.submit_wait(ReductionRequest::new().problem((a, bw))).unwrap();
+        assert!(plain.problems[0].u.is_none());
+        assert!(plain.problems[0].vt.is_none());
+    }
+
+    #[test]
+    fn queued_client_vector_panels_match_direct_bitwise() {
+        let request = || {
+            ReductionRequest::new()
+                .random(40, 5, ScalarKind::F64, 31)
+                .random(32, 4, ScalarKind::F64, 32)
+                .with_vectors(true)
+        };
+        let direct =
+            LocalClient::direct(params(), BatchConfig::default(), BackendKind::Sequential, 1)
+                .unwrap();
+        let queued = LocalClient::queued(service_cfg()).unwrap();
+        let d = direct.submit_wait(request()).unwrap();
+        let q = queued.submit_wait(request()).unwrap();
+        assert_eq!(d.problems.len(), q.problems.len());
+        for (dp, qp) in d.problems.iter().zip(q.problems.iter()) {
+            assert_eq!(dp.sv, qp.sv);
+            assert_eq!(dp.u.as_ref().unwrap().data, qp.u.as_ref().unwrap().data);
+            assert_eq!(dp.vt.as_ref().unwrap().data, qp.vt.as_ref().unwrap().data);
+        }
+    }
+
+    #[test]
+    fn oversized_vectors_request_is_a_terminal_too_large_error() {
+        let cfg = ServiceConfig { vectors_cap_n: 32, ..service_cfg() };
+        let client = LocalClient::queued(cfg).unwrap();
+        let err = client
+            .submit(ReductionRequest::new().random(48, 6, ScalarKind::F64, 5).with_vectors(true))
+            .unwrap_err();
+        assert_eq!(err.as_job().unwrap().kind(), "too-large");
+        assert!(!err.is_retryable(), "{err}");
+        // The same shape without vectors is admitted.
+        client
+            .submit_wait(ReductionRequest::new().random(48, 6, ScalarKind::F64, 5))
+            .unwrap();
     }
 
     #[test]

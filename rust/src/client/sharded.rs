@@ -11,9 +11,14 @@
 //!    in-flight requests from this client;
 //! 2. **fails over** on endpoint death — a transport error or a typed
 //!    [`JobError::Unavailable`] (including the ping handshake refusing a
-//!    protocol mismatch, see [`crate::client::wire::PROTO_VERSION`])
+//!    protocol mismatch, see [`crate::client::wire::PROTO_ACCEPTED`])
 //!    marks the endpoint down and the request moves to the next one,
-//!    reconnecting lazily when a downed endpoint comes back;
+//!    reconnecting lazily when a downed endpoint comes back. Capability
+//!    gaps ride the same signal: a vectors request
+//!    ([`ReductionRequest::with_vectors`]) against a protocol-2 member
+//!    fails client-side with `Unavailable`, so a mixed fleet routes it
+//!    to a protocol-3 member, and an all-legacy fleet surfaces the
+//!    terminal "all endpoints down" error instead of a degraded result;
 //! 3. **retries** retryable rejections ([`JobError::is_retryable`]:
 //!    overloaded, quota-exceeded) with a short backoff, bounded by
 //!    [`MAX_RETRY_ROUNDS`] full sweeps of the fleet.

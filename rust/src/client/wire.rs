@@ -21,6 +21,7 @@
 //! - responses: [`result_json`] / [`parse_submit_response`],
 //!   [`error_json`] / [`job_error_json`] / [`parse_error`].
 
+use crate::banded::dense::Dense;
 use crate::banded::storage::Banded;
 use crate::batch::BatchInput;
 use crate::coordinator::metrics::LaunchMetrics;
@@ -35,11 +36,21 @@ use std::time::Duration;
 ///
 /// Compatibility rule (documented in `docs/client.md`): the server
 /// **tolerates requests without a `proto` field** (the PR 5 wire, v1 —
-/// hand-rolled clients keep working) but **rejects a present, mismatched
-/// `proto`**; clients handshake by pinging first and refuse a server
-/// whose `ping` response is missing or mismatched with a typed
-/// [`JobError::Unavailable`] instead of a parse failure downstream.
-pub const PROTO_VERSION: u32 = 2;
+/// hand-rolled clients keep working) and accepts any version in
+/// [`PROTO_ACCEPTED`] (v3 only *adds* optional fields — `vectors` on
+/// requests, `u`/`vt` on responses — so a v2 line is still a valid v3
+/// conversation); anything else present is rejected. Clients handshake
+/// by pinging first, record the server's advertised version, and refuse
+/// a server whose `ping` response is missing or unsupported with a
+/// typed [`JobError::Unavailable`] instead of a parse failure
+/// downstream. A vectors request against a v2 server fails client-side
+/// the same way: the old server would silently drop the flag, which
+/// must never masquerade as a served answer.
+pub const PROTO_VERSION: u32 = 3;
+
+/// Protocol versions a v3 build accepts from its peer (see the
+/// compatibility rule on [`PROTO_VERSION`]).
+pub const PROTO_ACCEPTED: [u32; 2] = [2, 3];
 
 /// Number of in-band values of an upper-banded `n × n` matrix with `bw`
 /// superdiagonals — the required `band` payload length. Closed form
@@ -117,6 +128,7 @@ pub fn band_from_values(
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn submit_json(
     n: usize,
     bw: usize,
@@ -124,6 +136,7 @@ fn submit_json(
     priority: u8,
     deadline: Option<Duration>,
     identity: RequestIdentity<'_>,
+    vectors: bool,
     band: Vec<f64>,
 ) -> String {
     let band: Vec<Json> = band.into_iter().map(Json::Num).collect();
@@ -136,6 +149,11 @@ fn submit_json(
         .set("priority", priority as usize);
     if let Some(deadline) = deadline {
         request = request.set("deadline_ms", Json::Int(deadline.as_millis() as i64));
+    }
+    if vectors {
+        // Absent means false: values-only lines stay byte-compatible
+        // with what a v2 client renders.
+        request = request.set("vectors", true);
     }
     if let Some(client_id) = identity.client_id {
         request = request.set("client_id", client_id);
@@ -165,25 +183,37 @@ pub fn submit_request<T: Scalar>(a: &Banded<T>, bw: usize, priority: u8) -> Stri
         priority,
         None,
         RequestIdentity::default(),
+        false,
         band_values(a, bw),
     )
 }
 
 /// Render a `submit` request line for a type-erased problem — what the
 /// [`super::RemoteClient`] sends for each problem of a request, carrying
-/// the request's priority class, optional deadline, and identity.
+/// the request's priority class, optional deadline, identity, and
+/// whether the job should accumulate singular-vector panels.
 pub fn submit_request_for_input(
     input: &BatchInput,
     priority: u8,
     deadline: Option<Duration>,
     identity: RequestIdentity<'_>,
+    vectors: bool,
 ) -> String {
     let band = match input {
         BatchInput::F64 { a, bw } => band_values(a, *bw),
         BatchInput::F32 { a, bw } => band_values(a, *bw),
         BatchInput::F16 { a, bw } => band_values(a, *bw),
     };
-    submit_json(input.n(), input.bw(), input.precision(), priority, deadline, identity, band)
+    submit_json(
+        input.n(),
+        input.bw(),
+        input.precision(),
+        priority,
+        deadline,
+        identity,
+        vectors,
+        band,
+    )
 }
 
 fn metrics_json(m: &LaunchMetrics) -> Json {
@@ -195,10 +225,19 @@ fn metrics_json(m: &LaunchMetrics) -> Json {
         .set("bytes", Json::Int(m.bytes as i64))
 }
 
+/// Flat row-major serialization of a dense n×n panel — the `u`/`vt`
+/// payload of a vectors response. Shortest-roundtrip formatting keeps
+/// the entries bitwise.
+fn panel_json(p: &Dense<f64>) -> Json {
+    Json::Arr(p.data.iter().map(|&x| Json::Num(x)).collect())
+}
+
 /// Render a completed job as the `submit` response object — the server
-/// side of [`parse_submit_response`].
+/// side of [`parse_submit_response`]. Vector panels ride as optional
+/// flat row-major `n²` arrays (`u`, `vt`), present exactly when the job
+/// requested them (proto ≥ 3).
 pub fn result_json(r: &JobResult) -> Json {
-    Json::obj()
+    let mut response = Json::obj()
         .set("ok", true)
         .set("verb", "submit")
         .set("id", Json::Int(r.id as i64))
@@ -208,7 +247,14 @@ pub fn result_json(r: &JobResult) -> Json {
         .set("batch_jobs", r.batch_jobs)
         .set("queue_us", Json::Int(r.queue_wait.as_micros() as i64))
         .set("metrics", metrics_json(&r.metrics))
-        .set("sv", Json::Arr(r.sv.iter().map(|&x| Json::Num(x)).collect()))
+        .set("sv", Json::Arr(r.sv.iter().map(|&x| Json::Num(x)).collect()));
+    if let Some(u) = &r.u {
+        response = response.set("u", panel_json(u));
+    }
+    if let Some(vt) = &r.vt {
+        response = response.set("vt", panel_json(vt));
+    }
+    response
 }
 
 /// Generic protocol-level error response (malformed request, unknown
@@ -256,12 +302,38 @@ fn field_usize(obj: &Json, key: &str) -> Result<usize> {
         .ok_or_else(|| Error::Config(format!("submit response missing integer {key:?}")))
 }
 
+/// Decode an optional flat row-major `n²` panel field (`u`/`vt`) — the
+/// client side of the vectors extension. Present-but-malformed is an
+/// error, never a silently absent panel.
+fn parse_panel(response: &Json, key: &str, n: usize) -> Result<Option<Dense<f64>>> {
+    let Some(field) = response.get(key) else {
+        return Ok(None);
+    };
+    let arr = field
+        .as_array()
+        .ok_or_else(|| Error::Config(format!("submit response {key:?} must be an array")))?;
+    if arr.len() != n * n {
+        return Err(Error::Config(format!(
+            "submit response {key:?} has {} values; n={n} needs {}",
+            arr.len(),
+            n * n
+        )));
+    }
+    let data: Vec<f64> = arr
+        .iter()
+        .map(|v| {
+            v.as_f64().ok_or_else(|| Error::Config(format!("non-numeric {key:?} panel entry")))
+        })
+        .collect::<Result<_>>()?;
+    Ok(Some(Dense::from_vec(n, n, data)))
+}
+
 /// Parse a `submit` response line into the same [`JobResult`] the
 /// in-process service delivers. `{"ok":false}` responses decode through
 /// [`parse_error`]. The wire carries the launch-accounting summary, not
 /// the per-launch trace, so `metrics.per_launch` comes back empty and
-/// `metrics.wall` zero; everything else — including the singular values,
-/// bitwise — round-trips exactly.
+/// `metrics.wall` zero; everything else — including the singular values
+/// and any `u`/`vt` panels, bitwise — round-trips exactly.
 pub fn parse_submit_response(response: &Json) -> Result<JobResult> {
     if response.get("ok").and_then(Json::as_bool) != Some(true) {
         return Err(parse_error(response));
@@ -307,6 +379,8 @@ pub fn parse_submit_response(response: &Json) -> Result<JobResult> {
         bw: field_usize(response, "bw")?,
         precision,
         sv,
+        u: parse_panel(response, "u", n)?,
+        vt: parse_panel(response, "vt", n)?,
         metrics,
         batch_jobs: field_usize(response, "batch_jobs")?,
         queue_wait: Duration::from_micros(
@@ -369,6 +443,7 @@ mod tests {
             2,
             None,
             RequestIdentity::default(),
+            false,
         );
         assert_eq!(typed, erased);
     }
@@ -383,11 +458,12 @@ mod tests {
             1,
             Some(Duration::from_millis(250)),
             RequestIdentity::default(),
+            false,
         );
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("deadline_ms").and_then(Json::as_i64), Some(250));
         assert_eq!(parsed.get("priority").and_then(Json::as_usize), Some(1));
-        let bare = submit_request_for_input(&input, 0, None, RequestIdentity::default());
+        let bare = submit_request_for_input(&input, 0, None, RequestIdentity::default(), false);
         assert!(Json::parse(&bare).unwrap().get("deadline_ms").is_none());
     }
 
@@ -398,7 +474,7 @@ mod tests {
         let input = BatchInput::from((a, 2));
         let identity =
             RequestIdentity { client_id: Some("tenant-a"), quota_class: Some("batch") };
-        let line = submit_request_for_input(&input, 0, None, identity);
+        let line = submit_request_for_input(&input, 0, None, identity, false);
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(
             parsed.get("proto").and_then(Json::as_usize),
@@ -407,7 +483,7 @@ mod tests {
         assert_eq!(parsed.get("client_id").and_then(Json::as_str), Some("tenant-a"));
         assert_eq!(parsed.get("quota_class").and_then(Json::as_str), Some("batch"));
         // Anonymous lines omit the identity fields but still carry proto.
-        let bare = submit_request_for_input(&input, 0, None, RequestIdentity::default());
+        let bare = submit_request_for_input(&input, 0, None, RequestIdentity::default(), false);
         let parsed = Json::parse(&bare).unwrap();
         assert!(parsed.get("client_id").is_none());
         assert!(parsed.get("quota_class").is_none());
@@ -433,6 +509,8 @@ mod tests {
             },
             batch_jobs: 3,
             queue_wait: Duration::from_micros(417),
+            u: None,
+            vt: None,
         };
         let line = result_json(&result).render();
         let back = parse_submit_response(&Json::parse(&line).unwrap()).unwrap();
@@ -450,6 +528,66 @@ mod tests {
         for (got, want) in back.sv.iter().zip(result.sv.iter()) {
             assert_eq!(got.to_bits(), want.to_bits());
         }
+        assert!(back.u.is_none() && back.vt.is_none(), "values-only response has no panels");
+    }
+
+    #[test]
+    fn vectors_flag_rides_the_request_line_only_when_set() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let a = random_banded::<f64>(16, 2, 1, &mut rng);
+        let input = BatchInput::from((a, 2));
+        let with = submit_request_for_input(&input, 0, None, RequestIdentity::default(), true);
+        let parsed = Json::parse(&with).unwrap();
+        assert_eq!(parsed.get("vectors").and_then(Json::as_bool), Some(true));
+        // A values-only line omits the field entirely — byte-compatible
+        // with the v2 rendering a legacy server expects.
+        let without =
+            submit_request_for_input(&input, 0, None, RequestIdentity::default(), false);
+        assert!(Json::parse(&without).unwrap().get("vectors").is_none());
+    }
+
+    #[test]
+    fn vector_panels_roundtrip_bitwise_and_validate_length() {
+        let n = 3;
+        let u = Dense::from_vec(n, n, vec![1.0, 0.25, -0.5, 0.125, 1e-300, -0.0, 2.5, 3.0, 4.0]);
+        let vt = Dense::from_vec(n, n, (0..9).map(|k| (k as f64).sqrt()).collect());
+        let result = JobResult {
+            id: 1,
+            n,
+            bw: 1,
+            precision: "fp64",
+            sv: vec![3.0, 2.0, 1.0],
+            u: Some(u.clone()),
+            vt: Some(vt.clone()),
+            metrics: LaunchMetrics {
+                launches: 1,
+                tasks: 2,
+                max_parallel: 1,
+                unrolled_launches: 0,
+                bytes: 64,
+                per_launch: Vec::new(),
+                wall: Duration::ZERO,
+            },
+            batch_jobs: 1,
+            queue_wait: Duration::ZERO,
+        };
+        let line = result_json(&result).render();
+        let back = parse_submit_response(&Json::parse(&line).unwrap()).unwrap();
+        let (bu, bvt) = (back.u.unwrap(), back.vt.unwrap());
+        assert_eq!((bu.rows, bu.cols), (n, n));
+        for (got, want) in bu.data.iter().zip(u.data.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        for (got, want) in bvt.data.iter().zip(vt.data.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        // A panel of the wrong length is a protocol error, not a panel.
+        let mut tampered = result_json(&result);
+        tampered = tampered.set("u", Json::Arr(vec![Json::Num(1.0); 4]));
+        assert!(parse_submit_response(&tampered).is_err());
+        // Wrong type too.
+        let tampered = result_json(&result).set("vt", Json::s("nope"));
+        assert!(parse_submit_response(&tampered).is_err());
     }
 
     #[test]

@@ -207,6 +207,14 @@ pub struct ServiceConfig {
     /// already has this many jobs queued across all shards. `0`
     /// disables quota enforcement; anonymous jobs are never counted.
     pub quota_pending_cap: usize,
+    /// Largest problem side `n` admitted when the job requests singular
+    /// vectors: the vectors path materializes two dense n×n f64 panels
+    /// plus the reflector log (~16·n² bytes a panel, log in the same
+    /// order), so unbounded n would let one job exhaust service memory.
+    /// Submissions above the cap are rejected with
+    /// [`crate::error::JobError::TooLarge`] (terminal, not retryable).
+    /// Values-only jobs are never bounded by this.
+    pub vectors_cap_n: usize,
 }
 
 impl ServiceConfig {
@@ -229,6 +237,13 @@ impl ServiceConfig {
         }
         if self.workers == 0 {
             return Err(Error::Config("service workers must be positive".into()));
+        }
+        if self.vectors_cap_n == 0 {
+            return Err(Error::Config(
+                "service vectors_cap_n must be positive (it bounds admission of \
+                 vectors jobs; values-only jobs are unaffected)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -258,9 +273,14 @@ impl Default for ServiceConfig {
             workers: env_usize("BSVD_SERVICE_WORKERS", 1).max(1),
             routing: ShardRouting::default(),
             quota_pending_cap: 0,
+            vectors_cap_n: DEFAULT_VECTORS_CAP_N,
         }
     }
 }
+
+/// Default [`ServiceConfig::vectors_cap_n`]: 4096² f64 panels are
+/// ~134 MB per factor — a deliberate ceiling for a CPU-serving tier.
+pub const DEFAULT_VECTORS_CAP_N: usize = 4096;
 
 /// How the service's admission router spreads jobs over its batcher
 /// shards when [`ServiceConfig::workers`] is above one. Either policy
@@ -475,6 +495,10 @@ mod tests {
         assert!(bad_batch.validate().is_err());
         assert!(ServiceConfig { workers: 0, ..ServiceConfig::default() }.validate().is_err());
         assert!(ServiceConfig { workers: 4, ..ServiceConfig::default() }.validate().is_ok());
+        assert_eq!(ServiceConfig::default().vectors_cap_n, DEFAULT_VECTORS_CAP_N);
+        assert!(ServiceConfig { vectors_cap_n: 0, ..ServiceConfig::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -33,6 +33,12 @@ pub enum JobError {
     /// The job's deadline passed while it was still queued; it was
     /// failed at flush instead of executed.
     DeadlineExpired { queued_ms: u64 },
+    /// Admission control declined the job because its resource footprint
+    /// exceeds a service cap (e.g. a singular-vector request whose dense
+    /// n×n panels exceed `vectors_cap_n`). **Not retryable**: the same
+    /// submission fails identically until the request shrinks or the
+    /// service is reconfigured.
+    TooLarge { reason: String },
     /// The backend failed while executing the job's plan.
     Execution { reason: String },
 }
@@ -51,6 +57,7 @@ impl JobError {
             JobError::QuotaExceeded { .. } => "quota-exceeded",
             JobError::Unavailable { .. } => "unavailable",
             JobError::DeadlineExpired { .. } => "deadline-expired",
+            JobError::TooLarge { .. } => "too-large",
             JobError::Execution { .. } => "execution",
         }
     }
@@ -70,6 +77,7 @@ impl JobError {
             "deadline-expired" => {
                 JobError::DeadlineExpired { queued_ms: queued_ms.unwrap_or(0) }
             }
+            "too-large" => JobError::TooLarge { reason: message.to_string() },
             _ => JobError::Execution { reason: message.to_string() },
         }
     }
@@ -86,6 +94,7 @@ impl fmt::Display for JobError {
             JobError::DeadlineExpired { queued_ms } => {
                 write!(f, "deadline exceeded before execution (queued {queued_ms} ms)")
             }
+            JobError::TooLarge { reason } => write!(f, "request too large: {reason}"),
             JobError::Execution { reason } => write!(f, "execution failed: {reason}"),
         }
     }
@@ -207,6 +216,7 @@ mod tests {
         for terminal in [
             JobError::Unavailable { reason: "shutting down".into() },
             JobError::DeadlineExpired { queued_ms: 7 },
+            JobError::TooLarge { reason: "n=9000 exceeds vectors cap".into() },
             JobError::Execution { reason: "backend".into() },
         ] {
             assert!(!terminal.is_retryable(), "{terminal:?}");
@@ -222,6 +232,7 @@ mod tests {
             JobError::Overloaded { reason: "queue full: 4 jobs".into() },
             JobError::QuotaExceeded { reason: "client tenant-a has 4 pending (cap 4)".into() },
             JobError::Unavailable { reason: "service is shutting down".into() },
+            JobError::TooLarge { reason: "vectors for n=9000 exceed the cap".into() },
             JobError::Execution { reason: "backend threadpool failed".into() },
         ] {
             let back = JobError::from_kind(e.kind(), &e.to_string(), None);

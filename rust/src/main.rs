@@ -43,6 +43,7 @@ fn cli() -> Cli {
                     opt("threads", "worker threads (0 = all cores)", "0"),
                     opt("seed", "rng seed", "42"),
                     flag("verify", "check singular values against the Jacobi oracle (n ≤ 512)"),
+                    flag("vectors", "compute full singular vectors (dense U/Vᵀ panels)"),
                 ],
             },
             Command {
@@ -101,6 +102,7 @@ fn cli() -> Cli {
                     opt("backend", "sequential|threadpool|simd|pjrt (local modes)", "threadpool"),
                     opt("threads", "worker threads (0 = all cores, local modes)", "0"),
                     opt("seed", "rng seed", "42"),
+                    flag("vectors", "request dense U/Vᵀ singular-vector panels per problem"),
                     flag("shutdown", "after the run, ask the remote server(s) to shut down"),
                 ],
             },
@@ -114,6 +116,7 @@ fn cli() -> Cli {
                     opt("workers", "batcher shards, each with its own backend (overrides env)", ""),
                     opt("routing", "job-to-shard routing: least-loaded|size-class", "least-loaded"),
                     opt("quota-cap", "max pending jobs per client (0 = no quota)", "0"),
+                    opt("vectors-cap", "largest n admitted for singular-vector jobs", "4096"),
                     opt("max-coresident", "micro-batch size flush trigger", "16"),
                     opt("policy", "packing policy: round-robin|greedy-fill", "round-robin"),
                     opt("window-us", "micro-batch window in µs (overrides env)", ""),
@@ -308,10 +311,18 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
         None
     };
 
+    let vectors = args.flag("vectors");
     // pjrt-fused executes whole-stage artifacts (one call per stage)
     // outside the plan-executor path; every plan backend goes through
     // the unified client front door.
     if backend == BackendKind::PjrtFused {
+        if vectors {
+            eprintln!(
+                "--vectors needs a plan backend with reflector capture \
+                 (sequential|threadpool|simd); pjrt-fused serves values only"
+            );
+            return 2;
+        }
         let mut af = a.convert::<f32>();
         let engine = match PjrtEngine::load(&artifact_dir(), n, bw, tw) {
             Ok(e) => e,
@@ -350,7 +361,7 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
             return 2;
         }
     };
-    match client.submit_wait(ReductionRequest::new().problem((a, bw))) {
+    match client.submit_wait(ReductionRequest::new().problem((a, bw)).with_vectors(vectors)) {
         Ok(outcome) => {
             let p = &outcome.problems[0];
             println!(
@@ -364,6 +375,18 @@ fn cmd_reduce(args: &banded_svd::util::cli::Args) -> i32 {
             );
             if let Some(residual) = p.residual_off_band {
                 println!("residual off-bidiagonal: {residual:.3e}");
+            }
+            if let (Some(u), Some(vt)) = (&p.u, &p.vt) {
+                println!(
+                    "singular vectors: U {}x{}, Vt {}x{}; orthogonality error \
+                     U {:.3e}, V {:.3e}",
+                    u.rows,
+                    u.cols,
+                    vt.rows,
+                    vt.cols,
+                    u.orthogonality_error(),
+                    vt.orthogonality_error()
+                );
             }
             verify_against_oracle(&p.sv, dense_before.as_ref())
         }
@@ -436,6 +459,20 @@ fn print_outcome(outcome: &ReductionOutcome) {
         ]);
     }
     table.print();
+    let with_panels = outcome.problems.iter().filter(|p| p.u.is_some()).count();
+    if with_panels > 0 {
+        let worst = outcome
+            .problems
+            .iter()
+            .flat_map(|p| [p.u.as_ref(), p.vt.as_ref()])
+            .flatten()
+            .map(|panel| panel.orthogonality_error())
+            .fold(0.0f64, f64::max);
+        println!(
+            "singular vectors: {with_panels} problem(s) carry dense U/Vt panels \
+             (worst orthogonality error {worst:.3e})"
+        );
+    }
     let problems = outcome.problems.len();
     let throughput = outcome.throughput();
     if let Some(batch) = &outcome.batch {
@@ -573,6 +610,9 @@ fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
     }
     if let Some(class) = args.get("quota-class").filter(|s| !s.is_empty()) {
         request = request.quota_class(class);
+    }
+    if args.flag("vectors") {
+        request = request.with_vectors(true);
     }
 
     // One driver for every execution surface: request handling below is
@@ -749,6 +789,7 @@ fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
         workers,
         routing,
         quota_pending_cap: args.parse_or("quota-cap", 0),
+        vectors_cap_n: args.parse_or("vectors-cap", base.vectors_cap_n),
     };
     let addr = args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
     let server = match Server::bind(cfg, &addr) {

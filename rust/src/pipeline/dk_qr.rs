@@ -13,6 +13,49 @@
 const TOL: f64 = 100.0 * f64::EPSILON;
 const MAX_SWEEPS_PER_VALUE: usize = 40;
 
+/// Which factor a Givens rotation emitted by [`dk_qr_factor`] updates.
+///
+/// The iteration computes `B = U_B · Σ' · V_Bᵀ` as a product of plane
+/// rotations: a `Right` rotation acts on the row space (rotate rows
+/// `i, i+1` of `Vᵀ`), a `Left` rotation on the column space (rotate
+/// columns `i, i+1` of `U`). Both use the same convention:
+/// `x' = c·x + s·y`, `y' = −s·x + c·y`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum GivensSide {
+    /// Update the left factor: rotate columns `i, i+1` of `U`.
+    Left,
+    /// Update the right factor: rotate rows `i, i+1` of `Vᵀ`.
+    Right,
+}
+
+/// What [`dk_qr_factor`] returns besides the rotation stream: the sorted
+/// singular values plus the sign/permutation fix-up that maps the raw
+/// iterated diagonal onto them. Apply in this order: first flip row `i`
+/// of `Vᵀ` wherever `negated[i]`, then permute (`U[:,k] ← U[:,order[k]]`,
+/// `Vᵀ[k,:] ← Vᵀ[order[k],:]`); then `sv[k] = |d[order[k]]|` descending.
+#[derive(Clone, Debug)]
+pub struct DkQrFactors {
+    /// Singular values, descending.
+    pub sv: Vec<f64>,
+    /// `order[k]` = original index of the k-th largest singular value
+    /// (stable under ties).
+    pub order: Vec<usize>,
+    /// `negated[i]`: the iterated diagonal converged to a negative value
+    /// at original index `i`, so row `i` of `Vᵀ` must be sign-flipped.
+    pub negated: Vec<bool>,
+}
+
+/// The optional rotation sink: called once per Givens rotation, in
+/// application order, with `(side, i, c, s)`.
+type Sink<'a> = Option<&'a mut dyn FnMut(GivensSide, usize, f64, f64)>;
+
+#[inline]
+fn emit(sink: &mut Sink, side: GivensSide, i: usize, c: f64, s: f64) {
+    if let Some(f) = sink.as_mut() {
+        f(side, i, c, s);
+    }
+}
+
 /// Givens rotation (c, s, r) with c·a + s·b = r, −s·a + c·b = 0
 /// (LAPACK `lartg`-style, guarded for zeros).
 #[inline]
@@ -29,15 +72,17 @@ fn rotg(a: f64, b: f64) -> (f64, f64, f64) {
 
 /// One zero-shift QR sweep on d[lo..=hi], e[lo..hi] (Demmel–Kahan
 /// "implicit zero-shift" recurrence).
-fn zero_shift_sweep(d: &mut [f64], e: &mut [f64], lo: usize, hi: usize) {
+fn zero_shift_sweep(d: &mut [f64], e: &mut [f64], lo: usize, hi: usize, sink: &mut Sink) {
     let (mut c_old, mut s_old) = (1.0f64, 0.0f64);
     let mut c = 1.0f64;
     for i in lo..hi {
         let (c_new, s_new, r) = rotg(d[i] * c, e[i]);
+        emit(sink, GivensSide::Right, i, c_new, s_new);
         if i > lo {
             e[i - 1] = s_old * r;
         }
         let (co, so, ro) = rotg(c_old * r, d[i + 1] * s_new);
+        emit(sink, GivensSide::Left, i, co, so);
         d[i] = ro;
         c = c_new;
         c_old = co;
@@ -49,11 +94,12 @@ fn zero_shift_sweep(d: &mut [f64], e: &mut [f64], lo: usize, hi: usize) {
 }
 
 /// One shifted QR sweep (standard bulge-chase with shift σ²).
-fn shifted_sweep(d: &mut [f64], e: &mut [f64], lo: usize, hi: usize, shift: f64) {
+fn shifted_sweep(d: &mut [f64], e: &mut [f64], lo: usize, hi: usize, shift: f64, sink: &mut Sink) {
     let mut f = (d[lo].abs() - shift) * (1.0f64.copysign(d[lo]) + shift / d[lo]);
     let mut g = e[lo];
     for i in lo..hi {
         let (c, s, r) = rotg(f, g);
+        emit(sink, GivensSide::Right, i, c, s);
         if i > lo {
             e[i - 1] = r;
         }
@@ -62,6 +108,7 @@ fn shifted_sweep(d: &mut [f64], e: &mut [f64], lo: usize, hi: usize, shift: f64)
         g = s * d[i + 1];
         d[i + 1] *= c;
         let (c2, s2, r2) = rotg(f, g);
+        emit(sink, GivensSide::Left, i, c2, s2);
         d[i] = r2;
         f = c2 * e[i] + s2 * d[i + 1];
         d[i + 1] = c2 * d[i + 1] - s2 * e[i];
@@ -96,9 +143,23 @@ fn trailing_shift(d: &[f64], e: &[f64], hi: usize) -> f64 {
 /// All singular values of the upper bidiagonal (d, e), descending, by
 /// Demmel–Kahan QR iteration. O(n²) typical.
 pub fn dk_qr_singular_values(d_in: &[f64], e_in: &[f64]) -> Vec<f64> {
+    dk_qr_factor(d_in, e_in, None).sv
+}
+
+/// Demmel–Kahan QR iteration with the rotation order exposed: every
+/// Givens rotation the sweeps apply is reported to `sink` (when given),
+/// in application order, so callers can accumulate the `U`/`Vᵀ` factors
+/// alongside the values. With `sink = None` this is exactly
+/// [`dk_qr_singular_values`] — the iteration takes the same branches and
+/// produces the same bits; the sink never influences the numerics.
+///
+/// Deflation (zeroing a negligible off-diagonal) emits no rotation — it
+/// is an `O(ε)` backward perturbation of `B`, inside the residual bound
+/// the factorization already carries.
+pub fn dk_qr_factor(d_in: &[f64], e_in: &[f64], mut sink: Sink) -> DkQrFactors {
     let n = d_in.len();
     if n == 0 {
-        return Vec::new();
+        return DkQrFactors { sv: Vec::new(), order: Vec::new(), negated: Vec::new() };
     }
     assert_eq!(e_in.len() + 1, n);
     let mut d = d_in.to_vec();
@@ -108,7 +169,11 @@ pub fn dk_qr_singular_values(d_in: &[f64], e_in: &[f64]) -> Vec<f64> {
         .chain(e.iter())
         .fold(0.0f64, |m, &x| m.max(x.abs()));
     if scale == 0.0 {
-        return vec![0.0; n];
+        return DkQrFactors {
+            sv: vec![0.0; n],
+            order: (0..n).collect(),
+            negated: vec![false; n],
+        };
     }
 
     let mut hi = n - 1;
@@ -147,15 +212,20 @@ pub fn dk_qr_singular_values(d_in: &[f64], e_in: &[f64]) -> Vec<f64> {
         let emax = e[lo..hi].iter().fold(0.0f64, |m, &x| m.max(x.abs()));
         let shift = trailing_shift(&d, &e, hi);
         if shift <= TOL.sqrt() * dmin || emax <= TOL.sqrt() * dmin || d[lo] == 0.0 {
-            zero_shift_sweep(&mut d, &mut e, lo, hi);
+            zero_shift_sweep(&mut d, &mut e, lo, hi, &mut sink);
         } else {
-            shifted_sweep(&mut d, &mut e, lo, hi, shift);
+            shifted_sweep(&mut d, &mut e, lo, hi, shift, &mut sink);
         }
         budget -= 1;
     }
-    let mut sv: Vec<f64> = d.iter().map(|x| x.abs()).collect();
-    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
-    sv
+    let negated: Vec<bool> = d.iter().map(|&x| x < 0.0).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    // Stable descending sort by magnitude: ties keep original index
+    // order, matching the value sort of `dk_qr_singular_values` bit for
+    // bit (equal magnitudes are identical bits after `abs`).
+    order.sort_by(|&a, &b| d[b].abs().partial_cmp(&d[a].abs()).unwrap());
+    let sv: Vec<f64> = order.iter().map(|&i| d[i].abs()).collect();
+    DkQrFactors { sv, order, negated }
 }
 
 #[cfg(test)]
@@ -216,5 +286,118 @@ mod tests {
         let fro: f64 =
             d.iter().map(|x| x * x).sum::<f64>() + e.iter().map(|x| x * x).sum::<f64>();
         assert!((ssq - fro).abs() < 1e-8 * fro, "{ssq} vs {fro}");
+    }
+
+    #[test]
+    fn factor_without_sink_is_bitwise_the_value_solver() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        for n in [1usize, 2, 7, 33, 80] {
+            let (d, e) = random_bidiagonal(n, &mut rng);
+            let factors = dk_qr_factor(&d, &e, None);
+            let sv = dk_qr_singular_values(&d, &e);
+            assert_eq!(factors.sv.len(), n);
+            assert_eq!(factors.order.len(), n);
+            assert_eq!(factors.negated.len(), n);
+            for (a, b) in factors.sv.iter().zip(sv.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+            // order is a permutation.
+            let mut seen = vec![false; n];
+            for &i in &factors.order {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn sink_presence_never_changes_the_values() {
+        // The sink is an observer: the iteration's branches and bits are
+        // identical with or without one attached.
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let (d, e) = random_bidiagonal(48, &mut rng);
+        let silent = dk_qr_factor(&d, &e, None);
+        let mut rotations = 0usize;
+        let mut count = |_: GivensSide, _: usize, _: f64, _: f64| rotations += 1;
+        let watched = dk_qr_factor(&d, &e, Some(&mut count));
+        for (a, b) in silent.sv.iter().zip(watched.sv.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(silent.order, watched.order);
+        assert_eq!(silent.negated, watched.negated);
+        assert!(rotations > 0, "a 48×48 iteration must rotate");
+    }
+
+    /// Replay the rotation stream into dense U/Vᵀ and check the full
+    /// factorization — Givens accumulation verified independently of the
+    /// band-reduction stages.
+    #[test]
+    fn rotation_stream_reconstructs_the_bidiagonal() {
+        use crate::banded::dense::Dense;
+
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        for n in [2usize, 5, 24, 60] {
+            let (d, e) = random_bidiagonal(n, &mut rng);
+            let mut u = Dense::<f64>::identity(n);
+            let mut vt = Dense::<f64>::identity(n);
+            let mut apply = |side: GivensSide, i: usize, c: f64, s: f64| match side {
+                GivensSide::Right => {
+                    for j in 0..n {
+                        let (x, y) = (vt.get(i, j), vt.get(i + 1, j));
+                        vt.set(i, j, c * x + s * y);
+                        vt.set(i + 1, j, -s * x + c * y);
+                    }
+                }
+                GivensSide::Left => {
+                    for r in 0..n {
+                        let (x, y) = (u.get(r, i), u.get(r, i + 1));
+                        u.set(r, i, c * x + s * y);
+                        u.set(r, i + 1, -s * x + c * y);
+                    }
+                }
+            };
+            let factors = dk_qr_factor(&d, &e, Some(&mut apply));
+            // Sign fix-up, then the descending-magnitude permutation.
+            for (i, &neg) in factors.negated.iter().enumerate() {
+                if neg {
+                    for v in vt.row_mut(i) {
+                        *v = -*v;
+                    }
+                }
+            }
+            let mut pu = Dense::<f64>::zeros(n, n);
+            let mut pvt = Dense::<f64>::zeros(n, n);
+            for (k, &src) in factors.order.iter().enumerate() {
+                for r in 0..n {
+                    pu.set(r, k, u.get(r, src));
+                }
+                for j in 0..n {
+                    pvt.set(k, j, vt.get(src, j));
+                }
+            }
+            // U · Σ · Vᵀ must reproduce B.
+            let mut sigma_vt = pvt.clone();
+            for (k, &s) in factors.sv.iter().enumerate() {
+                for v in sigma_vt.row_mut(k) {
+                    *v *= s;
+                }
+            }
+            let recon = pu.matmul(&sigma_vt);
+            let mut b = Dense::<f64>::zeros(n, n);
+            for i in 0..n {
+                b.set(i, i, d[i]);
+                if i + 1 < n {
+                    b.set(i, i + 1, e[i]);
+                }
+            }
+            let scale = b.fro_norm().max(1e-300);
+            assert!(
+                recon.max_abs_diff(&b) <= 1e-12 * scale,
+                "n={n}: reconstruction error {:e}",
+                recon.max_abs_diff(&b)
+            );
+            assert!(pu.orthogonality_error() <= 1e-12, "n={n}: U not orthogonal");
+            assert!(pvt.orthogonality_error() <= 1e-12, "n={n}: V not orthogonal");
+        }
     }
 }

@@ -6,6 +6,8 @@
 //! - [`stage3`] — bidiagonal → singular values (Golub–Kahan bisection,
 //!   standing in for LAPACK BDSDC).
 //! - [`jacobi`] — one-sided Jacobi oracle for independent validation.
+//! - [`vectors`] — singular vectors: reflector-log replay plus the
+//!   Demmel–Kahan rotation stream, composing `A = U·Σ·Vᵀ`.
 //! - [`svd`]    — end-to-end drivers, including the mixed-precision
 //!   Fig. 3 protocol.
 //!
@@ -20,8 +22,9 @@ pub mod jacobi;
 pub mod stage1;
 pub mod stage3;
 pub mod svd;
+pub mod vectors;
 
-pub use dk_qr::dk_qr_singular_values;
+pub use dk_qr::{dk_qr_factor, dk_qr_singular_values, DkQrFactors, GivensSide};
 pub use jacobi::jacobi_singular_values;
 pub use stage1::{dense_to_band, dense_to_band_inplace, dense_to_band_inplace_parallel};
 pub use stage3::{
@@ -31,3 +34,4 @@ pub use svd::{
     banded_singular_values_with, singular_values_3stage, singular_values_3stage_mixed,
     singular_values_3stage_parallel, StageTimings, SvdOptions,
 };
+pub use vectors::{accumulate_panels, banded_svd_vectors_with, complete_svd, SvdVectors};

@@ -1,0 +1,285 @@
+//! Singular-vector accumulation — replay a [`ReflectorLog`] and the
+//! Demmel–Kahan rotation stream into dense `U` / `Vᵀ` panels.
+//!
+//! The band stage records two Householder reflectors per cycle-task
+//! (see [`crate::plan::reflectors`]); the bidiagonal stage emits a
+//! Givens rotation stream ([`dk_qr_factor`]). Composing both:
+//!
+//! ```text
+//! A  =  U_band · B · Vᵀ_band          (bulge chasing, replayed here)
+//! B  =  U_qr   · Σ · Vᵀ_qr            (Demmel–Kahan, rotation sink)
+//! A  =  (U_band U_qr) · Σ · (Vᵀ_qr Vᵀ_band)
+//! ```
+//!
+//! [`accumulate_panels`] walks the plan in the same launch → slot →
+//! task order the executors (and [`ReflectorLog::for_plan`]) do, so the
+//! per-problem task ordinal lines up with the recorded arena by
+//! construction. A task's **right** reflector spans rows
+//! `anchor ..= anchor+dd` of `Vᵀ` (`Vᵀ ← H·Vᵀ`), its **left** reflector
+//! columns `anchor ..= anchor+dd` of `U` (`U ← U·H`). Replay order
+//! within a launch is irrelevant: concurrent tasks touch disjoint index
+//! ranges, so their factors commute — plan order is one valid
+//! serialization, the same argument that makes the chase itself
+//! deterministic.
+//!
+//! Everything here is f64 regardless of the working precision: the log
+//! stores exact f64 conversions, so the panels carry no extra rounding
+//! beyond what the band stage itself committed.
+
+use crate::backend::{execute_reduction_logged, AsBandStorageMut, Backend};
+use crate::banded::dense::Dense;
+use crate::banded::storage::Banded;
+use crate::bulge::schedule::CycleTask;
+use crate::config::TuneParams;
+use crate::error::Result;
+use crate::householder::{apply_reflector_cols, apply_reflector_rows};
+use crate::pipeline::dk_qr::{dk_qr_factor, GivensSide};
+use crate::plan::{LaunchPlan, ReflectorLog};
+use crate::scalar::Scalar;
+
+/// A full small-dense SVD triple: `A = U · diag(sv) · Vᵀ` with `sv`
+/// descending and `U`, `Vᵀ` orthogonal (n×n, f64).
+#[derive(Clone, Debug)]
+pub struct SvdVectors {
+    /// Singular values, descending.
+    pub sv: Vec<f64>,
+    /// Left singular vectors, one per column.
+    pub u: Dense<f64>,
+    /// Right singular vectors, one per **row** (the transpose).
+    pub vt: Dense<f64>,
+}
+
+/// Replay problem `problem`'s recorded reflectors into `u` and `vt`
+/// (usually identities on entry), in plan order. After this,
+/// `A = u · B · vt` where `A` was the problem's input band and `B` the
+/// chased (bidiagonal) result.
+///
+/// Panics (debug) if the log was not filled for exactly this plan —
+/// callers get it from [`execute_reduction_logged`], which guarantees
+/// the pairing.
+pub fn accumulate_panels(
+    plan: &LaunchPlan,
+    log: &ReflectorLog,
+    problem: usize,
+    u: &mut Dense<f64>,
+    vt: &mut Dense<f64>,
+) {
+    let shape = &plan.problems[problem];
+    let n = shape.n;
+    debug_assert_eq!((u.rows, u.cols, vt.rows, vt.cols), (n, n, n, n));
+    let mut ordinal = 0usize;
+    let mut tasks: Vec<CycleTask> = Vec::new();
+    for li in 0..plan.num_launches() {
+        for slot in plan.launch(li) {
+            if slot.problem as usize != problem {
+                continue;
+            }
+            let stage = &shape.stages[slot.stage as usize];
+            tasks.clear();
+            stage.tasks_at_into(n, slot.t as usize, &mut tasks);
+            for task in &tasks {
+                let (right, left) = log.task(problem, ordinal);
+                // Right reflector: A ← A·H, so Vᵀ ← H·Vᵀ (rows
+                // anchor..=anchor+dd, every column).
+                apply_reflector_rows(vt, right[0], &right[1..], task.anchor, 0, n - 1);
+                // Left reflector: A ← H·A, so U ← U·H (columns
+                // anchor..=anchor+dd, every row).
+                apply_reflector_cols(u, left[0], &left[1..], task.anchor, 0, n - 1);
+                ordinal += 1;
+            }
+        }
+    }
+    debug_assert_eq!(ordinal, log.tasks(problem), "log/plan task-count mismatch");
+}
+
+/// Finish the factorization from the bidiagonal `(d, e)`: run
+/// [`dk_qr_factor`] with a rotation sink folding every Givens rotation
+/// into `u` / `vt`, apply the sign/permutation fix-up, and return the
+/// singular values (descending). On exit `A = u · diag(sv) · vt` holds
+/// for whatever `A = u·B·vt` held on entry.
+pub fn complete_svd(d: &[f64], e: &[f64], u: &mut Dense<f64>, vt: &mut Dense<f64>) -> Vec<f64> {
+    let n = d.len();
+    debug_assert_eq!((u.rows, vt.rows), (n, n));
+    let mut apply = |side: GivensSide, i: usize, c: f64, s: f64| match side {
+        GivensSide::Right => {
+            for j in 0..n {
+                let (x, y) = (vt.get(i, j), vt.get(i + 1, j));
+                vt.set(i, j, c * x + s * y);
+                vt.set(i + 1, j, -s * x + c * y);
+            }
+        }
+        GivensSide::Left => {
+            for r in 0..n {
+                let (x, y) = (u.get(r, i), u.get(r, i + 1));
+                u.set(r, i, c * x + s * y);
+                u.set(r, i + 1, -s * x + c * y);
+            }
+        }
+    };
+    let factors = dk_qr_factor(d, e, Some(&mut apply));
+    // Sign fix-up first (original indices), then the descending
+    // permutation — the order [`DkQrFactors`] documents.
+    for (i, &neg) in factors.negated.iter().enumerate() {
+        if neg {
+            for v in vt.row_mut(i) {
+                *v = -*v;
+            }
+        }
+    }
+    let mut pu = Dense::<f64>::zeros(n, n);
+    let mut pvt = Dense::<f64>::zeros(n, n);
+    for (k, &src) in factors.order.iter().enumerate() {
+        for r in 0..n {
+            pu.set(r, k, u.get(r, src));
+        }
+        let (row, srow) = (pvt.row_mut(k), vt.row(src));
+        // rows don't alias: pvt is a fresh matrix
+        row.copy_from_slice(srow);
+    }
+    *u = pu;
+    *vt = pvt;
+    factors.sv
+}
+
+/// Full SVD of an already-banded matrix (stages 2+3 with vectors) on an
+/// explicit vectors-capable [`Backend`] — the direct-call analog of
+/// [`crate::pipeline::banded_singular_values_with`], and the oracle the
+/// client/service vector paths are checked against. The panels are
+/// bitwise identical across native backends (sequential, threadpool,
+/// SIMD): the recorded reflectors are, and the replay itself is one
+/// deterministic sequential pass.
+pub fn banded_svd_vectors_with<T: Scalar>(
+    backend: &dyn Backend,
+    banded: &Banded<T>,
+    bw: usize,
+    params: &TuneParams,
+) -> Result<SvdVectors>
+where
+    Banded<T>: AsBandStorageMut,
+{
+    let mut work = banded.clone();
+    let (plan, _exec, log) = execute_reduction_logged(backend, &mut work, bw, params)?;
+    let n = banded.n();
+    let mut u = Dense::<f64>::identity(n);
+    let mut vt = Dense::<f64>::identity(n);
+    accumulate_panels(&plan, &log, 0, &mut u, &mut vt);
+    let (diag, superdiag) = work.bidiagonal();
+    let d: Vec<f64> = diag.iter().map(|v| v.to_f64()).collect();
+    let e: Vec<f64> = superdiag.iter().map(|v| v.to_f64()).collect();
+    let sv = complete_svd(&d, &e, &mut u, &mut vt);
+    Ok(SvdVectors { sv, u, vt })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SequentialBackend;
+    use crate::generate::random_banded;
+    use crate::pipeline::jacobi::jacobi_singular_values;
+    use crate::util::rng::Xoshiro256;
+
+    fn dense_of(banded: &Banded<f64>) -> Dense<f64> {
+        Dense::from_vec(banded.n(), banded.n(), banded.to_dense())
+    }
+
+    fn bidiagonal_dense(d: &[f64], e: &[f64]) -> Dense<f64> {
+        let n = d.len();
+        let mut b = Dense::<f64>::zeros(n, n);
+        for i in 0..n {
+            b.set(i, i, d[i]);
+            if i + 1 < n {
+                b.set(i, i + 1, e[i]);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn replayed_band_stage_reconstructs_the_input() {
+        // A = U · B · Vᵀ after the chase alone — the reflector log replay
+        // validated against the dense input, before any QR iteration.
+        let mut rng = Xoshiro256::seed_from_u64(51);
+        for (n, bw, tw) in [(40usize, 6usize, 3usize), (64, 9, 4), (96, 12, 8)] {
+            let params = TuneParams { tpb: 32, tw, max_blocks: 16 };
+            let banded = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+            let a0 = dense_of(&banded);
+            let mut work = banded.clone();
+            let (plan, _exec, log) =
+                execute_reduction_logged(&SequentialBackend::new(), &mut work, bw, &params)
+                    .unwrap();
+            let mut u = Dense::<f64>::identity(n);
+            let mut vt = Dense::<f64>::identity(n);
+            accumulate_panels(&plan, &log, 0, &mut u, &mut vt);
+            let (d, e) = work.bidiagonal();
+            let b = bidiagonal_dense(&d, &e);
+            let recon = u.matmul(&b).matmul(&vt);
+            let scale = a0.fro_norm().max(1e-300);
+            assert!(
+                recon.max_abs_diff(&a0) <= 1e-12 * scale,
+                "n={n} bw={bw}: band-stage residual {:e}",
+                recon.max_abs_diff(&a0)
+            );
+            assert!(u.orthogonality_error() <= 1e-12, "n={n} bw={bw}: U");
+            assert!(vt.orthogonality_error() <= 1e-12, "n={n} bw={bw}: Vᵀ");
+        }
+    }
+
+    #[test]
+    fn full_svd_reconstructs_and_matches_the_jacobi_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(52);
+        for (n, bw, tw) in [(36usize, 5usize, 4usize), (48, 7, 3)] {
+            let params = TuneParams { tpb: 32, tw, max_blocks: 16 };
+            let banded = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+            let a0 = dense_of(&banded);
+            let svd = banded_svd_vectors_with(&SequentialBackend::new(), &banded, bw, &params)
+                .unwrap();
+            // Descending, orthogonal, and A = U·Σ·Vᵀ.
+            assert!(svd.sv.windows(2).all(|w| w[0] >= w[1]));
+            assert!(svd.u.orthogonality_error() <= 1e-12);
+            assert!(svd.vt.orthogonality_error() <= 1e-12);
+            let mut sigma_vt = svd.vt.clone();
+            for (k, &s) in svd.sv.iter().enumerate() {
+                for v in sigma_vt.row_mut(k) {
+                    *v *= s;
+                }
+            }
+            let recon = svd.u.matmul(&sigma_vt);
+            let scale = a0.fro_norm().max(1e-300);
+            assert!(
+                recon.max_abs_diff(&a0) <= 1e-11 * scale,
+                "n={n} bw={bw}: residual {:e}",
+                recon.max_abs_diff(&a0)
+            );
+            let oracle = jacobi_singular_values(&a0);
+            for (got, want) in svd.sv.iter().zip(oracle.iter()) {
+                assert!((got - want).abs() <= 1e-9 * want.max(1e-9), "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn panels_are_bitwise_identical_across_native_backends() {
+        use crate::backend::{SimdBackend, ThreadpoolBackend};
+        use crate::simd::SimdSpec;
+        let mut rng = Xoshiro256::seed_from_u64(53);
+        let (n, bw) = (64usize, 9usize);
+        let params = TuneParams { tpb: 32, tw: 4, max_blocks: 12 };
+        let banded = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+        let oracle =
+            banded_svd_vectors_with(&SequentialBackend::new(), &banded, bw, &params).unwrap();
+        let tp = banded_svd_vectors_with(&ThreadpoolBackend::new(3), &banded, bw, &params)
+            .unwrap();
+        let simd = banded_svd_vectors_with(
+            &SimdBackend::with_spec(SimdSpec::scalar(), 3),
+            &banded,
+            bw,
+            &params,
+        )
+        .unwrap();
+        for other in [&tp, &simd] {
+            assert_eq!(oracle.sv, other.sv);
+            assert_eq!(oracle.u, other.u);
+            assert_eq!(oracle.vt, other.vt);
+        }
+    }
+}

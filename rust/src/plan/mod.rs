@@ -30,6 +30,10 @@
 //! identical to solo runs (property-tested in
 //! `rust/tests/batch_equivalence.rs`).
 
+pub mod reflectors;
+
+pub use reflectors::ReflectorLog;
+
 use crate::bulge::schedule::{stage_plan, Stage, TaskStream};
 use crate::config::{PackingPolicy, TuneParams};
 

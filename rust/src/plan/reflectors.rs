@@ -1,0 +1,228 @@
+//! Per-plan reflector log — the record/replay seam singular vectors
+//! ride through the plan IR.
+//!
+//! Executing a [`LaunchPlan`] forms two Householder reflectors per
+//! cycle-task: the **right** (column-combining, V-side) one and the
+//! **left** (row-combining, U-side) one, both with tail length
+//! `dd = min(stage.d, n−1−anchor)`. [`ReflectorLog`] reserves one flat
+//! per-problem f64 arena for those values, *position-indexed* by the
+//! problem's plan-order task ordinal: launches in plan order, slots in
+//! launch order, [`Stage::tasks_at`](crate::bulge::schedule::Stage)
+//! order within a slot. Executors write each record exactly once at
+//! its precomputed offset, so concurrent tasks of a launch touch
+//! disjoint arena ranges and every native backend — sequential,
+//! threadpool, SIMD — fills identical bits (the same bitwise guarantee
+//! the band storage itself carries; see `docs/backends.md`).
+//!
+//! Record layout per task: `[τ_r, v_r₁ .. v_r_dd, τ_l, v_l₁ .. v_l_dd]`
+//! (f64, converted exactly from the working precision). A `τ` of zero
+//! marks an identity reflector; its tail slots then hold whatever was
+//! gathered and are ignored on replay (`apply_reflector_*`
+//! early-returns on `τ == 0`).
+
+use crate::bulge::schedule::CycleTask;
+use crate::error::{Error, Result};
+use crate::plan::LaunchPlan;
+
+/// One problem's recorded reflectors: a flat arena plus per-task record
+/// bounds (`offsets[t] .. offsets[t+1]`).
+#[derive(Clone, Debug)]
+struct ProblemReflectors {
+    offsets: Vec<usize>,
+    data: Vec<f64>,
+}
+
+/// The reflector record of every cycle-task of a plan, per problem —
+/// allocated up-front from the plan alone ([`ReflectorLog::for_plan`]),
+/// filled by `Backend::execute_logged`, replayed by
+/// [`crate::pipeline::vectors::accumulate_panels`].
+#[derive(Clone, Debug)]
+pub struct ReflectorLog {
+    problems: Vec<ProblemReflectors>,
+}
+
+impl ReflectorLog {
+    /// Size a log for `plan`: walk the plan exactly as executors do and
+    /// reserve `2·(dd+1)` f64 per task. O(total tasks), data zeroed.
+    pub fn for_plan(plan: &LaunchPlan) -> Self {
+        let mut offsets: Vec<Vec<usize>> =
+            plan.problems.iter().map(|_| vec![0usize]).collect();
+        let mut tasks: Vec<CycleTask> = Vec::new();
+        for li in 0..plan.num_launches() {
+            for slot in plan.launch(li) {
+                let p = slot.problem as usize;
+                let shape = &plan.problems[p];
+                let stage = &shape.stages[slot.stage as usize];
+                tasks.clear();
+                stage.tasks_at_into(shape.n, slot.t as usize, &mut tasks);
+                for task in &tasks {
+                    let jd = (task.anchor + stage.d).min(shape.n - 1);
+                    let dd = jd - task.anchor;
+                    let prev = *offsets[p].last().unwrap();
+                    offsets[p].push(prev + 2 * (dd + 1));
+                }
+            }
+        }
+        let problems = offsets
+            .into_iter()
+            .map(|offs| {
+                let len = *offs.last().unwrap();
+                ProblemReflectors { offsets: offs, data: vec![0.0; len] }
+            })
+            .collect();
+        Self { problems }
+    }
+
+    /// Problems the log covers (`== plan.problems.len()`).
+    pub fn num_problems(&self) -> usize {
+        self.problems.len()
+    }
+
+    /// Tasks recorded for plan problem `p`.
+    pub fn tasks(&self, p: usize) -> usize {
+        self.problems[p].offsets.len() - 1
+    }
+
+    /// The recorded (right, left) reflectors of task `ordinal` of
+    /// problem `p`, each as `[τ, v₁ .. v_dd]`.
+    pub fn task(&self, p: usize, ordinal: usize) -> (&[f64], &[f64]) {
+        let pr = &self.problems[p];
+        let rec = &pr.data[pr.offsets[ordinal]..pr.offsets[ordinal + 1]];
+        rec.split_at(rec.len() / 2)
+    }
+
+    /// Validate this log was sized for `plan` — the prologue every
+    /// `execute_logged` runs before handing out arena views.
+    pub fn check_plan(&self, plan: &LaunchPlan) -> Result<()> {
+        if self.problems.len() != plan.problems.len() {
+            return Err(Error::Config(format!(
+                "reflector log covers {} problems but the plan has {}",
+                self.problems.len(),
+                plan.problems.len()
+            )));
+        }
+        for (p, shape) in plan.problems.iter().enumerate() {
+            if self.tasks(p) != shape.tasks {
+                return Err(Error::Config(format!(
+                    "reflector log problem {p} has {} task records but the plan \
+                     schedules {} tasks — log built for a different plan",
+                    self.tasks(p),
+                    shape.tasks
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Raw arena view for problem `p`, handed to an executor for the
+    /// duration of one `execute_logged` call (which holds the log
+    /// exclusively, so the view cannot outlive the arena).
+    pub(crate) fn view(&mut self, p: usize) -> LogView {
+        let pr = &mut self.problems[p];
+        LogView {
+            data: pr.data.as_mut_ptr(),
+            offsets: pr.offsets.as_ptr(),
+            tasks: pr.offsets.len() - 1,
+        }
+    }
+}
+
+/// A raw, `Send + Sync` view over one problem's reflector arena, used by
+/// the launch-level parallel executor. Safety rests on ordinal
+/// disjointness: the plan assigns every task a unique per-problem
+/// ordinal, so concurrent tasks write disjoint records — the same
+/// argument [`crate::bulge::cycle::SharedBanded`] makes for the band.
+#[derive(Copy, Clone, Debug)]
+pub(crate) struct LogView {
+    data: *mut f64,
+    offsets: *const usize,
+    tasks: usize,
+}
+
+unsafe impl Send for LogView {}
+unsafe impl Sync for LogView {}
+
+impl LogView {
+    /// The mutable (right, left) record slices of task `ordinal`.
+    ///
+    /// # Safety
+    /// The parent [`ReflectorLog`] must outlive every use of the
+    /// returned slices, and no two concurrent callers may pass the same
+    /// `ordinal` (within one plan launch every task has a distinct
+    /// ordinal, and launches are barrier-ordered).
+    pub(crate) unsafe fn task_mut<'a>(&self, ordinal: usize) -> (&'a mut [f64], &'a mut [f64]) {
+        debug_assert!(ordinal < self.tasks, "ordinal {ordinal} out of {}", self.tasks);
+        let lo = *self.offsets.add(ordinal);
+        let hi = *self.offsets.add(ordinal + 1);
+        let half = (hi - lo) / 2;
+        let right = std::slice::from_raw_parts_mut(self.data.add(lo), half);
+        let left = std::slice::from_raw_parts_mut(self.data.add(lo + half), half);
+        (right, left)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PackingPolicy, TuneParams};
+
+    fn params(tw: usize, mb: usize) -> TuneParams {
+        TuneParams { tpb: 32, tw, max_blocks: mb }
+    }
+
+    #[test]
+    fn log_reserves_one_record_per_scheduled_task() {
+        for (n, bw, tw) in [(64usize, 8usize, 4usize), (40, 6, 5), (24, 2, 1)] {
+            let plan = LaunchPlan::for_problem(n, bw, &params(tw, 16));
+            let log = ReflectorLog::for_plan(&plan);
+            assert_eq!(log.num_problems(), 1);
+            assert_eq!(log.tasks(0), plan.total_tasks());
+            assert!(log.check_plan(&plan).is_ok());
+            // Every record is non-degenerate (dd ≥ 1 — anchors stop at
+            // n−2) and symmetric between the two sides.
+            for t in 0..log.tasks(0) {
+                let (right, left) = log.task(0, t);
+                assert_eq!(right.len(), left.len());
+                assert!(right.len() >= 2, "task {t}: record too small");
+            }
+        }
+    }
+
+    #[test]
+    fn merged_plan_logs_follow_per_problem_task_counts() {
+        let parts: Vec<LaunchPlan> = [(48usize, 6usize), (32, 4), (40, 9)]
+            .iter()
+            .map(|&(n, bw)| LaunchPlan::for_problem(n, bw, &params(3, 12)))
+            .collect();
+        let merged = LaunchPlan::merge(&parts, 12, PackingPolicy::RoundRobin, 2);
+        let log = ReflectorLog::for_plan(&merged);
+        assert_eq!(log.num_problems(), 3);
+        for (p, part) in parts.iter().enumerate() {
+            assert_eq!(log.tasks(p), part.total_tasks(), "problem {p}");
+        }
+        assert!(log.check_plan(&merged).is_ok());
+        // A log sized for a different plan is rejected.
+        assert!(log.check_plan(&parts[0]).is_err());
+    }
+
+    #[test]
+    fn views_hand_out_disjoint_record_slices() {
+        let plan = LaunchPlan::for_problem(40, 6, &params(3, 8));
+        let mut log = ReflectorLog::for_plan(&plan);
+        let view = log.view(0);
+        let tasks = plan.total_tasks();
+        // SAFETY: distinct ordinals, log outlives the uses below.
+        unsafe {
+            for t in 0..tasks {
+                let (right, left) = view.task_mut(t);
+                for v in right.iter_mut().chain(left.iter_mut()) {
+                    *v = t as f64 + 1.0;
+                }
+            }
+        }
+        for t in 0..tasks {
+            let (right, left) = log.task(0, t);
+            assert!(right.iter().chain(left.iter()).all(|&v| v == t as f64 + 1.0));
+        }
+    }
+}

@@ -26,9 +26,10 @@
 //! loopback TCP.
 
 use crate::backend::{Backend, BandStorageMut};
+use crate::banded::dense::Dense;
 use crate::config::ServiceConfig;
-use crate::pipeline::bidiagonal_singular_values;
-use crate::plan::LaunchPlan;
+use crate::pipeline::{accumulate_panels, bidiagonal_singular_values, complete_svd};
+use crate::plan::{LaunchPlan, ReflectorLog};
 use crate::service::cache::{PlanCache, PlanKey};
 use crate::service::queue::{Job, JobQueue, JobResult};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -146,11 +147,20 @@ fn flush(
 
     // Queue waits end here: everything after is execution time.
     let waits: Vec<std::time::Duration> = jobs.iter().map(|job| job.enqueued.elapsed()).collect();
+    // One reflector log covers the merged plan when any co-scheduled job
+    // wants singular vectors; values-only jobs in the same flush ride
+    // along untouched (the log records per-problem arenas, and recording
+    // never changes what the kernels write to the bands).
+    let mut log =
+        jobs.iter().any(|job| job.vectors).then(|| ReflectorLog::for_plan(merged.as_ref()));
     let t_exec = Instant::now();
     let exec = {
         let mut bands: Vec<BandStorageMut<'_>> =
             jobs.iter_mut().map(|job| job.input.as_band_storage_mut()).collect();
-        backend.execute(merged.as_ref(), &mut bands)
+        match log.as_mut() {
+            Some(log) => backend.execute_logged(merged.as_ref(), &mut bands, log),
+            None => backend.execute(merged.as_ref(), &mut bands),
+        }
     };
     let busy = t_exec.elapsed();
 
@@ -165,14 +175,32 @@ fn flush(
             stats.busy_nanos.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
             stats.jobs_completed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
             let batch_jobs = jobs.len();
-            for ((job, metrics), queue_wait) in jobs.iter().zip(exec.per_problem).zip(waits) {
+            for (p, ((job, metrics), queue_wait)) in
+                jobs.iter().zip(exec.per_problem).zip(waits).enumerate()
+            {
                 let (diag, superdiag) = job.input.bidiagonal_f64();
+                // Vectors jobs take σ from the Demmel–Kahan rotation
+                // stream so (σ, U, Vᵀ) is one consistent factorization;
+                // values-only jobs keep the bisection path bit-for-bit.
+                let (sv, u, vt) = if job.vectors {
+                    let log = log.as_ref().expect("vectors flush built a reflector log");
+                    let n = job.input.n();
+                    let mut u = Dense::<f64>::identity(n);
+                    let mut vt = Dense::<f64>::identity(n);
+                    accumulate_panels(merged.as_ref(), log, p, &mut u, &mut vt);
+                    let sv = complete_svd(&diag, &superdiag, &mut u, &mut vt);
+                    (sv, Some(u), Some(vt))
+                } else {
+                    (bidiagonal_singular_values(&diag, &superdiag), None, None)
+                };
                 let result = JobResult {
                     id: job.id,
                     n: job.input.n(),
                     bw: job.input.bw(),
                     precision: job.input.precision(),
-                    sv: bidiagonal_singular_values(&diag, &superdiag),
+                    sv,
+                    u,
+                    vt,
                     metrics,
                     batch_jobs,
                     queue_wait,

@@ -59,7 +59,7 @@ pub use shard::ShardStats;
 use crate::backend::cost_model_for;
 use crate::batch::BatchInput;
 use crate::config::ServiceConfig;
-use crate::error::{Error, Result};
+use crate::error::{Error, JobError, Result};
 use crate::simulator::hw::GpuArch;
 use crate::simulator::model::BackendCostModel;
 use crate::simulator::{arch_by_name, simulate_plan_for};
@@ -171,14 +171,14 @@ impl Service {
     }
 
     /// Submit one anonymous job — [`Service::submit_as`] with no
-    /// identity (never counted against a quota).
+    /// identity (never counted against a quota) and no vector panels.
     pub fn submit(
         &self,
         input: BatchInput,
         priority: u8,
         deadline: Option<Duration>,
     ) -> Result<JobTicket> {
-        self.submit_as(None, None, input, priority, deadline)
+        self.submit_as(None, None, input, priority, deadline, false)
     }
 
     /// Submit one job under a client identity. Validates the storage,
@@ -186,6 +186,14 @@ impl Service {
     /// and runs admission (including the per-client pending quota, keyed
     /// by `quota_class` falling back to `client_id`); on success the
     /// returned ticket resolves to the job's [`JobResult`].
+    ///
+    /// With `vectors`, the job also accumulates dense singular-vector
+    /// panels (`U`, `Vᵀ`) — two n×n f64 factors held and shipped per
+    /// job, so admission additionally enforces
+    /// [`crate::config::ServiceConfig::vectors_cap_n`]: a vectors
+    /// request with `n` above the cap is declined with the terminal
+    /// [`JobError::TooLarge`] before it can reach a queue.
+    #[allow(clippy::too_many_arguments)]
     pub fn submit_as(
         &self,
         client_id: Option<&str>,
@@ -193,10 +201,21 @@ impl Service {
         input: BatchInput,
         priority: u8,
         deadline: Option<Duration>,
+        vectors: bool,
     ) -> Result<JobTicket> {
         let quota_key = quota_class.or(client_id);
         let admit = || -> Result<JobTicket> {
             input.validate(&self.cfg.params)?;
+            if vectors && input.n() > self.cfg.vectors_cap_n {
+                return Err(Error::Job(JobError::TooLarge {
+                    reason: format!(
+                        "singular-vector panels for n={} exceed the service cap \
+                         (vectors_cap_n={}); submit a values-only job or raise the cap",
+                        input.n(),
+                        self.cfg.vectors_cap_n
+                    ),
+                }));
+            }
             let est_seconds = self.price(&input);
             let shard = &self.shards[self.router.pick(&self.shards, input.n())];
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -204,7 +223,7 @@ impl Service {
             let deadline = deadline.map(|d| Instant::now() + d);
             shard
                 .queue
-                .submit_for(quota_key, id, input, priority, deadline, est_seconds, tx)?;
+                .submit_for(quota_key, id, input, priority, deadline, est_seconds, vectors, tx)?;
             Ok(JobTicket { id, rx })
         };
         match admit() {
@@ -232,6 +251,7 @@ impl Service {
     }
 
     /// [`Service::submit_as`] and block for the outcome.
+    #[allow(clippy::too_many_arguments)]
     pub fn submit_wait_as(
         &self,
         client_id: Option<&str>,
@@ -239,8 +259,9 @@ impl Service {
         input: BatchInput,
         priority: u8,
         deadline: Option<Duration>,
+        vectors: bool,
     ) -> Result<JobResult> {
-        self.submit_as(client_id, quota_class, input, priority, deadline)?
+        self.submit_as(client_id, quota_class, input, priority, deadline, vectors)?
             .wait()
             .map_err(Error::Job)
     }
@@ -346,6 +367,7 @@ mod tests {
             workers: 1,
             routing: crate::config::ShardRouting::LeastLoaded,
             quota_pending_cap: 0,
+            vectors_cap_n: crate::config::DEFAULT_VECTORS_CAP_N,
         }
     }
 
@@ -368,6 +390,41 @@ mod tests {
         assert_eq!(stats.jobs_completed, 1);
         assert_eq!(stats.jobs_failed, 0);
         assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn served_vectors_job_matches_the_direct_logged_pipeline_bitwise() {
+        use crate::pipeline::banded_svd_vectors_with;
+        let cfg = test_cfg();
+        let service = Service::start(cfg.clone()).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(19);
+        let a = random_banded::<f64>(48, 6, cfg.params.effective_tw(6), &mut rng);
+        let direct =
+            banded_svd_vectors_with(&SequentialBackend::new(), &a, 6, &cfg.params).unwrap();
+        let ticket =
+            service.submit_as(None, None, BatchInput::from((a, 6)), 0, None, true).unwrap();
+        let result = ticket.wait().unwrap();
+        assert_eq!(result.sv, direct.sv, "vectors σ comes from the dk_qr stream");
+        assert_eq!(result.u.as_ref().unwrap(), &direct.u);
+        assert_eq!(result.vt.as_ref().unwrap(), &direct.vt);
+    }
+
+    #[test]
+    fn oversized_vectors_request_is_declined_as_too_large() {
+        let cfg = ServiceConfig { vectors_cap_n: 32, ..test_cfg() };
+        let service = Service::start(cfg).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let a = random_banded::<f64>(48, 6, 4, &mut rng);
+        let err = service
+            .submit_as(None, None, BatchInput::from((a.clone(), 6)), 0, None, true)
+            .unwrap_err();
+        assert_eq!(err.as_job().unwrap().kind(), "too-large");
+        assert!(!err.is_retryable(), "resubmitting the same request cannot succeed");
+        assert!(err.to_string().contains("n=48"), "{err}");
+        // The same shape without vectors is not footprint-capped.
+        service.submit(BatchInput::from((a, 6)), 0, None).unwrap().wait().unwrap();
+        assert_eq!(service.stats().jobs_rejected, 1);
+        assert_eq!(service.stats().jobs_completed, 1);
     }
 
     #[test]
@@ -509,24 +566,24 @@ mod tests {
         let service = Service::start(cfg).unwrap();
         let mut rng = Xoshiro256::seed_from_u64(17);
         let mut input = || BatchInput::from((random_banded::<f64>(24, 3, 2, &mut rng), 3));
-        let t1 = service.submit_as(Some("hog"), None, input(), 0, None).unwrap();
-        let t2 = service.submit_as(Some("hog"), None, input(), 0, None).unwrap();
-        let err = service.submit_as(Some("hog"), None, input(), 0, None).unwrap_err();
+        let t1 = service.submit_as(Some("hog"), None, input(), 0, None, false).unwrap();
+        let t2 = service.submit_as(Some("hog"), None, input(), 0, None, false).unwrap();
+        let err = service.submit_as(Some("hog"), None, input(), 0, None, false).unwrap_err();
         assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
         assert!(err.is_retryable());
         // quota_class overrides client_id as the key: same budget.
         let err =
-            service.submit_as(Some("other"), Some("hog"), input(), 0, None).unwrap_err();
+            service.submit_as(Some("other"), Some("hog"), input(), 0, None, false).unwrap_err();
         assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
         // Other clients and anonymous submitters are unaffected.
-        let t3 = service.submit_as(Some("guest"), None, input(), 0, None).unwrap();
+        let t3 = service.submit_as(Some("guest"), None, input(), 0, None, false).unwrap();
         let t4 = service.submit(input(), 0, None).unwrap();
         for t in [t1, t2, t3, t4] {
             t.wait().unwrap();
         }
         // Budget freed once the jobs drained; shutdown flushes the last
         // job immediately instead of holding the 30 s window open.
-        let t5 = service.submit_as(Some("hog"), None, input(), 0, None).unwrap();
+        let t5 = service.submit_as(Some("hog"), None, input(), 0, None, false).unwrap();
         service.shutdown();
         t5.wait().unwrap();
         let stats = service.stats();

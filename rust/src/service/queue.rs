@@ -18,6 +18,7 @@
 //! its depth exceeds `queue_cap`). An empty queue always admits, so one
 //! oversized job cannot deadlock the service.
 
+use crate::banded::dense::Dense;
 use crate::batch::BatchInput;
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, JobError, Result};
@@ -48,6 +49,11 @@ pub struct Job {
     /// `quota_class`, falling back to `client_id`); its pending count is
     /// released when the job leaves the queue. `None` = anonymous.
     pub client: Option<String>,
+    /// The job wants singular vectors: its flush records reflectors and
+    /// the result carries dense U/Vᵀ panels. Admission enforces
+    /// [`crate::config::ServiceConfig::vectors_cap_n`] before the job
+    /// reaches the queue.
+    pub vectors: bool,
     /// Where the outcome is delivered.
     pub tx: Sender<JobOutcome>,
 }
@@ -113,6 +119,10 @@ pub struct JobResult {
     pub batch_jobs: usize,
     /// Time spent queued before the flush.
     pub queue_wait: Duration,
+    /// Left singular vectors (n×n, f64), when the job requested vectors.
+    pub u: Option<Dense<f64>>,
+    /// Right singular vectors, transposed (n×n, f64), when requested.
+    pub vt: Option<Dense<f64>>,
 }
 
 /// A job either completes with a [`JobResult`] or fails with a typed
@@ -204,8 +214,8 @@ impl JobQueue {
         }
     }
 
-    /// Admit an anonymous job or reject it — [`JobQueue::submit_for`]
-    /// with no quota key.
+    /// Admit an anonymous values-only job or reject it —
+    /// [`JobQueue::submit_for`] with no quota key and no vectors.
     pub fn submit(
         &self,
         id: u64,
@@ -215,12 +225,15 @@ impl JobQueue {
         est_seconds: f64,
         tx: Sender<JobOutcome>,
     ) -> Result<()> {
-        self.submit_for(None, id, input, priority, deadline, est_seconds, tx)
+        self.submit_for(None, id, input, priority, deadline, est_seconds, false, tx)
     }
 
     /// Admit a job or reject it. Rejection reasons: queue closed, depth at
     /// `queue_cap`, (for a non-empty queue) priced backlog past
-    /// `backlog_cap_s`, or `client`'s pending-job quota spent.
+    /// `backlog_cap_s`, or `client`'s pending-job quota spent. The
+    /// vectors size cap is the service's admission concern, enforced
+    /// before this is reached.
+    #[allow(clippy::too_many_arguments)]
     pub fn submit_for(
         &self,
         client: Option<&str>,
@@ -229,6 +242,7 @@ impl JobQueue {
         priority: u8,
         deadline: Option<Instant>,
         est_seconds: f64,
+        vectors: bool,
         tx: Sender<JobOutcome>,
     ) -> Result<()> {
         let mut state = self.state.lock().unwrap();
@@ -271,6 +285,7 @@ impl JobQueue {
             est_seconds,
             enqueued: Instant::now(),
             client: client.map(String::from),
+            vectors,
             tx,
         };
         state.classes.entry(priority).or_default().push_back(job);
@@ -501,7 +516,7 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(3);
         let mut submit_as = |client: Option<&str>, id: u64| {
             let (tx, _rx) = mpsc::channel::<JobOutcome>();
-            q.submit_for(client, id, input(24, 3, &mut rng), 0, None, 0.0, tx)
+            q.submit_for(client, id, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
         };
         submit_as(Some("tenant-a"), 0).unwrap();
         submit_as(Some("tenant-a"), 1).unwrap();
@@ -524,17 +539,19 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(5);
         let past = Instant::now() - Duration::from_millis(10);
         let (tx, _rx) = mpsc::channel::<JobOutcome>();
-        qa.submit_for(Some("c"), 0, input(24, 3, &mut rng), 0, Some(past), 0.0, tx).unwrap();
+        qa.submit_for(Some("c"), 0, input(24, 3, &mut rng), 0, Some(past), 0.0, false, tx)
+            .unwrap();
         // The cap is service-wide: the second queue sees the same budget.
         let (tx, _rx) = mpsc::channel::<JobOutcome>();
-        let err =
-            qb.submit_for(Some("c"), 1, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap_err();
+        let err = qb
+            .submit_for(Some("c"), 1, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
+            .unwrap_err();
         assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
         // The job expires at flush — the slot frees anyway.
         assert!(qa.pop_batch(16).is_empty());
         assert_eq!(qa.expired_jobs(), 1);
         let (tx, _rx) = mpsc::channel::<JobOutcome>();
-        qb.submit_for(Some("c"), 2, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap();
+        qb.submit_for(Some("c"), 2, input(24, 3, &mut rng), 0, None, 0.0, false, tx).unwrap();
     }
 
     #[test]
@@ -543,7 +560,8 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(7);
         for id in 0..8u64 {
             let (tx, _rx) = mpsc::channel::<JobOutcome>();
-            q.submit_for(Some("free"), id, input(24, 3, &mut rng), 0, None, 0.0, tx).unwrap();
+            q.submit_for(Some("free"), id, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
+                .unwrap();
         }
         assert_eq!(q.depth(), 8);
     }

@@ -5,15 +5,17 @@
 //!
 //! | verb | request fields | response |
 //! | --- | --- | --- |
-//! | `submit` | `n`, `bw`, `band` (row-major in-band values, see [`wire::band_values`]), optional `precision` (`fp16\|fp32\|fp64`, default `fp64`), `priority` (default 0), `deadline_ms`, `client_id`/`quota_class` (identity for quota accounting), `proto` | `id`, `sv` (descending, f64), `metrics` (launches/tasks/max_parallel/unrolled_launches/bytes), `batch_jobs`, `queue_us` |
+//! | `submit` | `n`, `bw`, `band` (row-major in-band values, see [`wire::band_values`]), optional `precision` (`fp16\|fp32\|fp64`, default `fp64`), `priority` (default 0), `deadline_ms`, `client_id`/`quota_class` (identity for quota accounting), `vectors` (proto ≥ 3: accumulate singular-vector panels), `proto` | `id`, `sv` (descending, f64), `metrics` (launches/tasks/max_parallel/unrolled_launches/bytes), `batch_jobs`, `queue_us`, and — when `vectors` was set — `u`/`vt` (flat row-major n² f64 panels) |
 //! | `stats` | — | queue depth/backlog, job counters, occupancy, mean batch size, cache counters + hit rate, throughput, knobs, per-shard breakdowns |
 //! | `ping` | — | `{"ok":true,"verb":"ping","proto":N}` |
 //! | `shutdown` | — | acknowledges, then stops accepting and drains the service |
 //!
 //! Versioning: requests *may* carry `proto`
 //! ([`wire::PROTO_VERSION`]). Absent means the pre-versioning wire and
-//! is accepted; present-but-mismatched is rejected with a protocol
-//! error. Clients handshake against the `ping` response's `proto`.
+//! is accepted, as is any version in [`wire::PROTO_ACCEPTED`] (v3 only
+//! adds optional fields over v2); anything else is rejected with a
+//! protocol error. Clients handshake against the `ping` response's
+//! `proto`.
 //!
 //! Every response carries `"ok"`. Job-level failures additionally carry
 //! the typed taxonomy (`kind` + `retryable` — see
@@ -114,19 +116,23 @@ fn respond(service: &Service, line: &str) -> (Json, bool) {
         Err(e) => return (wire::error_json(format!("bad request: {e}")), false),
     };
     // Version gate: an absent `proto` is the pre-versioning wire and is
-    // accepted; a present-but-different one is a client this server does
-    // not speak to (see the compatibility rule in `docs/client.md`).
+    // accepted, as is any version in `wire::PROTO_ACCEPTED` (v3 only
+    // adds optional fields over v2, so old clients remain valid);
+    // anything else is a client this server does not speak to (see the
+    // compatibility rule in `docs/client.md`).
     if let Some(proto) = request.get("proto") {
-        match proto.as_usize() {
-            Some(v) if v == wire::PROTO_VERSION as usize => {}
-            _ => {
-                let msg = format!(
-                    "protocol version mismatch: request carries proto {}, server speaks {}",
-                    proto.render(),
-                    wire::PROTO_VERSION
-                );
-                return (wire::error_json(msg), false);
-            }
+        let accepted = proto
+            .as_usize()
+            .is_some_and(|v| wire::PROTO_ACCEPTED.contains(&(v as u32)));
+        if !accepted {
+            let msg = format!(
+                "protocol version mismatch: request carries proto {}, server speaks {} \
+                 (accepts {:?})",
+                proto.render(),
+                wire::PROTO_VERSION,
+                wire::PROTO_ACCEPTED
+            );
+            return (wire::error_json(msg), false);
         }
     }
     match request.get("verb").and_then(Json::as_str) {
@@ -177,6 +183,15 @@ fn handle_submit(service: &Service, request: &Json) -> Json {
             None => return wire::error_json("deadline_ms must be a non-negative integer"),
         },
     };
+    // Singular-vector panels (proto ≥ 3). Absent means false — the v2
+    // wire never carried the field.
+    let vectors = match request.get("vectors") {
+        None => false,
+        Some(v) => match v.as_bool() {
+            Some(b) => b,
+            None => return wire::error_json("vectors must be a boolean"),
+        },
+    };
     // Identity rides the request for quota accounting; same
     // absent-or-valid rule as the fields above.
     let identity = |key: &str| match request.get(key) {
@@ -215,6 +230,7 @@ fn handle_submit(service: &Service, request: &Json) -> Json {
         input,
         priority,
         deadline,
+        vectors,
     ) {
         Ok(result) => wire::result_json(&result),
         Err(e) => error_response(&e),
@@ -382,6 +398,7 @@ mod tests {
             workers: 1,
             routing: ShardRouting::LeastLoaded,
             quota_pending_cap: 0,
+            vectors_cap_n: crate::config::DEFAULT_VECTORS_CAP_N,
         }
     }
 
@@ -430,20 +447,25 @@ mod tests {
     fn mismatched_proto_is_rejected_but_absent_proto_is_legacy() {
         let service = Service::start(cfg()).unwrap();
         // Future (or garbage) versions are refused outright...
-        for bad in ["{\"verb\":\"ping\",\"proto\":99}", "{\"verb\":\"ping\",\"proto\":\"v2\"}"] {
+        for bad in [
+            "{\"verb\":\"ping\",\"proto\":99}",
+            "{\"verb\":\"ping\",\"proto\":1}",
+            "{\"verb\":\"ping\",\"proto\":\"v2\"}",
+        ] {
             let (r, stop) = respond(&service, bad);
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
             assert!(r.get("error").unwrap().as_str().unwrap().contains("protocol version"));
             assert!(!stop);
         }
-        // ...the matching version and the pre-versioning wire both work.
-        for good in [
-            format!("{{\"verb\":\"ping\",\"proto\":{}}}", wire::PROTO_VERSION),
-            "{\"verb\":\"ping\"}".to_string(),
-        ] {
+        // ...every accepted version and the pre-versioning wire work
+        // (v2 lines stay valid: v3 only added optional fields).
+        for accepted in wire::PROTO_ACCEPTED {
+            let good = format!("{{\"verb\":\"ping\",\"proto\":{accepted}}}");
             let (r, _) = respond(&service, &good);
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{good}");
         }
+        let (r, _) = respond(&service, "{\"verb\":\"ping\"}");
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
     }
 
     #[test]
@@ -502,6 +524,53 @@ mod tests {
     }
 
     #[test]
+    fn submit_verb_serves_vector_panels_bitwise() {
+        use crate::batch::BatchInput;
+        use crate::client::wire::{submit_request_for_input, RequestIdentity};
+        use crate::pipeline::banded_svd_vectors_with;
+        let cfg = cfg();
+        let service = Service::start(cfg.clone()).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let (n, bw) = (40, 5);
+        let a = random_banded::<f64>(n, bw, cfg.params.effective_tw(bw), &mut rng);
+        let direct =
+            banded_svd_vectors_with(&SequentialBackend::new(), &a, bw, &cfg.params).unwrap();
+        let line = submit_request_for_input(
+            &BatchInput::from((a, bw)),
+            0,
+            None,
+            RequestIdentity::default(),
+            true,
+        );
+        let (response, _) = respond(&service, &line);
+        assert_eq!(response.get("ok").and_then(Json::as_bool), Some(true), "{response:?}");
+        let panel = |key: &str| -> Vec<f64> {
+            response
+                .get(key)
+                .and_then(Json::as_array)
+                .unwrap_or_else(|| panic!("response missing {key}"))
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect()
+        };
+        let (u, vt) = (panel("u"), panel("vt"));
+        assert_eq!(u.len(), n * n);
+        assert_eq!(vt.len(), n * n);
+        for (got, want) in u.iter().zip(direct.u.data.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        for (got, want) in vt.iter().zip(direct.vt.data.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        // The typed footprint rejection rides the wire taxonomy.
+        let small = Service::start(ServiceConfig { vectors_cap_n: 16, ..cfg }).unwrap();
+        let (r, _) = respond(&small, &line);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(r.get("kind").and_then(Json::as_str), Some("too-large"));
+        assert_eq!(r.get("retryable").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
     fn submit_verb_rejects_malformed_requests() {
         let service = Service::start(cfg()).unwrap();
         for bad in [
@@ -512,6 +581,7 @@ mod tests {
             "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"priority\":-1}",
             "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"priority\":\"hi\"}",
             "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"deadline_ms\":\"100\"}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"vectors\":\"yes\"}",
         ] {
             let (r, _) = respond(&service, bad);
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{bad}");

@@ -225,6 +225,7 @@ mod tests {
             workers: 2,
             routing: ShardRouting::LeastLoaded,
             quota_pending_cap: 0,
+            vectors_cap_n: crate::config::DEFAULT_VECTORS_CAP_N,
         }
     }
 

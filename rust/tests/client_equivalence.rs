@@ -47,6 +47,7 @@ fn service_cfg(backend: BackendKind) -> ServiceConfig {
         workers: 1,
         routing: ShardRouting::LeastLoaded,
         quota_pending_cap: 0,
+        vectors_cap_n: banded_svd::config::DEFAULT_VECTORS_CAP_N,
     }
 }
 
@@ -75,11 +76,15 @@ fn artifact_free_kinds() -> Vec<BackendKind> {
 struct RequestSpec {
     problems: Vec<(usize, usize, ScalarKind, u64)>,
     priority: u8,
+    /// Request dense U/Vᵀ singular-vector panels — the equivalence
+    /// contract covers them bitwise like σ.
+    vectors: bool,
 }
 
 impl RequestSpec {
     fn build(&self) -> ReductionRequest {
-        let mut request = ReductionRequest::new().priority(self.priority);
+        let mut request =
+            ReductionRequest::new().priority(self.priority).with_vectors(self.vectors);
         for &(n, bw, kind, seed) in &self.problems {
             request = request.random(n, bw, kind, seed);
         }
@@ -105,6 +110,7 @@ fn gen_case(rng: &mut Xoshiro256, case_seed: u64) -> StreamCase {
                 })
                 .collect(),
             priority: rng.below(3) as u8,
+            vectors: rng.below(2) == 1,
         })
         .collect();
     StreamCase { requests }
@@ -151,6 +157,22 @@ fn check_outcomes_match(
             return Err(format!(
                 "{context} problem {i}: metrics mismatch {lm:?} vs {rm:?}"
             ));
+        }
+        // Singular-vector panels ride the same contract: present on both
+        // sides or neither, and bitwise equal when present.
+        match (&l.u, &r.u, &l.vt, &r.vt) {
+            (Some(lu), Some(ru), Some(lvt), Some(rvt)) => {
+                if lu.data.len() != ru.data.len() || lvt.data.len() != rvt.data.len() {
+                    return Err(format!("{context} problem {i}: panel size mismatch"));
+                }
+                if lu.data.iter().zip(&ru.data).any(|(a, b)| a.to_bits() != b.to_bits())
+                    || lvt.data.iter().zip(&rvt.data).any(|(a, b)| a.to_bits() != b.to_bits())
+                {
+                    return Err(format!("{context} problem {i}: U/Vt panels differ bitwise"));
+                }
+            }
+            (None, None, None, None) => {}
+            _ => return Err(format!("{context} problem {i}: panel presence mismatch")),
         }
     }
     Ok(())
@@ -303,10 +325,14 @@ fn simd_backend_round_trips_above_the_packed_gate() {
     let remote = RemoteClient::connect(&addr).expect("remote client");
     assert_eq!(remote.backend(), "simd", "handshake reports the stable backend name");
 
+    // Vectors ride along: the packed-path reflector capture must produce
+    // the same panels whether the plan executed locally or behind the
+    // wire.
     let request = || {
         ReductionRequest::new()
             .random(192, 40, ScalarKind::F64, 7001)
             .random(160, 36, ScalarKind::F32, 7002)
+            .with_vectors(true)
     };
     let l = local.submit_wait(request()).expect("local");
     let r = remote.submit_wait(request()).expect("remote");
@@ -349,6 +375,8 @@ fn sharded_client_matches_local_bitwise_even_when_an_endpoint_dies_mid_stream() 
         .map(|i| RequestSpec {
             problems: vec![(48, 6, ScalarKind::F64, 900 + i), (36, 5, ScalarKind::F32, 950 + i)],
             priority: (i % 3) as u8,
+            // Alternate: panel equality must survive failover too.
+            vectors: i % 2 == 0,
         })
         .collect();
 
@@ -380,4 +408,58 @@ fn sharded_client_matches_local_bitwise_even_when_an_endpoint_dies_mid_stream() 
     // skipped without surfacing an error.
     sharded.shutdown().expect("fleet shutdown");
     thread_a.join().expect("server a thread").expect("clean shutdown");
+}
+
+#[test]
+fn vectors_against_a_legacy_protocol_server_fail_typed_and_terminal() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+
+    // A minimal protocol-2 endpoint: answers the connect handshake the
+    // way a pre-vectors server did. A protocol-2 server knows nothing of
+    // the `vectors` request field and would silently serve values only —
+    // so the client must refuse before anything reaches the socket.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind stub");
+    let addr = listener.local_addr().expect("stub addr").to_string();
+    let stub = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut writer = stream;
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap_or(0) > 0 {
+            let reply = if line.contains("\"ping\"") {
+                "{\"ok\":true,\"proto\":2}"
+            } else if line.contains("\"stats\"") {
+                "{\"ok\":true,\"stats\":{\"backend\":\"sequential\"}}"
+            } else {
+                break;
+            };
+            if writeln!(writer, "{reply}").is_err() {
+                break;
+            }
+            line.clear();
+        }
+    });
+
+    // Protocol 2 is still a first-class citizen for values-only traffic:
+    // the handshake succeeds and records the negotiated version.
+    let remote = RemoteClient::connect(&addr).expect("protocol 2 is still accepted");
+    assert_eq!(remote.proto(), 2);
+    assert_eq!(remote.backend(), "sequential");
+
+    // The capability gate trips client-side with the typed, terminal
+    // taxonomy — "unavailable" and not retryable, because resubmitting
+    // the identical request to this endpoint can never succeed.
+    let err = remote
+        .submit(ReductionRequest::new().random(32, 4, ScalarKind::F64, 1).with_vectors(true))
+        .unwrap_err();
+    let job = err.as_job().expect("typed job error, not config/io");
+    assert_eq!(job.kind(), "unavailable");
+    assert!(!err.is_retryable(), "{err}");
+    assert!(err.to_string().contains("protocol 2"), "{err}");
+    let stats = remote.stats();
+    assert_eq!((stats.jobs_submitted, stats.jobs_completed, stats.jobs_failed), (0, 0, 1));
+
+    drop(remote);
+    stub.join().expect("stub thread");
 }

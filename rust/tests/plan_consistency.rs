@@ -10,6 +10,7 @@ use banded_svd::backend::{execute_reduction, for_kind, SequentialBackend, SimdBa
 use banded_svd::config::{BackendKind, TuneParams};
 use banded_svd::coordinator::Coordinator;
 use banded_svd::generate::random_banded;
+use banded_svd::pipeline::banded_svd_vectors_with;
 use banded_svd::plan::LaunchPlan;
 use banded_svd::scalar::Scalar;
 use banded_svd::simd::{detect_isa, SimdIsa, SimdSpec};
@@ -228,6 +229,42 @@ fn simd_backend_is_bitwise_equal_to_sequential_in_f64() {
 #[test]
 fn simd_backend_is_bitwise_equal_to_sequential_in_f32() {
     simd_matches_sequential_bitwise::<f32>(13);
+}
+
+#[test]
+fn singular_vector_panels_are_bitwise_equal_across_backends_and_simd_specs() {
+    // The vectors extension of the backend contract: the reflector log a
+    // backend fills — and therefore the replayed U/Vᵀ panels and the
+    // Demmel–Kahan singular values — must be bitwise what the sequential
+    // oracle records. Swept across the same shapes as the storage tests,
+    // straddling the packed gate, so the `BSVD_SIMD=force` CI leg drives
+    // the packed lane kernels' capture path and `BSVD_SIMD=off` the
+    // forced-scalar one (`SimdSpec::scalar()` is that configuration's
+    // explicit-spec equivalent).
+    use banded_svd::backend::ThreadpoolBackend;
+
+    for &(n, bw, tw) in &SIMD_SHAPES {
+        let params = TuneParams { tpb: 32, tw, max_blocks: 24 };
+        let mut rng = Xoshiro256::seed_from_u64(19);
+        let base = random_banded::<f64>(n, bw, params.effective_tw(bw), &mut rng);
+
+        let oracle =
+            banded_svd_vectors_with(&SequentialBackend::new(), &base, bw, &params).unwrap();
+        assert!(oracle.sv.windows(2).all(|w| w[0] >= w[1]), "n={n} bw={bw}: not descending");
+
+        let tp = banded_svd_vectors_with(&ThreadpoolBackend::new(3), &base, bw, &params).unwrap();
+        assert_eq!(oracle.sv, tp.sv, "threadpool sv n={n} bw={bw}");
+        assert_eq!(oracle.u, tp.u, "threadpool U n={n} bw={bw}");
+        assert_eq!(oracle.vt, tp.vt, "threadpool Vᵀ n={n} bw={bw}");
+
+        for spec in simd_specs(false) {
+            let backend = SimdBackend::with_spec(spec, 3);
+            let simd = banded_svd_vectors_with(&backend, &base, bw, &params).unwrap();
+            assert_eq!(oracle.sv, simd.sv, "{spec:?} sv n={n} bw={bw}");
+            assert_eq!(oracle.u, simd.u, "{spec:?} U n={n} bw={bw}");
+            assert_eq!(oracle.vt, simd.vt, "{spec:?} Vᵀ n={n} bw={bw}");
+        }
+    }
 }
 
 #[test]

@@ -50,6 +50,7 @@ fn service_cfg(backend: BackendKind) -> ServiceConfig {
         workers: 1,
         routing: ShardRouting::LeastLoaded,
         quota_pending_cap: 0,
+        vectors_cap_n: banded_svd::config::DEFAULT_VECTORS_CAP_N,
     }
 }
 
