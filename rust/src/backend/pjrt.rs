@@ -34,14 +34,17 @@
 //! any work is attempted.
 
 use crate::backend::{check_problems, Backend, BandStorageMut, Execution};
+use crate::bulge::cycle::stage_uses_packed;
 use crate::config::BackendKind;
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, Result};
+use crate::obs::{calibrate, trace};
 use crate::plan::{slot_bytes, LaunchPlan};
 use crate::runtime::{artifact_dir, PjrtEngine};
 use crate::simulator::model::BackendCostModel;
 use std::cell::RefCell;
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 #[cfg(not(feature = "pjrt"))]
 use crate::runtime::stub as xla;
@@ -175,9 +178,13 @@ fn execute_plan_on_engines(
     let capacity = plan.capacity;
     let mut per_problem = vec![LaunchMetrics::default(); problems.len()];
     let mut aggregate = LaunchMetrics::default();
+    // One PJRT `execute` per slot means per-slot timing is exact, like
+    // the sequential backend (the device call is synchronous here).
+    let observing = crate::obs::observing();
     for li in 0..plan.num_launches() {
         let mut launch_tasks = 0usize;
         let mut launch_bytes = 0u64;
+        let mut launch_dur = Duration::ZERO;
         for slot in plan.launch(li) {
             let p = slot.problem as usize;
             let stage = plan.slot_stage(slot);
@@ -185,15 +192,26 @@ fn execute_plan_on_engines(
             let bytes = slot_bytes(stage, count, es);
             per_problem[p].record_launch(count, capacity, bytes);
             let buf = bufs[p].take().expect("device buffer live between launches");
+            let t_slot = observing.then(Instant::now);
             bufs[p] = Some(engines[engine_of[p]].execute_cycle_step(
                 buf,
                 slot.stage as usize,
                 slot.t as usize,
             )?);
+            if let Some(t0) = t_slot {
+                let dur = t0.elapsed();
+                launch_dur += dur;
+                let packed = stage_uses_packed(stage);
+                let ns = dur.as_nanos() as f64;
+                calibrate::record_sample(stage.b, stage.d, es, packed, count as u64, ns);
+            }
             launch_tasks += count;
             launch_bytes += bytes;
         }
         aggregate.record_launch(launch_tasks, capacity, launch_bytes);
+        if observing {
+            trace::record_launch(li, launch_tasks, launch_dur);
+        }
     }
 
     // Single download per problem, written back at the storage precision.

@@ -2,12 +2,15 @@
 
 use crate::backend::{check_problems, Backend, BandStorageMut, Execution};
 use crate::batch::engine::{Runner, SlotScratch};
+use crate::bulge::cycle::stage_uses_packed;
 use crate::bulge::schedule::CycleTask;
 use crate::config::BackendKind;
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::Result;
+use crate::obs::{calibrate, trace};
 use crate::plan::{slot_bytes, LaunchPlan, ReflectorLog};
 use crate::simd::SimdSpec;
+use std::time::{Duration, Instant};
 
 /// Executes a [`LaunchPlan`] inline on the calling thread, in plan order,
 /// one task at a time — the schedule-order oracle. Every other backend's
@@ -46,20 +49,27 @@ impl SequentialBackend {
         let mut tasks: Vec<CycleTask> = Vec::new();
         let mut ordinals: Vec<usize> = vec![0; runners.len()];
         let mut aggregate = LaunchMetrics::default();
+        // One task at a time means per-slot timing is exact here (no
+        // proportional split): this backend produces the cleanest
+        // calibration samples per kernel class.
+        let observing = crate::obs::observing();
         for li in 0..plan.num_launches() {
             let mut launch_tasks = 0usize;
             let mut launch_bytes = 0u64;
+            let mut launch_dur = Duration::ZERO;
             for slot in plan.launch(li) {
                 let p = slot.problem as usize;
                 let shape = &plan.problems[p];
                 let stage = &shape.stages[slot.stage as usize];
                 let count = slot.count as usize;
-                let bytes = slot_bytes(stage, count, runners[p].element_bytes());
+                let es = runners[p].element_bytes();
+                let bytes = slot_bytes(stage, count, es);
                 runners[p].metrics.record_launch(count, capacity, bytes);
                 tasks.clear();
                 stage.tasks_at_into(shape.n, slot.t as usize, &mut tasks);
                 debug_assert_eq!(tasks.len(), count);
                 let base = ordinals[p];
+                let t_slot = observing.then(Instant::now);
                 for (i, task) in tasks.iter().enumerate() {
                     // SAFETY: problems are exclusively borrowed for the
                     // whole call and tasks execute strictly one at a
@@ -68,11 +78,21 @@ impl SequentialBackend {
                         runners[p].exec_task(slot.stage as usize, task, base + i, &mut scratch)
                     };
                 }
+                if let Some(t0) = t_slot {
+                    let dur = t0.elapsed();
+                    launch_dur += dur;
+                    let packed = stage_uses_packed(stage);
+                    let ns = dur.as_nanos() as f64;
+                    calibrate::record_sample(stage.b, stage.d, es, packed, count as u64, ns);
+                }
                 ordinals[p] = base + count;
                 launch_tasks += count;
                 launch_bytes += bytes;
             }
             aggregate.record_launch(launch_tasks, capacity, launch_bytes);
+            if observing {
+                trace::record_launch(li, launch_tasks, launch_dur);
+            }
         }
         Ok(Execution {
             per_problem: runners.iter().map(|r| r.metrics.clone()).collect(),

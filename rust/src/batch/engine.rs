@@ -18,13 +18,14 @@ use crate::banded::storage::Banded;
 use crate::batch::plan::BatchPlan;
 use crate::batch::BatchInput;
 use crate::bulge::cycle::{
-    exec_cycle_shared_logged_with, exec_cycle_shared_with, CycleWorkspace, SharedBanded,
-    TaskCapture,
+    exec_cycle_shared_logged_with, exec_cycle_shared_with, stage_uses_packed, CycleWorkspace,
+    SharedBanded, TaskCapture,
 };
 use crate::bulge::schedule::{CycleTask, Stage};
 use crate::config::{BatchConfig, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::Result;
+use crate::obs::{calibrate, trace};
 use crate::plan::reflectors::LogView;
 use crate::plan::{slot_bytes, LaunchPlan, ProblemShape, ReflectorLog};
 use crate::service::cache::PlanCache;
@@ -296,12 +297,19 @@ pub(crate) fn execute_plan(
     let mut keys: Vec<(u32, u32, u32)> = Vec::new();
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); slots];
     let mut ordinals: Vec<u32> = vec![0; runners.len()];
+    // Observation hooks: per-launch wall timing is taken only when
+    // tracing or calibration is live — the common path pays one relaxed
+    // atomic load per run. `classes` tallies each launch's slots by
+    // kernel class so the measured wall splits proportionally to tasks.
+    let observing = crate::obs::observing();
+    let mut classes: Vec<(usize, usize, usize, bool, u64)> = Vec::new();
     for li in 0..plan.num_launches() {
         tasks.clear();
         keys.clear();
         for b in buckets.iter_mut() {
             b.clear();
         }
+        classes.clear();
         let mut launch_bytes = 0u64;
         for slot in plan.launch(li) {
             let p = slot.problem as usize;
@@ -310,6 +318,10 @@ pub(crate) fn execute_plan(
             let es = runners[p].exec.element_bytes();
             let bytes = slot_bytes(stage, slot.count as usize, es);
             launch_bytes += bytes;
+            if observing {
+                let packed = stage_uses_packed(stage);
+                classes.push((stage.b, stage.d, es, packed, slot.count as u64));
+            }
             runners[p].metrics.record_launch(slot.count as usize, capacity, bytes);
             let start = tasks.len();
             stage.tasks_at_into(shape.n, slot.t as usize, &mut tasks);
@@ -332,6 +344,7 @@ pub(crate) fn execute_plan(
         let buckets_ref: &[Vec<u32>] = &buckets;
         let runners_ref: &[Runner<'_>] = runners;
         let scratch_ref: &WorkerLocal<SlotScratch> = &scratch;
+        let t_launch = observing.then(Instant::now);
         pool.for_each_slot_where(|w| !buckets_ref[w].is_empty(), |w| {
             // SAFETY (scratch): pinned dispatch gives slot `w` to exactly
             // one thread at a time.
@@ -351,6 +364,17 @@ pub(crate) fn execute_plan(
                 };
             }
         });
+        if let Some(t0) = t_launch {
+            let dur = t0.elapsed();
+            trace::record_launch(li, tasks.len(), dur);
+            // The pool dispatch is one barrier — per-class cost is the
+            // launch wall split proportionally to each class's tasks.
+            let ns = dur.as_nanos() as f64;
+            let total = tasks.len().max(1) as f64;
+            for &(b, d, es, packed, count) in &classes {
+                calibrate::record_sample(b, d, es, packed, count, ns * count as f64 / total);
+            }
+        }
     }
     aggregate
 }

@@ -68,6 +68,7 @@ use crate::config::{BackendKind, BatchConfig, ServiceConfig, TuneParams};
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, JobError, Result};
 use crate::generate::random_banded;
+use crate::obs::trace::{self, TraceId};
 use crate::pipeline::stage3::bidiagonal_singular_values;
 use crate::pipeline::{accumulate_panels, complete_svd};
 use crate::scalar::ScalarKind;
@@ -150,6 +151,7 @@ pub struct ReductionRequest {
     client_id: Option<String>,
     quota_class: Option<String>,
     vectors: bool,
+    trace: Option<TraceId>,
 }
 
 impl ReductionRequest {
@@ -228,6 +230,24 @@ impl ReductionRequest {
     pub fn with_vectors(mut self, vectors: bool) -> Self {
         self.vectors = vectors;
         self
+    }
+
+    /// Attach an explicit trace id (see [`crate::obs::trace`]): every
+    /// span event the request's problems generate — client side and, on
+    /// the queued/remote paths, server side — records under it. Without
+    /// this, a fresh id is minted per submission when tracing is enabled
+    /// ([`crate::obs::trace::enabled`]); when tracing is off the request
+    /// carries no id and every hook no-ops.
+    pub fn trace(mut self, trace: TraceId) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// The trace id that will cover this request's submission, minting
+    /// one now if tracing is on and none was set. `None` when tracing is
+    /// off (and no explicit id was attached) — the untraced fast path.
+    fn effective_trace(&self) -> Option<TraceId> {
+        self.trace.or_else(|| trace::enabled().then(TraceId::mint))
     }
 
     /// Number of problems in the request.
@@ -439,10 +459,16 @@ enum LocalPending {
     /// Queued mode: one service ticket per problem, resolved at wait.
     /// `submitted` anchors the outcome's wall at submission time (the
     /// reported wall covers queue + execution no matter how late the
-    /// caller waits), and `cache_before` snapshots the service's cache
+    /// caller waits), `cache_before` snapshots the service's cache
     /// counters at submission so the provenance delta covers the flush
-    /// even when it beats the wait.
-    Tickets { tickets: Vec<JobTicket>, submitted: Instant, cache_before: CacheStats },
+    /// even when it beats the wait, and `trace` carries the request's
+    /// trace id to the client-side `respond` events at wait.
+    Tickets {
+        tickets: Vec<JobTicket>,
+        submitted: Instant,
+        cache_before: CacheStats,
+        trace: Option<TraceId>,
+    },
 }
 
 enum LocalMode {
@@ -629,6 +655,7 @@ impl LocalClient {
     fn submit_queued(
         &self,
         request: ReductionRequest,
+        trace_id: Option<TraceId>,
         service: &Service,
     ) -> Result<Vec<JobTicket>> {
         let jobs = request.len() as u64;
@@ -651,9 +678,14 @@ impl LocalClient {
             request.problems.into_iter().map(|p| p.materialize(&self.params)).collect();
         let mut tickets = Vec::with_capacity(inputs.len());
         for input in inputs {
-            match service.submit_as(
+            if let Some(t) = trace_id {
+                let shape = format!("n={} bw={}", input.n(), input.bw());
+                trace::event(t, 0, "submit", "client", None, Duration::ZERO, shape);
+            }
+            match service.submit_traced(
                 client_id.as_deref(),
                 quota_class.as_deref(),
+                trace_id,
                 input,
                 priority,
                 deadline,
@@ -683,6 +715,7 @@ impl LocalClient {
         tickets: Vec<JobTicket>,
         submitted: Instant,
         cache_before: CacheStats,
+        trace_id: Option<TraceId>,
         service: &Service,
     ) -> Result<ReductionOutcome> {
         let mut problems = Vec::with_capacity(tickets.len());
@@ -691,6 +724,10 @@ impl LocalClient {
             match ticket.wait() {
                 Ok(r) => {
                     self.counters.completed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = trace_id {
+                        let detail = format!("n={} sv={}", r.n, r.sv.len());
+                        trace::event(t, r.id, "respond", "client", None, Duration::ZERO, detail);
+                    }
                     problems.push(ProblemOutcome {
                         n: r.n,
                         bw: r.bw,
@@ -749,10 +786,12 @@ impl Client for LocalClient {
             LocalMode::Queued(service) => {
                 let submitted = Instant::now();
                 let cache_before = service.stats().cache;
+                let trace = request.effective_trace();
                 LocalPending::Tickets {
-                    tickets: self.submit_queued(request, service)?,
+                    tickets: self.submit_queued(request, trace, service)?,
                     submitted,
                     cache_before,
+                    trace,
                 }
             }
         };
@@ -767,12 +806,14 @@ impl Client for LocalClient {
         })?;
         match pending {
             LocalPending::Ready(outcome) => Ok(*outcome),
-            LocalPending::Tickets { tickets, submitted, cache_before } => match &self.mode {
-                LocalMode::Queued(service) => {
-                    self.wait_queued(tickets, submitted, cache_before, service)
+            LocalPending::Tickets { tickets, submitted, cache_before, trace } => {
+                match &self.mode {
+                    LocalMode::Queued(service) => {
+                        self.wait_queued(tickets, submitted, cache_before, trace, service)
+                    }
+                    LocalMode::Direct { .. } => unreachable!("tickets only exist in queued mode"),
                 }
-                LocalMode::Direct { .. } => unreachable!("tickets only exist in queued mode"),
-            },
+            }
         }
     }
 
@@ -906,6 +947,22 @@ impl RemoteClient {
             .ok_or_else(|| Error::Config("stats response missing body".into()))
     }
 
+    /// Fetch the server's Prometheus text exposition (`metrics` verb) —
+    /// the unified-metrics rendering of the same counters `stats`
+    /// reports, plus the latency histograms.
+    pub fn server_metrics(&self) -> Result<String> {
+        let mut state = self.state.lock().unwrap();
+        let response = Self::roundtrip(&mut state, "{\"verb\":\"metrics\"}")?;
+        if response.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(wire::parse_error(&response));
+        }
+        response
+            .get("text")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| Error::Config("metrics response missing text body".into()))
+    }
+
     /// Ask the server to shut down (acknowledged, then the endpoint
     /// drains and exits).
     pub fn shutdown(&self) -> Result<()> {
@@ -928,6 +985,7 @@ impl RemoteClient {
     /// *and* every not-yet-attempted one into `jobs_failed`, so
     /// `submitted = completed + failed` reconciles even when the server
     /// dies mid-request.
+    #[allow(clippy::too_many_arguments)]
     fn run_request(
         &self,
         state: &mut RemoteState,
@@ -936,6 +994,7 @@ impl RemoteClient {
         deadline: Option<Duration>,
         identity: wire::RequestIdentity<'_>,
         vectors: bool,
+        trace_id: Option<TraceId>,
     ) -> Result<ReductionOutcome> {
         let t0 = Instant::now();
         let mut problems = Vec::with_capacity(inputs.len());
@@ -946,8 +1005,13 @@ impl RemoteClient {
                 self.counters.failed.fetch_add(remaining, Ordering::Relaxed);
                 e
             };
-            let line =
-                wire::submit_request_for_input(input, priority, deadline, identity, vectors);
+            if let Some(t) = trace_id {
+                let shape = format!("n={} bw={}", input.n(), input.bw());
+                trace::event(t, 0, "submit", "client", None, Duration::ZERO, shape);
+            }
+            let line = wire::submit_request_for_input(
+                input, priority, deadline, identity, vectors, trace_id,
+            );
             let transport = writeln!(state.writer, "{line}")
                 .and_then(|()| state.writer.flush())
                 .map_err(Error::Io);
@@ -961,6 +1025,10 @@ impl RemoteClient {
             match wire::parse_submit_response(&response) {
                 Ok(r) => {
                     self.counters.completed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = trace_id {
+                        let detail = format!("n={} sv={}", r.n, r.sv.len());
+                        trace::event(t, r.id, "respond", "client", None, Duration::ZERO, detail);
+                    }
                     problems.push(ProblemOutcome {
                         n: r.n,
                         bw: r.bw,
@@ -1020,6 +1088,7 @@ impl Client for RemoteClient {
                 ),
             }));
         }
+        let trace_id = request.effective_trace();
         let priority = request.priority;
         let deadline = request.deadline;
         let client_id = request.client_id;
@@ -1040,7 +1109,8 @@ impl Client for RemoteClient {
             quota_class: quota_class.as_deref(),
         };
         let mut state = self.state.lock().unwrap();
-        let outcome = self.run_request(&mut state, inputs, priority, deadline, identity, vectors);
+        let outcome =
+            self.run_request(&mut state, inputs, priority, deadline, identity, vectors, trace_id);
         let id = next_handle_id();
         state.done.insert(id, outcome);
         Ok(JobHandle { id })

@@ -290,6 +290,11 @@ impl ShardedClient {
 impl Client for ShardedClient {
     fn submit(&self, request: ReductionRequest) -> Result<JobHandle> {
         request.validate()?;
+        // Pin the trace id before the failover loop: every attempt clones
+        // the request, so a job that fails over (or retries) keeps one
+        // span chain instead of minting a fresh id per endpoint.
+        let mut request = request;
+        request.trace = request.effective_trace();
         let jobs = request.len() as u64;
         if request.params.is_some() {
             self.counters.failed.fetch_add(jobs, Ordering::Relaxed);

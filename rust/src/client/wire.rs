@@ -26,6 +26,7 @@ use crate::banded::storage::Banded;
 use crate::batch::BatchInput;
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, JobError, Result};
+use crate::obs::trace::TraceId;
 use crate::scalar::{Scalar, F16};
 use crate::service::queue::JobResult;
 use crate::util::json::Json;
@@ -137,6 +138,7 @@ fn submit_json(
     deadline: Option<Duration>,
     identity: RequestIdentity<'_>,
     vectors: bool,
+    trace: Option<TraceId>,
     band: Vec<f64>,
 ) -> String {
     let band: Vec<Json> = band.into_iter().map(Json::Num).collect();
@@ -161,6 +163,12 @@ fn submit_json(
     if let Some(quota_class) = identity.quota_class {
         request = request.set("quota_class", quota_class);
     }
+    if let Some(trace) = trace {
+        // Client-minted trace id (16 hex chars) so both sides record the
+        // job's span chain under one id. Absent when tracing is off —
+        // the line stays byte-compatible with an untraced client's.
+        request = request.set("trace", trace.to_hex());
+    }
     request.set("band", Json::Arr(band)).render()
 }
 
@@ -184,20 +192,24 @@ pub fn submit_request<T: Scalar>(a: &Banded<T>, bw: usize, priority: u8) -> Stri
         None,
         RequestIdentity::default(),
         false,
+        None,
         band_values(a, bw),
     )
 }
 
 /// Render a `submit` request line for a type-erased problem — what the
 /// [`super::RemoteClient`] sends for each problem of a request, carrying
-/// the request's priority class, optional deadline, identity, and
-/// whether the job should accumulate singular-vector panels.
+/// the request's priority class, optional deadline, identity, whether
+/// the job should accumulate singular-vector panels, and (when tracing)
+/// the client-minted [`TraceId`] the server records spans under.
+#[allow(clippy::too_many_arguments)]
 pub fn submit_request_for_input(
     input: &BatchInput,
     priority: u8,
     deadline: Option<Duration>,
     identity: RequestIdentity<'_>,
     vectors: bool,
+    trace: Option<TraceId>,
 ) -> String {
     let band = match input {
         BatchInput::F64 { a, bw } => band_values(a, *bw),
@@ -212,6 +224,7 @@ pub fn submit_request_for_input(
         deadline,
         identity,
         vectors,
+        trace,
         band,
     )
 }
@@ -444,6 +457,7 @@ mod tests {
             None,
             RequestIdentity::default(),
             false,
+            None,
         );
         assert_eq!(typed, erased);
     }
@@ -459,11 +473,13 @@ mod tests {
             Some(Duration::from_millis(250)),
             RequestIdentity::default(),
             false,
+            None,
         );
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("deadline_ms").and_then(Json::as_i64), Some(250));
         assert_eq!(parsed.get("priority").and_then(Json::as_usize), Some(1));
-        let bare = submit_request_for_input(&input, 0, None, RequestIdentity::default(), false);
+        let bare =
+            submit_request_for_input(&input, 0, None, RequestIdentity::default(), false, None);
         assert!(Json::parse(&bare).unwrap().get("deadline_ms").is_none());
     }
 
@@ -474,7 +490,7 @@ mod tests {
         let input = BatchInput::from((a, 2));
         let identity =
             RequestIdentity { client_id: Some("tenant-a"), quota_class: Some("batch") };
-        let line = submit_request_for_input(&input, 0, None, identity, false);
+        let line = submit_request_for_input(&input, 0, None, identity, false, None);
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(
             parsed.get("proto").and_then(Json::as_usize),
@@ -483,11 +499,37 @@ mod tests {
         assert_eq!(parsed.get("client_id").and_then(Json::as_str), Some("tenant-a"));
         assert_eq!(parsed.get("quota_class").and_then(Json::as_str), Some("batch"));
         // Anonymous lines omit the identity fields but still carry proto.
-        let bare = submit_request_for_input(&input, 0, None, RequestIdentity::default(), false);
+        let bare =
+            submit_request_for_input(&input, 0, None, RequestIdentity::default(), false, None);
         let parsed = Json::parse(&bare).unwrap();
         assert!(parsed.get("client_id").is_none());
         assert!(parsed.get("quota_class").is_none());
         assert!(parsed.get("proto").is_some());
+    }
+
+    #[test]
+    fn trace_id_rides_the_request_line_only_when_set() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let a = random_banded::<f64>(16, 2, 1, &mut rng);
+        let input = BatchInput::from((a, 2));
+        let id = TraceId(0xdead_beef_0012_3456);
+        let line = submit_request_for_input(
+            &input,
+            0,
+            None,
+            RequestIdentity::default(),
+            false,
+            Some(id),
+        );
+        let parsed = Json::parse(&line).unwrap();
+        let on_wire = parsed.get("trace").and_then(Json::as_str).unwrap();
+        assert_eq!(on_wire, "deadbeef00123456");
+        assert_eq!(TraceId::parse_hex(on_wire), Some(id), "wire form parses back");
+        // An untraced line omits the field entirely — byte-compatible
+        // with what every earlier client rendered.
+        let bare =
+            submit_request_for_input(&input, 0, None, RequestIdentity::default(), false, None);
+        assert!(Json::parse(&bare).unwrap().get("trace").is_none());
     }
 
     #[test]
@@ -536,13 +578,14 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(6);
         let a = random_banded::<f64>(16, 2, 1, &mut rng);
         let input = BatchInput::from((a, 2));
-        let with = submit_request_for_input(&input, 0, None, RequestIdentity::default(), true);
+        let with =
+            submit_request_for_input(&input, 0, None, RequestIdentity::default(), true, None);
         let parsed = Json::parse(&with).unwrap();
         assert_eq!(parsed.get("vectors").and_then(Json::as_bool), Some(true));
         // A values-only line omits the field entirely — byte-compatible
         // with the v2 rendering a legacy server expects.
         let without =
-            submit_request_for_input(&input, 0, None, RequestIdentity::default(), false);
+            submit_request_for_input(&input, 0, None, RequestIdentity::default(), false, None);
         assert!(Json::parse(&without).unwrap().get("vectors").is_none());
     }
 

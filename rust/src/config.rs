@@ -14,11 +14,15 @@
 //! | `BSVD_SERVICE_WINDOW_US` | `500` | Micro-batching window of the reduction service ([`ServiceConfig::window`]), in microseconds: how long the batcher holds the first pending job open for co-scheduling before flushing. Read when a [`ServiceConfig`] is constructed with `Default`. |
 //! | `BSVD_SERVICE_QUEUE_CAP` | `1024` | Maximum pending jobs in the service submission queue ([`ServiceConfig::queue_cap`]); submissions beyond it are rejected at admission. Read when a [`ServiceConfig`] is constructed with `Default`. |
 //! | `BSVD_SERVICE_WORKERS` | `1` | Batcher shards the reduction service runs ([`ServiceConfig::workers`]); each shard owns its own backend and admission queue, all sharing one plan cache. Read when a [`ServiceConfig`] is constructed with `Default`. |
+//! | `BSVD_TRACE` | unset | Path of a JSON-lines span-event sink ([`crate::obs::trace::init_from_env`]): when set, every job's lifecycle (`submit` → `admit` → `queue_wait` → `flush` → `launch[i]` → `respond`) is appended as it happens, client and server side. Unset leaves tracing fully off (zero-cost: one relaxed atomic load per hook). Read once, at process start. |
+//! | `BSVD_PROFILE` | unset | Path of a `bsvd-profile-v1` calibration artifact ([`crate::obs::calibrate::from_env`], written by `banded-svd profile --measure`): when set, the simulator and autotuner replace modeled per-task kernel costs with the measured ones ([`crate::simulator::autotune_for_calibrated`]). Read once, on first use. |
 //!
 //! The kernel-path knobs are bitwise-identical in results — they trade
 //! performance, never numerics (see `docs/performance-model.md`). The
 //! service knobs shape batching latency and admission, never per-job
-//! numerics (see `docs/service.md`).
+//! numerics (see `docs/service.md`). The observability knobs record and
+//! calibrate but never change what any kernel computes (see
+//! `docs/observability.md`).
 
 use crate::error::{Error, Result};
 use std::time::Duration;

@@ -103,6 +103,7 @@ fn cli() -> Cli {
                     opt("threads", "worker threads (0 = all cores, local modes)", "0"),
                     opt("seed", "rng seed", "42"),
                     flag("vectors", "request dense U/Vᵀ singular-vector panels per problem"),
+                    flag("metrics", "after the run, print the server(s)' Prometheus metrics"),
                     flag("shutdown", "after the run, ask the remote server(s) to shut down"),
                 ],
             },
@@ -127,6 +128,15 @@ fn cli() -> Cli {
                     opt("tw", "inner tilewidth", "8"),
                     opt("tpb", "threads per block", "32"),
                     opt("max-blocks", "joint block capacity per shared launch", "192"),
+                    opt("trace", "append span events as JSON lines to this file", ""),
+                ],
+            },
+            Command {
+                name: "stats",
+                about: "query a running serve endpoint for stats or Prometheus metrics",
+                opts: vec![
+                    opt("remote", "serve endpoint to query", "127.0.0.1:7070"),
+                    opt("format", "output format: json|prom", "json"),
                 ],
             },
             Command {
@@ -178,8 +188,17 @@ fn cli() -> Cli {
             },
             Command {
                 name: "profile",
-                about: "Table III: modeled kernel profile on RTX4060",
-                opts: vec![],
+                about: "Table III: modeled kernel profile on RTX4060 (or --measure: calibrate)",
+                opts: vec![
+                    flag("measure", "time real launches and write a bsvd-profile-v1 JSON"),
+                    opt("out", "calibration file to write (--measure)", "profile_calibration.json"),
+                    opt("n", "matrix size of each measured problem", "192"),
+                    opt("bw", "bandwidth of each measured problem", "16"),
+                    opt("count", "measured problems per precision", "4"),
+                    opt("backend", "sequential|threadpool|simd|pjrt (--measure)", "threadpool"),
+                    opt("threads", "worker threads (0 = all cores, --measure)", "0"),
+                    opt("seed", "rng seed (--measure)", "42"),
+                ],
             },
             Command {
                 name: "tune",
@@ -236,6 +255,9 @@ fn es_of(precision: &str) -> usize {
 }
 
 fn main() {
+    // BSVD_TRACE=<path> turns on span tracing for any subcommand; the
+    // `serve --trace` flag layers the same file sink on explicitly.
+    banded_svd::obs::trace::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let parsed = match cli().parse(&argv) {
         Ok(p) => p,
@@ -249,12 +271,13 @@ fn main() {
         "batch" => cmd_batch(&parsed.args),
         "client" => cmd_client(&parsed.args),
         "serve" => cmd_serve(&parsed.args),
+        "stats" => cmd_stats(&parsed.args),
         "svd" => cmd_svd(&parsed.args),
         "accuracy" => cmd_accuracy(&parsed.args),
         "occupancy" => cmd_occupancy(&parsed.args),
         "sweep" => cmd_sweep(&parsed.args),
         "hardware" => cmd_hardware(&parsed.args),
-        "profile" => cmd_profile(),
+        "profile" => cmd_profile(&parsed.args),
         "tune" => cmd_tune(&parsed.args),
         "bench-collect" => cmd_bench_collect(&parsed.args),
         "bench-gate" => cmd_bench_gate(&parsed.args),
@@ -638,9 +661,34 @@ fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
         }
     }
 
+    // Fetch and print each endpoint's Prometheus rendering — the
+    // unified-metrics view of the counters `stats` reports, plus the
+    // queue-wait/exec latency histograms.
+    fn print_server_metrics(addrs: &[&str]) -> i32 {
+        for &addr in addrs {
+            match RemoteClient::connect(addr).and_then(|c| c.server_metrics()) {
+                Ok(text) => {
+                    if addrs.len() > 1 {
+                        println!("# endpoint {addr}");
+                    }
+                    print!("{text}");
+                }
+                Err(e) => {
+                    eprintln!("metrics {addr}: {e}");
+                    return 1;
+                }
+            }
+        }
+        0
+    }
+
     let remote_addr = args.get("remote").unwrap_or("").to_string();
     let endpoints: Vec<&str> =
         remote_addr.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if args.flag("metrics") && endpoints.is_empty() {
+        eprintln!("--metrics queries a running server; pass --remote <addr>");
+        return 2;
+    }
     if endpoints.len() > 1 {
         // Several endpoints: the sharded client routes, health-checks,
         // and fails over across the fleet.
@@ -663,6 +711,12 @@ fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
             request,
             &format!("sharded over {} endpoints, {} routing", endpoints.len(), route.name()),
         );
+        if args.flag("metrics") {
+            let rc = print_server_metrics(&endpoints);
+            if rc != 0 {
+                return rc;
+            }
+        }
         if args.flag("shutdown") {
             if let Err(e) = client.shutdown() {
                 eprintln!("shutdown: {e}");
@@ -680,6 +734,12 @@ fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
             }
         };
         let code = drive(&client, request, &format!("remote {addr}"));
+        if args.flag("metrics") {
+            let rc = print_server_metrics(&[addr]);
+            if rc != 0 {
+                return rc;
+            }
+        }
         if args.flag("shutdown") {
             if let Err(e) = client.shutdown() {
                 eprintln!("shutdown: {e}");
@@ -791,6 +851,13 @@ fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
         quota_pending_cap: args.parse_or("quota-cap", 0),
         vectors_cap_n: args.parse_or("vectors-cap", base.vectors_cap_n),
     };
+    if let Some(path) = args.get("trace").filter(|s| !s.is_empty()) {
+        if let Err(e) = banded_svd::obs::trace::enable_file(path) {
+            eprintln!("error: --trace {path}: {e}");
+            return 2;
+        }
+        println!("tracing span events to {path}");
+    }
     let addr = args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
     let server = match Server::bind(cfg, &addr) {
         Ok(s) => s,
@@ -826,6 +893,43 @@ fn cmd_serve(args: &banded_svd::util::cli::Args) -> i32 {
         Err(e) => {
             eprintln!("error: {e}");
             1
+        }
+    }
+}
+
+fn cmd_stats(args: &banded_svd::util::cli::Args) -> i32 {
+    let addr = args.get("remote").unwrap_or("127.0.0.1:7070");
+    let client = match RemoteClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: connect {addr}: {e}");
+            return 1;
+        }
+    };
+    match args.get("format").unwrap_or("json") {
+        "json" => match client.server_stats() {
+            Ok(stats) => {
+                println!("{}", stats.render());
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        },
+        "prom" => match client.server_metrics() {
+            Ok(text) => {
+                print!("{text}");
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        },
+        other => {
+            eprintln!("unknown --format {other:?} (json|prom)");
+            2
         }
     }
 }
@@ -982,8 +1086,70 @@ fn cmd_hardware(args: &banded_svd::util::cli::Args) -> i32 {
     0
 }
 
-fn cmd_profile() -> i32 {
+/// `profile --measure`: run real reductions with the calibration
+/// collector armed and write the folded `bsvd-profile-v1` artifact.
+/// One batch per precision covers the element-size axis of the profile.
+fn cmd_profile_measure(args: &banded_svd::util::cli::Args) -> i32 {
+    use banded_svd::obs::calibrate;
+    let n: usize = args.parse_or("n", 192);
+    let bw: usize = args.parse_or("bw", 16);
+    let count: usize = args.parse_or("count", 4).max(1);
+    let seed: u64 = args.parse_or("seed", 42);
+    let out = args.get("out").unwrap_or("profile_calibration.json").to_string();
+    let kind: BackendKind = match args.get("backend").unwrap_or("threadpool").parse() {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let params = TuneParams { tpb: 32, tw: 8, max_blocks: 192 };
+    let threads: usize = args.parse_or("threads", 0);
+    let client = match LocalClient::direct(params, BatchConfig::default(), kind, threads) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mut shapes = Vec::new();
+    for prec in [ScalarKind::F64, ScalarKind::F32, ScalarKind::F16] {
+        shapes.extend((0..count).map(|_| (n, bw, prec)));
+    }
+    let request = request_from_shapes(&shapes, seed);
+    calibrate::begin();
+    let outcome = match client.submit_wait(request) {
+        Ok(o) => o,
+        Err(e) => {
+            calibrate::finish();
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let profile = calibrate::finish();
+    let tasks: u64 = profile.entries.iter().map(|e| e.tasks).sum();
+    match std::fs::write(&out, profile.to_json().render() + "\n") {
+        Ok(()) => {
+            println!(
+                "measured {} problems on {}: {} kernel classes over {tasks} tasks -> {out}",
+                outcome.problems.len(),
+                outcome.provenance.backend,
+                profile.entries.len()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: write {out}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_profile(args: &banded_svd::util::cli::Args) -> i32 {
     use banded_svd::bulge::schedule::Stage;
+    if args.flag("measure") {
+        return cmd_profile_measure(args);
+    }
     let grid = [
         (64usize, 48usize, 32usize),
         (64, 96, 32),

@@ -1,0 +1,325 @@
+//! Measured-profile calibration: fold per-launch timings from real
+//! backend execution into a [`MeasuredProfile`] the simulator and
+//! autotuner ingest in place of reasoned model constants.
+//!
+//! The paper's performance claims rest on kernel-level *measurement*
+//! (NSight profiles per launch); our cost model is reasoned from
+//! first principles. This module closes the loop:
+//!
+//! 1. `banded-svd profile --measure` runs real reductions with the
+//!    collector active ([`begin`]/[`record_sample`]/[`finish`]); the
+//!    launch loops time each launch and attribute nanoseconds to the
+//!    `(b, d, element size, packed-vs-inplace)` kernel class of every
+//!    slot they execute.
+//! 2. The folded samples serialize as the `bsvd-profile-v1` JSON schema
+//!    ([`MeasuredProfile::to_json`]), which `bench-collect` merges into
+//!    snapshots as `measured: true`.
+//! 3. `BSVD_PROFILE=<path>` ([`from_env`]) feeds the profile back into
+//!    [`crate::simulator::simulate_plan_calibrated`] and
+//!    [`crate::simulator::autotune_for_calibrated`], so tuning decisions
+//!    follow the hardware actually underneath, not the model's guesses.
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Measured cost of one kernel class: the cycle kernel at bandwidth `b`,
+/// tile width `d`, element size `es`, in its packed or in-place variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfileEntry {
+    /// Bandwidth of the stage (`Stage::b`).
+    pub b: usize,
+    /// Tile width of the stage (`Stage::d`).
+    pub d: usize,
+    /// Element size in bytes (2/4/8 — the paper's precision axis).
+    pub es: usize,
+    /// Whether the stage ran the packed-tile kernel
+    /// ([`crate::bulge::cycle::stage_uses_packed`]).
+    pub packed: bool,
+    /// Cycle-tasks the sample set covers.
+    pub tasks: u64,
+    /// Measured nanoseconds per cycle-task, averaged over `tasks`.
+    pub ns_per_task: f64,
+}
+
+impl ProfileEntry {
+    /// Elements one cycle-task touches — the scaling basis when a lookup
+    /// falls back to a neighboring kernel class. A task at `(b, d)` sweeps
+    /// a `(1 + b + d) × (d + 1)` working window.
+    fn tile_elems(b: usize, d: usize) -> f64 {
+        ((1 + b + d) * (d + 1)) as f64
+    }
+}
+
+/// A set of measured kernel costs, the `bsvd-profile-v1` artifact.
+///
+/// Lookup ([`MeasuredProfile::ns_per_task`]) degrades gracefully: exact
+/// `(b, d, es, packed)` match first, then the other packedness of the
+/// same shape, then the nearest same-`es` shape scaled by working-window
+/// size, then any entry scaled by window *and* element size — so a
+/// profile measured on a handful of shapes still calibrates the whole
+/// tuning grid.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MeasuredProfile {
+    pub entries: Vec<ProfileEntry>,
+}
+
+impl MeasuredProfile {
+    /// Measured (or nearest-scaled) nanoseconds per cycle-task for a
+    /// kernel class. `None` only when the profile is empty.
+    pub fn ns_per_task(&self, b: usize, d: usize, es: usize, packed: bool) -> Option<f64> {
+        if let Some(e) =
+            self.entries.iter().find(|e| (e.b, e.d, e.es, e.packed) == (b, d, es, packed))
+        {
+            return Some(e.ns_per_task);
+        }
+        if let Some(e) = self.entries.iter().find(|e| (e.b, e.d, e.es) == (b, d, es)) {
+            return Some(e.ns_per_task);
+        }
+        let want = ProfileEntry::tile_elems(b, d);
+        let nearest = |candidates: &mut dyn Iterator<Item = &ProfileEntry>| {
+            candidates.min_by(|x, y| {
+                let dx = (ProfileEntry::tile_elems(x.b, x.d).ln() - want.ln()).abs();
+                let dy = (ProfileEntry::tile_elems(y.b, y.d).ln() - want.ln()).abs();
+                dx.partial_cmp(&dy).unwrap_or(std::cmp::Ordering::Equal)
+            })
+        };
+        if let Some(e) = nearest(&mut self.entries.iter().filter(|e| e.es == es)) {
+            return Some(e.ns_per_task * want / ProfileEntry::tile_elems(e.b, e.d));
+        }
+        nearest(&mut self.entries.iter()).map(|e| {
+            e.ns_per_task * (want / ProfileEntry::tile_elems(e.b, e.d)) * (es as f64 / e.es as f64)
+        })
+    }
+
+    /// Stable FNV-1a digest of the entry set — folded into
+    /// [`crate::simulator::TuneKey`] so cached tune results keyed under
+    /// one profile never serve another.
+    pub fn fingerprint(&self) -> u64 {
+        let mut hash = 0xcbf29ce484222325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &byte in bytes {
+                hash ^= byte as u64;
+                hash = hash.wrapping_mul(0x100000001b3);
+            }
+        };
+        for e in &self.entries {
+            eat(&(e.b as u64).to_le_bytes());
+            eat(&(e.d as u64).to_le_bytes());
+            eat(&(e.es as u64).to_le_bytes());
+            eat(&[e.packed as u8]);
+            eat(&e.ns_per_task.to_bits().to_le_bytes());
+        }
+        hash
+    }
+
+    /// Serialize as the `bsvd-profile-v1` calibration artifact.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .set("b", e.b)
+                    .set("d", e.d)
+                    .set("es", e.es)
+                    .set("packed", e.packed)
+                    .set("tasks", e.tasks as i64)
+                    .set("ns_per_task", e.ns_per_task)
+            })
+            .collect();
+        Json::obj()
+            .set("schema", "bsvd-profile-v1")
+            .set("measured", true)
+            .set("entries", Json::Arr(entries))
+    }
+
+    /// Parse a `bsvd-profile-v1` value; wrong schema or a malformed entry
+    /// is an error (absent-or-valid, same policy as the wire protocol).
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        match v.get("schema").and_then(Json::as_str) {
+            Some("bsvd-profile-v1") => {}
+            other => return Err(format!("unsupported profile schema {other:?}")),
+        }
+        let items = v
+            .get("entries")
+            .and_then(Json::as_array)
+            .ok_or("profile has no entries array")?;
+        let mut entries = Vec::with_capacity(items.len());
+        for item in items {
+            let field = |k: &str| item.get(k).ok_or_else(|| format!("entry missing {k:?}"));
+            entries.push(ProfileEntry {
+                b: field("b")?.as_usize().ok_or("bad b")?,
+                d: field("d")?.as_usize().ok_or("bad d")?,
+                es: field("es")?.as_usize().ok_or("bad es")?,
+                packed: field("packed")?.as_bool().ok_or("bad packed")?,
+                tasks: field("tasks")?.as_i64().ok_or("bad tasks")? as u64,
+                ns_per_task: field("ns_per_task")?.as_f64().ok_or("bad ns_per_task")?,
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load a calibration JSON from disk.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("cannot read {path:?}: {e}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// The profile named by `BSVD_PROFILE`, loaded once per process. A load
+/// error warns on stderr and calibration stays off — same fail-open
+/// policy as `BSVD_TRACE`.
+pub fn from_env() -> Option<&'static MeasuredProfile> {
+    static LOADED: OnceLock<Option<MeasuredProfile>> = OnceLock::new();
+    LOADED
+        .get_or_init(|| {
+            let path = std::env::var("BSVD_PROFILE").ok()?;
+            match MeasuredProfile::load(&path) {
+                Ok(profile) => Some(profile),
+                Err(e) => {
+                    eprintln!("BSVD_PROFILE ignored: {e}");
+                    None
+                }
+            }
+        })
+        .as_ref()
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Accumulated `(tasks, nanoseconds)` per kernel class while collecting.
+fn samples() -> &'static Mutex<HashMap<(usize, usize, usize, bool), (u64, f64)>> {
+    static SAMPLES: OnceLock<Mutex<HashMap<(usize, usize, usize, bool), (u64, f64)>>> =
+        OnceLock::new();
+    SAMPLES.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// True while a calibration run is collecting — the launch loops consult
+/// this (via [`crate::obs::observing`]) before timing anything.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Start (or restart) collecting: clears prior samples, arms
+/// [`record_sample`].
+pub fn begin() {
+    samples().lock().unwrap().clear();
+    ACTIVE.store(true, Ordering::Relaxed);
+}
+
+/// Attribute `ns` nanoseconds over `tasks` cycle-tasks of one kernel
+/// class. No-op unless a collection is active.
+pub fn record_sample(b: usize, d: usize, es: usize, packed: bool, tasks: u64, ns: f64) {
+    if !active() || tasks == 0 {
+        return;
+    }
+    let mut map = samples().lock().unwrap();
+    let slot = map.entry((b, d, es, packed)).or_insert((0, 0.0));
+    slot.0 += tasks;
+    slot.1 += ns;
+}
+
+/// Stop collecting and fold the samples into a [`MeasuredProfile`]
+/// (entries sorted by `(b, d, es, packed)` for a stable fingerprint).
+pub fn finish() -> MeasuredProfile {
+    ACTIVE.store(false, Ordering::Relaxed);
+    let mut map = samples().lock().unwrap();
+    let mut entries: Vec<ProfileEntry> = map
+        .drain()
+        .map(|((b, d, es, packed), (tasks, ns))| ProfileEntry {
+            b,
+            d,
+            es,
+            packed,
+            tasks,
+            ns_per_task: ns / tasks as f64,
+        })
+        .collect();
+    entries.sort_by_key(|e| (e.b, e.d, e.es, e.packed));
+    MeasuredProfile { entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(b: usize, d: usize, es: usize, packed: bool, ns: f64) -> ProfileEntry {
+        ProfileEntry { b, d, es, packed, tasks: 100, ns_per_task: ns }
+    }
+
+    #[test]
+    fn lookup_prefers_exact_then_scales_to_neighbors() {
+        let p = MeasuredProfile {
+            entries: vec![
+                entry(32, 16, 8, true, 4000.0),
+                entry(32, 16, 8, false, 5000.0),
+                entry(32, 16, 4, true, 2000.0),
+            ],
+        };
+        assert_eq!(p.ns_per_task(32, 16, 8, true), Some(4000.0));
+        assert_eq!(p.ns_per_task(32, 16, 8, false), Some(5000.0));
+        // Missing packedness falls back to the same shape.
+        assert_eq!(p.ns_per_task(32, 16, 4, false), Some(2000.0));
+        // Missing shape scales the nearest same-es entry by the working
+        // window: (b=32, d=32) has (1+64)*33 elems vs (1+48)*17 measured.
+        let want = ((1 + 32 + 32) * 33) as f64;
+        let have = ((1 + 32 + 16) * 17) as f64;
+        assert_eq!(p.ns_per_task(32, 32, 8, true), Some(4000.0 * want / have));
+        // Missing es additionally scales by element size.
+        let p32 = MeasuredProfile { entries: vec![entry(32, 16, 4, true, 2000.0)] };
+        assert_eq!(p32.ns_per_task(32, 16, 8, true), Some(4000.0));
+        // Empty profiles answer nothing.
+        assert_eq!(MeasuredProfile::default().ns_per_task(32, 16, 8, true), None);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_entries_and_fingerprint() {
+        let p = MeasuredProfile {
+            entries: vec![entry(32, 16, 8, true, 4321.5), entry(48, 8, 4, false, 99.25)],
+        };
+        let rendered = p.to_json().render();
+        assert!(rendered.contains("\"schema\":\"bsvd-profile-v1\""), "{rendered}");
+        assert!(rendered.contains("\"measured\":true"), "{rendered}");
+        let back = MeasuredProfile::from_json(&Json::parse(&rendered).unwrap()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.fingerprint(), p.fingerprint());
+        // Different measurements fingerprint differently.
+        let other = MeasuredProfile { entries: vec![entry(32, 16, 8, true, 4321.0)] };
+        assert_ne!(other.fingerprint(), p.fingerprint());
+        assert_ne!(MeasuredProfile::default().fingerprint(), p.fingerprint());
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema_and_malformed_entries() {
+        let wrong = Json::parse("{\"schema\":\"bsvd-bench-v1\",\"entries\":[]}").unwrap();
+        assert!(MeasuredProfile::from_json(&wrong).is_err());
+        let missing =
+            Json::parse("{\"schema\":\"bsvd-profile-v1\",\"entries\":[{\"b\":1}]}").unwrap();
+        assert!(MeasuredProfile::from_json(&missing).is_err());
+    }
+
+    #[test]
+    fn collector_folds_samples_into_averaged_entries() {
+        // b=97 is not a bandwidth any other test executes, so parallel
+        // test threads recording through live launch loops cannot collide
+        // with the class this test asserts on.
+        begin();
+        assert!(active());
+        record_sample(97, 13, 8, true, 10, 10_000.0);
+        record_sample(97, 13, 8, true, 30, 70_000.0);
+        record_sample(97, 13, 8, true, 0, 1.0); // zero tasks: ignored
+        let profile = finish();
+        assert!(!active());
+        let e = profile
+            .entries
+            .iter()
+            .find(|e| (e.b, e.d, e.es, e.packed) == (97, 13, 8, true))
+            .expect("folded entry");
+        assert_eq!(e.tasks, 40);
+        assert_eq!(e.ns_per_task, 2000.0);
+    }
+}

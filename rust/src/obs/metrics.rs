@@ -1,0 +1,435 @@
+//! Unified metrics: log₂-bucketed latency histograms with quantile
+//! derivation, the always-on [`ServiceMetrics`] block the batcher records
+//! into, and the Prometheus-style text exposition that renders the
+//! existing ad-hoc stats surfaces ([`crate::service::ServiceStats`],
+//! per-shard breakdowns, plan-cache hit/miss) onto one naming scheme.
+//!
+//! Recording is lock-free (relaxed atomics, one `fetch_add` per bucket
+//! hit) and cheap enough to stay on unconditionally — same policy as the
+//! existing `WorkerStats` counters. Quantiles are derived at *read* time
+//! from the bucket counts; an empty histogram reports `NaN`, which the
+//! JSON layer renders as `null` ([`crate::util::json`]) and the
+//! Prometheus exposition as the literal `NaN` both formats define.
+
+use crate::service::ServiceStats;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ buckets: bucket `k` holds samples in `[2^k, 2^{k+1})`
+/// nanoseconds, so 64 buckets cover the full `u64` range (584 years).
+pub const BUCKETS: usize = 64;
+
+/// A lock-free latency histogram over log₂-spaced nanosecond buckets.
+///
+/// Bucket `k` counts samples whose value in nanoseconds lies in
+/// `[2^k, 2^{k+1})` (zero clamps to bucket 0), giving exact counts, an
+/// exact sum, and quantiles with at most 2× relative error — the right
+/// trade for latencies spanning microseconds to seconds.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { counts: std::array::from_fn(|_| AtomicU64::new(0)), sum_ns: AtomicU64::new(0) }
+    }
+
+    /// The bucket index for a sample of `ns` nanoseconds: the position of
+    /// its highest set bit (`ns` in `[2^k, 2^{k+1})` → bucket `k`; zero
+    /// clamps to bucket 0).
+    pub fn bucket_index(ns: u64) -> usize {
+        (63 - ns.max(1).leading_zeros()) as usize
+    }
+
+    /// The largest nanosecond value bucket `index` holds
+    /// (`2^{index+1} - 1`, saturating at `u64::MAX` for the last bucket)
+    /// — what [`Histogram::quantile`] reports for samples in it.
+    pub fn bucket_bound(index: usize) -> u64 {
+        if index >= BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << (index + 1)) - 1
+        }
+    }
+
+    /// Record one sample of `ns` nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one sample from a [`std::time::Duration`].
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of all recorded samples, nanoseconds.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Mean sample, nanoseconds (`NaN` when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            f64::NAN
+        } else {
+            self.sum_ns() as f64 / count as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`) in nanoseconds: the upper bound
+    /// of the bucket holding the sample of rank `ceil(q · count)`.
+    /// Returns `NaN` when the histogram is empty — rendered as `null`
+    /// by the JSON layer, the property the satellite round-trip test in
+    /// [`crate::util::json`] locks in.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (index, &count) in counts.iter().enumerate() {
+            seen += count;
+            if seen >= rank {
+                return Self::bucket_bound(index) as f64;
+            }
+        }
+        Self::bucket_bound(BUCKETS - 1) as f64
+    }
+
+    /// Non-empty buckets as `(upper_bound_ns, cumulative_count)` pairs,
+    /// ascending — the exposition's `le` series.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cumulative = 0u64;
+        for (index, count) in self.counts.iter().enumerate() {
+            let count = count.load(Ordering::Relaxed);
+            if count > 0 {
+                cumulative += count;
+                out.push((Self::bucket_bound(index), cumulative));
+            }
+        }
+        out
+    }
+}
+
+/// The service's latency histograms, shared (`Arc`) between the shards
+/// that record and the surfaces that read (`stats`/`metrics` verbs,
+/// [`prometheus`]). One block per service; per-shard attribution stays on
+/// the existing counter breakdown.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    /// Time jobs spent queued before their flush drained them.
+    pub queue_wait: Histogram,
+    /// Merged-plan execution wall time, one sample per flush.
+    pub exec: Histogram,
+}
+
+fn prom_f64(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".into()
+    } else if x.is_infinite() {
+        (if x > 0.0 { "+Inf" } else { "-Inf" }).into()
+    } else {
+        format!("{x}")
+    }
+}
+
+fn counter(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, value: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {}", prom_f64(value));
+}
+
+fn histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} histogram");
+    for (bound_ns, cumulative) in h.cumulative_buckets() {
+        let le = prom_f64(bound_ns as f64 / 1e9);
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cumulative}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum {}", prom_f64(h.sum_ns() as f64 / 1e9));
+    let _ = writeln!(out, "{name}_count {}", h.count());
+    // Derived quantiles under distinct metric names (a histogram and a
+    // summary may not share one family in the exposition format).
+    for (suffix, q) in [("p50", 0.5), ("p99", 0.99)] {
+        let quantile = h.quantile(q) / 1e9;
+        let derived = format!("{name}_{suffix}");
+        gauge(out, &derived, "Derived quantile of the histogram above.", quantile);
+    }
+}
+
+/// Render the service's operational state as Prometheus text exposition
+/// (version 0.0.4): `bsvd_`-prefixed counters and gauges from
+/// [`ServiceStats`], per-shard series labeled `{shard="i"}` whose sums
+/// equal the aggregates (the reconciliation invariant the service tests
+/// lock in), cache counters labeled by store, and the latency histograms
+/// with derived `_p50`/`_p99` gauges.
+pub fn prometheus(stats: &ServiceStats, metrics: &ServiceMetrics) -> String {
+    let mut out = String::new();
+    counter(&mut out, "bsvd_jobs_submitted_total", "Jobs admitted.", stats.jobs_submitted);
+    let rejected = stats.jobs_rejected;
+    counter(&mut out, "bsvd_jobs_rejected_total", "Jobs rejected at admission.", rejected);
+    counter(&mut out, "bsvd_jobs_completed_total", "Jobs completed.", stats.jobs_completed);
+    let failed = stats.jobs_failed;
+    counter(&mut out, "bsvd_jobs_failed_total", "Jobs failed (backend or deadline).", failed);
+    counter(&mut out, "bsvd_batches_total", "Merged-plan flushes executed.", stats.batches);
+    counter(&mut out, "bsvd_launches_total", "Shared launches executed.", stats.launches);
+    counter(&mut out, "bsvd_tasks_total", "Cycle-tasks executed.", stats.tasks);
+    let depth = stats.queue_depth as f64;
+    gauge(&mut out, "bsvd_queue_depth", "Jobs admitted, not yet flushed.", depth);
+    let backlog = stats.backlog_seconds;
+    gauge(&mut out, "bsvd_backlog_seconds", "Modeled seconds of queued work.", backlog);
+    gauge(&mut out, "bsvd_occupancy", "Tasks per offered capacity slot.", stats.occupancy);
+    gauge(&mut out, "bsvd_avg_batch_jobs", "Mean jobs per flush.", stats.avg_batch_jobs);
+    gauge(&mut out, "bsvd_busy_seconds", "Wall time executing merged plans.", stats.busy_seconds);
+    gauge(&mut out, "bsvd_uptime_seconds", "Service uptime.", stats.uptime.as_secs_f64());
+    gauge(
+        &mut out,
+        "bsvd_throughput_jobs_per_second",
+        "Completed jobs per second of uptime.",
+        stats.throughput_jobs_per_s,
+    );
+
+    let cache = &stats.cache;
+    let _ = writeln!(
+        out,
+        "# HELP bsvd_cache_hits_total Plan-cache hits by store.\n\
+         # TYPE bsvd_cache_hits_total counter"
+    );
+    for (store, hits) in
+        [("plan", cache.plan_hits), ("merge", cache.merge_hits), ("tune", cache.tune_hits)]
+    {
+        let _ = writeln!(out, "bsvd_cache_hits_total{{store=\"{store}\"}} {hits}");
+    }
+    let _ = writeln!(
+        out,
+        "# HELP bsvd_cache_misses_total Plan-cache misses by store.\n\
+         # TYPE bsvd_cache_misses_total counter"
+    );
+    for (store, misses) in
+        [("plan", cache.plan_misses), ("merge", cache.merge_misses), ("tune", cache.tune_misses)]
+    {
+        let _ = writeln!(out, "bsvd_cache_misses_total{{store=\"{store}\"}} {misses}");
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP bsvd_shard_jobs_completed_total Jobs completed per shard.\n\
+         # TYPE bsvd_shard_jobs_completed_total counter"
+    );
+    for shard in &stats.shards {
+        let _ = writeln!(
+            out,
+            "bsvd_shard_jobs_completed_total{{shard=\"{}\"}} {}",
+            shard.shard, shard.jobs_completed
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP bsvd_shard_busy_fraction Fraction of uptime each shard spent executing.\n\
+         # TYPE bsvd_shard_busy_fraction gauge"
+    );
+    for shard in &stats.shards {
+        let _ = writeln!(
+            out,
+            "bsvd_shard_busy_fraction{{shard=\"{}\"}} {}",
+            shard.shard,
+            prom_f64(shard.busy_fraction)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP bsvd_shard_queue_depth Jobs queued per shard.\n\
+         # TYPE bsvd_shard_queue_depth gauge"
+    );
+    for shard in &stats.shards {
+        let _ = writeln!(
+            out,
+            "bsvd_shard_queue_depth{{shard=\"{}\"}} {}",
+            shard.shard, shard.queue_depth
+        );
+    }
+
+    histogram(
+        &mut out,
+        "bsvd_queue_wait_seconds",
+        "Time jobs spent queued before their flush.",
+        &metrics.queue_wait,
+    );
+    histogram(
+        &mut out,
+        "bsvd_exec_seconds",
+        "Merged-plan execution wall time per flush.",
+        &metrics.exec,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{CacheStats, ShardStats};
+    use std::time::Duration;
+
+    #[test]
+    fn bucket_index_is_the_floor_log2() {
+        assert_eq!(Histogram::bucket_index(0), 0, "zero clamps into bucket 0");
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 1);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(1000), 9, "1000 ∈ [512, 1024)");
+        assert_eq!(Histogram::bucket_index(1023), 9);
+        assert_eq!(Histogram::bucket_index(1024), 10);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 63);
+    }
+
+    #[test]
+    fn bucket_bounds_are_inclusive_maxima() {
+        assert_eq!(Histogram::bucket_bound(0), 1);
+        assert_eq!(Histogram::bucket_bound(9), 1023);
+        assert_eq!(Histogram::bucket_bound(63), u64::MAX);
+        for ns in [1u64, 7, 1000, 123_456_789] {
+            let index = Histogram::bucket_index(ns);
+            assert!(ns <= Histogram::bucket_bound(index), "{ns}");
+            if index > 0 {
+                assert!(ns > Histogram::bucket_bound(index - 1), "{ns}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_report_exact_bucket_bounds() {
+        let h = Histogram::new();
+        assert!(h.quantile(0.5).is_nan(), "empty histogram has no quantiles");
+        assert!(h.mean_ns().is_nan());
+
+        // 10 samples in bucket 6 ([64, 128)) and 10 in bucket 9
+        // ([512, 1024)): the median lands on the last sample of the lower
+        // bucket, p99 on the last of the upper.
+        for _ in 0..10 {
+            h.record_ns(100);
+        }
+        for _ in 0..10 {
+            h.record_ns(1000);
+        }
+        assert_eq!(h.count(), 20);
+        assert_eq!(h.sum_ns(), 11_000);
+        assert_eq!(h.mean_ns(), 550.0);
+        assert_eq!(h.quantile(0.5), 127.0);
+        assert_eq!(h.quantile(0.99), 1023.0);
+        assert_eq!(h.quantile(0.0), 127.0, "rank clamps to the first sample");
+        assert_eq!(h.quantile(1.0), 1023.0);
+        assert_eq!(h.cumulative_buckets(), vec![(127, 10), (1023, 20)]);
+    }
+
+    #[test]
+    fn durations_record_in_nanoseconds() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(1)); // 1000 ns -> bucket 9
+        assert_eq!(h.quantile(0.5), 1023.0);
+        assert_eq!(h.sum_ns(), 1000);
+    }
+
+    fn stats_fixture() -> ServiceStats {
+        let shard = |index: usize, completed: u64| ShardStats {
+            shard: index,
+            queue_depth: index,
+            backlog_seconds: 0.0,
+            jobs_completed: completed,
+            jobs_failed: 0,
+            batches: completed,
+            launches: completed * 3,
+            tasks: completed * 7,
+            occupancy: 0.5,
+            busy_seconds: 0.25,
+            busy_fraction: 0.25,
+            cache_hits: 1,
+            cache_misses: 1,
+        };
+        ServiceStats {
+            queue_depth: 1,
+            backlog_seconds: 0.0,
+            jobs_submitted: 10,
+            jobs_rejected: 2,
+            jobs_completed: 7,
+            jobs_failed: 1,
+            batches: 7,
+            launches: 21,
+            tasks: 49,
+            occupancy: 0.5,
+            avg_batch_jobs: 1.0,
+            cache: CacheStats { plan_hits: 5, plan_misses: 2, ..CacheStats::default() },
+            busy_seconds: 0.5,
+            uptime: Duration::from_secs(2),
+            throughput_jobs_per_s: 3.5,
+            shards: vec![shard(0, 3), shard(1, 4)],
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_reconciles_and_parses_line_by_line() {
+        let metrics = ServiceMetrics::default();
+        metrics.queue_wait.record_ns(100);
+        metrics.exec.record_ns(1000);
+        let text = prometheus(&stats_fixture(), &metrics);
+        assert!(text.contains("bsvd_jobs_completed_total 7"), "{text}");
+        assert!(text.contains("bsvd_cache_hits_total{store=\"plan\"} 5"), "{text}");
+        assert!(text.contains("bsvd_shard_jobs_completed_total{shard=\"0\"} 3"), "{text}");
+        assert!(text.contains("bsvd_shard_jobs_completed_total{shard=\"1\"} 4"), "{text}");
+        assert!(text.contains("bsvd_queue_wait_seconds_count 1"), "{text}");
+        assert!(text.contains("bsvd_exec_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        // Per-shard series sum back to the aggregate.
+        let series: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("bsvd_shard_jobs_completed_total{"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(series.iter().sum::<u64>(), 7);
+        // Every line is a comment or `name{labels}? value` with a numeric
+        // value Prometheus accepts (including NaN for empty quantiles).
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect(line);
+            assert!(!name.is_empty());
+            assert!(
+                value.parse::<f64>().is_ok() || value == "NaN" || value == "+Inf",
+                "unparseable sample {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_quantiles_render_null_through_the_json_layer() {
+        // The contract the `stats` verb relies on: an idle service's p99
+        // is NaN, which the JSON writer must encode as null, and null
+        // parses back as Json::Null (satellite: non-finite guard).
+        use crate::util::json::Json;
+        let h = Histogram::new();
+        let rendered = Json::obj().set("p99_us", h.quantile(0.99)).render();
+        assert_eq!(rendered, "{\"p99_us\":null}");
+        let parsed = Json::parse(&rendered).unwrap();
+        assert_eq!(parsed.get("p99_us"), Some(&Json::Null));
+    }
+}

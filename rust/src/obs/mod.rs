@@ -1,0 +1,42 @@
+//! Observability: structured tracing, unified metrics, and measured
+//! kernel profiles.
+//!
+//! Three cooperating, dependency-free pieces (see `docs/observability.md`
+//! for the operator-facing guide):
+//!
+//! - [`trace`] — per-job trace ids minted in
+//!   [`crate::client::ReductionRequest`] (or accepted from the caller),
+//!   propagated over the wire and through queue admission → shard
+//!   routing → batcher flush → per-launch backend execution, recorded as
+//!   timestamped span events into a bounded ring-buffer sink with
+//!   JSON-lines and Chrome trace-event export. Enabled via
+//!   `BSVD_TRACE=<path>` or `banded-svd serve --trace`; off by default
+//!   with zero behavior change (one relaxed atomic load per hook).
+//! - [`metrics`] — counters, gauges, and log-bucketed latency histograms
+//!   (p50/p99 derivation) that the existing ad-hoc surfaces
+//!   ([`crate::service::ServiceStats`], per-shard breakdowns, plan-cache
+//!   hit rates) are rendered onto, exposed through the `metrics` wire
+//!   verb and a Prometheus-style text exposition.
+//! - [`calibrate`] — backends time each launch during real execution and
+//!   fold the samples into a [`calibrate::MeasuredProfile`] (per-kernel
+//!   ns/task by stage, element size, packed-vs-inplace) that
+//!   [`crate::simulator::simulate_plan_calibrated`] and
+//!   [`crate::simulator::autotune_for_calibrated`] ingest in place of
+//!   the reasoned model constants. Surfaced as `banded-svd profile
+//!   --measure` and ingested service-side via `BSVD_PROFILE=<path>`.
+
+pub mod calibrate;
+pub mod metrics;
+pub mod trace;
+
+pub use calibrate::{MeasuredProfile, ProfileEntry};
+pub use metrics::{Histogram, ServiceMetrics};
+pub use trace::{TraceEvent, TraceId};
+
+/// True when any backend-side observation hook is live (tracing or
+/// calibration): the launch loops consult this once per run and skip all
+/// timing work when it is false.
+#[inline]
+pub fn observing() -> bool {
+    trace::enabled() || calibrate::active()
+}

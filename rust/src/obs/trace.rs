@@ -1,0 +1,407 @@
+//! Structured per-job tracing for the serving stack.
+//!
+//! A [`TraceId`] is minted client-side in a
+//! [`crate::client::ReductionRequest`] (or accepted from the caller),
+//! rides the wire as an optional proto-compatible field, and every layer
+//! the job passes through — queue admission, shard routing, batcher
+//! flush, per-launch backend execution, response — records a timestamped
+//! [`TraceEvent`] under it. The span vocabulary is fixed: `submit`,
+//! `admit`, `queue_wait`, `flush`, `merge`, `launch[i]`, `respond` (plus
+//! `reject` on the admission error path).
+//!
+//! Events land in a bounded in-process ring buffer
+//! ([`snapshot`] reads it back, for tests and exporters) and, when a
+//! file sink is attached ([`enable_file`] / `BSVD_TRACE=<path>` /
+//! `banded-svd serve --trace`), are appended as JSON lines as they
+//! happen. [`jsonl`] and [`chrome_trace`] render an event slice for
+//! offline tooling — the Chrome trace-event form loads directly into
+//! Perfetto / `chrome://tracing`.
+//!
+//! Tracing is **off by default**: every hook starts with one relaxed
+//! atomic load and does nothing else, so the disabled path costs nothing
+//! and changes no behavior (the client/backend equivalence suites run
+//! with it off and on — results are bitwise identical either way).
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Ring-buffer capacity of the in-process sink; the oldest events are
+/// dropped first once a trace run exceeds it.
+pub const RING_CAPACITY: usize = 65_536;
+
+/// A per-job trace identifier: 64 bits, rendered as 16 lowercase hex
+/// characters on the wire and in every export.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// Mint a fresh id: a process-unique seed (time × pid) mixed with a
+    /// monotone counter through SplitMix64, so ids from concurrent
+    /// clients collide with negligible probability.
+    pub fn mint() -> Self {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        static SEED: OnceLock<u64> = OnceLock::new();
+        let seed = *SEED.get_or_init(|| {
+            let t = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0);
+            t ^ ((std::process::id() as u64) << 32)
+        });
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        Self(splitmix64(seed.wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15))))
+    }
+
+    /// Wire form: exactly 16 lowercase hex characters.
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    /// Parse the wire form; `None` unless the string is exactly 16 hex
+    /// characters (absent-or-valid: callers treat `None` as malformed,
+    /// never as a silent default).
+    pub fn parse_hex(s: &str) -> Option<Self> {
+        if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(Self)
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One timestamped span event in a job's lifecycle.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// The job's trace id — constant across every event of one job,
+    /// client and server side.
+    pub trace: TraceId,
+    /// Server-assigned job id (`0` client-side, before admission).
+    pub job: u64,
+    /// Span name: `submit` | `admit` | `queue_wait` | `flush` | `merge`
+    /// | `launch[i]` | `respond` | `reject`.
+    pub span: String,
+    /// Which process half recorded it: `"client"` or `"server"`.
+    pub side: &'static str,
+    /// Batcher shard that handled the job, where known.
+    pub shard: Option<usize>,
+    /// Microseconds since the process trace epoch (first event).
+    pub ts_us: u64,
+    /// Span duration in microseconds (0 for instantaneous marks).
+    pub dur_us: u64,
+    /// Free-form context (`"n=96 bw=8"`, `"tasks=12"`, …).
+    pub detail: String,
+}
+
+impl TraceEvent {
+    /// Render one event as a JSON object (the JSON-lines record shape).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj()
+            .set("trace", self.trace.to_hex())
+            .set("job", self.job as i64)
+            .set("span", self.span.clone())
+            .set("side", self.side)
+            .set("ts_us", self.ts_us as i64)
+            .set("dur_us", self.dur_us as i64);
+        if let Some(s) = self.shard {
+            obj = obj.set("shard", s);
+        }
+        if !self.detail.is_empty() {
+            obj = obj.set("detail", self.detail.clone());
+        }
+        obj
+    }
+}
+
+struct Sink {
+    ring: VecDeque<TraceEvent>,
+    file: Option<File>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// True when tracing is on. The off path is one relaxed atomic load —
+/// every recording hook checks this first and does nothing else.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn on in-memory capture (ring buffer only, no file). Used by tests
+/// and embedded consumers; additive — an attached file sink stays.
+pub fn enable_capture() {
+    let mut sink = SINK.lock().unwrap();
+    if sink.is_none() {
+        *sink = Some(Sink { ring: VecDeque::new(), file: None });
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn on tracing with a JSON-lines file sink appended at `path` (the
+/// ring buffer records too). One line per event, written as it happens.
+pub fn enable_file(path: &str) -> std::io::Result<()> {
+    let file = OpenOptions::new().create(true).append(true).open(path)?;
+    let mut sink = SINK.lock().unwrap();
+    match sink.as_mut() {
+        Some(s) => s.file = Some(file),
+        None => *sink = Some(Sink { ring: VecDeque::new(), file: Some(file) }),
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Resolve `BSVD_TRACE` once per process: when set to a non-empty path,
+/// tracing comes on with that file sink. Unset (the default) leaves
+/// tracing fully off. Errors opening the path are reported to stderr and
+/// leave tracing off rather than failing the caller.
+pub fn init_from_env() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        if let Ok(path) = std::env::var("BSVD_TRACE") {
+            if !path.is_empty() {
+                if let Err(e) = enable_file(&path) {
+                    eprintln!("warning: BSVD_TRACE={path}: {e}; tracing stays off");
+                }
+            }
+        }
+    });
+}
+
+/// Record one span event. No-op (one atomic load) when tracing is off.
+pub fn event(
+    trace: TraceId,
+    job: u64,
+    span: impl Into<String>,
+    side: &'static str,
+    shard: Option<usize>,
+    dur: Duration,
+    detail: impl Into<String>,
+) {
+    if !enabled() {
+        return;
+    }
+    let ev = TraceEvent {
+        trace,
+        job,
+        span: span.into(),
+        side,
+        shard,
+        ts_us: epoch().elapsed().as_micros() as u64,
+        dur_us: dur.as_micros() as u64,
+        detail: detail.into(),
+    };
+    record(ev);
+}
+
+fn record(ev: TraceEvent) {
+    let mut guard = SINK.lock().unwrap();
+    let sink = guard.get_or_insert_with(|| Sink { ring: VecDeque::new(), file: None });
+    if let Some(f) = sink.file.as_mut() {
+        let _ = writeln!(f, "{}", ev.to_json().render());
+    }
+    if sink.ring.len() >= RING_CAPACITY {
+        sink.ring.pop_front();
+    }
+    sink.ring.push_back(ev);
+}
+
+/// Copy the ring buffer out (oldest first). Tests filter by their own
+/// trace ids, so concurrent traced runs in one process don't interfere.
+pub fn snapshot() -> Vec<TraceEvent> {
+    let guard = SINK.lock().unwrap();
+    guard.as_ref().map(|s| s.ring.iter().cloned().collect()).unwrap_or_default()
+}
+
+// --- launch scope ---------------------------------------------------------
+//
+// Backends execute *merged* plans whose launches carry tasks from several
+// jobs at once, and the `Backend` trait knows nothing about jobs. The
+// batcher therefore pins the jobs of the in-flight batch to its worker
+// thread before calling `execute`; the launch loop (which runs on that
+// same thread) fans each per-launch timing out to every pinned job.
+
+thread_local! {
+    static LAUNCH_SCOPE: RefCell<Vec<(TraceId, u64, Option<usize>)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+/// RAII guard for the thread's launch scope; clears it on drop.
+pub struct LaunchScope(());
+
+/// Pin `(trace, job, shard)` triples to this thread for the duration of
+/// a backend execution: per-launch events recorded by the launch loop
+/// ([`record_launch`]) are attributed to every pinned job. An empty
+/// slice pins nothing (and `record_launch` stays a no-op).
+pub fn launch_scope(jobs: &[(TraceId, u64, Option<usize>)]) -> LaunchScope {
+    LAUNCH_SCOPE.with(|s| {
+        let mut v = s.borrow_mut();
+        v.clear();
+        v.extend_from_slice(jobs);
+    });
+    LaunchScope(())
+}
+
+impl Drop for LaunchScope {
+    fn drop(&mut self) {
+        LAUNCH_SCOPE.with(|s| s.borrow_mut().clear());
+    }
+}
+
+/// Record one executed launch (`launch[i]`, `tasks` tasks, `dur` wall)
+/// against every job pinned by [`launch_scope`] on this thread.
+pub fn record_launch(li: usize, tasks: usize, dur: Duration) {
+    if !enabled() {
+        return;
+    }
+    LAUNCH_SCOPE.with(|s| {
+        for &(trace, job, shard) in s.borrow().iter() {
+            let detail = format!("tasks={tasks}");
+            event(trace, job, format!("launch[{li}]"), "server", shard, dur, detail);
+        }
+    });
+}
+
+// --- exporters ------------------------------------------------------------
+
+/// Render events as JSON lines (one object per line) — the same shape
+/// the live file sink writes.
+pub fn jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json().render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render events in the Chrome trace-event format (complete `"X"`
+/// events), loadable in Perfetto / `chrome://tracing`. Each trace id
+/// becomes one row (`tid`), so a job's span chain reads left to right.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|ev| {
+            let mut args = Json::obj().set("trace", ev.trace.to_hex()).set("side", ev.side);
+            if let Some(s) = ev.shard {
+                args = args.set("shard", s);
+            }
+            if !ev.detail.is_empty() {
+                args = args.set("detail", ev.detail.clone());
+            }
+            Json::obj()
+                .set("name", ev.span.clone())
+                .set("cat", "bsvd")
+                .set("ph", "X")
+                .set("ts", ev.ts_us as i64)
+                .set("dur", ev.dur_us.max(1) as i64)
+                .set("pid", 1)
+                .set("tid", (ev.trace.0 & 0xFFFF_FFFF) as i64)
+                .set("args", args)
+        })
+        .collect();
+    Json::obj().set("traceEvents", Json::Arr(rows)).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_roundtrip_hex_and_reject_malformed() {
+        let id = TraceId(0x0123_4567_89ab_cdef);
+        assert_eq!(id.to_hex(), "0123456789abcdef");
+        assert_eq!(TraceId::parse_hex(&id.to_hex()), Some(id));
+        assert_eq!(TraceId::parse_hex(&TraceId(0).to_hex()), Some(TraceId(0)));
+        for bad in ["", "123", "0123456789abcde", "0123456789abcdefg", "0123456789abcdxy"] {
+            assert_eq!(TraceId::parse_hex(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn minted_ids_are_distinct() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ring_records_and_snapshots_under_capture() {
+        enable_capture();
+        let id = TraceId::mint();
+        event(id, 7, "submit", "client", None, Duration::ZERO, "n=8 bw=2");
+        event(id, 7, "respond", "client", Some(1), Duration::from_micros(5), "");
+        let mine: Vec<TraceEvent> =
+            snapshot().into_iter().filter(|e| e.trace == id).collect();
+        assert_eq!(mine.len(), 2);
+        assert_eq!(mine[0].span, "submit");
+        assert_eq!(mine[0].job, 7);
+        assert_eq!(mine[1].span, "respond");
+        assert_eq!(mine[1].shard, Some(1));
+        assert!(mine[1].ts_us >= mine[0].ts_us);
+    }
+
+    #[test]
+    fn launch_scope_fans_out_and_clears() {
+        enable_capture();
+        let (a, b) = (TraceId::mint(), TraceId::mint());
+        {
+            let _guard = launch_scope(&[(a, 1, Some(0)), (b, 2, Some(0))]);
+            record_launch(3, 12, Duration::from_micros(9));
+        }
+        // Scope dropped: further launches attribute to nobody.
+        record_launch(4, 5, Duration::ZERO);
+        let events = snapshot();
+        let of = |t: TraceId| -> Vec<String> {
+            events.iter().filter(|e| e.trace == t).map(|e| e.span.clone()).collect()
+        };
+        assert_eq!(of(a), vec!["launch[3]"]);
+        assert_eq!(of(b), vec!["launch[3]"]);
+        let launch = events.iter().find(|e| e.trace == a).unwrap();
+        assert_eq!(launch.detail, "tasks=12");
+        assert_eq!(launch.side, "server");
+    }
+
+    #[test]
+    fn exports_are_wellformed_json() {
+        let id = TraceId(0xfeed);
+        let ev = TraceEvent {
+            trace: id,
+            job: 3,
+            span: "flush".into(),
+            side: "server",
+            shard: Some(0),
+            ts_us: 10,
+            dur_us: 2,
+            detail: "batch_jobs=2".into(),
+        };
+        let lines = jsonl(&[ev.clone()]);
+        let parsed = Json::parse(lines.trim()).unwrap();
+        assert_eq!(parsed.get("trace").unwrap().as_str(), Some("000000000000feed"));
+        assert_eq!(parsed.get("span").unwrap().as_str(), Some("flush"));
+        assert_eq!(parsed.get("shard").and_then(Json::as_usize), Some(0));
+
+        let chrome = Json::parse(&chrome_trace(&[ev])).unwrap();
+        let rows = chrome.get("traceEvents").and_then(Json::as_array).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("flush"));
+    }
+}

@@ -28,13 +28,15 @@
 use crate::backend::{Backend, BandStorageMut};
 use crate::banded::dense::Dense;
 use crate::config::ServiceConfig;
+use crate::obs::metrics::ServiceMetrics;
+use crate::obs::trace;
 use crate::pipeline::{accumulate_panels, bidiagonal_singular_values, complete_svd};
 use crate::plan::{LaunchPlan, ReflectorLog};
 use crate::service::cache::{PlanCache, PlanKey};
 use crate::service::queue::{Job, JobQueue, JobResult};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Aggregate counters the worker publishes (relaxed atomics: the `stats`
 /// verb reads a monotone snapshot, not a transaction).
@@ -79,6 +81,8 @@ pub(crate) fn run(
     cache: PlanCache,
     backend: Box<dyn Backend>,
     stats: Arc<WorkerStats>,
+    shard: usize,
+    metrics: Arc<ServiceMetrics>,
 ) {
     let max_coresident = cfg.batch.max_coresident.max(1);
     while queue.wait_job() {
@@ -100,7 +104,7 @@ pub(crate) fn run(
         if jobs.is_empty() {
             continue; // every drained job had an expired deadline
         }
-        flush(&mut jobs, &cfg, &cache, backend.as_ref(), &stats);
+        flush(&mut jobs, &cfg, &cache, backend.as_ref(), &stats, shard, &metrics);
     }
 }
 
@@ -111,6 +115,8 @@ fn flush(
     cache: &PlanCache,
     backend: &dyn Backend,
     stats: &WorkerStats,
+    shard: usize,
+    metrics: &ServiceMetrics,
 ) {
     let capacity = cfg.params.capacity();
     // Solo plans from the cache, in batch order (= merged problem order).
@@ -146,13 +152,34 @@ fn flush(
     stats.cache_misses.fetch_add(misses, Ordering::Relaxed);
 
     // Queue waits end here: everything after is execution time.
-    let waits: Vec<std::time::Duration> = jobs.iter().map(|job| job.enqueued.elapsed()).collect();
+    let waits: Vec<Duration> = jobs.iter().map(|job| job.enqueued.elapsed()).collect();
+    for &wait in &waits {
+        metrics.queue_wait.record(wait);
+    }
+    if trace::enabled() {
+        let batch_jobs = jobs.len();
+        for (job, &wait) in jobs.iter().zip(waits.iter()) {
+            let shape = format!("n={} bw={}", job.input.n(), job.input.bw());
+            trace::event(job.trace, job.id, "queue_wait", "server", Some(shard), wait, shape);
+            let detail = format!("batch_jobs={batch_jobs} hit={merge_hit}");
+            trace::event(job.trace, job.id, "merge", "server", Some(shard), Duration::ZERO, detail);
+        }
+    }
     // One reflector log covers the merged plan when any co-scheduled job
     // wants singular vectors; values-only jobs in the same flush ride
     // along untouched (the log records per-problem arenas, and recording
     // never changes what the kernels write to the bands).
     let mut log =
         jobs.iter().any(|job| job.vectors).then(|| ReflectorLog::for_plan(merged.as_ref()));
+    // Pin this batch's jobs to the worker thread so the backend's launch
+    // loop can attribute per-launch events to every co-scheduled job.
+    let _launch_guard = if trace::enabled() {
+        let pinned: Vec<(trace::TraceId, u64, Option<usize>)> =
+            jobs.iter().map(|job| (job.trace, job.id, Some(shard))).collect();
+        Some(trace::launch_scope(&pinned))
+    } else {
+        None
+    };
     let t_exec = Instant::now();
     let exec = {
         let mut bands: Vec<BandStorageMut<'_>> =
@@ -163,6 +190,8 @@ fn flush(
         }
     };
     let busy = t_exec.elapsed();
+    drop(_launch_guard);
+    metrics.exec.record(busy);
 
     match exec {
         Ok(exec) => {
@@ -205,6 +234,13 @@ fn flush(
                     batch_jobs,
                     queue_wait,
                 };
+                if trace::enabled() {
+                    let detail = format!("batch_jobs={batch_jobs}");
+                    trace::event(job.trace, job.id, "flush", "server", Some(shard), busy, detail);
+                    let out = format!("sv={}", result.sv.len());
+                    let zero = Duration::ZERO;
+                    trace::event(job.trace, job.id, "respond", "server", Some(shard), zero, out);
+                }
                 let _ = job.tx.send(Ok(result));
             }
         }
@@ -214,6 +250,10 @@ fn flush(
                 reason: format!("backend {} failed: {e}", backend.name()),
             };
             for job in jobs.iter() {
+                if trace::enabled() {
+                    let reason = err.to_string();
+                    trace::event(job.trace, job.id, "flush", "server", Some(shard), busy, reason);
+                }
                 let _ = job.tx.send(Err(err.clone()));
             }
         }

@@ -2,8 +2,9 @@
 //!
 //! Plan lowering is deterministic — [`LaunchPlan::for_problem`] is a pure
 //! function of `(n, bw, TuneParams)`, [`LaunchPlan::merge_refs`] of its
-//! parts plus the packing knobs, and [`autotune_for`] of its
-//! [`TuneKey`] — so all three are cacheable without invalidation logic:
+//! parts plus the packing knobs, and [`crate::simulator::autotune_for`]
+//! of its [`TuneKey`] — so all three are cacheable without invalidation
+//! logic:
 //! an entry can never go stale, only cold. The cache therefore amortizes
 //! the per-request lowering/merging/tuning work across the repeated
 //! shapes a serving workload is dominated by (Abdelfattah & Fasi: batch
@@ -27,7 +28,7 @@ use crate::config::{PackingPolicy, TuneParams};
 use crate::plan::LaunchPlan;
 use crate::simulator::hw::GpuArch;
 use crate::simulator::model::BackendCostModel;
-use crate::simulator::{autotune_for, TuneKey, TuneResult};
+use crate::simulator::{autotune_for_calibrated, TuneKey, TuneResult};
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::{Arc, Mutex};
@@ -227,7 +228,12 @@ impl PlanCache {
         (merged, false)
     }
 
-    /// The [`autotune_for`] result for the workload, searched on miss.
+    /// The [`crate::simulator::autotune_for`] result for the workload,
+    /// searched on miss.
+    /// When a measured calibration is active (`BSVD_PROFILE`, see
+    /// [`crate::obs::calibrate::from_env`]), the search runs under the
+    /// calibrated simulator and the entry is keyed by the profile's
+    /// fingerprint — swapping calibrations can never serve a stale tune.
     pub fn tune_for(
         &self,
         arch: &GpuArch,
@@ -236,7 +242,11 @@ impl PlanCache {
         bw: usize,
         backend: &BackendCostModel,
     ) -> TuneResult {
-        let key = TuneKey::new(arch, element_bytes, n, bw, backend);
+        let profile = crate::obs::calibrate::from_env();
+        let mut key = TuneKey::new(arch, element_bytes, n, bw, backend);
+        if let Some(p) = profile {
+            key = key.with_profile_fingerprint(p.fingerprint());
+        }
         {
             let mut inner = self.inner.lock().unwrap();
             let tick = inner.tick();
@@ -246,7 +256,7 @@ impl PlanCache {
             }
             inner.stats.tune_misses += 1;
         }
-        let result = autotune_for(arch, element_bytes, n, bw, backend);
+        let result = autotune_for_calibrated(arch, element_bytes, n, bw, backend, profile);
         let mut inner = self.inner.lock().unwrap();
         let tick = inner.tick();
         inner.tunes.insert(key, result.clone(), tick);
@@ -292,7 +302,7 @@ impl std::fmt::Debug for PlanCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simulator::hw;
+    use crate::simulator::{autotune_for, hw};
 
     fn key(n: usize, bw: usize, es: usize) -> PlanKey {
         PlanKey { n, bw, es, params: TuneParams { tpb: 32, tw: 4, max_blocks: 16 } }

@@ -60,6 +60,8 @@ use crate::backend::cost_model_for;
 use crate::batch::BatchInput;
 use crate::config::ServiceConfig;
 use crate::error::{Error, JobError, Result};
+use crate::obs::metrics::ServiceMetrics;
+use crate::obs::trace::{self, TraceId};
 use crate::simulator::hw::GpuArch;
 use crate::simulator::model::BackendCostModel;
 use crate::simulator::{arch_by_name, simulate_plan_for};
@@ -134,6 +136,7 @@ pub struct Service {
     shards: Vec<Shard>,
     router: Router,
     cache: PlanCache,
+    metrics: Arc<ServiceMetrics>,
     next_id: AtomicU64,
     submitted: AtomicU64,
     rejected: AtomicU64,
@@ -152,8 +155,11 @@ impl Service {
         let cost_model = cost_model_for(cfg.backend)?;
         let cache = PlanCache::new(cfg.cache_cap);
         let quota = Arc::new(QuotaTracker::new(cfg.quota_pending_cap));
+        let metrics = Arc::new(ServiceMetrics::default());
         let shards = (0..cfg.workers)
-            .map(|i| Shard::start(i, &cfg, cache.clone(), Arc::clone(&quota)))
+            .map(|i| {
+                Shard::start(i, &cfg, cache.clone(), Arc::clone(&quota), Arc::clone(&metrics))
+            })
             .collect::<Result<Vec<Shard>>>()?;
         let router = Router::new(cfg.routing);
         Ok(Self {
@@ -163,6 +169,7 @@ impl Service {
             shards,
             router,
             cache,
+            metrics,
             next_id: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -203,7 +210,33 @@ impl Service {
         deadline: Option<Duration>,
         vectors: bool,
     ) -> Result<JobTicket> {
+        self.submit_traced(client_id, quota_class, None, input, priority, deadline, vectors)
+    }
+
+    /// [`Service::submit_as`] carrying an explicit trace id — the server
+    /// path, where the client minted the id and sent it over the wire.
+    /// With `trace: None` a fresh id is minted when tracing is enabled
+    /// ([`crate::obs::trace::enabled`]); when it is off the job carries
+    /// the inert `TraceId(0)` and every hook no-ops.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_traced(
+        &self,
+        client_id: Option<&str>,
+        quota_class: Option<&str>,
+        trace: Option<TraceId>,
+        input: BatchInput,
+        priority: u8,
+        deadline: Option<Duration>,
+        vectors: bool,
+    ) -> Result<JobTicket> {
         let quota_key = quota_class.or(client_id);
+        let trace_id = trace.unwrap_or_else(|| {
+            if trace::enabled() {
+                TraceId::mint()
+            } else {
+                TraceId(0)
+            }
+        });
         let admit = || -> Result<JobTicket> {
             input.validate(&self.cfg.params)?;
             if vectors && input.n() > self.cfg.vectors_cap_n {
@@ -217,13 +250,32 @@ impl Service {
                 }));
             }
             let est_seconds = self.price(&input);
-            let shard = &self.shards[self.router.pick(&self.shards, input.n())];
+            let shard_idx = self.router.pick(&self.shards, input.n());
+            let shard = &self.shards[shard_idx];
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             let (tx, rx) = mpsc::channel();
             let deadline = deadline.map(|d| Instant::now() + d);
-            shard
-                .queue
-                .submit_for(quota_key, id, input, priority, deadline, est_seconds, vectors, tx)?;
+            let detail = if trace::enabled() {
+                let (n, bw) = (input.n(), input.bw());
+                format!("n={n} bw={bw} priority={priority} est_s={est_seconds:.3e}")
+            } else {
+                String::new()
+            };
+            shard.queue.submit_for(
+                quota_key,
+                trace_id,
+                id,
+                input,
+                priority,
+                deadline,
+                est_seconds,
+                vectors,
+                tx,
+            )?;
+            if trace::enabled() {
+                let zero = Duration::ZERO;
+                trace::event(trace_id, id, "admit", "server", Some(shard_idx), zero, detail);
+            }
             Ok(JobTicket { id, rx })
         };
         match admit() {
@@ -233,9 +285,20 @@ impl Service {
             }
             Err(e) => {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
+                if trace::enabled() {
+                    let zero = Duration::ZERO;
+                    trace::event(trace_id, 0, "reject", "server", None, zero, e.to_string());
+                }
                 Err(e)
             }
         }
+    }
+
+    /// The unified metrics registry backing this service's latency
+    /// histograms (queue wait, merged-flush execution). Shared with every
+    /// shard's batcher; see [`crate::obs::metrics`].
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
     }
 
     /// [`Service::submit`] and block for the outcome. Job-level failures
@@ -279,6 +342,11 @@ impl Service {
         let plan = self.cache.plan_for(key);
         simulate_plan_for(&self.arch, key.es, plan.as_ref(), key.params.tpb, &self.cost_model)
             .seconds
+    }
+
+    /// Time since [`Service::start`] returned.
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
     }
 
     /// Operational snapshot (queue, batching, cache, throughput) with a

@@ -22,6 +22,7 @@ use crate::banded::dense::Dense;
 use crate::batch::BatchInput;
 use crate::coordinator::metrics::LaunchMetrics;
 use crate::error::{Error, JobError, Result};
+use crate::obs::trace::TraceId;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -54,6 +55,10 @@ pub struct Job {
     /// [`crate::config::ServiceConfig::vectors_cap_n`] before the job
     /// reaches the queue.
     pub vectors: bool,
+    /// Trace id the job's lifecycle events are recorded under (see
+    /// [`crate::obs::trace`]). `TraceId(0)` when tracing is off — the
+    /// hooks no-op either way.
+    pub trace: TraceId,
     /// Where the outcome is delivered.
     pub tx: Sender<JobOutcome>,
 }
@@ -225,7 +230,7 @@ impl JobQueue {
         est_seconds: f64,
         tx: Sender<JobOutcome>,
     ) -> Result<()> {
-        self.submit_for(None, id, input, priority, deadline, est_seconds, false, tx)
+        self.submit_for(None, TraceId(0), id, input, priority, deadline, est_seconds, false, tx)
     }
 
     /// Admit a job or reject it. Rejection reasons: queue closed, depth at
@@ -237,6 +242,7 @@ impl JobQueue {
     pub fn submit_for(
         &self,
         client: Option<&str>,
+        trace: TraceId,
         id: u64,
         input: BatchInput,
         priority: u8,
@@ -286,6 +292,7 @@ impl JobQueue {
             enqueued: Instant::now(),
             client: client.map(String::from),
             vectors,
+            trace,
             tx,
         };
         state.classes.entry(priority).or_default().push_back(job);
@@ -516,7 +523,7 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(3);
         let mut submit_as = |client: Option<&str>, id: u64| {
             let (tx, _rx) = mpsc::channel::<JobOutcome>();
-            q.submit_for(client, id, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
+            q.submit_for(client, TraceId(0), id, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
         };
         submit_as(Some("tenant-a"), 0).unwrap();
         submit_as(Some("tenant-a"), 1).unwrap();
@@ -539,19 +546,30 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(5);
         let past = Instant::now() - Duration::from_millis(10);
         let (tx, _rx) = mpsc::channel::<JobOutcome>();
-        qa.submit_for(Some("c"), 0, input(24, 3, &mut rng), 0, Some(past), 0.0, false, tx)
-            .unwrap();
+        qa.submit_for(
+            Some("c"),
+            TraceId(0),
+            0,
+            input(24, 3, &mut rng),
+            0,
+            Some(past),
+            0.0,
+            false,
+            tx,
+        )
+        .unwrap();
         // The cap is service-wide: the second queue sees the same budget.
         let (tx, _rx) = mpsc::channel::<JobOutcome>();
         let err = qb
-            .submit_for(Some("c"), 1, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
+            .submit_for(Some("c"), TraceId(0), 1, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
             .unwrap_err();
         assert_eq!(err.as_job().unwrap().kind(), "quota-exceeded");
         // The job expires at flush — the slot frees anyway.
         assert!(qa.pop_batch(16).is_empty());
         assert_eq!(qa.expired_jobs(), 1);
         let (tx, _rx) = mpsc::channel::<JobOutcome>();
-        qb.submit_for(Some("c"), 2, input(24, 3, &mut rng), 0, None, 0.0, false, tx).unwrap();
+        qb.submit_for(Some("c"), TraceId(0), 2, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
+            .unwrap();
     }
 
     #[test]
@@ -560,8 +578,18 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(7);
         for id in 0..8u64 {
             let (tx, _rx) = mpsc::channel::<JobOutcome>();
-            q.submit_for(Some("free"), id, input(24, 3, &mut rng), 0, None, 0.0, false, tx)
-                .unwrap();
+            q.submit_for(
+                Some("free"),
+                TraceId(0),
+                id,
+                input(24, 3, &mut rng),
+                0,
+                None,
+                0.0,
+                false,
+                tx,
+            )
+            .unwrap();
         }
         assert_eq!(q.depth(), 8);
     }

@@ -6,9 +6,15 @@
 //! | verb | request fields | response |
 //! | --- | --- | --- |
 //! | `submit` | `n`, `bw`, `band` (row-major in-band values, see [`wire::band_values`]), optional `precision` (`fp16\|fp32\|fp64`, default `fp64`), `priority` (default 0), `deadline_ms`, `client_id`/`quota_class` (identity for quota accounting), `vectors` (proto ≥ 3: accumulate singular-vector panels), `proto` | `id`, `sv` (descending, f64), `metrics` (launches/tasks/max_parallel/unrolled_launches/bytes), `batch_jobs`, `queue_us`, and — when `vectors` was set — `u`/`vt` (flat row-major n² f64 panels) |
-//! | `stats` | — | queue depth/backlog, job counters, occupancy, mean batch size, cache counters + hit rate, throughput, knobs, per-shard breakdowns |
-//! | `ping` | — | `{"ok":true,"verb":"ping","proto":N}` |
+//! | `stats` | — | queue depth/backlog, job counters, occupancy, mean batch size, cache counters + hit rate, throughput, knobs, per-shard breakdowns, latency quantiles (`latency`: queue-wait/exec p50/p99 µs, `null` while empty) |
+//! | `ping` | — | `{"ok":true,"verb":"ping","proto":N,"accepted":[..],"uptime_s":..,"version":..,"backend":..,"workers":..}` |
+//! | `metrics` | — | `{"ok":true,"verb":"metrics","text":"..."}` — Prometheus text exposition ([`crate::obs::metrics::prometheus`]) |
 //! | `shutdown` | — | acknowledges, then stops accepting and drains the service |
+//!
+//! A `submit` may additionally carry `trace` — the client-minted
+//! [`crate::obs::trace::TraceId`] as exactly 16 hex characters — so the
+//! server records its span events under the same id the client uses
+//! (absent-or-valid: a malformed value is an error, never ignored).
 //!
 //! Versioning: requests *may* carry `proto`
 //! ([`wire::PROTO_VERSION`]). Absent means the pre-versioning wire and
@@ -37,6 +43,7 @@
 use crate::client::wire;
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
+use crate::obs::trace::TraceId;
 use crate::service::Service;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, BufWriter, Write as _};
@@ -78,6 +85,14 @@ fn stats_json(service: &Service) -> Json {
             })
             .collect(),
     );
+    // Latency quantiles from the unified registry. NaN (empty histogram)
+    // renders as `null` through the JSON non-finite guard.
+    let m = service.metrics();
+    let latency = Json::obj()
+        .set("queue_wait_p50_us", m.queue_wait.quantile(0.5) / 1e3)
+        .set("queue_wait_p99_us", m.queue_wait.quantile(0.99) / 1e3)
+        .set("exec_p50_us", m.exec.quantile(0.5) / 1e3)
+        .set("exec_p99_us", m.exec.quantile(0.99) / 1e3);
     let stats = Json::obj()
         .set("queue_depth", s.queue_depth)
         .set("backlog_seconds", s.backlog_seconds)
@@ -100,7 +115,8 @@ fn stats_json(service: &Service) -> Json {
         .set("routing", cfg.routing.name())
         .set("max_coresident", cfg.batch.max_coresident)
         .set("window_us", Json::Int(cfg.window.as_micros() as i64))
-        .set("capacity", cfg.params.capacity());
+        .set("capacity", cfg.params.capacity())
+        .set("latency", latency);
     Json::obj()
         .set("ok", true)
         .set("verb", "stats")
@@ -136,19 +152,44 @@ fn respond(service: &Service, line: &str) -> (Json, bool) {
         }
     }
     match request.get("verb").and_then(Json::as_str) {
-        Some("ping") => (
-            Json::obj()
-                .set("ok", true)
-                .set("verb", "ping")
-                .set("proto", wire::PROTO_VERSION as usize),
-            false,
-        ),
+        Some("ping") => (ping_json(service), false),
         Some("stats") => (stats_json(service), false),
+        Some("metrics") => (metrics_json(service), false),
         Some("shutdown") => (Json::obj().set("ok", true).set("verb", "shutdown"), true),
         Some("submit") => (handle_submit(service, &request), false),
         Some(other) => (wire::error_json(format!("unknown verb {other:?}")), false),
         None => (wire::error_json("missing \"verb\""), false),
     }
+}
+
+/// The extended `ping` response: liveness plus provenance — protocol
+/// versions (spoken and accepted), uptime, crate version, backend kind,
+/// and worker count — so a client can identify what it reached before
+/// submitting anything.
+fn ping_json(service: &Service) -> Json {
+    let cfg = service.config();
+    let accepted =
+        Json::Arr(wire::PROTO_ACCEPTED.iter().map(|&v| Json::Int(v as i64)).collect());
+    Json::obj()
+        .set("ok", true)
+        .set("verb", "ping")
+        .set("proto", wire::PROTO_VERSION as usize)
+        .set("accepted", accepted)
+        .set("uptime_s", service.uptime().as_secs_f64())
+        .set("version", env!("CARGO_PKG_VERSION"))
+        .set("backend", cfg.backend.name())
+        .set("workers", cfg.workers)
+}
+
+/// The `metrics` verb: the Prometheus text exposition riding one JSON
+/// response (`text`), so the same single-line framing serves scrapes.
+fn metrics_json(service: &Service) -> Json {
+    let text = crate::obs::metrics::prometheus(&service.stats(), service.metrics());
+    Json::obj()
+        .set("ok", true)
+        .set("verb", "metrics")
+        .set("proto", wire::PROTO_VERSION as usize)
+        .set("text", text)
 }
 
 /// Render an [`Error`] as the wire error response: job-level failures
@@ -192,6 +233,15 @@ fn handle_submit(service: &Service, request: &Json) -> Json {
             None => return wire::error_json("vectors must be a boolean"),
         },
     };
+    // Client-minted trace id (see `crate::obs::trace`): exactly 16 hex
+    // characters when present. Same absent-or-valid rule.
+    let trace = match request.get("trace") {
+        None => None,
+        Some(v) => match v.as_str().and_then(TraceId::parse_hex) {
+            Some(t) => Some(t),
+            None => return wire::error_json("trace must be exactly 16 hex characters"),
+        },
+    };
     // Identity rides the request for quota accounting; same
     // absent-or-valid rule as the fields above.
     let identity = |key: &str| match request.get(key) {
@@ -224,14 +274,18 @@ fn handle_submit(service: &Service, request: &Json) -> Json {
         Ok(input) => input,
         Err(e) => return error_response(&e),
     };
-    match service.submit_wait_as(
-        client_id.as_deref(),
-        quota_class.as_deref(),
-        input,
-        priority,
-        deadline,
-        vectors,
-    ) {
+    let outcome = service
+        .submit_traced(
+            client_id.as_deref(),
+            quota_class.as_deref(),
+            trace,
+            input,
+            priority,
+            deadline,
+            vectors,
+        )
+        .and_then(|ticket| ticket.wait().map_err(Error::Job));
+    match outcome {
         Ok(result) => wire::result_json(&result),
         Err(e) => error_response(&e),
     }
@@ -444,6 +498,51 @@ mod tests {
     }
 
     #[test]
+    fn ping_reports_uptime_and_build_provenance() {
+        let service = Service::start(cfg()).unwrap();
+        let (pong, _) = respond(&service, "{\"verb\":\"ping\"}");
+        assert!(pong.get("uptime_s").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert_eq!(
+            pong.get("version").and_then(Json::as_str),
+            Some(env!("CARGO_PKG_VERSION"))
+        );
+        assert_eq!(pong.get("backend").and_then(Json::as_str), Some("sequential"));
+        assert_eq!(pong.get("workers").and_then(Json::as_usize), Some(1));
+        let accepted: Vec<usize> = pong
+            .get("accepted")
+            .and_then(Json::as_array)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        for proto in wire::PROTO_ACCEPTED {
+            assert!(accepted.contains(&(proto as usize)), "{accepted:?}");
+        }
+    }
+
+    #[test]
+    fn metrics_verb_serves_prometheus_text() {
+        let service = Service::start(cfg()).unwrap();
+        let (r, stop) = respond(&service, "{\"verb\":\"metrics\"}");
+        assert!(!stop);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{}", r.render());
+        let text = r.get("text").and_then(Json::as_str).unwrap();
+        assert!(text.contains("bsvd_jobs_submitted_total"), "{text}");
+        assert!(text.contains("bsvd_queue_wait_seconds_count"), "{text}");
+        assert!(text.contains("bsvd_exec_seconds_bucket{le=\"+Inf\"}"), "{text}");
+    }
+
+    #[test]
+    fn stats_reports_latency_quantiles_null_while_idle() {
+        let service = Service::start(cfg()).unwrap();
+        let (response, _) = respond(&service, "{\"verb\":\"stats\"}");
+        let latency = response.get("stats").and_then(|s| s.get("latency")).unwrap();
+        // No job has flushed: every quantile is NaN, encoded as null.
+        assert_eq!(latency.get("queue_wait_p50_us"), Some(&Json::Null));
+        assert_eq!(latency.get("exec_p99_us"), Some(&Json::Null));
+    }
+
+    #[test]
     fn mismatched_proto_is_rejected_but_absent_proto_is_legacy() {
         let service = Service::start(cfg()).unwrap();
         // Future (or garbage) versions are refused outright...
@@ -541,6 +640,7 @@ mod tests {
             None,
             RequestIdentity::default(),
             true,
+            None,
         );
         let (response, _) = respond(&service, &line);
         assert_eq!(response.get("ok").and_then(Json::as_bool), Some(true), "{response:?}");
@@ -582,6 +682,8 @@ mod tests {
             "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"priority\":\"hi\"}",
             "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"deadline_ms\":\"100\"}",
             "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"vectors\":\"yes\"}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"trace\":\"xyz\"}",
+            "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"trace\":7}",
         ] {
             let (r, _) = respond(&service, bad);
             assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{bad}");

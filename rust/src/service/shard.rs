@@ -23,6 +23,7 @@
 use crate::backend::for_kind;
 use crate::config::{ServiceConfig, ShardRouting};
 use crate::error::{Error, Result};
+use crate::obs::metrics::ServiceMetrics;
 use crate::service::batcher::{self, WorkerStats};
 use crate::service::cache::PlanCache;
 use crate::service::queue::{JobQueue, QuotaTracker};
@@ -95,6 +96,7 @@ impl Shard {
         cfg: &ServiceConfig,
         cache: PlanCache,
         quota: Arc<QuotaTracker>,
+        metrics: Arc<ServiceMetrics>,
     ) -> Result<Self> {
         let queue = Arc::new(JobQueue::with_quota(cfg.queue_cap, cfg.backlog_cap_s, quota));
         let stats = Arc::new(WorkerStats::default());
@@ -107,7 +109,7 @@ impl Shard {
                 .spawn(move || {
                     let backend = for_kind(cfg.backend, cfg.threads)
                         .expect("backend kind validated by cost_model_for at start");
-                    batcher::run(queue, cfg, cache, backend, stats);
+                    batcher::run(queue, cfg, cache, backend, stats, index, metrics);
                 })
                 .map_err(Error::Io)?
         };
@@ -233,8 +235,12 @@ mod tests {
         let cfg = cfg();
         let cache = PlanCache::new(16);
         let quota = Arc::new(QuotaTracker::new(0));
+        let metrics = Arc::new(ServiceMetrics::default());
         (0..count)
-            .map(|i| Shard::start(i, &cfg, cache.clone(), Arc::clone(&quota)).unwrap())
+            .map(|i| {
+                Shard::start(i, &cfg, cache.clone(), Arc::clone(&quota), Arc::clone(&metrics))
+                    .unwrap()
+            })
             .collect()
     }
 

@@ -9,8 +9,9 @@
 //! cites [93].
 
 use crate::config::TuneParams;
+use crate::obs::calibrate::MeasuredProfile;
 use crate::simulator::hw::GpuArch;
-use crate::simulator::model::{simulate_reduction_for, BackendCostModel};
+use crate::simulator::model::{simulate_reduction_calibrated, BackendCostModel};
 
 /// Result of a tuning run.
 #[derive(Clone, Debug)]
@@ -37,6 +38,11 @@ pub struct TuneKey {
     dispatch_bits: u64,
     element_size: Option<usize>,
     staged_bits: u64,
+    /// [`MeasuredProfile::fingerprint`] of the calibration the search ran
+    /// under, or 0 for the uncalibrated (reasoned-model) search — so a
+    /// cached result tuned against one machine's measurements never
+    /// serves a different profile (or the profile-free search).
+    profile_bits: u64,
 }
 
 impl TuneKey {
@@ -55,7 +61,14 @@ impl TuneKey {
             dispatch_bits: backend.dispatch_overhead_s.to_bits(),
             element_size: backend.element_size,
             staged_bits: backend.staged_bytes_per_elem.to_bits(),
+            profile_bits: 0,
         }
+    }
+
+    /// Key the search under a measured profile's fingerprint
+    /// ([`MeasuredProfile::fingerprint`]).
+    pub fn with_profile_fingerprint(self, fingerprint: u64) -> Self {
+        Self { profile_bits: fingerprint, ..self }
     }
 }
 
@@ -93,10 +106,27 @@ pub fn autotune_for(
     bw: usize,
     backend: &BackendCostModel,
 ) -> TuneResult {
+    autotune_for_calibrated(arch, element_bytes, n, bw, backend, None)
+}
+
+/// [`autotune_for`] under an optional [`MeasuredProfile`]: every
+/// candidate is costed by [`simulate_reduction_calibrated`], so measured
+/// per-kernel ns/task — not the reasoned analytical constants — decides
+/// the optimum when a calibration is supplied. With `None` this *is*
+/// `autotune_for`. Callers caching results must key them with
+/// [`TuneKey::with_profile_fingerprint`].
+pub fn autotune_for_calibrated(
+    arch: &GpuArch,
+    element_bytes: usize,
+    n: usize,
+    bw: usize,
+    backend: &BackendCostModel,
+    profile: Option<&MeasuredProfile>,
+) -> TuneResult {
     let mut evaluated = 0;
     let mut eval = |p: TuneParams| -> f64 {
         evaluated += 1;
-        simulate_reduction_for(arch, element_bytes, n, bw, &p, backend).seconds
+        simulate_reduction_calibrated(arch, element_bytes, n, bw, &p, backend, profile).seconds
     };
 
     let tpb_grid = [8usize, 16, 32, 64, 128];
@@ -154,7 +184,7 @@ pub fn autotune_for(
 mod tests {
     use super::*;
     use crate::simulator::hw;
-    use crate::simulator::model::simulate_reduction;
+    use crate::simulator::model::{simulate_reduction, simulate_reduction_for};
 
     #[test]
     fn heuristic_matches_paper_cache_line_rule() {
@@ -218,6 +248,47 @@ mod tests {
             TuneKey::new(&hw::H100, 4, 1024, 32, &BackendCostModel::pjrt()),
             TuneKey::new(&hw::H100, 4, 1024, 32, &BackendCostModel::pjrt_tile_streaming())
         );
+        // A measured-profile fingerprint is part of the key identity.
+        assert_ne!(a, a.with_profile_fingerprint(0xDEAD_BEEF));
+        assert_eq!(a.with_profile_fingerprint(7), a.with_profile_fingerprint(7));
+        assert_eq!(a, a.with_profile_fingerprint(0), "no profile keys as zero");
+    }
+
+    #[test]
+    fn measured_profile_overrides_the_reasoned_tilewidth_optimum() {
+        // The acceptance property: feeding the tuner a measured profile
+        // that contradicts the reasoned constants changes its output.
+        // The reasoned model tunes fp32 at the sweep size to the
+        // cache-line tilewidth (tw=32, locked in by
+        // `autotune_finds_cache_line_tilewidth_at_scale`); a profile in
+        // which narrow-tile kernels measured orders of magnitude cheaper
+        // per task must drag the optimum off that point.
+        use crate::obs::calibrate::{MeasuredProfile, ProfileEntry};
+        let entry = |d: usize, packed: bool, ns: f64| ProfileEntry {
+            b: 128,
+            d,
+            es: 4,
+            packed,
+            tasks: 1000,
+            ns_per_task: ns,
+        };
+        let contradicting = MeasuredProfile {
+            entries: vec![entry(4, false, 10.0), entry(32, true, 100_000.0)],
+        };
+        let native = BackendCostModel::native();
+        let calibrated =
+            autotune_for_calibrated(&hw::H100, 4, 65536, 128, &native, Some(&contradicting));
+        assert!(
+            calibrated.params.tw <= 8,
+            "measured profile should pull the tilewidth below the \
+             reasoned cache-line optimum of 32: {calibrated:?}"
+        );
+        assert!(calibrated.evaluated > 50);
+        // And the degenerate calibration (None) is exactly autotune_for.
+        let plain = autotune_for(&hw::H100, 4, 16384, 64, &native);
+        let none = autotune_for_calibrated(&hw::H100, 4, 16384, 64, &native, None);
+        assert_eq!(plain.params, none.params);
+        assert_eq!(plain.modeled_seconds, none.modeled_seconds);
     }
 
     #[test]

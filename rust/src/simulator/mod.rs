@@ -21,11 +21,16 @@ pub mod model;
 pub mod occupancy;
 pub mod profile;
 
-pub use autotune::{autotune, autotune_for, heuristic_params, TuneKey, TuneResult};
+pub use autotune::{
+    autotune, autotune_for, autotune_for_calibrated, heuristic_params, TuneKey, TuneResult,
+};
 pub use hw::{all_archs, arch_by_name, GpuArch};
 pub use model::{
-    launch_cost, simulate_plan, simulate_plan_for, simulate_reduction, simulate_reduction_for,
-    simulate_stage, BackendCostModel, LaunchCost, SimReport,
+    launch_cost, simulate_plan, simulate_plan_calibrated, simulate_plan_for, simulate_reduction,
+    simulate_reduction_calibrated, simulate_reduction_for, simulate_stage, BackendCostModel,
+    LaunchCost, SimReport,
 };
 pub use occupancy::{full_occupancy_n, occupancy_fraction, table1};
-pub use profile::{profile_geam_reference, profile_kernel, ProfileMetrics};
+pub use profile::{
+    profile_geam_reference, profile_kernel, profile_kernel_calibrated, ProfileMetrics,
+};

@@ -21,8 +21,10 @@
 //!   term) + launch overhead; a reduction sums over the launch schedule
 //!   of the stage plan (closed forms, no numerics).
 
+use crate::bulge::cycle::stage_uses_packed;
 use crate::bulge::schedule::Stage;
 use crate::config::TuneParams;
+use crate::obs::calibrate::MeasuredProfile;
 use crate::plan::{slot_bytes, LaunchPlan};
 use crate::simulator::hw::GpuArch;
 
@@ -336,6 +338,25 @@ pub fn simulate_plan_for(
     tpb: usize,
     backend: &BackendCostModel,
 ) -> SimReport {
+    simulate_plan_calibrated(arch, es, plan, tpb, backend, None)
+}
+
+/// [`simulate_plan_for`] with an optional [`MeasuredProfile`]: when a
+/// profile is present, each slot's busy time comes from the *measured*
+/// ns-per-task of its kernel class (`(stage.b, stage.d, element size,
+/// packed-vs-inplace)`, with the profile's nearest-neighbor fallback)
+/// instead of the analytical terms, while launch overheads, dispatch
+/// costs, staging, and all traffic accounting stay modeled — measurement
+/// replaces exactly the constants it measured, nothing else.
+/// `simulate_plan_calibrated(.., None)` ≡ `simulate_plan_for(..)`.
+pub fn simulate_plan_calibrated(
+    arch: &GpuArch,
+    es: usize,
+    plan: &LaunchPlan,
+    tpb: usize,
+    backend: &BackendCostModel,
+    profile: Option<&MeasuredProfile>,
+) -> SimReport {
     let es = backend.element_size.unwrap_or(es);
     let mut report = SimReport::default();
     let overhead = arch.launch_overhead_s();
@@ -359,7 +380,13 @@ pub fn simulate_plan_for(
                         backend,
                     )
                 });
-            busy += cost.seconds - overhead;
+            let measured = profile.and_then(|p| {
+                p.ns_per_task(stage.b, stage.d, es, stage_uses_packed(stage))
+            });
+            busy += match measured {
+                Some(ns_per_task) => slot.count as f64 * ns_per_task * 1e-9,
+                None => cost.seconds - overhead,
+            };
             report.dram_bytes += cost.dram_bytes;
             report.l2_bytes += cost.l2_bytes;
             report.l1_bytes += cost.l1_bytes;
@@ -419,6 +446,28 @@ pub fn simulate_reduction_for(
     backend: &BackendCostModel,
 ) -> SimReport {
     simulate_plan_for(arch, es, &LaunchPlan::for_problem(n, bw, params), params.tpb, backend)
+}
+
+/// [`simulate_reduction_for`] under an optional [`MeasuredProfile`] —
+/// the calibrated entry point [`crate::simulator::autotune_for_calibrated`]
+/// searches with.
+pub fn simulate_reduction_calibrated(
+    arch: &GpuArch,
+    es: usize,
+    n: usize,
+    bw: usize,
+    params: &TuneParams,
+    backend: &BackendCostModel,
+    profile: Option<&MeasuredProfile>,
+) -> SimReport {
+    simulate_plan_calibrated(
+        arch,
+        es,
+        &LaunchPlan::for_problem(n, bw, params),
+        params.tpb,
+        backend,
+        profile,
+    )
 }
 
 #[cfg(test)]
@@ -611,5 +660,48 @@ mod tests {
         for (li, &t) in via_plan.per_launch.iter().enumerate() {
             assert_eq!(t as usize, plan.launch_tasks(li));
         }
+    }
+
+    #[test]
+    fn measured_profile_replaces_busy_time_but_not_traffic() {
+        use crate::obs::calibrate::ProfileEntry;
+        let p = params(32, 4, 16);
+        let plan = LaunchPlan::for_problem(256, 8, &p);
+        let native = BackendCostModel::native();
+        let modeled = simulate_plan_for(&hw::H100, 8, &plan, 32, &native);
+        // No profile: bit-identical to the modeled path.
+        let none = simulate_plan_calibrated(&hw::H100, 8, &plan, 32, &native, None);
+        assert_eq!(none.seconds, modeled.seconds);
+        assert_eq!(none.algo_bytes, modeled.algo_bytes);
+        // A deliberately slow measured kernel (1 ms/task) dominates the
+        // schedule: busy time follows the measurement...
+        let slow = MeasuredProfile {
+            entries: vec![ProfileEntry {
+                b: 8,
+                d: 4,
+                es: 8,
+                packed: false,
+                tasks: 100,
+                ns_per_task: 1e6,
+            }],
+        };
+        let calibrated =
+            simulate_plan_calibrated(&hw::H100, 8, &plan, 32, &native, Some(&slow));
+        assert!(
+            calibrated.seconds > 10.0 * modeled.seconds,
+            "{} vs {}",
+            calibrated.seconds,
+            modeled.seconds
+        );
+        // ...while launch structure and traffic accounting stay modeled.
+        assert_eq!(calibrated.launches, modeled.launches);
+        assert_eq!(calibrated.per_launch, modeled.per_launch);
+        assert_eq!(calibrated.algo_bytes, modeled.algo_bytes);
+        assert_eq!(calibrated.dram_bytes, modeled.dram_bytes);
+        // An empty profile answers nothing and falls back to the model.
+        let empty = MeasuredProfile::default();
+        let fallback =
+            simulate_plan_calibrated(&hw::H100, 8, &plan, 32, &native, Some(&empty));
+        assert_eq!(fallback.seconds, modeled.seconds);
     }
 }

@@ -6,7 +6,9 @@
 //! Also models the CUBLAS `geam` (B = A + Aᵀ) streaming reference the
 //! paper profiles for comparison.
 
+use crate::bulge::cycle::stage_uses_packed;
 use crate::bulge::schedule::Stage;
+use crate::obs::calibrate::MeasuredProfile;
 use crate::simulator::hw::GpuArch;
 use crate::simulator::model::launch_cost;
 
@@ -35,11 +37,35 @@ pub fn profile_kernel(
     max_blocks: usize,
     blocks: usize,
 ) -> ProfileMetrics {
+    profile_kernel_calibrated(arch, es, stage, tpb, max_blocks, blocks, None)
+}
+
+/// [`profile_kernel`] with an optional [`MeasuredProfile`]: when the
+/// launch's kernel class was measured, the busy time (and so every
+/// achieved-throughput percentage) is derived from the *measured*
+/// ns/task instead of the analytical launch cost — byte and flop counts
+/// stay algorithmic, exactly as NSight reports measured time against
+/// known traffic. `profile_kernel_calibrated(.., None)` ≡
+/// [`profile_kernel`].
+#[allow(clippy::too_many_arguments)]
+pub fn profile_kernel_calibrated(
+    arch: &GpuArch,
+    es: usize,
+    stage: &Stage,
+    tpb: usize,
+    max_blocks: usize,
+    blocks: usize,
+    measured: Option<&MeasuredProfile>,
+) -> ProfileMetrics {
     let cost = launch_cost(arch, es, stage, tpb, max_blocks, blocks);
     // Achieved rates come from the modeled launch time (occupancy-driven
-    // bandwidth efficiency is already folded into the cost).
-    let busy = (cost.seconds - arch.launch_overhead_s()).max(1e-9);
-    let time_us = cost.seconds * 1e6;
+    // bandwidth efficiency is already folded into the cost) — or from the
+    // measured per-task time when a calibration covers this kernel class.
+    let measured_busy = measured
+        .and_then(|p| p.ns_per_task(stage.b, stage.d, es, stage_uses_packed(stage)))
+        .map(|ns_per_task| blocks as f64 * ns_per_task * 1e-9);
+    let busy = measured_busy.unwrap_or(cost.seconds - arch.launch_overhead_s()).max(1e-9);
+    let time_us = (busy + arch.launch_overhead_s()) * 1e6;
 
     let dram_pct = 100.0 * (cost.dram_bytes / busy) / arch.dram_peak_bytes_per_s();
     let l1_pct = 100.0 * (cost.l1_bytes / busy) / arch.l1_peak_bytes_per_s();
@@ -179,5 +205,38 @@ mod tests {
         let lo = table3_case(16, 48, 32);
         let hi = table3_case(64, 192, 32);
         assert!(hi.warps_per_sm > lo.warps_per_sm);
+    }
+
+    #[test]
+    fn measured_profile_rescales_achieved_throughput() {
+        use crate::obs::calibrate::{MeasuredProfile, ProfileEntry};
+        let stage = Stage::new(64, 32);
+        let blocks = 32768 / (3 * 64);
+        let modeled = profile_kernel(&hw::RTX4060, 4, &stage, 32, 192, blocks);
+        // None is bit-identical to the uncalibrated entry point.
+        let none = profile_kernel_calibrated(&hw::RTX4060, 4, &stage, 32, 192, blocks, None);
+        assert_eq!(none.time_us, modeled.time_us);
+        assert_eq!(none.l1_pct, modeled.l1_pct);
+        // A kernel measured 10× slower than the model halves-and-more
+        // every achieved-throughput percentage: same traffic over more
+        // time.
+        let modeled_busy_ns =
+            (modeled.time_us - hw::RTX4060.launch_overhead_s() * 1e6) * 1e3;
+        let slow = MeasuredProfile {
+            entries: vec![ProfileEntry {
+                b: 64,
+                d: 32,
+                es: 4,
+                packed: true,
+                tasks: blocks as u64,
+                ns_per_task: 10.0 * modeled_busy_ns / blocks as f64,
+            }],
+        };
+        let calibrated =
+            profile_kernel_calibrated(&hw::RTX4060, 4, &stage, 32, 192, blocks, Some(&slow));
+        assert!(calibrated.time_us > 5.0 * modeled.time_us);
+        assert!(calibrated.l1_pct < modeled.l1_pct / 5.0);
+        assert!(calibrated.dram_pct < modeled.dram_pct / 5.0);
+        assert_eq!(calibrated.bound_by, modeled.bound_by, "bound label stays modeled");
     }
 }

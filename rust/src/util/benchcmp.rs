@@ -144,6 +144,23 @@ pub fn collect_experiments(dir: &Path) -> Vec<Metric> {
             out.push(Metric::new("service/jobs_per_s", best, "jobs/s", Direction::HigherIsBetter));
         }
     }
+    // A `banded-svd profile --measure` artifact dropped in the same
+    // directory folds into the snapshot as one measured ns/task metric
+    // per kernel class, so calibration drift gates like any other perf
+    // number.
+    if let Some(j) = read_json(&dir.join("profile_calibration.json")) {
+        if let Ok(profile) = crate::obs::MeasuredProfile::from_json(&j) {
+            for e in &profile.entries {
+                let variant = if e.packed { "packed" } else { "inplace" };
+                out.push(Metric::new(
+                    format!("calibrated/cycle_b{}_d{}_es{}_{variant}_ns", e.b, e.d, e.es),
+                    e.ns_per_task,
+                    "ns/task",
+                    Direction::LowerIsBetter,
+                ));
+            }
+        }
+    }
     out
 }
 
@@ -359,5 +376,30 @@ mod tests {
         assert_eq!(find("batch/problems_per_s"), Some(900.0), "best row wins");
         // service_throughput.json absent: simply no service metric.
         assert!(find("service/jobs_per_s").is_none());
+    }
+
+    #[test]
+    fn collect_folds_a_measured_calibration_profile() {
+        use crate::obs::calibrate::{MeasuredProfile, ProfileEntry};
+        let dir = std::env::temp_dir().join(format!("bsvd-benchcal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let profile = MeasuredProfile {
+            entries: vec![
+                ProfileEntry { b: 16, d: 8, es: 8, packed: true, tasks: 40, ns_per_task: 750.0 },
+                ProfileEntry { b: 16, d: 8, es: 4, packed: false, tasks: 12, ns_per_task: 310.5 },
+            ],
+        };
+        let path = dir.join("profile_calibration.json");
+        std::fs::write(&path, profile.to_json().render()).unwrap();
+
+        let got = collect_experiments(&dir);
+        std::fs::remove_dir_all(&dir).ok();
+        let find = |n: &str| got.iter().find(|m| m.name == n).map(|m| m.value);
+        assert_eq!(find("calibrated/cycle_b16_d8_es8_packed_ns"), Some(750.0));
+        assert_eq!(find("calibrated/cycle_b16_d8_es4_inplace_ns"), Some(310.5));
+        // Calibration latencies gate in the lower-is-better direction.
+        let m = got.iter().find(|m| m.name.starts_with("calibrated/")).unwrap();
+        assert_eq!(m.direction, Direction::LowerIsBetter);
+        assert_eq!(m.unit, "ns/task");
     }
 }

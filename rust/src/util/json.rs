@@ -485,6 +485,24 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_floats_round_trip_as_null() {
+        // JSON has no Inf/NaN, so the render guard encodes them as null
+        // — and a full render→parse round trip lands on `Json::Null`,
+        // never a parse error. The stats verb relies on this: idle
+        // latency quantiles are NaN and must reach clients as null.
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let rendered = Json::Num(x).render();
+            assert_eq!(rendered, "null");
+            assert_eq!(Json::parse(&rendered).unwrap(), Json::Null);
+        }
+        // The guard holds inside containers too.
+        let obj = Json::obj().set("p50", f64::NAN).set("count", 0usize);
+        let back = Json::parse(&obj.render()).unwrap();
+        assert_eq!(back.get("p50"), Some(&Json::Null));
+        assert_eq!(back.get("count").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
     fn parses_scalars_and_containers() {
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));

@@ -1,0 +1,222 @@
+//! End-to-end tracing contract: one trace id covers a job's whole
+//! lifecycle — `submit` (client) → `admit` → `queue_wait` → `merge` →
+//! `flush` → `launch[i]` → `respond` (server) → `respond` (client) —
+//! whether the job ran through the embedded queued service, over the
+//! JSON-lines wire, or across a sharded fleet that lost an endpoint
+//! mid-request. Tests share one process-wide capture ring and filter by
+//! their own trace ids, so they compose under the parallel test runner.
+
+use banded_svd::client::{
+    Client, LocalClient, ReductionRequest, RemoteClient, RouteStrategy, ShardedClient,
+};
+use banded_svd::config::{
+    BackendKind, BatchConfig, PackingPolicy, ServiceConfig, ShardRouting, TuneParams,
+};
+use banded_svd::obs::trace::{self, TraceEvent, TraceId};
+use banded_svd::scalar::ScalarKind;
+use banded_svd::service::Server;
+use banded_svd::util::json::Json;
+use std::time::Duration;
+
+fn params() -> TuneParams {
+    TuneParams { tpb: 32, tw: 4, max_blocks: 24 }
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        params: params(),
+        batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+        backend: BackendKind::Sequential,
+        threads: 1,
+        window: Duration::from_millis(2),
+        queue_cap: 256,
+        backlog_cap_s: 1e9,
+        cache_cap: 32,
+        arch: "H100",
+        workers: 1,
+        routing: ShardRouting::LeastLoaded,
+        quota_pending_cap: 0,
+        vectors_cap_n: banded_svd::config::DEFAULT_VECTORS_CAP_N,
+    }
+}
+
+/// This test binary's events for one trace id, in ring (chronological)
+/// order.
+fn spans_for(id: TraceId) -> Vec<TraceEvent> {
+    trace::snapshot().into_iter().filter(|e| e.trace == id).collect()
+}
+
+fn has_span(events: &[TraceEvent], span: &str, side: &str) -> bool {
+    events.iter().any(|e| e.span == span && e.side == side)
+}
+
+#[test]
+fn queued_jobs_emit_a_complete_span_chain_under_one_trace_id() {
+    trace::enable_capture();
+    let client = LocalClient::queued(service_cfg()).expect("queued client");
+    let id = TraceId::mint();
+    let request = ReductionRequest::new().random(40, 5, ScalarKind::F64, 11).trace(id);
+    let outcome = client.submit_wait(request).expect("reduction");
+    assert_eq!(outcome.problems.len(), 1);
+
+    let events = spans_for(id);
+    for (span, side) in [
+        ("submit", "client"),
+        ("admit", "server"),
+        ("queue_wait", "server"),
+        ("merge", "server"),
+        ("flush", "server"),
+        ("respond", "server"),
+        ("respond", "client"),
+    ] {
+        assert!(has_span(&events, span, side), "missing {span}/{side} in {events:?}");
+    }
+    assert!(
+        events.iter().any(|e| e.side == "server" && e.span.starts_with("launch[")),
+        "no per-launch events attributed to the job: {events:?}"
+    );
+
+    // Every server-side span names the same admitted job, and admission
+    // records which shard took it.
+    let admit = events.iter().find(|e| e.span == "admit").expect("admit event");
+    assert!(admit.job > 0, "admission assigns a nonzero job id");
+    assert!(admit.shard.is_some(), "admission records the routed shard");
+    for e in events.iter().filter(|e| e.side == "server") {
+        assert_eq!(e.job, admit.job, "server span {} names a different job", e.span);
+    }
+
+    // Both exporters render the chain as well-formed JSON.
+    for line in trace::jsonl(&events).lines() {
+        let v = Json::parse(line).expect("jsonl line parses");
+        assert_eq!(v.get("trace").and_then(Json::as_str), Some(id.to_hex()).as_deref());
+        assert!(v.get("span").is_some() && v.get("side").is_some(), "{line}");
+    }
+    let chrome = Json::parse(&trace::chrome_trace(&events)).expect("chrome export parses");
+    let chrome_events = chrome.get("traceEvents").and_then(Json::as_array).expect("traceEvents");
+    assert_eq!(chrome_events.len(), events.len());
+}
+
+#[test]
+fn one_minted_id_spans_every_problem_of_a_request() {
+    trace::enable_capture();
+    let client = LocalClient::queued(service_cfg()).expect("queued client");
+    // No explicit trace id: with tracing live the client mints one per
+    // *request*, and both problems ride it. n=57 is unique to this test,
+    // so the submit events are recognizable in the shared ring.
+    let request = ReductionRequest::new()
+        .random(57, 6, ScalarKind::F64, 21)
+        .random(57, 6, ScalarKind::F32, 22);
+    client.submit_wait(request).expect("reduction");
+
+    let submits: Vec<TraceEvent> = trace::snapshot()
+        .into_iter()
+        .filter(|e| e.span == "submit" && e.side == "client" && e.detail.starts_with("n=57 "))
+        .collect();
+    assert_eq!(submits.len(), 2, "one client submit per problem: {submits:?}");
+    let id = submits[0].trace;
+    assert_ne!(id, TraceId(0), "tracing live mints a real id");
+    assert!(submits.iter().all(|e| e.trace == id), "problems split across trace ids");
+
+    // Two jobs completed under the one id — reconciled server-side.
+    let events = spans_for(id);
+    let mut responded: Vec<u64> = events
+        .iter()
+        .filter(|e| e.span == "respond" && e.side == "server")
+        .map(|e| e.job)
+        .collect();
+    responded.sort_unstable();
+    responded.dedup();
+    assert_eq!(responded.len(), 2, "both jobs respond under the request's id: {events:?}");
+}
+
+#[test]
+fn remote_wire_propagates_the_trace_id_and_reconciles_job_ids() {
+    trace::enable_capture();
+    let server = Server::bind(service_cfg(), "127.0.0.1:0").expect("bind ephemeral");
+    let addr = server.local_addr().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let remote = RemoteClient::connect(&addr).expect("remote client");
+    let id = TraceId::mint();
+    let request = ReductionRequest::new().random(44, 5, ScalarKind::F64, 31).trace(id);
+    remote.submit_wait(request).expect("served reduction");
+
+    // Client and server run in one process here, so one capture ring
+    // holds both sides of the wire: the id the client wrote into the
+    // request line is the id the server's spans carry.
+    let events = spans_for(id);
+    for (span, side) in [
+        ("submit", "client"),
+        ("admit", "server"),
+        ("respond", "server"),
+        ("respond", "client"),
+    ] {
+        assert!(has_span(&events, span, side), "missing {span}/{side} in {events:?}");
+    }
+    let s_respond =
+        events.iter().find(|e| e.span == "respond" && e.side == "server").expect("server respond");
+    let c_respond =
+        events.iter().find(|e| e.span == "respond" && e.side == "client").expect("client respond");
+    assert_eq!(
+        s_respond.job, c_respond.job,
+        "client and server disagree on which job answered: {events:?}"
+    );
+
+    remote.shutdown().expect("shutdown");
+    server_thread.join().expect("server thread").expect("clean shutdown");
+}
+
+#[test]
+fn failover_keeps_one_span_chain_per_request() {
+    trace::enable_capture();
+    let server_a = Server::bind(service_cfg(), "127.0.0.1:0").expect("bind a");
+    let server_b = Server::bind(service_cfg(), "127.0.0.1:0").expect("bind b");
+    let addr_a = server_a.local_addr().to_string();
+    let addr_b = server_b.local_addr().to_string();
+    let thread_a = std::thread::spawn(move || server_a.run());
+    let thread_b = std::thread::spawn(move || server_b.run());
+
+    let sharded =
+        ShardedClient::connect(&[addr_a.as_str(), addr_b.as_str()], RouteStrategy::LeastLoaded)
+            .expect("sharded client");
+    assert_eq!(sharded.healthy(), 2);
+
+    // Kill endpoint A over its own control connection. The sharded
+    // client still holds A's (now dead) socket, so whichever of the two
+    // requests routes there must fail over to B — under the *same*
+    // trace id, because the id is pinned before the failover loop.
+    RemoteClient::connect(&addr_a).expect("control connection").shutdown().expect("ack");
+    thread_a.join().expect("server a thread").expect("clean shutdown");
+
+    let ids = [TraceId::mint(), TraceId::mint()];
+    for (i, &id) in ids.iter().enumerate() {
+        let request =
+            ReductionRequest::new().random(48, 6, ScalarKind::F64, 41 + i as u64).trace(id);
+        sharded.submit_wait(request).expect("failover absorbs the dead endpoint");
+    }
+    assert_eq!(sharded.healthy(), 1, "the dead endpoint must be marked down");
+
+    let mut saw_failover_retry = false;
+    for &id in &ids {
+        let events = spans_for(id);
+        // Exactly one server answered — the job ran once, on the
+        // survivor, never on both endpoints.
+        let responds =
+            events.iter().filter(|e| e.span == "respond" && e.side == "server").count();
+        assert_eq!(responds, 1, "one server respond for {id:?}: {events:?}");
+        assert!(has_span(&events, "respond", "client"), "client respond for {id:?}");
+        // A failed-over request shows >1 client submit attempt, all
+        // under the pinned id (that is the point of pinning).
+        let submits =
+            events.iter().filter(|e| e.span == "submit" && e.side == "client").count();
+        assert!(submits >= 1, "at least the winning attempt: {events:?}");
+        saw_failover_retry |= submits > 1;
+    }
+    assert!(
+        saw_failover_retry,
+        "least-loaded rotation must have routed one request to the dead endpoint first"
+    );
+
+    sharded.shutdown().expect("fleet shutdown");
+    thread_b.join().expect("server b thread").expect("clean shutdown");
+}
