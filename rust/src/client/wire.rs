@@ -39,19 +39,33 @@ use std::time::Duration;
 /// **tolerates requests without a `proto` field** (the PR 5 wire, v1 —
 /// hand-rolled clients keep working) and accepts any version in
 /// [`PROTO_ACCEPTED`] (v3 only *adds* optional fields — `vectors` on
-/// requests, `u`/`vt` on responses — so a v2 line is still a valid v3
-/// conversation); anything else present is rejected. Clients handshake
-/// by pinging first, record the server's advertised version, and refuse
-/// a server whose `ping` response is missing or unsupported with a
-/// typed [`JobError::Unavailable`] instead of a parse failure
-/// downstream. A vectors request against a v2 server fails client-side
-/// the same way: the old server would silently drop the flag, which
-/// must never masquerade as a served answer.
-pub const PROTO_VERSION: u32 = 3;
+/// requests, `u`/`vt` on responses — and v4 only adds an opt-in
+/// transport encoding — the binary band frame below — so a v2 line is
+/// still a valid v4 conversation); anything else present is rejected.
+/// Clients handshake by pinging first, record the server's advertised
+/// version, and refuse a server whose `ping` response is missing or
+/// unsupported with a typed [`JobError::Unavailable`] instead of a
+/// parse failure downstream. A vectors request against a v2 server
+/// fails client-side the same way: the old server would silently drop
+/// the flag, which must never masquerade as a served answer.
+///
+/// v4 adds the **binary band frame**: a `submit` control line may carry
+/// `"band_frame": <count>` *instead of* the `"band"` array, and is then
+/// immediately followed on the stream by a raw length-prefixed frame
+/// ([`encode_band_frame`]) holding the same values bitwise. The control
+/// path (every other field, every response) stays JSON lines; only the
+/// bulk payload changes representation, and only when the client opted
+/// in ([`super::RemoteClient::binary_band_frames`]).
+pub const PROTO_VERSION: u32 = 4;
 
-/// Protocol versions a v3 build accepts from its peer (see the
+/// Protocol versions a v4 build accepts from its peer (see the
 /// compatibility rule on [`PROTO_VERSION`]).
-pub const PROTO_ACCEPTED: [u32; 2] = [2, 3];
+pub const PROTO_ACCEPTED: [u32; 3] = [2, 3, 4];
+
+/// Cap on the value count of one binary band frame (64 MiB of payload)
+/// — the framed analog of the server's line-length budget. Checked
+/// *before* allocating anything sized by the client-supplied prefix.
+pub const MAX_FRAME_VALUES: u64 = 8 * 1024 * 1024;
 
 /// Number of in-band values of an upper-banded `n × n` matrix with `bw`
 /// superdiagonals — the required `band` payload length. Closed form
@@ -129,8 +143,44 @@ pub fn band_from_values(
     })
 }
 
+/// Encode a band payload as the v4 binary frame: a little-endian `u64`
+/// value count followed by the values as little-endian `f64` bit
+/// patterns. Bit patterns, not formatted text — the payload is bitwise
+/// by construction, and ~2.5× smaller than its JSON rendering.
+pub fn encode_band_frame(values: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + values.len() * 8);
+    out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+    for &v in values {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Read one binary band frame — the receiving side of
+/// [`encode_band_frame`]. Reads exactly `8 + 8·count` bytes, so a
+/// well-formed frame leaves the stream aligned on the next JSON line
+/// even when the surrounding control line turns out to be invalid. A
+/// count beyond [`MAX_FRAME_VALUES`] is rejected before any
+/// proportional allocation or read.
+pub fn read_band_frame(r: &mut impl std::io::Read) -> Result<Vec<f64>> {
+    let mut word = [0u8; 8];
+    r.read_exact(&mut word).map_err(Error::Io)?;
+    let count = u64::from_le_bytes(word);
+    if count > MAX_FRAME_VALUES {
+        return Err(Error::Config(format!(
+            "band frame declares {count} values; cap is {MAX_FRAME_VALUES}"
+        )));
+    }
+    let mut values = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        r.read_exact(&mut word).map_err(Error::Io)?;
+        values.push(f64::from_bits(u64::from_le_bytes(word)));
+    }
+    Ok(values)
+}
+
 #[allow(clippy::too_many_arguments)]
-fn submit_json(
+fn submit_head(
     n: usize,
     bw: usize,
     precision: &str,
@@ -139,9 +189,7 @@ fn submit_json(
     identity: RequestIdentity<'_>,
     vectors: bool,
     trace: Option<TraceId>,
-    band: Vec<f64>,
-) -> String {
-    let band: Vec<Json> = band.into_iter().map(Json::Num).collect();
+) -> Json {
     let mut request = Json::obj()
         .set("verb", "submit")
         .set("proto", PROTO_VERSION as usize)
@@ -169,7 +217,25 @@ fn submit_json(
         // the line stays byte-compatible with an untraced client's.
         request = request.set("trace", trace.to_hex());
     }
-    request.set("band", Json::Arr(band)).render()
+    request
+}
+
+#[allow(clippy::too_many_arguments)]
+fn submit_json(
+    n: usize,
+    bw: usize,
+    precision: &str,
+    priority: u8,
+    deadline: Option<Duration>,
+    identity: RequestIdentity<'_>,
+    vectors: bool,
+    trace: Option<TraceId>,
+    band: Vec<f64>,
+) -> String {
+    let band: Vec<Json> = band.into_iter().map(Json::Num).collect();
+    submit_head(n, bw, precision, priority, deadline, identity, vectors, trace)
+        .set("band", Json::Arr(band))
+        .render()
 }
 
 /// Who a `submit` line is from — the request-owned identity fields
@@ -227,6 +293,41 @@ pub fn submit_request_for_input(
         trace,
         band,
     )
+}
+
+/// Render a `submit` as the v4 framed transport: the JSON control line
+/// (carrying `band_frame` — the declared value count — instead of the
+/// `band` array) plus the binary frame to write immediately after it.
+/// The server cross-checks the declared count against the frame's own
+/// prefix, so a desynchronized client is a protocol error, never a
+/// silently misread payload.
+#[allow(clippy::too_many_arguments)]
+pub fn submit_request_framed(
+    input: &BatchInput,
+    priority: u8,
+    deadline: Option<Duration>,
+    identity: RequestIdentity<'_>,
+    vectors: bool,
+    trace: Option<TraceId>,
+) -> (String, Vec<u8>) {
+    let band = match input {
+        BatchInput::F64 { a, bw } => band_values(a, *bw),
+        BatchInput::F32 { a, bw } => band_values(a, *bw),
+        BatchInput::F16 { a, bw } => band_values(a, *bw),
+    };
+    let line = submit_head(
+        input.n(),
+        input.bw(),
+        input.precision(),
+        priority,
+        deadline,
+        identity,
+        vectors,
+        trace,
+    )
+    .set("band_frame", band.len())
+    .render();
+    (line, encode_band_frame(&band))
 }
 
 fn metrics_json(m: &LaunchMetrics) -> Json {
@@ -444,6 +545,54 @@ mod tests {
         let err = band_from_values(usize::MAX / 2, 3, 1, "fp64", &[1.0]).unwrap_err();
         assert!(t0.elapsed() < Duration::from_secs(1), "shape check not O(1)");
         assert!(err.to_string().contains("values"), "{err}");
+    }
+
+    #[test]
+    fn band_frames_roundtrip_bitwise() {
+        let values = vec![1.5, -0.0, 1e-300, f64::MAX, 2.0f64.sqrt()];
+        let frame = encode_band_frame(&values);
+        assert_eq!(frame.len(), 8 + values.len() * 8);
+        let back = read_band_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(back.len(), values.len());
+        for (got, want) in back.iter().zip(values.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        // An empty frame is valid: just the zero length prefix.
+        let empty = encode_band_frame(&[]);
+        assert_eq!(empty.len(), 8);
+        assert!(read_band_frame(&mut empty.as_slice()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn band_frames_reject_oversized_and_truncated_streams() {
+        // A hostile count is rejected by arithmetic before any
+        // allocation or read proportional to it.
+        let oversized = u64::MAX.to_le_bytes().to_vec();
+        let err = read_band_frame(&mut oversized.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+        // A truncated payload is an I/O error, never a short result.
+        let mut frame = encode_band_frame(&[1.0, 2.0]);
+        frame.truncate(frame.len() - 3);
+        assert!(read_band_frame(&mut frame.as_slice()).is_err());
+    }
+
+    #[test]
+    fn framed_request_carries_the_count_and_the_payload_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let a = random_banded::<f64>(20, 3, 2, &mut rng);
+        let values = band_values(&a, 3);
+        let input = BatchInput::from((a, 3));
+        let (line, frame) =
+            submit_request_framed(&input, 2, None, RequestIdentity::default(), false, None);
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("band_frame").and_then(Json::as_usize), Some(values.len()));
+        assert!(parsed.get("band").is_none(), "framed line must not carry the inline array");
+        assert_eq!(parsed.get("priority").and_then(Json::as_usize), Some(2));
+        let back = read_band_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(back.len(), values.len());
+        for (got, want) in back.iter().zip(values.iter()) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
     }
 
     #[test]

@@ -179,6 +179,7 @@ pub mod coordinator;
 pub mod error;
 pub mod generate;
 pub mod householder;
+pub mod loadgen;
 pub mod obs;
 pub mod pipeline;
 pub mod plan;
@@ -212,6 +213,7 @@ pub mod prelude {
     };
     pub use crate::error::{Error, JobError, Result};
     pub use crate::generate::{dense_with_spectrum, random_banded, Spectrum};
+    pub use crate::loadgen::{ArrivalProcess, ScenarioOptions, Slo, WorkloadMix};
     pub use crate::obs::{MeasuredProfile, TraceId};
     pub use crate::pipeline::{
         bidiagonal_singular_values, dense_to_band, singular_values_3stage, SvdOptions,

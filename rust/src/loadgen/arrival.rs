@@ -1,0 +1,278 @@
+//! Deterministic open-loop arrival processes.
+//!
+//! An arrival process turns `(seed, duration)` into a fixed schedule of
+//! submission instants **before the run starts** — the driver fires each
+//! arrival at its scheduled offset whether or not earlier requests have
+//! completed, which is what makes measured overload real instead of
+//! self-throttled (a closed-loop generator slows down exactly when the
+//! server does, hiding the queue it should be filling).
+//!
+//! Every process is a pure function of its seed: randomness comes from
+//! one [`SplitMix64`] stream seeded explicitly, never from the clock or
+//! any other ambient entropy, so one seed reproduces one schedule
+//! byte-for-byte (property-tested in `rust/tests/loadgen_slo.rs`).
+
+use crate::util::rng::SplitMix64;
+use std::time::Duration;
+
+/// Map a `u64` draw onto `[0, 1)` with 53 uniform mantissa bits.
+fn unit_f64(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// A seeded arrival process — see the module docs for the open-loop
+/// contract. Parsed from the CLI spec grammar in
+/// [`ArrivalProcess::parse`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Evenly spaced arrivals at `rate_hz`.
+    Constant { rate_hz: f64 },
+    /// Poisson arrivals: exponential inter-arrival times with mean
+    /// `1/rate_hz`, drawn from the seeded stream.
+    Poisson { rate_hz: f64 },
+    /// On/off square wave: each `period_s` window spends `duty · period`
+    /// seconds at `burst_hz`, the remainder at `base_hz`.
+    Bursty { base_hz: f64, burst_hz: f64, period_s: f64, duty: f64 },
+    /// Linear ramp from `start_hz` at t=0 to `end_hz` at the end of the
+    /// run (arrivals from the inverted cumulative-rate integral, so the
+    /// instantaneous rate is exact, not stair-stepped).
+    Ramp { start_hz: f64, end_hz: f64 },
+}
+
+impl ArrivalProcess {
+    /// Parse the CLI spec: `constant:RATE`, `poisson:RATE`,
+    /// `bursty:BASE:BURST:PERIOD_S:DUTY`, `ramp:START:END` (all rates in
+    /// arrivals/second).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut parts = spec.split(':');
+        let name = parts.next().unwrap_or("");
+        let nums: Vec<f64> = parts
+            .map(|p| p.parse::<f64>().map_err(|_| format!("bad number {p:?} in {spec:?}")))
+            .collect::<Result<_, _>>()?;
+        let positive = |x: f64, what: &str| {
+            if x > 0.0 && x.is_finite() {
+                Ok(x)
+            } else {
+                Err(format!("{what} must be positive and finite in {spec:?}"))
+            }
+        };
+        match (name, nums.as_slice()) {
+            ("constant", [rate]) => Ok(Self::Constant { rate_hz: positive(*rate, "rate")? }),
+            ("poisson", [rate]) => Ok(Self::Poisson { rate_hz: positive(*rate, "rate")? }),
+            ("bursty", [base, burst, period, duty]) => {
+                if !(0.0..=1.0).contains(duty) {
+                    return Err(format!("duty must be in [0, 1] in {spec:?}"));
+                }
+                if *base < 0.0 || !base.is_finite() {
+                    return Err(format!("base rate must be >= 0 and finite in {spec:?}"));
+                }
+                Ok(Self::Bursty {
+                    base_hz: *base,
+                    burst_hz: positive(*burst, "burst rate")?,
+                    period_s: positive(*period, "period")?,
+                    duty: *duty,
+                })
+            }
+            ("ramp", [start, end]) => Ok(Self::Ramp {
+                start_hz: positive(*start, "start rate")?,
+                end_hz: positive(*end, "end rate")?,
+            }),
+            _ => Err(format!(
+                "unknown arrival process {spec:?}; expected constant:RATE, poisson:RATE, \
+                 bursty:BASE:BURST:PERIOD_S:DUTY, or ramp:START:END"
+            )),
+        }
+    }
+
+    /// The process family name (for reports and labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Constant { .. } => "constant",
+            Self::Poisson { .. } => "poisson",
+            Self::Bursty { .. } => "bursty",
+            Self::Ramp { .. } => "ramp",
+        }
+    }
+
+    /// Mean offered rate over a run, arrivals/second — the denominator of
+    /// achieved-vs-offered throughput in the report.
+    pub fn offered_rate_hz(&self) -> f64 {
+        match self {
+            Self::Constant { rate_hz } | Self::Poisson { rate_hz } => *rate_hz,
+            Self::Bursty { base_hz, burst_hz, duty, .. } => {
+                duty * burst_hz + (1.0 - duty) * base_hz
+            }
+            Self::Ramp { start_hz, end_hz } => 0.5 * (start_hz + end_hz),
+        }
+    }
+
+    /// The full arrival schedule for one run: offsets from the run start,
+    /// strictly non-decreasing, every offset `< duration`. Pure function
+    /// of `(self, seed, duration)`.
+    pub fn schedule(&self, seed: u64, duration: Duration) -> Vec<Duration> {
+        let horizon = duration.as_secs_f64();
+        let mut out = Vec::new();
+        match self {
+            Self::Constant { rate_hz } => {
+                let mut k = 1u64;
+                loop {
+                    let t = k as f64 / rate_hz;
+                    if t >= horizon {
+                        break;
+                    }
+                    out.push(Duration::from_secs_f64(t));
+                    k += 1;
+                }
+            }
+            Self::Poisson { rate_hz } => {
+                let mut rng = SplitMix64::new(seed);
+                let mut t = 0.0f64;
+                loop {
+                    let u = unit_f64(rng.next_u64());
+                    t += -(1.0 - u).ln() / rate_hz;
+                    if t >= horizon {
+                        break;
+                    }
+                    out.push(Duration::from_secs_f64(t));
+                }
+            }
+            Self::Bursty { base_hz, burst_hz, period_s, duty } => {
+                // Walk time, stepping by the inter-arrival gap of the
+                // regime in force at the current instant; a base rate of
+                // zero jumps straight to the next burst window.
+                let mut t = 0.0f64;
+                let on = duty * period_s;
+                loop {
+                    let phase = t.rem_euclid(*period_s);
+                    let rate = if phase < on { *burst_hz } else { *base_hz };
+                    if rate <= 0.0 {
+                        // Off regime with no base traffic: skip to the
+                        // start of the next period's burst window.
+                        t = (t / period_s).floor() * period_s + period_s;
+                        if t >= horizon {
+                            break;
+                        }
+                        continue;
+                    }
+                    t += 1.0 / rate;
+                    if t >= horizon {
+                        break;
+                    }
+                    out.push(Duration::from_secs_f64(t));
+                }
+            }
+            Self::Ramp { start_hz, end_hz } => {
+                // Cumulative arrivals Λ(t) = start·t + (end−start)·t²/2T;
+                // arrival k fires at the t solving Λ(t) = k.
+                let slope = (end_hz - start_hz) / horizon;
+                let mut k = 1u64;
+                loop {
+                    let t = if slope.abs() < 1e-12 {
+                        k as f64 / start_hz
+                    } else {
+                        let disc = start_hz * start_hz + 2.0 * slope * k as f64;
+                        if disc < 0.0 {
+                            break;
+                        }
+                        (-start_hz + disc.sqrt()) / slope
+                    };
+                    if !t.is_finite() || t < 0.0 || t >= horizon {
+                        break;
+                    }
+                    out.push(Duration::from_secs_f64(t));
+                    k += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_reject() {
+        assert_eq!(
+            ArrivalProcess::parse("constant:200").unwrap(),
+            ArrivalProcess::Constant { rate_hz: 200.0 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("poisson:150.5").unwrap(),
+            ArrivalProcess::Poisson { rate_hz: 150.5 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("bursty:50:400:2:0.25").unwrap(),
+            ArrivalProcess::Bursty { base_hz: 50.0, burst_hz: 400.0, period_s: 2.0, duty: 0.25 }
+        );
+        assert_eq!(
+            ArrivalProcess::parse("ramp:10:500").unwrap(),
+            ArrivalProcess::Ramp { start_hz: 10.0, end_hz: 500.0 }
+        );
+        for bad in [
+            "steady:10",
+            "constant",
+            "constant:0",
+            "constant:-5",
+            "poisson:nan",
+            "bursty:1:2:3",
+            "bursty:1:2:3:1.5",
+            "ramp:10",
+        ] {
+            assert!(ArrivalProcess::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn schedules_are_monotone_bounded_and_seed_deterministic() {
+        let d = Duration::from_secs(2);
+        for spec in ["constant:100", "poisson:100", "bursty:20:300:0.5:0.3", "ramp:50:150"] {
+            let p = ArrivalProcess::parse(spec).unwrap();
+            let a = p.schedule(7, d);
+            let b = p.schedule(7, d);
+            assert_eq!(a, b, "{spec}: same seed must reproduce the schedule");
+            assert!(!a.is_empty(), "{spec}: schedule empty");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{spec}: not monotone");
+            assert!(a.iter().all(|t| *t < d), "{spec}: offset past the horizon");
+        }
+    }
+
+    #[test]
+    fn poisson_seeds_differ_and_mean_rate_is_close() {
+        let p = ArrivalProcess::Poisson { rate_hz: 500.0 };
+        let d = Duration::from_secs(4);
+        let a = p.schedule(1, d);
+        let b = p.schedule(2, d);
+        assert_ne!(a, b, "different seeds must give different Poisson schedules");
+        // 2000 expected arrivals; 5σ ≈ 224.
+        assert!((a.len() as f64 - 2000.0).abs() < 250.0, "got {}", a.len());
+    }
+
+    #[test]
+    fn constant_and_ramp_match_their_closed_forms() {
+        let c = ArrivalProcess::Constant { rate_hz: 10.0 };
+        let s = c.schedule(0, Duration::from_secs(1));
+        assert_eq!(s.len(), 9, "arrivals at 0.1 .. 0.9");
+        assert!((s[0].as_secs_f64() - 0.1).abs() < 1e-12);
+
+        // Ramp 0→? average (10+30)/2 = 20 Hz over 2 s ≈ 40 arrivals.
+        let r = ArrivalProcess::Ramp { start_hz: 10.0, end_hz: 30.0 };
+        let s = r.schedule(0, Duration::from_secs(2));
+        assert!((s.len() as i64 - 40).unsigned_abs() <= 1, "got {}", s.len());
+        // Early gaps are wider than late gaps (the rate actually ramps).
+        let first_gap = s[1].as_secs_f64() - s[0].as_secs_f64();
+        let last_gap = s[s.len() - 1].as_secs_f64() - s[s.len() - 2].as_secs_f64();
+        assert!(first_gap > last_gap, "{first_gap} vs {last_gap}");
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_the_duty_window() {
+        let p =
+            ArrivalProcess::Bursty { base_hz: 10.0, burst_hz: 400.0, period_s: 1.0, duty: 0.25 };
+        let s = p.schedule(3, Duration::from_secs(1));
+        let in_burst = s.iter().filter(|t| t.as_secs_f64() < 0.25).count();
+        assert!(in_burst as f64 > 0.8 * s.len() as f64, "{in_burst}/{}", s.len());
+        assert_eq!(p.offered_rate_hz(), 0.25 * 400.0 + 0.75 * 10.0);
+    }
+}

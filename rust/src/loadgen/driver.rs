@@ -1,0 +1,280 @@
+//! The open-loop driver: render the seeded plan, fire it at any
+//! [`Client`], record per-request outcomes.
+//!
+//! The whole run is planned up front ([`plan`]): the arrival process
+//! fixes *when* each request fires, the mix fixes *what* it is, and both
+//! come from one seed — so two runs with the same `(seed, mix, process,
+//! duration)` produce byte-identical request streams
+//! ([`plan_lines`] is the canonical rendering the property test
+//! compares). Execution then never consults randomness again: submitter
+//! `s` of `N` owns arrivals `s, s+N, s+2N, …` and fires each at its
+//! scheduled offset, or immediately if the previous request on that
+//! submitter ran long (the recorded [`RequestRecord::lateness`] makes
+//! schedule slip visible instead of silently re-timing the run).
+//!
+//! Open-loop means arrivals are never skipped and never rescheduled:
+//! under overload the queue sees the full offered rate and must shed —
+//! which is exactly the behavior the SLO report measures.
+
+use super::arrival::ArrivalProcess;
+use super::mix::WorkloadMix;
+use crate::client::Client;
+use crate::obs::trace::TraceId;
+use crate::util::rng::SplitMix64;
+use std::time::{Duration, Instant};
+
+/// Stream-splitting constants: decorrelate the class stream and the
+/// problem-seed stream from the arrival stream without touching the
+/// user-visible seed (arbitrary odd constants, in the SplitMix64
+/// tradition).
+const CLASS_STREAM: u64 = 0x9e37_79b9_7f4a_7c15;
+const PROBLEM_STREAM: u64 = 0xd1b5_4a32_d192_ed03;
+
+/// One planned arrival: when it fires, which class renders it, and the
+/// seed of its band payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannedArrival {
+    pub index: u64,
+    /// Offset from the run start.
+    pub at: Duration,
+    /// Index into the mix's classes.
+    pub class: usize,
+    /// Seed of the request's random band payload.
+    pub problem_seed: u64,
+    /// Deterministic per-request trace id (carried on the request, so
+    /// client- and server-side spans join under it when tracing is on).
+    pub trace: TraceId,
+}
+
+/// Render the full run plan — a pure function of its arguments.
+pub fn plan(
+    process: &ArrivalProcess,
+    mix: &WorkloadMix,
+    seed: u64,
+    duration: Duration,
+) -> Vec<PlannedArrival> {
+    let schedule = process.schedule(seed, duration);
+    let mut class_rng = SplitMix64::new(seed ^ CLASS_STREAM);
+    let mut problem_rng = SplitMix64::new(seed ^ PROBLEM_STREAM);
+    schedule
+        .into_iter()
+        .enumerate()
+        .map(|(index, at)| PlannedArrival {
+            index: index as u64,
+            at,
+            class: mix.pick(&mut class_rng),
+            problem_seed: problem_rng.next_u64(),
+            trace: TraceId(problem_rng.next_u64()),
+        })
+        .collect()
+}
+
+/// The canonical one-line-per-arrival rendering of a plan — what the
+/// byte-identical determinism property compares across runs.
+pub fn plan_lines(plan: &[PlannedArrival], mix: &WorkloadMix) -> String {
+    let mut out = String::new();
+    for arrival in plan {
+        out.push_str(&format!(
+            "{} at_ns={} trace={} {}\n",
+            arrival.index,
+            arrival.at.as_nanos(),
+            arrival.trace.to_hex(),
+            mix.classes[arrival.class].plan_line(arrival.problem_seed),
+        ));
+    }
+    out
+}
+
+/// How one request ended.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Disposition {
+    Completed,
+    Failed {
+        /// The [`crate::error::JobError::kind`] wire code, or `"error"`
+        /// for non-job failures (transport, config).
+        kind: &'static str,
+        retryable: bool,
+        message: String,
+    },
+}
+
+/// The per-request outcome row the report aggregates.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub index: u64,
+    pub class: usize,
+    /// Scheduled offset from the run start.
+    pub scheduled: Duration,
+    /// How far past its schedule the request actually fired (submitter
+    /// busy with the previous request) — open-loop slip, zero when the
+    /// generator kept up.
+    pub lateness: Duration,
+    /// Submit → final wait return, retries included.
+    pub latency: Duration,
+    pub disposition: Disposition,
+    /// Extra attempts beyond the first (retryable failures re-submitted
+    /// under the retry budget).
+    pub retries: u32,
+    /// Attempts that ended in a retryable rejection
+    /// (`overloaded`/`quota-exceeded`) — what the server counts in
+    /// `jobs_rejected`, so reconciliation can match attempt-for-attempt.
+    pub rejected_attempts: u32,
+    /// A deadline-carrying request that did not complete within its
+    /// deadline (expired in queue, shed, or returned late).
+    pub missed_deadline: bool,
+    pub trace: TraceId,
+}
+
+/// Run options beyond the plan inputs.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    pub seed: u64,
+    pub duration: Duration,
+    /// Retry budget per request for retryable failures (0 keeps every
+    /// shed visible as a failure).
+    pub max_retries: u32,
+    /// Pause between retry attempts (scaled by the attempt number).
+    pub retry_backoff: Duration,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            duration: Duration::from_secs(2),
+            max_retries: 0,
+            retry_backoff: Duration::from_micros(500),
+        }
+    }
+}
+
+/// What a run produced: the per-request records plus the measured wall
+/// time from first scheduled arrival to last wait return.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    pub records: Vec<RequestRecord>,
+    pub elapsed: Duration,
+}
+
+/// Drive the planned load through the given clients — one submitter
+/// thread per slice element (pass the same reference several times to
+/// share one client, e.g. a `LocalClient::queued`; pass distinct
+/// `RemoteClient`s to avoid serializing on one connection's round-trip
+/// lock). Blocks until every request has resolved.
+pub fn run(
+    clients: &[&(dyn Client + Sync)],
+    mix: &WorkloadMix,
+    process: &ArrivalProcess,
+    opts: &RunOptions,
+) -> RunOutput {
+    let planned = plan(process, mix, opts.seed, opts.duration);
+    let submitters = clients.len().max(1);
+    let t0 = Instant::now();
+    let mut records: Vec<RequestRecord> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(submitters);
+        for (submitter, client) in clients.iter().enumerate() {
+            let planned = &planned;
+            let handle = scope.spawn(move || {
+                let mut local = Vec::new();
+                for arrival in planned.iter().skip(submitter).step_by(submitters) {
+                    let now = t0.elapsed();
+                    if now < arrival.at {
+                        std::thread::sleep(arrival.at - now);
+                    }
+                    let lateness = t0.elapsed().saturating_sub(arrival.at);
+                    local.push(fire(*client, mix, arrival, opts, lateness));
+                }
+                local
+            });
+            handles.push(handle);
+        }
+        handles.into_iter().flat_map(|h| h.join().expect("submitter panicked")).collect()
+    });
+    let elapsed = t0.elapsed();
+    records.sort_by_key(|r| r.index);
+    RunOutput { records, elapsed }
+}
+
+/// Submit one planned arrival (with retries) and record the outcome.
+fn fire(
+    client: &(dyn Client + Sync),
+    mix: &WorkloadMix,
+    arrival: &PlannedArrival,
+    opts: &RunOptions,
+    lateness: Duration,
+) -> RequestRecord {
+    let class = &mix.classes[arrival.class];
+    let submitted = Instant::now();
+    let mut retries = 0u32;
+    let mut rejected_attempts = 0u32;
+    let disposition = loop {
+        let request = class.render(arrival.problem_seed).trace(arrival.trace);
+        match client.submit_wait(request) {
+            Ok(_) => break Disposition::Completed,
+            Err(e) => {
+                let retryable = e.is_retryable();
+                if retryable {
+                    rejected_attempts += 1;
+                }
+                if retryable && retries < opts.max_retries {
+                    retries += 1;
+                    std::thread::sleep(opts.retry_backoff * retries);
+                    continue;
+                }
+                let kind = e.as_job().map_or("error", |job| job.kind());
+                break Disposition::Failed { kind, retryable, message: e.to_string() };
+            }
+        }
+    };
+    let latency = submitted.elapsed();
+    let missed_deadline = class.deadline.is_some_and(|deadline| match &disposition {
+        Disposition::Completed => latency > deadline,
+        Disposition::Failed { .. } => true,
+    });
+    RequestRecord {
+        index: arrival.index,
+        class: arrival.class,
+        scheduled: arrival.at,
+        lateness,
+        latency,
+        disposition,
+        retries,
+        rejected_attempts,
+        missed_deadline,
+        trace: arrival.trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix() -> WorkloadMix {
+        WorkloadMix::parse("name=a,weight=3,n=32,bw=4;name=b,n=48,bw=6,prec=fp32").unwrap()
+    }
+
+    #[test]
+    fn plans_are_pure_functions_of_their_seed() {
+        let process = ArrivalProcess::Poisson { rate_hz: 400.0 };
+        let mix = mix();
+        let d = Duration::from_secs(1);
+        let a = plan(&process, &mix, 42, d);
+        let b = plan(&process, &mix, 42, d);
+        assert_eq!(a, b);
+        assert_eq!(plan_lines(&a, &mix), plan_lines(&b, &mix));
+        let c = plan(&process, &mix, 43, d);
+        assert_ne!(plan_lines(&a, &mix), plan_lines(&c, &mix), "seed must matter");
+        // Both classes are actually exercised.
+        assert!(a.iter().any(|p| p.class == 0) && a.iter().any(|p| p.class == 1));
+    }
+
+    #[test]
+    fn plan_lines_carry_one_line_per_arrival() {
+        let process = ArrivalProcess::Constant { rate_hz: 50.0 };
+        let mix = mix();
+        let planned = plan(&process, &mix, 7, Duration::from_secs(1));
+        let lines = plan_lines(&planned, &mix);
+        assert_eq!(lines.lines().count(), planned.len());
+        assert!(lines.lines().next().unwrap().contains("at_ns="));
+    }
+}

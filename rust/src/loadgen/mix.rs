@@ -1,0 +1,301 @@
+//! Declarative workload mixes: weighted request classes rendered into
+//! [`ReductionRequest`]s.
+//!
+//! A [`WorkloadMix`] is a list of [`WorkloadClass`]es, each a weighted
+//! template over the request surface (matrix size, bandwidth, precision,
+//! priority, deadline, quota class, vectors on/off). The load generator
+//! samples a class per arrival from the seeded stream and renders a
+//! single-problem request whose matrix is itself seeded — so the whole
+//! request stream, band payloads included, is a pure function of one
+//! seed (see [`super::plan`]).
+//!
+//! The spec grammar (CLI `--mix`) is classes separated by `;`, fields by
+//! `,`, each `key=value`:
+//!
+//! ```text
+//! name=interactive,weight=6,n=64,bw=6,prec=fp32,priority=0,deadline_ms=500;\
+//! name=bulk,weight=1,n=384,bw=24,priority=2,quota=bulk
+//! ```
+//!
+//! `n` and `bw` are required per class; everything else defaults
+//! (weight 1, fp64, priority 0, no deadline, no quota class, values
+//! only). Named presets cover the regimes the related work calls out —
+//! `tiny-batch` for the many-small-problems regime of batched-SVD
+//! solvers, `large-band` for wide single problems.
+
+use crate::client::ReductionRequest;
+use crate::scalar::ScalarKind;
+use crate::util::rng::SplitMix64;
+use std::time::Duration;
+
+/// One weighted request template of a [`WorkloadMix`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadClass {
+    pub name: String,
+    /// Relative sampling weight (> 0).
+    pub weight: f64,
+    pub n: usize,
+    pub bw: usize,
+    pub kind: ScalarKind,
+    /// Queue priority, lower drains first.
+    pub priority: u8,
+    /// Queue deadline; a request still queued past it fails
+    /// `deadline-expired` instead of executing.
+    pub deadline: Option<Duration>,
+    /// Quota identity shared by every request of the class (the
+    /// service's `--quota-cap` keys on it).
+    pub quota_class: Option<String>,
+    /// Request dense U/Vᵀ panels alongside the singular values.
+    pub vectors: bool,
+}
+
+impl WorkloadClass {
+    /// Render one request from this template with a seeded band payload.
+    pub fn render(&self, problem_seed: u64) -> ReductionRequest {
+        let mut request = ReductionRequest::new()
+            .random(self.n, self.bw, self.kind, problem_seed)
+            .priority(self.priority)
+            .with_vectors(self.vectors);
+        if let Some(d) = self.deadline {
+            request = request.deadline(d);
+        }
+        if let Some(q) = &self.quota_class {
+            request = request.quota_class(q.clone());
+        }
+        request
+    }
+
+    /// One canonical line describing a rendered request — what the
+    /// byte-identical determinism property compares.
+    pub fn plan_line(&self, problem_seed: u64) -> String {
+        format!(
+            "{} n={} bw={} prec={} prio={} deadline_ms={} quota={} vectors={} seed={:016x}",
+            self.name,
+            self.n,
+            self.bw,
+            self.kind.name(),
+            self.priority,
+            self.deadline.map_or(-1i64, |d| d.as_millis() as i64),
+            self.quota_class.as_deref().unwrap_or("-"),
+            u8::from(self.vectors),
+            problem_seed,
+        )
+    }
+}
+
+/// A weighted set of request classes — see the module docs for the spec
+/// grammar and presets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadMix {
+    pub classes: Vec<WorkloadClass>,
+}
+
+/// Named mixes for the CLI and CI: `(name, spec, what it exercises)`.
+pub const PRESETS: [(&str, &str, &str); 5] = [
+    (
+        "smoke",
+        "name=small,weight=3,n=48,bw=6;name=medium,weight=1,n=96,bw=8,prec=fp32,priority=1",
+        "two tiny classes; fast enough for CI smoke runs",
+    ),
+    (
+        "mixed",
+        "name=interactive,weight=6,n=64,bw=6,prec=fp32,priority=0,deadline_ms=500;\
+         name=analytic,weight=3,n=192,bw=12,priority=1;\
+         name=bulk,weight=1,n=384,bw=24,priority=2,quota=bulk",
+        "mixed priorities, a deadline class, and a quota-limited bulk tier",
+    ),
+    (
+        "tiny-batch",
+        "name=tiny,weight=1,n=32,bw=4,prec=fp32",
+        "many tiny problems: the per-problem-overhead regime of batched SVD solvers",
+    ),
+    (
+        "large-band",
+        "name=wide,weight=1,n=1024,bw=64",
+        "wide single problems: the large-bandwidth regime of tiled bidiagonalization",
+    ),
+    (
+        "vectors",
+        "name=svd,weight=1,n=64,bw=6,vectors=1,priority=1",
+        "full-SVD requests carrying dense U/Vᵀ panels back",
+    ),
+];
+
+impl WorkloadMix {
+    /// Resolve a CLI `--mix` value: a preset name, or an inline spec
+    /// (anything containing `=`).
+    pub fn resolve(value: &str) -> Result<Self, String> {
+        if let Some((_, spec, _)) = PRESETS.iter().find(|(name, _, _)| *name == value) {
+            return Self::parse(spec);
+        }
+        if value.contains('=') {
+            return Self::parse(value);
+        }
+        let names: Vec<&str> = PRESETS.iter().map(|(n, _, _)| *n).collect();
+        Err(format!("unknown mix {value:?}; presets: {}, or an inline spec", names.join(", ")))
+    }
+
+    /// Parse an inline spec (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut classes = Vec::new();
+        for (index, class_spec) in spec.split(';').enumerate() {
+            let class_spec = class_spec.trim();
+            if class_spec.is_empty() {
+                continue;
+            }
+            let mut class = WorkloadClass {
+                name: format!("class{index}"),
+                weight: 1.0,
+                n: 0,
+                bw: 0,
+                kind: ScalarKind::F64,
+                priority: 0,
+                deadline: None,
+                quota_class: None,
+                vectors: false,
+            };
+            for field in class_spec.split(',') {
+                let field = field.trim();
+                if field.is_empty() {
+                    continue;
+                }
+                let (key, value) = field
+                    .split_once('=')
+                    .ok_or_else(|| format!("expected key=value, got {field:?}"))?;
+                let parse_err = |what: &str| format!("bad {what} {value:?} in class {index}");
+                match key {
+                    "name" => class.name = value.to_string(),
+                    "weight" => {
+                        class.weight =
+                            value.parse().map_err(|_| parse_err("weight"))?;
+                    }
+                    "n" => class.n = value.parse().map_err(|_| parse_err("n"))?,
+                    "bw" => class.bw = value.parse().map_err(|_| parse_err("bw"))?,
+                    "prec" => {
+                        class.kind = value.parse().map_err(|_| parse_err("precision"))?;
+                    }
+                    "priority" => {
+                        class.priority = value.parse().map_err(|_| parse_err("priority"))?;
+                    }
+                    "deadline_ms" => {
+                        let ms: u64 = value.parse().map_err(|_| parse_err("deadline_ms"))?;
+                        class.deadline = Some(Duration::from_millis(ms));
+                    }
+                    "quota" => class.quota_class = Some(value.to_string()),
+                    "vectors" => {
+                        class.vectors = match value {
+                            "1" | "true" | "on" => true,
+                            "0" | "false" | "off" => false,
+                            _ => return Err(parse_err("vectors flag")),
+                        };
+                    }
+                    _ => return Err(format!("unknown field {key:?} in class {index}")),
+                }
+            }
+            if class.n < 2 || class.bw == 0 || class.bw >= class.n {
+                return Err(format!(
+                    "class {} needs n >= 2 and 1 <= bw < n (got n={}, bw={})",
+                    class.name, class.n, class.bw
+                ));
+            }
+            if !(class.weight > 0.0 && class.weight.is_finite()) {
+                return Err(format!("class {} weight must be positive", class.name));
+            }
+            classes.push(class);
+        }
+        if classes.is_empty() {
+            return Err("workload mix has no classes".into());
+        }
+        Ok(Self { classes })
+    }
+
+    /// Sample a class index from the seeded stream, proportionally to
+    /// the class weights.
+    pub fn pick(&self, rng: &mut SplitMix64) -> usize {
+        let total: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let u = (rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let mut target = u * total;
+        for (index, class) in self.classes.iter().enumerate() {
+            if target < class.weight {
+                return index;
+            }
+            target -= class.weight;
+        }
+        self.classes.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_specs_parse_with_defaults_and_overrides() {
+        let mix = WorkloadMix::parse(
+            "n=48,bw=6;name=big,weight=2.5,n=256,bw=16,prec=fp32,priority=3,\
+             deadline_ms=250,quota=tenant-a,vectors=1",
+        )
+        .unwrap();
+        assert_eq!(mix.classes.len(), 2);
+        let a = &mix.classes[0];
+        assert_eq!((a.name.as_str(), a.n, a.bw), ("class0", 48, 6));
+        assert_eq!((a.weight, a.kind, a.priority), (1.0, ScalarKind::F64, 0));
+        assert_eq!((a.deadline, a.quota_class.clone(), a.vectors), (None, None, false));
+        let b = &mix.classes[1];
+        assert_eq!((b.name.as_str(), b.weight, b.n, b.bw), ("big", 2.5, 256, 16));
+        assert_eq!((b.kind, b.priority), (ScalarKind::F32, 3));
+        assert_eq!(b.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(b.quota_class.as_deref(), Some("tenant-a"));
+        assert!(b.vectors);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for bad in [
+            "",
+            "n=48",
+            "bw=6",
+            "n=1,bw=1",
+            "n=48,bw=48",
+            "n=48,bw=6,weight=0",
+            "n=48,bw=6,prec=fp128",
+            "n=48,bw=6,vectors=maybe",
+            "n=48,bw=6,shape=weird",
+            "48:6",
+        ] {
+            assert!(WorkloadMix::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn presets_resolve_and_inline_passthrough_works() {
+        for (name, _, _) in PRESETS {
+            let mix = WorkloadMix::resolve(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!mix.classes.is_empty(), "{name}");
+        }
+        assert!(WorkloadMix::resolve("n=48,bw=6").is_ok());
+        assert!(WorkloadMix::resolve("no-such-preset").is_err());
+    }
+
+    #[test]
+    fn weighted_pick_tracks_the_weights() {
+        let mix = WorkloadMix::parse("name=a,weight=9,n=32,bw=4;name=b,weight=1,n=32,bw=4")
+            .unwrap();
+        let mut rng = SplitMix64::new(11);
+        let picks_a = (0..10_000).filter(|_| mix.pick(&mut rng) == 0).count();
+        assert!((picks_a as f64 - 9000.0).abs() < 300.0, "{picks_a}");
+    }
+
+    #[test]
+    fn render_carries_every_template_field() {
+        let mix = WorkloadMix::parse(
+            "name=c,n=64,bw=8,prec=fp32,priority=2,deadline_ms=100,quota=q,vectors=1",
+        )
+        .unwrap();
+        let request = mix.classes[0].render(7);
+        assert_eq!(request.len(), 1);
+        let line = mix.classes[0].plan_line(7);
+        assert!(line.contains("n=64 bw=8 prec=fp32 prio=2 deadline_ms=100 quota=q vectors=1"));
+        assert!(line.ends_with(&format!("seed={:016x}", 7)));
+    }
+}

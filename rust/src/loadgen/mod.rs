@@ -1,0 +1,43 @@
+//! Open-loop SLO load generation and the demo scenario suite.
+//!
+//! The serving tier ([`crate::service`], fronted by [`crate::client`])
+//! exists to absorb *streams* of reduction traffic; this module is the
+//! machinery that proves it, with numbers:
+//!
+//! - [`arrival`] — deterministic open-loop arrival processes
+//!   (constant, Poisson, bursty on/off, linear ramp). Arrivals fire on
+//!   schedule whether or not earlier requests completed, so overload is
+//!   real, not self-throttled.
+//! - [`mix`] — declarative weighted [`mix::WorkloadMix`] over the
+//!   request surface (n/bandwidth/precision, priority, deadline, quota
+//!   class, vectors), rendered into seeded
+//!   [`crate::client::ReductionRequest`]s.
+//! - [`driver`] — plans a run as a pure function of one seed (same
+//!   seed ⇒ byte-identical request stream) and drives it through any
+//!   [`crate::client::Client`] on N submitter threads, recording
+//!   per-request latency, typed failure kind, retries, and deadline
+//!   outcome.
+//! - [`report`] — the `bsvd-load-v1` JSON report: interpolated
+//!   p50/p99/p999 per class, deadline-miss rate, achieved-vs-offered
+//!   throughput, shed breakdown, client/server counter reconciliation,
+//!   and the [`report::Slo`] assertion grammar that makes a run a CI
+//!   gate (`banded-svd loadgen --slo 'p99_ms=250,miss_rate=0.01'`).
+//! - [`scenario`] — three end-to-end demos through the same client
+//!   seam (`banded-svd demo <name>`): streaming spectral monitoring,
+//!   low-rank compression with verified truncation error, and the
+//!   scaled-up spectral-PDE stepper.
+//!
+//! See `docs/scenarios.md` for the catalog, the mix grammar, the report
+//! schema, and SLO recipes.
+
+pub mod arrival;
+pub mod driver;
+pub mod mix;
+pub mod report;
+pub mod scenario;
+
+pub use arrival::ArrivalProcess;
+pub use driver::{plan, plan_lines, run, Disposition, RequestRecord, RunOptions, RunOutput};
+pub use mix::{WorkloadClass, WorkloadMix};
+pub use report::{build_report, ReportInputs, Slo};
+pub use scenario::{ScenarioOptions, SCENARIOS};

@@ -1,0 +1,586 @@
+//! The `bsvd-load-v1` report: per-class latency quantiles, deadline-miss
+//! rate, achieved-vs-offered throughput, shed breakdown — reconciled
+//! against the server's own counters — plus the SLO assertion grammar
+//! that turns a report into a CI gate.
+//!
+//! Latency quantiles here are **interpolated** from the exact recorded
+//! samples (rank `q·(len−1)`, linear between neighbors) — unlike the
+//! service's log₂-bucketed histograms, the load generator holds every
+//! sample, so it reports exact order statistics and the two surfaces
+//! cross-check each other (histogram quantiles are upper bounds within
+//! one bucket, ≤ 2× the interpolated value).
+//!
+//! Reconciliation compares client-observed outcomes attempt-for-attempt
+//! with the service's `stats` counters: completions with
+//! `jobs_completed`, terminal job failures with `jobs_failed`, retryable
+//! rejections with `jobs_rejected`, and requires the queue drained —
+//! exact against a service that saw only this run's traffic (the CI
+//! smoke starts a fresh `serve` for precisely this reason).
+
+use super::arrival::ArrivalProcess;
+use super::driver::{Disposition, RequestRecord, RunOptions, RunOutput};
+use super::mix::WorkloadMix;
+use crate::client::ClientStats;
+use crate::config::TuneParams;
+use crate::obs::calibrate::MeasuredProfile;
+use crate::plan::LaunchPlan;
+use crate::simulator::hw::GpuArch;
+use crate::simulator::model::{simulate_plan_calibrated, BackendCostModel};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Schema tag stamped on every report.
+pub const SCHEMA: &str = "bsvd-load-v1";
+
+/// Interpolated `q`-quantile of an ascending-sorted slice (exact order
+/// statistics: rank `q·(len−1)`, linear between neighbors). `NaN` when
+/// empty — the JSON layer renders it as `null`.
+pub fn interp_quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+fn latency_json(samples_ms: &mut [f64]) -> Json {
+    samples_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = if samples_ms.is_empty() {
+        f64::NAN
+    } else {
+        samples_ms.iter().sum::<f64>() / samples_ms.len() as f64
+    };
+    Json::obj()
+        .set("count", samples_ms.len())
+        .set("p50", interp_quantile(samples_ms, 0.5))
+        .set("p99", interp_quantile(samples_ms, 0.99))
+        .set("p999", interp_quantile(samples_ms, 0.999))
+        .set("mean", mean)
+        .set("max", samples_ms.last().copied().unwrap_or(f64::NAN))
+}
+
+fn failures_json(records: &[&RequestRecord]) -> Json {
+    let mut by_kind: BTreeMap<&'static str, i64> = BTreeMap::new();
+    for record in records {
+        if let Disposition::Failed { kind, .. } = &record.disposition {
+            *by_kind.entry(kind).or_insert(0) += 1;
+        }
+    }
+    let mut out = Json::obj();
+    for (kind, count) in by_kind {
+        out = out.set(kind, count);
+    }
+    out
+}
+
+fn deadline_json(records: &[&RequestRecord], mix: &WorkloadMix) -> Json {
+    let eligible = records.iter().filter(|r| mix.classes[r.class].deadline.is_some()).count();
+    let missed = records.iter().filter(|r| r.missed_deadline).count();
+    let rate = if eligible == 0 { f64::NAN } else { missed as f64 / eligible as f64 };
+    Json::obj().set("eligible", eligible).set("missed", missed).set("miss_rate", rate)
+}
+
+fn tally_json(records: &[&RequestRecord], mix: &WorkloadMix) -> Json {
+    let completed = records.iter().filter(|r| r.disposition == Disposition::Completed).count();
+    let mut latencies: Vec<f64> = records
+        .iter()
+        .filter(|r| r.disposition == Disposition::Completed)
+        .map(|r| r.latency.as_secs_f64() * 1e3)
+        .collect();
+    let rejected: i64 = records.iter().map(|r| r.rejected_attempts as i64).sum();
+    Json::obj()
+        .set("scheduled", records.len())
+        .set("completed", completed)
+        .set("failed", records.len() - completed)
+        .set("retries", records.iter().map(|r| r.retries as i64).sum::<i64>())
+        .set("rejected_attempts", rejected)
+        .set("latency_ms", latency_json(&mut latencies))
+        .set("deadline", deadline_json(records, mix))
+        .set("failures", failures_json(records))
+}
+
+/// Everything a report is built from. `server_stats` is the body of the
+/// service's `stats` verb (or [`crate::service::Service::stats`] rendered
+/// the same way); reconciliation runs only when it is present.
+pub struct ReportInputs<'a> {
+    pub mix: &'a WorkloadMix,
+    pub process: &'a ArrivalProcess,
+    pub opts: &'a RunOptions,
+    pub output: &'a RunOutput,
+    pub submitters: usize,
+    pub target: &'a str,
+    pub client_stats: Option<ClientStats>,
+    pub server_stats: Option<Json>,
+    pub profile: Option<Json>,
+}
+
+/// Build the `bsvd-load-v1` report.
+pub fn build_report(inputs: &ReportInputs) -> Json {
+    let records = &inputs.output.records;
+    let all: Vec<&RequestRecord> = records.iter().collect();
+    let elapsed_s = inputs.output.elapsed.as_secs_f64();
+    let completed = records.iter().filter(|r| r.disposition == Disposition::Completed).count();
+    let transport_errors = records
+        .iter()
+        .filter(|r| matches!(&r.disposition, Disposition::Failed { kind, .. } if *kind == "error"))
+        .count();
+
+    let mut classes = Vec::with_capacity(inputs.mix.classes.len());
+    for (index, class) in inputs.mix.classes.iter().enumerate() {
+        let rows: Vec<&RequestRecord> = records.iter().filter(|r| r.class == index).collect();
+        let deadline_ms = match class.deadline {
+            Some(d) => Json::from(d.as_secs_f64() * 1e3),
+            None => Json::Null,
+        };
+        classes.push(
+            Json::obj()
+                .set("name", class.name.as_str())
+                .set("n", class.n)
+                .set("bw", class.bw)
+                .set("precision", class.kind.name())
+                .set("priority", class.priority as i64)
+                .set("vectors", class.vectors)
+                .set("deadline_ms", deadline_ms)
+                .set("tally", tally_json(&rows, inputs.mix)),
+        );
+    }
+
+    let mut lateness_ms: Vec<f64> =
+        records.iter().map(|r| r.lateness.as_secs_f64() * 1e3).collect();
+
+    let mut report = Json::obj()
+        .set("schema", SCHEMA)
+        .set("seed", inputs.opts.seed as i64)
+        .set("target", inputs.target)
+        .set("submitters", inputs.submitters)
+        .set("duration_s", inputs.opts.duration.as_secs_f64())
+        .set("elapsed_s", elapsed_s)
+        .set(
+            "process",
+            Json::obj()
+                .set("name", inputs.process.name())
+                .set("offered_rate_hz", inputs.process.offered_rate_hz()),
+        )
+        .set(
+            "throughput",
+            Json::obj()
+                .set(
+                    "offered_jobs_per_s",
+                    records.len() as f64 / inputs.opts.duration.as_secs_f64(),
+                )
+                .set(
+                    "achieved_jobs_per_s",
+                    if elapsed_s > 0.0 { completed as f64 / elapsed_s } else { f64::NAN },
+                ),
+        )
+        .set("tally", tally_json(&all, inputs.mix))
+        .set("transport_errors", transport_errors)
+        .set("lateness_ms", latency_json(&mut lateness_ms))
+        .set("classes", Json::Arr(classes));
+
+    report = match inputs.client_stats {
+        Some(stats) => report.set(
+            "client_stats",
+            Json::obj()
+                .set("submitted", stats.jobs_submitted as i64)
+                .set("completed", stats.jobs_completed as i64)
+                .set("failed", stats.jobs_failed as i64),
+        ),
+        None => report.set("client_stats", Json::Null),
+    };
+
+    let reconciliation = match &inputs.server_stats {
+        Some(server) => reconcile(records, transport_errors, server),
+        None => Json::obj().set("checked", false).set("ok", Json::Null),
+    };
+    report = report.set("server", inputs.server_stats.clone().unwrap_or(Json::Null));
+    report = report.set("reconciliation", reconciliation);
+    report.set("profile", inputs.profile.clone().unwrap_or(Json::Null))
+}
+
+/// Compare client-observed outcomes with the server's counters —
+/// attempt-for-attempt, after drain. Exact when the server saw only this
+/// run's traffic.
+fn reconcile(records: &[RequestRecord], transport_errors: usize, server: &Json) -> Json {
+    let completed = records
+        .iter()
+        .filter(|r| r.disposition == Disposition::Completed)
+        .count() as i64;
+    // Terminal *job* failures the server also counted (a job error that
+    // is not a retryable rejection was admitted and failed server-side).
+    let failed_terminal = records
+        .iter()
+        .filter(|r| {
+            matches!(
+                &r.disposition,
+                Disposition::Failed { kind, retryable: false, .. } if *kind != "error"
+            )
+        })
+        .count() as i64;
+    let rejected_attempts: i64 = records.iter().map(|r| r.rejected_attempts as i64).sum();
+
+    let server_int = |key: &str| server.get(key).and_then(Json::as_i64).unwrap_or(i64::MIN);
+    let mut checks = Vec::new();
+    let mut all_ok = transport_errors == 0;
+    let mut check = |name: &str, client: i64, server_value: i64| {
+        let ok = client == server_value;
+        all_ok &= ok;
+        checks.push(
+            Json::obj()
+                .set("name", name)
+                .set("client", client)
+                .set("server", server_value)
+                .set("ok", ok),
+        );
+    };
+    check("completed", completed, server_int("jobs_completed"));
+    check("failed_terminal", failed_terminal, server_int("jobs_failed"));
+    check("rejected_attempts", rejected_attempts, server_int("jobs_rejected"));
+    check("queue_drained", 0, server_int("queue_depth"));
+    // The server's own invariant, independent of client observation.
+    check(
+        "server_submitted_equals_completed_plus_failed_plus_queued",
+        server_int("jobs_submitted"),
+        server_int("jobs_completed") + server_int("jobs_failed") + server_int("queue_depth"),
+    );
+    Json::obj()
+        .set("checked", true)
+        .set("ok", all_ok)
+        .set("transport_errors", transport_errors)
+        .set("checks", Json::Arr(checks))
+}
+
+/// Modeled admission cost vs measured latency, per class — the
+/// `--profile` section. Lowers each class's plan once and prices it with
+/// the plain model and (when `BSVD_PROFILE` supplied one) the measured
+/// calibration, so the report shows model, calibrated model, and
+/// observed wall latency side by side.
+pub fn profile_section(
+    mix: &WorkloadMix,
+    params: &TuneParams,
+    arch: &GpuArch,
+    cost_model: &BackendCostModel,
+    measured: Option<&MeasuredProfile>,
+    records: &[RequestRecord],
+) -> Json {
+    let mut classes = Vec::with_capacity(mix.classes.len());
+    for (index, class) in mix.classes.iter().enumerate() {
+        let plan = LaunchPlan::for_problem(class.n, class.bw, params);
+        let es = class.kind.element_bytes();
+        let modeled_ms =
+            simulate_plan_calibrated(arch, es, &plan, params.tpb, cost_model, None).seconds * 1e3;
+        let calibrated_ms = measured.map(|profile| {
+            simulate_plan_calibrated(arch, es, &plan, params.tpb, cost_model, Some(profile))
+                .seconds
+                * 1e3
+        });
+        let mut observed: Vec<f64> = records
+            .iter()
+            .filter(|r| r.class == index && r.disposition == Disposition::Completed)
+            .map(|r| r.latency.as_secs_f64() * 1e3)
+            .collect();
+        observed.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        classes.push(
+            Json::obj()
+                .set("name", class.name.as_str())
+                .set("modeled_ms", modeled_ms)
+                .set("calibrated_ms", calibrated_ms.map(Json::from).unwrap_or(Json::Null))
+                .set("observed_p50_ms", interp_quantile(&observed, 0.5))
+                .set("observed_p99_ms", interp_quantile(&observed, 0.99)),
+        );
+    }
+    Json::obj()
+        .set("calibrated", measured.is_some())
+        .set(
+            "fingerprint",
+            measured.map(|m| Json::s(&format!("{:016x}", m.fingerprint()))).unwrap_or(Json::Null),
+        )
+        .set("classes", Json::Arr(classes))
+}
+
+/// A parsed `--slo` assertion: `key=value` pairs separated by commas.
+///
+/// Keys: `p50_ms`, `p99_ms`, `p999_ms`, `mean_ms`, `max_ms` (aggregate
+/// completion latency upper bounds), `miss_rate` (deadline-miss-rate
+/// upper bound over deadline-carrying requests), `error_rate` (failed /
+/// scheduled upper bound), `min_jobs_per_s` (achieved-throughput lower
+/// bound).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Slo {
+    entries: Vec<(String, f64)>,
+}
+
+const SLO_KEYS: [&str; 8] = [
+    "p50_ms", "p99_ms", "p999_ms", "mean_ms", "max_ms", "miss_rate", "error_rate",
+    "min_jobs_per_s",
+];
+
+impl Slo {
+    /// Parse `p99_ms=250,miss_rate=0.01`. Empty input parses to an empty
+    /// (never-violated) assertion.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut entries = Vec::new();
+        for field in spec.split(',') {
+            let field = field.trim();
+            if field.is_empty() {
+                continue;
+            }
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got {field:?}"))?;
+            if !SLO_KEYS.contains(&key) {
+                return Err(format!("unknown SLO key {key:?}; known: {}", SLO_KEYS.join(", ")));
+            }
+            let bound: f64 = value
+                .parse()
+                .map_err(|_| format!("bad SLO bound {value:?} for {key}"))?;
+            if !bound.is_finite() || bound < 0.0 {
+                return Err(format!("SLO bound for {key} must be finite and >= 0"));
+            }
+            entries.push((key.to_string(), bound));
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The normalized spec string (for the report).
+    pub fn spec(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Check a built report; returns one message per violated bound. A
+    /// bound whose metric is absent (e.g. a latency quantile with zero
+    /// completions, or a miss rate with no deadline-carrying requests)
+    /// counts as violated — an SLO over traffic that never completed is
+    /// not met.
+    pub fn check(&self, report: &Json) -> Vec<String> {
+        let mut violations = Vec::new();
+        let metric = |path: &[&str]| -> Option<f64> {
+            let mut node = report;
+            for key in path {
+                node = node.get(key)?;
+            }
+            node.as_f64().filter(|v| v.is_finite())
+        };
+        let error_rate = match (metric(&["tally", "failed"]), metric(&["tally", "scheduled"])) {
+            (Some(failed), Some(scheduled)) if scheduled > 0.0 => Some(failed / scheduled),
+            _ => None,
+        };
+        for (key, bound) in &self.entries {
+            // Every key is an upper bound except the throughput floor.
+            let lower = key.as_str() == "min_jobs_per_s";
+            let actual = match key.as_str() {
+                "miss_rate" => metric(&["tally", "deadline", "miss_rate"]),
+                "error_rate" => error_rate,
+                "min_jobs_per_s" => metric(&["throughput", "achieved_jobs_per_s"]),
+                latency => metric(&["tally", "latency_ms", latency.trim_end_matches("_ms")]),
+            };
+            match actual {
+                None => violations.push(format!("{key}: no measured value in the report")),
+                Some(v) if lower && v < *bound => {
+                    violations.push(format!("{key}: {v:.4} is below the bound {bound}"));
+                }
+                Some(v) if !lower && v > *bound => {
+                    violations.push(format!("{key}: {v:.4} exceeds the bound {bound}"));
+                }
+                Some(_) => {}
+            }
+        }
+        violations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceId;
+    use std::time::Duration;
+
+    #[test]
+    fn interpolated_quantiles_are_exact_order_statistics() {
+        assert!(interp_quantile(&[], 0.5).is_nan());
+        let one = [7.0];
+        assert_eq!(interp_quantile(&one, 0.0), 7.0);
+        assert_eq!(interp_quantile(&one, 0.99), 7.0);
+        let ladder: Vec<f64> = (1..=101).map(|k| k as f64).collect();
+        assert_eq!(interp_quantile(&ladder, 0.5), 51.0);
+        assert_eq!(interp_quantile(&ladder, 0.99), 100.0);
+        assert_eq!(interp_quantile(&ladder, 1.0), 101.0);
+        // Linear interpolation between neighbors.
+        let pair = [10.0, 20.0];
+        assert_eq!(interp_quantile(&pair, 0.5), 15.0);
+        assert_eq!(interp_quantile(&pair, 0.75), 17.5);
+    }
+
+    #[test]
+    fn slo_specs_parse_normalize_and_reject() {
+        let slo = Slo::parse("p99_ms=250,miss_rate=0.01").unwrap();
+        assert!(!slo.is_empty());
+        assert_eq!(slo.spec(), "p99_ms=250,miss_rate=0.01");
+        assert!(Slo::parse("").unwrap().is_empty());
+        for bad in ["p98_ms=1", "p99_ms", "p99_ms=abc", "p99_ms=-1", "p99_ms=inf"] {
+            assert!(Slo::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    fn record(
+        index: u64,
+        class: usize,
+        latency_ms: u64,
+        disposition: Disposition,
+        rejected: u32,
+        missed: bool,
+    ) -> RequestRecord {
+        RequestRecord {
+            index,
+            class,
+            scheduled: Duration::from_millis(index),
+            lateness: Duration::ZERO,
+            latency: Duration::from_millis(latency_ms),
+            disposition,
+            retries: 0,
+            rejected_attempts: rejected,
+            missed_deadline: missed,
+            trace: TraceId(index),
+        }
+    }
+
+    fn fixture() -> (WorkloadMix, RunOutput) {
+        let mix = WorkloadMix::parse("name=fast,n=32,bw=4,deadline_ms=100;n=64,bw=8").unwrap();
+        let shed = Disposition::Failed {
+            kind: "overloaded",
+            retryable: true,
+            message: "queue full".into(),
+        };
+        let records = vec![
+            record(0, 0, 10, Disposition::Completed, 0, false),
+            record(1, 0, 150, Disposition::Completed, 0, true),
+            record(2, 1, 30, Disposition::Completed, 0, false),
+            record(3, 1, 1, shed, 1, false),
+        ];
+        (mix, RunOutput { records, elapsed: Duration::from_secs(1) })
+    }
+
+    #[test]
+    fn report_aggregates_classes_deadlines_and_sheds() {
+        let (mix, output) = fixture();
+        let process = ArrivalProcess::Constant { rate_hz: 4.0 };
+        let opts = RunOptions { seed: 9, duration: Duration::from_secs(1), ..Default::default() };
+        let report = build_report(&ReportInputs {
+            mix: &mix,
+            process: &process,
+            opts: &opts,
+            output: &output,
+            submitters: 2,
+            target: "local:queued",
+            client_stats: None,
+            server_stats: None,
+            profile: None,
+        });
+        assert_eq!(report.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        let tally = report.get("tally").unwrap();
+        assert_eq!(tally.get("scheduled").and_then(Json::as_i64), Some(4));
+        assert_eq!(tally.get("completed").and_then(Json::as_i64), Some(3));
+        assert_eq!(tally.get("failed").and_then(Json::as_i64), Some(1));
+        assert_eq!(
+            tally.get("failures").and_then(|f| f.get("overloaded")).and_then(Json::as_i64),
+            Some(1)
+        );
+        let deadline = tally.get("deadline").unwrap();
+        assert_eq!(deadline.get("eligible").and_then(Json::as_i64), Some(2));
+        assert_eq!(deadline.get("missed").and_then(Json::as_i64), Some(1));
+        assert_eq!(deadline.get("miss_rate").and_then(Json::as_f64), Some(0.5));
+        let classes = report.get("classes").and_then(Json::as_array).unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(
+            classes[0].get("tally").and_then(|t| t.get("completed")).and_then(Json::as_i64),
+            Some(2)
+        );
+        // Unchecked reconciliation when no server stats were supplied.
+        let rec = report.get("reconciliation").unwrap();
+        assert_eq!(rec.get("checked").and_then(Json::as_bool), Some(false));
+        // The report round-trips through the JSON layer.
+        let parsed = Json::parse(&report.render()).unwrap();
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some(SCHEMA));
+    }
+
+    #[test]
+    fn reconciliation_matches_counters_attempt_for_attempt() {
+        let (mix, output) = fixture();
+        let process = ArrivalProcess::Constant { rate_hz: 4.0 };
+        let opts = RunOptions::default();
+        let server_ok = Json::obj()
+            .set("jobs_submitted", 3i64)
+            .set("jobs_completed", 3i64)
+            .set("jobs_failed", 0i64)
+            .set("jobs_rejected", 1i64)
+            .set("queue_depth", 0i64);
+        let inputs = |server: Json| ReportInputs {
+            mix: &mix,
+            process: &process,
+            opts: &opts,
+            output: &output,
+            submitters: 1,
+            target: "local:queued",
+            client_stats: None,
+            server_stats: Some(server),
+            profile: None,
+        };
+        let report = build_report(&inputs(server_ok.clone()));
+        let rec = report.get("reconciliation").unwrap();
+        assert_eq!(rec.get("checked").and_then(Json::as_bool), Some(true));
+        assert_eq!(rec.get("ok").and_then(Json::as_bool), Some(true), "{}", rec.render());
+
+        // One completion unaccounted for server-side must flip ok.
+        // (`set` appends and `get` takes the first binding, so build the
+        // bad counters fresh rather than re-setting keys.)
+        let server_bad = Json::obj()
+            .set("jobs_submitted", 2i64)
+            .set("jobs_completed", 2i64)
+            .set("jobs_failed", 0i64)
+            .set("jobs_rejected", 1i64)
+            .set("queue_depth", 0i64);
+        let report = build_report(&inputs(server_bad));
+        let rec = report.get("reconciliation").unwrap();
+        assert_eq!(rec.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn slo_checks_flag_violations_and_missing_metrics() {
+        let (mix, output) = fixture();
+        let process = ArrivalProcess::Constant { rate_hz: 4.0 };
+        let opts = RunOptions::default();
+        let report = build_report(&ReportInputs {
+            mix: &mix,
+            process: &process,
+            opts: &opts,
+            output: &output,
+            submitters: 1,
+            target: "local:queued",
+            client_stats: None,
+            server_stats: None,
+            profile: None,
+        });
+        // Latencies are 10/30/150 ms; p99 ≈ 147.6. A 200 ms bound holds,
+        // a 50 ms bound does not.
+        assert!(Slo::parse("p99_ms=200").unwrap().check(&report).is_empty());
+        let violations = Slo::parse("p99_ms=50,miss_rate=0.25").unwrap().check(&report);
+        assert_eq!(violations.len(), 2, "{violations:?}");
+        // Throughput lower bound: 3 completions over 1 s.
+        assert!(Slo::parse("min_jobs_per_s=2").unwrap().check(&report).is_empty());
+        assert_eq!(Slo::parse("min_jobs_per_s=10").unwrap().check(&report).len(), 1);
+        // error_rate = 1/4.
+        assert!(Slo::parse("error_rate=0.5").unwrap().check(&report).is_empty());
+        assert_eq!(Slo::parse("error_rate=0.1").unwrap().check(&report).len(), 1);
+    }
+}

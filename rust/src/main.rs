@@ -103,6 +103,11 @@ fn cli() -> Cli {
                     opt("threads", "worker threads (0 = all cores, local modes)", "0"),
                     opt("seed", "rng seed", "42"),
                     flag("vectors", "request dense U/Vᵀ singular-vector panels per problem"),
+                    flag(
+                        "binary-frames",
+                        "ship band payloads as length-prefixed binary frames \
+                         (single remote endpoint, proto >= 4)",
+                    ),
                     flag("metrics", "after the run, print the server(s)' Prometheus metrics"),
                     flag("shutdown", "after the run, ask the remote server(s) to shut down"),
                 ],
@@ -137,6 +142,66 @@ fn cli() -> Cli {
                 opts: vec![
                     opt("remote", "serve endpoint to query", "127.0.0.1:7070"),
                     opt("format", "output format: json|prom", "json"),
+                ],
+            },
+            Command {
+                name: "loadgen",
+                about: "open-loop SLO load generator against the serving tier",
+                opts: vec![
+                    opt(
+                        "target",
+                        "local:queued|local:direct|serve address(es), comma-separated \
+                         (one connection per submitter, round-robin)",
+                        "local:queued",
+                    ),
+                    opt("mix", "workload mix: preset name or inline spec", "smoke"),
+                    opt(
+                        "process",
+                        "arrivals: constant:RATE|poisson:RATE|\
+                         bursty:BASE:BURST:PERIOD_S:DUTY|ramp:START:END",
+                        "constant:40",
+                    ),
+                    opt("duration-s", "schedule horizon in seconds", "2"),
+                    opt("seed", "schedule/payload seed (same seed = same request stream)", "42"),
+                    opt("submitters", "submitter threads", "2"),
+                    opt("retries", "retry budget per request for retryable rejections", "0"),
+                    opt(
+                        "slo",
+                        "assert bounds, e.g. p99_ms=250,miss_rate=0.01 (exit 1 on violation)",
+                        "",
+                    ),
+                    opt("out", "also write the report JSON to this path", ""),
+                    flag("plan-only", "print the canonical arrival plan and exit (no traffic)"),
+                    flag(
+                        "profile",
+                        "add modeled-vs-observed per-class latency (BSVD_PROFILE calibrates)",
+                    ),
+                    opt("arch", "cost-model architecture for --profile", "H100"),
+                    opt(
+                        "backend",
+                        "sequential|threadpool|simd|pjrt (local targets; --profile cost model)",
+                        "threadpool",
+                    ),
+                    opt("threads", "worker threads (0 = all cores, local targets)", "0"),
+                    opt("queue-cap", "max pending jobs (local:queued; overrides env)", ""),
+                    opt("quota-cap", "max pending jobs per client (local:queued, 0 = off)", "0"),
+                    opt("tw", "inner tilewidth (local targets)", "8"),
+                    opt("tpb", "threads per block (local targets)", "32"),
+                    opt("max-blocks", "block capacity per launch (local targets)", "192"),
+                ],
+            },
+            Command {
+                name: "demo",
+                about: "run an end-to-end scenario (positional: name; no name lists the catalog)",
+                opts: vec![
+                    opt("target", "local:direct|local:queued|serve address", "local:direct"),
+                    flag("full", "full-size configuration (default is the short CI sizing)"),
+                    opt("seed", "scenario seed", "7"),
+                    opt("backend", "sequential|threadpool|simd|pjrt (local targets)", "threadpool"),
+                    opt("threads", "worker threads (0 = all cores, local targets)", "0"),
+                    opt("tw", "inner tilewidth (must match a remote server's tuning)", "8"),
+                    opt("tpb", "threads per block", "32"),
+                    opt("max-blocks", "block capacity per launch", "192"),
                 ],
             },
             Command {
@@ -234,6 +299,15 @@ fn cli() -> Cli {
                 ],
             },
             Command {
+                name: "bench-promote",
+                about: "promote a measured BENCH snapshot over an unmeasured baseline",
+                opts: vec![
+                    opt("candidate", "freshly collected measured snapshot", "BENCH.json"),
+                    opt("baseline", "committed baseline to replace", "BENCH_PR7.json"),
+                    flag("force", "replace even a baseline that is already measured"),
+                ],
+            },
+            Command {
                 name: "artifacts-info",
                 about: "inspect compiled PJRT artifacts for a variant",
                 opts: vec![
@@ -272,6 +346,8 @@ fn main() {
         "client" => cmd_client(&parsed.args),
         "serve" => cmd_serve(&parsed.args),
         "stats" => cmd_stats(&parsed.args),
+        "loadgen" => cmd_loadgen(&parsed.args),
+        "demo" => cmd_demo(&parsed.args),
         "svd" => cmd_svd(&parsed.args),
         "accuracy" => cmd_accuracy(&parsed.args),
         "occupancy" => cmd_occupancy(&parsed.args),
@@ -281,6 +357,7 @@ fn main() {
         "tune" => cmd_tune(&parsed.args),
         "bench-collect" => cmd_bench_collect(&parsed.args),
         "bench-gate" => cmd_bench_gate(&parsed.args),
+        "bench-promote" => cmd_bench_promote(&parsed.args),
         "artifacts-info" => cmd_artifacts_info(&parsed.args),
         _ => unreachable!(),
     };
@@ -689,6 +766,10 @@ fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
         eprintln!("--metrics queries a running server; pass --remote <addr>");
         return 2;
     }
+    if args.flag("binary-frames") && endpoints.len() != 1 {
+        eprintln!("--binary-frames negotiates per connection; pass exactly one --remote address");
+        return 2;
+    }
     if endpoints.len() > 1 {
         // Several endpoints: the sharded client routes, health-checks,
         // and fails over across the fleet.
@@ -726,13 +807,20 @@ fn cmd_client(args: &banded_svd::util::cli::Args) -> i32 {
         }
         code
     } else if let Some(&addr) = endpoints.first() {
-        let client = match RemoteClient::connect(addr) {
+        let mut client = match RemoteClient::connect(addr) {
             Ok(c) => c,
             Err(e) => {
                 eprintln!("error: connect {addr}: {e}");
                 return 1;
             }
         };
+        if args.flag("binary-frames") {
+            if let Err(e) = client.binary_band_frames(true) {
+                eprintln!("error: {e}");
+                return 1;
+            }
+            println!("binary band frames on (server speaks proto {})", client.proto());
+        }
         let code = drive(&client, request, &format!("remote {addr}"));
         if args.flag("metrics") {
             let rc = print_server_metrics(&[addr]);
@@ -930,6 +1018,393 @@ fn cmd_stats(args: &banded_svd::util::cli::Args) -> i32 {
         other => {
             eprintln!("unknown --format {other:?} (json|prom)");
             2
+        }
+    }
+}
+
+/// `loadgen`: plan a seeded open-loop run, drive it through the selected
+/// client surface, and write the `bsvd-load-v1` report (optionally
+/// asserting `--slo` bounds against it).
+fn cmd_loadgen(args: &banded_svd::util::cli::Args) -> i32 {
+    use banded_svd::loadgen;
+    use banded_svd::obs::calibrate;
+    use banded_svd::util::json::{write_experiment, Json};
+
+    let mix = match loadgen::WorkloadMix::resolve(args.get("mix").unwrap_or("smoke")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let process_spec = args.get("process").unwrap_or("constant:40");
+    let process = match loadgen::ArrivalProcess::parse(process_spec) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let slo = match loadgen::Slo::parse(args.get("slo").unwrap_or("")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bad --slo: {e}");
+            return 2;
+        }
+    };
+    let duration_s: f64 = args.parse_or("duration-s", 2.0);
+    if !(duration_s > 0.0 && duration_s.is_finite()) {
+        eprintln!("--duration-s must be positive and finite");
+        return 2;
+    }
+    let opts = loadgen::RunOptions {
+        seed: args.parse_or("seed", 42),
+        duration: Duration::from_secs_f64(duration_s),
+        max_retries: args.parse_or("retries", 0),
+        ..loadgen::RunOptions::default()
+    };
+    let planned = loadgen::plan(&process, &mix, opts.seed, opts.duration);
+    if args.flag("plan-only") {
+        print!("{}", loadgen::plan_lines(&planned, &mix));
+        eprintln!("{} arrivals planned (no traffic sent)", planned.len());
+        return 0;
+    }
+
+    let params = TuneParams {
+        tpb: args.parse_or("tpb", 32),
+        tw: args.parse_or("tw", 8),
+        max_blocks: args.parse_or("max-blocks", 192),
+    };
+    let backend: BackendKind = match args.get("backend").unwrap_or("threadpool").parse() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // Resolve every --profile input before any traffic is sent, so a
+    // usage error cannot waste a finished run.
+    let profile_ctx = if args.flag("profile") {
+        let arch = match hw::arch_by_name(args.get("arch").unwrap_or("H100")) {
+            Some(a) => a,
+            None => {
+                eprintln!("unknown arch; known: A100 H100 RTX4060 MI250X MI300X PVC1100 M1");
+                return 2;
+            }
+        };
+        let cost_model = match backend {
+            BackendKind::Simd => simulator::BackendCostModel::simd(),
+            BackendKind::Pjrt | BackendKind::PjrtFused => simulator::BackendCostModel::pjrt(),
+            _ => simulator::BackendCostModel::native(),
+        };
+        Some((arch, cost_model))
+    } else {
+        None
+    };
+    let submitters: usize = args.parse_or("submitters", 2).max(1);
+    let threads: usize = args.parse_or("threads", 0);
+    let target = args.get("target").unwrap_or("local:queued").to_string();
+
+    println!(
+        "loadgen: {} arrivals over {duration_s:.1}s ({}, offered {:.1}/s) -> {target}, \
+         {submitters} submitter(s)",
+        planned.len(),
+        process.name(),
+        process.offered_rate_hz()
+    );
+    let (output, client_stats, server_stats) = match target.as_str() {
+        "local:queued" => {
+            let base = ServiceConfig::default();
+            let queue_cap = match args.parse_opt::<usize>("queue-cap") {
+                Ok(Some(cap)) => cap,
+                Ok(None) => base.queue_cap,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let cfg = ServiceConfig {
+                params,
+                backend,
+                threads,
+                queue_cap,
+                quota_pending_cap: args.parse_or("quota-cap", 0),
+                ..base
+            };
+            let client = match LocalClient::queued(cfg) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let clients: Vec<&(dyn Client + Sync)> =
+                (0..submitters).map(|_| &client as &(dyn Client + Sync)).collect();
+            let output = loadgen::run(&clients, &mix, &process, &opts);
+            // The driver blocked until every submit_wait resolved, so
+            // these are the drained counters reconciliation expects.
+            let server = client.service().map(|service| {
+                let st = service.stats();
+                Json::obj()
+                    .set("jobs_submitted", st.jobs_submitted as i64)
+                    .set("jobs_rejected", st.jobs_rejected as i64)
+                    .set("jobs_completed", st.jobs_completed as i64)
+                    .set("jobs_failed", st.jobs_failed as i64)
+                    .set("queue_depth", st.queue_depth as i64)
+            });
+            (output, Some(client.stats()), server)
+        }
+        "local:direct" => {
+            let built = LocalClient::direct(params, BatchConfig::default(), backend, threads);
+            let client = match built {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let clients: Vec<&(dyn Client + Sync)> =
+                (0..submitters).map(|_| &client as &(dyn Client + Sync)).collect();
+            let output = loadgen::run(&clients, &mix, &process, &opts);
+            (output, Some(client.stats()), None)
+        }
+        addrs => {
+            let endpoints: Vec<&str> =
+                addrs.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+            if endpoints.is_empty() {
+                eprintln!("--target needs local:queued, local:direct, or serve address(es)");
+                return 2;
+            }
+            let mut remotes = Vec::with_capacity(submitters);
+            for i in 0..submitters {
+                let addr = endpoints[i % endpoints.len()];
+                match RemoteClient::connect(addr) {
+                    Ok(c) => remotes.push(c),
+                    Err(e) => {
+                        eprintln!("error: connect {addr}: {e}");
+                        return 1;
+                    }
+                }
+            }
+            let clients: Vec<&(dyn Client + Sync)> =
+                remotes.iter().map(|c| c as &(dyn Client + Sync)).collect();
+            let output = loadgen::run(&clients, &mix, &process, &opts);
+            let mut stats = banded_svd::client::ClientStats::default();
+            for c in &remotes {
+                let s = c.stats();
+                stats.jobs_submitted += s.jobs_submitted;
+                stats.jobs_completed += s.jobs_completed;
+                stats.jobs_failed += s.jobs_failed;
+            }
+            // Reconciliation needs the counters of *the* server; with a
+            // fleet each endpoint saw only a slice, so skip the fetch.
+            let server = if endpoints.len() == 1 {
+                match remotes[0].server_stats() {
+                    Ok(s) => Some(s),
+                    Err(e) => {
+                        eprintln!("warning: stats fetch failed: {e}");
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            (output, Some(stats), server)
+        }
+    };
+
+    let profile = profile_ctx.map(|(arch, cost_model)| {
+        loadgen::report::profile_section(
+            &mix,
+            &params,
+            &arch,
+            &cost_model,
+            calibrate::from_env(),
+            &output.records,
+        )
+    });
+    let inputs = loadgen::ReportInputs {
+        mix: &mix,
+        process: &process,
+        opts: &opts,
+        output: &output,
+        submitters,
+        target: &target,
+        client_stats,
+        server_stats,
+        profile,
+    };
+    let mut report = loadgen::build_report(&inputs);
+    let violations = slo.check(&report);
+    if !slo.is_empty() {
+        let rendered: Vec<Json> = violations.iter().map(|v| Json::s(v.as_str())).collect();
+        report = report.set(
+            "slo",
+            Json::obj()
+                .set("spec", slo.spec())
+                .set("ok", violations.is_empty())
+                .set("violations", Json::Arr(rendered)),
+        );
+    }
+
+    let metric = |path: &[&str]| -> Option<f64> {
+        let mut node = &report;
+        for key in path {
+            node = node.get(key)?;
+        }
+        node.as_f64().filter(|v| v.is_finite())
+    };
+    let int = |path: &[&str]| metric(path).map(|v| v as i64).unwrap_or(0);
+    println!(
+        "completed {} / {} scheduled, {} failed; achieved {:.1} jobs/s",
+        int(&["tally", "completed"]),
+        int(&["tally", "scheduled"]),
+        int(&["tally", "failed"]),
+        metric(&["throughput", "achieved_jobs_per_s"]).unwrap_or(f64::NAN)
+    );
+    println!(
+        "latency ms: p50 {:.1}  p99 {:.1}  max {:.1}; deadline miss rate {}",
+        metric(&["tally", "latency_ms", "p50"]).unwrap_or(f64::NAN),
+        metric(&["tally", "latency_ms", "p99"]).unwrap_or(f64::NAN),
+        metric(&["tally", "latency_ms", "max"]).unwrap_or(f64::NAN),
+        match metric(&["tally", "deadline", "miss_rate"]) {
+            Some(rate) => format!("{rate:.4}"),
+            None => "n/a (no deadline classes)".to_string(),
+        }
+    );
+    match report.get("reconciliation").and_then(|r| r.get("ok")).and_then(Json::as_bool) {
+        Some(true) => println!("reconciliation vs server counters: ok"),
+        Some(false) => println!("reconciliation vs server counters: MISMATCH (see report)"),
+        None => {}
+    }
+    match write_experiment("loadgen", &report) {
+        Ok(path) => println!("report: {}", path.display()),
+        Err(e) => {
+            eprintln!("error: write report: {e}");
+            return 1;
+        }
+    }
+    if let Some(out) = args.get("out").filter(|s| !s.is_empty()) {
+        if let Err(e) = std::fs::write(out, report.render() + "\n") {
+            eprintln!("error: write {out}: {e}");
+            return 1;
+        }
+        println!("report copy: {out}");
+    }
+    if slo.is_empty() {
+        return 0;
+    }
+    if violations.is_empty() {
+        println!("SLO met: {}", slo.spec());
+        0
+    } else {
+        for v in &violations {
+            eprintln!("SLO violation: {v}");
+        }
+        eprintln!("SLO NOT met: {}", slo.spec());
+        1
+    }
+}
+
+/// `demo <name>`: run one scenario through the selected client surface,
+/// write its report, and exit non-zero when the scenario's own
+/// correctness check fails.
+fn cmd_demo(args: &banded_svd::util::cli::Args) -> i32 {
+    use banded_svd::loadgen::scenario::{self, ScenarioOptions, SCENARIOS};
+    use banded_svd::util::json::{write_experiment, Json};
+
+    let Some(name) = args.positionals().first().cloned() else {
+        eprintln!("usage: banded-svd demo <name> [options]\n\nSCENARIOS:");
+        for (n, what) in SCENARIOS {
+            eprintln!("  {n:<18} {what}");
+        }
+        return 2;
+    };
+    let params = TuneParams {
+        tpb: args.parse_or("tpb", 32),
+        tw: args.parse_or("tw", 8),
+        max_blocks: args.parse_or("max-blocks", 192),
+    };
+    let backend: BackendKind = match args.get("backend").unwrap_or("threadpool").parse() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let threads: usize = args.parse_or("threads", 0);
+    let opts = ScenarioOptions {
+        short: !args.flag("full"),
+        seed: args.parse_or("seed", 7),
+        params,
+    };
+    let target = args.get("target").unwrap_or("local:direct").to_string();
+    let result = match target.as_str() {
+        "local:direct" => {
+            let built = LocalClient::direct(params, BatchConfig::default(), backend, threads);
+            match built {
+                Ok(client) => scenario::run(&name, &client, &opts),
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
+        "local:queued" => {
+            let cfg = ServiceConfig { params, backend, threads, ..ServiceConfig::default() };
+            match LocalClient::queued(cfg) {
+                Ok(client) => scenario::run(&name, &client, &opts),
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
+        addr => match RemoteClient::connect(addr) {
+            Ok(client) => scenario::run(&name, &client, &opts),
+            Err(e) => {
+                eprintln!("error: connect {addr}: {e}");
+                return 1;
+            }
+        },
+    };
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            // An unknown scenario name is a usage error; anything else
+            // (transport, execution) is a runtime failure.
+            return match e {
+                banded_svd::error::Error::Config(_) => 2,
+                _ => 1,
+            };
+        }
+    };
+    println!("{}", report.render());
+    let experiment = format!("demo_{}", name.replace('-', "_"));
+    match write_experiment(&experiment, &report) {
+        Ok(path) => println!("report: {}", path.display()),
+        Err(e) => {
+            eprintln!("error: write report: {e}");
+            return 1;
+        }
+    }
+    let checks = [
+        ("spectral-monitor", "drift_detected", "variance shift shows as sigma_max drift"),
+        ("lowrank-compress", "error_agrees", "measured truncation error matches Eckart-Young"),
+        ("spectral-pde", "frobenius_ok", "Frobenius identity holds along the c trajectory"),
+    ];
+    let Some((_, key, what)) = checks.iter().find(|(n, _, _)| *n == name.as_str()) else {
+        return 0;
+    };
+    match report.get(key).and_then(Json::as_bool) {
+        Some(true) => {
+            println!("demo {name} ({target}): ok — {what}");
+            0
+        }
+        _ => {
+            eprintln!("demo {name} ({target}): check FAILED — {what}");
+            1
         }
     }
 }
@@ -1312,6 +1787,67 @@ fn cmd_bench_gate(args: &banded_svd::util::cli::Args) -> i32 {
                 );
                 0
             }
+        }
+    }
+}
+
+/// `bench-promote`: replace an unmeasured BENCH baseline with a freshly
+/// measured snapshot — the step that turns the bench gate from vacuous
+/// (skipping an unmeasured seed) into a real regression check.
+fn cmd_bench_promote(args: &banded_svd::util::cli::Args) -> i32 {
+    use banded_svd::util::benchcmp::parse_snapshot;
+    use banded_svd::util::json::Json;
+    let candidate_path = args.get("candidate").unwrap_or("BENCH.json");
+    let baseline_path = args.get("baseline").unwrap_or("BENCH_PR7.json");
+    let text = match std::fs::read_to_string(candidate_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: read {candidate_path}: {e}");
+            return 1;
+        }
+    };
+    let candidate = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("error: parse {candidate_path}: {e}");
+            return 1;
+        }
+    };
+    let Some((measured, metrics)) = parse_snapshot(&candidate) else {
+        eprintln!("error: {candidate_path} is not a bench snapshot");
+        return 1;
+    };
+    if !measured {
+        eprintln!("error: {candidate_path} is unmeasured; refusing to promote placeholders");
+        return 1;
+    }
+    if metrics.is_empty() {
+        eprintln!("error: {candidate_path} carries no metrics; nothing worth promoting");
+        return 1;
+    }
+    // Replacing a measured baseline moves the regression reference and
+    // needs an explicit --force; an unmeasured seed (or a missing or
+    // alien file) is exactly what promotion exists to replace.
+    let baseline_measured = std::fs::read_to_string(baseline_path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| parse_snapshot(&j))
+        .map(|(m, _)| m);
+    if baseline_measured == Some(true) && !args.flag("force") {
+        println!("baseline {baseline_path} is already measured; keeping it (--force replaces)");
+        return 0;
+    }
+    match std::fs::write(baseline_path, text) {
+        Ok(()) => {
+            println!(
+                "promoted {candidate_path} -> {baseline_path} ({} measured metrics)",
+                metrics.len()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: write {baseline_path}: {e}");
+            1
         }
     }
 }

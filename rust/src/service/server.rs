@@ -19,9 +19,20 @@
 //! Versioning: requests *may* carry `proto`
 //! ([`wire::PROTO_VERSION`]). Absent means the pre-versioning wire and
 //! is accepted, as is any version in [`wire::PROTO_ACCEPTED`] (v3 only
-//! adds optional fields over v2); anything else is rejected with a
-//! protocol error. Clients handshake against the `ping` response's
-//! `proto`.
+//! adds optional fields over v2; v4 only the framed band transport
+//! below); anything else is rejected with a protocol error. Clients
+//! handshake against the `ping` response's `proto`.
+//!
+//! Framed band transport (proto ≥ 4, opt-in): a `submit` control line
+//! may carry `"band_frame": <count>` *instead of* the `band` array and
+//! is then immediately followed by a raw binary frame
+//! ([`wire::encode_band_frame`]: little-endian u64 count, then the
+//! values as little-endian f64 bit patterns). The server consumes the
+//! frame by its own length prefix — bounded by
+//! [`wire::MAX_FRAME_VALUES`] — and cross-checks the declared count, so
+//! a desynchronized client gets an error *response* while the stream
+//! stays aligned on the next line. Every control and response line
+//! stays JSON; only the bulk payload changes representation.
 //!
 //! Every response carries `"ok"`. Job-level failures additionally carry
 //! the typed taxonomy (`kind` + `retryable` — see
@@ -124,18 +135,27 @@ fn stats_json(service: &Service) -> Json {
         .set("stats", stats)
 }
 
-/// Handle one request line. Returns the response and whether the server
-/// should shut down after sending it.
+/// Handle one request line — the in-process form, with no framed
+/// transport underneath (a line declaring `band_frame` is therefore an
+/// error here). Returns the response and whether the server should shut
+/// down after sending it.
 fn respond(service: &Service, line: &str) -> (Json, bool) {
-    let request = match Json::parse(line) {
-        Ok(v) => v,
-        Err(e) => return (wire::error_json(format!("bad request: {e}")), false),
-    };
+    match Json::parse(line) {
+        Ok(request) => respond_parsed(service, &request, None),
+        Err(e) => (wire::error_json(format!("bad request: {e}")), false),
+    }
+}
+
+/// Dispatch one parsed request. `frame` is the binary band payload the
+/// connection handler consumed from the stream when the control line
+/// declared `band_frame` (v4 framed transport), `None` otherwise.
+fn respond_parsed(service: &Service, request: &Json, frame: Option<Vec<f64>>) -> (Json, bool) {
     // Version gate: an absent `proto` is the pre-versioning wire and is
     // accepted, as is any version in `wire::PROTO_ACCEPTED` (v3 only
-    // adds optional fields over v2, so old clients remain valid);
-    // anything else is a client this server does not speak to (see the
-    // compatibility rule in `docs/client.md`).
+    // adds optional fields over v2, and v4 only the opt-in framed band
+    // transport, so old clients remain valid); anything else is a
+    // client this server does not speak to (see the compatibility rule
+    // in `docs/client.md`).
     if let Some(proto) = request.get("proto") {
         let accepted = proto
             .as_usize()
@@ -156,7 +176,7 @@ fn respond(service: &Service, line: &str) -> (Json, bool) {
         Some("stats") => (stats_json(service), false),
         Some("metrics") => (metrics_json(service), false),
         Some("shutdown") => (Json::obj().set("ok", true).set("verb", "shutdown"), true),
-        Some("submit") => (handle_submit(service, &request), false),
+        Some("submit") => (handle_submit(service, request, frame), false),
         Some(other) => (wire::error_json(format!("unknown verb {other:?}")), false),
         None => (wire::error_json("missing \"verb\""), false),
     }
@@ -201,7 +221,7 @@ fn error_response(e: &Error) -> Json {
     }
 }
 
-fn handle_submit(service: &Service, request: &Json) -> Json {
+fn handle_submit(service: &Service, request: &Json, frame: Option<Vec<f64>>) -> Json {
     let field_usize = |key: &str| request.get(key).and_then(Json::as_usize);
     let (Some(n), Some(bw)) = (field_usize("n"), field_usize("bw")) else {
         return wire::error_json("submit needs integer \"n\" and \"bw\"");
@@ -259,16 +279,55 @@ fn handle_submit(service: &Service, request: &Json) -> Json {
         Ok(v) => v,
         Err(e) => return e,
     };
-    let Some(band) = request.get("band").and_then(Json::as_array) else {
-        return wire::error_json("submit needs a \"band\" array");
+    // The band payload arrives inline (`band` array) or — proto ≥ 4 —
+    // as the binary frame the connection handler already consumed from
+    // the stream (`band_frame` declares its value count).
+    let declared = match request.get("band_frame") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(count) => Some(count),
+            None => return wire::error_json("band_frame must be a non-negative integer"),
+        },
     };
-    let mut values = Vec::with_capacity(band.len());
-    for v in band {
-        match v.as_f64() {
-            Some(x) => values.push(x),
-            None => return wire::error_json("band values must be numbers"),
+    let values: Vec<f64> = match (request.get("band"), declared, frame) {
+        (Some(_), Some(_), _) => {
+            return wire::error_json("submit carries both \"band\" and \"band_frame\"");
         }
-    }
+        (Some(band), None, _) => {
+            let Some(band) = band.as_array() else {
+                return wire::error_json("submit needs a \"band\" array");
+            };
+            let mut values = Vec::with_capacity(band.len());
+            for v in band {
+                match v.as_f64() {
+                    Some(x) => values.push(x),
+                    None => return wire::error_json("band values must be numbers"),
+                }
+            }
+            values
+        }
+        (None, Some(count), Some(values)) => {
+            // The frame was read by its own length prefix; a control
+            // line disagreeing with it is a desynchronized client, and
+            // the framed transport is a v4 capability the request must
+            // have claimed.
+            if values.len() != count {
+                return wire::error_json(format!(
+                    "band frame carries {} values; the control line declared {count}",
+                    values.len()
+                ));
+            }
+            let proto = request.get("proto").and_then(Json::as_usize);
+            if !proto.is_some_and(|v| v >= 4) {
+                return wire::error_json("band_frame needs proto >= 4 on the request line");
+            }
+            values
+        }
+        (None, Some(_), None) => {
+            return wire::error_json("band_frame requires the framed TCP transport");
+        }
+        (None, None, _) => return wire::error_json("submit needs a \"band\" array"),
+    };
     let tw = service.config().params.effective_tw(bw);
     let input = match wire::band_from_values(n, bw, tw, precision, &values) {
         Ok(input) => input,
@@ -412,8 +471,33 @@ fn handle_connection(
         if line.is_empty() {
             continue;
         }
+        // Parse the control line before dispatching: a framed submit
+        // (v4) declares its binary band payload there, and the frame
+        // must be consumed off the stream either way.
+        let parsed = Json::parse(line);
+        let frame = match &parsed {
+            Ok(request) if request.get("band_frame").is_some() => {
+                match wire::read_band_frame(&mut reader) {
+                    Ok(values) => Some(values),
+                    Err(e) => {
+                        // Cap exceeded or the stream died mid-frame: the
+                        // byte stream can no longer be trusted to align
+                        // on a next line, so answer once and drop the
+                        // connection (like an oversized line).
+                        let response = wire::error_json(format!("bad band frame: {e}"));
+                        let _ = writeln!(writer, "{}", response.render());
+                        let _ = writer.flush();
+                        break;
+                    }
+                }
+            }
+            _ => None,
+        };
         inflight.fetch_add(1, Ordering::SeqCst);
-        let (response, shutdown) = respond(service, line);
+        let (response, shutdown) = match &parsed {
+            Ok(request) => respond_parsed(service, request, frame),
+            Err(e) => (wire::error_json(format!("bad request: {e}")), false),
+        };
         let written = writeln!(writer, "{}", response.render()).is_ok() && writer.flush().is_ok();
         inflight.fetch_sub(1, Ordering::SeqCst);
         if !written {
@@ -668,6 +752,74 @@ mod tests {
         assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
         assert_eq!(r.get("kind").and_then(Json::as_str), Some("too-large"));
         assert_eq!(r.get("retryable").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn framed_submit_matches_the_inline_band_bitwise() {
+        use crate::batch::BatchInput;
+        use crate::client::wire::{read_band_frame, submit_request_framed, RequestIdentity};
+        let cfg = cfg();
+        let service = Service::start(cfg.clone()).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let (n, bw) = (32, 4);
+        let a = random_banded::<f64>(n, bw, cfg.params.effective_tw(bw), &mut rng);
+        let inline_line = submit_request(&a, bw, 0);
+        let (inline, _) = respond(&service, &inline_line);
+        assert_eq!(inline.get("ok").and_then(Json::as_bool), Some(true), "{inline:?}");
+        let (line, frame) = submit_request_framed(
+            &BatchInput::from((a, bw)),
+            0,
+            None,
+            RequestIdentity::default(),
+            false,
+            None,
+        );
+        let values = read_band_frame(&mut frame.as_slice()).unwrap();
+        let request = Json::parse(&line).unwrap();
+        let (framed, stop) = respond_parsed(&service, &request, Some(values));
+        assert!(!stop);
+        assert_eq!(framed.get("ok").and_then(Json::as_bool), Some(true), "{framed:?}");
+        let sv_of = |r: &Json| -> Vec<u64> {
+            r.get("sv")
+                .and_then(Json::as_array)
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap().to_bits())
+                .collect()
+        };
+        assert_eq!(sv_of(&framed), sv_of(&inline));
+    }
+
+    #[test]
+    fn framed_submit_validates_count_proto_and_transport() {
+        let service = Service::start(cfg()).unwrap();
+        let base = "\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band_frame\":31";
+        let values = Some(vec![0.5; 31]);
+        // The frame's own prefix disagreeing with the control line is a
+        // desynchronized client.
+        let short = Json::parse(&format!("{{{base},\"proto\":4}}")).unwrap();
+        let (r, _) = respond_parsed(&service, &short, Some(vec![0.5; 30]));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("declared"), "{r:?}");
+        // The framed transport is a v4 capability: an old (or absent)
+        // proto claim cannot use it.
+        for line in [format!("{{{base}}}"), format!("{{{base},\"proto\":3}}")] {
+            let request = Json::parse(&line).unwrap();
+            let (r, _) = respond_parsed(&service, &request, values.clone());
+            assert!(r.get("error").unwrap().as_str().unwrap().contains("proto"), "{r:?}");
+        }
+        // One payload per submit: inline band and a frame are exclusive.
+        let line = "{\"verb\":\"submit\",\"n\":16,\"bw\":2,\"band\":[1.0],\"band_frame\":1}";
+        let both = Json::parse(line).unwrap();
+        let (r, _) = respond_parsed(&service, &both, Some(vec![1.0]));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("both"), "{r:?}");
+        // A band_frame line without the framed transport underneath
+        // (the in-process respond path) cannot be served.
+        let (r, _) = respond(&service, &format!("{{{base},\"proto\":4}}"));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("transport"), "{r:?}");
+        // A well-formed framed submit still validates shape: 31 values
+        // for n=16, bw=2 is the wrong band length.
+        let (r, _) = respond_parsed(&service, &short, Some(vec![0.5; 31]));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("values"), "{r:?}");
     }
 
     #[test]

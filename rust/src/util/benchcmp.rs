@@ -161,6 +161,39 @@ pub fn collect_experiments(dir: &Path) -> Vec<Metric> {
             }
         }
     }
+    // A load-generator report (`banded-svd loadgen`) dropped in the same
+    // directory folds its SLO-facing aggregates into the snapshot: tail
+    // latency, achieved throughput, and deadline-miss rate gate like any
+    // other perf number. NaN aggregates (zero completions, no deadline
+    // classes) render as JSON null and are skipped, not recorded as 0.
+    if let Some(j) = read_json(&dir.join("loadgen.json")) {
+        let metric = |path: &[&str]| -> Option<f64> {
+            let mut node = &j;
+            for key in path {
+                node = node.get(key)?;
+            }
+            node.as_f64().filter(|v| v.is_finite())
+        };
+        if let Some(p99) = metric(&["tally", "latency_ms", "p99"]) {
+            out.push(Metric::new("load/p99_ms", p99, "ms", Direction::LowerIsBetter));
+        }
+        if let Some(rate) = metric(&["throughput", "achieved_jobs_per_s"]) {
+            out.push(Metric::new(
+                "load/achieved_jobs_per_s",
+                rate,
+                "jobs/s",
+                Direction::HigherIsBetter,
+            ));
+        }
+        if let Some(miss) = metric(&["tally", "deadline", "miss_rate"]) {
+            out.push(Metric::new(
+                "load/deadline_miss_rate",
+                miss,
+                "rate",
+                Direction::LowerIsBetter,
+            ));
+        }
+    }
     out
 }
 
@@ -401,5 +434,31 @@ mod tests {
         let m = got.iter().find(|m| m.name.starts_with("calibrated/")).unwrap();
         assert_eq!(m.direction, Direction::LowerIsBetter);
         assert_eq!(m.unit, "ns/task");
+    }
+
+    #[test]
+    fn collect_folds_a_loadgen_report_skipping_null_aggregates() {
+        let dir = std::env::temp_dir().join(format!("bsvd-benchload-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let report = Json::obj()
+            .set("schema", "bsvd-load-v1")
+            .set(
+                "tally",
+                Json::obj()
+                    .set("latency_ms", Json::obj().set("p99", 42.5))
+                    .set("deadline", Json::obj().set("miss_rate", f64::NAN)),
+            )
+            .set("throughput", Json::obj().set("achieved_jobs_per_s", 310.0));
+        std::fs::write(dir.join("loadgen.json"), report.render()).unwrap();
+
+        let got = collect_experiments(&dir);
+        std::fs::remove_dir_all(&dir).ok();
+        let find = |n: &str| got.iter().find(|m| m.name == n).map(|m| m.value);
+        assert_eq!(find("load/p99_ms"), Some(42.5));
+        assert_eq!(find("load/achieved_jobs_per_s"), Some(310.0));
+        // miss_rate was NaN (no deadline classes): rendered null, skipped.
+        assert!(find("load/deadline_miss_rate").is_none());
+        let p99 = got.iter().find(|m| m.name == "load/p99_ms").unwrap();
+        assert_eq!((p99.unit, p99.direction), ("ms", Direction::LowerIsBetter));
     }
 }

@@ -1,0 +1,267 @@
+//! The load generator's contract, end to end:
+//!
+//! - **Plan determinism** — the rendered request stream (arrival
+//!   instants, class picks, band-payload seeds, trace ids) is a pure
+//!   function of `(seed, mix, process, duration)`: byte-identical across
+//!   rebuilds, different under a different seed — property-tested over
+//!   all four arrival families.
+//! - **Exact reconciliation** — a run driven through
+//!   `LocalClient::queued` reconciles attempt-for-attempt against the
+//!   embedded service's own counters once the queue drains.
+//! - **Overload shedding** — an open-loop load far above capacity, fired
+//!   into a tiny queue, sheds only the *retryable* back-pressure kinds
+//!   (`overloaded` / `quota-exceeded`), never deadlocks, and still
+//!   reconciles at drain.
+//! - **Binary band frames** — a proto-4 client shipping payloads as
+//!   length-prefixed binary frames gets singular values bitwise
+//!   identical to the inline-JSON path, over a real loopback socket.
+
+use banded_svd::client::{Client, LocalClient, ReductionRequest, RemoteClient};
+use banded_svd::config::{
+    BackendKind, BatchConfig, PackingPolicy, ServiceConfig, ShardRouting, TuneParams,
+};
+use banded_svd::loadgen;
+use banded_svd::scalar::ScalarKind;
+use banded_svd::service::{Server, ServiceStats};
+use banded_svd::util::json::Json;
+use banded_svd::util::prop::{check, Config};
+use std::time::Duration;
+
+fn params() -> TuneParams {
+    TuneParams { tpb: 32, tw: 4, max_blocks: 24 }
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        params: params(),
+        batch: BatchConfig { max_coresident: 4, policy: PackingPolicy::RoundRobin },
+        backend: BackendKind::Threadpool,
+        threads: 2,
+        window: Duration::from_millis(2),
+        queue_cap: 64,
+        backlog_cap_s: 1e9,
+        cache_cap: 32,
+        arch: "H100",
+        workers: 1,
+        routing: ShardRouting::LeastLoaded,
+        quota_pending_cap: 0,
+        vectors_cap_n: banded_svd::config::DEFAULT_VECTORS_CAP_N,
+    }
+}
+
+/// Render the service's counters the way the `stats` verb does — exactly
+/// the keys [`loadgen::build_report`]'s reconciliation reads.
+fn server_counters(stats: &ServiceStats) -> Json {
+    Json::obj()
+        .set("jobs_submitted", stats.jobs_submitted as i64)
+        .set("jobs_rejected", stats.jobs_rejected as i64)
+        .set("jobs_completed", stats.jobs_completed as i64)
+        .set("jobs_failed", stats.jobs_failed as i64)
+        .set("queue_depth", stats.queue_depth as i64)
+}
+
+#[derive(Debug)]
+struct PlanCase {
+    spec: &'static str,
+    seed: u64,
+    duration_ms: u64,
+}
+
+#[test]
+fn prop_plans_are_byte_identical_per_seed_for_every_process() {
+    // One spec per arrival family; rates high enough that even the
+    // shortest generated horizon carries arrivals.
+    const SPECS: [&str; 4] =
+        ["constant:80", "poisson:120", "bursty:20:300:0.5:0.3", "ramp:40:160"];
+    let cfg = Config { cases: 48, ..Config::default() };
+    check(
+        "loadgen-plan-determinism",
+        &cfg,
+        |rng| PlanCase {
+            spec: SPECS[rng.below(SPECS.len())],
+            seed: rng.next_u64(),
+            duration_ms: rng.range_inclusive(200, 1200) as u64,
+        },
+        |case| {
+            let process = loadgen::ArrivalProcess::parse(case.spec)?;
+            let mix = loadgen::WorkloadMix::resolve("smoke")?;
+            let duration = Duration::from_millis(case.duration_ms);
+            let a = loadgen::plan(&process, &mix, case.seed, duration);
+            let b = loadgen::plan(&process, &mix, case.seed, duration);
+            let lines = loadgen::plan_lines(&a, &mix);
+            if a.is_empty() {
+                return Err("plan rendered no arrivals".into());
+            }
+            if lines != loadgen::plan_lines(&b, &mix) {
+                return Err("same seed produced different plans".into());
+            }
+            // A different seed must change the stream — for the
+            // clock-driven processes the arrival instants repeat, but
+            // class picks and payload seeds come from the seeded streams.
+            let c = loadgen::plan(&process, &mix, case.seed ^ 1, duration);
+            if loadgen::plan_lines(&c, &mix) == lines {
+                return Err("changing the seed left the plan identical".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn queued_run_reconciles_exactly_with_the_service_counters() {
+    let client = LocalClient::queued(service_cfg()).expect("start queued client");
+    let mix = loadgen::WorkloadMix::parse(
+        "name=small,weight=3,n=32,bw=4;name=medium,n=48,bw=6,prec=fp32",
+    )
+    .expect("mix spec");
+    let process = loadgen::ArrivalProcess::Constant { rate_hz: 60.0 };
+    let opts = loadgen::RunOptions {
+        seed: 11,
+        duration: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let clients: Vec<&(dyn Client + Sync)> =
+        (0..2).map(|_| &client as &(dyn Client + Sync)).collect();
+    let output = loadgen::run(&clients, &mix, &process, &opts);
+    let planned = loadgen::plan(&process, &mix, opts.seed, opts.duration);
+    assert_eq!(output.records.len(), planned.len(), "open loop must fire every arrival");
+
+    let stats = client.service().expect("queued client embeds a service").stats();
+    let report = loadgen::build_report(&loadgen::ReportInputs {
+        mix: &mix,
+        process: &process,
+        opts: &opts,
+        output: &output,
+        submitters: clients.len(),
+        target: "local:queued",
+        client_stats: Some(client.stats()),
+        server_stats: Some(server_counters(&stats)),
+        profile: None,
+    });
+    // Uncontended: the whole offered load completes…
+    let tally = report.get("tally").expect("tally");
+    let completed = tally.get("completed").and_then(Json::as_i64);
+    assert_eq!(completed, Some(planned.len() as i64), "{}", tally.render());
+    // …and every cross-check against the service's counters holds.
+    let rec = report.get("reconciliation").expect("reconciliation");
+    assert_eq!(rec.get("checked").and_then(Json::as_bool), Some(true));
+    assert_eq!(rec.get("ok").and_then(Json::as_bool), Some(true), "{}", rec.render());
+    let client_stats = report.get("client_stats").expect("client_stats");
+    assert_eq!(
+        client_stats.get("submitted").and_then(Json::as_i64),
+        Some(planned.len() as i64),
+        "{}",
+        client_stats.render()
+    );
+}
+
+#[test]
+fn overload_sheds_only_retryable_kinds_and_still_reconciles() {
+    // Capacity is queue_cap + one in-flight flush; eight submitters
+    // firing an already-late schedule keep more requests outstanding
+    // than that, so admission control must shed.
+    let cfg = ServiceConfig {
+        threads: 1,
+        queue_cap: 2,
+        quota_pending_cap: 1,
+        window: Duration::from_millis(5),
+        batch: BatchConfig { max_coresident: 2, policy: PackingPolicy::RoundRobin },
+        ..service_cfg()
+    };
+    let client = LocalClient::queued(cfg).expect("start queued client");
+    // No deadline classes: every failure must be back-pressure, not
+    // expiry. The metered class shares one quota identity under a
+    // pending cap of 1, so both retryable kinds are reachable.
+    let mix = loadgen::WorkloadMix::parse(
+        "name=open,weight=3,n=128,bw=8;name=metered,n=128,bw=8,quota=tenant",
+    )
+    .expect("mix spec");
+    let process = loadgen::ArrivalProcess::Constant { rate_hz: 400.0 };
+    let opts = loadgen::RunOptions {
+        seed: 5,
+        duration: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let clients: Vec<&(dyn Client + Sync)> =
+        (0..8).map(|_| &client as &(dyn Client + Sync)).collect();
+    let output = loadgen::run(&clients, &mix, &process, &opts);
+    let planned = loadgen::plan(&process, &mix, opts.seed, opts.duration);
+    // run() returning at all is the no-deadlock half of the property;
+    // open loop means overload never suppresses an arrival.
+    assert_eq!(output.records.len(), planned.len(), "open loop must fire every arrival");
+
+    let mut shed = 0usize;
+    for record in &output.records {
+        if let loadgen::Disposition::Failed { kind, retryable, message } = &record.disposition {
+            assert!(
+                matches!(*kind, "overloaded" | "quota-exceeded"),
+                "request {} failed with non-back-pressure kind {kind:?}: {message}",
+                record.index
+            );
+            assert!(*retryable, "back-pressure kind {kind:?} must be retryable");
+            shed += 1;
+        }
+    }
+    assert!(shed > 0, "a 2x-capacity open-loop load never shed; overload was not reached");
+
+    let stats = client.service().expect("queued client embeds a service").stats();
+    let report = loadgen::build_report(&loadgen::ReportInputs {
+        mix: &mix,
+        process: &process,
+        opts: &opts,
+        output: &output,
+        submitters: clients.len(),
+        target: "local:queued",
+        client_stats: Some(client.stats()),
+        server_stats: Some(server_counters(&stats)),
+        profile: None,
+    });
+    let rec = report.get("reconciliation").expect("reconciliation");
+    assert_eq!(rec.get("ok").and_then(Json::as_bool), Some(true), "{}", rec.render());
+    // The report's shed breakdown carries only the back-pressure kinds.
+    let failures = report.get("tally").and_then(|t| t.get("failures")).expect("failures");
+    let by_kind = match failures {
+        Json::Obj(pairs) => pairs.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
+        other => panic!("failures must be an object: {}", other.render()),
+    };
+    for kind in by_kind {
+        assert!(
+            kind == "overloaded" || kind == "quota-exceeded",
+            "unexpected failure kind in the report: {kind}"
+        );
+    }
+}
+
+#[test]
+fn binary_band_frames_return_bitwise_identical_singular_values() {
+    let server = Server::bind(service_cfg(), "127.0.0.1:0").expect("bind ephemeral");
+    let addr = server.local_addr().to_string();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let inline = RemoteClient::connect(&addr).expect("connect inline client");
+    let mut framed = RemoteClient::connect(&addr).expect("connect framed client");
+    assert!(framed.proto() >= 4, "server speaks proto {}", framed.proto());
+    framed.binary_band_frames(true).expect("enable binary band frames");
+
+    let cases = [
+        (1u64, 48usize, 6usize, ScalarKind::F64),
+        (2, 36, 5, ScalarKind::F32),
+        (3, 56, 7, ScalarKind::F64),
+    ];
+    for (seed, n, bw, kind) in cases {
+        let a = inline.submit_wait(ReductionRequest::new().random(n, bw, kind, seed)).unwrap();
+        let b = framed.submit_wait(ReductionRequest::new().random(n, bw, kind, seed)).unwrap();
+        let (want, got) = (&a.problems[0].sv, &b.problems[0].sv);
+        assert_eq!(want.len(), got.len(), "n={n} bw={bw}: σ count");
+        for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "n={n} bw={bw}: σ[{i}] {w} (inline) vs {g} (framed)"
+            );
+        }
+    }
+
+    framed.shutdown().expect("shutdown through the protocol");
+    server_thread.join().expect("server thread").expect("clean shutdown");
+}
